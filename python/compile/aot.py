@@ -1,0 +1,112 @@
+"""AOT lowering: jax (L2+L1) → HLO *text* → artifacts/.
+
+HLO text (NOT ``lowered.compile()``/``.serialize()``) is the interchange
+format: jax >= 0.5 emits HloModuleProto with 64-bit instruction ids that
+the rust side's xla_extension 0.5.1 rejects; the text parser reassigns
+ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Run once via ``make artifacts``; the rust binary is self-contained
+afterwards. A manifest file records every artifact's entry signature so
+the rust runtime can sanity-check shapes before compiling.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import os
+
+import jax
+
+# The verify/checksum graphs use int64 accumulators (overflow-safe
+# multiset witnesses); without x64 jax silently downcasts them to
+# int32, changing both semantics and the artifact's output dtype.
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# (name, function, example-arg builder)
+_DTYPES = {
+    "i32": jnp.int32,
+    "f32": jnp.float32,
+    "u32": jnp.uint32,
+}
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def artifact_set(batches=(1, 8), n=1024):
+    """Yield (filename, fn, specs, signature) for every artifact."""
+    for b in batches:
+        for dt_name, dt in _DTYPES.items():
+            spec = jax.ShapeDtypeStruct((b, n), dt)
+            yield (
+                f"sort_{b}x{n}_{dt_name}.hlo.txt",
+                model.sort_offload,
+                (spec,),
+                f"sort (x: {dt_name}[{b},{n}]) -> ({dt_name}[{b},{n}])",
+            )
+        spec_i32 = jax.ShapeDtypeStruct((b, n), jnp.int32)
+        yield (
+            f"sort_desc_{b}x{n}_i32.hlo.txt",
+            model.sort_offload_desc,
+            (spec_i32,),
+            f"sort_desc (x: i32[{b},{n}]) -> (i32[{b},{n}])",
+        )
+        yield (
+            f"verify_{b}x{n}_i32.hlo.txt",
+            model.sort_and_verify,
+            (spec_i32,),
+            f"verify (x: i32[{b},{n}]) -> (i32[{b},{n}], pred[{b}])",
+        )
+        yield (
+            f"checksum_{b}x{n}_i32.hlo.txt",
+            model.record_checksum,
+            (spec_i32,),
+            f"checksum (x: i32[{b},{n}]) -> (i64[{b}])",
+        )
+
+
+def build(out_dir: str, batches=(1, 8), n=1024) -> list[str]:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest_lines = []
+    written = []
+    for fname, fn, specs, sig in artifact_set(batches, n):
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, fname)
+        with open(path, "w") as f:
+            f.write(text)
+        digest = hashlib.sha256(text.encode()).hexdigest()[:16]
+        manifest_lines.append(f"{fname}\t{sig}\t{digest}")
+        written.append(path)
+        print(f"  wrote {path} ({len(text)} chars)")
+    with open(os.path.join(out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest_lines) + "\n")
+    return written
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    ap.add_argument("--n", type=int, default=1024, help="record length")
+    ap.add_argument(
+        "--batches", type=int, nargs="+", default=[1, 8], help="batch sizes"
+    )
+    args = ap.parse_args()
+    files = build(args.out, tuple(args.batches), args.n)
+    print(f"AOT complete: {len(files)} artifacts in {args.out}")
+
+
+if __name__ == "__main__":
+    main()

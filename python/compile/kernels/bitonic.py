@@ -1,0 +1,124 @@
+"""L1 — Pallas bitonic sorting-network kernel.
+
+This is the functional twin of the RTL streaming sorting network in
+``rust/src/hdl/sorter.rs`` (itself a cycle-accurate model of the Spiral
+streaming sorting network IP used by the paper). The hardware sorts
+1024 32-bit signed integers in 1256 cycles through a pipeline of
+compare-exchange stages; here the same bitonic network is expressed as
+a Pallas kernel: each hardware stage becomes a full-width vector
+min/max plus a static lane permutation over a VMEM-resident tile.
+
+TPU adaptation (DESIGN.md §Hardware-Adaptation): the sort axis (N lanes)
+stays resident in VMEM across all log2(N)*(log2(N)+1)/2 stages — exactly
+like the streaming network keeps the record set in BRAM between stages —
+and BlockSpec tiles the *batch* axis so each grid step is one VMEM
+round trip. This is a VPU (vector) workload; there is no MXU use.
+
+The kernel must be lowered with ``interpret=True`` (CPU PJRT cannot run
+Mosaic custom-calls); see /opt/xla-example/README.md.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _is_pow2(n: int) -> bool:
+    return n >= 1 and (n & (n - 1)) == 0
+
+
+def network_stages(n: int) -> list[tuple[int, int]]:
+    """The (k, j) compare-exchange stage list of the bitonic network.
+
+    ``k`` is the size of the monotonic runs being merged (direction
+    block), ``j`` the partner distance. For n=1024 this yields the 55
+    stages that the RTL pipeline implements.
+    """
+    if not _is_pow2(n):
+        raise ValueError(f"bitonic network needs a power-of-two length, got {n}")
+    stages = []
+    k = 2
+    while k <= n:
+        j = k // 2
+        while j >= 1:
+            stages.append((k, j))
+            j //= 2
+        k *= 2
+    return stages
+
+
+def stage_apply(x: jax.Array, k: int, j: int, descending: bool = False) -> jax.Array:
+    """Apply one compare-exchange stage across the last axis of ``x``.
+
+    Mirrors one pipeline stage of the hardware network: every lane i is
+    compared with lane i^j; the element order within each k-block
+    alternates so that after the final stage the whole axis is sorted.
+    """
+    n = x.shape[-1]
+    idx = jnp.arange(n, dtype=jnp.int32)
+    partner = idx ^ j
+    px = jnp.take(x, partner, axis=-1)
+    # Ascending block if (i & k) == 0 (flipped globally for descending).
+    up = (idx & k) == 0
+    if descending:
+        up = ~up
+    # Lane keeps the min if it is the lower index of the pair in an
+    # ascending block, or the higher index in a descending block.
+    is_lower = (idx & j) == 0
+    keep_min = jnp.where(is_lower, up, ~up)
+    mn = jnp.minimum(x, px)
+    mx = jnp.maximum(x, px)
+    return jnp.where(keep_min, mn, mx)
+
+
+def bitonic_sort_array(x: jax.Array, descending: bool = False) -> jax.Array:
+    """Pure-jnp bitonic network over the last axis (used inside the
+    kernel body and directly testable against ref.py)."""
+    for k, j in network_stages(x.shape[-1]):
+        x = stage_apply(x, k, j, descending)
+    return x
+
+
+def _sort_kernel(x_ref, o_ref, *, descending: bool):
+    """Pallas kernel body: one VMEM tile of shape (block_b, n)."""
+    o_ref[...] = bitonic_sort_array(x_ref[...], descending)
+
+
+def sort(
+    x: jax.Array,
+    descending: bool = False,
+    block_b: int | None = None,
+    interpret: bool = True,
+) -> jax.Array:
+    """Sort ``x`` of shape (batch, n) along the last axis with the
+    bitonic-network Pallas kernel.
+
+    ``block_b`` tiles the batch axis into VMEM-sized chunks; the sort
+    axis is never split (the network needs all n lanes resident, like
+    the hardware keeps the full record set in BRAM).
+    """
+    if x.ndim != 2:
+        raise ValueError(f"expected (batch, n), got shape {x.shape}")
+    b, n = x.shape
+    if not _is_pow2(n):
+        raise ValueError(f"sort axis must be a power of two, got {n}")
+    if block_b is None:
+        # One tile per VMEM round trip; cap the tile at ~512 KiB of
+        # int32 so (tile + partner + min/max temps) fits 16 MiB VMEM.
+        block_b = max(1, min(b, (512 * 1024) // (4 * n)))
+    while b % block_b != 0:
+        block_b -= 1
+    grid = (b // block_b,)
+    kernel = functools.partial(_sort_kernel, descending=descending)
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((b, n), x.dtype),
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_b, n), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((block_b, n), lambda i: (i, 0)),
+        interpret=interpret,
+    )(x)

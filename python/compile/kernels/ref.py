@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for the bitonic sorting-network kernel.
+
+The RTL sorter, the Pallas kernel, and the AOT artifact all have to
+agree with this reference; pytest enforces kernel == ref and the rust
+integration tests enforce RTL == artifact (which was lowered from the
+kernel), closing the loop.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sort(x: jax.Array, descending: bool = False) -> jax.Array:
+    """Reference sort along the last axis."""
+    y = jnp.sort(x, axis=-1)
+    if descending:
+        y = jnp.flip(y, axis=-1)
+    return y

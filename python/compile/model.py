@@ -1,0 +1,72 @@
+"""L2 — JAX model of the sorting-offload accelerator datapath.
+
+This is the compute graph the FPGA platform implements in hardware:
+a batch of fixed-length records streams through the sorting network.
+The rust runtime loads the AOT-lowered HLO of these functions and uses
+them as (a) the golden model for checking cycle-accurate RTL results
+after every offload and (b) the datapath of the functional fast mode
+(``--mode func``), where the DMA stream is answered directly from the
+compiled XLA executable instead of the RTL pipeline.
+
+Python here is build-time only; nothing in this package is imported on
+the co-simulation request path.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import bitonic
+
+
+def sort_offload(x: jax.Array) -> tuple[jax.Array]:
+    """The accelerator datapath: sort each 1024-element record.
+
+    Input/output layout matches the DMA framing: shape (batch, n),
+    elements in host memory order (little-endian int32 words on the
+    128-bit stream = 4 consecutive lanes per beat).
+    """
+    return (bitonic.sort(x),)
+
+
+def sort_offload_desc(x: jax.Array) -> tuple[jax.Array]:
+    """Descending variant (the hardware sorter's ``order`` pin)."""
+    return (bitonic.sort(x, descending=True),)
+
+
+def sort_and_verify(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Datapath plus the host-side acceptance predicate: sorted output
+    and a per-record flag that the output is a sorted permutation of
+    the input (sum + min/max preserved and monotone non-decreasing).
+
+    The rust coordinator runs this after each offload in ``--check
+    golden`` mode so acceptance itself is an XLA computation, not
+    host code.
+    """
+    y = bitonic.sort(x)
+    monotone = jnp.all(y[:, 1:] >= y[:, :-1], axis=-1)
+    # Multiset-preservation witnesses (cheap, not a full histogram):
+    # sums in int64 to avoid overflow, plus extrema.
+    sum_ok = jnp.sum(x.astype(jnp.int64), axis=-1) == jnp.sum(
+        y.astype(jnp.int64), axis=-1
+    )
+    ext_ok = (jnp.min(x, axis=-1) == y[:, 0]) & (jnp.max(x, axis=-1) == y[:, -1])
+    return y, monotone & sum_ok & ext_ok
+
+
+def record_checksum(x: jax.Array) -> tuple[jax.Array]:
+    """Order-invariant checksum of each record (int64 sum + xor mix),
+    used by the coordinator to pair DMA input/output buffers without
+    retaining the full input."""
+    s = jnp.sum(x.astype(jnp.int64), axis=-1)
+    # xor-fold in int32 domain, then widen.
+    xr = jax.lax.reduce(
+        x.astype(jnp.int32),
+        jnp.int32(0),
+        lambda a, b: jax.lax.bitwise_xor(a, b),
+        dimensions=(1,),
+    )
+    # Keep the xor fold in the high 32 bits so a value edit cannot
+    # cancel against the +/- delta it causes in the low (sum) bits.
+    return ((xr.astype(jnp.int64) << 32) ^ s,)

@@ -1,0 +1,71 @@
+"""AOT path tests: lowering produces loadable HLO text + manifest."""
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import aot, model
+
+
+def test_to_hlo_text_contains_entry(tmp_path):
+    spec = jax.ShapeDtypeStruct((1, 64), jnp.int32)
+    lowered = jax.jit(model.sort_offload).lower(spec)
+    text = aot.to_hlo_text(lowered)
+    assert "HloModule" in text
+    assert "ENTRY" in text
+    # No Mosaic custom-calls may leak into the CPU artifact.
+    assert "tpu_custom_call" not in text
+
+
+def test_build_writes_artifacts_and_manifest(tmp_path):
+    files = aot.build(str(tmp_path), batches=(1,), n=64)
+    names = {Path(f).name for f in files}
+    assert "sort_1x64_i32.hlo.txt" in names
+    assert "verify_1x64_i32.hlo.txt" in names
+    assert "checksum_1x64_i32.hlo.txt" in names
+    manifest = (tmp_path / "manifest.txt").read_text().strip().splitlines()
+    assert len(manifest) == len(files)
+    for line in manifest:
+        fname, sig, digest = line.split("\t")
+        assert (tmp_path / fname).exists()
+        assert len(digest) == 16
+
+
+def test_artifact_structure_and_manifest_digests(tmp_path):
+    """The HLO text must carry the expected entry signature, and the
+    manifest digests must match the files on disk. (The text → parse →
+    compile → execute path itself is exercised by the rust runtime
+    tests in rust/src/runtime/mod.rs, which is the consumer.)"""
+    import hashlib
+
+    files = aot.build(str(tmp_path), batches=(2,), n=128)
+    text = (tmp_path / "sort_2x128_i32.hlo.txt").read_text()
+    # Entry signature: s32[2,128] in, (s32[2,128]) tuple out.
+    assert "s32[2,128]" in text
+    assert "ENTRY" in text
+    # Checksum artifact outputs s64.
+    csum = (tmp_path / "checksum_2x128_i32.hlo.txt").read_text()
+    assert "s64[2]" in csum
+    for line in (tmp_path / "manifest.txt").read_text().strip().splitlines():
+        fname, _sig, digest = line.split("\t")
+        on_disk = hashlib.sha256(
+            (tmp_path / fname).read_text().encode()
+        ).hexdigest()[:16]
+        assert on_disk == digest, f"digest mismatch for {fname}"
+    assert len(files) == 6
+
+
+def test_lowered_numerics_via_jit(tmp_path):
+    """The exact function that gets lowered must match the oracle when
+    executed (guards against lowering a different callable)."""
+    rng = np.random.default_rng(0)
+    x = rng.integers(-(2**31), 2**31 - 1, size=(2, 128), dtype=np.int64).astype(
+        np.int32
+    )
+    (out,) = jax.jit(model.sort_offload)(jnp.asarray(x))
+    np.testing.assert_array_equal(np.asarray(out), np.sort(x, axis=-1))

@@ -1,0 +1,180 @@
+"""L1 correctness: Pallas bitonic kernel vs pure-jnp oracle.
+
+Hypothesis sweeps shapes, dtypes, and value distributions; explicit
+tests pin the hardware configuration (1024 lanes, int32) and edge cases
+(duplicates, extremes, already/reverse sorted).
+"""
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import bitonic, ref
+
+jax.config.update("jax_enable_x64", True)
+
+DTYPES = {
+    "i32": (jnp.int32, -(2**31), 2**31 - 1),
+    "u32": (jnp.uint32, 0, 2**32 - 1),
+    "f32": (jnp.float32, -1e30, 1e30),
+}
+
+
+def _rand(shape, dt_name, seed):
+    dt, lo, hi = DTYPES[dt_name]
+    rng = np.random.default_rng(seed)
+    if dt_name == "f32":
+        x = rng.uniform(lo, hi, size=shape).astype(np.float32)
+    else:
+        x = rng.integers(lo, hi, size=shape, dtype=np.int64).astype(
+            np.int32 if dt_name == "i32" else np.uint32
+        )
+    return jnp.asarray(x, dtype=dt)
+
+
+# ---------------------------------------------------------------- network
+
+
+def test_network_stage_count_1024():
+    # log2(1024)=10 → 10*11/2 = 55 compare-exchange stages, matching
+    # the RTL pipeline depth accounting in rust/src/hdl/sorter.rs.
+    assert len(bitonic.network_stages(1024)) == 55
+
+
+@pytest.mark.parametrize("n", [1, 2, 4, 8, 64, 256, 1024])
+def test_network_stage_count(n):
+    import math
+
+    lg = int(math.log2(n)) if n > 1 else 0
+    assert len(bitonic.network_stages(n)) == lg * (lg + 1) // 2
+
+
+def test_network_rejects_non_pow2():
+    with pytest.raises(ValueError):
+        bitonic.network_stages(1000)
+    with pytest.raises(ValueError):
+        bitonic.sort(jnp.zeros((1, 1000), jnp.int32))
+
+
+def test_sort_rejects_bad_rank():
+    with pytest.raises(ValueError):
+        bitonic.sort(jnp.zeros((1024,), jnp.int32))
+
+
+# ------------------------------------------------------- pinned hardware cfg
+
+
+@pytest.mark.parametrize("dt_name", list(DTYPES))
+def test_kernel_matches_ref_1024(dt_name):
+    """The hardware configuration: 1024 lanes, batch 4."""
+    x = _rand((4, 1024), dt_name, seed=7)
+    got = bitonic.sort(x)
+    want = ref.sort(x)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_kernel_descending_1024():
+    x = _rand((2, 1024), "i32", seed=11)
+    got = bitonic.sort(x, descending=True)
+    want = ref.sort(x, descending=True)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_kernel_extremes_and_duplicates():
+    row = np.zeros(1024, np.int32)
+    row[:10] = np.int32(-(2**31))
+    row[10:20] = np.int32(2**31 - 1)
+    row[20:500] = 42
+    x = jnp.asarray(np.stack([row, row[::-1].copy()]))
+    got = np.asarray(bitonic.sort(x))
+    want = np.asarray(ref.sort(x))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_kernel_already_sorted_and_reversed():
+    a = jnp.arange(1024, dtype=jnp.int32)[None, :]
+    r = jnp.flip(a, axis=-1)
+    np.testing.assert_array_equal(np.asarray(bitonic.sort(a)), np.asarray(a))
+    np.testing.assert_array_equal(np.asarray(bitonic.sort(r)), np.asarray(a))
+
+
+def test_kernel_all_equal():
+    x = jnp.full((3, 256), 77, jnp.int32)
+    np.testing.assert_array_equal(np.asarray(bitonic.sort(x)), np.asarray(x))
+
+
+def test_float_negative_zero_and_inf():
+    row = np.array(
+        [0.0, -0.0, np.inf, -np.inf, 1.5, -1.5, 3e38, -3e38] * 4, np.float32
+    )
+    x = jnp.asarray(row)[None, :]
+    got = np.asarray(bitonic.sort(x))
+    want = np.asarray(ref.sort(x))
+    np.testing.assert_array_equal(got, want)
+
+
+# ----------------------------------------------------------- hypothesis sweep
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    lg_n=st.integers(min_value=0, max_value=9),
+    batch=st.integers(min_value=1, max_value=6),
+    dt_name=st.sampled_from(list(DTYPES)),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+    descending=st.booleans(),
+)
+def test_kernel_matches_ref_sweep(lg_n, batch, dt_name, seed, descending):
+    n = 1 << lg_n
+    x = _rand((batch, n), dt_name, seed)
+    got = bitonic.sort(x, descending=descending)
+    want = ref.sort(x, descending=descending)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    values=st.lists(
+        st.integers(min_value=-(2**31), max_value=2**31 - 1),
+        min_size=64,
+        max_size=64,
+    ),
+)
+def test_kernel_is_permutation(values):
+    """Output is a sorted permutation of the input (multiset equal)."""
+    x = jnp.asarray(np.array(values, np.int32))[None, :]
+    got = np.asarray(bitonic.sort(x))[0]
+    assert np.all(got[1:] >= got[:-1])
+    assert sorted(values) == got.tolist()
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    block_b=st.integers(min_value=1, max_value=8),
+    batch=st.integers(min_value=1, max_value=8),
+    seed=st.integers(min_value=0, max_value=1000),
+)
+def test_kernel_block_tiling_invariant(block_b, batch, seed):
+    """Result must not depend on the VMEM tile size (BlockSpec)."""
+    x = _rand((batch, 128), "i32", seed)
+    base = np.asarray(bitonic.sort(x, block_b=None))
+    tiled = np.asarray(bitonic.sort(x, block_b=min(block_b, batch)))
+    np.testing.assert_array_equal(base, tiled)
+
+
+def test_stage_apply_is_involution_free_permutation():
+    """Each stage only permutes values within i / i^j pairs."""
+    x = _rand((1, 64), "i32", seed=3)
+    for k, j in bitonic.network_stages(64):
+        y = bitonic.stage_apply(x, k, j)
+        assert sorted(np.asarray(x)[0].tolist()) == sorted(
+            np.asarray(y)[0].tolist()
+        )
+        x = y

@@ -1,0 +1,86 @@
+"""L2 model tests: offload datapath, verification graph, checksum."""
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+jax.config.update("jax_enable_x64", True)
+
+
+def _rand_i32(shape, seed):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(
+        rng.integers(-(2**31), 2**31 - 1, size=shape, dtype=np.int64).astype(
+            np.int32
+        )
+    )
+
+
+def test_sort_offload_matches_ref():
+    x = _rand_i32((4, 1024), 1)
+    (y,) = model.sort_offload(x)
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(ref.sort(x)))
+
+
+def test_sort_offload_desc():
+    x = _rand_i32((2, 1024), 2)
+    (y,) = model.sort_offload_desc(x)
+    np.testing.assert_array_equal(
+        np.asarray(y), np.asarray(ref.sort(x, descending=True))
+    )
+
+
+def test_sort_and_verify_accepts_good_input():
+    x = _rand_i32((8, 1024), 3)
+    y, ok = model.sort_and_verify(x)
+    assert np.all(np.asarray(ok))
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(ref.sort(x)))
+
+
+def test_verify_overflow_safe():
+    # Sums that overflow int32 must not produce false rejections.
+    x = jnp.full((1, 1024), 2**30, jnp.int32)
+    _, ok = model.sort_and_verify(x)
+    assert np.all(np.asarray(ok))
+
+
+def test_checksum_order_invariant():
+    x = _rand_i32((4, 1024), 5)
+    perm = np.asarray(x).copy()
+    rng = np.random.default_rng(0)
+    for row in perm:
+        rng.shuffle(row)
+    (a,) = model.record_checksum(x)
+    (b,) = model.record_checksum(jnp.asarray(perm))
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checksum_discriminates():
+    x = _rand_i32((1, 1024), 6)
+    y = np.asarray(x).copy()
+    y[0, 0] ^= 1
+    (a,) = model.record_checksum(x)
+    (b,) = model.record_checksum(jnp.asarray(y))
+    assert np.asarray(a)[0] != np.asarray(b)[0]
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    batch=st.integers(min_value=1, max_value=4),
+    seed=st.integers(min_value=0, max_value=10_000),
+)
+def test_sort_and_verify_sweep(batch, seed):
+    x = _rand_i32((batch, 256), seed)
+    y, ok = model.sort_and_verify(x)
+    assert np.all(np.asarray(ok))
+    got = np.asarray(y)
+    assert np.all(got[:, 1:] >= got[:, :-1])

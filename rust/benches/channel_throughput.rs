@@ -1,0 +1,75 @@
+//! Bench: link-layer throughput (supports EXPERIMENTS.md §Perf).
+//!
+//! Measures the reliable channel layer in isolation — messages/s and
+//! MB/s for both transports and several payload sizes — to show the
+//! link is never the co-simulation bottleneck (the HDL cycle loop is).
+//!
+//! Run: `cargo bench --bench channel_throughput`
+
+use std::time::Instant;
+
+use vmhdl::link::{Endpoint, Msg, Side};
+
+fn bench_endpoints(
+    label: &str,
+    mut tx_end: Endpoint,
+    mut rx_end: Endpoint,
+    payload: usize,
+    msgs: usize,
+) {
+    // Consumer thread: drain until it has seen `msgs` payload messages.
+    let consumer = std::thread::spawn(move || {
+        let mut got = 0usize;
+        while got < msgs {
+            let batch = rx_end.poll().expect("poll failed");
+            got += batch.iter().filter(|m| matches!(m, Msg::DmaWrite { .. })).count();
+            if batch.is_empty() {
+                std::thread::yield_now();
+            }
+        }
+        rx_end
+    });
+    let data = vec![0xA5u8; payload];
+    let t0 = Instant::now();
+    for i in 0..msgs {
+        tx_end
+            .send(&Msg::DmaWrite { addr: i as u64, data: data.clone() })
+            .expect("send failed");
+        // Poll to process acks (keeps the outbox bounded).
+        if i % 64 == 0 {
+            let _ = tx_end.poll().expect("ack poll failed");
+        }
+    }
+    let rx_end = consumer.join().unwrap();
+    let dt = t0.elapsed();
+    let mb = (payload * msgs) as f64 / 1e6;
+    println!(
+        "{label:<22} payload {payload:>6}B: {:>9.0} msg/s, {:>8.1} MB/s  ({} msgs in {:?})",
+        msgs as f64 / dt.as_secs_f64(),
+        mb / dt.as_secs_f64(),
+        msgs,
+        dt
+    );
+    drop(rx_end);
+}
+
+fn main() {
+    println!("link-layer throughput (reliable channels, both transports)\n");
+    for payload in [16usize, 256, 4096] {
+        let msgs = if payload >= 4096 { 20_000 } else { 50_000 };
+        let (vm, hdl) = Endpoint::inproc_pair();
+        bench_endpoints("inproc", hdl, vm, payload, msgs);
+    }
+    for payload in [16usize, 256, 4096] {
+        let msgs = if payload >= 4096 { 10_000 } else { 20_000 };
+        let dir = std::env::temp_dir().join(format!("vmhdl-bench-ct-{}", std::process::id()));
+        let _ = std::fs::create_dir_all(&dir);
+        let hdl = Endpoint::uds(Side::Hdl, &dir, 1).expect("hdl uds");
+        let vm = Endpoint::uds(Side::Vm, &dir, 2).expect("vm uds");
+        // HDL transmits on pair B toward the VM.
+        bench_endpoints("uds (two processes*)", hdl, vm, payload, msgs);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+    println!("\n(*two endpoints over real unix sockets; same-process threads here,");
+    println!("  identical syscall path to the separate-process deployment)");
+}

@@ -1,0 +1,162 @@
+//! Bench: HDL simulation hot loop — cycles/second of the full platform
+//! and of the sorter alone (the §Perf roofline for the co-simulation's
+//! execution-time column; the paper's slowdown lives exactly here).
+//!
+//! Run: `cargo bench --bench sorter_throughput`
+
+use std::time::Instant;
+
+use vmhdl::hdl::axi::{words_to_beats, AxisBeat};
+use vmhdl::hdl::platform::{Platform, PlatformCfg};
+use vmhdl::hdl::sim::{Fifo, ForceMap, TickCtx};
+use vmhdl::hdl::sorter::{Sorter, SorterCfg};
+use vmhdl::link::{Endpoint, Msg};
+use vmhdl::testutil::XorShift64;
+
+/// Sorter alone, back-to-back records: cycles/s and records/s.
+fn bench_sorter_alone(records: usize) {
+    let mut sorter = Sorter::new(SorterCfg::default());
+    let mut s_axis: Fifo<AxisBeat> = Fifo::new(64);
+    let mut m_axis: Fifo<AxisBeat> = Fifo::new(64);
+    let mut rng = XorShift64::new(1);
+    let mut pending: std::collections::VecDeque<AxisBeat> = (0..records)
+        .flat_map(|_| words_to_beats(&rng.vec_i32(1024)))
+        .collect();
+    let forces = ForceMap::new();
+    let mut out_beats = 0usize;
+    let want = records * 256;
+    let t0 = Instant::now();
+    let mut cycle = 0u64;
+    while out_beats < want {
+        while s_axis.can_push() {
+            match pending.pop_front() {
+                Some(b) => s_axis.push(b),
+                None => break,
+            }
+        }
+        let ctx = TickCtx { cycle, forces: &forces };
+        sorter.tick(&ctx, &mut s_axis, &mut m_axis);
+        while m_axis.pop().is_some() {
+            out_beats += 1;
+        }
+        s_axis.commit();
+        m_axis.commit();
+        cycle += 1;
+    }
+    let dt = t0.elapsed();
+    println!(
+        "sorter alone      : {:>7.2} Mcycles/s, {:>7.0} records/s  ({} cycles for {} records)",
+        cycle as f64 / dt.as_secs_f64() / 1e6,
+        records as f64 / dt.as_secs_f64(),
+        cycle,
+        records
+    );
+}
+
+/// Full platform with an inline VM responder (no thread handoffs):
+/// the pure simulation cost of a complete offload.
+fn bench_platform_offload(records: usize) {
+    use vmhdl::hdl::dma::{cr, regs as dregs};
+
+    let (mut vm_ep, mut hdl_ep) = Endpoint::inproc_pair();
+    let mut plat = Platform::new(PlatformCfg::default());
+    let mut host = vec![0u8; 64 * 1024];
+    let mut rng = XorShift64::new(2);
+    let input = rng.vec_i32(1024);
+    for (i, v) in input.iter().enumerate() {
+        host[0x1000 + i * 4..0x1000 + i * 4 + 4].copy_from_slice(&v.to_le_bytes());
+    }
+    let forces = ForceMap::new();
+    let mut cycle = 0u64;
+    let mut irqs = 0usize;
+    let t0 = Instant::now();
+    let mut done_records = 0usize;
+    // Program both channels once per record, inline.
+    while done_records < records {
+        for (addr, val) in [
+            (0x1000 + dregs::S2MM_DMACR as u64, cr::RS | cr::IOC_IRQ_EN),
+            (0x1000 + dregs::S2MM_DA as u64, 0x8000),
+            (0x1000 + dregs::S2MM_LENGTH as u64, 4096),
+            (0x1000 + dregs::MM2S_DMACR as u64, cr::RS | cr::IOC_IRQ_EN),
+            (0x1000 + dregs::MM2S_SA as u64, 0x1000),
+            (0x1000 + dregs::MM2S_LENGTH as u64, 4096),
+        ] {
+            vm_ep
+                .send(&Msg::MmioWrite { bar: 0, addr, data: val.to_le_bytes().to_vec() })
+                .unwrap();
+        }
+        let mut got_irq = false;
+        while !got_irq {
+            let ctx = TickCtx { cycle, forces: &forces };
+            plat.tick(&ctx, &mut hdl_ep).unwrap();
+            cycle += 1;
+            for m in vm_ep.poll().unwrap() {
+                match m {
+                    Msg::DmaRead { tag, addr, len } => {
+                        let d = host[addr as usize..(addr + len as u64) as usize].to_vec();
+                        vm_ep.send(&Msg::DmaReadResp { tag, data: d }).unwrap();
+                    }
+                    Msg::DmaWrite { addr, data } => {
+                        host[addr as usize..addr as usize + data.len()]
+                            .copy_from_slice(&data);
+                    }
+                    Msg::Interrupt { vector } if vector == 1 => {
+                        irqs += 1;
+                        got_irq = true;
+                    }
+                    _ => {}
+                }
+            }
+        }
+        // Ack both channels.
+        for addr in [
+            0x1000 + dregs::MM2S_DMASR as u64,
+            0x1000 + dregs::S2MM_DMASR as u64,
+        ] {
+            vm_ep
+                .send(&Msg::MmioWrite { bar: 0, addr, data: 0x1000u32.to_le_bytes().to_vec() })
+                .unwrap();
+        }
+        done_records += 1;
+    }
+    let dt = t0.elapsed();
+    println!(
+        "platform offload  : {:>7.2} Mcycles/s, {:>7.0} records/s  ({} cycles, {} irqs)",
+        cycle as f64 / dt.as_secs_f64() / 1e6,
+        records as f64 / dt.as_secs_f64(),
+        cycle,
+        irqs
+    );
+    // Correctness guard while benching.
+    let mut expect = input;
+    expect.sort_unstable();
+    let got: Vec<i32> = (0..1024)
+        .map(|i| i32::from_le_bytes(host[0x8000 + i * 4..0x8000 + i * 4 + 4].try_into().unwrap()))
+        .collect();
+    assert_eq!(got, expect, "benchmark produced wrong data");
+}
+
+/// Idle platform tick rate (the polling floor of §IV-B).
+fn bench_idle_tick(cycles: u64) {
+    let (_vm_ep, mut hdl_ep) = Endpoint::inproc_pair();
+    let mut plat = Platform::new(PlatformCfg::default());
+    let forces = ForceMap::new();
+    let t0 = Instant::now();
+    for cycle in 0..cycles {
+        let ctx = TickCtx { cycle, forces: &forces };
+        plat.tick(&ctx, &mut hdl_ep).unwrap();
+    }
+    let dt = t0.elapsed();
+    println!(
+        "idle tick (poll)  : {:>7.2} Mcycles/s  (every-cycle link poll incl.)",
+        cycles as f64 / dt.as_secs_f64() / 1e6
+    );
+}
+
+fn main() {
+    println!("HDL simulation hot-loop throughput\n");
+    bench_idle_tick(2_000_000);
+    bench_sorter_alone(64);
+    bench_platform_offload(16);
+    println!("\n(the co-sim slowdown of Table III = these rates vs 250 MHz real silicon)");
+}

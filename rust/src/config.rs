@@ -1,0 +1,232 @@
+//! Configuration system: typed options, `key = value` config files,
+//! and `--flag value` command-line overrides (the vendored offline
+//! crate set has no clap; this hand-rolled parser covers the same
+//! surface for our CLI).
+//!
+//! Precedence: defaults < config file (`--config path`) < CLI flags.
+
+use std::path::PathBuf;
+use std::time::Duration;
+
+use crate::coordinator::cosim::{CoSimCfg, TransportKind};
+use crate::hdl::platform::PlatformCfg;
+use crate::hdl::sorter::SorterCfg;
+use crate::link::LinkMode;
+use crate::{Error, Result};
+
+/// All tunables of a co-simulation run.
+#[derive(Debug, Clone)]
+pub struct Config {
+    /// Link abstraction: `mmio` (paper) or `tlp` (vpcie baseline).
+    pub mode: LinkMode,
+    /// `inproc` or `uds`.
+    pub transport: String,
+    /// Rendezvous directory for uds sockets.
+    pub socket_dir: PathBuf,
+    /// Record length in words.
+    pub n: usize,
+    /// Sorter pipeline latency (cycles).
+    pub sorter_latency: u64,
+    /// Records per workload.
+    pub records: usize,
+    /// Workload RNG seed.
+    pub seed: u64,
+    /// Guest RAM bytes.
+    pub ram_size: usize,
+    /// VCD output path (empty = off).
+    pub vcd: Option<PathBuf>,
+    /// Artifacts directory for the golden model.
+    pub artifacts: PathBuf,
+    /// Golden-check results against the AOT XLA model.
+    pub golden: bool,
+    /// Link poll interval in cycles.
+    pub poll_interval: u64,
+    /// Idle sleep (microseconds) for the HDL loop.
+    pub idle_sleep_us: u64,
+    /// RTT iterations.
+    pub iters: u32,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Self {
+            mode: LinkMode::Mmio,
+            transport: "inproc".to_string(),
+            socket_dir: std::env::temp_dir().join("vmhdl-sockets"),
+            n: 1024,
+            sorter_latency: 1256,
+            records: 4,
+            seed: 0xC0FFEE,
+            ram_size: 4 << 20,
+            vcd: None,
+            artifacts: PathBuf::from("artifacts"),
+            golden: false,
+            poll_interval: 1,
+            idle_sleep_us: 20,
+            iters: 100,
+        }
+    }
+}
+
+impl Config {
+    /// Apply one `key`, `value` pair (file line or CLI flag).
+    pub fn set(&mut self, key: &str, value: &str) -> Result<()> {
+        let bad = |what: &str| Error::config(format!("bad {what}: {value:?}"));
+        match key {
+            "mode" => self.mode = value.parse()?,
+            "transport" => {
+                if value != "inproc" && value != "uds" {
+                    return Err(bad("transport"));
+                }
+                self.transport = value.to_string();
+            }
+            "socket-dir" | "dir" => self.socket_dir = PathBuf::from(value),
+            "n" => self.n = value.parse().map_err(|_| bad("n"))?,
+            "sorter-latency" => {
+                self.sorter_latency = value.parse().map_err(|_| bad("sorter-latency"))?
+            }
+            "records" => self.records = value.parse().map_err(|_| bad("records"))?,
+            "seed" => {
+                self.seed = if let Some(hex) = value.strip_prefix("0x") {
+                    u64::from_str_radix(hex, 16).map_err(|_| bad("seed"))?
+                } else {
+                    value.parse().map_err(|_| bad("seed"))?
+                }
+            }
+            "ram-size" => self.ram_size = value.parse().map_err(|_| bad("ram-size"))?,
+            "vcd" => self.vcd = Some(PathBuf::from(value)),
+            "artifacts" => self.artifacts = PathBuf::from(value),
+            "golden" => self.golden = value.parse().map_err(|_| bad("golden"))?,
+            "poll-interval" => {
+                self.poll_interval = value.parse().map_err(|_| bad("poll-interval"))?
+            }
+            "idle-sleep-us" => {
+                self.idle_sleep_us = value.parse().map_err(|_| bad("idle-sleep-us"))?
+            }
+            "iters" => self.iters = value.parse().map_err(|_| bad("iters"))?,
+            other => return Err(Error::config(format!("unknown option {other:?}"))),
+        }
+        Ok(())
+    }
+
+    /// Load `key = value` lines ('#' comments allowed).
+    pub fn load_file(&mut self, path: &std::path::Path) -> Result<()> {
+        let text = std::fs::read_to_string(path)?;
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            let (k, v) = line.split_once('=').ok_or_else(|| {
+                Error::config(format!("{}:{}: expected key = value", path.display(), lineno + 1))
+            })?;
+            self.set(k.trim(), v.trim())?;
+        }
+        Ok(())
+    }
+
+    /// Parse `--key value` CLI arguments (after the subcommand);
+    /// `--config <file>` loads a file at that point in the sequence.
+    pub fn apply_args(&mut self, args: &[String]) -> Result<()> {
+        let mut i = 0;
+        while i < args.len() {
+            let flag = args[i]
+                .strip_prefix("--")
+                .ok_or_else(|| Error::config(format!("expected --flag, got {:?}", args[i])))?;
+            let value = args
+                .get(i + 1)
+                .ok_or_else(|| Error::config(format!("--{flag} needs a value")))?;
+            if flag == "config" {
+                self.load_file(std::path::Path::new(value))?;
+            } else {
+                self.set(flag, value)?;
+            }
+            i += 2;
+        }
+        Ok(())
+    }
+
+    /// Materialize the co-simulation configuration.
+    pub fn cosim(&self) -> Result<CoSimCfg> {
+        let transport = match self.transport.as_str() {
+            "inproc" => TransportKind::InProc,
+            "uds" => TransportKind::Uds(self.socket_dir.clone()),
+            other => return Err(Error::config(format!("transport {other:?}"))),
+        };
+        Ok(CoSimCfg {
+            mode: self.mode,
+            transport,
+            platform: PlatformCfg {
+                sorter: SorterCfg {
+                    n: self.n,
+                    latency: self.sorter_latency,
+                    pipeline_records: 8,
+                },
+                link_mode: self.mode,
+                poll_interval: self.poll_interval,
+                ..PlatformCfg::default()
+            },
+            ram_size: self.ram_size,
+            vcd: self.vcd.clone(),
+            poll_interval: self.poll_interval,
+            idle_sleep: Duration::from_micros(self.idle_sleep_us),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_build_a_cosim_cfg() {
+        let c = Config::default();
+        let cc = c.cosim().unwrap();
+        assert_eq!(cc.platform.sorter.latency, 1256);
+        assert!(matches!(cc.transport, TransportKind::InProc));
+    }
+
+    #[test]
+    fn cli_overrides() {
+        let mut c = Config::default();
+        let args: Vec<String> = [
+            "--mode", "tlp", "--records", "9", "--seed", "0xAB", "--transport", "uds",
+            "--vcd", "/tmp/x.vcd",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+        c.apply_args(&args).unwrap();
+        assert_eq!(c.mode, LinkMode::Tlp);
+        assert_eq!(c.records, 9);
+        assert_eq!(c.seed, 0xAB);
+        assert!(matches!(c.cosim().unwrap().transport, TransportKind::Uds(_)));
+        assert_eq!(c.vcd.as_deref(), Some(std::path::Path::new("/tmp/x.vcd")));
+    }
+
+    #[test]
+    fn file_then_flag_precedence() {
+        let dir = std::env::temp_dir();
+        let p = dir.join(format!("vmhdl-cfg-{}.conf", std::process::id()));
+        std::fs::write(&p, "# comment\nrecords = 7\nsorter-latency = 1300\n").unwrap();
+        let mut c = Config::default();
+        let args: Vec<String> =
+            ["--config", p.to_str().unwrap(), "--records", "11"].iter().map(|s| s.to_string()).collect();
+        c.apply_args(&args).unwrap();
+        assert_eq!(c.records, 11, "flag after file must win");
+        assert_eq!(c.sorter_latency, 1300);
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn bad_inputs_error() {
+        let mut c = Config::default();
+        assert!(c.set("mode", "bogus").is_err());
+        assert!(c.set("records", "x").is_err());
+        assert!(c.set("nonsense", "1").is_err());
+        assert!(c
+            .apply_args(&["--records".to_string()])
+            .is_err());
+        assert!(c.apply_args(&["records".to_string(), "1".to_string()]).is_err());
+    }
+}

@@ -1,0 +1,310 @@
+//! Co-simulation assembly: the HDL side (platform + simulator loop)
+//! and the VM side (VMM + guest), linked per Figure 1 of the paper.
+//!
+//! The HDL side free-runs on its own thread (in-process transport) or
+//! in its own process (Unix-socket transport, see [`super::lifecycle`])
+//! — mirroring the paper's deployment where QEMU and the VCS
+//! simulation are independent programs connected only by the message
+//! channels, which is precisely what makes independent restart
+//! possible.
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::hdl::platform::{Platform, PlatformCfg};
+use crate::hdl::signal::{ProbeFrame, Probed};
+use crate::hdl::sim::{ForceMap, Sim, TickCtx};
+use crate::hdl::vcd::VcdWriter;
+use crate::link::{Endpoint, LinkMode, Side};
+use crate::vm::Vmm;
+use crate::{Error, Result};
+
+/// How the two sides are linked.
+#[derive(Debug, Clone)]
+pub enum TransportKind {
+    /// Same process, HDL side on a thread (deterministic dev loop).
+    InProc,
+    /// Unix-domain sockets under this rendezvous directory; the HDL
+    /// side may live in another process and be restarted freely.
+    Uds(PathBuf),
+}
+
+/// Co-simulation configuration.
+#[derive(Debug, Clone)]
+pub struct CoSimCfg {
+    pub mode: LinkMode,
+    pub transport: TransportKind,
+    pub platform: PlatformCfg,
+    /// Guest RAM bytes.
+    pub ram_size: usize,
+    /// Record waveforms of the entire platform to this VCD file.
+    pub vcd: Option<PathBuf>,
+    /// Poll the link every N cycles (1 = the paper's every-cycle poll;
+    /// larger values are a §Perf knob with a latency trade-off).
+    pub poll_interval: u64,
+    /// When the platform is idle and the link silent, sleep this long
+    /// per poll to avoid burning a host core (0 = spin).
+    pub idle_sleep: Duration,
+}
+
+impl Default for CoSimCfg {
+    fn default() -> Self {
+        Self {
+            mode: LinkMode::Mmio,
+            transport: TransportKind::InProc,
+            platform: PlatformCfg::default(),
+            ram_size: 4 << 20,
+            vcd: None,
+            poll_interval: 1,
+            // The testbed is single-core: an idle HDL side must not
+            // starve the VM side (see EXPERIMENTS.md §Perf).
+            idle_sleep: Duration::from_micros(20),
+        }
+    }
+}
+
+/// Aggregate HDL-side statistics returned when the side stops.
+#[derive(Debug, Clone, Default)]
+pub struct HdlReport {
+    pub cycles: u64,
+    pub wall: Duration,
+    pub mmio_reads: u64,
+    pub mmio_writes: u64,
+    pub dma_read_reqs: u64,
+    pub dma_write_reqs: u64,
+    pub irqs_sent: u64,
+    pub idle_polls: u64,
+    pub records_done: u64,
+    pub vcd_changes: u64,
+}
+
+/// Handle to a running HDL side (thread flavour).
+pub struct HdlSideHandle {
+    stop: Arc<AtomicBool>,
+    pub cycles: Arc<AtomicU64>,
+    handle: Option<std::thread::JoinHandle<Result<HdlReport>>>,
+}
+
+impl HdlSideHandle {
+    /// Ask the side to stop and collect its report.
+    pub fn stop(mut self) -> Result<HdlReport> {
+        self.stop.store(true, Ordering::Relaxed);
+        match self.handle.take().unwrap().join() {
+            Ok(r) => r,
+            Err(_) => Err(Error::hdl("HDL side panicked")),
+        }
+    }
+
+    /// Current device cycle (live).
+    pub fn now_cycles(&self) -> u64 {
+        self.cycles.load(Ordering::Relaxed)
+    }
+}
+
+/// Run the HDL simulation loop until `stop` (or, with `until_idle`,
+/// until the platform quiesces). This is the body of both the in-proc
+/// thread and the standalone `vmhdl hdl-side` process.
+pub fn run_hdl_loop(
+    mut platform: Platform,
+    mut link: Endpoint,
+    cfg: &CoSimCfg,
+    stop: Arc<AtomicBool>,
+    cycles_out: Arc<AtomicU64>,
+) -> Result<HdlReport> {
+    let mut sim = Sim::new();
+    let forces = ForceMap::new();
+    let t0 = std::time::Instant::now();
+    let mut vcd = match &cfg.vcd {
+        Some(path) => {
+            let f = std::io::BufWriter::new(std::fs::File::create(path)?);
+            Some(VcdWriter::new(f, crate::hdl::CLOCK_PERIOD_NS))
+        }
+        None => None,
+    };
+    let mut frame = ProbeFrame::default();
+
+    while !stop.load(Ordering::Relaxed) {
+        let ctx = TickCtx { cycle: sim.cycle, forces: &forces };
+        platform.tick(&ctx, &mut link)?;
+        if let Some(w) = vcd.as_mut() {
+            frame.clear();
+            platform.probe(&mut frame);
+            w.record(sim.cycle, &frame)?;
+        }
+        sim.cycle += 1;
+        if sim.cycle % 1024 == 0 {
+            cycles_out.store(sim.cycle, Ordering::Relaxed);
+        }
+        // Idle throttle: when nothing is in flight, don't spin a core.
+        if !platform.busy() && cfg.idle_sleep > Duration::ZERO {
+            std::thread::sleep(cfg.idle_sleep);
+        } else if sim.cycle % 256 == 0 {
+            // Busy: still let the VM side run (single-core testbed —
+            // it must be able to answer our DMA reads promptly).
+            std::thread::yield_now();
+        }
+    }
+    cycles_out.store(sim.cycle, Ordering::Relaxed);
+    let vcd_changes = match vcd.as_mut() {
+        Some(w) => {
+            w.flush()?;
+            w.changes
+        }
+        None => 0,
+    };
+    Ok(HdlReport {
+        cycles: sim.cycle,
+        wall: t0.elapsed(),
+        mmio_reads: platform.bridge.mmio_reads,
+        mmio_writes: platform.bridge.mmio_writes,
+        dma_read_reqs: platform.bridge.dma_read_reqs,
+        dma_write_reqs: platform.bridge.dma_write_reqs,
+        irqs_sent: platform.bridge.irqs_sent,
+        idle_polls: platform.bridge.idle_polls,
+        records_done: platform.sorter.records_done,
+        vcd_changes,
+    })
+}
+
+/// A fully assembled co-simulation (VM side in this process).
+pub struct CoSim {
+    pub cfg: CoSimCfg,
+    pub vmm: Vmm,
+    pub hdl: Option<HdlSideHandle>,
+}
+
+impl CoSim {
+    /// Bring up both sides per the configuration. For
+    /// [`TransportKind::Uds`], the HDL side is *not* spawned here —
+    /// use [`super::lifecycle::HdlProcess`] or `vmhdl hdl-side`.
+    pub fn launch(cfg: CoSimCfg) -> Result<CoSim> {
+        match &cfg.transport {
+            TransportKind::InProc => {
+                let (vm_ep, hdl_ep) = Endpoint::inproc_pair();
+                let platform = Platform::new(cfg.platform.clone());
+                let stop = Arc::new(AtomicBool::new(false));
+                let cycles = Arc::new(AtomicU64::new(0));
+                let (s2, c2, cfg2) = (stop.clone(), cycles.clone(), cfg.clone());
+                let handle =
+                    std::thread::spawn(move || run_hdl_loop(platform, hdl_ep, &cfg2, s2, c2));
+                let vmm = Vmm::new(vm_ep, cfg.mode, cfg.ram_size);
+                Ok(CoSim {
+                    cfg,
+                    vmm,
+                    hdl: Some(HdlSideHandle { stop, cycles, handle: Some(handle) }),
+                })
+            }
+            TransportKind::Uds(dir) => {
+                std::fs::create_dir_all(dir)?;
+                // A fresh session id per incarnation — the pid alone
+                // is NOT enough (a relaunched VM in the same process
+                // would be mistaken for the old incarnation and its
+                // renumbered messages dropped as duplicates).
+                let session = super::lifecycle::fresh_session();
+                let ep = Endpoint::uds(Side::Vm, dir, session)?;
+                let vmm = Vmm::new(ep, cfg.mode, cfg.ram_size);
+                Ok(CoSim { cfg, vmm, hdl: None })
+            }
+        }
+    }
+
+    /// Stop the in-proc HDL side and return its report.
+    pub fn shutdown(mut self) -> Result<HdlReport> {
+        match self.hdl.take() {
+            Some(h) => h.stop(),
+            None => Ok(HdlReport::default()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::vm::guest::{app, SortDriver};
+    use crate::vm::vmm::{GuestEnv, NoopHook};
+
+    #[test]
+    fn inproc_cosim_probe_and_sort() {
+        let mut cosim = CoSim::launch(CoSimCfg::default()).unwrap();
+        let mut hook = NoopHook;
+        let mut env = GuestEnv::new(&mut cosim.vmm, &mut hook);
+        let mut drv = SortDriver::new(1024);
+        drv.timeout = Duration::from_secs(30);
+        drv.probe(&mut env).unwrap();
+        let report = app::run_sort(&mut env, &mut drv, 2, 0xBEEF).unwrap();
+        assert!(report.verified, "hardware result mismatched local sort");
+        assert!(report.device_cycles > 0);
+        let hdl = cosim.shutdown().unwrap();
+        assert_eq!(hdl.records_done, 2);
+        assert!(hdl.irqs_sent >= 2);
+    }
+
+    #[test]
+    fn inproc_cosim_descending_order() {
+        let mut cosim = CoSim::launch(CoSimCfg::default()).unwrap();
+        let mut hook = NoopHook;
+        let mut env = GuestEnv::new(&mut cosim.vmm, &mut hook);
+        let mut drv = SortDriver::new(1024);
+        drv.timeout = Duration::from_secs(30);
+        drv.probe(&mut env).unwrap();
+        drv.set_descending(&mut env, true).unwrap();
+        let report = app::run_sort(&mut env, &mut drv, 1, 7).unwrap();
+        assert!(report.verified);
+        cosim.shutdown().unwrap();
+    }
+
+    #[test]
+    fn vcd_recording_produces_waveforms() {
+        let path = std::env::temp_dir().join(format!("vmhdl-test-{}.vcd", std::process::id()));
+        let cfg = CoSimCfg { vcd: Some(path.clone()), ..Default::default() };
+        let mut cosim = CoSim::launch(cfg).unwrap();
+        let mut hook = NoopHook;
+        let mut env = GuestEnv::new(&mut cosim.vmm, &mut hook);
+        let mut drv = SortDriver::new(1024);
+        drv.timeout = Duration::from_secs(30);
+        drv.probe(&mut env).unwrap();
+        app::run_sort(&mut env, &mut drv, 1, 1).unwrap();
+        let hdl = cosim.shutdown().unwrap();
+        assert!(hdl.vcd_changes > 100, "VCD too quiet: {}", hdl.vcd_changes);
+        let head = std::fs::read_to_string(&path).unwrap();
+        assert!(head.contains("$enddefinitions"));
+        assert!(head.contains("platform"));
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn hang_is_reported_not_spun_forever() {
+        let mut cosim = CoSim::launch(CoSimCfg::default()).unwrap();
+        let mut hook = NoopHook;
+        let mut env = GuestEnv::new(&mut cosim.vmm, &mut hook);
+        let mut drv = SortDriver::new(1024);
+        drv.faults.skip_run_start = true; // the canonical hang bug
+        drv.timeout = Duration::from_millis(300);
+        drv.probe(&mut env).unwrap();
+        let report = app::run_hang_repro(&mut env, &mut drv).unwrap();
+        assert!(
+            report.symptom.contains("hung") || report.symptom.contains("never"),
+            "{}",
+            report.symptom
+        );
+        // The framework's value: the "hung" device is inspectable —
+        // DMASR shows both channels halted (RS never set).
+        assert_eq!(report.mm2s_dmasr & 0x1, 1, "MM2S should read Halted");
+        assert_eq!(report.s2mm_dmasr & 0x1, 1, "S2MM should read Halted");
+        cosim.shutdown().unwrap();
+    }
+
+    #[test]
+    fn bram_stress_via_bar2() {
+        let mut cosim = CoSim::launch(CoSimCfg::default()).unwrap();
+        let mut hook = NoopHook;
+        let mut env = GuestEnv::new(&mut cosim.vmm, &mut hook);
+        let mut drv = SortDriver::new(1024);
+        drv.timeout = Duration::from_secs(30);
+        drv.probe(&mut env).unwrap();
+        app::run_bram_stress(&mut env, 64, 3).unwrap();
+        cosim.shutdown().unwrap();
+    }
+}

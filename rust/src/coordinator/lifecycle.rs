@@ -1,0 +1,192 @@
+//! Lifecycle supervision: run the HDL side out-of-process (or as a
+//! restartable thread) and restart either side independently — the
+//! property the paper gets from the unidirectional-channel design
+//! ("either side of the simulation can be independently restarted
+//! without affecting the other side").
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+
+use super::cosim::{run_hdl_loop, CoSimCfg, HdlReport};
+use crate::hdl::platform::Platform;
+use crate::link::{Endpoint, Side};
+use crate::{Error, Result};
+
+/// Monotonic per-process incarnation counter: combined with the pid it
+/// yields a fresh link session id per (re)start without wall-clock use.
+static INCARNATION: AtomicU64 = AtomicU64::new(1);
+
+/// A fresh session id for a new link incarnation.
+pub fn fresh_session() -> u64 {
+    let inc = INCARNATION.fetch_add(1, Ordering::Relaxed);
+    ((std::process::id() as u64) << 32) | inc
+}
+
+/// An HDL side running as a restartable thread over UDS sockets.
+/// (The out-of-process flavour is `vmhdl hdl-side`; this thread
+/// flavour exercises the identical restart path hermetically.)
+pub struct HdlThread {
+    dir: PathBuf,
+    cfg: CoSimCfg,
+    stop: Arc<AtomicBool>,
+    cycles: Arc<AtomicU64>,
+    handle: Option<std::thread::JoinHandle<Result<HdlReport>>>,
+}
+
+impl HdlThread {
+    /// Bind the four channel sockets under `dir` and start simulating.
+    pub fn spawn(dir: &Path, cfg: CoSimCfg) -> Result<HdlThread> {
+        std::fs::create_dir_all(dir)?;
+        let ep = Endpoint::uds(Side::Hdl, dir, fresh_session())?;
+        let platform = Platform::new(cfg.platform.clone());
+        let stop = Arc::new(AtomicBool::new(false));
+        let cycles = Arc::new(AtomicU64::new(0));
+        let (s2, c2, cfg2) = (stop.clone(), cycles.clone(), cfg.clone());
+        let handle = std::thread::spawn(move || run_hdl_loop(platform, ep, &cfg2, s2, c2));
+        Ok(HdlThread {
+            dir: dir.to_path_buf(),
+            cfg,
+            stop,
+            cycles,
+            handle: Some(handle),
+        })
+    }
+
+    /// Hard-stop this incarnation (the "crash"/kill in restart tests)
+    /// and return its report.
+    pub fn kill(&mut self) -> Result<HdlReport> {
+        self.stop.store(true, Ordering::Relaxed);
+        match self.handle.take() {
+            Some(h) => h.join().map_err(|_| Error::hdl("HDL thread panicked"))?,
+            None => Err(Error::hdl("already stopped")),
+        }
+    }
+
+    /// Start a fresh incarnation on the same sockets (device "reboot":
+    /// all FPGA state is lost, the link session id changes, and the
+    /// surviving VM side replays unacknowledged traffic).
+    pub fn restart(&mut self) -> Result<()> {
+        if self.handle.is_some() {
+            self.kill()?;
+        }
+        let ep = Endpoint::uds(Side::Hdl, &self.dir, fresh_session())?;
+        let platform = Platform::new(self.cfg.platform.clone());
+        self.stop = Arc::new(AtomicBool::new(false));
+        self.cycles = Arc::new(AtomicU64::new(0));
+        let (s2, c2, cfg2) = (self.stop.clone(), self.cycles.clone(), self.cfg.clone());
+        self.handle = Some(std::thread::spawn(move || run_hdl_loop(platform, ep, &cfg2, s2, c2)));
+        Ok(())
+    }
+
+    pub fn now_cycles(&self) -> u64 {
+        self.cycles.load(Ordering::Relaxed)
+    }
+
+    pub fn is_running(&self) -> bool {
+        self.handle.as_ref().map(|h| !h.is_finished()).unwrap_or(false)
+    }
+
+    /// Graceful stop.
+    pub fn stop(mut self) -> Result<HdlReport> {
+        self.kill()
+    }
+}
+
+/// The HDL side as a child process (`vmhdl hdl-side --dir <dir>`).
+pub struct HdlProcess {
+    dir: PathBuf,
+    child: Option<std::process::Child>,
+    extra_args: Vec<String>,
+}
+
+impl HdlProcess {
+    /// Spawn `vmhdl hdl-side --dir <dir> [extra args]` using the
+    /// current executable.
+    pub fn spawn(dir: &Path, extra_args: &[&str]) -> Result<HdlProcess> {
+        std::fs::create_dir_all(dir)?;
+        let exe = std::env::current_exe()?;
+        let child = std::process::Command::new(exe)
+            .arg("hdl-side")
+            .arg("--dir")
+            .arg(dir)
+            .args(extra_args)
+            .spawn()?;
+        Ok(HdlProcess {
+            dir: dir.to_path_buf(),
+            child: Some(child),
+            extra_args: extra_args.iter().map(|s| s.to_string()).collect(),
+        })
+    }
+
+    /// SIGKILL the child (simulates a simulator crash).
+    pub fn kill(&mut self) -> Result<()> {
+        if let Some(c) = self.child.as_mut() {
+            let _ = c.kill();
+            let _ = c.wait();
+        }
+        self.child = None;
+        Ok(())
+    }
+
+    /// Restart a fresh incarnation.
+    pub fn restart(&mut self) -> Result<()> {
+        self.kill()?;
+        let exe = std::env::current_exe()?;
+        let child = std::process::Command::new(exe)
+            .arg("hdl-side")
+            .arg("--dir")
+            .arg(&self.dir)
+            .args(&self.extra_args)
+            .spawn()?;
+        self.child = Some(child);
+        Ok(())
+    }
+
+    pub fn is_running(&mut self) -> bool {
+        match self.child.as_mut() {
+            Some(c) => matches!(c.try_wait(), Ok(None)),
+            None => false,
+        }
+    }
+}
+
+impl Drop for HdlProcess {
+    fn drop(&mut self) {
+        let _ = self.kill();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fresh_sessions_are_unique() {
+        let a = fresh_session();
+        let b = fresh_session();
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn hdl_thread_start_stop() {
+        let dir = std::env::temp_dir().join(format!("vmhdl-lc-{}", std::process::id()));
+        let mut t = HdlThread::spawn(&dir, CoSimCfg::default()).unwrap();
+        assert!(t.is_running());
+        std::thread::sleep(std::time::Duration::from_millis(50));
+        let rep = t.kill().unwrap();
+        assert!(rep.cycles > 0, "simulator never ticked");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn hdl_thread_restart_rebinds_sockets() {
+        let dir = std::env::temp_dir().join(format!("vmhdl-rs-{}", std::process::id()));
+        let mut t = HdlThread::spawn(&dir, CoSimCfg::default()).unwrap();
+        std::thread::sleep(std::time::Duration::from_millis(30));
+        t.restart().unwrap();
+        assert!(t.is_running());
+        t.stop().unwrap();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,13 @@
+//! The co-simulation coordinator: wires the VM side and the HDL side
+//! together over the link, supervises lifecycles (including the
+//! independent-restart property), runs scripted scenarios, and keeps
+//! the dual-clock accounting (device cycles vs wall time) behind the
+//! paper's Tables II and III.
+
+pub mod cosim;
+pub mod lifecycle;
+pub mod scenario;
+pub mod stats;
+
+pub use cosim::{CoSim, CoSimCfg, HdlSideHandle, TransportKind};
+pub use scenario::{ScenarioReport, TimeGap};

@@ -1,0 +1,130 @@
+//! Counters, timers and latency histograms (no external deps).
+
+use std::time::Duration;
+
+/// A log₂-bucketed latency histogram (nanosecond samples).
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    /// bucket i counts samples in [2^i, 2^(i+1)) ns.
+    buckets: [u64; 64],
+    pub count: u64,
+    pub sum_ns: u128,
+    pub min_ns: u64,
+    pub max_ns: u64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Self {
+            buckets: [0; 64],
+            count: 0,
+            sum_ns: 0,
+            min_ns: u64::MAX,
+            max_ns: 0,
+        }
+    }
+
+    pub fn record(&mut self, d: Duration) {
+        let ns = d.as_nanos().min(u64::MAX as u128) as u64;
+        let b = 63 - ns.max(1).leading_zeros() as usize;
+        self.buckets[b] += 1;
+        self.count += 1;
+        self.sum_ns += ns as u128;
+        self.min_ns = self.min_ns.min(ns);
+        self.max_ns = self.max_ns.max(ns);
+    }
+
+    pub fn mean(&self) -> Duration {
+        if self.count == 0 {
+            return Duration::ZERO;
+        }
+        Duration::from_nanos((self.sum_ns / self.count as u128) as u64)
+    }
+
+    /// Approximate quantile from bucket boundaries (upper bound).
+    pub fn quantile(&self, q: f64) -> Duration {
+        if self.count == 0 {
+            return Duration::ZERO;
+        }
+        let want = ((self.count as f64) * q).ceil() as u64;
+        let mut acc = 0;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            acc += c;
+            if acc >= want {
+                return Duration::from_nanos(1u64 << (i + 1).min(63));
+            }
+        }
+        Duration::from_nanos(self.max_ns)
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "n={} min={:?} mean={:?} p50≤{:?} p99≤{:?} max={:?}",
+            self.count,
+            Duration::from_nanos(if self.min_ns == u64::MAX { 0 } else { self.min_ns }),
+            self.mean(),
+            self.quantile(0.5),
+            self.quantile(0.99),
+            Duration::from_nanos(self.max_ns),
+        )
+    }
+}
+
+/// Pretty-print a duration in adaptive units (table output).
+pub fn fmt_dur(d: Duration) -> String {
+    let us = d.as_secs_f64() * 1e6;
+    if us < 1.0 {
+        format!("{:.0} ns", us * 1000.0)
+    } else if us < 1000.0 {
+        format!("{us:.2} µs")
+    } else if us < 1e6 {
+        format!("{:.2} ms", us / 1000.0)
+    } else {
+        format!("{:.2} s", us / 1e6)
+    }
+}
+
+/// Simulated time from a cycle count (the 250 MHz device clock).
+pub fn fmt_cycles_as_time(cycles: u64) -> String {
+    fmt_dur(Duration::from_nanos(crate::hdl::cycles_to_ns(cycles)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_stats() {
+        let mut h = Histogram::new();
+        for us in [1u64, 2, 4, 100, 1000] {
+            h.record(Duration::from_micros(us));
+        }
+        assert_eq!(h.count, 5);
+        assert!(h.mean() >= Duration::from_micros(200));
+        assert!(h.quantile(0.5) >= Duration::from_micros(2));
+        assert!(h.quantile(1.0) >= Duration::from_micros(1000));
+        assert!(h.min_ns <= 1_000 + 1);
+        let s = h.summary();
+        assert!(s.contains("n=5"));
+    }
+
+    #[test]
+    fn fmt_adapts_units() {
+        assert!(fmt_dur(Duration::from_nanos(500)).contains("ns"));
+        assert!(fmt_dur(Duration::from_micros(50)).contains("µs"));
+        assert!(fmt_dur(Duration::from_millis(50)).contains("ms"));
+        assert!(fmt_dur(Duration::from_secs(5)).contains(" s"));
+    }
+
+    #[test]
+    fn cycles_formatting() {
+        // 250 cycles @ 4ns = 1µs
+        assert!(fmt_cycles_as_time(250).contains("µs"));
+    }
+}

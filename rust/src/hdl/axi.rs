@@ -1,0 +1,228 @@
+//! AXI channel payload types (AXI4-Lite, AXI4, AXI4-Stream).
+//!
+//! The paper's cut-point on the HDL side is deliberately the
+//! industry-standard AXI interface ("we rely on an industry-standard
+//! on-chip bus protocol, AXI ... the rest of the FPGA platform sees
+//! the same interface toward PCIe and requires no modification").
+//! These types model the per-channel beat payloads; the ready/valid
+//! handshake itself is carried by [`crate::hdl::sim::Fifo`] (a
+//! registered skid-buffer per channel, the standard RTL idiom).
+//!
+//! Data width is 128 bits (16 bytes) for AXI4/AXI4-Stream, matching
+//! the sorting platform's stream width (4 × 32-bit values per beat).
+
+/// AXI4/AXI4-Stream data bus width in bytes (128 bits).
+pub const DATA_BYTES: usize = 16;
+/// 32-bit words per beat.
+pub const WORDS_PER_BEAT: usize = DATA_BYTES / 4;
+/// Maximum beats per AXI4 burst we issue (AWLEN/ARLEN + 1 ≤ 16 ⇒ 256 B,
+/// matching a typical PCIe max-payload configuration).
+pub const MAX_BURST_BEATS: u16 = 16;
+
+/// AXI response codes.
+pub mod resp {
+    pub const OKAY: u8 = 0b00;
+    pub const SLVERR: u8 = 0b10;
+    pub const DECERR: u8 = 0b11;
+}
+
+// ------------------------------------------------------------ AXI4-Lite
+
+/// AXI4-Lite write-address beat.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LiteAw {
+    pub addr: u32,
+}
+
+/// AXI4-Lite write-data beat (32-bit data, 4-bit strobe).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LiteW {
+    pub data: u32,
+    pub strb: u8,
+}
+
+/// AXI4-Lite write response.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LiteB {
+    pub resp: u8,
+}
+
+/// AXI4-Lite read-address beat.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LiteAr {
+    pub addr: u32,
+}
+
+/// AXI4-Lite read-data beat.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LiteR {
+    pub data: u32,
+    pub resp: u8,
+}
+
+// ----------------------------------------------------------------- AXI4
+
+/// AXI4 read-address beat (burst).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Ar {
+    pub addr: u64,
+    /// Beats in burst − 1 (AXI ARLEN semantics).
+    pub len: u8,
+    pub id: u8,
+}
+
+impl Ar {
+    pub fn beats(&self) -> u16 {
+        self.len as u16 + 1
+    }
+    pub fn bytes(&self) -> u32 {
+        self.beats() as u32 * DATA_BYTES as u32
+    }
+}
+
+/// AXI4 read-data beat.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct R {
+    pub data: [u8; DATA_BYTES],
+    pub id: u8,
+    pub resp: u8,
+    pub last: bool,
+}
+
+/// AXI4 write-address beat (burst).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Aw {
+    pub addr: u64,
+    pub len: u8,
+    pub id: u8,
+}
+
+impl Aw {
+    pub fn beats(&self) -> u16 {
+        self.len as u16 + 1
+    }
+}
+
+/// AXI4 write-data beat.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct W {
+    pub data: [u8; DATA_BYTES],
+    pub strb: u16,
+    pub last: bool,
+}
+
+/// AXI4 write response.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct B {
+    pub id: u8,
+    pub resp: u8,
+}
+
+// ---------------------------------------------------------- AXI4-Stream
+
+/// AXI4-Stream beat: 128-bit data, byte keep, packet-last.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AxisBeat {
+    pub data: [u8; DATA_BYTES],
+    pub keep: u16,
+    pub last: bool,
+}
+
+impl AxisBeat {
+    /// A full beat from 4 little-endian i32 words.
+    pub fn from_words(words: [i32; WORDS_PER_BEAT], last: bool) -> Self {
+        let mut data = [0u8; DATA_BYTES];
+        for (i, w) in words.iter().enumerate() {
+            data[i * 4..i * 4 + 4].copy_from_slice(&w.to_le_bytes());
+        }
+        Self {
+            data,
+            keep: 0xFFFF,
+            last,
+        }
+    }
+
+    /// Decode the 4 little-endian i32 words of the beat.
+    pub fn words(&self) -> [i32; WORDS_PER_BEAT] {
+        let mut out = [0i32; WORDS_PER_BEAT];
+        for (i, o) in out.iter_mut().enumerate() {
+            *o = i32::from_le_bytes(self.data[i * 4..i * 4 + 4].try_into().unwrap());
+        }
+        out
+    }
+}
+
+/// Pack a slice of i32 into stream beats (last beat flagged).
+pub fn words_to_beats(words: &[i32]) -> Vec<AxisBeat> {
+    assert!(
+        words.len() % WORDS_PER_BEAT == 0,
+        "stream payload must be a whole number of beats"
+    );
+    let n = words.len() / WORDS_PER_BEAT;
+    (0..n)
+        .map(|i| {
+            let mut w = [0i32; WORDS_PER_BEAT];
+            w.copy_from_slice(&words[i * WORDS_PER_BEAT..(i + 1) * WORDS_PER_BEAT]);
+            AxisBeat::from_words(w, i == n - 1)
+        })
+        .collect()
+}
+
+/// Unpack stream beats back into i32 words.
+pub fn beats_to_words(beats: &[AxisBeat]) -> Vec<i32> {
+    beats.iter().flat_map(|b| b.words()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::forall;
+
+    #[test]
+    fn beat_word_roundtrip() {
+        let words = [1i32, -2, i32::MAX, i32::MIN];
+        let b = AxisBeat::from_words(words, true);
+        assert_eq!(b.words(), words);
+        assert!(b.last);
+        assert_eq!(b.keep, 0xFFFF);
+    }
+
+    #[test]
+    fn words_to_beats_flags_last_only_on_final() {
+        let words: Vec<i32> = (0..32).collect();
+        let beats = words_to_beats(&words);
+        assert_eq!(beats.len(), 8);
+        assert!(beats[..7].iter().all(|b| !b.last));
+        assert!(beats[7].last);
+        assert_eq!(beats_to_words(&beats), words);
+    }
+
+    #[test]
+    fn ar_geometry() {
+        let ar = Ar { addr: 0x1000, len: 15, id: 2 };
+        assert_eq!(ar.beats(), 16);
+        assert_eq!(ar.bytes(), 256);
+    }
+
+    #[test]
+    fn prop_stream_pack_unpack() {
+        forall(
+            0x57EA,
+            200,
+            |g| {
+                let n = g.size(128) * WORDS_PER_BEAT;
+                g.rng.vec_i32(n)
+            },
+            |words| {
+                let beats = words_to_beats(words);
+                if beats_to_words(&beats) != *words {
+                    return Err("pack/unpack mangled".into());
+                }
+                if beats.iter().rev().skip(1).any(|b| b.last) {
+                    return Err("stray TLAST".into());
+                }
+                Ok(())
+            },
+        );
+    }
+}

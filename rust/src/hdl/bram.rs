@@ -1,0 +1,164 @@
+//! AXI4-Lite BRAM block — backs the BAR2 bulk window.
+//!
+//! A plain on-FPGA memory reachable from the host, used by the stress
+//! workloads (bulk MMIO) and as a scratch buffer target. Single-cycle
+//! read/write, like a true-dual-port BRAM with registered outputs.
+
+use super::axi::{resp, LiteAr, LiteAw, LiteB, LiteR, LiteW};
+use super::sim::Fifo;
+use super::signal::{ProbeSink, Probed};
+
+/// The BRAM module.
+pub struct Bram {
+    mem: Vec<u8>,
+    pend_aw: Option<LiteAw>,
+    pend_w: Option<LiteW>,
+    pub reads: u64,
+    pub writes: u64,
+}
+
+impl Bram {
+    pub fn new(size: usize) -> Self {
+        assert!(size.is_power_of_two() && size >= 4);
+        Self {
+            mem: vec![0; size],
+            pend_aw: None,
+            pend_w: None,
+            reads: 0,
+            writes: 0,
+        }
+    }
+
+    pub fn size(&self) -> usize {
+        self.mem.len()
+    }
+
+    /// Direct (debug monitor) access — not part of the AXI interface.
+    pub fn peek32(&self, addr: u32) -> u32 {
+        let a = (addr as usize & !3) % self.mem.len();
+        u32::from_le_bytes(self.mem[a..a + 4].try_into().unwrap())
+    }
+
+    /// One cycle of the AXI-Lite slave.
+    pub fn tick(
+        &mut self,
+        aw: &mut Fifo<LiteAw>,
+        w: &mut Fifo<LiteW>,
+        b: &mut Fifo<LiteB>,
+        ar: &mut Fifo<LiteAr>,
+        r: &mut Fifo<LiteR>,
+    ) {
+        if ar.can_pop() && r.can_push() {
+            let req = ar.pop().unwrap();
+            let a = req.addr as usize & !3;
+            if a + 4 <= self.mem.len() {
+                self.reads += 1;
+                let data = u32::from_le_bytes(self.mem[a..a + 4].try_into().unwrap());
+                r.push(LiteR { data, resp: resp::OKAY });
+            } else {
+                r.push(LiteR { data: 0, resp: resp::SLVERR });
+            }
+        }
+        if self.pend_aw.is_none() {
+            self.pend_aw = aw.pop();
+        }
+        if self.pend_w.is_none() {
+            self.pend_w = w.pop();
+        }
+        if let (Some(awb), Some(wb)) = (self.pend_aw, self.pend_w) {
+            if b.can_push() {
+                let a = awb.addr as usize & !3;
+                let rsp = if a + 4 <= self.mem.len() {
+                    self.writes += 1;
+                    for i in 0..4 {
+                        if wb.strb & (1 << i) != 0 {
+                            self.mem[a + i] = wb.data.to_le_bytes()[i];
+                        }
+                    }
+                    resp::OKAY
+                } else {
+                    resp::SLVERR
+                };
+                b.push(LiteB { resp: rsp });
+                self.pend_aw = None;
+                self.pend_w = None;
+            }
+        }
+    }
+}
+
+impl Probed for Bram {
+    fn probe(&self, sink: &mut dyn ProbeSink) {
+        sink.sig("platform.bram.reads", 32, self.reads);
+        sink.sig("platform.bram.writes", 32, self.writes);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rw(bram: &mut Bram, addr: u32, data: Option<u32>) -> (u32, u8) {
+        let mut aw = Fifo::new(2);
+        let mut w = Fifo::new(2);
+        let mut b = Fifo::new(2);
+        let mut ar = Fifo::new(2);
+        let mut r = Fifo::new(2);
+        if let Some(d) = data {
+            aw.push(LiteAw { addr });
+            w.push(LiteW { data: d, strb: 0xF });
+        } else {
+            ar.push(LiteAr { addr });
+        }
+        aw.commit();
+        w.commit();
+        ar.commit();
+        for _ in 0..4 {
+            bram.tick(&mut aw, &mut w, &mut b, &mut ar, &mut r);
+            b.commit();
+            r.commit();
+            if let Some(x) = r.pop() {
+                return (x.data, x.resp);
+            }
+            if let Some(x) = b.pop() {
+                return (0, x.resp);
+            }
+        }
+        panic!("no response");
+    }
+
+    #[test]
+    fn write_then_read() {
+        let mut bram = Bram::new(4096);
+        assert_eq!(rw(&mut bram, 0x40, Some(0xDEAD_BEEF)).1, resp::OKAY);
+        assert_eq!(rw(&mut bram, 0x40, None), (0xDEAD_BEEF, resp::OKAY));
+        assert_eq!(bram.peek32(0x40), 0xDEAD_BEEF);
+    }
+
+    #[test]
+    fn partial_strobe_write() {
+        let mut bram = Bram::new(4096);
+        rw(&mut bram, 0x10, Some(0xFFFF_FFFF));
+        let mut aw = Fifo::new(2);
+        let mut w = Fifo::new(2);
+        let mut b = Fifo::new(2);
+        let mut ar = Fifo::new(2);
+        let mut r = Fifo::new(2);
+        aw.push(LiteAw { addr: 0x10 });
+        w.push(LiteW { data: 0x0000_00AB, strb: 0x1 }); // low byte only
+        aw.commit();
+        w.commit();
+        for _ in 0..4 {
+            bram.tick(&mut aw, &mut w, &mut b, &mut ar, &mut r);
+            b.commit();
+        }
+        assert_eq!(bram.peek32(0x10), 0xFFFF_FFAB);
+    }
+
+    #[test]
+    fn out_of_range_slverr() {
+        let mut bram = Bram::new(4096);
+        assert_eq!(rw(&mut bram, 0x2000, None).1, resp::SLVERR);
+        assert_eq!(rw(&mut bram, 0x2000, Some(1)).1, resp::SLVERR);
+    }
+}

@@ -1,0 +1,747 @@
+//! Xilinx-style AXI DMA (direct register mode): MM2S (memory→stream)
+//! and S2MM (stream→memory) channels.
+//!
+//! The paper's platform: "A Xilinx DMA is used to fetch input data
+//! from the host memory through PCIe, stream data through the sorting
+//! unit, and write the results back to the host memory." The register
+//! map below is the AXI DMA v7.1 direct-mode subset the Linux driver
+//! exercises (DMACR/DMASR, SA/DA, LENGTH; IOC interrupt on complete).
+//!
+//! Bus behaviour: bursts of up to 16 beats × 128 bits (256 B),
+//! 4 KiB-boundary safe, up to two outstanding read bursts (matching
+//! the modest pipelining of the real IP at this configuration).
+
+use std::collections::VecDeque;
+
+use super::axi::{
+    resp, Ar, Aw, AxisBeat, LiteAr, LiteAw, LiteB, LiteR, LiteW, B, DATA_BYTES,
+    MAX_BURST_BEATS, R, W,
+};
+use super::sim::Fifo;
+use super::signal::{ProbeSink, Probed};
+
+/// DMA register offsets (within the DMA's AXI-Lite window).
+pub mod regs {
+    pub const MM2S_DMACR: u32 = 0x00;
+    pub const MM2S_DMASR: u32 = 0x04;
+    pub const MM2S_SA: u32 = 0x18;
+    pub const MM2S_SA_MSB: u32 = 0x1C;
+    pub const MM2S_LENGTH: u32 = 0x28;
+    pub const S2MM_DMACR: u32 = 0x30;
+    pub const S2MM_DMASR: u32 = 0x34;
+    pub const S2MM_DA: u32 = 0x48;
+    pub const S2MM_DA_MSB: u32 = 0x4C;
+    pub const S2MM_LENGTH: u32 = 0x58;
+}
+
+/// DMACR bits.
+pub mod cr {
+    pub const RS: u32 = 1 << 0;
+    pub const RESET: u32 = 1 << 2;
+    pub const IOC_IRQ_EN: u32 = 1 << 12;
+    pub const ERR_IRQ_EN: u32 = 1 << 14;
+}
+
+/// DMASR bits.
+pub mod sr {
+    pub const HALTED: u32 = 1 << 0;
+    pub const IDLE: u32 = 1 << 1;
+    pub const DMA_INT_ERR: u32 = 1 << 4;
+    pub const DMA_SLV_ERR: u32 = 1 << 5;
+    pub const IOC_IRQ: u32 = 1 << 12;
+    pub const ERR_IRQ: u32 = 1 << 14;
+}
+
+/// Max transfer length (26-bit LENGTH register).
+pub const MAX_LENGTH: u32 = (1 << 26) - 1;
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum ChanState {
+    Halted,
+    Idle,
+    Active,
+}
+
+/// Common per-channel register state.
+#[derive(Debug)]
+struct Chan {
+    cr: u32,
+    sr_irq: u32, // latched IOC/ERR bits (W1C)
+    err: bool,
+    addr: u64,
+    state: ChanState,
+    bytes_total: u32,
+}
+
+impl Chan {
+    fn new() -> Self {
+        Self {
+            cr: 0,
+            sr_irq: 0,
+            err: false,
+            addr: 0,
+            state: ChanState::Halted,
+            bytes_total: 0,
+        }
+    }
+
+    fn sr(&self) -> u32 {
+        let mut v = self.sr_irq;
+        match self.state {
+            ChanState::Halted => v |= sr::HALTED,
+            ChanState::Idle => v |= sr::IDLE,
+            ChanState::Active => {}
+        }
+        if self.err {
+            v |= sr::DMA_INT_ERR;
+        }
+        v
+    }
+
+    fn write_cr(&mut self, v: u32) {
+        if v & cr::RESET != 0 {
+            *self = Chan::new();
+            self.state = ChanState::Halted;
+            return;
+        }
+        self.cr = v & (cr::RS | cr::IOC_IRQ_EN | cr::ERR_IRQ_EN);
+        if self.cr & cr::RS != 0 {
+            if self.state == ChanState::Halted {
+                self.state = ChanState::Idle;
+            }
+        } else {
+            self.state = ChanState::Halted;
+        }
+    }
+
+    fn irq_out(&self) -> bool {
+        (self.sr_irq & sr::IOC_IRQ != 0 && self.cr & cr::IOC_IRQ_EN != 0)
+            || (self.sr_irq & sr::ERR_IRQ != 0 && self.cr & cr::ERR_IRQ_EN != 0)
+    }
+}
+
+/// The AXI DMA module.
+pub struct AxiDma {
+    mm2s: Chan,
+    s2mm: Chan,
+    // MM2S engine state.
+    mm2s_ar_remaining: u32,  // bytes still to request
+    mm2s_ar_addr: u64,       // next request address
+    mm2s_data_remaining: u32, // bytes still to stream out
+    mm2s_outstanding: VecDeque<u16>, // beats per outstanding burst
+    // S2MM engine state.
+    s2mm_remaining: u32, // bytes still to write
+    s2mm_buf: Vec<AxisBeat>,
+    s2mm_issue: Option<(u64, Vec<AxisBeat>, usize)>, // (addr, beats, sent)
+    s2mm_awaiting_b: u32,
+    s2mm_stream_done: bool,
+    // AXI-Lite pending write.
+    pend_aw: Option<LiteAw>,
+    pend_w: Option<LiteW>,
+    // Counters.
+    pub rd_bursts: u64,
+    pub wr_bursts: u64,
+    pub bytes_read: u64,
+    pub bytes_written: u64,
+    pub completions_mm2s: u64,
+    pub completions_s2mm: u64,
+}
+
+impl Default for AxiDma {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl AxiDma {
+    pub fn new() -> Self {
+        Self {
+            mm2s: Chan::new(),
+            s2mm: Chan::new(),
+            mm2s_ar_remaining: 0,
+            mm2s_ar_addr: 0,
+            mm2s_data_remaining: 0,
+            mm2s_outstanding: VecDeque::new(),
+            s2mm_remaining: 0,
+            s2mm_buf: Vec::new(),
+            s2mm_issue: None,
+            s2mm_awaiting_b: 0,
+            s2mm_stream_done: false,
+            pend_aw: None,
+            pend_w: None,
+            rd_bursts: 0,
+            wr_bursts: 0,
+            bytes_read: 0,
+            bytes_written: 0,
+            completions_mm2s: 0,
+            completions_s2mm: 0,
+        }
+    }
+
+    /// Interrupt outputs: (mm2s_introut, s2mm_introut) — level until
+    /// the DMASR IOC bit is cleared (W1C), as in the real IP.
+    pub fn irq(&self) -> (bool, bool) {
+        (self.mm2s.irq_out(), self.s2mm.irq_out())
+    }
+
+    fn read_reg(&mut self, addr: u32) -> (u32, u8) {
+        let v = match addr & 0xFFC {
+            regs::MM2S_DMACR => self.mm2s.cr,
+            regs::MM2S_DMASR => self.mm2s.sr(),
+            regs::MM2S_SA => self.mm2s.addr as u32,
+            regs::MM2S_SA_MSB => (self.mm2s.addr >> 32) as u32,
+            regs::MM2S_LENGTH => self.mm2s.bytes_total,
+            regs::S2MM_DMACR => self.s2mm.cr,
+            regs::S2MM_DMASR => self.s2mm.sr(),
+            regs::S2MM_DA => self.s2mm.addr as u32,
+            regs::S2MM_DA_MSB => (self.s2mm.addr >> 32) as u32,
+            regs::S2MM_LENGTH => self.s2mm.bytes_total,
+            _ => return (0, resp::SLVERR),
+        };
+        (v, resp::OKAY)
+    }
+
+    fn write_reg(&mut self, addr: u32, v: u32) -> u8 {
+        match addr & 0xFFC {
+            regs::MM2S_DMACR => self.mm2s.write_cr(v),
+            regs::MM2S_DMASR => self.mm2s.sr_irq &= !(v & (sr::IOC_IRQ | sr::ERR_IRQ)),
+            regs::MM2S_SA => {
+                self.mm2s.addr = (self.mm2s.addr & !0xFFFF_FFFF) | v as u64
+            }
+            regs::MM2S_SA_MSB => {
+                self.mm2s.addr = (self.mm2s.addr & 0xFFFF_FFFF) | ((v as u64) << 32)
+            }
+            regs::MM2S_LENGTH => return self.start_mm2s(v),
+            regs::S2MM_DMACR => self.s2mm.write_cr(v),
+            regs::S2MM_DMASR => self.s2mm.sr_irq &= !(v & (sr::IOC_IRQ | sr::ERR_IRQ)),
+            regs::S2MM_DA => {
+                self.s2mm.addr = (self.s2mm.addr & !0xFFFF_FFFF) | v as u64
+            }
+            regs::S2MM_DA_MSB => {
+                self.s2mm.addr = (self.s2mm.addr & 0xFFFF_FFFF) | ((v as u64) << 32)
+            }
+            regs::S2MM_LENGTH => return self.start_s2mm(v),
+            _ => return resp::SLVERR,
+        }
+        resp::OKAY
+    }
+
+    fn start_mm2s(&mut self, len: u32) -> u8 {
+        let len = len & MAX_LENGTH;
+        // Writing LENGTH while halted or mid-transfer is ignored by
+        // the real IP; while busy it is a driver bug we surface.
+        if self.mm2s.state != ChanState::Idle || len == 0 {
+            return resp::SLVERR;
+        }
+        if len % DATA_BYTES as u32 != 0 || self.mm2s.addr % DATA_BYTES as u64 != 0 {
+            // This model requires beat-aligned transfers (the driver
+            // guarantees it); flag DMAIntErr like the IP does for
+            // invalid descriptors.
+            self.mm2s.err = true;
+            self.mm2s.sr_irq |= sr::ERR_IRQ;
+            return resp::OKAY;
+        }
+        self.mm2s.bytes_total = len;
+        self.mm2s_ar_remaining = len;
+        self.mm2s_data_remaining = len;
+        self.mm2s_ar_addr = self.mm2s.addr;
+        self.mm2s.state = ChanState::Active;
+        resp::OKAY
+    }
+
+    fn start_s2mm(&mut self, len: u32) -> u8 {
+        let len = len & MAX_LENGTH;
+        if self.s2mm.state != ChanState::Idle || len == 0 {
+            return resp::SLVERR;
+        }
+        if len % DATA_BYTES as u32 != 0 || self.s2mm.addr % DATA_BYTES as u64 != 0 {
+            self.s2mm.err = true;
+            self.s2mm.sr_irq |= sr::ERR_IRQ;
+            return resp::OKAY;
+        }
+        self.s2mm.bytes_total = len;
+        self.s2mm_remaining = len;
+        self.s2mm_buf.clear();
+        self.s2mm_issue = None;
+        self.s2mm_awaiting_b = 0;
+        self.s2mm_stream_done = false;
+        self.s2mm.state = ChanState::Active;
+        resp::OKAY
+    }
+
+    /// Burst beats for the next request at `addr` with `remaining`
+    /// bytes: capped by MAX_BURST_BEATS and the 4 KiB boundary.
+    fn burst_beats(addr: u64, remaining: u32) -> u16 {
+        let to_boundary = (0x1000 - (addr & 0xFFF)) as u32;
+        let max_bytes = (MAX_BURST_BEATS as u32 * DATA_BYTES as u32)
+            .min(to_boundary)
+            .min(remaining);
+        (max_bytes / DATA_BYTES as u32) as u16
+    }
+
+    /// One cycle of the whole DMA.
+    #[allow(clippy::too_many_arguments)]
+    pub fn tick(
+        &mut self,
+        // AXI-Lite slave (control)
+        s_aw: &mut Fifo<LiteAw>,
+        s_w: &mut Fifo<LiteW>,
+        s_b: &mut Fifo<LiteB>,
+        s_ar: &mut Fifo<LiteAr>,
+        s_r: &mut Fifo<LiteR>,
+        // AXI4 master (to the PCIe bridge / host memory)
+        m_ar: &mut Fifo<Ar>,
+        m_r: &mut Fifo<R>,
+        m_aw: &mut Fifo<Aw>,
+        m_w: &mut Fifo<W>,
+        m_b: &mut Fifo<B>,
+        // Streams: MM2S out (to sorter), S2MM in (from sorter)
+        mm2s_axis: &mut Fifo<AxisBeat>,
+        s2mm_axis: &mut Fifo<AxisBeat>,
+    ) {
+        // ---------------- register interface ----------------
+        if s_ar.can_pop() && s_r.can_push() {
+            let req = s_ar.pop().unwrap();
+            let (data, rsp) = self.read_reg(req.addr);
+            s_r.push(LiteR { data, resp: rsp });
+        }
+        if self.pend_aw.is_none() {
+            self.pend_aw = s_aw.pop();
+        }
+        if self.pend_w.is_none() {
+            self.pend_w = s_w.pop();
+        }
+        if let (Some(awb), Some(wb)) = (self.pend_aw, self.pend_w) {
+            if s_b.can_push() {
+                let rsp = if wb.strb == 0xF {
+                    self.write_reg(awb.addr, wb.data)
+                } else {
+                    resp::SLVERR
+                };
+                s_b.push(LiteB { resp: rsp });
+                self.pend_aw = None;
+                self.pend_w = None;
+            }
+        }
+
+        // ---------------- MM2S engine ----------------
+        if self.mm2s.state == ChanState::Active {
+            // Issue read bursts (≤2 outstanding).
+            if self.mm2s_ar_remaining > 0
+                && self.mm2s_outstanding.len() < 2
+                && m_ar.can_push()
+            {
+                let beats = Self::burst_beats(self.mm2s_ar_addr, self.mm2s_ar_remaining);
+                if beats > 0 {
+                    m_ar.push(Ar {
+                        addr: self.mm2s_ar_addr,
+                        len: (beats - 1) as u8,
+                        id: 0,
+                    });
+                    self.mm2s_outstanding.push_back(beats);
+                    self.mm2s_ar_addr += beats as u64 * DATA_BYTES as u64;
+                    self.mm2s_ar_remaining -= beats as u32 * DATA_BYTES as u32;
+                    self.rd_bursts += 1;
+                }
+            }
+            // Move R beats to the stream.
+            if m_r.can_pop() && mm2s_axis.can_push() {
+                let r = m_r.pop().unwrap();
+                if r.resp != resp::OKAY {
+                    self.mm2s.err = true;
+                    self.mm2s.sr_irq |= sr::ERR_IRQ;
+                }
+                self.mm2s_data_remaining =
+                    self.mm2s_data_remaining.saturating_sub(DATA_BYTES as u32);
+                self.bytes_read += DATA_BYTES as u64;
+                let last_of_transfer = self.mm2s_data_remaining == 0;
+                mm2s_axis.push(AxisBeat {
+                    data: r.data,
+                    keep: 0xFFFF,
+                    last: last_of_transfer,
+                });
+                if r.last {
+                    self.mm2s_outstanding.pop_front();
+                }
+                if last_of_transfer {
+                    self.mm2s.state = ChanState::Idle;
+                    self.mm2s.sr_irq |= sr::IOC_IRQ;
+                    self.completions_mm2s += 1;
+                }
+            }
+        }
+
+        // ---------------- S2MM engine ----------------
+        if self.s2mm.state == ChanState::Active {
+            // Accept stream beats into the burst buffer.
+            if !self.s2mm_stream_done
+                && s2mm_axis.can_pop()
+                && self.s2mm_buf.len() < MAX_BURST_BEATS as usize
+                && self.s2mm_issue.is_none()
+            {
+                let beat = s2mm_axis.pop().unwrap();
+                self.s2mm_buf.push(beat);
+                let buffered = self.s2mm_buf.len() as u32 * DATA_BYTES as u32;
+                let consumed_all = buffered >= self.s2mm_remaining;
+                if beat.last || consumed_all {
+                    self.s2mm_stream_done = true;
+                }
+            }
+            // Promote a full (or final) buffer into an AW+W issue.
+            if self.s2mm_issue.is_none()
+                && (!self.s2mm_buf.is_empty())
+                && (self.s2mm_buf.len() == MAX_BURST_BEATS as usize || self.s2mm_stream_done)
+            {
+                // Clamp to the 4 KiB boundary: split if needed.
+                let beats_allowed =
+                    Self::burst_beats(self.s2mm.addr, self.s2mm_remaining) as usize;
+                let take = self.s2mm_buf.len().min(beats_allowed.max(1));
+                let burst: Vec<AxisBeat> = self.s2mm_buf.drain(..take).collect();
+                self.s2mm_issue = Some((self.s2mm.addr, burst, 0));
+            }
+            // Drive AW/W.
+            if let Some((addr, burst, sent)) = &mut self.s2mm_issue {
+                if *sent == 0 {
+                    if m_aw.can_push() {
+                        m_aw.push(Aw {
+                            addr: *addr,
+                            len: (burst.len() - 1) as u8,
+                            id: 1,
+                        });
+                        self.wr_bursts += 1;
+                        *sent = 1; // AW sent; W beats follow
+                    }
+                } else {
+                    let beat_idx = *sent - 1;
+                    if beat_idx < burst.len() && m_w.can_push() {
+                        let b = burst[beat_idx];
+                        m_w.push(W {
+                            data: b.data,
+                            strb: 0xFFFF,
+                            last: beat_idx == burst.len() - 1,
+                        });
+                        self.bytes_written += DATA_BYTES as u64;
+                        *sent += 1;
+                    }
+                    if *sent - 1 == burst.len() {
+                        let bytes = burst.len() as u32 * DATA_BYTES as u32;
+                        self.s2mm.addr += bytes as u64;
+                        self.s2mm_remaining -= bytes.min(self.s2mm_remaining);
+                        self.s2mm_awaiting_b += 1;
+                        self.s2mm_issue = None;
+                    }
+                }
+            }
+            // Collect write responses.
+            if m_b.can_pop() {
+                let b = m_b.pop().unwrap();
+                if b.resp != resp::OKAY {
+                    self.s2mm.err = true;
+                    self.s2mm.sr_irq |= sr::ERR_IRQ;
+                }
+                self.s2mm_awaiting_b -= 1;
+            }
+            // Completion.
+            if self.s2mm_remaining == 0
+                && self.s2mm_issue.is_none()
+                && self.s2mm_buf.is_empty()
+                && self.s2mm_awaiting_b == 0
+            {
+                self.s2mm.state = ChanState::Idle;
+                self.s2mm.sr_irq |= sr::IOC_IRQ;
+                self.completions_s2mm += 1;
+            }
+        }
+    }
+}
+
+impl Probed for AxiDma {
+    fn probe(&self, sink: &mut dyn ProbeSink) {
+        sink.sig("platform.dma.mm2s_sr", 16, self.mm2s.sr() as u64);
+        sink.sig("platform.dma.s2mm_sr", 16, self.s2mm.sr() as u64);
+        sink.sig(
+            "platform.dma.mm2s_active",
+            1,
+            (self.mm2s.state == ChanState::Active) as u64,
+        );
+        sink.sig(
+            "platform.dma.s2mm_active",
+            1,
+            (self.s2mm.state == ChanState::Active) as u64,
+        );
+        sink.sig("platform.dma.mm2s_introut", 1, self.mm2s.irq_out() as u64);
+        sink.sig("platform.dma.s2mm_introut", 1, self.s2mm.irq_out() as u64);
+        sink.sig("platform.dma.rd_bursts", 32, self.rd_bursts);
+        sink.sig("platform.dma.wr_bursts", 32, self.wr_bursts);
+        sink.sig("platform.dma.bytes_read", 32, self.bytes_read);
+        sink.sig("platform.dma.bytes_written", 32, self.bytes_written);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    struct Harness {
+        dma: AxiDma,
+        s_aw: Fifo<LiteAw>,
+        s_w: Fifo<LiteW>,
+        s_b: Fifo<LiteB>,
+        s_ar: Fifo<LiteAr>,
+        s_r: Fifo<LiteR>,
+        m_ar: Fifo<Ar>,
+        m_r: Fifo<R>,
+        m_aw: Fifo<Aw>,
+        m_w: Fifo<W>,
+        m_b: Fifo<B>,
+        mm2s: Fifo<AxisBeat>,
+        s2mm: Fifo<AxisBeat>,
+        /// Simple host-memory model behind the AXI master port.
+        host: Vec<u8>,
+        rd_queue: VecDeque<(u64, u16, u16)>, // addr, beats, emitted
+        wr_state: Option<(u64, u16)>,
+    }
+
+    impl Harness {
+        fn new() -> Self {
+            Self {
+                dma: AxiDma::new(),
+                s_aw: Fifo::new(2),
+                s_w: Fifo::new(2),
+                s_b: Fifo::new(2),
+                s_ar: Fifo::new(2),
+                s_r: Fifo::new(2),
+                m_ar: Fifo::new(4),
+                m_r: Fifo::new(4),
+                m_aw: Fifo::new(4),
+                m_w: Fifo::new(4),
+                m_b: Fifo::new(4),
+                mm2s: Fifo::new(4),
+                s2mm: Fifo::new(4),
+                host: vec![0; 64 * 1024],
+                rd_queue: VecDeque::new(),
+                wr_state: None,
+            }
+        }
+
+        fn commit(&mut self) {
+            self.s_aw.commit();
+            self.s_w.commit();
+            self.s_b.commit();
+            self.s_ar.commit();
+            self.s_r.commit();
+            self.m_ar.commit();
+            self.m_r.commit();
+            self.m_aw.commit();
+            self.m_w.commit();
+            self.m_b.commit();
+            self.mm2s.commit();
+            self.s2mm.commit();
+        }
+
+        /// Host-memory slave servicing the DMA's AXI master.
+        fn host_service(&mut self) {
+            if let Some(ar) = self.m_ar.pop() {
+                self.rd_queue.push_back((ar.addr, ar.beats(), 0));
+            }
+            if let Some((addr, beats, emitted)) = self.rd_queue.front_mut() {
+                if self.m_r.can_push() {
+                    let off = (*addr as usize) + *emitted as usize * DATA_BYTES;
+                    let mut data = [0u8; DATA_BYTES];
+                    data.copy_from_slice(&self.host[off..off + DATA_BYTES]);
+                    *emitted += 1;
+                    let last = *emitted == *beats;
+                    self.m_r.push(R { data, id: 0, resp: resp::OKAY, last });
+                    if last {
+                        self.rd_queue.pop_front();
+                    }
+                }
+            }
+            if self.wr_state.is_none() {
+                if let Some(aw) = self.m_aw.pop() {
+                    self.wr_state = Some((aw.addr, 0));
+                }
+            }
+            if let Some((addr, beat)) = self.wr_state {
+                if let Some(w) = self.m_w.pop() {
+                    let off = addr as usize + beat as usize * DATA_BYTES;
+                    self.host[off..off + DATA_BYTES].copy_from_slice(&w.data);
+                    if w.last {
+                        if self.m_b.can_push() {
+                            self.m_b.push(B { id: 1, resp: resp::OKAY });
+                        }
+                        self.wr_state = None;
+                    } else {
+                        self.wr_state = Some((addr, beat + 1));
+                    }
+                }
+            }
+        }
+
+        fn step(&mut self) {
+            self.dma.tick(
+                &mut self.s_aw, &mut self.s_w, &mut self.s_b, &mut self.s_ar,
+                &mut self.s_r, &mut self.m_ar, &mut self.m_r, &mut self.m_aw,
+                &mut self.m_w, &mut self.m_b, &mut self.mm2s, &mut self.s2mm,
+            );
+            self.host_service();
+            self.commit();
+        }
+
+        fn write_reg(&mut self, addr: u32, data: u32) -> u8 {
+            self.s_aw.push(LiteAw { addr });
+            self.s_w.push(LiteW { data, strb: 0xF });
+            self.commit();
+            for _ in 0..8 {
+                self.step();
+                if let Some(b) = self.s_b.pop() {
+                    return b.resp;
+                }
+            }
+            panic!("no write resp");
+        }
+
+        fn read_reg(&mut self, addr: u32) -> u32 {
+            self.s_ar.push(LiteAr { addr });
+            self.commit();
+            for _ in 0..8 {
+                self.step();
+                if let Some(r) = self.s_r.pop() {
+                    return r.data;
+                }
+            }
+            panic!("no read resp");
+        }
+    }
+
+    #[test]
+    fn reset_and_halted_semantics() {
+        let mut h = Harness::new();
+        assert_eq!(h.read_reg(regs::MM2S_DMASR) & sr::HALTED, sr::HALTED);
+        h.write_reg(regs::MM2S_DMACR, cr::RS);
+        assert_eq!(h.read_reg(regs::MM2S_DMASR) & sr::IDLE, sr::IDLE);
+        h.write_reg(regs::MM2S_DMACR, cr::RESET);
+        assert_eq!(h.read_reg(regs::MM2S_DMASR) & sr::HALTED, sr::HALTED);
+    }
+
+    #[test]
+    fn length_while_halted_is_error() {
+        let mut h = Harness::new();
+        assert_eq!(h.write_reg(regs::MM2S_LENGTH, 64), resp::SLVERR);
+    }
+
+    #[test]
+    fn mm2s_streams_host_memory() {
+        let mut h = Harness::new();
+        for (i, b) in h.host.iter_mut().enumerate().take(4096) {
+            *b = (i % 251) as u8;
+        }
+        h.write_reg(regs::MM2S_DMACR, cr::RS | cr::IOC_IRQ_EN);
+        h.write_reg(regs::MM2S_SA, 0);
+        assert_eq!(h.write_reg(regs::MM2S_LENGTH, 4096), resp::OKAY);
+        let mut beats = Vec::new();
+        for _ in 0..4000 {
+            h.step();
+            while let Some(b) = h.mm2s.pop() {
+                beats.push(b);
+            }
+            if beats.len() == 256 {
+                break;
+            }
+        }
+        assert_eq!(beats.len(), 256);
+        assert!(beats[255].last, "final beat must carry TLAST");
+        assert!(beats[..255].iter().all(|b| !b.last));
+        let bytes: Vec<u8> = beats.iter().flat_map(|b| b.data).collect();
+        assert_eq!(&bytes[..], &h.host[..4096]);
+        // IOC interrupt raised and W1C-clearable.
+        assert!(h.dma.irq().0);
+        assert_ne!(h.read_reg(regs::MM2S_DMASR) & sr::IOC_IRQ, 0);
+        h.write_reg(regs::MM2S_DMASR, sr::IOC_IRQ);
+        assert!(!h.dma.irq().0);
+        assert_ne!(h.read_reg(regs::MM2S_DMASR) & sr::IDLE, 0);
+    }
+
+    #[test]
+    fn s2mm_writes_stream_to_host() {
+        let mut h = Harness::new();
+        h.write_reg(regs::S2MM_DMACR, cr::RS | cr::IOC_IRQ_EN);
+        h.write_reg(regs::S2MM_DA, 0x2000);
+        assert_eq!(h.write_reg(regs::S2MM_LENGTH, 1024), resp::OKAY);
+        // Feed 64 beats (1024 B).
+        let mut fed = 0u32;
+        for _ in 0..4000 {
+            if fed < 64 && h.s2mm.can_push() {
+                let mut data = [0u8; DATA_BYTES];
+                data[0] = fed as u8;
+                data[1] = 0xAB;
+                h.s2mm.push(AxisBeat { data, keep: 0xFFFF, last: fed == 63 });
+                fed += 1;
+            }
+            h.step();
+            if h.dma.irq().1 {
+                break;
+            }
+        }
+        assert!(h.dma.irq().1, "S2MM IOC never fired");
+        for i in 0..64 {
+            assert_eq!(h.host[0x2000 + i * DATA_BYTES], i as u8);
+            assert_eq!(h.host[0x2000 + i * DATA_BYTES + 1], 0xAB);
+        }
+        assert_eq!(h.dma.wr_bursts, 4); // 64 beats / 16-beat bursts
+    }
+
+    #[test]
+    fn unaligned_transfer_sets_err() {
+        let mut h = Harness::new();
+        h.write_reg(regs::MM2S_DMACR, cr::RS | cr::ERR_IRQ_EN);
+        h.write_reg(regs::MM2S_SA, 0x8); // not 16B-aligned
+        h.write_reg(regs::MM2S_LENGTH, 64);
+        assert_ne!(h.read_reg(regs::MM2S_DMASR) & sr::DMA_INT_ERR, 0);
+        assert!(h.dma.irq().0, "error interrupt expected");
+    }
+
+    #[test]
+    fn bursts_respect_4k_boundary() {
+        let mut h = Harness::new();
+        h.write_reg(regs::MM2S_DMACR, cr::RS);
+        h.write_reg(regs::MM2S_SA, 0xF80); // 128B below the boundary
+        h.write_reg(regs::MM2S_LENGTH, 512);
+        let mut got = 0;
+        for _ in 0..2000 {
+            h.step();
+            while h.mm2s.pop().is_some() {
+                got += 1;
+            }
+            if got == 32 {
+                break;
+            }
+        }
+        assert_eq!(got, 32);
+        // First burst must stop at the boundary: 0xF80..0x1000 = 8 beats.
+        assert!(h.dma.rd_bursts >= 3, "boundary split expected");
+    }
+
+    #[test]
+    fn back_to_back_transfers() {
+        let mut h = Harness::new();
+        h.write_reg(regs::MM2S_DMACR, cr::RS | cr::IOC_IRQ_EN);
+        for xfer in 0..3 {
+            h.write_reg(regs::MM2S_SA, xfer * 1024);
+            assert_eq!(h.write_reg(regs::MM2S_LENGTH, 1024), resp::OKAY);
+            let mut beats = 0;
+            for _ in 0..4000 {
+                h.step();
+                while h.mm2s.pop().is_some() {
+                    beats += 1;
+                }
+                if beats == 64 {
+                    break;
+                }
+            }
+            assert_eq!(beats, 64);
+            h.write_reg(regs::MM2S_DMASR, sr::IOC_IRQ);
+        }
+        assert_eq!(h.dma.completions_mm2s, 3);
+    }
+}

@@ -1,0 +1,316 @@
+//! AXI4-Lite address-decode interconnect (1 master → N slaves).
+//!
+//! Models the Vivado-generated AXI interconnect of the reference
+//! platform: decodes the configuration address space onto slave ports
+//! by address range, strips the slave's base offset, and returns
+//! DECERR for unmapped addresses. One outstanding read and one
+//! outstanding write transaction at a time (matching the single
+//! outstanding behaviour the PCIe-AXI bridge configuration uses).
+
+use super::axi::{resp, LiteAr, LiteAw, LiteB, LiteR, LiteW};
+use super::sim::Fifo;
+use super::signal::{ProbeSink, Probed};
+
+/// One slave port's channel bundle.
+pub struct LitePort {
+    pub aw: Fifo<LiteAw>,
+    pub w: Fifo<LiteW>,
+    pub b: Fifo<LiteB>,
+    pub ar: Fifo<LiteAr>,
+    pub r: Fifo<LiteR>,
+}
+
+impl LitePort {
+    pub fn new() -> Self {
+        Self {
+            aw: Fifo::new(2),
+            w: Fifo::new(2),
+            b: Fifo::new(2),
+            ar: Fifo::new(2),
+            r: Fifo::new(2),
+        }
+    }
+
+    pub fn commit(&mut self) {
+        self.aw.commit();
+        self.w.commit();
+        self.b.commit();
+        self.ar.commit();
+        self.r.commit();
+    }
+}
+
+impl Default for LitePort {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Address range → slave port index.
+#[derive(Debug, Clone, Copy)]
+pub struct MapEntry {
+    pub base: u32,
+    pub size: u32,
+    pub slave: usize,
+}
+
+/// Where an in-flight transaction is routed.
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum Route {
+    Slave(usize),
+    Decerr,
+}
+
+/// The interconnect module.
+pub struct Interconnect {
+    map: Vec<MapEntry>,
+    // In-flight read / write routing state.
+    rd_route: Option<Route>,
+    wr_route: Option<Route>,
+    wr_data_sent: bool,
+    pub decerrs: u64,
+    pub reads: u64,
+    pub writes: u64,
+}
+
+impl Interconnect {
+    pub fn new(map: Vec<MapEntry>) -> Self {
+        // Overlap check at elaboration.
+        for (i, a) in map.iter().enumerate() {
+            assert!(a.size.is_power_of_two() && a.base % a.size == 0);
+            for b in &map[i + 1..] {
+                let disjoint =
+                    a.base + a.size <= b.base || b.base + b.size <= a.base;
+                assert!(disjoint, "overlapping map entries {a:?} {b:?}");
+            }
+        }
+        Self {
+            map,
+            rd_route: None,
+            wr_route: None,
+            wr_data_sent: false,
+            decerrs: 0,
+            reads: 0,
+            writes: 0,
+        }
+    }
+
+    fn decode(&self, addr: u32) -> Route {
+        for e in &self.map {
+            if addr >= e.base && addr < e.base + e.size {
+                return Route::Slave(e.slave);
+            }
+        }
+        Route::Decerr
+    }
+
+    fn offset(&self, addr: u32) -> u32 {
+        match self.decode(addr) {
+            Route::Slave(s) => {
+                let e = self.map.iter().find(|e| e.slave == s && addr >= e.base && addr < e.base + e.size).unwrap();
+                addr - e.base
+            }
+            Route::Decerr => addr,
+        }
+    }
+
+    /// One cycle: route master-side requests to slave ports, and slave
+    /// responses back. `m` is the master-facing port (requests arrive
+    /// on aw/w/ar, responses leave on b/r); `slaves` are the slave
+    /// ports in map order.
+    pub fn tick(&mut self, m: &mut LitePort, slaves: &mut [LitePort]) {
+        // ---- read path ----
+        if self.rd_route.is_none() {
+            if let Some(req) = m.ar.peek().copied() {
+                let route = self.decode(req.addr);
+                match route {
+                    Route::Slave(s) => {
+                        if slaves[s].ar.can_push() {
+                            m.ar.pop();
+                            let off = self.offset(req.addr);
+                            slaves[s].ar.push(LiteAr { addr: off });
+                            self.rd_route = Some(route);
+                            self.reads += 1;
+                        }
+                    }
+                    Route::Decerr => {
+                        if m.r.can_push() {
+                            m.ar.pop();
+                            m.r.push(LiteR { data: 0xDEC0_DE00, resp: resp::DECERR });
+                            self.decerrs += 1;
+                            self.reads += 1;
+                        }
+                    }
+                }
+            }
+        } else if let Some(Route::Slave(s)) = self.rd_route {
+            if slaves[s].r.can_pop() && m.r.can_push() {
+                let r = slaves[s].r.pop().unwrap();
+                m.r.push(r);
+                self.rd_route = None;
+            }
+        }
+
+        // ---- write path ----
+        if self.wr_route.is_none() {
+            if let Some(req) = m.aw.peek().copied() {
+                let route = self.decode(req.addr);
+                match route {
+                    Route::Slave(s) => {
+                        if slaves[s].aw.can_push() {
+                            m.aw.pop();
+                            let off = self.offset(req.addr);
+                            slaves[s].aw.push(LiteAw { addr: off });
+                            self.wr_route = Some(route);
+                            self.wr_data_sent = false;
+                            self.writes += 1;
+                        }
+                    }
+                    Route::Decerr => {
+                        // Consume W too before answering.
+                        if m.w.can_pop() && m.b.can_push() {
+                            m.aw.pop();
+                            m.w.pop();
+                            m.b.push(LiteB { resp: resp::DECERR });
+                            self.decerrs += 1;
+                            self.writes += 1;
+                        }
+                    }
+                }
+            }
+        } else if let Some(Route::Slave(s)) = self.wr_route {
+            if !self.wr_data_sent {
+                if m.w.can_pop() && slaves[s].w.can_push() {
+                    let w = m.w.pop().unwrap();
+                    slaves[s].w.push(w);
+                    self.wr_data_sent = true;
+                }
+            } else if slaves[s].b.can_pop() && m.b.can_push() {
+                let b = slaves[s].b.pop().unwrap();
+                m.b.push(b);
+                self.wr_route = None;
+            }
+        }
+    }
+}
+
+impl Probed for Interconnect {
+    fn probe(&self, sink: &mut dyn ProbeSink) {
+        sink.sig("platform.xbar.reads", 32, self.reads);
+        sink.sig("platform.xbar.writes", 32, self.writes);
+        sink.sig("platform.xbar.decerrs", 32, self.decerrs);
+        sink.sig(
+            "platform.xbar.rd_busy",
+            1,
+            self.rd_route.is_some() as u64,
+        );
+        sink.sig(
+            "platform.xbar.wr_busy",
+            1,
+            self.wr_route.is_some() as u64,
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn setup() -> (Interconnect, LitePort, Vec<LitePort>) {
+        let ic = Interconnect::new(vec![
+            MapEntry { base: 0x0000, size: 0x1000, slave: 0 },
+            MapEntry { base: 0x1000, size: 0x1000, slave: 1 },
+        ]);
+        (ic, LitePort::new(), vec![LitePort::new(), LitePort::new()])
+    }
+
+    fn run(ic: &mut Interconnect, m: &mut LitePort, s: &mut [LitePort], cycles: u64) {
+        for _ in 0..cycles {
+            ic.tick(m, s);
+            m.commit();
+            for p in s.iter_mut() {
+                p.commit();
+            }
+        }
+    }
+
+    #[test]
+    fn read_routes_and_strips_base() {
+        let (mut ic, mut m, mut s) = setup();
+        m.ar.push(LiteAr { addr: 0x1008 });
+        m.commit();
+        run(&mut ic, &mut m, &mut s, 2);
+        assert_eq!(s[1].ar.pop(), Some(LiteAr { addr: 0x008 }));
+        assert!(s[0].ar.is_empty());
+        // Slave answers; response routes back.
+        s[1].r.push(LiteR { data: 42, resp: resp::OKAY });
+        s[1].commit();
+        run(&mut ic, &mut m, &mut s, 2);
+        assert_eq!(m.r.pop(), Some(LiteR { data: 42, resp: resp::OKAY }));
+    }
+
+    #[test]
+    fn write_routes_aw_and_w() {
+        let (mut ic, mut m, mut s) = setup();
+        m.aw.push(LiteAw { addr: 0x000C });
+        m.w.push(LiteW { data: 7, strb: 0xF });
+        m.commit();
+        run(&mut ic, &mut m, &mut s, 3);
+        assert_eq!(s[0].aw.pop(), Some(LiteAw { addr: 0x00C }));
+        assert_eq!(s[0].w.pop(), Some(LiteW { data: 7, strb: 0xF }));
+        s[0].b.push(LiteB { resp: resp::OKAY });
+        s[0].commit();
+        run(&mut ic, &mut m, &mut s, 2);
+        assert_eq!(m.b.pop(), Some(LiteB { resp: resp::OKAY }));
+    }
+
+    #[test]
+    fn unmapped_read_decerr() {
+        let (mut ic, mut m, mut s) = setup();
+        m.ar.push(LiteAr { addr: 0x9000 });
+        m.commit();
+        run(&mut ic, &mut m, &mut s, 2);
+        let r = m.r.pop().unwrap();
+        assert_eq!(r.resp, resp::DECERR);
+        assert_eq!(ic.decerrs, 1);
+    }
+
+    #[test]
+    fn unmapped_write_decerr_consumes_w() {
+        let (mut ic, mut m, mut s) = setup();
+        m.aw.push(LiteAw { addr: 0x9000 });
+        m.w.push(LiteW { data: 1, strb: 0xF });
+        m.commit();
+        run(&mut ic, &mut m, &mut s, 2);
+        let b = m.b.pop().unwrap();
+        assert_eq!(b.resp, resp::DECERR);
+        assert!(m.w.is_empty());
+    }
+
+    #[test]
+    fn serializes_reads_to_different_slaves() {
+        let (mut ic, mut m, mut s) = setup();
+        m.ar.push(LiteAr { addr: 0x0000 });
+        m.ar.push(LiteAr { addr: 0x1000 });
+        m.commit();
+        run(&mut ic, &mut m, &mut s, 2);
+        // First routed, second must wait for first's response.
+        assert!(s[0].ar.can_pop());
+        assert!(s[1].ar.is_empty());
+        s[0].ar.pop();
+        s[0].r.push(LiteR { data: 1, resp: resp::OKAY });
+        s[0].commit();
+        run(&mut ic, &mut m, &mut s, 3);
+        assert!(m.r.can_pop());
+        assert!(s[1].ar.can_pop(), "second read released after first completes");
+    }
+
+    #[test]
+    #[should_panic(expected = "overlapping")]
+    fn overlapping_map_rejected() {
+        Interconnect::new(vec![
+            MapEntry { base: 0x0000, size: 0x2000, slave: 0 },
+            MapEntry { base: 0x1000, size: 0x1000, slave: 1 },
+        ]);
+    }
+}

@@ -1,0 +1,50 @@
+//! Cycle-accurate HDL simulation substrate and the FPGA platform.
+//!
+//! This package replaces the paper's Synopsys VCS + Vivado-generated
+//! platform: a synchronous cycle-based simulation kernel ([`sim`]) with
+//! full-design waveform recording ([`vcd`]) and signal forcing
+//! ([`signal`]), hosting cycle-level models of the platform IPs:
+//!
+//! * [`axi`] — AXI4 / AXI4-Lite / AXI4-Stream channel types and
+//!   registered handshake FIFOs,
+//! * [`interconnect`] — AXI-Lite address-decode interconnect,
+//! * [`regfile`] — accelerator control/status registers,
+//! * [`dma`] — Xilinx-style AXI DMA (MM2S + S2MM, direct register mode),
+//! * [`sorter`] — the streaming sorting network (1024 × 32-bit in 1256
+//!   cycles, 128-bit streams — the Spiral IP of the paper §III),
+//! * [`bridge`] — the **PCIe simulation bridge** (paper §II): AXI-facing,
+//!   pin-compatible stand-in for the hardware PCIe-AXI bridge,
+//! * [`platform`] — the top-level wiring of all of the above.
+//!
+//! Everything advances on a single clock (the 250 MHz PCIe/AXI user
+//! clock, 4 ns period); all inter-module wires are registered
+//! ([`sim::Fifo`], [`sim::Reg`]), making evaluation order-independent
+//! and deterministic.
+
+pub mod axi;
+pub mod bram;
+pub mod bridge;
+pub mod dma;
+pub mod interconnect;
+pub mod platform;
+pub mod regfile;
+pub mod signal;
+pub mod sim;
+pub mod sorter;
+pub mod vcd;
+
+/// The platform clock: 250 MHz (4 ns) — the PCIe Gen3 x8 user clock
+/// used by the NetFPGA SUME reference designs.
+pub const CLOCK_HZ: u64 = 250_000_000;
+/// Nanoseconds per cycle.
+pub const CLOCK_PERIOD_NS: u64 = 4;
+
+/// Convert a cycle count to simulated nanoseconds of device time.
+pub fn cycles_to_ns(cycles: u64) -> u64 {
+    cycles * CLOCK_PERIOD_NS
+}
+
+/// Convert simulated cycles to microseconds (f64, for reports).
+pub fn cycles_to_us(cycles: u64) -> f64 {
+    (cycles * CLOCK_PERIOD_NS) as f64 / 1000.0
+}

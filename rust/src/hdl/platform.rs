@@ -1,0 +1,379 @@
+//! The FPGA platform top level — the design that would be synthesized
+//! onto the NetFPGA SUME, with the hardware PCIe-AXI bridge replaced
+//! by the simulation bridge ("the rest of the FPGA platform sees the
+//! same interface toward PCIe and requires no modification").
+//!
+//! Topology (paper Figure 1, HDL side):
+//!
+//! ```text
+//!   link ⇄ [PCIe simulation bridge]
+//!            │ AXI-Lite master           ▲ AXI4 slave     ▲ irq pins
+//!            ▼                           │                │
+//!          [AXI interconnect]          [AXI DMA] ─────────┤ (mm2s, s2mm)
+//!            ├── 0x0000  regfile ────────┘ ctrl           │
+//!            ├── 0x1000  dma ctrl                         │ (irq_test)
+//!            └── 0x100000 bram (BAR2 window)
+//!          [DMA] ── MM2S stream ──▶ [sorter] ── stream ──▶ [DMA S2MM]
+//! ```
+//!
+//! Address map: BAR0 → `0x0000` (regfile at +0x0000, DMA at +0x1000);
+//! BAR2 → `0x10_0000` (BRAM). All modules share the 250 MHz clock.
+
+use super::axi::{Ar, Aw, AxisBeat, B, R, W};
+use super::bram::Bram;
+use super::bridge::{BarWindow, Bridge, IRQ_PINS};
+use super::dma::AxiDma;
+use super::interconnect::{Interconnect, LitePort, MapEntry};
+use super::regfile::{RegFile, SorterStatus};
+use super::sim::{Fifo, TickCtx};
+use super::signal::{ProbeSink, Probed};
+use super::sorter::{Sorter, SorterCfg};
+use crate::link::{Endpoint, LinkMode};
+use crate::Result;
+
+/// IRQ pin assignment on the bridge.
+pub mod irq_map {
+    pub const MM2S: usize = 0;
+    pub const S2MM: usize = 1;
+    pub const TEST: usize = 2;
+}
+
+/// Platform configuration.
+#[derive(Debug, Clone)]
+pub struct PlatformCfg {
+    pub sorter: SorterCfg,
+    pub link_mode: LinkMode,
+    /// BRAM size behind BAR2 (bytes).
+    pub bram_size: usize,
+    /// Stream FIFO depth between DMA and sorter (beats).
+    pub stream_fifo_depth: usize,
+    /// Link poll interval in cycles (1 = every cycle, the paper's
+    /// behaviour; see EXPERIMENTS.md §Perf for the ablation).
+    pub poll_interval: u64,
+}
+
+impl Default for PlatformCfg {
+    fn default() -> Self {
+        Self {
+            sorter: SorterCfg::default(),
+            link_mode: LinkMode::Mmio,
+            bram_size: 64 * 1024,
+            stream_fifo_depth: 64,
+            poll_interval: 1,
+        }
+    }
+}
+
+/// The top-level platform module.
+pub struct Platform {
+    pub cfg: PlatformCfg,
+    pub bridge: Bridge,
+    pub xbar: Interconnect,
+    pub regfile: RegFile,
+    pub dma: AxiDma,
+    pub sorter: Sorter,
+    pub bram: Bram,
+    // Bridge master → interconnect.
+    cfg_port: LitePort,
+    // Interconnect → slaves.
+    slave_ports: Vec<LitePort>,
+    // DMA AXI4 master ⇄ bridge slave.
+    dm_ar: Fifo<Ar>,
+    dm_r: Fifo<R>,
+    dm_aw: Fifo<Aw>,
+    dm_w: Fifo<W>,
+    dm_b: Fifo<B>,
+    // Streams.
+    mm2s_axis: Fifo<AxisBeat>,
+    s2mm_axis: Fifo<AxisBeat>,
+    // IRQ test pulse level (one cycle).
+    irq_test_level: bool,
+}
+
+impl Platform {
+    pub fn new(cfg: PlatformCfg) -> Self {
+        let windows = vec![
+            BarWindow {
+                bar: 0,
+                axi_base: 0x0000,
+                size: 0x1_0000,
+                bus_base: crate::pcie::board::BAR0_GPA,
+            },
+            BarWindow {
+                bar: 2,
+                axi_base: 0x10_0000,
+                size: 0x10_0000,
+                bus_base: crate::pcie::board::BAR2_GPA,
+            },
+        ];
+        let map = vec![
+            MapEntry { base: 0x0000, size: 0x1000, slave: 0 },  // regfile
+            MapEntry { base: 0x1000, size: 0x1000, slave: 1 },  // dma
+            MapEntry { base: 0x10_0000, size: 0x10_0000, slave: 2 }, // bram
+        ];
+        let mut bridge = Bridge::new(cfg.link_mode, windows);
+        bridge.poll_interval = cfg.poll_interval;
+        Self {
+            bridge,
+            xbar: Interconnect::new(map),
+            regfile: RegFile::new(),
+            dma: AxiDma::new(),
+            sorter: Sorter::new(cfg.sorter.clone()),
+            bram: Bram::new(cfg.bram_size),
+            cfg_port: LitePort::new(),
+            slave_ports: vec![LitePort::new(), LitePort::new(), LitePort::new()],
+            dm_ar: Fifo::new(4),
+            dm_r: Fifo::new(4),
+            dm_aw: Fifo::new(4),
+            dm_w: Fifo::new(4),
+            dm_b: Fifo::new(4),
+            mm2s_axis: Fifo::new(cfg.stream_fifo_depth),
+            s2mm_axis: Fifo::new(cfg.stream_fifo_depth),
+            irq_test_level: false,
+            cfg,
+        }
+    }
+
+    /// One clock cycle of the whole platform.
+    pub fn tick(&mut self, ctx: &TickCtx, link: &mut Endpoint) -> Result<()> {
+        // IRQ pins toward the bridge (levels from the previous cycle —
+        // registered, like the real irq wires).
+        let (mm2s_irq, s2mm_irq) = self.dma.irq();
+        let mut irq = [false; IRQ_PINS];
+        irq[irq_map::MM2S] = mm2s_irq;
+        irq[irq_map::S2MM] = s2mm_irq;
+        irq[irq_map::TEST] = self.irq_test_level;
+
+        // 1. Bridge: link ⇄ AXI.
+        self.bridge.tick(
+            ctx,
+            link,
+            &mut self.cfg_port,
+            &mut self.dm_ar,
+            &mut self.dm_r,
+            &mut self.dm_aw,
+            &mut self.dm_w,
+            &mut self.dm_b,
+            irq,
+        )?;
+
+        // 2. Interconnect: route config transactions.
+        self.xbar.tick(&mut self.cfg_port, &mut self.slave_ports);
+
+        // 3. Regfile (slave 0) with sorter status wires.
+        let status = SorterStatus {
+            busy: self.sorter.busy(),
+            records_done: self.sorter.records_done,
+            stall_in: self.sorter.stall_in,
+            stall_out: self.sorter.stall_out,
+            beats_in: self.sorter.beats_in,
+            beats_out: self.sorter.beats_out,
+            length_error: self.sorter.length_errors > 0,
+        };
+        {
+            let p = &mut self.slave_ports[0];
+            self.regfile.tick(
+                ctx.cycle, status, &mut p.aw, &mut p.w, &mut p.b, &mut p.ar, &mut p.r,
+            );
+        }
+        // CONTROL wiring.
+        self.sorter.order_desc = self.regfile.order_desc;
+        if self.regfile.soft_reset_pulse {
+            self.sorter.soft_reset();
+        }
+        self.irq_test_level = self.regfile.irq_test_pulse.is_some();
+
+        // 4. DMA (slave 1 for control; AXI4 master toward bridge).
+        {
+            let p = &mut self.slave_ports[1];
+            self.dma.tick(
+                &mut p.aw, &mut p.w, &mut p.b, &mut p.ar, &mut p.r,
+                &mut self.dm_ar, &mut self.dm_r, &mut self.dm_aw, &mut self.dm_w,
+                &mut self.dm_b, &mut self.mm2s_axis, &mut self.s2mm_axis,
+            );
+        }
+
+        // 5. BRAM (slave 2).
+        {
+            let p = &mut self.slave_ports[2];
+            self.bram.tick(&mut p.aw, &mut p.w, &mut p.b, &mut p.ar, &mut p.r);
+        }
+
+        // 6. Sorter between the streams.
+        self.sorter.tick(ctx, &mut self.mm2s_axis, &mut self.s2mm_axis);
+
+        // End of cycle: every registered element latches.
+        self.commit();
+        Ok(())
+    }
+
+    fn commit(&mut self) {
+        self.cfg_port.commit();
+        for p in &mut self.slave_ports {
+            p.commit();
+        }
+        self.dm_ar.commit();
+        self.dm_r.commit();
+        self.dm_aw.commit();
+        self.dm_w.commit();
+        self.dm_b.commit();
+        self.mm2s_axis.commit();
+        self.s2mm_axis.commit();
+    }
+
+    /// True if any part of the platform still has work in flight
+    /// (used by run loops to know when the design has gone quiet).
+    pub fn busy(&self) -> bool {
+        self.sorter.busy()
+            || self.bridge.busy()
+            || !self.mm2s_axis.is_empty()
+            || !self.s2mm_axis.is_empty()
+            || !self.dm_ar.is_empty()
+            || !self.dm_aw.is_empty()
+    }
+}
+
+impl Probed for Platform {
+    fn probe(&self, sink: &mut dyn ProbeSink) {
+        self.bridge.probe(sink);
+        self.xbar.probe(sink);
+        self.regfile.probe(sink);
+        self.dma.probe(sink);
+        self.sorter.probe(sink);
+        self.bram.probe(sink);
+        sink.sig("platform.mm2s_axis.level", 8, self.mm2s_axis.len() as u64);
+        sink.sig("platform.s2mm_axis.level", 8, self.s2mm_axis.len() as u64);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hdl::sim::{ForceMap, Sim};
+    use crate::link::Msg;
+    use crate::testutil::XorShift64;
+
+    #[test]
+    fn full_offload_sort_through_platform() {
+        use crate::hdl::dma::{cr, regs as dregs, sr};
+        use crate::hdl::regfile::regs as rregs;
+
+        let (mut vm_ep, mut hdl_ep) = Endpoint::inproc_pair();
+        let mut plat = Platform::new(PlatformCfg::default());
+        let mut sim = Sim::new();
+        let mut host = vec![0u8; 64 * 1024];
+        let mut irqs: Vec<u16> = Vec::new();
+
+        // Input record at 0x1000: 1024 random i32.
+        let mut rng = XorShift64::new(0xFEED);
+        let input = rng.vec_i32(1024);
+        for (i, v) in input.iter().enumerate() {
+            host[0x1000 + i * 4..0x1000 + i * 4 + 4].copy_from_slice(&v.to_le_bytes());
+        }
+
+        let forces = ForceMap::new();
+        let mut pending_reads: Vec<(u64, Vec<u8>)> = Vec::new();
+
+        // Closure-free service loop.
+        macro_rules! service_vm {
+            () => {
+                for m in vm_ep.poll().unwrap() {
+                    match m {
+                        Msg::DmaRead { tag, addr, len } => {
+                            let d = host[addr as usize..(addr + len as u64) as usize].to_vec();
+                            vm_ep.send(&Msg::DmaReadResp { tag, data: d }).unwrap();
+                        }
+                        Msg::DmaWrite { addr, data } => {
+                            host[addr as usize..addr as usize + data.len()]
+                                .copy_from_slice(&data);
+                        }
+                        Msg::Interrupt { vector } => irqs.push(vector),
+                        Msg::MmioReadResp { tag, data } => pending_reads.push((tag, data)),
+                        _ => {}
+                    }
+                }
+            };
+        }
+        macro_rules! cycles {
+            ($n:expr) => {
+                for _ in 0..$n {
+                    let ctx = TickCtx { cycle: sim.cycle, forces: &forces };
+                    plat.tick(&ctx, &mut hdl_ep).unwrap();
+                    service_vm!();
+                    sim.cycle += 1;
+                }
+            };
+        }
+        macro_rules! wr32 {
+            ($addr:expr, $val:expr) => {
+                vm_ep
+                    .send(&Msg::MmioWrite {
+                        bar: 0,
+                        addr: $addr as u64,
+                        data: ($val as u32).to_le_bytes().to_vec(),
+                    })
+                    .unwrap();
+                cycles!(16);
+            };
+        }
+        macro_rules! rd32 {
+            ($addr:expr) => {{
+                vm_ep
+                    .send(&Msg::MmioRead { tag: 7, bar: 0, addr: $addr as u64, len: 4 })
+                    .unwrap();
+                let mut val = None;
+                for _ in 0..500 {
+                    cycles!(1);
+                    if let Some(pos) = pending_reads.iter().position(|(t, _)| *t == 7) {
+                        let (_, d) = pending_reads.remove(pos);
+                        val = Some(u32::from_le_bytes(d[..4].try_into().unwrap()));
+                        break;
+                    }
+                }
+                val.expect("mmio read timeout")
+            }};
+        }
+
+        // Probe the ID register.
+        assert_eq!(rd32!(rregs::ID), crate::hdl::regfile::ID_VALUE);
+
+        // Program the DMA like the guest driver would.
+        const DMA: u32 = 0x1000;
+        wr32!(DMA + dregs::S2MM_DMACR, cr::RS | cr::IOC_IRQ_EN);
+        wr32!(DMA + dregs::S2MM_DA, 0x8000u32);
+        wr32!(DMA + dregs::S2MM_LENGTH, 4096u32);
+        wr32!(DMA + dregs::MM2S_DMACR, cr::RS | cr::IOC_IRQ_EN);
+        wr32!(DMA + dregs::MM2S_SA, 0x1000u32);
+        wr32!(DMA + dregs::MM2S_LENGTH, 4096u32);
+
+        // Run until the S2MM completion interrupt arrives.
+        let mut done = false;
+        for _ in 0..40 {
+            cycles!(200);
+            if irqs.contains(&(irq_map::S2MM as u16)) {
+                done = true;
+                break;
+            }
+        }
+        assert!(done, "no completion interrupt after 8000 cycles");
+
+        // Check the DMA status & result.
+        let s2mm_sr = rd32!(DMA + dregs::S2MM_DMASR);
+        assert_ne!(s2mm_sr & sr::IOC_IRQ, 0);
+        let mut expect = input.clone();
+        expect.sort_unstable();
+        let got: Vec<i32> = (0..1024)
+            .map(|i| {
+                i32::from_le_bytes(host[0x8000 + i * 4..0x8000 + i * 4 + 4].try_into().unwrap())
+            })
+            .collect();
+        assert_eq!(got, expect, "platform did not sort the record");
+
+        // Latency sanity: the whole offload (incl. MMIO programming)
+        // runs in thousands, not millions, of cycles.
+        assert!(sim.cycle < 20_000, "offload took {} cycles", sim.cycle);
+
+        // Record count visible via the regfile.
+        assert_eq!(rd32!(rregs::REC_COUNT), 1);
+    }
+}

@@ -1,0 +1,256 @@
+//! Simulation kernel: registered FIFOs and registers, the per-cycle
+//! tick context (with signal forcing), and the simulator harness.
+//!
+//! Model of computation: a synchronous single-clock design. Every
+//! inter-module wire is either a [`Fifo`] (ready/valid channel with a
+//! registered stage: a push in cycle N is observable in cycle N+1) or
+//! a [`Reg`] (plain registered level). Modules may therefore be
+//! evaluated in any fixed order within a cycle without races — the
+//! same discipline as registering every block boundary in RTL.
+
+use std::collections::BTreeMap;
+use std::collections::VecDeque;
+
+/// A registered ready/valid channel of capacity `cap`.
+///
+/// `push` stages an element that becomes visible to `pop`/`peek` only
+/// after `commit` (end of the cycle); `can_push` accounts for staged
+/// elements so a producer can never overfill within a cycle.
+#[derive(Debug)]
+pub struct Fifo<T> {
+    q: VecDeque<T>,
+    staged: Vec<T>,
+    cap: usize,
+    /// Cumulative beats through this channel (for occupancy probes).
+    pub total: u64,
+}
+
+impl<T> Fifo<T> {
+    pub fn new(cap: usize) -> Self {
+        assert!(cap >= 1);
+        Self {
+            q: VecDeque::with_capacity(cap),
+            staged: Vec::new(),
+            cap,
+            total: 0,
+        }
+    }
+
+    /// Producer-side ready.
+    pub fn can_push(&self) -> bool {
+        self.q.len() + self.staged.len() < self.cap
+    }
+
+    /// Stage one element for the next cycle. Panics if full — callers
+    /// must check `can_push` (matching RTL, where driving a full FIFO
+    /// is a design bug, not a runtime condition).
+    pub fn push(&mut self, v: T) {
+        assert!(self.can_push(), "fifo overflow (cap {})", self.cap);
+        self.staged.push(v);
+        self.total += 1;
+    }
+
+    /// Consumer-side valid.
+    pub fn can_pop(&self) -> bool {
+        !self.q.is_empty()
+    }
+
+    pub fn peek(&self) -> Option<&T> {
+        self.q.front()
+    }
+
+    pub fn pop(&mut self) -> Option<T> {
+        self.q.pop_front()
+    }
+
+    pub fn len(&self) -> usize {
+        self.q.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.q.is_empty()
+    }
+
+    /// End-of-cycle: staged elements become visible.
+    ///
+    /// Hot path: most channels are idle most cycles — the empty case
+    /// must be a single branch, not a drain/extend call pair.
+    #[inline]
+    pub fn commit(&mut self) {
+        if !self.staged.is_empty() {
+            self.q.extend(self.staged.drain(..));
+        }
+    }
+
+    /// Reset to empty (soft reset / restart).
+    pub fn clear(&mut self) {
+        self.q.clear();
+        self.staged.clear();
+    }
+}
+
+/// A registered level (flip-flop): `set` in cycle N is visible via
+/// `get` from cycle N+1 on.
+#[derive(Debug, Clone)]
+pub struct Reg<T: Copy> {
+    cur: T,
+    next: T,
+}
+
+impl<T: Copy + PartialEq> Reg<T> {
+    pub fn new(v: T) -> Self {
+        Self { cur: v, next: v }
+    }
+    pub fn get(&self) -> T {
+        self.cur
+    }
+    pub fn set(&mut self, v: T) {
+        self.next = v;
+    }
+    pub fn commit(&mut self) {
+        self.cur = self.next;
+    }
+}
+
+/// Signal-force map: `path → value`, the HDL-debug facility the paper
+/// highlights ("developers can ... even force signal values").
+pub type ForceMap = BTreeMap<String, u64>;
+
+/// Per-cycle context handed to every module.
+pub struct TickCtx<'a> {
+    /// Current cycle number (increments after all modules ticked).
+    pub cycle: u64,
+    /// Active signal forces.
+    pub forces: &'a ForceMap,
+}
+
+impl<'a> TickCtx<'a> {
+    /// Read a forceable control point: the forced value if present,
+    /// otherwise the natural value.
+    ///
+    /// Hot path: with no active forces (the overwhelmingly common
+    /// case) this is a single emptiness check — no map lookup.
+    #[inline]
+    pub fn forced_or(&self, path: &str, natural: u64) -> u64 {
+        if self.forces.is_empty() {
+            return natural;
+        }
+        self.forces.get(path).copied().unwrap_or(natural)
+    }
+
+    #[inline]
+    pub fn forced_bool(&self, path: &str, natural: bool) -> bool {
+        self.forced_or(path, natural as u64) != 0
+    }
+}
+
+/// The simulator harness: cycle counter, force map, breakpoints and
+/// aggregate accounting. The concrete platform is ticked by the
+/// caller (see `hdl::platform::Platform::tick`), which keeps module
+/// wiring explicit, like generated RTL.
+pub struct Sim {
+    pub cycle: u64,
+    pub forces: ForceMap,
+    /// Wall time spent inside ticks (perf accounting).
+    pub tick_wall: std::time::Duration,
+}
+
+impl Default for Sim {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Sim {
+    pub fn new() -> Self {
+        Self {
+            cycle: 0,
+            forces: ForceMap::new(),
+            tick_wall: std::time::Duration::ZERO,
+        }
+    }
+
+    /// Force `path` to `value` until released.
+    pub fn force(&mut self, path: &str, value: u64) {
+        self.forces.insert(path.to_string(), value);
+    }
+
+    /// Release a forced signal.
+    pub fn release(&mut self, path: &str) {
+        self.forces.remove(path);
+    }
+
+    /// Device time elapsed, in nanoseconds.
+    pub fn time_ns(&self) -> u64 {
+        super::cycles_to_ns(self.cycle)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fifo_push_not_visible_until_commit() {
+        let mut f: Fifo<u32> = Fifo::new(4);
+        f.push(1);
+        assert!(!f.can_pop(), "staged must be invisible this cycle");
+        f.commit();
+        assert!(f.can_pop());
+        assert_eq!(f.pop(), Some(1));
+    }
+
+    #[test]
+    fn fifo_capacity_counts_staged() {
+        let mut f: Fifo<u32> = Fifo::new(2);
+        f.push(1);
+        f.push(2);
+        assert!(!f.can_push());
+        f.commit();
+        assert!(!f.can_push());
+        f.pop();
+        assert!(f.can_push());
+    }
+
+    #[test]
+    #[should_panic(expected = "fifo overflow")]
+    fn fifo_overflow_panics() {
+        let mut f: Fifo<u32> = Fifo::new(1);
+        f.push(1);
+        f.push(2);
+    }
+
+    #[test]
+    fn fifo_preserves_order() {
+        let mut f: Fifo<u32> = Fifo::new(8);
+        for i in 0..5 {
+            f.push(i);
+        }
+        f.commit();
+        for i in 0..5 {
+            assert_eq!(f.pop(), Some(i));
+        }
+    }
+
+    #[test]
+    fn reg_latches_on_commit() {
+        let mut r = Reg::new(0u64);
+        r.set(7);
+        assert_eq!(r.get(), 0);
+        r.commit();
+        assert_eq!(r.get(), 7);
+    }
+
+    #[test]
+    fn force_and_release() {
+        let mut sim = Sim::new();
+        sim.force("x.y", 1);
+        let ctx = TickCtx { cycle: 0, forces: &sim.forces };
+        assert_eq!(ctx.forced_or("x.y", 0), 1);
+        assert!(ctx.forced_bool("x.y", false));
+        assert_eq!(ctx.forced_or("other", 9), 9);
+        sim.release("x.y");
+        let ctx = TickCtx { cycle: 0, forces: &sim.forces };
+        assert_eq!(ctx.forced_or("x.y", 0), 0);
+    }
+}

@@ -1,0 +1,538 @@
+//! Streaming sorting-network model — the accelerator core of the
+//! paper's demonstration platform (§III).
+//!
+//! The paper uses a Spiral-generated streaming sorting network that
+//! "takes a stream of input data and produces the output result stream
+//! after a fixed number of cycles", is "fully pipelined and able to
+//! consume back-to-back input streams", with "128-bit wide stream
+//! interfaces" sorting "1024 32-bit signed integers in 1256 cycles".
+//!
+//! This model is cycle-accurate at the stream interface: 4 words per
+//! beat in/out, fixed first-input→last-output latency (default 1256),
+//! initiation interval of N/w beats (back-to-back capable), correct
+//! stall behaviour under input starvation and output backpressure.
+//! The data transformation is the exact bitonic compare-exchange
+//! network (same (k, j) stage sequence as the Pallas kernel — see
+//! `python/compile/kernels/bitonic.py`), evaluated when a record's
+//! last beat arrives, which is the earliest any output can depend on
+//! the full input.
+//!
+//! The structural latency lower bound (per-stage buffer + register
+//! delays of the streaming network) is asserted against the configured
+//! latency at elaboration time, so the model cannot be configured
+//! faster than the hardware could be.
+
+use std::collections::VecDeque;
+
+use super::axi::{AxisBeat, WORDS_PER_BEAT};
+use super::sim::{Fifo, TickCtx};
+use super::signal::{ProbeSink, Probed};
+
+/// The bitonic network stage list (k = merge block, j = partner
+/// distance) — identical to `bitonic.network_stages` on the python
+/// side; the two are cross-checked in tests via known vectors.
+pub fn network_stages(n: usize) -> Vec<(usize, usize)> {
+    assert!(n.is_power_of_two() && n >= 1, "network needs power-of-two n");
+    let mut stages = Vec::new();
+    let mut k = 2;
+    while k <= n {
+        let mut j = k / 2;
+        while j >= 1 {
+            stages.push((k, j));
+            j /= 2;
+        }
+        k *= 2;
+    }
+    stages
+}
+
+/// Apply the full bitonic network in place (the RTL's data function).
+///
+/// Loop structure: for stage (k, j), the lower element of every pair
+/// has `(i & j) == 0`, i.e. indices come in contiguous runs of `j`
+/// starting at multiples of `2j` — iterating runs directly halves the
+/// trip count vs scanning all lanes and keeps accesses sequential
+/// (§Perf: this function is the data-path cost of every simulated
+/// record).
+pub fn bitonic_sort_i32(data: &mut [i32], descending: bool) {
+    let n = data.len();
+    for (k, j) in network_stages(n) {
+        let mut base = 0;
+        while base < n {
+            let up = ((base & k) == 0) != descending;
+            for i in base..base + j {
+                let partner = i + j; // == i ^ j, since i & j == 0
+                if (data[i] > data[partner]) == up {
+                    data.swap(i, partner);
+                }
+            }
+            base += 2 * j;
+        }
+    }
+}
+
+/// Structural latency lower bound of the streaming network: each
+/// stage (k, j) needs `max(1, j/w)` cycles of element buffering plus a
+/// pipeline register, and a record occupies `n/w` beats on each edge.
+pub fn structural_latency_lb(n: usize, w: usize) -> u64 {
+    let fill = (n / w) as u64;
+    let stages: u64 = network_stages(n)
+        .iter()
+        .map(|&(_, j)| (j / w).max(1) as u64 + 1)
+        .sum();
+    fill + stages
+}
+
+/// Number of compare-exchange operators in the network (resource model).
+pub fn cas_count(n: usize) -> u64 {
+    network_stages(n).len() as u64 * (n as u64 / 2)
+}
+
+/// Sorter configuration.
+#[derive(Debug, Clone)]
+pub struct SorterCfg {
+    /// Record length in 32-bit words (power of two).
+    pub n: usize,
+    /// First-input→last-output latency in cycles for an unstalled
+    /// record (the Spiral IP reports 1256 for n=1024, w=4).
+    pub latency: u64,
+    /// Max records in flight before input stalls.
+    pub pipeline_records: usize,
+}
+
+impl Default for SorterCfg {
+    fn default() -> Self {
+        Self {
+            n: 1024,
+            latency: 1256,
+            pipeline_records: 8,
+        }
+    }
+}
+
+#[derive(Debug)]
+struct InFlight {
+    sorted: Vec<i32>,
+    /// Earliest cycle the first output beat may appear.
+    out_earliest: u64,
+    emitted_beats: usize,
+}
+
+/// The streaming sorter module.
+pub struct Sorter {
+    cfg: SorterCfg,
+    beats_per_record: usize,
+    /// Residual latency: last-input-beat → first-output-beat.
+    residual: u64,
+    // Input collector.
+    collecting: Vec<i32>,
+    first_beat_cycle: u64,
+    // In-flight sorted records awaiting output.
+    inflight: VecDeque<InFlight>,
+    /// Descending order (driven by the regfile CONTROL register).
+    pub order_desc: bool,
+    // Status / perf counters (probed + readable via regfile).
+    pub records_done: u64,
+    pub beats_in: u64,
+    pub beats_out: u64,
+    pub stall_in: u64,
+    pub stall_out: u64,
+    pub length_errors: u64,
+}
+
+impl Sorter {
+    pub fn new(cfg: SorterCfg) -> Self {
+        assert!(cfg.n.is_power_of_two() && cfg.n >= WORDS_PER_BEAT);
+        let lb = structural_latency_lb(cfg.n, WORDS_PER_BEAT);
+        assert!(
+            cfg.latency >= lb,
+            "configured latency {} below structural lower bound {} — \
+             no streaming network could achieve this",
+            cfg.latency,
+            lb
+        );
+        let beats_per_record = cfg.n / WORDS_PER_BEAT;
+        Self {
+            residual: cfg.latency - beats_per_record as u64,
+            beats_per_record,
+            collecting: Vec::with_capacity(cfg.n),
+            first_beat_cycle: 0,
+            inflight: VecDeque::new(),
+            order_desc: false,
+            records_done: 0,
+            beats_in: 0,
+            beats_out: 0,
+            stall_in: 0,
+            stall_out: 0,
+            length_errors: 0,
+            cfg,
+        }
+    }
+
+    pub fn cfg(&self) -> &SorterCfg {
+        &self.cfg
+    }
+
+    /// Busy: anything collecting or in flight.
+    pub fn busy(&self) -> bool {
+        !self.collecting.is_empty() || !self.inflight.is_empty()
+    }
+
+    /// One clock cycle: consume ≤1 input beat, produce ≤1 output beat.
+    ///
+    /// Forceable control points (paper: "force signal values"):
+    /// `sorter.s_axis_tready` (0 blocks input), `sorter.m_axis_tvalid`
+    /// (0 blocks output).
+    pub fn tick(
+        &mut self,
+        ctx: &TickCtx,
+        s_axis: &mut Fifo<AxisBeat>,
+        m_axis: &mut Fifo<AxisBeat>,
+    ) {
+        // ---- input side ----
+        let in_ready_natural =
+            self.inflight.len() < self.cfg.pipeline_records;
+        let in_ready = ctx.forced_bool("sorter.s_axis_tready", in_ready_natural);
+        if s_axis.can_pop() && in_ready {
+            let beat = s_axis.pop().unwrap();
+            if self.collecting.is_empty() {
+                self.first_beat_cycle = ctx.cycle;
+            }
+            self.collecting.extend_from_slice(&beat.words());
+            self.beats_in += 1;
+            let complete_len = self.collecting.len() >= self.cfg.n;
+            if beat.last || complete_len {
+                if self.collecting.len() != self.cfg.n {
+                    // Malformed packet: a fixed-N sorting network
+                    // cannot sort it; flag and drop (sticky error).
+                    self.length_errors += 1;
+                    self.collecting.clear();
+                } else {
+                    let mut sorted = std::mem::take(&mut self.collecting);
+                    bitonic_sort_i32(&mut sorted, self.order_desc);
+                    // Earliest first-output: the unstalled schedule
+                    // (first beat + latency − drain) or the residual
+                    // after the (possibly stalled) last input beat —
+                    // whichever is later; never before the previous
+                    // record has drained (in-order network).
+                    let ideal = self.first_beat_cycle + self.cfg.latency
+                        - self.beats_per_record as u64;
+                    let after_in = ctx.cycle + self.residual
+                        - (self.beats_per_record as u64 - 1);
+                    self.inflight.push_back(InFlight {
+                        sorted,
+                        out_earliest: ideal.max(after_in),
+                        emitted_beats: 0,
+                    });
+                    self.collecting = Vec::with_capacity(self.cfg.n);
+                }
+            }
+        } else if s_axis.can_pop() {
+            self.stall_in += 1;
+        }
+
+        // ---- output side ----
+        let out_valid_natural = self
+            .inflight
+            .front()
+            .map(|r| ctx.cycle >= r.out_earliest)
+            .unwrap_or(false);
+        let out_valid = ctx.forced_bool("sorter.m_axis_tvalid", out_valid_natural);
+        if out_valid {
+            if m_axis.can_push() {
+                let bpr = self.beats_per_record;
+                let rec = self.inflight.front_mut().unwrap();
+                let i = rec.emitted_beats;
+                let mut words = [0i32; WORDS_PER_BEAT];
+                words.copy_from_slice(
+                    &rec.sorted[i * WORDS_PER_BEAT..(i + 1) * WORDS_PER_BEAT],
+                );
+                m_axis.push(AxisBeat::from_words(words, i == bpr - 1));
+                rec.emitted_beats += 1;
+                self.beats_out += 1;
+                if rec.emitted_beats == bpr {
+                    self.inflight.pop_front();
+                    self.records_done += 1;
+                }
+            } else {
+                self.stall_out += 1;
+            }
+        }
+    }
+
+    /// Soft reset (regfile CONTROL bit): drop all in-flight state.
+    pub fn soft_reset(&mut self) {
+        self.collecting.clear();
+        self.inflight.clear();
+    }
+}
+
+impl Probed for Sorter {
+    fn probe(&self, sink: &mut dyn ProbeSink) {
+        sink.sig("platform.sorter.busy", 1, self.busy() as u64);
+        sink.sig(
+            "platform.sorter.collecting_words",
+            16,
+            self.collecting.len() as u64,
+        );
+        sink.sig("platform.sorter.inflight", 8, self.inflight.len() as u64);
+        sink.sig("platform.sorter.records_done", 32, self.records_done);
+        sink.sig("platform.sorter.beats_in", 32, self.beats_in);
+        sink.sig("platform.sorter.beats_out", 32, self.beats_out);
+        sink.sig("platform.sorter.stall_in", 32, self.stall_in);
+        sink.sig("platform.sorter.stall_out", 32, self.stall_out);
+        sink.sig("platform.sorter.order_desc", 1, self.order_desc as u64);
+        sink.sig("platform.sorter.length_errors", 8, self.length_errors);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hdl::axi::words_to_beats;
+    use crate::hdl::sim::ForceMap;
+    use crate::testutil::{forall, XorShift64};
+
+    /// Drive the sorter standalone: feed `input`, collect one record,
+    /// returning (output, first_in_cycle, last_out_cycle).
+    fn run_sorter(
+        sorter: &mut Sorter,
+        inputs: &[Vec<i32>],
+        forces: &ForceMap,
+        max_cycles: u64,
+    ) -> (Vec<Vec<i32>>, u64, u64) {
+        let mut s_axis = Fifo::new(2);
+        let mut m_axis = Fifo::new(2);
+        let mut pending: VecDeque<AxisBeat> =
+            inputs.iter().flat_map(|r| words_to_beats(r)).collect();
+        let mut out_words: Vec<i32> = Vec::new();
+        let mut outputs = Vec::new();
+        let mut first_in = None;
+        let mut last_out = 0;
+        let n = sorter.cfg.n;
+        for cycle in 0..max_cycles {
+            if let Some(b) = pending.front() {
+                if s_axis.can_push() {
+                    if first_in.is_none() {
+                        first_in = Some(cycle);
+                    }
+                    s_axis.push(*b);
+                    pending.pop_front();
+                }
+            }
+            let ctx = TickCtx { cycle, forces };
+            sorter.tick(&ctx, &mut s_axis, &mut m_axis);
+            if let Some(b) = m_axis.pop() {
+                out_words.extend_from_slice(&b.words());
+                last_out = cycle;
+                if out_words.len() == n {
+                    outputs.push(std::mem::take(&mut out_words));
+                }
+            }
+            s_axis.commit();
+            m_axis.commit();
+            if outputs.len() == inputs.len() && pending.is_empty() {
+                break;
+            }
+        }
+        (outputs, first_in.unwrap_or(0), last_out)
+    }
+
+    #[test]
+    fn network_matches_std_sort() {
+        let mut r = XorShift64::new(1);
+        for _ in 0..20 {
+            let mut v = r.vec_i32(1024);
+            let mut expect = v.clone();
+            expect.sort_unstable();
+            bitonic_sort_i32(&mut v, false);
+            assert_eq!(v, expect);
+        }
+    }
+
+    #[test]
+    fn network_descending() {
+        let mut v = vec![3, 1, 4, 1, 5, 9, 2, 6];
+        bitonic_sort_i32(&mut v, true);
+        assert_eq!(v, vec![9, 6, 5, 4, 3, 2, 1, 1]);
+    }
+
+    #[test]
+    fn stage_count_1024_is_55() {
+        assert_eq!(network_stages(1024).len(), 55);
+    }
+
+    #[test]
+    fn structural_lower_bound_below_spiral_latency() {
+        let lb = structural_latency_lb(1024, 4);
+        assert!(lb <= 1256, "lb {lb} exceeds the Spiral-reported 1256");
+        assert!(lb > 600, "lb {lb} implausibly small");
+    }
+
+    #[test]
+    #[should_panic(expected = "below structural lower bound")]
+    fn impossible_latency_rejected() {
+        Sorter::new(SorterCfg { n: 1024, latency: 100, pipeline_records: 4 });
+    }
+
+    #[test]
+    fn sorts_one_record_with_exact_latency() {
+        let mut s = Sorter::new(SorterCfg::default());
+        let mut r = XorShift64::new(7);
+        let input = r.vec_i32(1024);
+        let mut expect = input.clone();
+        expect.sort_unstable();
+        let forces = ForceMap::new();
+        let (outs, first_in, last_out) =
+            run_sorter(&mut s, &[input], &forces, 10_000);
+        assert_eq!(outs.len(), 1);
+        assert_eq!(outs[0], expect);
+        // The paper's headline: 1024 int32 sorted in 1256 cycles.
+        // Interface FIFOs add one registered stage on each side.
+        let span = last_out - first_in + 1;
+        assert!(
+            (1256..=1260).contains(&span),
+            "span {span} not within registered-interface tolerance of 1256"
+        );
+    }
+
+    #[test]
+    fn back_to_back_records_pipeline() {
+        // 4 records streamed back-to-back must finish in roughly
+        // latency + 3·II, not 4·latency (the IP is fully pipelined).
+        let mut s = Sorter::new(SorterCfg::default());
+        let mut r = XorShift64::new(9);
+        let inputs: Vec<Vec<i32>> = (0..4).map(|_| r.vec_i32(1024)).collect();
+        let forces = ForceMap::new();
+        let (outs, first_in, last_out) =
+            run_sorter(&mut s, &inputs, &forces, 20_000);
+        assert_eq!(outs.len(), 4);
+        for (o, i) in outs.iter().zip(&inputs) {
+            let mut e = i.clone();
+            e.sort_unstable();
+            assert_eq!(o, &e);
+        }
+        let span = last_out - first_in + 1;
+        let ii = 256;
+        assert!(
+            span < 1256 + 3 * ii + 32,
+            "span {span}: not pipelined (4·latency would be {})",
+            4 * 1256
+        );
+        assert_eq!(s.records_done, 4);
+    }
+
+    #[test]
+    fn output_backpressure_stalls_but_preserves_data() {
+        let mut s = Sorter::new(SorterCfg { n: 64, latency: 200, pipeline_records: 4 });
+        let mut r = XorShift64::new(3);
+        let input = r.vec_i32(64);
+        let mut expect = input.clone();
+        expect.sort_unstable();
+        let mut s_axis = Fifo::new(2);
+        let mut m_axis = Fifo::new(1);
+        let mut pending: VecDeque<AxisBeat> =
+            words_to_beats(&input).into_iter().collect();
+        let forces = ForceMap::new();
+        let mut out = Vec::new();
+        for cycle in 0..5000 {
+            if let Some(b) = pending.front() {
+                if s_axis.can_push() {
+                    s_axis.push(*b);
+                    pending.pop_front();
+                }
+            }
+            let ctx = TickCtx { cycle, forces: &forces };
+            s.tick(&ctx, &mut s_axis, &mut m_axis);
+            // Drain output only every 7th cycle → backpressure.
+            if cycle % 7 == 0 {
+                if let Some(b) = m_axis.pop() {
+                    out.extend_from_slice(&b.words());
+                }
+            }
+            s_axis.commit();
+            m_axis.commit();
+        }
+        assert_eq!(out, expect);
+        assert!(s.stall_out > 0, "backpressure never stalled the output");
+    }
+
+    #[test]
+    fn forced_tready_blocks_input() {
+        let mut s = Sorter::new(SorterCfg { n: 64, latency: 200, pipeline_records: 4 });
+        let mut forces = ForceMap::new();
+        forces.insert("sorter.s_axis_tready".into(), 0);
+        let mut s_axis = Fifo::new(2);
+        let mut m_axis = Fifo::new(2);
+        s_axis.push(AxisBeat::from_words([1, 2, 3, 4], false));
+        s_axis.commit();
+        for cycle in 0..100 {
+            let ctx = TickCtx { cycle, forces: &forces };
+            s.tick(&ctx, &mut s_axis, &mut m_axis);
+            s_axis.commit();
+            m_axis.commit();
+        }
+        assert_eq!(s.beats_in, 0, "forced tready=0 must block input");
+        assert!(s.stall_in > 0);
+    }
+
+    #[test]
+    fn short_packet_flags_length_error() {
+        let mut s = Sorter::new(SorterCfg { n: 64, latency: 200, pipeline_records: 4 });
+        // 8 words with TLAST (record needs 64).
+        let beats = words_to_beats(&(0..8).collect::<Vec<i32>>());
+        let mut s_axis = Fifo::new(4);
+        let mut m_axis = Fifo::new(4);
+        for b in beats {
+            s_axis.push(b);
+        }
+        s_axis.commit();
+        let forces = ForceMap::new();
+        for cycle in 0..50 {
+            let ctx = TickCtx { cycle, forces: &forces };
+            s.tick(&ctx, &mut s_axis, &mut m_axis);
+            s_axis.commit();
+            m_axis.commit();
+        }
+        assert_eq!(s.length_errors, 1);
+        assert_eq!(s.records_done, 0);
+        assert!(!s.busy(), "dropped record must not linger");
+    }
+
+    #[test]
+    fn prop_random_sizes_and_stall_patterns_sort_correctly() {
+        forall(
+            0x50F7,
+            25,
+            |g| {
+                let lg = g.rng.range(3, 8); // n in 8..=256
+                let n = 1usize << lg;
+                let records = g.rng.range(1, 3);
+                let data: Vec<Vec<i32>> =
+                    (0..records).map(|_| g.rng.vec_i32(n)).collect();
+                (n, data, g.rng.next_u64())
+            },
+            |(n, data, _seed)| {
+                let lb = structural_latency_lb(*n, 4);
+                let mut s = Sorter::new(SorterCfg {
+                    n: *n,
+                    latency: lb + 16,
+                    pipeline_records: 4,
+                });
+                let forces = ForceMap::new();
+                let (outs, _, _) = run_sorter(&mut s, data, &forces, 200_000);
+                if outs.len() != data.len() {
+                    return Err(format!("{} of {} records emerged", outs.len(), data.len()));
+                }
+                for (o, i) in outs.iter().zip(data) {
+                    let mut e = i.clone();
+                    e.sort_unstable();
+                    if o != &e {
+                        return Err("missorted record".into());
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}

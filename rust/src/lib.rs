@@ -1,0 +1,100 @@
+//! # vmhdl — VM-HDL co-simulation framework for PCIe-connected FPGAs
+//!
+//! Reproduction of *"A VM-HDL Co-Simulation Framework for Systems with
+//! PCIe-Connected FPGAs"* (Cho et al., Stony Brook University).
+//!
+//! The framework links a **virtual machine** (guest software, driver,
+//! MMIO/DMA/MSI semantics — [`vm`]) with a **cycle-accurate HDL
+//! simulation** of an FPGA platform ([`hdl`]) across the PCIe boundary,
+//! using three components, exactly as the paper describes:
+//!
+//! 1. a **PCIe FPGA pseudo device** in the VMM ([`pcie::device`]) that
+//!    turns guest MMIO into messages and services HDL-side DMA and MSI,
+//! 2. a **PCIe simulation bridge** on the HDL side ([`hdl::bridge`]),
+//!    pin-compatible with the hardware PCIe-AXI bridge (AXI master +
+//!    AXI-Lite slave + interrupt pins),
+//! 3. **two pairs of unidirectional reliable message channels**
+//!    ([`link`]) so either side can restart independently.
+//!
+//! The demonstration workload is the paper's sorting offload: a
+//! streaming sorting network (1024 × 32-bit ints in 1256 cycles,
+//! 128-bit AXI-Stream) fed by a Xilinx-style AXI DMA ([`hdl::dma`],
+//! [`hdl::sorter`]), driven by a guest driver ([`vm::guest`]).
+//!
+//! Results are checked against an AOT-compiled XLA **golden model**
+//! ([`runtime`]) lowered from the Pallas bitonic-network kernel — the
+//! functional twin of the RTL sorter — and the same executable powers
+//! the functional fast mode of the accelerator.
+//!
+//! See `DESIGN.md` for the full inventory and experiment index.
+
+pub mod config;
+pub mod coordinator;
+pub mod costmodel;
+pub mod hdl;
+pub mod link;
+pub mod pcie;
+pub mod runtime;
+pub mod testutil;
+pub mod vm;
+
+/// Crate-wide result type.
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Crate-wide error type.
+#[derive(Debug, thiserror::Error)]
+pub enum Error {
+    /// Link-layer failures (framing, transport, reconnect exhaustion).
+    #[error("link: {0}")]
+    Link(String),
+    /// Malformed or out-of-range PCIe/MMIO access.
+    #[error("pcie: {0}")]
+    Pcie(String),
+    /// HDL simulation error (X-propagation analogue: illegal state).
+    #[error("hdl: {0}")]
+    Hdl(String),
+    /// Guest / VMM error.
+    #[error("vm: {0}")]
+    Vm(String),
+    /// PJRT / artifact errors.
+    #[error("runtime: {0}")]
+    Runtime(String),
+    /// Configuration errors.
+    #[error("config: {0}")]
+    Config(String),
+    /// Scenario/coordination errors (timeouts, hangs detected).
+    #[error("cosim: {0}")]
+    Cosim(String),
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+}
+
+impl Error {
+    pub fn link(msg: impl Into<String>) -> Self {
+        Error::Link(msg.into())
+    }
+    pub fn pcie(msg: impl Into<String>) -> Self {
+        Error::Pcie(msg.into())
+    }
+    pub fn hdl(msg: impl Into<String>) -> Self {
+        Error::Hdl(msg.into())
+    }
+    pub fn vm(msg: impl Into<String>) -> Self {
+        Error::Vm(msg.into())
+    }
+    pub fn runtime(msg: impl Into<String>) -> Self {
+        Error::Runtime(msg.into())
+    }
+    pub fn config(msg: impl Into<String>) -> Self {
+        Error::Config(msg.into())
+    }
+    pub fn cosim(msg: impl Into<String>) -> Self {
+        Error::Cosim(msg.into())
+    }
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Runtime(e.to_string())
+    }
+}

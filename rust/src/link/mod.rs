@@ -1,0 +1,25 @@
+//! The VM ⇄ HDL link: the paper's key missing component between a
+//! VM's virtual PCIe device and the PCIe block of an HDL simulation.
+//!
+//! Topology (paper §II): **two pairs of unidirectional channels** —
+//! one pair for VM→HDL accesses (requests down, responses up) and one
+//! pair for HDL→VM accesses (requests up, responses down). Using
+//! multiple unidirectional channels gives each side independence: a
+//! side can be restarted without disturbing the other (the reliable
+//! endpoint replays unacknowledged messages after a reconnect).
+//!
+//! The paper used ZeroMQ; the offline environment has no zmq, so
+//! [`channel`] implements the same contract — reliable, ordered,
+//! reconnectable message queues — over two transports:
+//! in-process ([`transport::InProcTransport`], `std::sync::mpsc`) and
+//! Unix-domain sockets ([`transport::UdsTransport`]) for running the
+//! VM side and the HDL side as separate, independently restartable
+//! processes.
+
+pub mod channel;
+pub mod msg;
+pub mod transport;
+
+pub use channel::{Endpoint, LinkPair, ReliableRx, ReliableTx};
+pub use msg::{LinkMode, Msg, Side};
+pub use transport::{make_inproc_pair, InProcTransport, Transport, UdsListener, UdsTransport};

@@ -1,0 +1,421 @@
+//! Byte-frame transports under the reliable channel layer.
+//!
+//! A transport moves opaque length-prefixed frames one way. Two
+//! implementations:
+//!
+//! * [`InProcTransport`] — `std::sync::mpsc` queue; used when the VM
+//!   side and the HDL side run in one process (deterministic tests,
+//!   single-threaded co-simulation).
+//! * [`UdsTransport`] — Unix-domain socket stream; used when the sides
+//!   run as separate processes (the paper's deployment: QEMU and VCS
+//!   as independent programs). Supports reconnect: the listener end
+//!   re-accepts, the connector end re-dials, and the reliable channel
+//!   above replays unacknowledged traffic.
+
+use std::io::{ErrorKind, Read, Write};
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::{Error, Result};
+
+/// A one-way byte-frame transport.
+pub trait Transport: Send {
+    /// Send one frame. May block briefly; returns an error if the peer
+    /// is unreachable *and* cannot be queued (UDS: not connected).
+    fn send(&mut self, frame: &[u8]) -> Result<()>;
+    /// Non-blocking receive.
+    fn try_recv(&mut self) -> Result<Option<Vec<u8>>>;
+    /// Blocking receive with timeout.
+    fn recv_timeout(&mut self, timeout: Duration) -> Result<Option<Vec<u8>>> {
+        let deadline = Instant::now() + timeout;
+        loop {
+            if let Some(f) = self.try_recv()? {
+                return Ok(Some(f));
+            }
+            if Instant::now() >= deadline {
+                return Ok(None);
+            }
+            std::thread::sleep(Duration::from_micros(50));
+        }
+    }
+    /// True if the transport currently has a live peer.
+    fn connected(&self) -> bool {
+        true
+    }
+    /// Attempt to (re)establish the peer connection; returns whether
+    /// the transport is connected afterwards. In-proc is always up.
+    fn reconnect(&mut self) -> Result<bool> {
+        Ok(true)
+    }
+    /// True exactly once after a *new* stream was established by
+    /// `reconnect` (the reliable layer re-handshakes and replays on
+    /// fresh streams, since control frames are not in the outbox).
+    fn take_reconnected(&mut self) -> bool {
+        false
+    }
+    /// Human label for logs.
+    fn label(&self) -> &'static str;
+}
+
+// ------------------------------------------------------------- in-proc
+
+/// One direction of the in-process link: a mutex-guarded queue with
+/// an atomic length so the (overwhelmingly common) empty poll is a
+/// single relaxed load — the HDL side polls every simulated cycle
+/// (paper §IV-B), so this check is the hottest line of the link layer.
+struct InProcQueue {
+    q: Mutex<std::collections::VecDeque<Vec<u8>>>,
+    len: AtomicUsize,
+    /// Peers alive (2 at creation; each side decrements on drop).
+    peers: AtomicUsize,
+}
+
+/// In-process transport: a bidirectional pair of queues.
+pub struct InProcTransport {
+    tx: Arc<InProcQueue>,
+    rx: Arc<InProcQueue>,
+}
+
+impl Drop for InProcTransport {
+    fn drop(&mut self) {
+        self.tx.peers.fetch_sub(1, Ordering::Relaxed);
+        self.rx.peers.fetch_sub(1, Ordering::Relaxed);
+    }
+}
+
+/// Create a connected pair of in-process transports (a-end, b-end).
+pub fn make_inproc_pair() -> (InProcTransport, InProcTransport) {
+    let mk = || {
+        Arc::new(InProcQueue {
+            q: Mutex::new(std::collections::VecDeque::new()),
+            len: AtomicUsize::new(0),
+            peers: AtomicUsize::new(2),
+        })
+    };
+    let ab = mk();
+    let ba = mk();
+    (
+        InProcTransport { tx: ab.clone(), rx: ba.clone() },
+        InProcTransport { tx: ba, rx: ab },
+    )
+}
+
+impl Transport for InProcTransport {
+    fn send(&mut self, frame: &[u8]) -> Result<()> {
+        if self.tx.peers.load(Ordering::Relaxed) < 2 {
+            return Err(Error::link("inproc peer dropped"));
+        }
+        let mut q = self.tx.q.lock().unwrap();
+        q.push_back(frame.to_vec());
+        self.tx.len.store(q.len(), Ordering::Release);
+        Ok(())
+    }
+
+    fn try_recv(&mut self) -> Result<Option<Vec<u8>>> {
+        // Fast path: nothing queued (no lock, one atomic load).
+        if self.rx.len.load(Ordering::Acquire) == 0 {
+            return Ok(None);
+        }
+        let mut q = self.rx.q.lock().unwrap();
+        let f = q.pop_front();
+        self.rx.len.store(q.len(), Ordering::Release);
+        Ok(f)
+    }
+
+    fn label(&self) -> &'static str {
+        "inproc"
+    }
+}
+
+// ----------------------------------------------------------------- UDS
+
+/// Role of a UDS endpoint: the HDL side listens, the VM side dials
+/// (by convention; either assignment works).
+enum UdsRole {
+    Listener(UnixListener),
+    Connector(PathBuf),
+}
+
+/// Unix-domain-socket transport with reconnect support and 4-byte
+/// little-endian length framing.
+pub struct UdsTransport {
+    role: UdsRole,
+    stream: Option<UnixStream>,
+    rdbuf: Vec<u8>,
+    newly_connected: bool,
+}
+
+/// Convenience wrapper owning the socket path for the listening side.
+pub struct UdsListener;
+
+impl UdsTransport {
+    /// Bind a listening endpoint at `path` (removing any stale socket).
+    pub fn listen(path: &Path) -> Result<Self> {
+        let _ = std::fs::remove_file(path);
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let l = UnixListener::bind(path)?;
+        l.set_nonblocking(true)?;
+        Ok(Self {
+            role: UdsRole::Listener(l),
+            stream: None,
+            rdbuf: Vec::new(),
+            newly_connected: false,
+        })
+    }
+
+    /// Create a dialing endpoint toward `path` (connects lazily).
+    pub fn connect(path: &Path) -> Result<Self> {
+        let mut t = Self {
+            role: UdsRole::Connector(path.to_path_buf()),
+            stream: None,
+            rdbuf: Vec::new(),
+            newly_connected: false,
+        };
+        let _ = t.reconnect();
+        Ok(t)
+    }
+
+    /// Block until connected or `timeout` elapses.
+    pub fn wait_connected(&mut self, timeout: Duration) -> Result<()> {
+        let deadline = Instant::now() + timeout;
+        while !self.connected() {
+            self.reconnect()?;
+            if self.connected() {
+                break;
+            }
+            if Instant::now() >= deadline {
+                return Err(Error::link("uds connect timeout"));
+            }
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        Ok(())
+    }
+
+    fn drop_stream(&mut self) {
+        self.stream = None;
+        self.rdbuf.clear();
+    }
+
+    /// Pull any readable bytes into rdbuf; detect disconnect.
+    fn fill(&mut self) -> Result<()> {
+        let Some(s) = self.stream.as_mut() else {
+            return Ok(());
+        };
+        let mut tmp = [0u8; 64 * 1024];
+        loop {
+            match s.read(&mut tmp) {
+                Ok(0) => {
+                    self.drop_stream();
+                    return Ok(());
+                }
+                Ok(n) => self.rdbuf.extend_from_slice(&tmp[..n]),
+                Err(e) if e.kind() == ErrorKind::WouldBlock => return Ok(()),
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(e)
+                    if e.kind() == ErrorKind::ConnectionReset
+                        || e.kind() == ErrorKind::BrokenPipe =>
+                {
+                    self.drop_stream();
+                    return Ok(());
+                }
+                Err(e) => return Err(e.into()),
+            }
+        }
+    }
+
+    /// Pop one complete frame from rdbuf if available.
+    fn pop_frame(&mut self) -> Option<Vec<u8>> {
+        if self.rdbuf.len() < 4 {
+            return None;
+        }
+        let n = u32::from_le_bytes(self.rdbuf[..4].try_into().unwrap()) as usize;
+        if self.rdbuf.len() < 4 + n {
+            return None;
+        }
+        let frame = self.rdbuf[4..4 + n].to_vec();
+        self.rdbuf.drain(..4 + n);
+        Some(frame)
+    }
+}
+
+impl Transport for UdsTransport {
+    fn send(&mut self, frame: &[u8]) -> Result<()> {
+        let Some(s) = self.stream.as_mut() else {
+            return Err(Error::link("uds not connected"));
+        };
+        let mut hdr = (frame.len() as u32).to_le_bytes().to_vec();
+        hdr.extend_from_slice(frame);
+        // Write fully; the socket is nonblocking, so spin on WouldBlock
+        // (frames are small; the peer drains promptly).
+        let mut off = 0;
+        while off < hdr.len() {
+            match s.write(&hdr[off..]) {
+                Ok(n) => off += n,
+                Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                    std::thread::sleep(Duration::from_micros(20));
+                }
+                Err(e) if e.kind() == ErrorKind::Interrupted => {}
+                Err(e)
+                    if e.kind() == ErrorKind::BrokenPipe
+                        || e.kind() == ErrorKind::ConnectionReset =>
+                {
+                    self.drop_stream();
+                    return Err(Error::link("uds peer went away mid-send"));
+                }
+                Err(e) => return Err(e.into()),
+            }
+        }
+        Ok(())
+    }
+
+    fn try_recv(&mut self) -> Result<Option<Vec<u8>>> {
+        if let Some(f) = self.pop_frame() {
+            return Ok(Some(f));
+        }
+        self.fill()?;
+        Ok(self.pop_frame())
+    }
+
+    fn connected(&self) -> bool {
+        self.stream.is_some()
+    }
+
+    fn take_reconnected(&mut self) -> bool {
+        std::mem::take(&mut self.newly_connected)
+    }
+
+    fn reconnect(&mut self) -> Result<bool> {
+        if self.stream.is_some() {
+            return Ok(true);
+        }
+        match &self.role {
+            UdsRole::Listener(l) => match l.accept() {
+                Ok((s, _)) => {
+                    s.set_nonblocking(true)?;
+                    self.stream = Some(s);
+                    self.newly_connected = true;
+                    Ok(true)
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => Ok(false),
+                Err(e) => Err(e.into()),
+            },
+            UdsRole::Connector(path) => match UnixStream::connect(path) {
+                Ok(s) => {
+                    s.set_nonblocking(true)?;
+                    self.stream = Some(s);
+                    self.newly_connected = true;
+                    Ok(true)
+                }
+                Err(_) => Ok(false), // peer not up yet
+            },
+        }
+    }
+
+    fn label(&self) -> &'static str {
+        "uds"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn inproc_roundtrip() {
+        let (mut a, mut b) = make_inproc_pair();
+        a.send(b"hello").unwrap();
+        a.send(b"world").unwrap();
+        assert_eq!(b.try_recv().unwrap().unwrap(), b"hello");
+        assert_eq!(
+            b.recv_timeout(Duration::from_millis(10)).unwrap().unwrap(),
+            b"world"
+        );
+        assert!(b.try_recv().unwrap().is_none());
+    }
+
+    #[test]
+    fn inproc_peer_drop_detected() {
+        let (mut a, b) = make_inproc_pair();
+        drop(b);
+        assert!(a.send(b"x").is_err());
+    }
+
+    fn tmp_sock(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join("vmhdl-test-sockets");
+        let _ = std::fs::create_dir_all(&dir);
+        dir.join(format!("{name}-{}.sock", std::process::id()))
+    }
+
+    #[test]
+    fn uds_roundtrip_and_framing() {
+        let path = tmp_sock("rt");
+        let mut srv = UdsTransport::listen(&path).unwrap();
+        let mut cli = UdsTransport::connect(&path).unwrap();
+        cli.wait_connected(Duration::from_secs(2)).unwrap();
+        srv.reconnect().unwrap();
+        assert!(srv.connected());
+
+        cli.send(b"abc").unwrap();
+        cli.send(&vec![7u8; 100_000]).unwrap(); // bigger than one read
+        let f1 = srv.recv_timeout(Duration::from_secs(2)).unwrap().unwrap();
+        assert_eq!(f1, b"abc");
+        let f2 = srv.recv_timeout(Duration::from_secs(2)).unwrap().unwrap();
+        assert_eq!(f2.len(), 100_000);
+        assert!(f2.iter().all(|&b| b == 7));
+
+        srv.send(b"pong").unwrap();
+        assert_eq!(
+            cli.recv_timeout(Duration::from_secs(2)).unwrap().unwrap(),
+            b"pong"
+        );
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn uds_reconnect_after_peer_restart() {
+        let path = tmp_sock("rc");
+        let mut srv = UdsTransport::listen(&path).unwrap();
+        {
+            let mut cli = UdsTransport::connect(&path).unwrap();
+            cli.wait_connected(Duration::from_secs(2)).unwrap();
+            srv.reconnect().unwrap();
+            cli.send(b"one").unwrap();
+            assert_eq!(
+                srv.recv_timeout(Duration::from_secs(2)).unwrap().unwrap(),
+                b"one"
+            );
+        } // client dies
+        // Server notices on next recv (returns None + disconnect).
+        let deadline = Instant::now() + Duration::from_secs(2);
+        while srv.connected() {
+            let _ = srv.try_recv().unwrap();
+            assert!(Instant::now() < deadline, "disconnect not detected");
+        }
+        // New client connects; server re-accepts.
+        let mut cli2 = UdsTransport::connect(&path).unwrap();
+        cli2.wait_connected(Duration::from_secs(2)).unwrap();
+        let deadline = Instant::now() + Duration::from_secs(2);
+        while !srv.reconnect().unwrap() {
+            assert!(Instant::now() < deadline, "re-accept failed");
+        }
+        cli2.send(b"two").unwrap();
+        assert_eq!(
+            srv.recv_timeout(Duration::from_secs(2)).unwrap().unwrap(),
+            b"two"
+        );
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn uds_send_unconnected_errors() {
+        let path = tmp_sock("uc");
+        let mut srv = UdsTransport::listen(&path).unwrap();
+        assert!(srv.send(b"x").is_err());
+        let _ = std::fs::remove_file(&path);
+    }
+}

@@ -1,0 +1,266 @@
+//! `vmhdl` — command-line front end of the co-simulation framework.
+//!
+//! ```text
+//! vmhdl cosim     [--records N] [--mode mmio|tlp] [--transport inproc|uds]
+//!                 [--vcd out.vcd] [--golden true] ...   run a full co-simulation
+//! vmhdl hdl-side  --dir <sockets> [...]    the HDL simulator process (UDS)
+//! vmhdl vm-side   [--dir <sockets>] [...]  the VM process (UDS)
+//! vmhdl rtt       [--iters N]              MMIO round-trip microbench (Table III)
+//! vmhdl irq       [--iters N]              interrupt-latency microbench
+//! vmhdl golden    [--records N]            run the AOT XLA model directly (func mode)
+//! vmhdl flow      [--records N]            Table II debug-iteration comparison
+//! vmhdl resources                          §III resource-utilization model
+//! vmhdl topology                           print the component graph (Figure 1)
+//! ```
+//!
+//! Every subcommand accepts `--config file.conf` (`key = value` lines)
+//! plus the flags in `config.rs`.
+
+use std::sync::atomic::{AtomicBool, AtomicU64};
+use std::sync::Arc;
+use std::time::Duration;
+
+use vmhdl::config::Config;
+use vmhdl::coordinator::cosim::run_hdl_loop;
+use vmhdl::coordinator::stats::fmt_dur;
+use vmhdl::coordinator::scenario;
+use vmhdl::costmodel::{flow, FlowModel, ResourceModel};
+use vmhdl::hdl::platform::Platform;
+use vmhdl::link::{Endpoint, Side};
+use vmhdl::runtime::GoldenModel;
+use vmhdl::testutil::XorShift64;
+use vmhdl::Result;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let code = match run(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("vmhdl: error: {e}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(args: &[String]) -> Result<()> {
+    let Some(cmd) = args.first() else {
+        print_usage();
+        return Ok(());
+    };
+    let mut cfg = Config::default();
+    cfg.apply_args(&args[1..])?;
+    match cmd.as_str() {
+        "cosim" => cmd_cosim(&cfg),
+        "hdl-side" => cmd_hdl_side(&cfg),
+        "vm-side" => cmd_vm_side(&cfg),
+        "rtt" => cmd_rtt(&cfg),
+        "irq" => cmd_irq(&cfg),
+        "golden" => cmd_golden(&cfg),
+        "flow" => cmd_flow(&cfg),
+        "resources" => {
+            print!("{}", ResourceModel::paper_platform().render());
+            Ok(())
+        }
+        "topology" => {
+            print!("{}", topology());
+            Ok(())
+        }
+        "help" | "--help" | "-h" => {
+            print_usage();
+            Ok(())
+        }
+        other => {
+            print_usage();
+            Err(vmhdl::Error::config(format!("unknown command {other:?}")))
+        }
+    }
+}
+
+fn print_usage() {
+    println!(
+        "vmhdl — VM-HDL co-simulation framework (paper reproduction)\n\
+         commands: cosim, hdl-side, vm-side, rtt, irq, golden, flow, resources, topology\n\
+         options:  --config file.conf plus the keys in rust/src/config.rs"
+    );
+}
+
+fn cmd_cosim(cfg: &Config) -> Result<()> {
+    println!(
+        "co-simulation: {} records, mode={:?}, transport={}, golden={}",
+        cfg.records, cfg.mode, cfg.transport, cfg.golden
+    );
+    let mut golden = if cfg.golden {
+        Some(GoldenModel::load(&cfg.artifacts, cfg.n)?)
+    } else {
+        None
+    };
+    let rep = scenario::run_sort_offload(cfg.cosim()?, cfg.records, cfg.seed, golden.as_mut())?;
+    println!(
+        "offload: {} records in {} wall / {} device-cycles ({} device time)",
+        rep.records,
+        fmt_dur(rep.wall),
+        rep.device_cycles,
+        fmt_dur(Duration::from_nanos(vmhdl::hdl::cycles_to_ns(rep.device_cycles)))
+    );
+    println!(
+        "hdl side: {} cycles in {} ({:.2} Mcycles/s), {} mmio reads, {} mmio writes, \
+         {} dma reads, {} dma writes, {} irqs",
+        rep.hdl.cycles,
+        fmt_dur(rep.hdl.wall),
+        rep.hdl.cycles as f64 / rep.hdl.wall.as_secs_f64().max(1e-9) / 1e6,
+        rep.hdl.mmio_reads,
+        rep.hdl.mmio_writes,
+        rep.hdl.dma_read_reqs,
+        rep.hdl.dma_write_reqs,
+        rep.hdl.irqs_sent,
+    );
+    println!(
+        "link: {} messages, {} bytes{}",
+        rep.link_msgs,
+        rep.link_bytes,
+        if rep.golden_checked { " — results golden-checked against AOT XLA" } else { "" }
+    );
+    Ok(())
+}
+
+fn cmd_hdl_side(cfg: &Config) -> Result<()> {
+    let cc = cfg.cosim()?;
+    let session = vmhdl::coordinator::lifecycle::fresh_session();
+    let ep = Endpoint::uds(Side::Hdl, &cfg.socket_dir, session)?;
+    println!(
+        "hdl-side: sockets at {}, session {session:#x}, vcd={:?}",
+        cfg.socket_dir.display(),
+        cfg.vcd
+    );
+    let platform = Platform::new(cc.platform.clone());
+    // Runs until killed (the supervisor / user stops us).
+    let stop = Arc::new(AtomicBool::new(false));
+    let cycles = Arc::new(AtomicU64::new(0));
+    let report = run_hdl_loop(platform, ep, &cc, stop, cycles)?;
+    println!("hdl-side: done: {report:?}");
+    Ok(())
+}
+
+fn cmd_vm_side(cfg: &Config) -> Result<()> {
+    let mut c2 = cfg.clone();
+    c2.transport = "uds".to_string();
+    let rep = scenario::run_sort_offload(c2.cosim()?, cfg.records, cfg.seed, None)?;
+    println!(
+        "vm-side: {} records ok in {} ({} device cycles)",
+        rep.records,
+        fmt_dur(rep.wall),
+        rep.device_cycles
+    );
+    Ok(())
+}
+
+fn cmd_rtt(cfg: &Config) -> Result<()> {
+    let (gap, rep) = scenario::run_rtt(cfg.cosim()?, cfg.iters)?;
+    println!("MMIO read RTT over {} iterations:", rep.iters);
+    println!("  wall: min={} avg={}", fmt_dur(rep.wall_min), fmt_dur(rep.wall_avg));
+    println!(
+        "  device: {} cycles/op ({} simulated-device time)",
+        rep.device_cycles / rep.iters.max(1) as u64,
+        fmt_dur(gap.actual)
+    );
+    println!("  gap factor (wall / device-time): {:.0}x", gap.factor());
+    Ok(())
+}
+
+fn cmd_irq(cfg: &Config) -> Result<()> {
+    let h = scenario::run_irq_latency(cfg.cosim()?, cfg.iters)?;
+    println!("IRQ doorbell→ISR latency: {}", h.summary());
+    Ok(())
+}
+
+fn cmd_golden(cfg: &Config) -> Result<()> {
+    let mut g = GoldenModel::load(&cfg.artifacts, cfg.n)?;
+    let mut rng = XorShift64::new(cfg.seed);
+    let records: Vec<Vec<i32>> = (0..cfg.records).map(|_| rng.vec_i32(cfg.n)).collect();
+    let t0 = std::time::Instant::now();
+    let out = g.func_offload(&records, false)?;
+    let wall = t0.elapsed();
+    for (o, i) in out.iter().zip(&records) {
+        let mut e = i.clone();
+        e.sort_unstable();
+        assert_eq!(o, &e, "XLA result mismatch");
+    }
+    println!(
+        "functional mode (AOT XLA, no HDL): {} records in {} ({} per record; compile {} once)",
+        cfg.records,
+        fmt_dur(wall),
+        fmt_dur(wall / cfg.records.max(1) as u32),
+        fmt_dur(g.compile_wall),
+    );
+    Ok(())
+}
+
+fn cmd_flow(cfg: &Config) -> Result<()> {
+    // Co-sim column measured live; physical column from the model.
+    let model = FlowModel::paper();
+    let resources = ResourceModel::paper_platform();
+    let luts = resources.platform().luts;
+
+    // "Compilation" (VCS analogue): incremental rebuild of the
+    // simulator — measured if VMHDL_MEASURE_REBUILD=1, else the
+    // recorded calibration (see EXPERIMENTS.md).
+    let compile = measure_or_recorded_rebuild();
+    let t0 = std::time::Instant::now();
+    let rep = scenario::run_sort_offload(cfg.cosim()?, cfg.records, cfg.seed, None)?;
+    let exec = t0.elapsed();
+    let phys = model.physical_iteration(
+        luts,
+        Duration::from_nanos(vmhdl::hdl::cycles_to_ns(rep.device_cycles)),
+    );
+    let cosim = FlowModel::cosim_iteration(compile, exec);
+    print!("{}", flow::render_table2(&phys, &cosim));
+    Ok(())
+}
+
+/// See EXPERIMENTS.md §T2 — the recorded incremental-rebuild time of
+/// the simulator after touching one HDL module (the VCS-compile
+/// analogue), measured on this container. Set VMHDL_MEASURE_REBUILD=1
+/// to re-measure live (slow: runs cargo).
+fn measure_or_recorded_rebuild() -> Duration {
+    if std::env::var("VMHDL_MEASURE_REBUILD").as_deref() == Ok("1") {
+        let t0 = std::time::Instant::now();
+        let status = std::process::Command::new("cargo")
+            .args(["build", "--release", "--offline"])
+            .env("CARGO_TARGET_DIR", "/tmp/vmhdl-rebuild-target")
+            .status();
+        if status.map(|s| s.success()).unwrap_or(false) {
+            return t0.elapsed();
+        }
+    }
+    Duration::from_secs_f64(crate::RECORDED_REBUILD_SECS)
+}
+
+/// Calibrated on this container (see EXPERIMENTS.md §T2).
+const RECORDED_REBUILD_SECS: f64 = 40.0;
+
+fn topology() -> String {
+    // Figure 1, as the live component graph.
+    "VM-HDL CO-SIMULATION TOPOLOGY (paper Figure 1)\n\
+     \n\
+     ┌─ VM side ──────────────────────────┐      ┌─ HDL side ─────────────────────────┐\n\
+     │ guest app (sort workload)          │      │ FPGA platform @ 250 MHz            │\n\
+     │   └─ sort driver (kernel module)   │      │   AXI interconnect                 │\n\
+     │        │ MMIO / IRQ / DMA buffers  │      │   ├─ 0x0000   regfile (CSR)        │\n\
+     │ VMM                                │      │   ├─ 0x1000   AXI DMA (MM2S/S2MM)  │\n\
+     │   ├─ guest memory (DMA target)     │      │   └─ 0x100000 BRAM (BAR2)          │\n\
+     │   └─ PCIe FPGA pseudo device       │      │   DMA ⇄ sorter: AXI-Stream 128b    │\n\
+     │        BAR0 64K, BAR2 1M, MSI×4    │      │   sorter: 1024×32b in 1256 cycles  │\n\
+     │        │                           │      │   PCIe simulation bridge           │\n\
+     └────────┼───────────────────────────┘      └────────┬───────────────────────────┘\n\
+     \n\
+              │   pair A: req →  (MMIO read/write)        │\n\
+              │           ← resp (read completions)       │\n\
+              └───────────────────────────────────────────┘\n\
+                  pair B: req ←  (DMA read/write, MSI)\n\
+                          → resp (DMA read completions)\n\
+     \n\
+     channels: reliable seq-numbered queues (ZeroMQ substitute);\n\
+     either side may restart independently — the survivor replays.\n"
+        .to_string()
+}

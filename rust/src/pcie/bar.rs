@@ -1,0 +1,186 @@
+//! Base Address Register definitions and address decode.
+
+use crate::{Error, Result};
+
+/// BAR memory kind.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BarKind {
+    /// 32-bit memory BAR, non-prefetchable.
+    Mem32,
+    /// 64-bit memory BAR (occupies two BAR slots).
+    Mem64,
+}
+
+/// One BAR's static definition.
+#[derive(Debug, Clone, Copy)]
+pub struct BarDef {
+    /// BAR slot index (0..6).
+    pub index: u8,
+    /// Size in bytes; must be a power of two ≥ 16.
+    pub size: u64,
+    pub kind: BarKind,
+}
+
+impl BarDef {
+    pub fn new(index: u8, size: u64, kind: BarKind) -> Self {
+        assert!(size.is_power_of_two() && size >= 16, "bad BAR size {size}");
+        assert!(index < 6);
+        Self { index, size, kind }
+    }
+
+    /// Low-bits type encoding as read from the BAR register.
+    pub fn type_bits(&self) -> u32 {
+        match self.kind {
+            BarKind::Mem32 => 0b000,
+            BarKind::Mem64 => 0b100,
+        }
+    }
+
+    /// The sizing mask: writing all-ones returns this plus type bits.
+    pub fn size_mask(&self) -> u64 {
+        !(self.size - 1)
+    }
+}
+
+/// The set of BARs of a device plus their guest-assigned bases.
+#[derive(Debug, Clone)]
+pub struct BarSet {
+    defs: Vec<BarDef>,
+    bases: Vec<u64>,
+}
+
+impl BarSet {
+    pub fn new(defs: Vec<BarDef>) -> Self {
+        let n = defs.len();
+        Self {
+            defs,
+            bases: vec![0; n],
+        }
+    }
+
+    pub fn defs(&self) -> &[BarDef] {
+        &self.defs
+    }
+
+    pub fn def_by_index(&self, index: u8) -> Option<&BarDef> {
+        self.defs.iter().find(|d| d.index == index)
+    }
+
+    /// Guest (or firmware) assigns a base address to a BAR.
+    pub fn set_base(&mut self, index: u8, base: u64) -> Result<()> {
+        let pos = self
+            .defs
+            .iter()
+            .position(|d| d.index == index)
+            .ok_or_else(|| Error::pcie(format!("no BAR {index}")))?;
+        let def = &self.defs[pos];
+        if base & (def.size - 1) != 0 {
+            return Err(Error::pcie(format!(
+                "BAR{index} base {base:#x} not aligned to size {:#x}",
+                def.size
+            )));
+        }
+        self.bases[pos] = base;
+        Ok(())
+    }
+
+    pub fn base(&self, index: u8) -> Option<u64> {
+        self.defs
+            .iter()
+            .position(|d| d.index == index)
+            .map(|p| self.bases[p])
+    }
+
+    /// Decode a guest physical address into `(bar_index, offset)`.
+    pub fn decode(&self, gpa: u64) -> Option<(u8, u64)> {
+        for (d, &base) in self.defs.iter().zip(&self.bases) {
+            if base != 0 && gpa >= base && gpa < base + d.size {
+                return Some((d.index, gpa - base));
+            }
+        }
+        None
+    }
+
+    /// Check that an access stays inside the BAR.
+    pub fn check_access(&self, bar: u8, offset: u64, len: u64) -> Result<()> {
+        let def = self
+            .def_by_index(bar)
+            .ok_or_else(|| Error::pcie(format!("access to undefined BAR {bar}")))?;
+        if offset.checked_add(len).map_or(true, |end| end > def.size) {
+            return Err(Error::pcie(format!(
+                "access [{offset:#x}..+{len}) outside BAR{bar} (size {:#x})",
+                def.size
+            )));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::forall;
+
+    fn sume_bars() -> BarSet {
+        BarSet::new(vec![
+            BarDef::new(0, 64 * 1024, BarKind::Mem32),
+            BarDef::new(2, 1024 * 1024, BarKind::Mem64),
+        ])
+    }
+
+    #[test]
+    fn sizing_mask() {
+        let d = BarDef::new(0, 64 * 1024, BarKind::Mem32);
+        assert_eq!(d.size_mask() as u32, 0xFFFF_0000);
+    }
+
+    #[test]
+    fn decode_routes_to_correct_bar() {
+        let mut b = sume_bars();
+        b.set_base(0, 0xF000_0000).unwrap();
+        b.set_base(2, 0xF010_0000).unwrap();
+        assert_eq!(b.decode(0xF000_0004), Some((0, 4)));
+        assert_eq!(b.decode(0xF010_FFFF), Some((2, 0xFFFF)));
+        assert_eq!(b.decode(0xF020_0000), None);
+        assert_eq!(b.decode(0), None);
+    }
+
+    #[test]
+    fn unaligned_base_rejected() {
+        let mut b = sume_bars();
+        assert!(b.set_base(0, 0xF000_1000).is_err());
+    }
+
+    #[test]
+    fn check_access_bounds() {
+        let b = sume_bars();
+        assert!(b.check_access(0, 0, 4).is_ok());
+        assert!(b.check_access(0, 64 * 1024 - 4, 4).is_ok());
+        assert!(b.check_access(0, 64 * 1024 - 3, 4).is_err());
+        assert!(b.check_access(0, u64::MAX, 4).is_err());
+        assert!(b.check_access(1, 0, 4).is_err());
+    }
+
+    #[test]
+    fn prop_decode_inverse_of_base_plus_offset() {
+        forall(
+            0xBA5E,
+            200,
+            |g| {
+                let bar = if g.rng.chance(1, 2) { 0u8 } else { 2u8 };
+                let off = g.rng.below(if bar == 0 { 64 * 1024 } else { 1024 * 1024 });
+                (bar, off)
+            },
+            |&(bar, off)| {
+                let mut b = sume_bars();
+                b.set_base(0, 0xE000_0000).unwrap();
+                b.set_base(2, 0xE100_0000).unwrap();
+                let base = b.base(bar).unwrap();
+                match b.decode(base + off) {
+                    Some((dbar, doff)) if dbar == bar && doff == off => Ok(()),
+                    other => Err(format!("decode({base:#x}+{off:#x}) = {other:?}")),
+                }
+            },
+        );
+    }
+}

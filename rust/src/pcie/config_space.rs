@@ -1,0 +1,348 @@
+//! PCI configuration space model (type-0 header + MSI capability).
+//!
+//! Implements the subset a guest driver exercises when probing and
+//! binding the FPGA board: vendor/device id, command register, BAR
+//! sizing protocol (write all-ones, read back the size mask), and the
+//! MSI capability (enable bit, address, data, multiple-message bits).
+
+use super::bar::{BarKind, BarSet};
+use crate::{Error, Result};
+
+/// Standard offsets.
+pub mod regs {
+    pub const VENDOR_ID: u16 = 0x00;
+    pub const DEVICE_ID: u16 = 0x02;
+    pub const COMMAND: u16 = 0x04;
+    pub const STATUS: u16 = 0x06;
+    pub const CLASS_REV: u16 = 0x08;
+    pub const HEADER_TYPE: u16 = 0x0E;
+    pub const BAR0: u16 = 0x10;
+    pub const SUBSYS_VENDOR: u16 = 0x2C;
+    pub const SUBSYS_ID: u16 = 0x2E;
+    pub const CAP_PTR: u16 = 0x34;
+    pub const INT_LINE: u16 = 0x3C;
+    /// Where we place the MSI capability.
+    pub const MSI_CAP: u16 = 0x50;
+}
+
+/// COMMAND register bits.
+pub mod cmd {
+    pub const MEM_ENABLE: u16 = 1 << 1;
+    pub const BUS_MASTER: u16 = 1 << 2;
+    pub const INTX_DISABLE: u16 = 1 << 10;
+}
+
+/// MSI capability state.
+#[derive(Debug, Clone, Default)]
+pub struct MsiState {
+    pub enabled: bool,
+    /// log2 of enabled vectors (Multiple Message Enable field).
+    pub mme: u8,
+    pub address: u64,
+    pub data: u16,
+}
+
+impl MsiState {
+    /// Number of vectors currently enabled.
+    pub fn vectors(&self) -> u16 {
+        1 << self.mme.min(5)
+    }
+}
+
+/// A type-0 PCI function's configuration space.
+pub struct ConfigSpace {
+    raw: [u8; 256],
+    bars: BarSet,
+    /// Sizing latch: BAR slots whose last write was all-ones.
+    sizing: [bool; 6],
+    msi: MsiState,
+    msi_cap_vectors: u16,
+}
+
+impl ConfigSpace {
+    pub fn new(
+        vendor: u16,
+        device: u16,
+        subsys: u16,
+        class_code: u32,
+        bars: BarSet,
+        msi_vectors: u16,
+    ) -> Self {
+        assert!(msi_vectors.is_power_of_two() && msi_vectors <= 32);
+        let mut cs = Self {
+            raw: [0; 256],
+            bars,
+            sizing: [false; 6],
+            msi: MsiState::default(),
+            msi_cap_vectors: msi_vectors,
+        };
+        cs.put16(regs::VENDOR_ID, vendor);
+        cs.put16(regs::DEVICE_ID, device);
+        cs.put32(regs::CLASS_REV, class_code << 8); // rev 0
+        cs.raw[regs::HEADER_TYPE as usize] = 0x00;
+        cs.put16(regs::SUBSYS_VENDOR, vendor);
+        cs.put16(regs::SUBSYS_ID, subsys);
+        // Status: capabilities list present.
+        cs.put16(regs::STATUS, 1 << 4);
+        cs.raw[regs::CAP_PTR as usize] = regs::MSI_CAP as u8;
+        // MSI capability header: id 0x05, next 0, control.
+        cs.raw[regs::MSI_CAP as usize] = 0x05;
+        cs.raw[regs::MSI_CAP as usize + 1] = 0x00;
+        let mmc = (msi_vectors as f32).log2() as u16;
+        // Control: 64-bit capable (bit 7), MMC in bits 3:1.
+        cs.put16(regs::MSI_CAP + 2, (1 << 7) | (mmc << 1));
+        cs
+    }
+
+    fn put16(&mut self, off: u16, v: u16) {
+        self.raw[off as usize..off as usize + 2].copy_from_slice(&v.to_le_bytes());
+    }
+    fn put32(&mut self, off: u16, v: u32) {
+        self.raw[off as usize..off as usize + 4].copy_from_slice(&v.to_le_bytes());
+    }
+    fn get16(&self, off: u16) -> u16 {
+        u16::from_le_bytes(self.raw[off as usize..off as usize + 2].try_into().unwrap())
+    }
+
+    pub fn bars(&self) -> &BarSet {
+        &self.bars
+    }
+    pub fn bars_mut(&mut self) -> &mut BarSet {
+        &mut self.bars
+    }
+    pub fn msi(&self) -> &MsiState {
+        &self.msi
+    }
+
+    /// Memory decoding enabled (COMMAND.MEM)?
+    pub fn mem_enabled(&self) -> bool {
+        self.get16(regs::COMMAND) & cmd::MEM_ENABLE != 0
+    }
+    /// Bus mastering enabled (COMMAND.BME)? Gates device DMA.
+    pub fn bus_master(&self) -> bool {
+        self.get16(regs::COMMAND) & cmd::BUS_MASTER != 0
+    }
+
+    /// 32-bit aligned config read.
+    pub fn read32(&self, off: u16) -> Result<u32> {
+        if off as usize + 4 > 256 || off % 4 != 0 {
+            return Err(Error::pcie(format!("bad config read at {off:#x}")));
+        }
+        let off_us = off as usize;
+        // BAR reads: sizing protocol or live base.
+        if (regs::BAR0..regs::BAR0 + 24).contains(&off) {
+            let slot = ((off - regs::BAR0) / 4) as u8;
+            return Ok(self.read_bar_slot(slot));
+        }
+        Ok(u32::from_le_bytes(self.raw[off_us..off_us + 4].try_into().unwrap()))
+    }
+
+    fn read_bar_slot(&self, slot: u8) -> u32 {
+        // A slot is either a BAR's low word, a Mem64 BAR's high word,
+        // or unimplemented (reads 0).
+        if let Some(def) = self.bars.def_by_index(slot) {
+            let base = self.bars.base(slot).unwrap_or(0);
+            if self.sizing[slot as usize] {
+                return (def.size_mask() as u32) | def.type_bits();
+            }
+            return (base as u32 & !0xF) | def.type_bits();
+        }
+        // High word of a preceding Mem64 BAR?
+        if slot > 0 {
+            if let Some(def) = self.bars.def_by_index(slot - 1) {
+                if def.kind == BarKind::Mem64 {
+                    let base = self.bars.base(slot - 1).unwrap_or(0);
+                    if self.sizing[slot as usize] {
+                        return (def.size_mask() >> 32) as u32;
+                    }
+                    return (base >> 32) as u32;
+                }
+            }
+        }
+        0
+    }
+
+    /// 32-bit aligned config write.
+    pub fn write32(&mut self, off: u16, val: u32) -> Result<()> {
+        if off as usize + 4 > 256 || off % 4 != 0 {
+            return Err(Error::pcie(format!("bad config write at {off:#x}")));
+        }
+        match off {
+            regs::COMMAND => {
+                // STATUS (upper half) is RO here.
+                let keep = cmd::MEM_ENABLE | cmd::BUS_MASTER | cmd::INTX_DISABLE;
+                self.put16(regs::COMMAND, (val as u16) & keep);
+            }
+            o if (regs::BAR0..regs::BAR0 + 24).contains(&o) => {
+                let slot = ((o - regs::BAR0) / 4) as u8;
+                self.write_bar_slot(slot, val)?;
+            }
+            o if o == regs::MSI_CAP => {
+                // Control word lives in the upper half of this dword.
+                let ctrl = (val >> 16) as u16;
+                self.msi.enabled = ctrl & 1 != 0;
+                let mme = ((ctrl >> 4) & 0x7) as u8;
+                let max_mmc = (self.msi_cap_vectors as f32).log2() as u8;
+                self.msi.mme = mme.min(max_mmc);
+                let mut c = self.get16(regs::MSI_CAP + 2);
+                c = (c & !(1 | (0x7 << 4))) | (ctrl & 1) | (((self.msi.mme as u16) & 0x7) << 4);
+                self.put16(regs::MSI_CAP + 2, c);
+            }
+            o if o == regs::MSI_CAP + 4 => {
+                self.msi.address = (self.msi.address & !0xFFFF_FFFF) | val as u64;
+                self.put32(o, val);
+            }
+            o if o == regs::MSI_CAP + 8 => {
+                self.msi.address = (self.msi.address & 0xFFFF_FFFF) | ((val as u64) << 32);
+                self.put32(o, val);
+            }
+            o if o == regs::MSI_CAP + 12 => {
+                self.msi.data = val as u16;
+                self.put32(o, val);
+            }
+            regs::VENDOR_ID | regs::CLASS_REV | regs::SUBSYS_VENDOR => {} // RO
+            _ => self.put32(off, val),
+        }
+        Ok(())
+    }
+
+    fn write_bar_slot(&mut self, slot: u8, val: u32) -> Result<()> {
+        if let Some(def) = self.bars.def_by_index(slot) {
+            let size = def.size;
+            if val == u32::MAX {
+                self.sizing[slot as usize] = true;
+                return Ok(());
+            }
+            self.sizing[slot as usize] = false;
+            let old = self.bars.base(slot).unwrap_or(0);
+            let base = (old & !0xFFFF_FFFF) | (val as u64 & !0xF);
+            // Align down — hardware BAR registers hardwire low bits.
+            return self.bars.set_base(slot, base & !(size - 1));
+        }
+        // High word of Mem64 BAR.
+        if slot > 0 {
+            let info = self.bars.def_by_index(slot - 1).map(|d| (d.kind, d.size));
+            if let Some((BarKind::Mem64, _)) = info {
+                if val == u32::MAX {
+                    self.sizing[slot as usize] = true;
+                    return Ok(());
+                }
+                self.sizing[slot as usize] = false;
+                let old = self.bars.base(slot - 1).unwrap_or(0);
+                let base = (old & 0xFFFF_FFFF) | ((val as u64) << 32);
+                return self.bars.set_base(slot - 1, base);
+            }
+        }
+        Ok(()) // writes to unimplemented BARs are ignored
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pcie::bar::{BarDef, BarKind, BarSet};
+    use crate::pcie::board;
+
+    fn dev() -> ConfigSpace {
+        ConfigSpace::new(
+            board::VENDOR_ID,
+            board::DEVICE_ID,
+            board::SUBSYS_ID,
+            0x058000, // memory controller class, as Xilinx ref designs use
+            BarSet::new(vec![
+                BarDef::new(0, board::BAR0_SIZE, BarKind::Mem32),
+                BarDef::new(2, board::BAR2_SIZE, BarKind::Mem64),
+            ]),
+            board::MSI_VECTORS,
+        )
+    }
+
+    #[test]
+    fn ids_read_back() {
+        let d = dev();
+        let id = d.read32(regs::VENDOR_ID).unwrap();
+        assert_eq!(id & 0xFFFF, board::VENDOR_ID as u32);
+        assert_eq!(id >> 16, board::DEVICE_ID as u32);
+    }
+
+    #[test]
+    fn bar_sizing_protocol() {
+        let mut d = dev();
+        // Probe BAR0: write all-ones, read size mask, restore base.
+        d.write32(regs::BAR0, u32::MAX).unwrap();
+        let mask = d.read32(regs::BAR0).unwrap();
+        let size = !(mask & !0xF) as u64 + 1;
+        assert_eq!(size, board::BAR0_SIZE);
+        d.write32(regs::BAR0, 0xF000_0000).unwrap();
+        assert_eq!(d.read32(regs::BAR0).unwrap() & !0xF, 0xF000_0000);
+        assert_eq!(d.bars().base(0), Some(0xF000_0000));
+    }
+
+    #[test]
+    fn bar64_sizing_and_assign() {
+        let mut d = dev();
+        let slot_lo = regs::BAR0 + 8; // BAR2
+        let slot_hi = regs::BAR0 + 12; // BAR3 = high half
+        d.write32(slot_lo, u32::MAX).unwrap();
+        d.write32(slot_hi, u32::MAX).unwrap();
+        let lo = d.read32(slot_lo).unwrap();
+        let hi = d.read32(slot_hi).unwrap();
+        let mask = ((hi as u64) << 32) | (lo as u64 & !0xF);
+        assert_eq!(!mask + 1, board::BAR2_SIZE);
+        // Assign a >4G base.
+        d.write32(slot_lo, 0x0010_0000).unwrap();
+        d.write32(slot_hi, 0x1).unwrap();
+        assert_eq!(d.bars().base(2), Some(0x1_0010_0000));
+        // BAR reads reflect the 64-bit base.
+        assert_eq!(d.read32(slot_hi).unwrap(), 0x1);
+    }
+
+    #[test]
+    fn command_gates() {
+        let mut d = dev();
+        assert!(!d.mem_enabled());
+        assert!(!d.bus_master());
+        d.write32(regs::COMMAND, (cmd::MEM_ENABLE | cmd::BUS_MASTER) as u32)
+            .unwrap();
+        assert!(d.mem_enabled());
+        assert!(d.bus_master());
+    }
+
+    #[test]
+    fn msi_enable_flow() {
+        let mut d = dev();
+        // Guest writes address/data then sets enable + MME=1 (2 vectors).
+        d.write32(regs::MSI_CAP + 4, 0xFEE0_0000).unwrap();
+        d.write32(regs::MSI_CAP + 8, 0).unwrap();
+        d.write32(regs::MSI_CAP + 12, 0x4041).unwrap();
+        d.write32(regs::MSI_CAP, (1 | (1 << 4)) << 16).unwrap();
+        let m = d.msi();
+        assert!(m.enabled);
+        assert_eq!(m.vectors(), 2);
+        assert_eq!(m.address, 0xFEE0_0000);
+        assert_eq!(m.data, 0x4041);
+    }
+
+    #[test]
+    fn msi_mme_clamped_to_capability() {
+        let mut d = dev();
+        // Ask for 32 vectors (MME=5); device only advertises 4 (MMC=2).
+        d.write32(regs::MSI_CAP, (1 | (5 << 4)) << 16).unwrap();
+        assert_eq!(d.msi().vectors(), board::MSI_VECTORS);
+    }
+
+    #[test]
+    fn ro_regs_ignore_writes() {
+        let mut d = dev();
+        d.write32(regs::VENDOR_ID, 0xdead_beef).unwrap();
+        let id = d.read32(regs::VENDOR_ID).unwrap();
+        assert_eq!(id & 0xFFFF, board::VENDOR_ID as u32);
+    }
+
+    #[test]
+    fn unaligned_rejected() {
+        let d = dev();
+        assert!(d.read32(2).is_err());
+        assert!(d.read32(254).is_err());
+    }
+}

@@ -1,0 +1,41 @@
+//! PCIe substrate: configuration space, BAR decode, MSI capability,
+//! a TLP codec (for the vpcie-style low-level baseline of §V), and the
+//! **PCIe FPGA pseudo device** — the VMM-side half of the co-simulation
+//! link (paper §II).
+//!
+//! The pseudo device models the target FPGA board's PCIe personality
+//! (the NetFPGA SUME in the paper): BAR count/sizes and MSI
+//! capabilities, so the guest driver probes and binds to exactly what
+//! it would see on real hardware.
+
+pub mod bar;
+pub mod config_space;
+pub mod device;
+pub mod tlp;
+
+pub use bar::{BarDef, BarKind, BarSet};
+pub use config_space::ConfigSpace;
+pub use device::{DmaTarget, IrqSink, PcieFpgaDevice, PseudoDeviceStats};
+pub use tlp::Tlp;
+
+/// The FPGA board personality used throughout (NetFPGA SUME-like).
+pub mod board {
+    /// Xilinx vendor id.
+    pub const VENDOR_ID: u16 = 0x10EE;
+    /// Device id used by the reference platform bitstream.
+    pub const DEVICE_ID: u16 = 0x7028;
+    /// BAR0: control/status + DMA registers (64 KiB, 32-bit, non-prefetchable).
+    pub const BAR0_SIZE: u64 = 64 * 1024;
+    /// BAR2: bulk window (1 MiB) — exercised by stress tests.
+    pub const BAR2_SIZE: u64 = 1024 * 1024;
+    /// Number of MSI vectors advertised.
+    pub const MSI_VECTORS: u16 = 4;
+    /// Subsystem id (NetFPGA SUME).
+    pub const SUBSYS_ID: u16 = 0x0007;
+    /// Canonical guest-physical BAR placements (what the guest "BIOS"
+    /// assigns at enumeration; the TLP-mode bridge needs them to
+    /// reverse-map bus addresses — DESIGN.md documents this static
+    /// assignment in lieu of forwarding CfgWr TLPs).
+    pub const BAR0_GPA: u64 = 0xF000_0000;
+    pub const BAR2_GPA: u64 = 0xF800_0000;
+}

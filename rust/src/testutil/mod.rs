@@ -1,0 +1,9 @@
+//! Test utilities: a deterministic PRNG and a small property-testing
+//! helper (the vendored offline crate set has no `proptest`; DESIGN.md
+//! §4 documents this substitution).
+
+pub mod prop;
+pub mod rng;
+
+pub use prop::{forall, Gen};
+pub use rng::XorShift64;

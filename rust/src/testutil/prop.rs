@@ -1,0 +1,115 @@
+//! Minimal property-testing helper (offline substitute for `proptest`).
+//!
+//! `forall(seed, cases, gen, prop)` runs `prop` over `cases` random
+//! inputs drawn by `gen`; on failure it re-derives and prints the
+//! failing case's seed so the exact input is reproducible with
+//! `forall_one`. No shrinking — generators are kept small-biased
+//! instead (sizes are drawn log-uniformly).
+
+use super::rng::XorShift64;
+
+/// Generator context handed to property generators.
+pub struct Gen {
+    pub rng: XorShift64,
+}
+
+impl Gen {
+    /// Log-uniform size in `[1, max]` — biases toward small cases the
+    /// way proptest's sizing does, so failures stay readable.
+    pub fn size(&mut self, max: usize) -> usize {
+        let bits = 64 - (max as u64).leading_zeros() as usize;
+        let b = self.rng.range(0, bits.saturating_sub(1));
+        let hi = (1usize << b).min(max);
+        self.rng.range(hi.max(1) / 2 + 1, hi).max(1)
+    }
+}
+
+/// Run `prop` on `cases` generated inputs. Panics (with the case seed)
+/// on the first failure.
+pub fn forall<T: std::fmt::Debug>(
+    seed: u64,
+    cases: usize,
+    mut gen: impl FnMut(&mut Gen) -> T,
+    mut prop: impl FnMut(&T) -> std::result::Result<(), String>,
+) {
+    for case in 0..cases {
+        let case_seed = seed
+            .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            .wrapping_add(case as u64);
+        let mut g = Gen {
+            rng: XorShift64::new(case_seed),
+        };
+        let input = gen(&mut g);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property failed on case {case}/{cases} (case_seed={case_seed:#x}):\n  \
+                 {msg}\n  input: {input:?}"
+            );
+        }
+    }
+}
+
+/// Re-run a single case from a printed `case_seed` (debug aid).
+pub fn forall_one<T: std::fmt::Debug>(
+    case_seed: u64,
+    mut gen: impl FnMut(&mut Gen) -> T,
+    prop: impl FnOnce(&T) -> std::result::Result<(), String>,
+) {
+    let mut g = Gen {
+        rng: XorShift64::new(case_seed),
+    };
+    let input = gen(&mut g);
+    if let Err(msg) = prop(&input) {
+        panic!("property failed (case_seed={case_seed:#x}): {msg}\n  input: {input:?}");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_passes_trivial_property() {
+        forall(
+            1,
+            200,
+            |g| { let n = g.size(64); g.rng.vec_i32(n) },
+            |v| {
+                let mut s = v.clone();
+                s.sort_unstable();
+                if s.len() == v.len() {
+                    Ok(())
+                } else {
+                    Err("length changed".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn forall_reports_failure() {
+        forall(
+            2,
+            50,
+            |g| g.rng.range(0, 100),
+            |&v| if v < 1000 { Err(format!("v={v}")) } else { Ok(()) },
+        );
+    }
+
+    #[test]
+    fn size_is_bounded_and_small_biased() {
+        let mut g = Gen {
+            rng: XorShift64::new(3),
+        };
+        let mut small = 0;
+        for _ in 0..1000 {
+            let s = g.size(1024);
+            assert!((1..=1024).contains(&s));
+            if s <= 64 {
+                small += 1;
+            }
+        }
+        assert!(small > 300, "not small-biased: {small}");
+    }
+}

@@ -1,0 +1,387 @@
+//! The sorting-offload device driver (kernel-module analogue).
+//!
+//! Probe sequence, BAR sizing, command-register and MSI setup, DMA
+//! buffer management, descriptor-free (direct register mode) DMA
+//! programming and interrupt handling — the exact code paths a Linux
+//! driver for the paper's platform exercises, expressed over the
+//! [`GuestEnv`] MMIO interface so they run identically against the
+//! HDL simulation and (hypothetically) real hardware.
+//!
+//! Fault injection ([`FaultInjection`]) reproduces the bug classes the
+//! paper's debugging story is about: forgetting to start a DMA
+//! channel (system appears to hang awaiting an interrupt), failing to
+//! acknowledge an IRQ, and mis-sized transfers.
+
+use std::time::Duration;
+
+use crate::hdl::dma::{cr, regs as dma_regs, sr};
+use crate::hdl::regfile::{regs as rf_regs, ID_VALUE};
+use crate::pcie::board;
+use crate::pcie::config_space::{cmd, regs as cfg_regs};
+use crate::vm::mem::DmaBuf;
+use crate::vm::vmm::{GuestEnv, BAR0_GPA, BAR2_GPA};
+use crate::{Error, Result};
+
+/// BAR0 offsets of the two IP blocks.
+pub const REGFILE_BASE: u64 = 0x0000;
+pub const DMA_BASE: u64 = 0x1000;
+
+/// MSI vector assignments (bridge irq pins).
+pub const IRQ_MM2S: u16 = 0;
+pub const IRQ_S2MM: u16 = 1;
+pub const IRQ_TEST: u16 = 2;
+
+/// How the driver waits for DMA completion.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CompletionMode {
+    /// MSI interrupt (normal operation).
+    Irq,
+    /// Poll DMASR (fallback / perf comparison).
+    Poll,
+}
+
+/// Deliberate driver bugs for the debugging scenarios.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct FaultInjection {
+    /// Forget to set DMACR.RS before writing LENGTH — the transfer
+    /// never starts and the driver hangs awaiting an IRQ (the paper's
+    /// canonical "system hangs, reboot and guess" scenario).
+    pub skip_run_start: bool,
+    /// Do not acknowledge (W1C) the completion IRQ.
+    pub skip_irq_ack: bool,
+    /// Program a misaligned transfer length (→ DMAIntErr).
+    pub bad_length: bool,
+}
+
+/// Driver lifecycle state (visible to the debug monitor).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DriverState {
+    Unbound,
+    Probed,
+    Ready,
+    Submitted,
+    Complete,
+    Failed,
+}
+
+/// Per-transfer result statistics.
+#[derive(Debug, Clone, Default)]
+pub struct XferStats {
+    pub records: u64,
+    pub irqs_taken: u64,
+    pub polls: u64,
+    pub mmio_reads: u64,
+}
+
+/// The driver instance.
+pub struct SortDriver {
+    pub state: DriverState,
+    pub mode: CompletionMode,
+    pub faults: FaultInjection,
+    /// DMA buffers (src = MM2S source, dst = S2MM destination).
+    pub src: Option<DmaBuf>,
+    pub dst: Option<DmaBuf>,
+    /// Record length in words (fixed by the hardware sorter).
+    pub n: usize,
+    pub stats: XferStats,
+    /// Completion timeout (a hung device is reported, not spun forever).
+    pub timeout: Duration,
+}
+
+impl SortDriver {
+    pub fn new(n: usize) -> Self {
+        Self {
+            state: DriverState::Unbound,
+            mode: CompletionMode::Irq,
+            faults: FaultInjection::default(),
+            src: None,
+            dst: None,
+            n,
+            stats: XferStats::default(),
+            timeout: Duration::from_secs(10),
+        }
+    }
+
+    fn rec_bytes(&self) -> u32 {
+        (self.n * 4) as u32
+    }
+
+    /// PCI probe: identify the device, size + assign BARs, enable
+    /// memory/bus-master, configure MSI, verify the platform ID, and
+    /// allocate DMA buffers. Equivalent to the kernel module's
+    /// `probe()` + `open()`.
+    pub fn probe(&mut self, env: &mut GuestEnv) -> Result<()> {
+        env.state("probe:config")?;
+        // --- config space: identify ---
+        let id = env.vmm.dev.config.read32(cfg_regs::VENDOR_ID)?;
+        let (vendor, device) = ((id & 0xFFFF) as u16, (id >> 16) as u16);
+        if vendor != board::VENDOR_ID || device != board::DEVICE_ID {
+            self.state = DriverState::Failed;
+            return Err(Error::vm(format!(
+                "probe: unexpected id {vendor:04x}:{device:04x}"
+            )));
+        }
+        // --- BAR sizing protocol + assignment ---
+        for (slot_off, gpa) in [(0u16, BAR0_GPA), (8u16, BAR2_GPA)] {
+            let off = cfg_regs::BAR0 + slot_off;
+            env.vmm.dev.config.write32(off, u32::MAX)?;
+            let mask = env.vmm.dev.config.read32(off)?;
+            let size = !(mask as u64 & !0xF) + 1;
+            if size == 0 {
+                self.state = DriverState::Failed;
+                return Err(Error::vm(format!("probe: BAR at {off:#x} reports size 0")));
+            }
+            env.vmm.dev.config.write32(off, gpa as u32)?;
+            if slot_off == 8 {
+                // 64-bit BAR: high half.
+                env.vmm.dev.config.write32(off + 4, (gpa >> 32) as u32)?;
+            }
+        }
+        // --- command register: MEM + BME ---
+        env.vmm
+            .dev
+            .config
+            .write32(cfg_regs::COMMAND, (cmd::MEM_ENABLE | cmd::BUS_MASTER) as u32)?;
+        // --- MSI: address/data + enable 4 vectors (MME=2) ---
+        env.vmm.dev.config.write32(cfg_regs::MSI_CAP + 4, 0xFEE0_0000)?;
+        env.vmm.dev.config.write32(cfg_regs::MSI_CAP + 8, 0)?;
+        env.vmm.dev.config.write32(cfg_regs::MSI_CAP + 12, 0x0040)?;
+        env.vmm
+            .dev
+            .config
+            .write32(cfg_regs::MSI_CAP, (1 | (2 << 4)) << 16)?;
+
+        env.state("probe:ident")?;
+        // --- platform sanity: ID + scratch ---
+        let id = env.read32(0, REGFILE_BASE + rf_regs::ID as u64)?;
+        if id != ID_VALUE {
+            self.state = DriverState::Failed;
+            return Err(Error::vm(format!(
+                "probe: platform id {id:#010x} != {ID_VALUE:#010x}"
+            )));
+        }
+        env.write32(0, REGFILE_BASE + rf_regs::SCRATCH as u64, 0x5A5A_A5A5)?;
+        let back = env.read32(0, REGFILE_BASE + rf_regs::SCRATCH as u64)?;
+        if back != 0x5A5A_A5A5 {
+            self.state = DriverState::Failed;
+            return Err(Error::vm(format!("probe: scratch mismatch {back:#x}")));
+        }
+        self.state = DriverState::Probed;
+
+        env.state("probe:buffers")?;
+        // --- DMA buffers ---
+        self.src = Some(env.vmm.mem.alloc(self.rec_bytes())?);
+        self.dst = Some(env.vmm.mem.alloc(self.rec_bytes())?);
+
+        // --- put both DMA channels in run state ---
+        self.channel_init(env)?;
+        self.state = DriverState::Ready;
+        env.state("probe:done")?;
+        Ok(())
+    }
+
+    /// Reset + start both DMA channels (DMACR.RS, IOC irq enable).
+    fn channel_init(&mut self, env: &mut GuestEnv) -> Result<()> {
+        let irq_en = if self.mode == CompletionMode::Irq {
+            cr::IOC_IRQ_EN | cr::ERR_IRQ_EN
+        } else {
+            0
+        };
+        for base in [dma_regs::MM2S_DMACR, dma_regs::S2MM_DMACR] {
+            env.write32(0, DMA_BASE + base as u64, cr::RESET)?;
+            if !(self.faults.skip_run_start) {
+                env.write32(0, DMA_BASE + base as u64, cr::RS | irq_en)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Configure the sort order (regfile CONTROL bit 0).
+    pub fn set_descending(&mut self, env: &mut GuestEnv, desc: bool) -> Result<()> {
+        env.write32(0, REGFILE_BASE + rf_regs::CONTROL as u64, desc as u32)
+    }
+
+    /// Offload one record: stage input, program S2MM then MM2S, wait
+    /// for completion, read back the sorted result.
+    pub fn sort_record(&mut self, env: &mut GuestEnv, data: &[i32]) -> Result<Vec<i32>> {
+        if self.state != DriverState::Ready && self.state != DriverState::Complete {
+            return Err(Error::vm(format!(
+                "sort_record in state {:?}",
+                self.state
+            )));
+        }
+        if data.len() != self.n {
+            return Err(Error::vm(format!(
+                "record length {} != hardware N {}",
+                data.len(),
+                self.n
+            )));
+        }
+        let src = self.src.ok_or_else(|| Error::vm("no src buffer"))?;
+        let dst = self.dst.ok_or_else(|| Error::vm("no dst buffer"))?;
+
+        env.state("xfer:stage")?;
+        env.vmm.mem.write_i32(src.addr, data)?;
+        self.state = DriverState::Submitted;
+
+        // S2MM first (sink ready before source floods), then MM2S —
+        // the order the Xilinx driver uses.
+        env.state("xfer:program_s2mm")?;
+        env.write32(0, DMA_BASE + dma_regs::S2MM_DA as u64, dst.addr as u32)?;
+        env.write32(0, DMA_BASE + dma_regs::S2MM_DA_MSB as u64, (dst.addr >> 32) as u32)?;
+        let len = if self.faults.bad_length {
+            self.rec_bytes() - 4
+        } else {
+            self.rec_bytes()
+        };
+        env.write32(0, DMA_BASE + dma_regs::S2MM_LENGTH as u64, len)?;
+
+        env.state("xfer:program_mm2s")?;
+        env.write32(0, DMA_BASE + dma_regs::MM2S_SA as u64, src.addr as u32)?;
+        env.write32(0, DMA_BASE + dma_regs::MM2S_SA_MSB as u64, (src.addr >> 32) as u32)?;
+        env.write32(0, DMA_BASE + dma_regs::MM2S_LENGTH as u64, len)?;
+
+        env.state("xfer:wait")?;
+        self.wait_complete(env)?;
+
+        env.state("xfer:readback")?;
+        let out = env.vmm.mem.read_i32(dst.addr, self.n)?;
+        self.state = DriverState::Complete;
+        self.stats.records += 1;
+        Ok(out)
+    }
+
+    /// Wait for the S2MM IOC (write-back complete ⇒ data is in host
+    /// memory), then acknowledge both channels.
+    fn wait_complete(&mut self, env: &mut GuestEnv) -> Result<()> {
+        let deadline = std::time::Instant::now() + self.timeout;
+        match self.mode {
+            CompletionMode::Irq => loop {
+                let got = env.wait_irq(self.timeout.min(Duration::from_millis(50)))?;
+                match got {
+                    Some(IRQ_S2MM) => {
+                        self.stats.irqs_taken += 1;
+                        break;
+                    }
+                    Some(IRQ_MM2S) => {
+                        self.stats.irqs_taken += 1;
+                        // Read side done; ack it now.
+                        self.ack(env, dma_regs::MM2S_DMASR)?;
+                        continue;
+                    }
+                    Some(_) => continue,
+                    None => {
+                        if std::time::Instant::now() >= deadline {
+                            self.state = DriverState::Failed;
+                            return Err(Error::cosim(
+                                "DMA completion interrupt never arrived — device hung?"
+                                    .to_string(),
+                            ));
+                        }
+                    }
+                }
+            },
+            CompletionMode::Poll => loop {
+                let s = env.read32(0, DMA_BASE + dma_regs::S2MM_DMASR as u64)?;
+                self.stats.polls += 1;
+                if s & sr::DMA_INT_ERR != 0 || s & sr::ERR_IRQ != 0 {
+                    self.state = DriverState::Failed;
+                    return Err(Error::vm(format!("S2MM error, DMASR={s:#x}")));
+                }
+                if s & sr::IOC_IRQ != 0 {
+                    break;
+                }
+                if std::time::Instant::now() >= deadline {
+                    self.state = DriverState::Failed;
+                    return Err(Error::cosim("S2MM never completed (poll)".to_string()));
+                }
+            },
+        }
+        if !self.faults.skip_irq_ack {
+            self.ack(env, dma_regs::S2MM_DMASR)?;
+            if self.mode == CompletionMode::Poll {
+                self.ack(env, dma_regs::MM2S_DMASR)?;
+            }
+        }
+        // Check for latched errors either way.
+        let s = env.read32(0, DMA_BASE + dma_regs::S2MM_DMASR as u64)?;
+        if s & sr::DMA_INT_ERR != 0 {
+            self.state = DriverState::Failed;
+            return Err(Error::vm(format!("S2MM DMAIntErr, DMASR={s:#x}")));
+        }
+        Ok(())
+    }
+
+    fn ack(&mut self, env: &mut GuestEnv, sr_reg: u32) -> Result<()> {
+        env.write32(0, DMA_BASE + sr_reg as u64, sr::IOC_IRQ | sr::ERR_IRQ)
+    }
+
+    /// Fire the self-test interrupt (regfile doorbell) and wait for it
+    /// to come back — verifies the whole MSI path.
+    pub fn irq_self_test(&mut self, env: &mut GuestEnv) -> Result<Duration> {
+        let t0 = std::time::Instant::now();
+        env.write32(0, REGFILE_BASE + rf_regs::IRQ_TEST as u64, IRQ_TEST as u32)?;
+        loop {
+            match env.wait_irq(Duration::from_millis(50))? {
+                Some(IRQ_TEST) => return Ok(t0.elapsed()),
+                Some(_) => continue,
+                None => {
+                    if t0.elapsed() > self.timeout {
+                        return Err(Error::cosim("self-test IRQ lost".to_string()));
+                    }
+                }
+            }
+        }
+    }
+
+    /// Read the device's free-running cycle counter (device time).
+    pub fn read_cycles(&mut self, env: &mut GuestEnv) -> Result<u64> {
+        let lo = env.read32(0, REGFILE_BASE + rf_regs::CYCLES_LO as u64)?;
+        let hi = env.read32(0, REGFILE_BASE + rf_regs::CYCLES_HI as u64)?;
+        Ok(((hi as u64) << 32) | lo as u64)
+    }
+
+    /// Release buffers (module unload analogue).
+    pub fn release(&mut self, env: &mut GuestEnv) -> Result<()> {
+        if let Some(b) = self.src.take() {
+            env.vmm.mem.free(b);
+        }
+        if let Some(b) = self.dst.take() {
+            env.vmm.mem.free(b);
+        }
+        self.state = DriverState::Unbound;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::link::{Endpoint, LinkMode};
+    use crate::vm::vmm::{NoopHook, Vmm};
+
+    #[test]
+    fn probe_rejects_wrong_record_length() {
+        let (vm_ep, _hdl) = Endpoint::inproc_pair();
+        let mut vmm = Vmm::new(vm_ep, LinkMode::Mmio, 64 * 1024);
+        let mut hook = NoopHook;
+        let mut env = GuestEnv::new(&mut vmm, &mut hook);
+        let mut drv = SortDriver::new(1024);
+        drv.state = DriverState::Ready;
+        drv.src = Some(crate::vm::mem::DmaBuf { addr: 0, len: 4096 });
+        drv.dst = Some(crate::vm::mem::DmaBuf { addr: 4096, len: 4096 });
+        let err = drv.sort_record(&mut env, &[1, 2, 3]).unwrap_err();
+        assert!(err.to_string().contains("record length"));
+    }
+
+    #[test]
+    fn sort_record_requires_ready_state() {
+        let (vm_ep, _hdl) = Endpoint::inproc_pair();
+        let mut vmm = Vmm::new(vm_ep, LinkMode::Mmio, 64 * 1024);
+        let mut hook = NoopHook;
+        let mut env = GuestEnv::new(&mut vmm, &mut hook);
+        let mut drv = SortDriver::new(8);
+        let err = drv.sort_record(&mut env, &[0; 8]).unwrap_err();
+        assert!(err.to_string().contains("state"));
+    }
+}

@@ -1,0 +1,13 @@
+//! Guest software stack: the sorting-offload device driver and the
+//! applications above it.
+//!
+//! These are the unmodified-between-sim-and-hardware software layers
+//! of the paper: the driver performs the identical PCI probe, BAR
+//! setup, MSI configuration, DMA programming and ISR sequence a Linux
+//! kernel module would; the apps exercise the driver the way the
+//! paper's sort benchmark does.
+
+pub mod app;
+pub mod driver;
+
+pub use driver::{CompletionMode, DriverState, FaultInjection, SortDriver};

@@ -1,0 +1,256 @@
+//! Guest physical memory + DMA buffer allocator.
+//!
+//! Models the guest RAM that QEMU would expose to the pseudo device:
+//! flat, bounds-checked, with a simple first-fit allocator standing in
+//! for the guest kernel's `dma_alloc_coherent` (buffers must be
+//! beat-aligned for the 128-bit AXI data path).
+
+use crate::pcie::DmaTarget;
+use crate::{Error, Result};
+
+/// Alignment required for DMA buffers (one 128-bit beat).
+pub const DMA_ALIGN: u64 = 16;
+
+/// A DMA buffer handle (guest-physical address + length).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DmaBuf {
+    pub addr: u64,
+    pub len: u32,
+}
+
+/// Guest physical memory.
+pub struct GuestMem {
+    ram: Vec<u8>,
+    /// Free regions (addr, len), sorted by addr.
+    free: Vec<(u64, u64)>,
+    pub dma_reads: u64,
+    pub dma_writes: u64,
+}
+
+impl GuestMem {
+    /// `size` bytes of RAM, fully available for allocation.
+    pub fn new(size: usize) -> Self {
+        Self {
+            ram: vec![0; size],
+            free: vec![(0, size as u64)],
+            dma_reads: 0,
+            dma_writes: 0,
+        }
+    }
+
+    pub fn size(&self) -> usize {
+        self.ram.len()
+    }
+
+    fn check(&self, addr: u64, len: u64) -> Result<usize> {
+        let end = addr
+            .checked_add(len)
+            .ok_or_else(|| Error::vm(format!("address overflow {addr:#x}+{len}")))?;
+        if end > self.ram.len() as u64 {
+            return Err(Error::vm(format!(
+                "access [{addr:#x}..{end:#x}) outside guest RAM ({:#x})",
+                self.ram.len()
+            )));
+        }
+        Ok(addr as usize)
+    }
+
+    /// CPU-side read (driver/app view of its own memory).
+    pub fn read(&self, addr: u64, len: u32) -> Result<&[u8]> {
+        let a = self.check(addr, len as u64)?;
+        Ok(&self.ram[a..a + len as usize])
+    }
+
+    /// CPU-side write.
+    pub fn write(&mut self, addr: u64, data: &[u8]) -> Result<()> {
+        let a = self.check(addr, data.len() as u64)?;
+        self.ram[a..a + data.len()].copy_from_slice(data);
+        Ok(())
+    }
+
+    /// Read a little-endian i32 slice (driver result readback).
+    pub fn read_i32(&self, addr: u64, count: usize) -> Result<Vec<i32>> {
+        let raw = self.read(addr, (count * 4) as u32)?;
+        Ok(raw
+            .chunks_exact(4)
+            .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    /// Write a little-endian i32 slice (driver input staging).
+    pub fn write_i32(&mut self, addr: u64, data: &[i32]) -> Result<()> {
+        let mut bytes = Vec::with_capacity(data.len() * 4);
+        for v in data {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        self.write(addr, &bytes)
+    }
+
+    /// Allocate a DMA-coherent buffer (first fit, beat-aligned).
+    pub fn alloc(&mut self, len: u32) -> Result<DmaBuf> {
+        let want = (len as u64 + DMA_ALIGN - 1) & !(DMA_ALIGN - 1);
+        for i in 0..self.free.len() {
+            let (base, flen) = self.free[i];
+            let aligned = (base + DMA_ALIGN - 1) & !(DMA_ALIGN - 1);
+            let pad = aligned - base;
+            if flen >= pad + want {
+                // Carve [aligned, aligned+want).
+                let mut repl = Vec::new();
+                if pad > 0 {
+                    repl.push((base, pad));
+                }
+                if flen > pad + want {
+                    repl.push((aligned + want, flen - pad - want));
+                }
+                self.free.splice(i..=i, repl);
+                return Ok(DmaBuf { addr: aligned, len });
+            }
+        }
+        Err(Error::vm(format!("out of DMA memory for {len} bytes")))
+    }
+
+    /// Free a previously allocated buffer (coalescing).
+    pub fn free(&mut self, buf: DmaBuf) {
+        let want = (buf.len as u64 + DMA_ALIGN - 1) & !(DMA_ALIGN - 1);
+        let pos = self.free.partition_point(|&(a, _)| a < buf.addr);
+        self.free.insert(pos, (buf.addr, want));
+        // Coalesce neighbours.
+        let mut i = pos.saturating_sub(1);
+        while i + 1 < self.free.len() {
+            let (a, l) = self.free[i];
+            let (b, m) = self.free[i + 1];
+            if a + l == b {
+                self.free[i] = (a, l + m);
+                self.free.remove(i + 1);
+            } else {
+                i += 1;
+            }
+            if i > pos + 1 {
+                break;
+            }
+        }
+    }
+
+    /// Bytes currently allocatable (diagnostics).
+    pub fn free_bytes(&self) -> u64 {
+        self.free.iter().map(|&(_, l)| l).sum()
+    }
+}
+
+impl DmaTarget for GuestMem {
+    fn dma_read(&self, addr: u64, len: u32) -> Result<Vec<u8>> {
+        let a = self.check(addr, len as u64)?;
+        Ok(self.ram[a..a + len as usize].to_vec())
+    }
+
+    fn dma_write(&mut self, addr: u64, data: &[u8]) -> Result<()> {
+        let a = self.check(addr, data.len() as u64)?;
+        self.ram[a..a + data.len()].copy_from_slice(data);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::forall;
+
+    #[test]
+    fn rw_roundtrip_and_bounds() {
+        let mut m = GuestMem::new(4096);
+        m.write(0x10, &[1, 2, 3]).unwrap();
+        assert_eq!(m.read(0x10, 3).unwrap(), &[1, 2, 3]);
+        assert!(m.read(4095, 2).is_err());
+        assert!(m.write(u64::MAX, &[0]).is_err());
+    }
+
+    #[test]
+    fn i32_helpers() {
+        let mut m = GuestMem::new(4096);
+        m.write_i32(0x100, &[-1, 7, i32::MIN]).unwrap();
+        assert_eq!(m.read_i32(0x100, 3).unwrap(), vec![-1, 7, i32::MIN]);
+    }
+
+    #[test]
+    fn alloc_is_aligned_and_disjoint() {
+        let mut m = GuestMem::new(64 * 1024);
+        let a = m.alloc(100).unwrap();
+        let b = m.alloc(4096).unwrap();
+        assert_eq!(a.addr % DMA_ALIGN, 0);
+        assert_eq!(b.addr % DMA_ALIGN, 0);
+        let a_end = a.addr + ((a.len as u64 + 15) & !15);
+        assert!(b.addr >= a_end || a.addr >= b.addr + 4096);
+    }
+
+    #[test]
+    fn free_coalesces() {
+        let mut m = GuestMem::new(4096);
+        let a = m.alloc(1024).unwrap();
+        let b = m.alloc(1024).unwrap();
+        let before = m.free_bytes();
+        m.free(a);
+        m.free(b);
+        assert_eq!(m.free_bytes(), before + 2048);
+        // After coalescing we can allocate the whole thing again.
+        assert!(m.alloc(4096 - 16).is_ok());
+    }
+
+    #[test]
+    fn oom_reports_error() {
+        let mut m = GuestMem::new(1024);
+        assert!(m.alloc(2048).is_err());
+    }
+
+    #[test]
+    fn dma_target_counts_nothing_but_works() {
+        let mut m = GuestMem::new(4096);
+        m.dma_write(0x20, &[9; 8]).unwrap();
+        assert_eq!(m.dma_read(0x20, 8).unwrap(), vec![9; 8]);
+        assert!(m.dma_read(4090, 100).is_err());
+    }
+
+    #[test]
+    fn prop_alloc_free_never_overlaps_and_never_leaks() {
+        forall(
+            0xA110C,
+            60,
+            |g| {
+                let n = g.size(30);
+                (0..n)
+                    .map(|_| (g.rng.range(1, 2000) as u32, g.rng.chance(1, 3)))
+                    .collect::<Vec<_>>()
+            },
+            |ops| {
+                let mut m = GuestMem::new(64 * 1024);
+                let total = m.free_bytes();
+                let mut live: Vec<DmaBuf> = Vec::new();
+                for &(len, do_free) in ops {
+                    if do_free && !live.is_empty() {
+                        let b = live.remove(live.len() / 2);
+                        m.free(b);
+                    } else if let Ok(b) = m.alloc(len) {
+                        // Overlap check against live buffers.
+                        for o in &live {
+                            let b_end = b.addr + ((b.len as u64 + 15) & !15);
+                            let o_end = o.addr + ((o.len as u64 + 15) & !15);
+                            if b.addr < o_end && o.addr < b_end {
+                                return Err(format!("overlap {b:?} {o:?}"));
+                            }
+                        }
+                        live.push(b);
+                    }
+                }
+                for b in live.drain(..) {
+                    m.free(b);
+                }
+                if m.free_bytes() != total {
+                    return Err(format!(
+                        "leak: {} of {total} bytes after free-all",
+                        m.free_bytes()
+                    ));
+                }
+                Ok(())
+            },
+        );
+    }
+}

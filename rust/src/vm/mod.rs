@@ -1,0 +1,27 @@
+//! Virtual-machine substrate — the "QEMU + guest OS" side of the
+//! co-simulation.
+//!
+//! The paper runs an unmodified Ubuntu guest under QEMU/KVM; the
+//! framework itself only touches the PCIe boundary (MMIO, DMA, MSI).
+//! This substrate rebuilds exactly that boundary plus the guest
+//! software that exercises it (DESIGN.md §2 documents the
+//! substitution):
+//!
+//! * [`mem`] — guest physical memory with a DMA-buffer allocator,
+//! * [`vmm`] — the VMM main loop: owns the PCIe FPGA pseudo device,
+//!   services HDL-side DMA/interrupts, delivers MSIs to the guest,
+//! * [`guest`] — the guest software stack: a kernel-module-style
+//!   sorting driver (probe / buffer management / DMA programming /
+//!   ISR) and the applications that call it,
+//! * [`monitor`] — the GDB-style debug monitor: breakpoints on MMIO
+//!   and driver-state transitions, single-stepping, memory inspect
+//!   and patch — the "connect GDB to the VMM's debugging interface"
+//!   capability of the paper §II.
+
+pub mod guest;
+pub mod mem;
+pub mod monitor;
+pub mod vmm;
+
+pub use mem::GuestMem;
+pub use vmm::{GuestEnv, Vmm};

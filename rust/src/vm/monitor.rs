@@ -1,0 +1,343 @@
+//! GDB-style debug monitor.
+//!
+//! The paper §II: *"our co-simulation framework allows developers to
+//! connect GDB to the VMM's debugging interface to debug the operating
+//! system and device driver code, enabling advanced functionality such
+//! as single-stepping kernel instructions, including inside interrupt
+//! handlers, and monitoring or even modifying register and memory
+//! contents."*
+//!
+//! The monitor runs the guest (driver + app) on its own thread and
+//! interposes on every guest-visible event via [`DebugHook`]:
+//! breakpoints on MMIO accesses and driver-state transitions,
+//! single-stepping event by event, and — while stopped — reading and
+//! patching guest memory and inspecting device state. Driver "states"
+//! are the kernel-instruction analogue at the granularity the FSM
+//! substitution provides (DESIGN.md §2).
+
+use std::sync::mpsc::{Receiver, Sender};
+use std::time::Duration;
+
+use crate::vm::vmm::{DebugEvent, DebugHook, GuestEnv, MemPatch, Vmm};
+use crate::{Error, Result};
+
+/// Where execution stops.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Breakpoint {
+    /// Any MMIO access to (bar, offset).
+    Mmio { bar: u8, offset: u64 },
+    /// A driver state transition with this name (e.g. "xfer:wait").
+    State(String),
+    /// Any interrupt taken by the guest.
+    AnyIrq,
+}
+
+impl Breakpoint {
+    fn matches(&self, ev: &DebugEvent) -> bool {
+        match (self, ev) {
+            (Breakpoint::Mmio { bar, offset }, DebugEvent::Mmio { bar: b, offset: o, .. }) => {
+                bar == b && offset == o
+            }
+            (Breakpoint::State(name), DebugEvent::DriverState { name: n }) => name == n,
+            (Breakpoint::AnyIrq, DebugEvent::Irq { .. }) => true,
+            _ => false,
+        }
+    }
+}
+
+/// A stop notification sent to the controller.
+#[derive(Debug, Clone)]
+pub struct StopInfo {
+    /// Why we stopped ("breakpoint", "step").
+    pub reason: String,
+    /// The event at which we stopped (Debug-formatted).
+    pub event: String,
+    /// MMIO ops performed so far (progress indicator).
+    pub mmio_ops: u64,
+}
+
+/// Commands from the controller to the stopped guest.
+enum Cmd {
+    Continue,
+    Step,
+    AddBreak(Breakpoint),
+    ClearBreaks,
+    ReadMem { addr: u64, len: u32, reply: Sender<Result<Vec<u8>>> },
+    Patch(MemPatch),
+    /// Read device/link statistics snapshot.
+    DevInfo { reply: Sender<String> },
+}
+
+/// The hook living inside the guest thread.
+struct MonitorHook {
+    bps: Vec<Breakpoint>,
+    stepping: bool,
+    stop_tx: Sender<StopInfo>,
+    cmd_rx: Receiver<Cmd>,
+}
+
+impl MonitorHook {
+    /// Drain non-blocking commands (breakpoints may be added while
+    /// running).
+    fn drain_async(&mut self, patches: &mut Vec<MemPatch>, vmm: &Vmm) {
+        while let Ok(cmd) = self.cmd_rx.try_recv() {
+            self.apply_cmd(cmd, patches, vmm, &mut false);
+        }
+    }
+
+    /// Apply one command; sets `resume` when execution should go on.
+    fn apply_cmd(
+        &mut self,
+        cmd: Cmd,
+        patches: &mut Vec<MemPatch>,
+        vmm: &Vmm,
+        resume: &mut bool,
+    ) {
+        match cmd {
+            Cmd::Continue => {
+                self.stepping = false;
+                *resume = true;
+            }
+            Cmd::Step => {
+                self.stepping = true;
+                *resume = true;
+            }
+            Cmd::AddBreak(b) => self.bps.push(b),
+            Cmd::ClearBreaks => self.bps.clear(),
+            Cmd::ReadMem { addr, len, reply } => {
+                let _ = reply.send(vmm.mem.read(addr, len).map(|s| s.to_vec()));
+            }
+            Cmd::Patch(p) => patches.push(p),
+            Cmd::DevInfo { reply } => {
+                let s = format!(
+                    "stats={:?} link_sent={} link_bytes={}",
+                    vmm.dev.stats,
+                    vmm.dev.link().msgs_sent(),
+                    vmm.dev.link().bytes_sent(),
+                );
+                let _ = reply.send(s);
+            }
+        }
+    }
+}
+
+impl DebugHook for MonitorHook {
+    fn on_event(&mut self, ev: &DebugEvent, vmm: &Vmm) -> Vec<MemPatch> {
+        let mut patches = Vec::new();
+        self.drain_async(&mut patches, vmm);
+        let hit = self.bps.iter().any(|b| b.matches(ev));
+        if !(hit || self.stepping) {
+            return patches;
+        }
+        let reason = if hit { "breakpoint" } else { "step" };
+        let _ = self.stop_tx.send(StopInfo {
+            reason: reason.to_string(),
+            event: format!("{ev:?}"),
+            mmio_ops: vmm.mmio_ops,
+        });
+        // Blocked until the controller resumes us.
+        let mut resume = false;
+        while !resume {
+            match self.cmd_rx.recv_timeout(Duration::from_secs(60)) {
+                Ok(cmd) => self.apply_cmd(cmd, &mut patches, vmm, &mut resume),
+                Err(_) => break, // controller gone: resume to avoid deadlock
+            }
+        }
+        patches
+    }
+}
+
+/// The controller handle (lives on the debugger's thread).
+pub struct Monitor {
+    cmd_tx: Sender<Cmd>,
+    stop_rx: Receiver<StopInfo>,
+    handle: Option<std::thread::JoinHandle<Result<String>>>,
+}
+
+impl Monitor {
+    /// Launch a guest session under the monitor. `body` is the guest
+    /// program (driver + app calls) run against the provided VMM.
+    pub fn launch<F>(mut vmm: Vmm, breakpoints: Vec<Breakpoint>, body: F) -> Monitor
+    where
+        F: FnOnce(&mut GuestEnv) -> Result<String> + Send + 'static,
+    {
+        let (stop_tx, stop_rx) = std::sync::mpsc::channel();
+        let (cmd_tx, cmd_rx) = std::sync::mpsc::channel();
+        let handle = std::thread::spawn(move || {
+            let mut hook = MonitorHook {
+                bps: breakpoints,
+                stepping: false,
+                stop_tx,
+                cmd_rx,
+            };
+            let mut env = GuestEnv::new(&mut vmm, &mut hook);
+            body(&mut env)
+        });
+        Monitor {
+            cmd_tx,
+            stop_rx,
+            handle: Some(handle),
+        }
+    }
+
+    /// Wait for the next stop (or None if the guest finished).
+    pub fn wait_stop(&mut self, timeout: Duration) -> Option<StopInfo> {
+        self.stop_rx.recv_timeout(timeout).ok()
+    }
+
+    /// Resume execution.
+    pub fn cont(&self) {
+        let _ = self.cmd_tx.send(Cmd::Continue);
+    }
+
+    /// Resume for exactly one event, then stop again.
+    pub fn step(&self) {
+        let _ = self.cmd_tx.send(Cmd::Step);
+    }
+
+    pub fn add_breakpoint(&self, b: Breakpoint) {
+        let _ = self.cmd_tx.send(Cmd::AddBreak(b));
+    }
+
+    pub fn clear_breakpoints(&self) {
+        let _ = self.cmd_tx.send(Cmd::ClearBreaks);
+    }
+
+    /// Read guest memory while stopped.
+    pub fn read_mem(&self, addr: u64, len: u32) -> Result<Vec<u8>> {
+        let (tx, rx) = std::sync::mpsc::channel();
+        self.cmd_tx
+            .send(Cmd::ReadMem { addr, len, reply: tx })
+            .map_err(|_| Error::vm("guest gone"))?;
+        rx.recv_timeout(Duration::from_secs(5))
+            .map_err(|_| Error::vm("read_mem timed out — guest not stopped?"))?
+    }
+
+    /// Patch guest memory; applied before the guest resumes.
+    pub fn patch_mem(&self, addr: u64, data: Vec<u8>) {
+        let _ = self.cmd_tx.send(Cmd::Patch(MemPatch { addr, data }));
+    }
+
+    /// Device/link statistics snapshot.
+    pub fn dev_info(&self) -> Result<String> {
+        let (tx, rx) = std::sync::mpsc::channel();
+        self.cmd_tx
+            .send(Cmd::DevInfo { reply: tx })
+            .map_err(|_| Error::vm("guest gone"))?;
+        rx.recv_timeout(Duration::from_secs(5))
+            .map_err(|_| Error::vm("dev_info timed out"))
+    }
+
+    /// Wait for the guest program to finish and return its report.
+    pub fn finish(mut self) -> Result<String> {
+        // Keep resuming through any further stops.
+        self.cont();
+        let handle = self.handle.take().unwrap();
+        loop {
+            if handle.is_finished() {
+                return handle.join().map_err(|_| Error::vm("guest panicked"))?;
+            }
+            // Absorb stops that race with completion.
+            if self.stop_rx.recv_timeout(Duration::from_millis(20)).is_ok() {
+                let _ = self.cmd_tx.send(Cmd::Continue);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::link::{Endpoint, LinkMode};
+
+    fn idle_vmm() -> Vmm {
+        let (vm_ep, hdl_ep) = Endpoint::inproc_pair();
+        // Keep the peer endpoint alive for the test duration by
+        // leaking it (tests are short-lived processes).
+        Box::leak(Box::new(hdl_ep));
+        Vmm::new(vm_ep, LinkMode::Mmio, 64 * 1024)
+    }
+
+    #[test]
+    fn breakpoint_on_state_then_continue() {
+        let vmm = idle_vmm();
+        let mut mon = Monitor::launch(
+            vmm,
+            vec![Breakpoint::State("phase2".to_string())],
+            |env| {
+                env.state("phase1")?;
+                env.state("phase2")?;
+                env.state("phase3")?;
+                Ok("done".to_string())
+            },
+        );
+        let stop = mon.wait_stop(Duration::from_secs(5)).expect("no stop");
+        assert_eq!(stop.reason, "breakpoint");
+        assert!(stop.event.contains("phase2"), "{}", stop.event);
+        assert_eq!(mon.finish().unwrap(), "done");
+    }
+
+    #[test]
+    fn single_step_walks_events() {
+        let vmm = idle_vmm();
+        let mut mon = Monitor::launch(
+            vmm,
+            vec![Breakpoint::State("a".to_string())],
+            |env| {
+                env.state("a")?;
+                env.state("b")?;
+                env.state("c")?;
+                Ok("ok".to_string())
+            },
+        );
+        let s1 = mon.wait_stop(Duration::from_secs(5)).unwrap();
+        assert!(s1.event.contains('a'));
+        mon.step();
+        let s2 = mon.wait_stop(Duration::from_secs(5)).unwrap();
+        assert_eq!(s2.reason, "step");
+        assert!(s2.event.contains('b'));
+        mon.step();
+        let s3 = mon.wait_stop(Duration::from_secs(5)).unwrap();
+        assert!(s3.event.contains('c'));
+        assert_eq!(mon.finish().unwrap(), "ok");
+    }
+
+    #[test]
+    fn read_and_patch_memory_at_stop() {
+        let mut vmm = idle_vmm();
+        vmm.mem.write(0x40, &[1, 2, 3, 4]).unwrap();
+        let mut mon = Monitor::launch(
+            vmm,
+            vec![Breakpoint::State("stop-here".to_string())],
+            |env| {
+                env.state("stop-here")?;
+                // After resume, the patch must be visible to the guest.
+                let v = env.vmm.mem.read(0x40, 4)?.to_vec();
+                Ok(format!("{v:?}"))
+            },
+        );
+        let _ = mon.wait_stop(Duration::from_secs(5)).unwrap();
+        assert_eq!(mon.read_mem(0x40, 4).unwrap(), vec![1, 2, 3, 4]);
+        mon.patch_mem(0x40, vec![9, 9, 9, 9]);
+        assert_eq!(mon.finish().unwrap(), "[9, 9, 9, 9]");
+    }
+
+    #[test]
+    fn mmio_breakpoint_and_dev_info() {
+        let vmm = idle_vmm();
+        let mut mon = Monitor::launch(
+            vmm,
+            vec![Breakpoint::Mmio { bar: 0, offset: 0x0C }],
+            |env| {
+                env.write32(0, 0x08, 1)?; // no break
+                env.write32(0, 0x0C, 2)?; // break (dropped: mem decode off)
+                Ok("fin".to_string())
+            },
+        );
+        let stop = mon.wait_stop(Duration::from_secs(5)).unwrap();
+        assert!(stop.event.contains("offset: 12") || stop.event.contains("0x"), "{}", stop.event);
+        let info = mon.dev_info().unwrap();
+        assert!(info.contains("stats="));
+        assert_eq!(mon.finish().unwrap(), "fin");
+    }
+}

@@ -1,0 +1,170 @@
+//! End-to-end integration tests: full co-simulation (VM side + HDL
+//! side) across link modes, completion modes and workloads, with
+//! results golden-checked against the AOT XLA executables.
+
+use std::time::Duration;
+
+use vmhdl::coordinator::cosim::{CoSim, CoSimCfg};
+use vmhdl::coordinator::scenario;
+use vmhdl::link::LinkMode;
+use vmhdl::runtime::GoldenModel;
+use vmhdl::testutil::XorShift64;
+use vmhdl::vm::guest::{app, CompletionMode, SortDriver};
+use vmhdl::vm::vmm::{GuestEnv, NoopHook};
+
+fn artifacts() -> std::path::PathBuf {
+    std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+#[test]
+fn offload_with_golden_check() {
+    let mut golden =
+        GoldenModel::load(&artifacts(), 1024).expect("run `make artifacts` first");
+    let rep =
+        scenario::run_sort_offload(CoSimCfg::default(), 3, 0x60D, Some(&mut golden))
+            .unwrap();
+    assert!(rep.golden_checked);
+    assert_eq!(rep.records, 3);
+    assert_eq!(rep.hdl.records_done, 3);
+}
+
+#[test]
+fn offload_in_tlp_mode() {
+    let cfg = CoSimCfg {
+        mode: LinkMode::Tlp,
+        platform: vmhdl::hdl::platform::PlatformCfg {
+            link_mode: LinkMode::Tlp,
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let rep = scenario::run_sort_offload(cfg, 2, 0x117, None).unwrap();
+    assert_eq!(rep.records, 2);
+    // TLP framing costs more wire bytes than the high-level messages.
+    assert!(rep.link_bytes > 0);
+}
+
+#[test]
+fn poll_mode_driver_completes_without_interrupts() {
+    let mut cosim = CoSim::launch(CoSimCfg::default()).unwrap();
+    let mut hook = NoopHook;
+    let mut env = GuestEnv::new(&mut cosim.vmm, &mut hook);
+    let mut drv = SortDriver::new(1024);
+    drv.mode = CompletionMode::Poll;
+    drv.timeout = Duration::from_secs(30);
+    drv.probe(&mut env).unwrap();
+    let mut rng = XorShift64::new(5);
+    let rec = rng.vec_i32(1024);
+    let out = drv.sort_record(&mut env, &rec).unwrap();
+    let mut e = rec;
+    e.sort_unstable();
+    assert_eq!(out, e);
+    assert_eq!(drv.stats.irqs_taken, 0, "poll mode must not consume irqs");
+    assert!(drv.stats.polls > 0);
+    cosim.shutdown().unwrap();
+}
+
+#[test]
+fn descending_order_via_control_register() {
+    let mut cosim = CoSim::launch(CoSimCfg::default()).unwrap();
+    let mut hook = NoopHook;
+    let mut env = GuestEnv::new(&mut cosim.vmm, &mut hook);
+    let mut drv = SortDriver::new(1024);
+    drv.timeout = Duration::from_secs(30);
+    drv.probe(&mut env).unwrap();
+    drv.set_descending(&mut env, true).unwrap();
+    let mut rng = XorShift64::new(6);
+    let rec = rng.vec_i32(1024);
+    let out = drv.sort_record(&mut env, &rec).unwrap();
+    let mut e = rec;
+    e.sort_unstable();
+    e.reverse();
+    assert_eq!(out, e);
+    // Back to ascending.
+    drv.set_descending(&mut env, false).unwrap();
+    let rec2 = rng.vec_i32(1024);
+    let out2 = drv.sort_record(&mut env, &rec2).unwrap();
+    let mut e2 = rec2;
+    e2.sort_unstable();
+    assert_eq!(out2, e2);
+    cosim.shutdown().unwrap();
+}
+
+#[test]
+fn bad_length_fault_surfaces_as_dma_error() {
+    let mut cosim = CoSim::launch(CoSimCfg::default()).unwrap();
+    let mut hook = NoopHook;
+    let mut env = GuestEnv::new(&mut cosim.vmm, &mut hook);
+    let mut drv = SortDriver::new(1024);
+    drv.faults.bad_length = true;
+    drv.timeout = Duration::from_secs(5);
+    drv.probe(&mut env).unwrap();
+    let mut rng = XorShift64::new(7);
+    let rec = rng.vec_i32(1024);
+    let err = drv.sort_record(&mut env, &rec).unwrap_err();
+    let s = err.to_string();
+    assert!(
+        s.contains("error") || s.contains("DMASR") || s.contains("Err"),
+        "unexpected failure mode: {s}"
+    );
+    cosim.shutdown().unwrap();
+}
+
+#[test]
+fn skip_irq_ack_breaks_the_second_offload_only() {
+    // The classic "works once" driver bug: a missed W1C leaves the
+    // level high, so the next completion has no rising edge → no MSI.
+    let mut cosim = CoSim::launch(CoSimCfg::default()).unwrap();
+    let mut hook = NoopHook;
+    let mut env = GuestEnv::new(&mut cosim.vmm, &mut hook);
+    let mut drv = SortDriver::new(1024);
+    drv.faults.skip_irq_ack = true;
+    drv.timeout = Duration::from_secs(2);
+    drv.probe(&mut env).unwrap();
+    let mut rng = XorShift64::new(8);
+    let r1 = rng.vec_i32(1024);
+    assert!(drv.sort_record(&mut env, &r1).is_ok(), "first offload should work");
+    drv.state = vmhdl::vm::guest::DriverState::Complete;
+    let r2 = rng.vec_i32(1024);
+    let err = drv.sort_record(&mut env, &r2).unwrap_err();
+    assert!(err.to_string().contains("never arrived"), "{err}");
+    cosim.shutdown().unwrap();
+}
+
+#[test]
+fn irq_self_test_roundtrip() {
+    let mut cosim = CoSim::launch(CoSimCfg::default()).unwrap();
+    let mut hook = NoopHook;
+    let mut env = GuestEnv::new(&mut cosim.vmm, &mut hook);
+    let mut drv = SortDriver::new(1024);
+    drv.timeout = Duration::from_secs(30);
+    drv.probe(&mut env).unwrap();
+    for _ in 0..5 {
+        let lat = drv.irq_self_test(&mut env).unwrap();
+        assert!(lat < Duration::from_secs(5));
+    }
+    cosim.shutdown().unwrap();
+}
+
+#[test]
+fn bram_bulk_window_consistency() {
+    let mut cosim = CoSim::launch(CoSimCfg::default()).unwrap();
+    let mut hook = NoopHook;
+    let mut env = GuestEnv::new(&mut cosim.vmm, &mut hook);
+    let mut drv = SortDriver::new(1024);
+    drv.timeout = Duration::from_secs(30);
+    drv.probe(&mut env).unwrap();
+    app::run_bram_stress(&mut env, 128, 0xB4A).unwrap();
+    cosim.shutdown().unwrap();
+}
+
+#[test]
+fn many_records_back_to_back() {
+    let rep = scenario::run_sort_offload(CoSimCfg::default(), 8, 0xBB, None).unwrap();
+    assert_eq!(rep.hdl.records_done, 8);
+    // Device time per record must stay in the paper's regime (a few
+    // thousand cycles each, not millions).
+    let per_record = rep.device_cycles / 8;
+    assert!(per_record > 1256, "per-record {per_record} impossibly fast");
+    assert!(per_record < 100_000, "per-record {per_record} far too slow");
+}

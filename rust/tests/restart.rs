@@ -1,0 +1,134 @@
+//! Independent-restart integration tests (paper §II): either side of
+//! the co-simulation restarts without affecting the other, over the
+//! same four-unidirectional-channel UDS topology the paper uses.
+
+use std::time::Duration;
+
+use vmhdl::coordinator::cosim::{CoSim, CoSimCfg, TransportKind};
+use vmhdl::coordinator::lifecycle::HdlThread;
+use vmhdl::testutil::XorShift64;
+use vmhdl::vm::guest::SortDriver;
+use vmhdl::vm::vmm::{GuestEnv, NoopHook};
+
+fn uds_cfg(tag: &str) -> (CoSimCfg, std::path::PathBuf) {
+    let dir = std::env::temp_dir().join(format!(
+        "vmhdl-it-restart-{tag}-{}",
+        std::process::id()
+    ));
+    let cfg = CoSimCfg {
+        transport: TransportKind::Uds(dir.clone()),
+        ..CoSimCfg::default()
+    };
+    (cfg, dir)
+}
+
+fn sort_one(env: &mut GuestEnv, drv: &mut SortDriver, rng: &mut XorShift64) {
+    let rec = rng.vec_i32(1024);
+    let out = drv.sort_record(env, &rec).unwrap();
+    let mut e = rec;
+    e.sort_unstable();
+    assert_eq!(out, e);
+}
+
+#[test]
+fn hdl_restart_vm_survives() {
+    let (cfg, dir) = uds_cfg("h");
+    let mut hdl = HdlThread::spawn(&dir, cfg.clone()).unwrap();
+    let mut cosim = CoSim::launch(cfg).unwrap();
+    let mut hook = NoopHook;
+    let mut env = GuestEnv::new(&mut cosim.vmm, &mut hook);
+    let mut drv = SortDriver::new(1024);
+    drv.timeout = Duration::from_secs(30);
+    drv.probe(&mut env).unwrap();
+    let mut rng = XorShift64::new(1);
+    sort_one(&mut env, &mut drv, &mut rng);
+
+    // Kill + restart the simulator; VM-side state fully survives.
+    hdl.kill().unwrap();
+    hdl.restart().unwrap();
+    drv.probe(&mut env).unwrap(); // driver re-initializes the "rebooted" FPGA
+    sort_one(&mut env, &mut drv, &mut rng);
+    sort_one(&mut env, &mut drv, &mut rng);
+
+    let rep = hdl.stop().unwrap();
+    assert_eq!(rep.records_done, 2, "post-restart incarnation sorted 2");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn vm_restart_hdl_survives() {
+    let (cfg, dir) = uds_cfg("v");
+    let hdl = HdlThread::spawn(&dir, cfg.clone()).unwrap();
+    {
+        let mut cosim = CoSim::launch(cfg.clone()).unwrap();
+        let mut hook = NoopHook;
+        let mut env = GuestEnv::new(&mut cosim.vmm, &mut hook);
+        let mut drv = SortDriver::new(1024);
+        drv.timeout = Duration::from_secs(30);
+        drv.probe(&mut env).unwrap();
+        let mut rng = XorShift64::new(2);
+        sort_one(&mut env, &mut drv, &mut rng);
+    } // VM incarnation 1 dies
+    {
+        let mut cosim = CoSim::launch(cfg).unwrap();
+        let mut hook = NoopHook;
+        let mut env = GuestEnv::new(&mut cosim.vmm, &mut hook);
+        let mut drv = SortDriver::new(1024);
+        drv.timeout = Duration::from_secs(30);
+        drv.probe(&mut env).unwrap();
+        let mut rng = XorShift64::new(3);
+        sort_one(&mut env, &mut drv, &mut rng);
+    }
+    let rep = hdl.stop().unwrap();
+    assert_eq!(rep.records_done, 2, "one record per VM incarnation");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn hdl_killed_mid_wait_yields_timeout_not_crash() {
+    let (mut cfg, dir) = uds_cfg("m");
+    cfg.vcd = None;
+    let mut hdl = HdlThread::spawn(&dir, cfg.clone()).unwrap();
+    let mut cosim = CoSim::launch(cfg).unwrap();
+    cosim.vmm.dev.mmio_timeout = Duration::from_millis(800);
+    let mut hook = NoopHook;
+    let mut env = GuestEnv::new(&mut cosim.vmm, &mut hook);
+    let mut drv = SortDriver::new(1024);
+    drv.timeout = Duration::from_secs(30);
+    drv.probe(&mut env).unwrap();
+
+    // Kill the HDL side, then try an MMIO read: the VM must get a
+    // clean timeout error (the paper's "device hung" experience),
+    // not a crash or deadlock.
+    hdl.kill().unwrap();
+    let err = env.read32(0, 0x08).unwrap_err();
+    assert!(err.to_string().contains("timeout"), "{err}");
+
+    // Restart: the same VM continues without being recreated.
+    hdl.restart().unwrap();
+    drv.probe(&mut env).unwrap();
+    let mut rng = XorShift64::new(4);
+    sort_one(&mut env, &mut drv, &mut rng);
+    hdl.stop().unwrap();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn rapid_restart_storm_converges() {
+    // Several restarts in a row must never wedge the link layer.
+    let (cfg, dir) = uds_cfg("s");
+    let mut hdl = HdlThread::spawn(&dir, cfg.clone()).unwrap();
+    let mut cosim = CoSim::launch(cfg).unwrap();
+    let mut hook = NoopHook;
+    let mut env = GuestEnv::new(&mut cosim.vmm, &mut hook);
+    let mut drv = SortDriver::new(1024);
+    drv.timeout = Duration::from_secs(30);
+    let mut rng = XorShift64::new(5);
+    for _ in 0..3 {
+        hdl.restart().unwrap();
+        drv.probe(&mut env).unwrap();
+        sort_one(&mut env, &mut drv, &mut rng);
+    }
+    hdl.stop().unwrap();
+    let _ = std::fs::remove_dir_all(&dir);
+}
