@@ -49,10 +49,16 @@ fn main() -> vmhdl::Result<()> {
             rep.device_cycles
         )))
     );
+    // Rate counts only ticked cycles: fast-forwarded ones cost no wall.
+    let ticked = rep.hdl.cycles.saturating_sub(rep.hdl.fast_forwarded_cycles);
     println!(
-        "  hdl simulation rate : {:.2} Mcycles/s over {} cycles",
-        rep.hdl.cycles as f64 / rep.hdl.wall.as_secs_f64().max(1e-9) / 1e6,
-        rep.hdl.cycles
+        "  hdl simulation rate : {:.2} Mcycles/s over {} ticked cycles ({} total; {} busy / {} idle, {} fast-forwarded)",
+        ticked as f64 / rep.hdl.wall_busy.as_secs_f64().max(1e-9) / 1e6,
+        ticked,
+        rep.hdl.cycles,
+        fmt_dur(rep.hdl.wall_busy),
+        fmt_dur(rep.hdl.wall_idle),
+        rep.hdl.fast_forwarded_cycles,
     );
     println!(
         "  link traffic        : {} messages, {} bytes ({} MMIO reads, {} MMIO writes, {} DMA reads, {} DMA writes, {} MSIs)",

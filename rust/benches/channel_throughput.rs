@@ -18,13 +18,19 @@ fn bench_endpoints(
     msgs: usize,
 ) {
     // Consumer thread: drain until it has seen `msgs` payload messages.
+    // Batched polls reuse one buffer; empty polls block on the link
+    // doorbell instead of burning the (shared) core with yield-spins.
     let consumer = std::thread::spawn(move || {
         let mut got = 0usize;
+        let mut batch = Vec::with_capacity(256);
         while got < msgs {
-            let batch = rx_end.poll().expect("poll failed");
+            batch.clear();
+            rx_end.poll_into(&mut batch).expect("poll failed");
             got += batch.iter().filter(|m| matches!(m, Msg::DmaWrite { .. })).count();
             if batch.is_empty() {
-                std::thread::yield_now();
+                let _ = rx_end
+                    .wait_any(std::time::Duration::from_millis(1))
+                    .expect("wait failed");
             }
         }
         rx_end

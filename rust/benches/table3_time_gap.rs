@@ -66,6 +66,13 @@ fn main() {
         rep.records,
     );
     println!(
+        "hdl wall split: {} busy / {} idle, {} cycles fast-forwarded \
+         (idle wall is excluded from all rate figures — it is the absence of work)",
+        fmt_dur(rep.hdl.wall_busy),
+        fmt_dur(rep.hdl.wall_idle),
+        rep.hdl.fast_forwarded_cycles,
+    );
+    println!(
         "\nshape check: both gaps must be large (correctness-only simulation);"
     );
     println!(

@@ -15,7 +15,7 @@ use std::time::Duration;
 
 use crate::hdl::platform::{Platform, PlatformCfg};
 use crate::hdl::signal::{ProbeFrame, Probed};
-use crate::hdl::sim::{ForceMap, Sim, TickCtx};
+use crate::hdl::sim::{ForceMap, Horizon, Scheduler, Sim, TickCtx};
 use crate::hdl::vcd::VcdWriter;
 use crate::link::{Endpoint, LinkMode, Side};
 use crate::vm::Vmm;
@@ -44,8 +44,10 @@ pub struct CoSimCfg {
     /// Poll the link every N cycles (1 = the paper's every-cycle poll;
     /// larger values are a §Perf knob with a latency trade-off).
     pub poll_interval: u64,
-    /// When the platform is idle and the link silent, sleep this long
-    /// per poll to avoid burning a host core (0 = spin).
+    /// Legacy idle knob, reinterpreted by the event-driven scheduler:
+    /// `0` keeps the old busy-spin while idle; any non-zero value
+    /// enables blocking on the link doorbell (the value itself only
+    /// bounds how quickly a stop request is noticed while idle).
     pub idle_sleep: Duration,
 }
 
@@ -69,7 +71,21 @@ impl Default for CoSimCfg {
 #[derive(Debug, Clone, Default)]
 pub struct HdlReport {
     pub cycles: u64,
+    /// Total wall time the side was up (busy + idle). Kept for
+    /// compatibility; gap factors and throughput figures must use
+    /// `wall_busy` — idle time is the *absence* of simulation work and
+    /// inflating rates with it was the bug this split fixes.
     pub wall: Duration,
+    /// Wall time spent actually ticking the platform.
+    pub wall_busy: Duration,
+    /// Wall time spent blocked waiting for link input.
+    pub wall_idle: Duration,
+    /// Cycles accounted by fast-forward instead of per-cycle ticking.
+    pub fast_forwarded_cycles: u64,
+    /// Doorbell/deadline waits entered while idle, and how many ended
+    /// with a wakeup (traffic) rather than a deadline.
+    pub idle_waits: u64,
+    pub wakeups: u64,
     pub mmio_reads: u64,
     pub mmio_writes: u64,
     pub dma_read_reqs: u64,
@@ -103,9 +119,49 @@ impl HdlSideHandle {
     }
 }
 
-/// Run the HDL simulation loop until `stop` (or, with `until_idle`,
-/// until the platform quiesces). This is the body of both the in-proc
-/// thread and the standalone `vmhdl hdl-side` process.
+/// One platform tick with panic containment: a panic anywhere inside
+/// the cycle (FIFO overflow, slice indexing, a module invariant) is
+/// converted into [`Error::Hdl`] carrying the offending cycle and the
+/// panic message — the run loop then returns it like any other error
+/// instead of tearing the thread down with no context.
+fn tick_checked(platform: &mut Platform, ctx: &TickCtx, link: &mut Endpoint) -> Result<()> {
+    let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        platform.tick(ctx, link)
+    }));
+    match caught {
+        Ok(r) => r,
+        Err(payload) => {
+            let msg = payload
+                .downcast_ref::<&str>()
+                .map(|s| s.to_string())
+                .or_else(|| payload.downcast_ref::<String>().cloned())
+                .unwrap_or_else(|| "non-string panic payload".to_string());
+            Err(Error::hdl(format!(
+                "HDL panic at cycle {}: {msg}",
+                ctx.cycle
+            )))
+        }
+    }
+}
+
+/// Run the HDL simulation loop until `stop`. This is the body of both
+/// the in-proc thread and the standalone `vmhdl hdl-side` process.
+///
+/// Event-driven pacing (see [`crate::hdl::sim::Horizon`]):
+/// * while the platform reports `Now`, tick cycle by cycle (with the
+///   paper's per-cycle link poll at `poll_interval = 1`);
+/// * across an `At(c)` gap (e.g. the sorter's fixed pipeline latency)
+///   the cycle counter jumps straight to `c` — the skipped ticks are
+///   provably no-ops, so results and waveforms are identical;
+/// * when the platform is `Idle`, the loop blocks on the link
+///   doorbell with a deadline instead of sleep-polling, and the cycle
+///   counter does *not* advance — device time is a pure function of
+///   the message sequence, which is what makes same-seed runs
+///   cycle-deterministic.
+///
+/// `cycles_out` is published at every poll boundary and on every
+/// busy→idle transition, so `HdlSideHandle::now_cycles()` (and any
+/// hang detector built on it) never lags a quiesced simulator.
 pub fn run_hdl_loop(
     mut platform: Platform,
     mut link: Endpoint,
@@ -114,6 +170,7 @@ pub fn run_hdl_loop(
     cycles_out: Arc<AtomicU64>,
 ) -> Result<HdlReport> {
     let mut sim = Sim::new();
+    let mut sched = Scheduler::new(cfg.poll_interval);
     let forces = ForceMap::new();
     let t0 = std::time::Instant::now();
     let mut vcd = match &cfg.vcd {
@@ -124,29 +181,130 @@ pub fn run_hdl_loop(
         None => None,
     };
     let mut frame = ProbeFrame::default();
+    // Reused wake-drain buffer (never allocates after warmup).
+    let mut inbox: Vec<crate::link::Msg> = Vec::with_capacity(32);
+    // Idle-wait slice: bounds how quickly a stop request is noticed
+    // while blocked (the doorbell wakes us early on traffic anyway).
+    // idle_sleep == 0 preserves the old busy-spin for ablations.
+    let idle_slice = if cfg.idle_sleep.is_zero() {
+        Duration::ZERO
+    } else {
+        cfg.idle_sleep.max(Duration::from_millis(2))
+    };
 
-    while !stop.load(Ordering::Relaxed) {
-        let ctx = TickCtx { cycle: sim.cycle, forces: &forces };
-        platform.tick(&ctx, &mut link)?;
-        if let Some(w) = vcd.as_mut() {
-            frame.clear();
-            platform.probe(&mut frame);
-            w.record(sim.cycle, &frame)?;
+    let mut result = Ok(());
+    'run: while !stop.load(Ordering::Relaxed) {
+        // ---- busy phase: tick while any event is possible ----
+        let busy0 = std::time::Instant::now();
+        loop {
+            let ctx = TickCtx { cycle: sim.cycle, forces: &forces };
+            if let Err(e) = tick_checked(&mut platform, &ctx, &mut link) {
+                result = Err(e);
+                break 'run;
+            }
+            if let Some(w) = vcd.as_mut() {
+                frame.clear();
+                platform.probe(&mut frame);
+                if let Err(e) = w.record(sim.cycle, &frame) {
+                    result = Err(e.into());
+                    break 'run;
+                }
+            }
+            sim.cycle += 1;
+            if sched.at_poll_boundary(sim.cycle) {
+                cycles_out.store(sim.cycle, Ordering::Relaxed);
+            }
+            if stop.load(Ordering::Relaxed) {
+                break 'run;
+            }
+            match platform.next_event(sim.cycle, &forces) {
+                Horizon::Now => {
+                    if sim.cycle % 256 == 0 {
+                        // Busy: still let the VM side run (single-core
+                        // testbed — it must be able to answer our DMA
+                        // reads promptly).
+                        std::thread::yield_now();
+                    }
+                }
+                Horizon::At(c) => {
+                    // Input that arrived since the last poll keeps us
+                    // ticking (it may change the schedule); otherwise
+                    // jump the provably idle gap in one step.
+                    match link.rx_ready() {
+                        Ok(true) => {}
+                        Ok(false) => {
+                            sched.fast_forward(&mut sim, c);
+                            cycles_out.store(sim.cycle, Ordering::Relaxed);
+                        }
+                        Err(e) => {
+                            result = Err(e);
+                            break 'run;
+                        }
+                    }
+                }
+                Horizon::Idle => break,
+            }
         }
-        sim.cycle += 1;
-        if sim.cycle % 1024 == 0 {
-            cycles_out.store(sim.cycle, Ordering::Relaxed);
+        sched.wall_busy += busy0.elapsed();
+        cycles_out.store(sim.cycle, Ordering::Relaxed);
+
+        // ---- idle phase: block on the link with a deadline ----
+        // Cycles do not advance here: an idle device that did no work
+        // consumed no device time (and a wall-coupled idle tick would
+        // break cycle determinism). On wakeup the link is drained
+        // *before* the next tick: control frames (acks, handshakes)
+        // are absorbed inside the poll and must not consume a cycle
+        // either — only payload traffic re-enters the tick loop, so
+        // the cycle at which a request is processed depends on the
+        // message sequence alone, never on ack timing.
+        let idle0 = std::time::Instant::now();
+        'idle: while !stop.load(Ordering::Relaxed) {
+            sched.idle_waits += 1;
+            match link.wait_any(idle_slice) {
+                Ok(true) => {
+                    inbox.clear();
+                    match link.poll_into(&mut inbox) {
+                        Ok(0) => {
+                            // Control-only wake (or a partial frame):
+                            // nothing for the platform. Brief nap so a
+                            // straggling frame tail cannot hot-spin us.
+                            std::thread::sleep(Duration::from_micros(20));
+                        }
+                        Ok(_) => {
+                            sched.wakeups += 1;
+                            for m in inbox.drain(..) {
+                                if let Err(e) = platform.inject(m) {
+                                    result = Err(e);
+                                    break 'run;
+                                }
+                            }
+                            break 'idle;
+                        }
+                        Err(e) => {
+                            result = Err(e);
+                            break 'run;
+                        }
+                    }
+                }
+                Ok(false) => {
+                    if idle_slice.is_zero() {
+                        // Ablation mode (idle_sleep = 0): spin-tick
+                        // like the seed loop, but stay polite.
+                        std::thread::yield_now();
+                        break 'idle;
+                    }
+                }
+                Err(e) => {
+                    result = Err(e);
+                    break 'run;
+                }
+            }
         }
-        // Idle throttle: when nothing is in flight, don't spin a core.
-        if !platform.busy() && cfg.idle_sleep > Duration::ZERO {
-            std::thread::sleep(cfg.idle_sleep);
-        } else if sim.cycle % 256 == 0 {
-            // Busy: still let the VM side run (single-core testbed —
-            // it must be able to answer our DMA reads promptly).
-            std::thread::yield_now();
-        }
+        sched.wall_idle += idle0.elapsed();
     }
+
     cycles_out.store(sim.cycle, Ordering::Relaxed);
+    result?;
     let vcd_changes = match vcd.as_mut() {
         Some(w) => {
             w.flush()?;
@@ -157,6 +315,11 @@ pub fn run_hdl_loop(
     Ok(HdlReport {
         cycles: sim.cycle,
         wall: t0.elapsed(),
+        wall_busy: sched.wall_busy,
+        wall_idle: sched.wall_idle,
+        fast_forwarded_cycles: sched.fast_forwarded,
+        idle_waits: sched.idle_waits,
+        wakeups: sched.wakeups,
         mmio_reads: platform.bridge.mmio_reads,
         mmio_writes: platform.bridge.mmio_writes,
         dma_read_reqs: platform.bridge.dma_read_reqs,
@@ -272,6 +435,66 @@ mod tests {
         assert!(head.contains("$enddefinitions"));
         assert!(head.contains("platform"));
         let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn now_cycles_is_fresh_after_quiesce() {
+        // Regression for the stale-counter bug: the seed published
+        // cycles only every 1024, so `now_cycles()` could trail an
+        // MMIO-visible cycle read by up to 1023 cycles (~20 ms of the
+        // old idle loop). The event-driven loop publishes at every
+        // poll boundary and on every busy→idle transition, so the
+        // handle catches up as soon as the device quiesces.
+        let mut cosim = CoSim::launch(CoSimCfg::default()).unwrap();
+        let mut hook = NoopHook;
+        let mut env = GuestEnv::new(&mut cosim.vmm, &mut hook);
+        let mut drv = SortDriver::new(1024);
+        drv.timeout = Duration::from_secs(30);
+        drv.probe(&mut env).unwrap();
+        let c_dev = drv.read_cycles(&mut env).unwrap();
+        let handle = cosim.hdl.as_ref().unwrap();
+        let deadline = std::time::Instant::now() + Duration::from_secs(2);
+        loop {
+            let published = handle.now_cycles();
+            if published >= c_dev {
+                break;
+            }
+            assert!(
+                std::time::Instant::now() < deadline,
+                "now_cycles {published} still behind device-visible cycle {c_dev}"
+            );
+            std::thread::yield_now();
+        }
+        cosim.shutdown().unwrap();
+    }
+
+    #[test]
+    fn event_driven_loop_fast_forwards_and_blocks_idle() {
+        let mut cosim = CoSim::launch(CoSimCfg::default()).unwrap();
+        let mut hook = NoopHook;
+        let mut env = GuestEnv::new(&mut cosim.vmm, &mut hook);
+        let mut drv = SortDriver::new(1024);
+        drv.timeout = Duration::from_secs(30);
+        drv.probe(&mut env).unwrap();
+        let report = app::run_sort(&mut env, &mut drv, 2, 0x5EED).unwrap();
+        assert!(report.verified);
+        let hdl = cosim.shutdown().unwrap();
+        // The sorter's fixed pipeline latency (≫ the stream drain) is
+        // jumped, not ticked through.
+        assert!(
+            hdl.fast_forwarded_cycles > 100,
+            "no fast-forward across the sorter latency: {}",
+            hdl.fast_forwarded_cycles
+        );
+        // Idle time is spent blocked on the doorbell, and the wall
+        // split accounts for it separately from simulation work.
+        assert!(hdl.idle_waits > 0, "idle phases never blocked on the link");
+        assert!(
+            hdl.wall_busy <= hdl.wall,
+            "busy {:?} exceeds total {:?}",
+            hdl.wall_busy,
+            hdl.wall
+        );
     }
 
     #[test]

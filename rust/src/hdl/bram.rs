@@ -5,7 +5,7 @@
 //! read/write, like a true-dual-port BRAM with registered outputs.
 
 use super::axi::{resp, LiteAr, LiteAw, LiteB, LiteR, LiteW};
-use super::sim::Fifo;
+use super::sim::{Fifo, Horizon};
 use super::signal::{ProbeSink, Probed};
 
 /// The BRAM module.
@@ -31,6 +31,18 @@ impl Bram {
 
     pub fn size(&self) -> usize {
         self.mem.len()
+    }
+
+    /// Event horizon (see [`Horizon`]): a half-assembled write (AW
+    /// held while W is still in flight, or a response retry against a
+    /// full B channel) must keep ticking; otherwise the BRAM only
+    /// changes on new AXI traffic, which arrives over wires the
+    /// platform checks separately.
+    pub fn horizon(&self) -> Horizon {
+        if self.pend_aw.is_some() || self.pend_w.is_some() {
+            return Horizon::Now;
+        }
+        Horizon::Idle
     }
 
     /// Direct (debug monitor) access — not part of the AXI interface.

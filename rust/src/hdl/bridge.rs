@@ -27,7 +27,7 @@ use std::collections::VecDeque;
 
 use super::axi::{resp, Ar, Aw, LiteAr, LiteAw, LiteW, B, R, W, DATA_BYTES};
 use super::interconnect::LitePort;
-use super::sim::{Fifo, TickCtx};
+use super::sim::{Fifo, Horizon, TickCtx};
 use super::signal::{ProbeSink, Probed};
 use crate::link::{Endpoint, LinkMode, Msg};
 use crate::pcie::tlp::{self, Tlp};
@@ -73,6 +73,16 @@ pub struct Bridge {
     lite_wr_inflight: bool,
     // ---- device-initiated DMA path ----
     dma_reads: VecDeque<PendingRead>,
+    /// Earliest cycle at which the *first* beat of a read burst may be
+    /// emitted. Bumped past the downstream drain window whenever a
+    /// request is sent or a burst completes — a determinism
+    /// requirement: a response that arrives while the previous
+    /// burst's beats are still draining toward the sorter would
+    /// otherwise start emitting at a wall-dependent cycle, whereas
+    /// one that arrives after the platform froze starts at the freeze
+    /// cycle. The cooldown pins both cases to the same cycle, so
+    /// device time stays a pure function of the message sequence.
+    dma_rd_resume_at: u64,
     next_tag: u64,
     /// Write burst being collected (addr, beats, data).
     wr_collect: Option<(u64, u8, Vec<u8>)>,
@@ -82,6 +92,9 @@ pub struct Bridge {
     /// poll; §Perf ablation knob — trades host throughput for link
     /// latency in device-cycles).
     pub poll_interval: u64,
+    /// Reused poll batch buffer — the link is polled every cycle in
+    /// the paper's configuration, so this must not allocate per cycle.
+    poll_buf: Vec<Msg>,
     // ---- stats ----
     pub mmio_reads: u64,
     pub mmio_writes: u64,
@@ -103,10 +116,12 @@ impl Bridge {
             lite_rd_inflight: None,
             lite_wr_inflight: false,
             dma_reads: VecDeque::new(),
+            dma_rd_resume_at: 0,
             next_tag: 1,
             wr_collect: None,
             irq_prev: [false; IRQ_PINS],
             poll_interval: 1,
+            poll_buf: Vec::with_capacity(32),
             mmio_reads: 0,
             mmio_writes: 0,
             dma_read_reqs: 0,
@@ -125,6 +140,33 @@ impl Bridge {
             || self.lite_wr_inflight
             || !self.dma_reads.is_empty()
             || self.wr_collect.is_some()
+    }
+
+    /// Event horizon (see [`Horizon`]): `Now` while the bridge can
+    /// make progress from internal state (queued MMIO, in-flight AXI
+    /// ops, a ready DMA response to stream out, a half-collected write
+    /// burst). A DMA read that is pending but not yet answered can
+    /// only advance on link input, so it reports `Idle` — the run
+    /// loop's doorbell wait covers exactly that case.
+    pub fn horizon(&self) -> Horizon {
+        if !self.mmio_queue.is_empty()
+            || self.lite_rd_inflight.is_some()
+            || self.lite_wr_inflight
+            || self.wr_collect.is_some()
+            || self.dma_reads.front().is_some_and(|p| p.ready)
+        {
+            return Horizon::Now;
+        }
+        Horizon::Idle
+    }
+
+    /// True if any irq input level differs from the registered level —
+    /// an edge the next tick must observe (rising edges become MSIs).
+    pub fn irq_edge_pending(&self, irq_in: [bool; IRQ_PINS]) -> bool {
+        irq_in
+            .iter()
+            .zip(self.irq_prev.iter())
+            .any(|(now, prev)| now != prev)
     }
 
     /// Configure the bus base of a BAR window (TLP mode reverse map).
@@ -166,13 +208,33 @@ impl Bridge {
         irq_in: [bool; IRQ_PINS],
     ) -> Result<()> {
         // ---- 1. poll the link (the per-cycle work of §IV-B) ----
+        // Batched into a buffer reused across cycles: the empty poll
+        // is the hottest path of the whole co-simulation and must not
+        // allocate.
         if self.poll_interval <= 1 || ctx.cycle % self.poll_interval == 0 {
-            let msgs = link.poll()?;
-            if msgs.is_empty() {
+            let mut buf = std::mem::take(&mut self.poll_buf);
+            buf.clear();
+            let n = link.poll_into(&mut buf)?;
+            if n == 0 {
                 self.idle_polls += 1;
             }
-            for m in msgs {
-                self.ingest(m)?;
+            let mut ingest_err = None;
+            for m in buf.drain(..) {
+                if ingest_err.is_none() {
+                    if let Err(e) = self.ingest(m) {
+                        // Keep draining so the buffer is returned
+                        // intact, then surface the error with the
+                        // offending cycle attached.
+                        ingest_err = Some(e);
+                    }
+                }
+            }
+            self.poll_buf = buf;
+            if let Some(e) = ingest_err {
+                return Err(crate::Error::hdl(format!(
+                    "bridge ingest failed at cycle {}: {e}",
+                    ctx.cycle
+                )));
             }
         }
 
@@ -180,7 +242,7 @@ impl Bridge {
         self.drive_lite_master(link, cfg_m)?;
 
         // ---- 3. device DMA: AXI slave → link ----
-        self.serve_dma_slave(link, dma_ar, dma_r, dma_aw, dma_w, dma_b)?;
+        self.serve_dma_slave(ctx.cycle, link, dma_ar, dma_r, dma_aw, dma_w, dma_b)?;
 
         // ---- 4. interrupt pins: rising edge → MSI ----
         // (static force-point names: no per-cycle allocation)
@@ -198,6 +260,14 @@ impl Bridge {
             self.irq_prev[i] = level;
         }
         Ok(())
+    }
+
+    /// Feed one already-polled message into the bridge outside the
+    /// per-cycle poll — used by the event-driven run loop, which
+    /// drains the link *before* spending a cycle so that control-only
+    /// traffic (acks, handshakes) never consumes device time.
+    pub fn inject(&mut self, m: Msg) -> Result<()> {
+        self.ingest(m)
     }
 
     /// Handle one message from the VM.
@@ -266,8 +336,17 @@ impl Bridge {
 
     /// Issue queued MMIO work over the AXI-Lite master port; complete
     /// reads back to the VM.
+    ///
+    /// A completion and the next issue never share a tick. This is a
+    /// determinism requirement of the event-driven scheduler, not a
+    /// style choice: without it, a request that arrives while the
+    /// previous transaction is still in flight issues one cycle
+    /// *earlier* than one that arrives after the bridge went idle, so
+    /// device-cycle counts would depend on host thread timing instead
+    /// of on the message sequence alone.
     fn drive_lite_master(&mut self, link: &mut Endpoint, m: &mut LitePort) -> Result<()> {
         // Completions first.
+        let mut completed = false;
         if let Some((tag, len)) = self.lite_rd_inflight {
             if let Some(r) = m.r.pop() {
                 if r.resp != resp::OKAY {
@@ -280,6 +359,7 @@ impl Bridge {
                 data.resize(len as usize, 0);
                 self.complete_read(link, tag, data)?;
                 self.lite_rd_inflight = None;
+                completed = true;
             }
         }
         if self.lite_wr_inflight {
@@ -288,10 +368,12 @@ impl Bridge {
                     self.slverrs_seen += 1;
                 }
                 self.lite_wr_inflight = false;
+                completed = true;
             }
         }
-        // Issue next request if the port is free.
-        if self.lite_rd_inflight.is_none() && !self.lite_wr_inflight {
+        // Issue next request if the port is free (and no completion
+        // happened this tick — see the determinism note above).
+        if !completed && self.lite_rd_inflight.is_none() && !self.lite_wr_inflight {
             if let Some(req) = self.mmio_queue.front() {
                 match req {
                     Msg::MmioRead { tag, bar, addr, len } => {
@@ -303,7 +385,9 @@ impl Bridge {
                             return Ok(());
                         };
                         if m.ar.can_push() {
-                            m.ar.push(LiteAr { addr: w.axi_base + *addr as u32 });
+                            // Link-fed path: a full channel is a
+                            // reportable condition, not a thread-killer.
+                            m.ar.try_push(LiteAr { addr: w.axi_base + *addr as u32 })?;
                             self.lite_rd_inflight = Some((*tag, *len));
                             self.mmio_reads += 1;
                             self.mmio_queue.pop_front();
@@ -317,8 +401,8 @@ impl Bridge {
                         if m.aw.can_push() && m.w.can_push() && data.len() >= 4 {
                             let word =
                                 u32::from_le_bytes(data[..4].try_into().unwrap());
-                            m.aw.push(LiteAw { addr: w.axi_base + *addr as u32 });
-                            m.w.push(LiteW { data: word, strb: 0xF });
+                            m.aw.try_push(LiteAw { addr: w.axi_base + *addr as u32 })?;
+                            m.w.try_push(LiteW { data: word, strb: 0xF })?;
                             self.lite_wr_inflight = true;
                             self.mmio_writes += 1;
                             self.mmio_queue.pop_front();
@@ -355,8 +439,10 @@ impl Bridge {
     /// Serve the DMA's AXI4 master: reads become link DmaRead
     /// requests (answered asynchronously), writes are collected per
     /// burst and forwarded as posted DmaWrite messages.
+    #[allow(clippy::too_many_arguments)]
     fn serve_dma_slave(
         &mut self,
+        cycle: u64,
         link: &mut Endpoint,
         ar: &mut Fifo<Ar>,
         r: &mut Fifo<R>,
@@ -370,6 +456,8 @@ impl Bridge {
                 let tag = self.alloc_tag();
                 let bytes = req.bytes();
                 self.dma_read_reqs += 1;
+                self.dma_rd_resume_at =
+                    self.dma_rd_resume_at.max(cycle + DMA_RD_RESUME_COOLDOWN);
                 match self.mode {
                     LinkMode::Mmio => {
                         link.send(&Msg::DmaRead { tag, addr: req.addr, len: bytes })?;
@@ -396,9 +484,14 @@ impl Bridge {
             }
         }
         // Emit R beats for the oldest ready burst (AXI in-order per id;
-        // we keep global order, which is stricter and safe).
+        // we keep global order, which is stricter and safe). A burst
+        // may *start* only after the resume cooldown — see the
+        // `dma_rd_resume_at` docs for why this pins the start cycle.
         if let Some(front) = self.dma_reads.front_mut() {
-            if front.ready && r.can_push() {
+            if front.ready
+                && r.can_push()
+                && (front.beats_emitted > 0 || cycle >= self.dma_rd_resume_at)
+            {
                 let i = front.beats_emitted;
                 let mut data = [0u8; DATA_BYTES];
                 let off = i * DATA_BYTES;
@@ -407,17 +500,24 @@ impl Bridge {
                     data.copy_from_slice(&front.data[off..off + DATA_BYTES]);
                 }
                 let last = i + 1 == front.beats_total;
-                r.push(R {
+                // Link-fed path (beat data came from a DmaReadResp):
+                // surface overflow as Error::Hdl, don't panic.
+                r.try_push(R {
                     data,
                     id: front.axi_id,
                     // An aborted/short response (BME off) returns SLVERR
                     // beats, which the DMA latches as an error.
                     resp: if ok { resp::OKAY } else { resp::SLVERR },
                     last,
-                });
+                })?;
                 front.beats_emitted += 1;
                 if last {
                     self.dma_reads.pop_front();
+                    // The drained beats still ripple toward the sorter
+                    // for a few cycles; the next burst must not start
+                    // inside that wall-racy window.
+                    self.dma_rd_resume_at =
+                        self.dma_rd_resume_at.max(cycle + DMA_RD_RESUME_COOLDOWN);
                 }
             }
         }
@@ -476,6 +576,12 @@ impl Bridge {
 
 /// Marker bit distinguishing TLP-originated MMIO tags.
 const TLP_TAG_MARK: u64 = 1 << 62;
+
+/// Cycles a newly-ready read burst waits before its first beat — must
+/// cover the bridge→DMA→stream drain window (3 ticks in this
+/// topology) so the burst start cycle is identical whether the
+/// response arrived mid-drain or after the platform froze.
+const DMA_RD_RESUME_COOLDOWN: u64 = 4;
 
 impl Probed for Bridge {
     fn probe(&self, sink: &mut dyn ProbeSink) {

@@ -17,7 +17,7 @@ use super::axi::{
     resp, Ar, Aw, AxisBeat, LiteAr, LiteAw, LiteB, LiteR, LiteW, B, DATA_BYTES,
     MAX_BURST_BEATS, R, W,
 };
-use super::sim::Fifo;
+use super::sim::{Fifo, Horizon};
 use super::signal::{ProbeSink, Probed};
 
 /// DMA register offsets (within the DMA's AXI-Lite window).
@@ -182,6 +182,35 @@ impl AxiDma {
     /// the DMASR IOC bit is cleared (W1C), as in the real IP.
     pub fn irq(&self) -> (bool, bool) {
         (self.mm2s.irq_out(), self.s2mm.irq_out())
+    }
+
+    /// Event horizon (see [`Horizon`]): `Now` whenever an engine can
+    /// act on internal state alone (issue a burst, promote a buffer,
+    /// complete). Engines stalled purely on external data (R beats or
+    /// stream beats that can only come from the link / the sorter) are
+    /// `Idle` here — the platform combines this with the FIFO and
+    /// sorter horizons, so anything actually en route forces `Now`.
+    pub fn horizon(&self) -> Horizon {
+        // A half-collected register write resolves as soon as the
+        // other beat arrives; treat as imminent (rare, costs nothing).
+        if self.pend_aw.is_some() || self.pend_w.is_some() {
+            return Horizon::Now;
+        }
+        if self.mm2s.state == ChanState::Active
+            && self.mm2s_ar_remaining > 0
+            && self.mm2s_outstanding.len() < 2
+        {
+            return Horizon::Now; // can issue another read burst
+        }
+        if self.s2mm.state == ChanState::Active {
+            if !self.s2mm_buf.is_empty() || self.s2mm_issue.is_some() {
+                return Horizon::Now; // burst to promote or drive
+            }
+            if self.s2mm_remaining == 0 && self.s2mm_awaiting_b == 0 {
+                return Horizon::Now; // completion fires next tick
+            }
+        }
+        Horizon::Idle
     }
 
     fn read_reg(&mut self, addr: u32) -> (u32, u8) {
@@ -432,14 +461,16 @@ impl AxiDma {
                     }
                 }
             }
-            // Collect write responses.
+            // Collect write responses. A stray B (e.g. stale traffic
+            // straddling a soft reset) must not underflow the counter
+            // and take the HDL thread down.
             if m_b.can_pop() {
                 let b = m_b.pop().unwrap();
                 if b.resp != resp::OKAY {
                     self.s2mm.err = true;
                     self.s2mm.sr_irq |= sr::ERR_IRQ;
                 }
-                self.s2mm_awaiting_b -= 1;
+                self.s2mm_awaiting_b = self.s2mm_awaiting_b.saturating_sub(1);
             }
             // Completion.
             if self.s2mm_remaining == 0

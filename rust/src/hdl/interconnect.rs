@@ -23,11 +23,11 @@ pub struct LitePort {
 impl LitePort {
     pub fn new() -> Self {
         Self {
-            aw: Fifo::new(2),
-            w: Fifo::new(2),
-            b: Fifo::new(2),
-            ar: Fifo::new(2),
-            r: Fifo::new(2),
+            aw: Fifo::named(2, "lite.aw"),
+            w: Fifo::named(2, "lite.w"),
+            b: Fifo::named(2, "lite.b"),
+            ar: Fifo::named(2, "lite.ar"),
+            r: Fifo::named(2, "lite.r"),
         }
     }
 

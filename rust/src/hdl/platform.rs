@@ -25,7 +25,7 @@ use super::bridge::{BarWindow, Bridge, IRQ_PINS};
 use super::dma::AxiDma;
 use super::interconnect::{Interconnect, LitePort, MapEntry};
 use super::regfile::{RegFile, SorterStatus};
-use super::sim::{Fifo, TickCtx};
+use super::sim::{Fifo, ForceMap, Horizon, TickCtx};
 use super::signal::{ProbeSink, Probed};
 use super::sorter::{Sorter, SorterCfg};
 use crate::link::{Endpoint, LinkMode};
@@ -122,13 +122,13 @@ impl Platform {
             bram: Bram::new(cfg.bram_size),
             cfg_port: LitePort::new(),
             slave_ports: vec![LitePort::new(), LitePort::new(), LitePort::new()],
-            dm_ar: Fifo::new(4),
-            dm_r: Fifo::new(4),
-            dm_aw: Fifo::new(4),
-            dm_w: Fifo::new(4),
-            dm_b: Fifo::new(4),
-            mm2s_axis: Fifo::new(cfg.stream_fifo_depth),
-            s2mm_axis: Fifo::new(cfg.stream_fifo_depth),
+            dm_ar: Fifo::named(4, "platform.dm_ar"),
+            dm_r: Fifo::named(4, "platform.dm_r"),
+            dm_aw: Fifo::named(4, "platform.dm_aw"),
+            dm_w: Fifo::named(4, "platform.dm_w"),
+            dm_b: Fifo::named(4, "platform.dm_b"),
+            mm2s_axis: Fifo::named(cfg.stream_fifo_depth, "platform.mm2s_axis"),
+            s2mm_axis: Fifo::named(cfg.stream_fifo_depth, "platform.s2mm_axis"),
             irq_test_level: false,
             cfg,
         }
@@ -231,6 +231,66 @@ impl Platform {
             || !self.dm_ar.is_empty()
             || !self.dm_aw.is_empty()
     }
+
+    /// True if every inter-module wire is empty — a precondition for
+    /// any horizon other than [`Horizon::Now`]: a beat sitting in any
+    /// FIFO means some module acts on the very next tick.
+    fn wires_quiet(&self) -> bool {
+        fn port_quiet(p: &LitePort) -> bool {
+            p.aw.is_empty() && p.w.is_empty() && p.b.is_empty() && p.ar.is_empty()
+                && p.r.is_empty()
+        }
+        port_quiet(&self.cfg_port)
+            && self.slave_ports.iter().all(port_quiet)
+            && self.dm_ar.is_empty()
+            && self.dm_r.is_empty()
+            && self.dm_aw.is_empty()
+            && self.dm_w.is_empty()
+            && self.dm_b.is_empty()
+            && self.mm2s_axis.is_empty()
+            && self.s2mm_axis.is_empty()
+    }
+
+    /// Feed an already-polled link message into the platform (bridge)
+    /// without ticking — see [`super::bridge::Bridge::inject`].
+    pub fn inject(&mut self, m: crate::link::Msg) -> Result<()> {
+        self.bridge.inject(m)
+    }
+
+    /// The platform's next-event horizon (see [`Horizon`]): the
+    /// earliest future cycle at which *any* module's state can change
+    /// absent new link input. Conservative by construction — every
+    /// ambiguous case degrades to [`Horizon::Now`], which merely costs
+    /// a tick, never correctness. With active signal forces the answer
+    /// is always `Now` (a forced wire can change module behaviour on
+    /// any cycle).
+    pub fn next_event(&self, now: u64, forces: &ForceMap) -> Horizon {
+        if !forces.is_empty() {
+            return Horizon::Now;
+        }
+        // A pending irq edge (level differs from the registered copy)
+        // must be observed by a real tick so the MSI goes out.
+        let (mm2s_irq, s2mm_irq) = self.dma.irq();
+        let mut irq = [false; IRQ_PINS];
+        irq[irq_map::MM2S] = mm2s_irq;
+        irq[irq_map::S2MM] = s2mm_irq;
+        irq[irq_map::TEST] = self.irq_test_level;
+        if self.bridge.irq_edge_pending(irq) {
+            return Horizon::Now;
+        }
+        if !self.wires_quiet() {
+            return Horizon::Now;
+        }
+        self.bridge
+            .horizon()
+            .min(self.dma.horizon())
+            .min(self.regfile.horizon())
+            .min(self.bram.horizon())
+            .min(self.sorter.horizon(now))
+        // The interconnect carries no horizon of its own: every one of
+        // its wait states is pinned to a non-empty wire, which
+        // `wires_quiet` already forces to `Now`.
+    }
 }
 
 impl Probed for Platform {
@@ -252,6 +312,39 @@ mod tests {
     use crate::hdl::sim::{ForceMap, Sim};
     use crate::link::Msg;
     use crate::testutil::XorShift64;
+
+    #[test]
+    fn next_event_idle_quiet_and_now_when_fed() {
+        let (mut vm_ep, mut hdl_ep) = Endpoint::inproc_pair();
+        let mut plat = Platform::new(PlatformCfg::default());
+        let forces = ForceMap::new();
+        // Fresh platform, no traffic: provably idle.
+        let ctx = TickCtx { cycle: 0, forces: &forces };
+        plat.tick(&ctx, &mut hdl_ep).unwrap();
+        assert_eq!(plat.next_event(1, &forces), Horizon::Idle);
+        // An MMIO write makes the next cycles non-skippable until the
+        // write has fully drained through bridge → xbar → regfile.
+        vm_ep
+            .send(&Msg::MmioWrite { bar: 0, addr: 0x08, data: vec![1, 0, 0, 0] })
+            .unwrap();
+        let ctx = TickCtx { cycle: 1, forces: &forces };
+        plat.tick(&ctx, &mut hdl_ep).unwrap();
+        assert_eq!(plat.next_event(2, &forces), Horizon::Now);
+        // Drain: a bounded number of Now ticks returns to Idle.
+        let mut cycle = 2u64;
+        while plat.next_event(cycle, &forces) == Horizon::Now {
+            let ctx = TickCtx { cycle, forces: &forces };
+            plat.tick(&ctx, &mut hdl_ep).unwrap();
+            cycle += 1;
+            assert!(cycle < 64, "MMIO write never drained");
+        }
+        assert_eq!(plat.next_event(cycle, &forces), Horizon::Idle);
+        assert_eq!(plat.regfile.scratch, 1, "write must have landed");
+        // Active forces always pin the horizon to Now.
+        let mut f = ForceMap::new();
+        f.insert("sorter.s_axis_tready".into(), 0);
+        assert_eq!(plat.next_event(cycle, &f), Horizon::Now);
+    }
 
     #[test]
     fn full_offload_sort_through_platform() {

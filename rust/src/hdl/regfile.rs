@@ -6,7 +6,7 @@
 //! and uses the scratch register as a link sanity check.
 
 use super::axi::{resp, LiteAr, LiteAw, LiteB, LiteR, LiteW};
-use super::sim::Fifo;
+use super::sim::{Fifo, Horizon};
 use super::signal::{ProbeSink, Probed};
 
 /// Register offsets within the regfile window.
@@ -148,6 +148,23 @@ impl RegFile {
             _ => return resp::SLVERR,
         }
         resp::OKAY
+    }
+
+    /// Event horizon (see [`Horizon`]): a half-assembled write (AW
+    /// without W or vice versa) resolves as soon as its partner beat
+    /// arrives; pulses are consumed by the platform within the tick
+    /// they are raised, so an otherwise quiet regfile only changes on
+    /// new AXI traffic. The free-running CYCLES register is driven
+    /// *from* the simulation cycle, so it needs no ticks of its own.
+    pub fn horizon(&self) -> Horizon {
+        if self.pend_aw.is_some()
+            || self.pend_w.is_some()
+            || self.soft_reset_pulse
+            || self.irq_test_pulse.is_some()
+        {
+            return Horizon::Now;
+        }
+        Horizon::Idle
     }
 
     /// One cycle: serve ≤1 read and ≤1 write through the AXI-Lite

@@ -1,5 +1,6 @@
 //! Simulation kernel: registered FIFOs and registers, the per-cycle
-//! tick context (with signal forcing), and the simulator harness.
+//! tick context (with signal forcing), the simulator harness, and the
+//! event-driven [`Scheduler`].
 //!
 //! Model of computation: a synchronous single-clock design. Every
 //! inter-module wire is either a [`Fifo`] (ready/valid channel with a
@@ -7,9 +8,21 @@
 //! a [`Reg`] (plain registered level). Modules may therefore be
 //! evaluated in any fixed order within a cycle without races — the
 //! same discipline as registering every block boundary in RTL.
+//!
+//! Event-driven pacing: modules additionally report a [`Horizon`] —
+//! the earliest future cycle at which their state can change absent
+//! new link input. The run loop ([`crate::coordinator::cosim`]) ticks
+//! while any module reports [`Horizon::Now`], *fast-forwards* the
+//! cycle counter across [`Horizon::At`] gaps (every skipped tick is
+//! provably a no-op, so waveforms and results are identical to
+//! ticking through), and blocks on the link doorbell when the whole
+//! platform is [`Horizon::Idle`]. Cycles therefore advance only as a
+//! function of the message sequence, never of wall-clock — which is
+//! what makes same-seed runs cycle-deterministic.
 
 use std::collections::BTreeMap;
 use std::collections::VecDeque;
+use std::time::Duration;
 
 /// A registered ready/valid channel of capacity `cap`.
 ///
@@ -21,19 +34,32 @@ pub struct Fifo<T> {
     q: VecDeque<T>,
     staged: Vec<T>,
     cap: usize,
+    /// Wire name, carried into overflow diagnostics so a panic caught
+    /// by the run loop identifies the offending module/channel.
+    name: &'static str,
     /// Cumulative beats through this channel (for occupancy probes).
     pub total: u64,
 }
 
 impl<T> Fifo<T> {
     pub fn new(cap: usize) -> Self {
+        Self::named(cap, "fifo")
+    }
+
+    /// Like [`Fifo::new`] but with a wire name for diagnostics.
+    pub fn named(cap: usize, name: &'static str) -> Self {
         assert!(cap >= 1);
         Self {
             q: VecDeque::with_capacity(cap),
             staged: Vec::new(),
             cap,
+            name,
             total: 0,
         }
+    }
+
+    pub fn name(&self) -> &'static str {
+        self.name
     }
 
     /// Producer-side ready.
@@ -43,11 +69,33 @@ impl<T> Fifo<T> {
 
     /// Stage one element for the next cycle. Panics if full — callers
     /// must check `can_push` (matching RTL, where driving a full FIFO
-    /// is a design bug, not a runtime condition).
+    /// is a design bug, not a runtime condition). The HDL run loop
+    /// catches the panic and surfaces it as `Error::Hdl` with the
+    /// cycle and the wire name.
     pub fn push(&mut self, v: T) {
-        assert!(self.can_push(), "fifo overflow (cap {})", self.cap);
+        assert!(
+            self.can_push(),
+            "fifo overflow on {:?} (cap {})",
+            self.name,
+            self.cap
+        );
         self.staged.push(v);
         self.total += 1;
+    }
+
+    /// Non-panicking push for paths fed by link input: a full channel
+    /// becomes a reportable condition instead of tearing down the
+    /// whole HDL thread.
+    pub fn try_push(&mut self, v: T) -> crate::Result<()> {
+        if !self.can_push() {
+            return Err(crate::Error::hdl(format!(
+                "fifo overflow on {:?} (cap {})",
+                self.name, self.cap
+            )));
+        }
+        self.staged.push(v);
+        self.total += 1;
+        Ok(())
     }
 
     /// Consumer-side valid.
@@ -186,6 +234,97 @@ impl Sim {
     }
 }
 
+/// A module's report of when its state can next change absent new
+/// link input — the contract that lets the run loop skip provably
+/// idle cycles instead of sleeping wall-clock through them.
+///
+/// Ordering for [`Horizon::min`]: `Now` < `At(earlier)` < `At(later)`
+/// < `Idle`. A module must return `Now` whenever it is unsure; `At`
+/// and `Idle` are *promises* that every tick before the horizon is a
+/// no-op for that module.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Horizon {
+    /// State may change on the very next tick — keep ticking.
+    Now,
+    /// Nothing can change before this absolute cycle (e.g. a pipeline
+    /// drain scheduled in the future) — safe to fast-forward to it.
+    At(u64),
+    /// Nothing can change until new link input arrives — safe to
+    /// block on the link doorbell.
+    Idle,
+}
+
+impl Horizon {
+    /// Combine two module horizons: the earlier event wins.
+    pub fn min(self, other: Horizon) -> Horizon {
+        use Horizon::*;
+        match (self, other) {
+            (Now, _) | (_, Now) => Now,
+            (At(a), At(b)) => At(a.min(b)),
+            (At(a), Idle) | (Idle, At(a)) => At(a),
+            (Idle, Idle) => Idle,
+        }
+    }
+
+    /// Normalize an absolute-cycle horizon against the current cycle:
+    /// a horizon at or before `now` means "tick now".
+    pub fn at_or_now(cycle: u64, now: u64) -> Horizon {
+        if cycle <= now {
+            Horizon::Now
+        } else {
+            Horizon::At(cycle)
+        }
+    }
+}
+
+/// Pacing state and accounting for an event-driven co-sim run loop:
+/// tracks how wall time splits between ticking and waiting, and how
+/// many cycles were fast-forwarded rather than ticked.
+#[derive(Debug, Clone)]
+pub struct Scheduler {
+    /// Link poll interval in cycles (1 = poll every cycle).
+    pub poll_interval: u64,
+    /// Wall time spent ticking (the honest cost of simulation).
+    pub wall_busy: Duration,
+    /// Wall time spent blocked waiting for link input.
+    pub wall_idle: Duration,
+    /// Cycles skipped by fast-forward (counted in `Sim::cycle` but
+    /// never individually ticked).
+    pub fast_forwarded: u64,
+    /// Deadline-bounded waits entered while the platform was idle.
+    pub idle_waits: u64,
+    /// Idle waits that ended because traffic arrived (vs deadline).
+    pub wakeups: u64,
+}
+
+impl Scheduler {
+    pub fn new(poll_interval: u64) -> Self {
+        Self {
+            poll_interval: poll_interval.max(1),
+            wall_busy: Duration::ZERO,
+            wall_idle: Duration::ZERO,
+            fast_forwarded: 0,
+            idle_waits: 0,
+            wakeups: 0,
+        }
+    }
+
+    /// True if the bridge polls the link on this cycle.
+    pub fn at_poll_boundary(&self, cycle: u64) -> bool {
+        self.poll_interval <= 1 || cycle % self.poll_interval == 0
+    }
+
+    /// Jump the cycle counter to `to` (a [`Horizon::At`] target),
+    /// returning how many cycles were skipped. The caller must have
+    /// established that every skipped tick is a no-op.
+    pub fn fast_forward(&mut self, sim: &mut Sim, to: u64) -> u64 {
+        let skipped = to.saturating_sub(sim.cycle);
+        sim.cycle += skipped;
+        self.fast_forwarded += skipped;
+        skipped
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -218,6 +357,52 @@ mod tests {
         let mut f: Fifo<u32> = Fifo::new(1);
         f.push(1);
         f.push(2);
+    }
+
+    #[test]
+    fn fifo_try_push_reports_instead_of_panicking() {
+        let mut f: Fifo<u32> = Fifo::named(1, "bridge.dm_r");
+        assert!(f.try_push(1).is_ok());
+        let err = f.try_push(2).unwrap_err();
+        let s = err.to_string();
+        assert!(s.contains("bridge.dm_r"), "{s}");
+        assert!(s.contains("overflow"), "{s}");
+    }
+
+    #[test]
+    fn horizon_min_ordering() {
+        use Horizon::*;
+        assert_eq!(Now.min(Idle), Now);
+        assert_eq!(At(5).min(Now), Now);
+        assert_eq!(At(5).min(At(3)), At(3));
+        assert_eq!(At(7).min(Idle), At(7));
+        assert_eq!(Idle.min(Idle), Idle);
+        assert_eq!(Horizon::at_or_now(3, 5), Now);
+        assert_eq!(Horizon::at_or_now(5, 5), Now);
+        assert_eq!(Horizon::at_or_now(9, 5), At(9));
+    }
+
+    #[test]
+    fn scheduler_fast_forward_accounts_cycles() {
+        let mut sim = Sim::new();
+        let mut sched = Scheduler::new(1);
+        sim.cycle = 10;
+        assert_eq!(sched.fast_forward(&mut sim, 1256), 1246);
+        assert_eq!(sim.cycle, 1256);
+        assert_eq!(sched.fast_forwarded, 1246);
+        // Backwards targets are a no-op, never a rewind.
+        assert_eq!(sched.fast_forward(&mut sim, 100), 0);
+        assert_eq!(sim.cycle, 1256);
+    }
+
+    #[test]
+    fn scheduler_poll_boundaries() {
+        let s = Scheduler::new(4);
+        assert!(s.at_poll_boundary(0));
+        assert!(!s.at_poll_boundary(3));
+        assert!(s.at_poll_boundary(8));
+        let every = Scheduler::new(0); // clamped to 1
+        assert!(every.at_poll_boundary(17));
     }
 
     #[test]

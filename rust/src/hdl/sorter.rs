@@ -25,7 +25,7 @@
 use std::collections::VecDeque;
 
 use super::axi::{AxisBeat, WORDS_PER_BEAT};
-use super::sim::{Fifo, TickCtx};
+use super::sim::{Fifo, Horizon, TickCtx};
 use super::signal::{ProbeSink, Probed};
 
 /// The bitonic network stage list (k = merge block, j = partner
@@ -176,6 +176,19 @@ impl Sorter {
     /// Busy: anything collecting or in flight.
     pub fn busy(&self) -> bool {
         !self.collecting.is_empty() || !self.inflight.is_empty()
+    }
+
+    /// Event horizon (see [`Horizon`]): with a record in flight, the
+    /// next observable change is its scheduled first-output cycle —
+    /// every tick before `out_earliest` is a no-op given empty stream
+    /// FIFOs (which the platform checks separately). An empty or
+    /// input-starved sorter only changes on new stream beats, which
+    /// can only come from link traffic.
+    pub fn horizon(&self, now: u64) -> Horizon {
+        match self.inflight.front() {
+            Some(front) => Horizon::at_or_now(front.out_earliest, now),
+            None => Horizon::Idle,
+        }
     }
 
     /// One clock cycle: consume ≤1 input beat, produce ≤1 output beat.
@@ -497,6 +510,38 @@ mod tests {
         assert_eq!(s.length_errors, 1);
         assert_eq!(s.records_done, 0);
         assert!(!s.busy(), "dropped record must not linger");
+    }
+
+    #[test]
+    fn horizon_tracks_inflight_schedule() {
+        let mut s = Sorter::new(SorterCfg { n: 64, latency: 200, pipeline_records: 4 });
+        assert_eq!(s.horizon(0), Horizon::Idle, "empty sorter waits on input");
+        // Feed a whole record; the horizon must jump to the scheduled
+        // first-output cycle, then collapse to Now once reached.
+        let beats = words_to_beats(&(0..64).collect::<Vec<i32>>());
+        let mut s_axis = Fifo::new(64);
+        let mut m_axis = Fifo::new(2);
+        for b in beats {
+            s_axis.push(b);
+        }
+        s_axis.commit();
+        let forces = ForceMap::new();
+        let mut cycle = 0u64;
+        while s.beats_in < 16 {
+            let ctx = TickCtx { cycle, forces: &forces };
+            s.tick(&ctx, &mut s_axis, &mut m_axis);
+            s_axis.commit();
+            m_axis.commit();
+            cycle += 1;
+            assert!(cycle < 1000, "record never consumed");
+        }
+        match s.horizon(cycle) {
+            Horizon::At(c) => {
+                assert!(c > cycle, "horizon {c} not in the future of {cycle}");
+                assert_eq!(s.horizon(c), Horizon::Now, "reached horizon must tick");
+            }
+            other => panic!("expected At(_) with a record in flight, got {other:?}"),
+        }
     }
 
     #[test]

@@ -26,7 +26,37 @@
 //! functional twin of the RTL sorter — and the same executable powers
 //! the functional fast mode of the accelerator.
 //!
-//! See `DESIGN.md` for the full inventory and experiment index.
+//! ## Event-driven co-simulation scheduler
+//!
+//! The paper's §IV-C slowdown comes from the HDL side free-running and
+//! polling the link every cycle. This reproduction replaces that with
+//! an event-driven core (see [`hdl::sim::Horizon`] and the run loop in
+//! [`coordinator::cosim::run_hdl_loop`]) built on two contracts:
+//!
+//! * **Horizon contract** — after each tick every module reports when
+//!   its state can next change absent new link input: `Now` (keep
+//!   ticking), `At(c)` (a scheduled future event, e.g. the sorter's
+//!   fixed pipeline latency — the loop *fast-forwards* the cycle
+//!   counter across the gap, every skipped tick being provably a
+//!   no-op), or `Idle` (only link input can change anything). Modules
+//!   must degrade to `Now` when unsure; `At`/`Idle` are promises.
+//!
+//! * **Poll/doorbell contract** — the link is polled in batches into a
+//!   reused buffer ([`link::Endpoint::poll_into`]); when the platform
+//!   is `Idle` the loop blocks in [`link::Endpoint::wait_any`] with a
+//!   deadline instead of sleep-polling. In-process transports ring a
+//!   [`link::Doorbell`] on every send (wakeups are immediate); socket
+//!   transports nap-poll inside the wait. On wakeup the link is
+//!   drained *before* the next tick, and control-only traffic (acks,
+//!   handshakes) consumes **no device time**.
+//!
+//! Device time therefore advances only as a function of the message
+//! sequence — never of wall-clock — which both removes the idle-spin
+//! wall cost and makes same-seed runs cycle-deterministic (identical
+//! `device_cycles` and VCD change counts).
+//!
+//! See `DESIGN.md` for the full inventory and `EXPERIMENTS.md` §Perf
+//! for the measured before/after time-gap factors.
 
 pub mod config;
 pub mod coordinator;

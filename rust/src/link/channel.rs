@@ -14,11 +14,17 @@
 //! handshake whenever the peer (re)connects with a new session id.
 
 use std::collections::VecDeque;
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use super::msg::{Msg, Side};
-use super::transport::Transport;
+use super::transport::{Doorbell, Transport};
 use crate::{Error, Result};
+
+/// Nap length while waiting on a transport that has no doorbell
+/// (sockets): short enough to keep UDS latency close to the old
+/// poll-every-cycle behaviour, long enough not to burn a core.
+const UNWIRED_NAP: Duration = Duration::from_micros(20);
 
 /// How many received payloads may accumulate before an eager Ack is
 /// pushed (Acks are otherwise piggybacked on the next poll).
@@ -170,6 +176,29 @@ impl LinkPair {
         self.tx.send(msg)
     }
 
+    /// Register the owning endpoint's doorbell on the receive
+    /// direction (transports that cannot ring ignore it).
+    fn attach_doorbell(&mut self, db: &Arc<Doorbell>) {
+        self.rx.transport.set_doorbell(db.clone());
+    }
+
+    /// True if polling this pair would make progress now: buffered or
+    /// freshly arrived receive traffic, or a fresh stream that needs
+    /// the poll path to run its Hello/replay handshake.
+    fn rx_ready(&mut self) -> Result<bool> {
+        Ok(self.rx.transport.peek_reconnected()
+            || self.tx.transport.peek_reconnected()
+            || self.rx.transport.ready()?)
+    }
+
+    /// Non-blocking (re)connect attempt on the transmit direction —
+    /// an idle listener must keep accepting so a restarted peer can
+    /// complete all four channels of the rendezvous.
+    fn nudge_tx(&mut self) -> Result<()> {
+        let _ = self.tx.transport.reconnect()?;
+        Ok(())
+    }
+
     /// Announce ourselves (startup and after any reconnect).
     fn hello(&mut self, side: Side) {
         self.tx.send_control(&Msg::Hello {
@@ -318,16 +347,24 @@ pub struct Endpoint {
     /// Per-label message counters (for the §V vpcie comparison).
     pub sent_by_label: std::collections::BTreeMap<&'static str, u64>,
     pub recv_by_label: std::collections::BTreeMap<&'static str, u64>,
+    /// Wakeup doorbell shared by both pairs' receive directions, so an
+    /// idle side can block in [`Endpoint::wait_any`] instead of
+    /// spin-polling (the event-driven scheduler's wake path).
+    doorbell: Arc<Doorbell>,
 }
 
 impl Endpoint {
-    pub fn new(side: Side, pair_a: LinkPair, pair_b: LinkPair) -> Self {
+    pub fn new(side: Side, mut pair_a: LinkPair, mut pair_b: LinkPair) -> Self {
+        let doorbell = Doorbell::new();
+        pair_a.attach_doorbell(&doorbell);
+        pair_b.attach_doorbell(&doorbell);
         Self {
             side,
             pair_a,
             pair_b,
             sent_by_label: Default::default(),
             recv_by_label: Default::default(),
+            doorbell,
         }
     }
 
@@ -441,15 +478,66 @@ impl Endpoint {
         }
     }
 
-    /// Drain both pairs; returns all newly delivered payload messages.
-    pub fn poll(&mut self) -> Result<Vec<Msg>> {
-        let mut out = Vec::new();
-        self.pair_a.poll(self.side, &mut out)?;
-        self.pair_b.poll(self.side, &mut out)?;
-        for m in &out {
+    /// Drain both pairs into `out` (appended); returns the number of
+    /// newly delivered payload messages. This is the hot-path form:
+    /// callers that poll every simulated cycle keep one buffer and
+    /// reuse it instead of allocating a `Vec` per cycle.
+    pub fn poll_into(&mut self, out: &mut Vec<Msg>) -> Result<usize> {
+        let start = out.len();
+        self.pair_a.poll(self.side, out)?;
+        self.pair_b.poll(self.side, out)?;
+        for m in &out[start..] {
             *self.recv_by_label.entry(m.label()).or_default() += 1;
         }
+        Ok(out.len() - start)
+    }
+
+    /// Drain both pairs; returns all newly delivered payload messages.
+    /// (Allocating convenience wrapper over [`Endpoint::poll_into`].)
+    pub fn poll(&mut self) -> Result<Vec<Msg>> {
+        let mut out = Vec::new();
+        self.poll_into(&mut out)?;
         Ok(out)
+    }
+
+    /// True if a poll would make progress now (received traffic
+    /// buffered or a fresh stream awaiting its handshake). Also keeps
+    /// idle listeners accepting so restarted peers can rendezvous.
+    pub fn rx_ready(&mut self) -> Result<bool> {
+        let ready = self.pair_a.rx_ready()? || self.pair_b.rx_ready()?;
+        if !ready {
+            self.pair_a.nudge_tx()?;
+            self.pair_b.nudge_tx()?;
+        }
+        Ok(ready)
+    }
+
+    /// Block until receive traffic is available on either pair or
+    /// `timeout` expires; returns whether traffic is waiting. In-proc
+    /// endpoints sleep on the doorbell (woken by the peer's send);
+    /// socket endpoints nap-poll with the same granularity the old
+    /// idle loop used. This is the deadline-bounded wait the
+    /// event-driven HDL scheduler blocks in while the platform is
+    /// provably idle.
+    pub fn wait_any(&mut self, timeout: Duration) -> Result<bool> {
+        let deadline = Instant::now() + timeout;
+        loop {
+            // Epoch before the ready check: a ring that lands between
+            // the check and the wait is then never lost.
+            let seen = self.doorbell.epoch();
+            if self.rx_ready()? {
+                return Ok(true);
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Ok(false);
+            }
+            if self.doorbell.is_wired() {
+                self.doorbell.wait(seen, deadline - now);
+            } else {
+                std::thread::sleep(UNWIRED_NAP.min(deadline - now));
+            }
+        }
     }
 
     /// Poll until `pred` matches a delivered message or the timeout
@@ -476,10 +564,11 @@ impl Endpoint {
             if found.is_some() {
                 return Ok(found);
             }
-            if Instant::now() >= deadline {
+            let now = Instant::now();
+            if now >= deadline {
                 return Ok(None);
             }
-            std::thread::sleep(Duration::from_micros(20));
+            self.wait_any(deadline - now)?;
         }
     }
 
@@ -572,6 +661,47 @@ mod tests {
         let mut rest = vm.poll().unwrap();
         rest.extend(spill);
         assert_eq!(rest.len(), 2);
+    }
+
+    #[test]
+    fn wait_any_wakes_on_traffic_and_times_out_clean() {
+        let (mut vm, mut hdl) = Endpoint::inproc_pair();
+        // Nothing pending: times out false, promptly.
+        let t0 = Instant::now();
+        assert!(!hdl.wait_any(Duration::from_millis(30)).unwrap());
+        assert!(t0.elapsed() >= Duration::from_millis(25));
+        // A send from the peer thread wakes the waiter early.
+        let h = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(20));
+            vm.send(&Msg::MmioWrite { bar: 0, addr: 0, data: vec![0; 4] }).unwrap();
+            vm
+        });
+        let t0 = Instant::now();
+        assert!(hdl.wait_any(Duration::from_secs(10)).unwrap());
+        assert!(
+            t0.elapsed() < Duration::from_secs(5),
+            "doorbell wake took {:?}",
+            t0.elapsed()
+        );
+        assert_eq!(hdl.poll().unwrap().len(), 1);
+        let _ = h.join().unwrap();
+    }
+
+    #[test]
+    fn poll_into_reuses_buffer_and_appends() {
+        let (mut vm, mut hdl) = Endpoint::inproc_pair();
+        let mut buf = Vec::with_capacity(8);
+        for i in 0..3u64 {
+            vm.send(&Msg::MmioWrite { bar: 0, addr: i, data: vec![i as u8] }).unwrap();
+        }
+        assert_eq!(hdl.poll_into(&mut buf).unwrap(), 3);
+        assert_eq!(buf.len(), 3);
+        let cap = buf.capacity();
+        buf.clear();
+        vm.send(&Msg::MmioWrite { bar: 0, addr: 9, data: vec![9] }).unwrap();
+        assert_eq!(hdl.poll_into(&mut buf).unwrap(), 1);
+        assert_eq!(buf.len(), 1);
+        assert_eq!(buf.capacity(), cap, "cleared buffer must be reused, not reallocated");
     }
 
     #[test]

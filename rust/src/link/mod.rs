@@ -22,4 +22,6 @@ pub mod transport;
 
 pub use channel::{Endpoint, LinkPair, ReliableRx, ReliableTx};
 pub use msg::{LinkMode, Msg, Side};
-pub use transport::{make_inproc_pair, InProcTransport, Transport, UdsListener, UdsTransport};
+pub use transport::{
+    make_inproc_pair, Doorbell, InProcTransport, Transport, UdsListener, UdsTransport,
+};

@@ -15,11 +15,65 @@
 use std::io::{ErrorKind, Read, Write};
 use std::os::unix::net::{UnixListener, UnixStream};
 use std::path::{Path, PathBuf};
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::{Error, Result};
+
+/// Receiver-side wakeup doorbell: lets an idle endpoint block until a
+/// peer enqueues traffic instead of spin-polling (the event-driven
+/// scheduler's wake path). The epoch counter makes the classic
+/// check-then-wait race benign: read the epoch, check for data, then
+/// wait only while the epoch is unchanged — a ring between the check
+/// and the wait is never lost.
+pub struct Doorbell {
+    epoch: Mutex<u64>,
+    cv: Condvar,
+    /// True once at least one sender can actually ring this bell
+    /// (in-proc transports). Unwired bells fall back to nap-polling.
+    wired: AtomicBool,
+}
+
+impl Doorbell {
+    pub fn new() -> Arc<Doorbell> {
+        Arc::new(Doorbell {
+            epoch: Mutex::new(0),
+            cv: Condvar::new(),
+            wired: AtomicBool::new(false),
+        })
+    }
+
+    /// Wake every waiter (called by senders after enqueueing a frame).
+    pub fn ring(&self) {
+        let mut e = self.epoch.lock().unwrap();
+        *e = e.wrapping_add(1);
+        self.cv.notify_all();
+    }
+
+    /// Current epoch — sample *before* checking for data.
+    pub fn epoch(&self) -> u64 {
+        *self.epoch.lock().unwrap()
+    }
+
+    /// Block until the epoch moves past `seen` or `timeout` elapses.
+    pub fn wait(&self, seen: u64, timeout: Duration) {
+        let g = self.epoch.lock().unwrap();
+        let _ = self
+            .cv
+            .wait_timeout_while(g, timeout, |e| *e == seen)
+            .unwrap();
+    }
+
+    pub fn mark_wired(&self) {
+        self.wired.store(true, Ordering::Relaxed);
+    }
+
+    /// Whether any sender rings this bell (false ⇒ waiters must poll).
+    pub fn is_wired(&self) -> bool {
+        self.wired.load(Ordering::Relaxed)
+    }
+}
 
 /// A one-way byte-frame transport.
 pub trait Transport: Send {
@@ -28,6 +82,25 @@ pub trait Transport: Send {
     fn send(&mut self, frame: &[u8]) -> Result<()>;
     /// Non-blocking receive.
     fn try_recv(&mut self) -> Result<Option<Vec<u8>>>;
+    /// True if a receive would make progress right now. Implementations
+    /// should pull pending bytes into their buffers (and attempt a
+    /// non-blocking reconnect) so an idle waiter observes arrivals.
+    /// The conservative default keeps unknown transports on the old
+    /// poll-every-cycle behaviour.
+    fn ready(&mut self) -> Result<bool> {
+        Ok(true)
+    }
+    /// Register the receiver's doorbell so the *sending* peer can wake
+    /// it on enqueue. Transports that cannot ring (sockets) ignore it
+    /// and their waiters nap-poll instead.
+    fn set_doorbell(&mut self, _db: Arc<Doorbell>) {}
+    /// Non-consuming view of the reconnect flag ([`take_reconnected`]
+    /// stays the consuming one, used by the reliable layer's
+    /// handshake): lets an idle waiter notice a fresh stream and hand
+    /// control back to the poll path without eating the flag.
+    fn peek_reconnected(&self) -> bool {
+        false
+    }
     /// Blocking receive with timeout.
     fn recv_timeout(&mut self, timeout: Duration) -> Result<Option<Vec<u8>>> {
         let deadline = Instant::now() + timeout;
@@ -71,6 +144,8 @@ struct InProcQueue {
     len: AtomicUsize,
     /// Peers alive (2 at creation; each side decrements on drop).
     peers: AtomicUsize,
+    /// Receiver's doorbell, rung by the sender after each enqueue.
+    doorbell: Mutex<Option<Arc<Doorbell>>>,
 }
 
 /// In-process transport: a bidirectional pair of queues.
@@ -93,6 +168,7 @@ pub fn make_inproc_pair() -> (InProcTransport, InProcTransport) {
             q: Mutex::new(std::collections::VecDeque::new()),
             len: AtomicUsize::new(0),
             peers: AtomicUsize::new(2),
+            doorbell: Mutex::new(None),
         })
     };
     let ab = mk();
@@ -108,9 +184,16 @@ impl Transport for InProcTransport {
         if self.tx.peers.load(Ordering::Relaxed) < 2 {
             return Err(Error::link("inproc peer dropped"));
         }
-        let mut q = self.tx.q.lock().unwrap();
-        q.push_back(frame.to_vec());
-        self.tx.len.store(q.len(), Ordering::Release);
+        {
+            let mut q = self.tx.q.lock().unwrap();
+            q.push_back(frame.to_vec());
+            self.tx.len.store(q.len(), Ordering::Release);
+        }
+        // Wake the receiver if it sleeps on a doorbell (after the
+        // queue lock is released, so the waiter finds the frame).
+        if let Some(db) = self.tx.doorbell.lock().unwrap().as_ref() {
+            db.ring();
+        }
         Ok(())
     }
 
@@ -123,6 +206,15 @@ impl Transport for InProcTransport {
         let f = q.pop_front();
         self.rx.len.store(q.len(), Ordering::Release);
         Ok(f)
+    }
+
+    fn ready(&mut self) -> Result<bool> {
+        Ok(self.rx.len.load(Ordering::Acquire) > 0)
+    }
+
+    fn set_doorbell(&mut self, db: Arc<Doorbell>) {
+        db.mark_wired();
+        *self.rx.doorbell.lock().unwrap() = Some(db);
     }
 
     fn label(&self) -> &'static str {
@@ -285,6 +377,21 @@ impl Transport for UdsTransport {
         self.stream.is_some()
     }
 
+    fn ready(&mut self) -> Result<bool> {
+        if !self.rdbuf.is_empty() {
+            return Ok(true);
+        }
+        // An idle waiter must still accept/redial so a (re)starting
+        // peer can get through — reconnect() is non-blocking.
+        let _ = self.reconnect()?;
+        self.fill()?;
+        Ok(!self.rdbuf.is_empty())
+    }
+
+    fn peek_reconnected(&self) -> bool {
+        self.newly_connected
+    }
+
     fn take_reconnected(&mut self) -> bool {
         std::mem::take(&mut self.newly_connected)
     }
@@ -336,6 +443,39 @@ mod tests {
             b"world"
         );
         assert!(b.try_recv().unwrap().is_none());
+    }
+
+    #[test]
+    fn inproc_doorbell_wakes_waiter() {
+        let (mut a, mut b) = make_inproc_pair();
+        let db = Doorbell::new();
+        b.set_doorbell(db.clone());
+        assert!(db.is_wired());
+        let seen = db.epoch();
+        assert!(!b.ready().unwrap());
+        let h = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(20));
+            a.send(b"ding").unwrap();
+            a // keep the peer alive until joined
+        });
+        // The wait must return promptly once the send rings the bell
+        // (well before the 5 s timeout).
+        let t0 = Instant::now();
+        db.wait(seen, Duration::from_secs(5));
+        assert!(t0.elapsed() < Duration::from_secs(2), "doorbell never rang");
+        assert!(b.ready().unwrap());
+        assert_eq!(b.try_recv().unwrap().unwrap(), b"ding");
+        let _ = h.join().unwrap();
+    }
+
+    #[test]
+    fn doorbell_ring_before_wait_is_not_lost() {
+        let db = Doorbell::new();
+        let seen = db.epoch();
+        db.ring();
+        let t0 = Instant::now();
+        db.wait(seen, Duration::from_secs(5)); // must return immediately
+        assert!(t0.elapsed() < Duration::from_millis(500));
     }
 
     #[test]

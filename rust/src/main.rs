@@ -103,17 +103,26 @@ fn cmd_cosim(cfg: &Config) -> Result<()> {
         rep.device_cycles,
         fmt_dur(Duration::from_nanos(vmhdl::hdl::cycles_to_ns(rep.device_cycles)))
     );
+    // Honest rate: fast-forwarded cycles cost no wall time, so they
+    // are excluded — this is ticked cycles per second of busy wall.
+    let ticked = rep.hdl.cycles.saturating_sub(rep.hdl.fast_forwarded_cycles);
     println!(
-        "hdl side: {} cycles in {} ({:.2} Mcycles/s), {} mmio reads, {} mmio writes, \
-         {} dma reads, {} dma writes, {} irqs",
+        "hdl side: {} cycles ({} ticked) in {} busy / {} idle ({:.2} Mcycles/s ticked), \
+         {} mmio reads, {} mmio writes, {} dma reads, {} dma writes, {} irqs",
         rep.hdl.cycles,
-        fmt_dur(rep.hdl.wall),
-        rep.hdl.cycles as f64 / rep.hdl.wall.as_secs_f64().max(1e-9) / 1e6,
+        ticked,
+        fmt_dur(rep.hdl.wall_busy),
+        fmt_dur(rep.hdl.wall_idle),
+        ticked as f64 / rep.hdl.wall_busy.as_secs_f64().max(1e-9) / 1e6,
         rep.hdl.mmio_reads,
         rep.hdl.mmio_writes,
         rep.hdl.dma_read_reqs,
         rep.hdl.dma_write_reqs,
         rep.hdl.irqs_sent,
+    );
+    println!(
+        "scheduler: {} cycles fast-forwarded, {} idle waits ({} wakeups)",
+        rep.hdl.fast_forwarded_cycles, rep.hdl.idle_waits, rep.hdl.wakeups,
     );
     println!(
         "link: {} messages, {} bytes{}",

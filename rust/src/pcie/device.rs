@@ -221,14 +221,18 @@ impl PcieFpgaDevice {
             if let Some(v) = found {
                 return Ok(v);
             }
-            if std::time::Instant::now() >= deadline {
+            let now = std::time::Instant::now();
+            if now >= deadline {
                 self.stats.mmio_timeouts += 1;
                 return Err(Error::cosim(format!(
                     "MMIO completion timeout after {:?} — HDL side hung or detached",
                     self.mmio_timeout
                 )));
             }
-            std::thread::sleep(Duration::from_micros(20));
+            // Block on the link doorbell instead of sleep-polling: an
+            // in-proc completion wakes us the instant it is enqueued
+            // (the RTT path of Table III), sockets nap-poll inside.
+            self.link.wait_any((deadline - now).min(Duration::from_millis(5)))?;
         }
     }
 

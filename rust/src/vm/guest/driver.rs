@@ -85,8 +85,26 @@ pub struct SortDriver {
     pub n: usize,
     pub stats: XferStats,
     /// Completion timeout (a hung device is reported, not spun forever).
+    /// Extended while the device demonstrably makes progress — see
+    /// `hang_progress_cycles`.
     pub timeout: Duration,
+    /// Hang detection is **cycle-based**, not wall-clock-based: while
+    /// waiting for completion the driver samples the device's
+    /// free-running cycle counter; if it advances by more than this
+    /// many cycles between samples the device is busy and the wall
+    /// deadline is pushed out (so a loaded host never flakes a healthy
+    /// run), while a counter frozen for several consecutive samples
+    /// (beyond the footprint of the sampling reads themselves, ~15
+    /// cycles) is reported as a hang without waiting out the full
+    /// deadline. Under the event-driven scheduler an idle device
+    /// consumes no cycles at all, which makes the frozen-counter
+    /// signal exact.
+    pub hang_progress_cycles: u64,
 }
+
+/// Consecutive zero-progress samples before the device is declared
+/// hung (each sample is one IRQ-wait slice).
+const HANG_STALL_SAMPLES: u32 = 4;
 
 impl SortDriver {
     pub fn new(n: usize) -> Self {
@@ -99,6 +117,7 @@ impl SortDriver {
             n,
             stats: XferStats::default(),
             timeout: Duration::from_secs(10),
+            hang_progress_cycles: 64,
         }
     }
 
@@ -254,33 +273,67 @@ impl SortDriver {
     /// Wait for the S2MM IOC (write-back complete ⇒ data is in host
     /// memory), then acknowledge both channels.
     fn wait_complete(&mut self, env: &mut GuestEnv) -> Result<()> {
-        let deadline = std::time::Instant::now() + self.timeout;
+        let mut deadline = std::time::Instant::now() + self.timeout;
         match self.mode {
-            CompletionMode::Irq => loop {
-                let got = env.wait_irq(self.timeout.min(Duration::from_millis(50)))?;
-                match got {
-                    Some(IRQ_S2MM) => {
-                        self.stats.irqs_taken += 1;
-                        break;
-                    }
-                    Some(IRQ_MM2S) => {
-                        self.stats.irqs_taken += 1;
-                        // Read side done; ack it now.
-                        self.ack(env, dma_regs::MM2S_DMASR)?;
-                        continue;
-                    }
-                    Some(_) => continue,
-                    None => {
-                        if std::time::Instant::now() >= deadline {
-                            self.state = DriverState::Failed;
-                            return Err(Error::cosim(
-                                "DMA completion interrupt never arrived — device hung?"
-                                    .to_string(),
-                            ));
+            CompletionMode::Irq => {
+                let slice = self.timeout.min(Duration::from_millis(50));
+                // Progress may extend the deadline, but never beyond
+                // this absolute cap — a device that keeps ticking
+                // without ever completing must still surface as an
+                // error rather than blocking the caller forever.
+                let hard_deadline = std::time::Instant::now() + self.timeout * 10;
+                // Baseline for cycle-based hang detection (see the
+                // `hang_progress_cycles` docs).
+                let mut last_cycles = self.read_cycles(env)?;
+                let mut stalled = 0u32;
+                loop {
+                    let got = env.wait_irq(slice)?;
+                    match got {
+                        Some(IRQ_S2MM) => {
+                            self.stats.irqs_taken += 1;
+                            break;
+                        }
+                        Some(IRQ_MM2S) => {
+                            self.stats.irqs_taken += 1;
+                            // Read side done; ack it now.
+                            self.ack(env, dma_regs::MM2S_DMASR)?;
+                            continue;
+                        }
+                        Some(_) => continue,
+                        None => {
+                            let now_c = self.read_cycles(env)?;
+                            // Progress is judged per sample, and the
+                            // baseline advances every sample: otherwise
+                            // the sampling reads' own footprint (~15
+                            // cycles each) would accumulate across
+                            // samples and eventually masquerade as
+                            // progress, extending the deadline forever
+                            // on a genuinely hung device.
+                            let progressed =
+                                now_c.saturating_sub(last_cycles) > self.hang_progress_cycles;
+                            last_cycles = now_c;
+                            if progressed {
+                                // Device demonstrably busy: extend the
+                                // wall deadline instead of flaking.
+                                stalled = 0;
+                                deadline = std::time::Instant::now() + self.timeout;
+                            } else {
+                                stalled += 1;
+                            }
+                            let now = std::time::Instant::now();
+                            if stalled >= HANG_STALL_SAMPLES
+                                || now >= deadline.min(hard_deadline)
+                            {
+                                self.state = DriverState::Failed;
+                                return Err(Error::cosim(format!(
+                                    "DMA completion interrupt never arrived — device \
+                                     cycle counter frozen at {now_c} (hung?)"
+                                )));
+                            }
                         }
                     }
                 }
-            },
+            }
             CompletionMode::Poll => loop {
                 let s = env.read32(0, DMA_BASE + dma_regs::S2MM_DMASR as u64)?;
                 self.stats.polls += 1;

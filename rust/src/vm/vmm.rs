@@ -103,17 +103,20 @@ impl Vmm {
     }
 
     /// Block until an interrupt arrives or `timeout` expires (the
-    /// guest's `wait_event_interruptible` analogue).
+    /// guest's `wait_event_interruptible` analogue). Sleeps on the
+    /// link doorbell, so an MSI enqueued by the HDL side wakes the
+    /// guest immediately instead of after a poll nap.
     pub fn wait_irq(&mut self, timeout: std::time::Duration) -> Result<Option<u16>> {
         let deadline = std::time::Instant::now() + timeout;
         loop {
             if let Some(v) = self.take_irq()? {
                 return Ok(Some(v));
             }
-            if std::time::Instant::now() >= deadline {
+            let now = std::time::Instant::now();
+            if now >= deadline {
                 return Ok(None);
             }
-            std::thread::sleep(std::time::Duration::from_micros(20));
+            self.dev.link_mut().wait_any(deadline - now)?;
         }
     }
 }
