@@ -1,0 +1,19 @@
+# Convenience targets. The default Rust build needs NONE of these —
+# `cargo build --release && cargo test -q` is self-contained (native
+# golden backend). `make artifacts` is only for the `pjrt` backend.
+
+.PHONY: build test artifacts pytest
+
+build:
+	cargo build --release
+
+test:
+	cargo test -q
+
+# Lower the jax/Pallas model to HLO-text artifacts for the PJRT golden
+# backend (rust builds with `--features pjrt` read these at run time).
+artifacts:
+	cd python && python3 -m compile.aot --out ../rust/artifacts
+
+pytest:
+	python3 -m pytest python/tests -q

@@ -3,38 +3,39 @@
 //! Boots the co-simulation (VM side + cycle-accurate HDL side), probes
 //! the PCIe FPGA pseudo device like a kernel driver would, offloads a
 //! few 1024-integer sort records through the DMA + streaming sorting
-//! network, takes the MSI completion interrupts, and checks every
-//! result against the AOT-compiled XLA golden model (the Pallas
-//! bitonic kernel's lowering).
+//! network, takes the MSI completion interrupts, and golden-checks
+//! every result against the reference model — the pure-Rust bitonic
+//! network by default, or the AOT-compiled XLA executables with
+//! `--features pjrt` + `make artifacts`.
 //!
 //! Run: `cargo run --release --example quickstart`
-//! (requires `make artifacts` once, for the golden check)
 
 use vmhdl::config::Config;
 use vmhdl::coordinator::scenario;
 use vmhdl::coordinator::stats::fmt_dur;
-use vmhdl::runtime::GoldenModel;
+use vmhdl::runtime::{self, GoldenBackend};
 
 fn main() -> vmhdl::Result<()> {
     let cfg = Config::default();
     println!("== VM-HDL co-simulation quickstart ==");
     println!("platform: 1024x32b streaming sorter @ 250 MHz, AXI DMA, PCIe bridge");
 
-    // The golden model is optional — skip gracefully if artifacts are
-    // not built so the quickstart always runs.
-    let mut golden = match GoldenModel::load(&cfg.artifacts, cfg.n) {
-        Ok(g) => {
-            println!("golden model: AOT XLA artifacts loaded from {:?}", cfg.artifacts);
-            Some(g)
-        }
-        Err(e) => {
-            println!("golden model unavailable ({e}); falling back to local checks");
-            None
-        }
-    };
+    // The golden backend is configurable; fall back gracefully (e.g. a
+    // pjrt request without artifacts) so the quickstart always runs.
+    let mut golden: Option<Box<dyn GoldenBackend>> =
+        match runtime::load_backend(cfg.backend, &cfg.artifacts, cfg.n) {
+            Ok(g) => {
+                println!("golden model: {} backend ready", g.name());
+                Some(g)
+            }
+            Err(e) => {
+                println!("golden model unavailable ({e}); falling back to local checks");
+                None
+            }
+        };
 
     let records = 4;
-    let rep = scenario::run_sort_offload(cfg.cosim()?, records, 0xFEED, golden.as_mut())?;
+    let rep = scenario::run_sort_offload(cfg.cosim()?, records, 0xFEED, golden.as_deref_mut())?;
 
     println!();
     println!("sorted {records} records of 1024 int32 through the RTL pipeline:");
@@ -73,7 +74,7 @@ fn main() -> vmhdl::Result<()> {
     println!(
         "  verification        : {}",
         if rep.golden_checked {
-            "bit-exact vs AOT XLA golden model (Pallas bitonic kernel)"
+            "bit-exact vs the golden-model backend (bitonic reference network)"
         } else {
             "bit-exact vs local reference sort"
         }

@@ -3,11 +3,16 @@
 HLO text (NOT ``lowered.compile()``/``.serialize()``) is the interchange
 format: jax >= 0.5 emits HloModuleProto with 64-bit instruction ids that
 the rust side's xla_extension 0.5.1 rejects; the text parser reassigns
-ids and round-trips cleanly (see /opt/xla-example/README.md).
+ids and round-trips cleanly (consumed by ``rust/src/runtime/pjrt.rs``,
+which documents the same contract from the other side).
 
 Run once via ``make artifacts``; the rust binary is self-contained
-afterwards. A manifest file records every artifact's entry signature so
-the rust runtime can sanity-check shapes before compiling.
+afterwards — but note the artifacts are only read by builds with the
+``pjrt`` cargo feature (``cargo build --features pjrt``). The default
+build golden-checks against the pure-Rust native backend and needs
+neither this script nor its outputs. A manifest file records every
+artifact's entry signature so the rust runtime can sanity-check shapes
+before compiling.
 """
 
 from __future__ import annotations

@@ -15,7 +15,8 @@ and BlockSpec tiles the *batch* axis so each grid step is one VMEM
 round trip. This is a VPU (vector) workload; there is no MXU use.
 
 The kernel must be lowered with ``interpret=True`` (CPU PJRT cannot run
-Mosaic custom-calls); see /opt/xla-example/README.md.
+Mosaic custom-calls); ``aot.py`` documents the HLO-text interchange this
+feeds into, and ``rust/src/runtime/pjrt.rs`` is the consumer.
 """
 
 from __future__ import annotations

@@ -12,6 +12,7 @@ use crate::coordinator::cosim::{CoSimCfg, TransportKind};
 use crate::hdl::platform::PlatformCfg;
 use crate::hdl::sorter::SorterCfg;
 use crate::link::LinkMode;
+use crate::runtime::BackendKind;
 use crate::{Error, Result};
 
 /// All tunables of a co-simulation run.
@@ -35,10 +36,13 @@ pub struct Config {
     pub ram_size: usize,
     /// VCD output path (empty = off).
     pub vcd: Option<PathBuf>,
-    /// Artifacts directory for the golden model.
+    /// Artifacts directory for the golden model (pjrt backend only).
     pub artifacts: PathBuf,
-    /// Golden-check results against the AOT XLA model.
+    /// Golden-check results against the selected backend.
     pub golden: bool,
+    /// Golden-model backend: `native` (default, zero deps) or `pjrt`
+    /// (AOT XLA; needs the `pjrt` cargo feature + artifacts).
+    pub backend: BackendKind,
     /// Link poll interval in cycles.
     pub poll_interval: u64,
     /// Idle sleep (microseconds) for the HDL loop.
@@ -61,6 +65,7 @@ impl Default for Config {
             vcd: None,
             artifacts: PathBuf::from("artifacts"),
             golden: false,
+            backend: BackendKind::Native,
             poll_interval: 1,
             idle_sleep_us: 20,
             iters: 100,
@@ -97,6 +102,7 @@ impl Config {
             "vcd" => self.vcd = Some(PathBuf::from(value)),
             "artifacts" => self.artifacts = PathBuf::from(value),
             "golden" => self.golden = value.parse().map_err(|_| bad("golden"))?,
+            "backend" => self.backend = value.parse()?,
             "poll-interval" => {
                 self.poll_interval = value.parse().map_err(|_| bad("poll-interval"))?
             }
@@ -216,6 +222,15 @@ mod tests {
         assert_eq!(c.records, 11, "flag after file must win");
         assert_eq!(c.sorter_latency, 1300);
         let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn backend_knob() {
+        let mut c = Config::default();
+        assert_eq!(c.backend, BackendKind::Native, "native must be the default");
+        c.set("backend", "pjrt").unwrap();
+        assert_eq!(c.backend, BackendKind::Pjrt);
+        assert!(c.set("backend", "xla").is_err());
     }
 
     #[test]

@@ -5,7 +5,7 @@
 use std::time::{Duration, Instant};
 
 use super::cosim::{CoSim, CoSimCfg, HdlReport};
-use crate::runtime::GoldenModel;
+use crate::runtime::GoldenBackend;
 use crate::testutil::XorShift64;
 use crate::vm::guest::{app, SortDriver};
 use crate::vm::vmm::{GuestEnv, NoopHook};
@@ -19,7 +19,7 @@ pub struct ScenarioReport {
     pub wall: Duration,
     /// Device cycles consumed by the offload phase.
     pub device_cycles: u64,
-    /// Results checked against the AOT XLA golden model.
+    /// Results checked against a golden-model backend.
     pub golden_checked: bool,
     /// Full HDL-side report after shutdown.
     pub hdl: HdlReport,
@@ -47,13 +47,14 @@ impl TimeGap {
 }
 
 /// Run the paper's §III workload: probe, offload `records` sorted
-/// records, optionally golden-check every result against the compiled
-/// XLA model, and return the full accounting.
+/// records, optionally golden-check every result against a
+/// [`GoldenBackend`] (native reference or AOT XLA — the caller picks),
+/// and return the full accounting.
 pub fn run_sort_offload(
     cfg: CoSimCfg,
     records: usize,
     seed: u64,
-    mut golden: Option<&mut GoldenModel>,
+    mut golden: Option<&mut dyn GoldenBackend>,
 ) -> Result<ScenarioReport> {
     let mut cosim = CoSim::launch(cfg)?;
     let mut hook = NoopHook;
@@ -62,10 +63,11 @@ pub fn run_sort_offload(
     drv.timeout = Duration::from_secs(60);
     drv.probe(&mut env)?;
 
-    // Pre-warm the golden model: XLA compilation of the sort
-    // executable takes seconds and must not be billed to the offload.
+    // Pre-warm the golden model: backend preparation (PJRT compiles
+    // the sort executable for seconds; native is effectively free)
+    // must not be billed to the offload.
     if let Some(g) = golden.as_deref_mut() {
-        let warm = vec![0i32; 1024];
+        let warm = vec![0i32; g.n()];
         let _ = g.sort_i32(&[warm], false)?;
     }
 
@@ -124,7 +126,11 @@ pub fn run_rtt(cfg: CoSimCfg, iters: u32) -> Result<(TimeGap, app::RttReport)> {
 }
 
 /// Table III row 2: application execution time (one full offload).
-pub fn run_app_gap(cfg: CoSimCfg, records: usize, golden: Option<&mut GoldenModel>) -> Result<(TimeGap, ScenarioReport)> {
+pub fn run_app_gap(
+    cfg: CoSimCfg,
+    records: usize,
+    golden: Option<&mut dyn GoldenBackend>,
+) -> Result<(TimeGap, ScenarioReport)> {
     let rep = run_sort_offload(cfg, records, 0x7AB1E3, golden)?;
     let gap = TimeGap {
         what: "Application Execution Time",

@@ -6,6 +6,15 @@
 //! resource utilization of §III. Both are reproduced as documented,
 //! calibrated models (DESIGN.md §2): [`flow`] reproduces the debug
 //! iteration comparison, [`resources`] the LUT/BRAM utilization.
+//!
+//! Calibration policy: every constant is anchored on a number the
+//! paper itself reports (1617 s synthesis, 2672 s place-and-route,
+//! 120 s reboot; the platform IP LUT counts of §III) and scaled by
+//! the one free variable the model exposes (design size in LUTs, from
+//! [`ResourceModel`]). The co-simulation column of Table II is never
+//! modeled — it is measured live by `vmhdl flow` and the
+//! `table2_debug_iteration` bench, so the headline speedup always
+//! reflects this machine, not the paper's.
 
 pub mod flow;
 pub mod resources;

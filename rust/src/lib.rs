@@ -21,10 +21,13 @@
 //! 128-bit AXI-Stream) fed by a Xilinx-style AXI DMA ([`hdl::dma`],
 //! [`hdl::sorter`]), driven by a guest driver ([`vm::guest`]).
 //!
-//! Results are checked against an AOT-compiled XLA **golden model**
-//! ([`runtime`]) lowered from the Pallas bitonic-network kernel — the
-//! functional twin of the RTL sorter — and the same executable powers
-//! the functional fast mode of the accelerator.
+//! Results are checked against a pluggable **golden model**
+//! ([`runtime`]): by default a pure-Rust bitonic-network reference
+//! sort ([`runtime::NativeGolden`], zero external dependencies), or —
+//! behind the `pjrt` cargo feature — the AOT-compiled XLA executables
+//! lowered from the Pallas bitonic-network kernel. Either backend is
+//! the functional twin of the RTL sorter and powers the functional
+//! fast mode of the accelerator (`vmhdl golden`).
 //!
 //! ## Event-driven co-simulation scheduler
 //!
@@ -86,7 +89,7 @@ pub enum Error {
     /// Guest / VMM error.
     #[error("vm: {0}")]
     Vm(String),
-    /// PJRT / artifact errors.
+    /// Golden-model backend errors (artifacts, PJRT, record shape).
     #[error("runtime: {0}")]
     Runtime(String),
     /// Configuration errors.
@@ -123,6 +126,7 @@ impl Error {
     }
 }
 
+#[cfg(feature = "pjrt")]
 impl From<xla::Error> for Error {
     fn from(e: xla::Error) -> Self {
         Error::Runtime(e.to_string())

@@ -7,7 +7,8 @@
 //! vmhdl vm-side   [--dir <sockets>] [...]  the VM process (UDS)
 //! vmhdl rtt       [--iters N]              MMIO round-trip microbench (Table III)
 //! vmhdl irq       [--iters N]              interrupt-latency microbench
-//! vmhdl golden    [--records N]            run the AOT XLA model directly (func mode)
+//! vmhdl golden    [--records N] [--backend native|pjrt]
+//!                                          run the golden model directly (func mode)
 //! vmhdl flow      [--records N]            Table II debug-iteration comparison
 //! vmhdl resources                          §III resource-utilization model
 //! vmhdl topology                           print the component graph (Figure 1)
@@ -27,7 +28,7 @@ use vmhdl::coordinator::scenario;
 use vmhdl::costmodel::{flow, FlowModel, ResourceModel};
 use vmhdl::hdl::platform::Platform;
 use vmhdl::link::{Endpoint, Side};
-use vmhdl::runtime::GoldenModel;
+use vmhdl::runtime::{self, GoldenBackend};
 use vmhdl::testutil::XorShift64;
 use vmhdl::Result;
 
@@ -87,15 +88,20 @@ fn print_usage() {
 
 fn cmd_cosim(cfg: &Config) -> Result<()> {
     println!(
-        "co-simulation: {} records, mode={:?}, transport={}, golden={}",
-        cfg.records, cfg.mode, cfg.transport, cfg.golden
+        "co-simulation: {} records, mode={:?}, transport={}, golden={}{}",
+        cfg.records,
+        cfg.mode,
+        cfg.transport,
+        cfg.golden,
+        if cfg.golden { format!(" (backend {})", cfg.backend) } else { String::new() }
     );
-    let mut golden = if cfg.golden {
-        Some(GoldenModel::load(&cfg.artifacts, cfg.n)?)
+    let mut golden: Option<Box<dyn GoldenBackend>> = if cfg.golden {
+        Some(runtime::load_backend(cfg.backend, &cfg.artifacts, cfg.n)?)
     } else {
         None
     };
-    let rep = scenario::run_sort_offload(cfg.cosim()?, cfg.records, cfg.seed, golden.as_mut())?;
+    let rep =
+        scenario::run_sort_offload(cfg.cosim()?, cfg.records, cfg.seed, golden.as_deref_mut())?;
     println!(
         "offload: {} records in {} wall / {} device-cycles ({} device time)",
         rep.records,
@@ -128,7 +134,7 @@ fn cmd_cosim(cfg: &Config) -> Result<()> {
         "link: {} messages, {} bytes{}",
         rep.link_msgs,
         rep.link_bytes,
-        if rep.golden_checked { " — results golden-checked against AOT XLA" } else { "" }
+        if rep.golden_checked { " — results golden-checked against the reference model" } else { "" }
     );
     Ok(())
 }
@@ -184,7 +190,7 @@ fn cmd_irq(cfg: &Config) -> Result<()> {
 }
 
 fn cmd_golden(cfg: &Config) -> Result<()> {
-    let mut g = GoldenModel::load(&cfg.artifacts, cfg.n)?;
+    let mut g = runtime::load_backend(cfg.backend, &cfg.artifacts, cfg.n)?;
     let mut rng = XorShift64::new(cfg.seed);
     let records: Vec<Vec<i32>> = (0..cfg.records).map(|_| rng.vec_i32(cfg.n)).collect();
     let t0 = std::time::Instant::now();
@@ -193,14 +199,15 @@ fn cmd_golden(cfg: &Config) -> Result<()> {
     for (o, i) in out.iter().zip(&records) {
         let mut e = i.clone();
         e.sort_unstable();
-        assert_eq!(o, &e, "XLA result mismatch");
+        assert_eq!(o, &e, "golden result mismatch");
     }
     println!(
-        "functional mode (AOT XLA, no HDL): {} records in {} ({} per record; compile {} once)",
+        "functional mode ({} backend, no HDL): {} records in {} ({} per record; prep {} once)",
+        g.name(),
         cfg.records,
         fmt_dur(wall),
         fmt_dur(wall / cfg.records.max(1) as u32),
-        fmt_dur(g.compile_wall),
+        fmt_dur(g.stats().compile_wall),
     );
     Ok(())
 }

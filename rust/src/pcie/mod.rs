@@ -7,6 +7,24 @@
 //! (the NetFPGA SUME in the paper): BAR count/sizes and MSI
 //! capabilities, so the guest driver probes and binds to exactly what
 //! it would see on real hardware.
+//!
+//! Layer map (guest-visible surface → link messages):
+//!
+//! * [`config_space`] — type-0 configuration header + MSI capability
+//!   walker; what `lspci` would show for the board.
+//! * [`bar`] — BAR sizing/decode ([`BarSet`]): routes a guest physical
+//!   address to (BAR index, offset) the way the VMM's MMIO exits do.
+//! * [`device`] — [`PcieFpgaDevice`], the pseudo device itself: turns
+//!   guest MMIO into link messages, services HDL-initiated DMA against
+//!   guest memory ([`DmaTarget`]) and forwards MSIs ([`IrqSink`])
+//!   subject to the MSI enable/mask state the driver programmed.
+//! * [`tlp`] — the raw transaction-layer-packet codec used by
+//!   [`crate::link::LinkMode::Tlp`] to quantify the paper's §V
+//!   argument against forwarding low-level PCIe messages.
+//!
+//! Nothing in here knows about the sorter or the HDL platform: the
+//! boundary is exactly MMIO + DMA + MSI, which is what lets the same
+//! guest driver run unmodified against physical hardware.
 
 pub mod bar;
 pub mod config_space;

@@ -1,164 +1,117 @@
-//! PJRT runtime: load the AOT-compiled XLA artifacts and run them from
-//! the rust side (no python anywhere near the request path).
+//! Golden-model runtime: pluggable reference backends for checking
+//! (and functionally replacing) the cycle-accurate RTL datapath.
 //!
-//! The artifacts are lowered once by `python/compile/aot.py` from the
-//! L2 jax model (which calls the L1 Pallas bitonic-network kernel) to
-//! **HLO text** — the id-safe interchange format for this xla_extension
-//! (see aot.py and /opt/xla-example/README.md) — and compiled here on
-//! the PJRT CPU client at first use.
+//! Two roles, independent of the backend in use:
 //!
-//! Two roles:
 //! * **Golden model** — after every co-simulated offload the
-//!   coordinator replays the input through the compiled XLA sort and
+//!   coordinator replays the input through the reference sort and
 //!   compares bit-for-bit with what the RTL wrote back to guest
-//!   memory ([`GoldenModel::check_sorted`]).
-//! * **Functional fast mode** — the same executables serve as the
-//!   functional-level accelerator datapath (`--mode func` benches),
-//!   giving the "functional correctness without cycle accuracy" point
-//!   the paper makes in §IV-C.
+//!   memory ([`GoldenBackend::check_sorted`]).
+//! * **Functional fast mode** — the same backend serves as the
+//!   functional-level accelerator datapath (`--mode func` / the
+//!   `vmhdl golden` subcommand), giving the "functional correctness
+//!   without cycle accuracy" point the paper makes in §IV-C.
+//!
+//! Backends:
+//!
+//! * [`NativeGolden`] (**default**) — a pure-Rust bitonic-network
+//!   reference sort mirroring `python/compile/kernels/ref.py`. Always
+//!   compiled, needs no artifacts, no Python, no external libraries:
+//!   this is what makes `cargo build --release && cargo test -q` work
+//!   on a clean checkout.
+//! * `PjrtGolden` (behind the `pjrt` cargo feature) — compiles the
+//!   HLO-text artifacts lowered by `python/compile/aot.py` from the
+//!   L2 jax model (which calls the L1 Pallas bitonic-network kernel)
+//!   on a PJRT CPU client, closing the loop RTL == artifact ==
+//!   kernel == reference. Requires the `xla` bindings at build time
+//!   and `make artifacts` at run time; select it with
+//!   `--backend pjrt`.
+//!
+//! Both backends implement the same order-invariant record checksum
+//! contract (`python/compile/model.py::record_checksum`): int64 sum of
+//! the record xor-mixed with the int32 xor-fold in the high 32 bits.
 
-use std::collections::HashMap;
-use std::path::{Path, PathBuf};
+use std::path::Path;
+use std::time::Duration;
 
 use crate::{Error, Result};
 
-/// Artifact naming scheme (mirrors aot.py).
-fn artifact_name(kind: &str, batch: usize, n: usize, dtype: &str) -> String {
-    format!("{kind}_{batch}x{n}_{dtype}.hlo.txt")
-}
+pub mod native;
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
 
-/// The PJRT-backed golden model / functional accelerator.
-pub struct GoldenModel {
-    client: xla::PjRtClient,
-    dir: PathBuf,
-    exes: HashMap<String, xla::PjRtLoadedExecutable>,
-    /// Record length (words) the artifacts were lowered for.
-    pub n: usize,
-    /// Batch sizes available on disk (prefer the largest that fits).
-    pub batches: Vec<usize>,
+pub use native::NativeGolden;
+#[cfg(feature = "pjrt")]
+pub use pjrt::PjrtGolden;
+
+/// Cumulative cost accounting of a backend (all backends report the
+/// same shape so scenario output stays comparable across them).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct BackendStats {
+    /// Reference executions performed (one per record batch dispatched
+    /// to the underlying engine).
     pub executions: u64,
-    pub compile_wall: std::time::Duration,
-    pub exec_wall: std::time::Duration,
+    /// One-time preparation cost (PJRT: HLO→executable compilation;
+    /// native: zero).
+    pub compile_wall: Duration,
+    /// Cumulative execution wall time.
+    pub exec_wall: Duration,
 }
 
-impl GoldenModel {
-    /// Open the artifacts directory and the PJRT CPU client. Fails
-    /// fast (with a pointer to `make artifacts`) if artifacts are
-    /// missing.
-    pub fn load(dir: &Path, n: usize) -> Result<Self> {
-        let manifest = dir.join("manifest.txt");
-        if !manifest.exists() {
-            return Err(Error::runtime(format!(
-                "no artifacts at {} — run `make artifacts` first",
-                dir.display()
-            )));
-        }
-        let client = xla::PjRtClient::cpu()?;
-        // Discover available batch sizes for the sort artifact.
-        let mut batches: Vec<usize> = Vec::new();
-        for entry in std::fs::read_dir(dir)? {
-            let name = entry?.file_name().to_string_lossy().into_owned();
-            if let Some(rest) = name.strip_prefix("sort_") {
-                if let Some(bx) = rest.strip_suffix(&format!("x{n}_i32.hlo.txt")) {
-                    if let Ok(b) = bx.parse::<usize>() {
-                        batches.push(b);
-                    }
-                }
-            }
-        }
-        batches.sort_unstable();
-        if batches.is_empty() {
-            return Err(Error::runtime(format!(
-                "no sort_*x{n}_i32 artifacts in {}",
-                dir.display()
-            )));
-        }
-        Ok(Self {
-            client,
-            dir: dir.to_path_buf(),
-            exes: HashMap::new(),
-            n,
-            batches,
-            executions: 0,
-            compile_wall: std::time::Duration::ZERO,
-            exec_wall: std::time::Duration::ZERO,
-        })
-    }
+/// A golden-model backend: the functional twin of the RTL sorter.
+///
+/// The contract every backend must satisfy, for records of exactly
+/// [`n`](GoldenBackend::n) 32-bit words:
+///
+/// * [`sort_i32`](GoldenBackend::sort_i32) returns each record sorted
+///   along its length (ascending, or descending when asked) —
+///   bit-identical to `python/compile/kernels/ref.py`;
+/// * [`checksum`](GoldenBackend::checksum) is order-invariant over a
+///   record's words and follows
+///   `python/compile/model.py::record_checksum` exactly, so checksums
+///   computed by different backends (or by the python side) pair up.
+///
+/// # Example
+///
+/// ```
+/// use vmhdl::runtime::{GoldenBackend, NativeGolden};
+///
+/// let mut golden = NativeGolden::new(8).unwrap();
+/// let record = vec![5, 3, 7, 1, 0, -2, 9, 4];
+///
+/// // Functional fast mode: sort without any HDL simulation.
+/// let sorted = golden.sort_i32(&[record.clone()], false).unwrap();
+/// assert_eq!(sorted[0], vec![-2, 0, 1, 3, 4, 5, 7, 9]);
+///
+/// // Golden check: would flag any RTL result that mismatches.
+/// golden.check_sorted(&record, &sorted[0], false).unwrap();
+/// assert!(golden.check_sorted(&record, &record, false).is_err());
+///
+/// // Checksums are order-invariant (input pairs with its output).
+/// let a = golden.checksum(&record).unwrap();
+/// let b = golden.checksum(&sorted[0]).unwrap();
+/// assert_eq!(a, b);
+/// ```
+pub trait GoldenBackend {
+    /// Short backend identifier (`"native"`, `"pjrt"`).
+    fn name(&self) -> &'static str;
 
-    /// Compile (once) and fetch an executable by artifact file name.
-    fn exe(&mut self, fname: &str) -> Result<&xla::PjRtLoadedExecutable> {
-        if !self.exes.contains_key(fname) {
-            let path = self.dir.join(fname);
-            let t0 = std::time::Instant::now();
-            let proto = xla::HloModuleProto::from_text_file(
-                path.to_str().ok_or_else(|| Error::runtime("bad path"))?,
-            )?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = self.client.compile(&comp)?;
-            self.compile_wall += t0.elapsed();
-            self.exes.insert(fname.to_string(), exe);
-        }
-        Ok(&self.exes[fname])
-    }
+    /// Record length (32-bit words) this backend instance serves.
+    fn n(&self) -> usize;
 
-    /// Sort a batch of records (each exactly `n` i32 words) through
-    /// the compiled XLA executable. Splits across available artifact
-    /// batch sizes.
-    pub fn sort_i32(&mut self, records: &[Vec<i32>], descending: bool) -> Result<Vec<Vec<i32>>> {
-        let mut out = Vec::with_capacity(records.len());
-        let mut idx = 0;
-        while idx < records.len() {
-            let remaining = records.len() - idx;
-            // Largest artifact batch ≤ remaining (or the smallest one,
-            // padded, if remaining is smaller than all).
-            let b = *self
-                .batches
-                .iter()
-                .rev()
-                .find(|&&b| b <= remaining)
-                .unwrap_or(&self.batches[0]);
-            let kind = if descending { "sort_desc" } else { "sort" };
-            let fname = artifact_name(kind, b, self.n, "i32");
-            let take = b.min(remaining);
-            // Flatten (padding the tail batch by repeating record 0).
-            let mut flat: Vec<i32> = Vec::with_capacity(b * self.n);
-            for i in 0..b {
-                let r = if i < take { &records[idx + i] } else { &records[idx] };
-                if r.len() != self.n {
-                    return Err(Error::runtime(format!(
-                        "record {} has {} words, artifacts are for n={}",
-                        idx + i,
-                        r.len(),
-                        self.n
-                    )));
-                }
-                flat.extend_from_slice(r);
-            }
-            let n = self.n;
-            let t0 = std::time::Instant::now();
-            let exe = self.exe(&fname)?;
-            let lit = xla::Literal::vec1(&flat).reshape(&[b as i64, n as i64])?;
-            let result = exe.execute::<xla::Literal>(&[lit])?[0][0].to_literal_sync()?;
-            let tuple = result.to_tuple1()?;
-            let vals = tuple.to_vec::<i32>()?;
-            self.exec_wall += t0.elapsed();
-            self.executions += 1;
-            for i in 0..take {
-                out.push(vals[i * n..(i + 1) * n].to_vec());
-            }
-            idx += take;
-        }
-        Ok(out)
-    }
+    /// Sort a batch of records (each exactly `n` i32 words).
+    fn sort_i32(&mut self, records: &[Vec<i32>], descending: bool) -> Result<Vec<Vec<i32>>>;
 
-    /// Golden check: does `output` equal the XLA-sorted `input`?
+    /// Order-invariant record checksum (used by the coordinator to
+    /// pair DMA input/output buffers without retaining full inputs).
+    fn checksum(&mut self, record: &[i32]) -> Result<i64>;
+
+    /// Cumulative cost accounting.
+    fn stats(&self) -> BackendStats;
+
+    /// Golden check: does `output` equal the reference-sorted `input`?
     /// Returns the first mismatching index on failure.
-    pub fn check_sorted(
-        &mut self,
-        input: &[i32],
-        output: &[i32],
-        descending: bool,
-    ) -> Result<()> {
+    fn check_sorted(&mut self, input: &[i32], output: &[i32], descending: bool) -> Result<()> {
         let golden = self.sort_i32(std::slice::from_ref(&input.to_vec()), descending)?;
         if golden[0] != output {
             let pos = golden[0]
@@ -167,116 +120,138 @@ impl GoldenModel {
                 .position(|(a, b)| a != b)
                 .unwrap_or(0);
             return Err(Error::runtime(format!(
-                "golden mismatch at word {pos}: hdl={} xla={}",
+                "golden mismatch at word {pos}: hdl={} {}={}",
                 output.get(pos).copied().unwrap_or(0),
+                self.name(),
                 golden[0][pos]
             )));
         }
         Ok(())
     }
 
-    /// Order-invariant record checksum via the compiled XLA graph
-    /// (pairs DMA buffers without retaining inputs).
-    pub fn checksum(&mut self, record: &[i32]) -> Result<i64> {
-        let fname = artifact_name("checksum", 1, self.n, "i32");
-        let n = self.n;
-        if record.len() != n {
-            return Err(Error::runtime("checksum: wrong record length"));
-        }
-        let t0 = std::time::Instant::now();
-        let exe = self.exe(&fname)?;
-        let lit = xla::Literal::vec1(record).reshape(&[1, n as i64])?;
-        let result = exe.execute::<xla::Literal>(&[lit])?[0][0].to_literal_sync()?;
-        let tuple = result.to_tuple1()?;
-        let v = tuple.to_vec::<i64>()?;
-        self.exec_wall += t0.elapsed();
-        self.executions += 1;
-        Ok(v[0])
-    }
-
     /// The functional fast mode: answer a whole "offload" purely in
-    /// XLA (input records → sorted records), bypassing the HDL
-    /// simulation. Used by the `--mode func` benches to quantify the
-    /// cycle-accuracy cost.
-    pub fn func_offload(&mut self, records: &[Vec<i32>], descending: bool) -> Result<Vec<Vec<i32>>> {
+    /// the reference model (input records → sorted records), bypassing
+    /// the HDL simulation. Used by `vmhdl golden` and the `--mode
+    /// func` benches to quantify the cycle-accuracy cost.
+    fn func_offload(&mut self, records: &[Vec<i32>], descending: bool) -> Result<Vec<Vec<i32>>> {
         self.sort_i32(records, descending)
+    }
+}
+
+/// Which golden-model backend to instantiate.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum BackendKind {
+    /// Pure-Rust bitonic reference (always available).
+    #[default]
+    Native,
+    /// AOT XLA via PJRT (needs the `pjrt` cargo feature + artifacts).
+    Pjrt,
+}
+
+impl std::str::FromStr for BackendKind {
+    type Err = Error;
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "native" => Ok(BackendKind::Native),
+            "pjrt" => Ok(BackendKind::Pjrt),
+            other => Err(Error::config(format!(
+                "unknown golden backend {other:?} (expected \"native\" or \"pjrt\")"
+            ))),
+        }
+    }
+}
+
+impl std::fmt::Display for BackendKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            BackendKind::Native => "native",
+            BackendKind::Pjrt => "pjrt",
+        })
+    }
+}
+
+/// Instantiate a golden-model backend.
+///
+/// `artifacts` is only consulted by the PJRT backend (the native
+/// backend is self-contained). Asking for [`BackendKind::Pjrt`] in a
+/// build without the `pjrt` feature fails with a pointer to the
+/// rebuild command rather than at link time, so the default build
+/// never references the `xla` crate.
+pub fn load_backend(
+    kind: BackendKind,
+    artifacts: &Path,
+    n: usize,
+) -> Result<Box<dyn GoldenBackend>> {
+    match kind {
+        BackendKind::Native => Ok(Box::new(NativeGolden::new(n)?)),
+        #[cfg(feature = "pjrt")]
+        BackendKind::Pjrt => Ok(Box::new(PjrtGolden::load(artifacts, n)?)),
+        #[cfg(not(feature = "pjrt"))]
+        BackendKind::Pjrt => {
+            let _ = artifacts;
+            Err(Error::runtime(
+                "backend \"pjrt\" requires a build with `--features pjrt` \
+                 (and `make artifacts` for the HLO files) — see README.md \
+                 §Golden-model backends",
+            ))
+        }
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::testutil::XorShift64;
 
-    fn artifacts_dir() -> PathBuf {
-        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
-    }
-
-    fn model() -> GoldenModel {
-        GoldenModel::load(&artifacts_dir(), 1024)
-            .expect("artifacts missing — run `make artifacts`")
+    #[test]
+    fn backend_kind_parses() {
+        assert_eq!("native".parse::<BackendKind>().unwrap(), BackendKind::Native);
+        assert_eq!("pjrt".parse::<BackendKind>().unwrap(), BackendKind::Pjrt);
+        assert!("bogus".parse::<BackendKind>().is_err());
+        assert_eq!(BackendKind::default().to_string(), "native");
     }
 
     #[test]
-    fn sort_matches_std() {
-        let mut m = model();
-        let mut rng = XorShift64::new(11);
-        let rec = rng.vec_i32(1024);
-        let got = m.sort_i32(&[rec.clone()], false).unwrap();
-        let mut expect = rec;
-        expect.sort_unstable();
-        assert_eq!(got[0], expect);
+    fn native_loads_without_artifacts() {
+        let g = load_backend(BackendKind::Native, Path::new("/nonexistent"), 1024).unwrap();
+        assert_eq!(g.name(), "native");
+        assert_eq!(g.n(), 1024);
     }
 
+    #[cfg(not(feature = "pjrt"))]
     #[test]
-    fn sort_descending_and_batches() {
-        let mut m = model();
-        let mut rng = XorShift64::new(12);
-        let records: Vec<Vec<i32>> = (0..9).map(|_| rng.vec_i32(1024)).collect();
-        let got = m.sort_i32(&records, true).unwrap();
-        assert_eq!(got.len(), 9);
-        for (g, r) in got.iter().zip(&records) {
-            let mut e = r.clone();
-            e.sort_unstable();
-            e.reverse();
-            assert_eq!(g, &e);
-        }
-        // 9 records with {8,1} artifacts → at least 2 executions.
-        assert!(m.executions >= 2);
-    }
-
-    #[test]
-    fn check_sorted_catches_corruption() {
-        let mut m = model();
-        let mut rng = XorShift64::new(13);
-        let rec = rng.vec_i32(1024);
-        let mut sorted = rec.clone();
-        sorted.sort_unstable();
-        m.check_sorted(&rec, &sorted, false).unwrap();
-        sorted[100] ^= 1;
-        let err = m.check_sorted(&rec, &sorted, false).unwrap_err();
-        assert!(err.to_string().contains("golden mismatch"), "{err}");
-    }
-
-    #[test]
-    fn checksum_is_order_invariant() {
-        let mut m = model();
-        let mut rng = XorShift64::new(14);
-        let rec = rng.vec_i32(1024);
-        let mut shuffled = rec.clone();
-        shuffled.reverse();
-        assert_eq!(m.checksum(&rec).unwrap(), m.checksum(&shuffled).unwrap());
-        let mut other = rec.clone();
-        other[5] ^= 3;
-        assert_ne!(m.checksum(&rec).unwrap(), m.checksum(&other).unwrap());
-    }
-
-    #[test]
-    fn load_fails_cleanly_without_artifacts() {
-        let err = match GoldenModel::load(Path::new("/nonexistent"), 1024) {
+    fn pjrt_without_feature_fails_with_guidance() {
+        let err = match load_backend(BackendKind::Pjrt, Path::new("/nonexistent"), 1024) {
             Err(e) => e,
-            Ok(_) => panic!("load should fail"),
+            Ok(_) => panic!("pjrt backend must be unavailable without the feature"),
         };
-        assert!(err.to_string().contains("make artifacts"), "{err}");
+        assert!(err.to_string().contains("--features pjrt"), "{err}");
+    }
+
+    #[cfg(feature = "pjrt")]
+    #[test]
+    fn native_and_pjrt_agree() {
+        // Cross-backend smoke test: both reference implementations of
+        // the same contract must agree bit-for-bit on sorts and
+        // checksums. Needs `make artifacts` (skipped loudly if absent).
+        use crate::testutil::XorShift64;
+        let artifacts =
+            std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        let mut pjrt = PjrtGolden::load(&artifacts, 1024)
+            .expect("pjrt feature enabled but artifacts missing — run `make artifacts`");
+        let mut native = NativeGolden::new(1024).unwrap();
+        let mut rng = XorShift64::new(0xA62EE);
+        let records: Vec<Vec<i32>> = (0..3).map(|_| rng.vec_i32(1024)).collect();
+        for descending in [false, true] {
+            let a = native.sort_i32(&records, descending).unwrap();
+            let b = pjrt.sort_i32(&records, descending).unwrap();
+            assert_eq!(a, b, "backends disagree (descending={descending})");
+        }
+        for r in &records {
+            assert_eq!(
+                native.checksum(r).unwrap(),
+                pjrt.checksum(r).unwrap(),
+                "checksum contract drifted between backends"
+            );
+        }
     }
 }

@@ -1,0 +1,253 @@
+//! Native golden backend: a pure-Rust bitonic-network reference sort.
+//!
+//! This is the zero-dependency twin of `python/compile/kernels/ref.py`
+//! — the oracle every other implementation must agree with. It
+//! deliberately does **not** reuse [`crate::hdl::sorter::bitonic_sort_i32`]:
+//! the RTL model iterates the network run-by-run (the §Perf-tuned
+//! formulation), while this backend evaluates the classic lane-scan
+//! `i ^ j` formulation. Two independently written networks agreeing
+//! with each other *and* with `sort_unstable` is what the property
+//! test below buys; a shared helper would make it a tautology.
+//!
+//! The checksum follows `python/compile/model.py::record_checksum`
+//! bit-for-bit (int32 xor-fold in the high 32 bits, xor-mixed with the
+//! int64 element sum), so native and PJRT checksums pair up.
+
+use std::time::{Duration, Instant};
+
+use super::{BackendStats, GoldenBackend};
+use crate::{Error, Result};
+
+/// Bitonic sorting network, lane-scan formulation: for every stage
+/// `(k, j)` visit all lanes and compare-exchange `i` with `i ^ j`
+/// (once per pair, `partner > i`), direction given by `i & k`.
+pub fn bitonic_network_sort(data: &mut [i32], descending: bool) {
+    let n = data.len();
+    debug_assert!(n.is_power_of_two(), "bitonic network needs power-of-two n");
+    let mut k = 2;
+    while k <= n {
+        let mut j = k / 2;
+        while j >= 1 {
+            for i in 0..n {
+                let partner = i ^ j;
+                if partner > i {
+                    let up = ((i & k) == 0) != descending;
+                    if (data[i] > data[partner]) == up {
+                        data.swap(i, partner);
+                    }
+                }
+            }
+            j /= 2;
+        }
+        k *= 2;
+    }
+}
+
+/// Order-invariant record checksum — the exact contract of
+/// `python/compile/model.py::record_checksum`.
+pub fn record_checksum(record: &[i32]) -> i64 {
+    let sum: i64 = record.iter().map(|&v| v as i64).sum();
+    let xor: i32 = record.iter().fold(0, |a, &b| a ^ b);
+    ((xor as i64) << 32) ^ sum
+}
+
+/// The pure-Rust golden backend (default). Self-contained: no
+/// artifacts, no Python, no external libraries.
+pub struct NativeGolden {
+    n: usize,
+    executions: u64,
+    exec_wall: Duration,
+}
+
+impl NativeGolden {
+    /// Create a backend for records of `n` 32-bit words. `n` must be a
+    /// power of two (the sorting network's shape), like the RTL sorter.
+    pub fn new(n: usize) -> Result<Self> {
+        if !n.is_power_of_two() || n == 0 {
+            return Err(Error::runtime(format!(
+                "native backend needs a power-of-two record length, got {n}"
+            )));
+        }
+        Ok(Self {
+            n,
+            executions: 0,
+            exec_wall: Duration::ZERO,
+        })
+    }
+}
+
+impl GoldenBackend for NativeGolden {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    fn sort_i32(&mut self, records: &[Vec<i32>], descending: bool) -> Result<Vec<Vec<i32>>> {
+        let t0 = Instant::now();
+        let mut out = Vec::with_capacity(records.len());
+        for (idx, r) in records.iter().enumerate() {
+            if r.len() != self.n {
+                return Err(Error::runtime(format!(
+                    "record {idx} has {} words, backend is for n={}",
+                    r.len(),
+                    self.n
+                )));
+            }
+            let mut sorted = r.clone();
+            bitonic_network_sort(&mut sorted, descending);
+            out.push(sorted);
+        }
+        self.executions += 1;
+        self.exec_wall += t0.elapsed();
+        Ok(out)
+    }
+
+    fn checksum(&mut self, record: &[i32]) -> Result<i64> {
+        if record.len() != self.n {
+            return Err(Error::runtime("checksum: wrong record length"));
+        }
+        let t0 = Instant::now();
+        let c = record_checksum(record);
+        self.exec_wall += t0.elapsed();
+        self.executions += 1;
+        Ok(c)
+    }
+
+    fn stats(&self) -> BackendStats {
+        BackendStats {
+            executions: self.executions,
+            compile_wall: Duration::ZERO,
+            exec_wall: self.exec_wall,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hdl::sorter::bitonic_sort_i32;
+    use crate::testutil::{forall, XorShift64};
+
+    fn model() -> NativeGolden {
+        NativeGolden::new(1024).unwrap()
+    }
+
+    #[test]
+    fn sort_matches_std() {
+        let mut m = model();
+        let mut rng = XorShift64::new(11);
+        let rec = rng.vec_i32(1024);
+        let got = m.sort_i32(&[rec.clone()], false).unwrap();
+        let mut expect = rec;
+        expect.sort_unstable();
+        assert_eq!(got[0], expect);
+    }
+
+    #[test]
+    fn sort_descending_and_batches() {
+        let mut m = model();
+        let mut rng = XorShift64::new(12);
+        let records: Vec<Vec<i32>> = (0..9).map(|_| rng.vec_i32(1024)).collect();
+        let got = m.sort_i32(&records, true).unwrap();
+        assert_eq!(got.len(), 9);
+        for (g, r) in got.iter().zip(&records) {
+            let mut e = r.clone();
+            e.sort_unstable();
+            e.reverse();
+            assert_eq!(g, &e);
+        }
+        assert!(m.stats().executions >= 1);
+    }
+
+    #[test]
+    fn check_sorted_catches_corruption() {
+        let mut m = model();
+        let mut rng = XorShift64::new(13);
+        let rec = rng.vec_i32(1024);
+        let mut sorted = rec.clone();
+        sorted.sort_unstable();
+        m.check_sorted(&rec, &sorted, false).unwrap();
+        sorted[100] ^= 1;
+        let err = m.check_sorted(&rec, &sorted, false).unwrap_err();
+        assert!(err.to_string().contains("golden mismatch"), "{err}");
+    }
+
+    #[test]
+    fn checksum_is_order_invariant() {
+        let mut m = model();
+        let mut rng = XorShift64::new(14);
+        let rec = rng.vec_i32(1024);
+        let mut shuffled = rec.clone();
+        shuffled.reverse();
+        assert_eq!(m.checksum(&rec).unwrap(), m.checksum(&shuffled).unwrap());
+        let mut other = rec.clone();
+        other[5] ^= 3;
+        assert_ne!(m.checksum(&rec).unwrap(), m.checksum(&other).unwrap());
+    }
+
+    #[test]
+    fn checksum_matches_python_contract() {
+        // Hand-computed against model.py::record_checksum semantics:
+        // sum in i64, xor-fold in i32 widened into the high 32 bits.
+        let rec = [1i32, 2, 3, -4];
+        let sum = 1 + 2 + 3 - 4i64; // 2
+        let xor = 1 ^ 2 ^ 3 ^ -4i32;
+        assert_eq!(record_checksum(&rec), ((xor as i64) << 32) ^ sum);
+        // A value edit must not cancel between the sum and xor halves.
+        let mut edited = rec;
+        edited[0] ^= 1 << 30;
+        assert_ne!(record_checksum(&rec), record_checksum(&edited));
+    }
+
+    #[test]
+    fn wrong_length_is_an_error_not_a_panic() {
+        let mut m = model();
+        assert!(m.sort_i32(&[vec![1, 2, 3]], false).is_err());
+        assert!(m.checksum(&[1, 2, 3]).is_err());
+        assert!(NativeGolden::new(1000).is_err(), "1000 is not a power of two");
+        assert!(NativeGolden::new(0).is_err());
+    }
+
+    #[test]
+    fn prop_native_network_matches_hdl_network_and_std() {
+        // The cross-implementation property the backend exists for:
+        // the lane-scan network here, the run-based network in
+        // hdl/sorter.rs, and std's sort must agree on random batches
+        // of random power-of-two sizes, both directions.
+        forall(
+            0x601DE2,
+            40,
+            |g| {
+                let n = 1usize << g.rng.range(0, 10); // 1..=1024
+                let records = g.rng.range(1, 4);
+                let descending = g.rng.chance(1, 2);
+                let data: Vec<Vec<i32>> =
+                    (0..records).map(|_| g.rng.vec_i32(n)).collect();
+                (n, descending, data)
+            },
+            |(n, descending, data)| {
+                let mut m = NativeGolden::new(*n).map_err(|e| e.to_string())?;
+                let native = m.sort_i32(data, *descending).map_err(|e| e.to_string())?;
+                for (i, (got, input)) in native.iter().zip(data).enumerate() {
+                    let mut expect = input.clone();
+                    expect.sort_unstable();
+                    if *descending {
+                        expect.reverse();
+                    }
+                    if got != &expect {
+                        return Err(format!("record {i}: native != std sort"));
+                    }
+                    let mut hdl = input.clone();
+                    bitonic_sort_i32(&mut hdl, *descending);
+                    if got != &hdl {
+                        return Err(format!("record {i}: native != hdl network"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}

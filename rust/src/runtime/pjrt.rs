@@ -1,0 +1,267 @@
+//! PJRT golden backend (`pjrt` cargo feature): load the AOT-compiled
+//! XLA artifacts and run them from the rust side (no python anywhere
+//! near the request path).
+//!
+//! The artifacts are lowered once by `python/compile/aot.py` from the
+//! L2 jax model (which calls the L1 Pallas bitonic-network kernel) to
+//! **HLO text** — the id-safe interchange format for the pinned
+//! xla_extension (jax emits 64-bit instruction ids the extension's
+//! proto parser rejects; the text parser reassigns them — see the
+//! `aot.py` module docstring) — and compiled here on the PJRT CPU
+//! client at first use. Build with `--features pjrt` and run
+//! `make artifacts` once; the default (native) backend needs neither.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+
+use super::{BackendStats, GoldenBackend};
+use crate::{Error, Result};
+
+/// Artifact naming scheme (mirrors aot.py).
+fn artifact_name(kind: &str, batch: usize, n: usize, dtype: &str) -> String {
+    format!("{kind}_{batch}x{n}_{dtype}.hlo.txt")
+}
+
+/// The PJRT-backed golden model / functional accelerator.
+pub struct PjrtGolden {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    exes: HashMap<String, xla::PjRtLoadedExecutable>,
+    /// Record length (words) the artifacts were lowered for.
+    pub n: usize,
+    /// Batch sizes available on disk (prefer the largest that fits).
+    pub batches: Vec<usize>,
+    pub executions: u64,
+    pub compile_wall: Duration,
+    pub exec_wall: Duration,
+}
+
+impl PjrtGolden {
+    /// Open the artifacts directory and the PJRT CPU client. Fails
+    /// fast (with a pointer to `make artifacts`) if artifacts are
+    /// missing.
+    pub fn load(dir: &Path, n: usize) -> Result<Self> {
+        let manifest = dir.join("manifest.txt");
+        if !manifest.exists() {
+            return Err(Error::runtime(format!(
+                "no artifacts at {} — run `make artifacts` first",
+                dir.display()
+            )));
+        }
+        let client = xla::PjRtClient::cpu()?;
+        // Discover available batch sizes for the sort artifact.
+        let mut batches: Vec<usize> = Vec::new();
+        for entry in std::fs::read_dir(dir)? {
+            let name = entry?.file_name().to_string_lossy().into_owned();
+            if let Some(rest) = name.strip_prefix("sort_") {
+                if let Some(bx) = rest.strip_suffix(&format!("x{n}_i32.hlo.txt")) {
+                    if let Ok(b) = bx.parse::<usize>() {
+                        batches.push(b);
+                    }
+                }
+            }
+        }
+        batches.sort_unstable();
+        if batches.is_empty() {
+            return Err(Error::runtime(format!(
+                "no sort_*x{n}_i32 artifacts in {}",
+                dir.display()
+            )));
+        }
+        Ok(Self {
+            client,
+            dir: dir.to_path_buf(),
+            exes: HashMap::new(),
+            n,
+            batches,
+            executions: 0,
+            compile_wall: Duration::ZERO,
+            exec_wall: Duration::ZERO,
+        })
+    }
+
+    /// Compile (once) and fetch an executable by artifact file name.
+    fn exe(&mut self, fname: &str) -> Result<&xla::PjRtLoadedExecutable> {
+        if !self.exes.contains_key(fname) {
+            let path = self.dir.join(fname);
+            let t0 = std::time::Instant::now();
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| Error::runtime("bad path"))?,
+            )?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp)?;
+            self.compile_wall += t0.elapsed();
+            self.exes.insert(fname.to_string(), exe);
+        }
+        Ok(&self.exes[fname])
+    }
+
+    fn sort_impl(&mut self, records: &[Vec<i32>], descending: bool) -> Result<Vec<Vec<i32>>> {
+        let mut out = Vec::with_capacity(records.len());
+        let mut idx = 0;
+        while idx < records.len() {
+            let remaining = records.len() - idx;
+            // Largest artifact batch ≤ remaining (or the smallest one,
+            // padded, if remaining is smaller than all).
+            let b = *self
+                .batches
+                .iter()
+                .rev()
+                .find(|&&b| b <= remaining)
+                .unwrap_or(&self.batches[0]);
+            let kind = if descending { "sort_desc" } else { "sort" };
+            let fname = artifact_name(kind, b, self.n, "i32");
+            let take = b.min(remaining);
+            // Flatten (padding the tail batch by repeating record 0).
+            let mut flat: Vec<i32> = Vec::with_capacity(b * self.n);
+            for i in 0..b {
+                let r = if i < take { &records[idx + i] } else { &records[idx] };
+                if r.len() != self.n {
+                    return Err(Error::runtime(format!(
+                        "record {} has {} words, artifacts are for n={}",
+                        idx + i,
+                        r.len(),
+                        self.n
+                    )));
+                }
+                flat.extend_from_slice(r);
+            }
+            let n = self.n;
+            let t0 = std::time::Instant::now();
+            let exe = self.exe(&fname)?;
+            let lit = xla::Literal::vec1(&flat).reshape(&[b as i64, n as i64])?;
+            let result = exe.execute::<xla::Literal>(&[lit])?[0][0].to_literal_sync()?;
+            let tuple = result.to_tuple1()?;
+            let vals = tuple.to_vec::<i32>()?;
+            self.exec_wall += t0.elapsed();
+            self.executions += 1;
+            for i in 0..take {
+                out.push(vals[i * n..(i + 1) * n].to_vec());
+            }
+            idx += take;
+        }
+        Ok(out)
+    }
+
+    fn checksum_impl(&mut self, record: &[i32]) -> Result<i64> {
+        let fname = artifact_name("checksum", 1, self.n, "i32");
+        let n = self.n;
+        if record.len() != n {
+            return Err(Error::runtime("checksum: wrong record length"));
+        }
+        let t0 = std::time::Instant::now();
+        let exe = self.exe(&fname)?;
+        let lit = xla::Literal::vec1(record).reshape(&[1, n as i64])?;
+        let result = exe.execute::<xla::Literal>(&[lit])?[0][0].to_literal_sync()?;
+        let tuple = result.to_tuple1()?;
+        let v = tuple.to_vec::<i64>()?;
+        self.exec_wall += t0.elapsed();
+        self.executions += 1;
+        Ok(v[0])
+    }
+}
+
+impl GoldenBackend for PjrtGolden {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    fn sort_i32(&mut self, records: &[Vec<i32>], descending: bool) -> Result<Vec<Vec<i32>>> {
+        self.sort_impl(records, descending)
+    }
+
+    fn checksum(&mut self, record: &[i32]) -> Result<i64> {
+        self.checksum_impl(record)
+    }
+
+    fn stats(&self) -> BackendStats {
+        BackendStats {
+            executions: self.executions,
+            compile_wall: self.compile_wall,
+            exec_wall: self.exec_wall,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::XorShift64;
+
+    fn artifacts_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn model() -> PjrtGolden {
+        PjrtGolden::load(&artifacts_dir(), 1024)
+            .expect("artifacts missing — run `make artifacts`")
+    }
+
+    #[test]
+    fn sort_matches_std() {
+        let mut m = model();
+        let mut rng = XorShift64::new(11);
+        let rec = rng.vec_i32(1024);
+        let got = m.sort_i32(&[rec.clone()], false).unwrap();
+        let mut expect = rec;
+        expect.sort_unstable();
+        assert_eq!(got[0], expect);
+    }
+
+    #[test]
+    fn sort_descending_and_batches() {
+        let mut m = model();
+        let mut rng = XorShift64::new(12);
+        let records: Vec<Vec<i32>> = (0..9).map(|_| rng.vec_i32(1024)).collect();
+        let got = m.sort_i32(&records, true).unwrap();
+        assert_eq!(got.len(), 9);
+        for (g, r) in got.iter().zip(&records) {
+            let mut e = r.clone();
+            e.sort_unstable();
+            e.reverse();
+            assert_eq!(g, &e);
+        }
+        // 9 records with {8,1} artifacts → at least 2 executions.
+        assert!(m.executions >= 2);
+    }
+
+    #[test]
+    fn check_sorted_catches_corruption() {
+        let mut m = model();
+        let mut rng = XorShift64::new(13);
+        let rec = rng.vec_i32(1024);
+        let mut sorted = rec.clone();
+        sorted.sort_unstable();
+        m.check_sorted(&rec, &sorted, false).unwrap();
+        sorted[100] ^= 1;
+        let err = m.check_sorted(&rec, &sorted, false).unwrap_err();
+        assert!(err.to_string().contains("golden mismatch"), "{err}");
+    }
+
+    #[test]
+    fn checksum_is_order_invariant() {
+        let mut m = model();
+        let mut rng = XorShift64::new(14);
+        let rec = rng.vec_i32(1024);
+        let mut shuffled = rec.clone();
+        shuffled.reverse();
+        assert_eq!(m.checksum(&rec).unwrap(), m.checksum(&shuffled).unwrap());
+        let mut other = rec.clone();
+        other[5] ^= 3;
+        assert_ne!(m.checksum(&rec).unwrap(), m.checksum(&other).unwrap());
+    }
+
+    #[test]
+    fn load_fails_cleanly_without_artifacts() {
+        let err = match PjrtGolden::load(Path::new("/nonexistent"), 1024) {
+            Err(e) => e,
+            Ok(_) => panic!("load should fail"),
+        };
+        assert!(err.to_string().contains("make artifacts"), "{err}");
+    }
+}

@@ -1,6 +1,16 @@
 //! Test utilities: a deterministic PRNG and a small property-testing
 //! helper (the vendored offline crate set has no `proptest`; DESIGN.md
 //! §4 documents this substitution).
+//!
+//! Everything here is deterministic by construction: [`XorShift64`]
+//! derives every workload from a printed seed, and [`forall`] derives
+//! each case's seed from (suite seed, case index) so a failure report
+//! names the exact input — re-runnable in isolation with
+//! [`prop::forall_one`]. Production code may use [`XorShift64`] for
+//! workload generation but must never depend on this module for
+//! correctness; it is compiled into the crate (not `#[cfg(test)]`)
+//! only so integration tests, benches and examples share the same
+//! generators.
 
 pub mod prop;
 pub mod rng;

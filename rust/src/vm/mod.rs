@@ -17,6 +17,14 @@
 //!   and driver-state transitions, single-stepping, memory inspect
 //!   and patch — the "connect GDB to the VMM's debugging interface"
 //!   capability of the paper §II.
+//!
+//! The split mirrors a real deployment: [`vmm::Vmm`] owns the device
+//! and memory (QEMU's role), [`guest`] is software that only sees
+//! MMIO/IRQ/DMA (the kernel module + app), and [`GuestEnv`] is the
+//! execution context threading the two together so a driver function
+//! can be single-stepped by the monitor between MMIO accesses. See the
+//! `debug_hang` example for the paper's §IV-A debugging session run
+//! against this substrate.
 
 pub mod guest;
 pub mod mem;

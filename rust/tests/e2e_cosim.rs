@@ -1,31 +1,55 @@
 //! End-to-end integration tests: full co-simulation (VM side + HDL
 //! side) across link modes, completion modes and workloads, with
-//! results golden-checked against the AOT XLA executables.
+//! results golden-checked against a [`GoldenBackend`] — the native
+//! reference by default, the AOT XLA executables under
+//! `--features pjrt`.
 
 use std::time::Duration;
 
 use vmhdl::coordinator::cosim::{CoSim, CoSimCfg};
 use vmhdl::coordinator::scenario;
 use vmhdl::link::LinkMode;
-use vmhdl::runtime::GoldenModel;
+use vmhdl::runtime::{GoldenBackend, NativeGolden};
 use vmhdl::testutil::XorShift64;
 use vmhdl::vm::guest::{app, CompletionMode, SortDriver};
 use vmhdl::vm::vmm::{GuestEnv, NoopHook};
 
-fn artifacts() -> std::path::PathBuf {
-    std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
-}
-
 #[test]
 fn offload_with_golden_check() {
-    let mut golden =
-        GoldenModel::load(&artifacts(), 1024).expect("run `make artifacts` first");
-    let rep =
-        scenario::run_sort_offload(CoSimCfg::default(), 3, 0x60D, Some(&mut golden))
-            .unwrap();
+    let mut golden = NativeGolden::new(1024).unwrap();
+    let rep = scenario::run_sort_offload(
+        CoSimCfg::default(),
+        3,
+        0x60D,
+        Some(&mut golden),
+    )
+    .unwrap();
     assert!(rep.golden_checked);
     assert_eq!(rep.records, 3);
     assert_eq!(rep.hdl.records_done, 3);
+    // Warm-up + 3 checks all went through the backend.
+    assert!(golden.stats().executions >= 4);
+}
+
+#[cfg(feature = "pjrt")]
+#[test]
+fn offload_with_pjrt_golden_check() {
+    // Same flow through the PJRT backend: RTL output must match the
+    // AOT XLA executables too (closing the RTL == artifact == kernel
+    // loop). Needs `make artifacts`.
+    let artifacts =
+        std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let mut golden = vmhdl::runtime::PjrtGolden::load(&artifacts, 1024)
+        .expect("run `make artifacts` first");
+    let rep = scenario::run_sort_offload(
+        CoSimCfg::default(),
+        2,
+        0x60E,
+        Some(&mut golden),
+    )
+    .unwrap();
+    assert!(rep.golden_checked);
+    assert_eq!(rep.hdl.records_done, 2);
 }
 
 #[test]
