@@ -76,7 +76,7 @@ fn main() -> vmhdl::Result<()> {
     );
 
     // --- Step 4: the waveform evidence. ---
-    let hdl = hdl_handle.expect("in-proc hdl side").stop()?;
+    let hdl = hdl_handle.expect("in-proc hdl side").stop()?.remove(0);
     println!(
         "\nwaveforms: {} value changes across the whole platform recorded to {}",
         hdl.vcd_changes,

@@ -1,0 +1,87 @@
+//! Bench: **multi-device aggregate throughput scaling** — the Table
+//! III-shaped variant at N ∈ {1, 2, 4} devices.
+//!
+//! One record batch is sharded round-robin over N PCIe FPGA devices
+//! (`--devices N` in the CLI); each device's HDL platform runs as a
+//! lane of the merged-horizon scheduler. While one device waits on a
+//! VM response the others are serviced, so aggregate records/s should
+//! grow with N even on a single HDL thread.
+//!
+//! Printed per N: aggregate records/s, wall, per-device cycle counts
+//! (which must be deterministic — the companion test
+//! `sharded_same_seed_runs_are_cycle_deterministic_per_device` pins
+//! that), and the busy/idle wall split summed over lanes.
+//!
+//! Shape assertions (lenient — CI runners are noisy):
+//!   * per-device cycle counts stay in the single-device envelope
+//!     (sharding must not inflate device time), and
+//!   * N = 4 must not be slower than N = 1 on the same batch
+//!     (aggregate throughput ratio ≥ 1.0; the typical inproc ratio is
+//!     well above that — see EXPERIMENTS.md §Perf for the recorded
+//!     scaling row).
+//!
+//! Run: `cargo bench --bench multi_device_scaling`
+
+use vmhdl::config::Config;
+use vmhdl::coordinator::scenario::{self, ShardPolicy};
+use vmhdl::coordinator::stats::fmt_dur;
+
+const RECORDS: usize = 8;
+const SEED: u64 = 0x5CA1E;
+
+fn main() {
+    println!("MULTI-DEVICE SCALING — {RECORDS} records, round-robin shard");
+    println!(
+        "{:>4}{:>14}{:>16}{:>26}{:>14}",
+        "N", "wall", "records/s", "per-device cycles", "busy wall"
+    );
+
+    let mut rate_at = std::collections::BTreeMap::new();
+    for devices in [1usize, 2, 4] {
+        let cfg = Config { devices, ..Config::default() };
+        let (rep, _outs) = scenario::run_sharded_offload(
+            cfg.cosim().unwrap(),
+            RECORDS,
+            SEED,
+            ShardPolicy::RoundRobin,
+            None,
+        )
+        .expect("sharded scenario failed");
+        let rate = rep.records as f64 / rep.wall.as_secs_f64().max(1e-9);
+        let busy: std::time::Duration = rep.hdl.iter().map(|h| h.wall_busy).sum();
+        println!(
+            "{:>4}{:>14}{:>16.1}{:>26}{:>14}",
+            devices,
+            fmt_dur(rep.wall),
+            rate,
+            format!("{:?}", rep.per_device_cycles),
+            fmt_dur(busy),
+        );
+        // Sharding must not inflate any single device's clock: every
+        // device sorted records/N records, so its cycle count must
+        // stay within the single-device per-record envelope.
+        for (k, &c) in rep.per_device_cycles.iter().enumerate() {
+            let recs = rep.per_device_records[k] as u64;
+            if recs > 0 {
+                assert!(
+                    c > 1256 && c < 100_000 * recs,
+                    "dev{k} cycle count {c} outside envelope for {recs} records"
+                );
+            }
+        }
+        rate_at.insert(devices, rate);
+    }
+
+    let r1 = rate_at[&1];
+    let r4 = rate_at[&4];
+    println!(
+        "\nscaling: N=2 {:.2}x, N=4 {:.2}x over N=1",
+        rate_at[&2] / r1,
+        r4 / r1
+    );
+    assert!(
+        r4 >= r1 * 1.0,
+        "N=4 aggregate throughput regressed below N=1: {r4:.1} < {r1:.1} records/s"
+    );
+    println!("OK: aggregate throughput scales (or at worst holds) with device count");
+}

@@ -9,6 +9,7 @@ use std::path::PathBuf;
 use std::time::Duration;
 
 use crate::coordinator::cosim::{CoSimCfg, TransportKind};
+use crate::coordinator::scenario::ShardPolicy;
 use crate::hdl::platform::PlatformCfg;
 use crate::hdl::sorter::SorterCfg;
 use crate::link::LinkMode;
@@ -16,6 +17,19 @@ use crate::runtime::BackendKind;
 use crate::{Error, Result};
 
 /// All tunables of a co-simulation run.
+///
+/// Multi-device topologies are configured like any other knob —
+/// `--devices N --shard round-robin|size` on the CLI, or:
+///
+/// ```
+/// use vmhdl::config::Config;
+/// use vmhdl::coordinator::scenario::ShardPolicy;
+/// let mut c = Config::default();
+/// c.set("devices", "4").unwrap();
+/// c.set("shard", "size").unwrap();
+/// assert_eq!(c.shard, ShardPolicy::Size);
+/// assert_eq!(c.cosim().unwrap().devices, 4);
+/// ```
 #[derive(Debug, Clone)]
 pub struct Config {
     /// Link abstraction: `mmio` (paper) or `tlp` (vpcie baseline).
@@ -49,6 +63,12 @@ pub struct Config {
     pub idle_sleep_us: u64,
     /// RTT iterations.
     pub iters: u32,
+    /// Number of PCIe FPGA devices on the simulated topology
+    /// (`--devices N`; 1 = the paper's single-board setup).
+    pub devices: usize,
+    /// Shard policy splitting a record batch across devices
+    /// (`--shard round-robin|size`).
+    pub shard: ShardPolicy,
 }
 
 impl Default for Config {
@@ -69,6 +89,8 @@ impl Default for Config {
             poll_interval: 1,
             idle_sleep_us: 20,
             iters: 100,
+            devices: 1,
+            shard: ShardPolicy::RoundRobin,
         }
     }
 }
@@ -110,6 +132,14 @@ impl Config {
                 self.idle_sleep_us = value.parse().map_err(|_| bad("idle-sleep-us"))?
             }
             "iters" => self.iters = value.parse().map_err(|_| bad("iters"))?,
+            "devices" => {
+                let n: usize = value.parse().map_err(|_| bad("devices"))?;
+                if n < 1 || n > crate::pcie::board::MAX_DEVICES {
+                    return Err(bad("devices"));
+                }
+                self.devices = n;
+            }
+            "shard" => self.shard = value.parse()?,
             other => return Err(Error::config(format!("unknown option {other:?}"))),
         }
         Ok(())
@@ -172,6 +202,7 @@ impl Config {
                 poll_interval: self.poll_interval,
                 ..PlatformCfg::default()
             },
+            devices: self.devices,
             ram_size: self.ram_size,
             vcd: self.vcd.clone(),
             poll_interval: self.poll_interval,
@@ -231,6 +262,21 @@ mod tests {
         c.set("backend", "pjrt").unwrap();
         assert_eq!(c.backend, BackendKind::Pjrt);
         assert!(c.set("backend", "xla").is_err());
+    }
+
+    #[test]
+    fn devices_and_shard_knobs() {
+        let mut c = Config::default();
+        assert_eq!(c.devices, 1, "single device must be the default");
+        assert_eq!(c.shard, ShardPolicy::RoundRobin);
+        c.set("devices", "4").unwrap();
+        c.set("shard", "size").unwrap();
+        assert_eq!(c.devices, 4);
+        assert_eq!(c.shard, ShardPolicy::Size);
+        assert_eq!(c.cosim().unwrap().devices, 4);
+        assert!(c.set("devices", "0").is_err());
+        assert!(c.set("devices", "100000").is_err());
+        assert!(c.set("shard", "hash").is_err());
     }
 
     #[test]

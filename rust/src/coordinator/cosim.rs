@@ -1,5 +1,6 @@
 //! Co-simulation assembly: the HDL side (platform + simulator loop)
-//! and the VM side (VMM + guest), linked per Figure 1 of the paper.
+//! and the VM side (VMM + guest), linked per Figure 1 of the paper —
+//! generalized to **N PCIe devices on one simulated topology**.
 //!
 //! The HDL side free-runs on its own thread (in-process transport) or
 //! in its own process (Unix-socket transport, see [`super::lifecycle`])
@@ -7,6 +8,18 @@
 //! simulation are independent programs connected only by the message
 //! channels, which is precisely what makes independent restart
 //! possible.
+//!
+//! Multi-device topologies ([`CoSimCfg::devices`] > 1) run every
+//! device's [`Platform`] on **one** HDL thread as a set of
+//! [`run_hdl_multi_loop`] lanes: each lane keeps its own cycle
+//! counter, scheduler accounting and link endpoint; a
+//! [`MergedHorizon`] min-heap picks the lane with the earliest
+//! pending event; and when every lane is provably idle the loop
+//! blocks on a single doorbell shared by all lanes' endpoints. Per
+//! device, the PR 1 determinism invariant is untouched: a device's
+//! clock advances only as a function of *its own* message sequence,
+//! so same-seed runs stay cycle-deterministic per device regardless
+//! of host thread interleaving or how many neighbours it has.
 
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -15,9 +28,9 @@ use std::time::Duration;
 
 use crate::hdl::platform::{Platform, PlatformCfg};
 use crate::hdl::signal::{ProbeFrame, Probed};
-use crate::hdl::sim::{ForceMap, Horizon, Scheduler, Sim, TickCtx};
+use crate::hdl::sim::{Horizon, MergedHorizon, Scheduler, Sim, TickCtx};
 use crate::hdl::vcd::VcdWriter;
-use crate::link::{Endpoint, LinkMode, Side};
+use crate::link::{Doorbell, Endpoint, LinkMode, Side};
 use crate::vm::Vmm;
 use crate::{Error, Result};
 
@@ -32,14 +45,32 @@ pub enum TransportKind {
 }
 
 /// Co-simulation configuration.
+///
+/// Multi-device example — four FPGAs on one simulated bus (each
+/// enumerated with its own BDF and BAR windows; see
+/// [`crate::coordinator::scenario::run_sharded_offload`] for driving
+/// a sharded batch across them):
+///
+/// ```
+/// use vmhdl::coordinator::cosim::CoSimCfg;
+/// let cfg = CoSimCfg { devices: 4, ..Default::default() };
+/// assert_eq!(cfg.devices, 4);
+/// // The CLI spelling of the same thing: `cosim --devices 4`.
+/// ```
 #[derive(Debug, Clone)]
 pub struct CoSimCfg {
     pub mode: LinkMode,
     pub transport: TransportKind,
     pub platform: PlatformCfg,
+    /// Number of PCIe FPGA devices on the simulated topology (each
+    /// gets its own BDF, BAR windows, link channels and HDL platform
+    /// lane). 1 = the paper's single-board setup.
+    pub devices: usize,
     /// Guest RAM bytes.
     pub ram_size: usize,
     /// Record waveforms of the entire platform to this VCD file.
+    /// Multi-device runs write device 0 here and device k to
+    /// `<stem>-devk.<ext>` (see [`vcd_path_for_device`]).
     pub vcd: Option<PathBuf>,
     /// Poll the link every N cycles (1 = the paper's every-cycle poll;
     /// larger values are a §Perf knob with a latency trade-off).
@@ -57,6 +88,7 @@ impl Default for CoSimCfg {
             mode: LinkMode::Mmio,
             transport: TransportKind::InProc,
             platform: PlatformCfg::default(),
+            devices: 1,
             ram_size: 4 << 20,
             vcd: None,
             poll_interval: 1,
@@ -78,7 +110,13 @@ pub struct HdlReport {
     pub wall: Duration,
     /// Wall time spent actually ticking the platform.
     pub wall_busy: Duration,
-    /// Wall time spent blocked waiting for link input.
+    /// Wall time spent blocked waiting for link input. Multi-device
+    /// runs: idle waits are *concurrent* — all idle lanes block on
+    /// one shared doorbell, so each lane's `wall_idle` (and
+    /// `idle_waits`) counts the same shared wait. Per-device the
+    /// figure is honest ("this device sat idle that long"); summing
+    /// it across lanes overstates wall-clock by up to N×. Sum
+    /// `wall_busy` across lanes, never `wall_idle`.
     pub wall_idle: Duration,
     /// Cycles accounted by fast-forward instead of per-cycle ticking.
     pub fast_forwarded_cycles: u64,
@@ -96,16 +134,19 @@ pub struct HdlReport {
     pub vcd_changes: u64,
 }
 
-/// Handle to a running HDL side (thread flavour).
+/// Handle to a running HDL side (thread flavour) — one thread driving
+/// one lane per device.
 pub struct HdlSideHandle {
     stop: Arc<AtomicBool>,
-    pub cycles: Arc<AtomicU64>,
-    handle: Option<std::thread::JoinHandle<Result<HdlReport>>>,
+    /// Live cycle counters, one per device lane.
+    pub cycles: Vec<Arc<AtomicU64>>,
+    handle: Option<std::thread::JoinHandle<Result<Vec<HdlReport>>>>,
 }
 
 impl HdlSideHandle {
-    /// Ask the side to stop and collect its report.
-    pub fn stop(mut self) -> Result<HdlReport> {
+    /// Ask the side to stop and collect every lane's report (index =
+    /// device id).
+    pub fn stop(mut self) -> Result<Vec<HdlReport>> {
         self.stop.store(true, Ordering::Relaxed);
         match self.handle.take().unwrap().join() {
             Ok(r) => r,
@@ -113,9 +154,14 @@ impl HdlSideHandle {
         }
     }
 
-    /// Current device cycle (live).
+    /// Current cycle of device 0 (live).
     pub fn now_cycles(&self) -> u64 {
-        self.cycles.load(Ordering::Relaxed)
+        self.now_cycles_of(0)
+    }
+
+    /// Current cycle of device `idx` (live).
+    pub fn now_cycles_of(&self, idx: usize) -> u64 {
+        self.cycles[idx].load(Ordering::Relaxed)
     }
 }
 
@@ -144,8 +190,149 @@ fn tick_checked(platform: &mut Platform, ctx: &TickCtx, link: &mut Endpoint) -> 
     }
 }
 
-/// Run the HDL simulation loop until `stop`. This is the body of both
-/// the in-proc thread and the standalone `vmhdl hdl-side` process.
+/// Per-device VCD path: device 0 records to `path` itself; device k
+/// to `<stem>-devk.<ext>` next to it.
+pub fn vcd_path_for_device(path: &std::path::Path, device: usize) -> PathBuf {
+    if device == 0 {
+        return path.to_path_buf();
+    }
+    let stem = path.file_stem().and_then(|s| s.to_str()).unwrap_or("wave");
+    let ext = path.extension().and_then(|s| s.to_str()).unwrap_or("vcd");
+    path.with_file_name(format!("{stem}-dev{device}.{ext}"))
+}
+
+/// One device's worth of HDL-side state in the (possibly multi-lane)
+/// run loop: its platform, link endpoint, independent cycle counter
+/// and scheduler accounting. Device clocks are deliberately *not*
+/// shared — an idle device consumes no device time no matter how busy
+/// its neighbours are, which is what keeps per-device cycle counts a
+/// pure function of that device's own message sequence.
+struct HdlLane {
+    platform: Platform,
+    link: Endpoint,
+    sim: Sim,
+    sched: Scheduler,
+    vcd: Option<VcdWriter<std::io::BufWriter<std::fs::File>>>,
+    frame: ProbeFrame,
+}
+
+impl HdlLane {
+    fn new(platform: Platform, link: Endpoint, device: usize, cfg: &CoSimCfg) -> Result<Self> {
+        let vcd = match &cfg.vcd {
+            Some(path) => {
+                let path = vcd_path_for_device(path, device);
+                let f = std::io::BufWriter::new(std::fs::File::create(path)?);
+                Some(VcdWriter::new(f, crate::hdl::CLOCK_PERIOD_NS))
+            }
+            None => None,
+        };
+        Ok(Self {
+            platform,
+            link,
+            sim: Sim::new(),
+            sched: Scheduler::new(cfg.poll_interval),
+            vcd,
+            frame: ProbeFrame::default(),
+        })
+    }
+
+    /// This lane's next-event horizon at its own clock.
+    fn horizon(&self) -> Horizon {
+        self.platform.next_event(self.sim.cycle, &self.sim.forces)
+    }
+
+    /// Drain the link outside a tick, injecting payload messages into
+    /// the bridge (control-only traffic consumes no device time).
+    /// Returns the number of payload messages injected.
+    fn drain_inject(&mut self, inbox: &mut Vec<crate::link::Msg>) -> Result<usize> {
+        inbox.clear();
+        let n = self.link.poll_into(inbox)?;
+        for m in inbox.drain(..) {
+            self.platform.inject(m)?;
+        }
+        Ok(n)
+    }
+
+    /// Busy phase: tick while any event is possible, fast-forwarding
+    /// provably idle `At` gaps, until the platform reports `Idle` (or
+    /// `stop`). Identical per-device semantics to the PR 1 single
+    /// device loop — this *is* that loop, factored per lane.
+    fn run_busy(&mut self, stop: &AtomicBool, cycles_out: &AtomicU64) -> Result<()> {
+        let busy0 = std::time::Instant::now();
+        loop {
+            let ctx = TickCtx { cycle: self.sim.cycle, forces: &self.sim.forces };
+            tick_checked(&mut self.platform, &ctx, &mut self.link)?;
+            if let Some(w) = self.vcd.as_mut() {
+                self.frame.clear();
+                self.platform.probe(&mut self.frame);
+                w.record(self.sim.cycle, &self.frame)?;
+            }
+            self.sim.cycle += 1;
+            if self.sched.at_poll_boundary(self.sim.cycle) {
+                cycles_out.store(self.sim.cycle, Ordering::Relaxed);
+            }
+            if stop.load(Ordering::Relaxed) {
+                break;
+            }
+            match self.horizon() {
+                Horizon::Now => {
+                    if self.sim.cycle % 256 == 0 {
+                        // Busy: still let the VM side run (single-core
+                        // testbed — it must be able to answer our DMA
+                        // reads promptly).
+                        std::thread::yield_now();
+                    }
+                }
+                Horizon::At(c) => {
+                    // Input that arrived since the last poll keeps us
+                    // ticking (it may change the schedule); otherwise
+                    // jump the provably idle gap in one step.
+                    if !self.link.rx_ready()? {
+                        self.sched.fast_forward(&mut self.sim, c);
+                        cycles_out.store(self.sim.cycle, Ordering::Relaxed);
+                    }
+                }
+                Horizon::Idle => break,
+            }
+        }
+        self.sched.wall_busy += busy0.elapsed();
+        cycles_out.store(self.sim.cycle, Ordering::Relaxed);
+        Ok(())
+    }
+
+    /// Final per-lane report after the loop exits.
+    fn into_report(mut self, wall: Duration) -> Result<HdlReport> {
+        let vcd_changes = match self.vcd.as_mut() {
+            Some(w) => {
+                w.flush()?;
+                w.changes
+            }
+            None => 0,
+        };
+        Ok(HdlReport {
+            cycles: self.sim.cycle,
+            wall,
+            wall_busy: self.sched.wall_busy,
+            wall_idle: self.sched.wall_idle,
+            fast_forwarded_cycles: self.sched.fast_forwarded,
+            idle_waits: self.sched.idle_waits,
+            wakeups: self.sched.wakeups,
+            mmio_reads: self.platform.bridge.mmio_reads,
+            mmio_writes: self.platform.bridge.mmio_writes,
+            dma_read_reqs: self.platform.bridge.dma_read_reqs,
+            dma_write_reqs: self.platform.bridge.dma_write_reqs,
+            irqs_sent: self.platform.bridge.irqs_sent,
+            idle_polls: self.platform.bridge.idle_polls,
+            records_done: self.platform.sorter.records_done,
+            vcd_changes,
+        })
+    }
+}
+
+/// Run the HDL simulation loop for a single device until `stop`. This
+/// is the body of both the single-device in-proc thread and the
+/// standalone `vmhdl hdl-side` process — the N = 1 special case of
+/// [`run_hdl_multi_loop`].
 ///
 /// Event-driven pacing (see [`crate::hdl::sim::Horizon`]):
 /// * while the platform reports `Now`, tick cycle by cycle (with the
@@ -163,24 +350,56 @@ fn tick_checked(platform: &mut Platform, ctx: &TickCtx, link: &mut Endpoint) -> 
 /// busy→idle transition, so `HdlSideHandle::now_cycles()` (and any
 /// hang detector built on it) never lags a quiesced simulator.
 pub fn run_hdl_loop(
-    mut platform: Platform,
-    mut link: Endpoint,
+    platform: Platform,
+    link: Endpoint,
     cfg: &CoSimCfg,
     stop: Arc<AtomicBool>,
     cycles_out: Arc<AtomicU64>,
 ) -> Result<HdlReport> {
-    let mut sim = Sim::new();
-    let mut sched = Scheduler::new(cfg.poll_interval);
-    let forces = ForceMap::new();
+    let mut reports = run_hdl_multi_loop(vec![(platform, link)], cfg, stop, vec![cycles_out])?;
+    Ok(reports.remove(0))
+}
+
+/// Run N device lanes on one thread until `stop`, returning one
+/// report per lane (index = device id).
+///
+/// Scheduling: a [`MergedHorizon`] min-heap over per-lane next events
+/// picks the lane with the earliest pending work; each pick runs that
+/// lane's busy phase to quiescence ([`HdlLane::run_busy`] — tick
+/// through `Now`, fast-forward `At` gaps). While lane A sits idle
+/// waiting for a VM response, lanes B..N are serviced — that overlap
+/// is where multi-device throughput comes from. When *every* lane is
+/// idle the loop blocks on one [`Doorbell`] shared by all lanes'
+/// endpoints ([`Endpoint::share_doorbell`]), so traffic for any
+/// device wakes the thread.
+///
+/// Device clocks stay independent: an idle lane's cycle counter does
+/// not advance, and nothing a neighbour does can change the cycle at
+/// which a lane processes its own messages — per-device cycle counts
+/// remain deterministic for a fixed per-device message sequence.
+pub fn run_hdl_multi_loop(
+    lanes: Vec<(Platform, Endpoint)>,
+    cfg: &CoSimCfg,
+    stop: Arc<AtomicBool>,
+    cycles_out: Vec<Arc<AtomicU64>>,
+) -> Result<Vec<HdlReport>> {
+    assert!(!lanes.is_empty());
+    assert_eq!(lanes.len(), cycles_out.len());
+    // All lanes share one doorbell so the merged idle wait below can
+    // block for traffic on any of them. (Single-lane callers get the
+    // same behaviour as a per-endpoint bell.)
+    let doorbell = Doorbell::new();
+    let mut lanes: Vec<HdlLane> = lanes
+        .into_iter()
+        .enumerate()
+        .map(|(k, (platform, mut link))| {
+            link.share_doorbell(&doorbell);
+            HdlLane::new(platform, link, k, cfg)
+        })
+        .collect::<Result<_>>()?;
+
     let t0 = std::time::Instant::now();
-    let mut vcd = match &cfg.vcd {
-        Some(path) => {
-            let f = std::io::BufWriter::new(std::fs::File::create(path)?);
-            Some(VcdWriter::new(f, crate::hdl::CLOCK_PERIOD_NS))
-        }
-        None => None,
-    };
-    let mut frame = ProbeFrame::default();
+    let mut horizon = MergedHorizon::new();
     // Reused wake-drain buffer (never allocates after warmup).
     let mut inbox: Vec<crate::link::Msg> = Vec::with_capacity(32);
     // Idle-wait slice: bounds how quickly a stop request is noticed
@@ -193,142 +412,164 @@ pub fn run_hdl_loop(
     };
 
     let mut result = Ok(());
-    'run: while !stop.load(Ordering::Relaxed) {
-        // ---- busy phase: tick while any event is possible ----
-        let busy0 = std::time::Instant::now();
-        loop {
-            let ctx = TickCtx { cycle: sim.cycle, forces: &forces };
-            if let Err(e) = tick_checked(&mut platform, &ctx, &mut link) {
-                result = Err(e);
-                break 'run;
-            }
-            if let Some(w) = vcd.as_mut() {
-                frame.clear();
-                platform.probe(&mut frame);
-                if let Err(e) = w.record(sim.cycle, &frame) {
-                    result = Err(e.into());
-                    break 'run;
-                }
-            }
-            sim.cycle += 1;
-            if sched.at_poll_boundary(sim.cycle) {
-                cycles_out.store(sim.cycle, Ordering::Relaxed);
-            }
-            if stop.load(Ordering::Relaxed) {
-                break 'run;
-            }
-            match platform.next_event(sim.cycle, &forces) {
-                Horizon::Now => {
-                    if sim.cycle % 256 == 0 {
-                        // Busy: still let the VM side run (single-core
-                        // testbed — it must be able to answer our DMA
-                        // reads promptly).
-                        std::thread::yield_now();
-                    }
-                }
-                Horizon::At(c) => {
-                    // Input that arrived since the last poll keeps us
-                    // ticking (it may change the schedule); otherwise
-                    // jump the provably idle gap in one step.
-                    match link.rx_ready() {
-                        Ok(true) => {}
-                        Ok(false) => {
-                            sched.fast_forward(&mut sim, c);
-                            cycles_out.store(sim.cycle, Ordering::Relaxed);
-                        }
-                        Err(e) => {
-                            result = Err(e);
-                            break 'run;
-                        }
-                    }
-                }
-                Horizon::Idle => break,
-            }
+    // Prime every lane with one busy pass: the single-device loop
+    // ticked once on entry before first idling, so cycle offsets (and
+    // "simulator never ticked" probes) stay identical.
+    for (i, lane) in lanes.iter_mut().enumerate() {
+        if stop.load(Ordering::Relaxed) {
+            break;
         }
-        sched.wall_busy += busy0.elapsed();
-        cycles_out.store(sim.cycle, Ordering::Relaxed);
-
-        // ---- idle phase: block on the link with a deadline ----
-        // Cycles do not advance here: an idle device that did no work
-        // consumed no device time (and a wall-coupled idle tick would
-        // break cycle determinism). On wakeup the link is drained
-        // *before* the next tick: control frames (acks, handshakes)
-        // are absorbed inside the poll and must not consume a cycle
-        // either — only payload traffic re-enters the tick loop, so
-        // the cycle at which a request is processed depends on the
-        // message sequence alone, never on ack timing.
-        let idle0 = std::time::Instant::now();
-        'idle: while !stop.load(Ordering::Relaxed) {
-            sched.idle_waits += 1;
-            match link.wait_any(idle_slice) {
-                Ok(true) => {
-                    inbox.clear();
-                    match link.poll_into(&mut inbox) {
-                        Ok(0) => {
-                            // Control-only wake (or a partial frame):
-                            // nothing for the platform. Brief nap so a
-                            // straggling frame tail cannot hot-spin us.
-                            std::thread::sleep(Duration::from_micros(20));
-                        }
-                        Ok(_) => {
-                            sched.wakeups += 1;
-                            for m in inbox.drain(..) {
-                                if let Err(e) = platform.inject(m) {
-                                    result = Err(e);
-                                    break 'run;
+        if let Err(e) = lane.run_busy(&stop, &cycles_out[i]) {
+            result = Err(e);
+            break;
+        }
+    }
+    'run: while result.is_ok() && !stop.load(Ordering::Relaxed) {
+        // ---- service phase: run lanes until every one is idle ----
+        loop {
+            horizon.clear();
+            for (i, lane) in lanes.iter_mut().enumerate() {
+                let mut h = lane.horizon();
+                if h == Horizon::Idle {
+                    // An idle platform with buffered link traffic is
+                    // not idle: drain outside the tick (control-only
+                    // traffic must consume no device time), then
+                    // re-ask.
+                    match lane.link.rx_ready() {
+                        Ok(true) => match lane.drain_inject(&mut inbox) {
+                            Ok(n) => {
+                                if n > 0 {
+                                    lane.sched.wakeups += 1;
+                                    h = lane.horizon();
                                 }
                             }
-                            break 'idle;
-                        }
+                            Err(e) => {
+                                result = Err(e);
+                                break 'run;
+                            }
+                        },
+                        Ok(false) => {}
                         Err(e) => {
                             result = Err(e);
                             break 'run;
                         }
                     }
                 }
-                Ok(false) => {
-                    if idle_slice.is_zero() {
-                        // Ablation mode (idle_sleep = 0): spin-tick
-                        // like the seed loop, but stay polite.
-                        std::thread::yield_now();
-                        break 'idle;
-                    }
-                }
-                Err(e) => {
+                horizon.push(i, h, lane.sim.cycle);
+            }
+            if horizon.is_empty() {
+                break; // every lane provably idle
+            }
+            while let Some((i, _at)) = horizon.pop() {
+                if let Err(e) = lanes[i].run_busy(&stop, &cycles_out[i]) {
                     result = Err(e);
                     break 'run;
                 }
+                if stop.load(Ordering::Relaxed) {
+                    break 'run;
+                }
             }
         }
-        sched.wall_idle += idle0.elapsed();
+
+        // ---- idle phase: all lanes quiet; block on the shared bell ----
+        // Cycles do not advance here: an idle device that did no work
+        // consumed no device time (and a wall-coupled idle tick would
+        // break cycle determinism).
+        if idle_slice.is_zero() {
+            // Ablation mode (idle_sleep = 0): spin-tick like the seed
+            // loop, but stay polite. Spin ticks are recorded to the
+            // VCD like any busy tick — waveforms must not have cycle
+            // gaps just because the pacing mode changed.
+            for (i, lane) in lanes.iter_mut().enumerate() {
+                let ctx = TickCtx { cycle: lane.sim.cycle, forces: &lane.sim.forces };
+                if let Err(e) = tick_checked(&mut lane.platform, &ctx, &mut lane.link) {
+                    result = Err(e);
+                    break 'run;
+                }
+                if let Some(w) = lane.vcd.as_mut() {
+                    lane.frame.clear();
+                    lane.platform.probe(&mut lane.frame);
+                    if let Err(e) = w.record(lane.sim.cycle, &lane.frame) {
+                        result = Err(e.into());
+                        break 'run;
+                    }
+                }
+                lane.sim.cycle += 1;
+                cycles_out[i].store(lane.sim.cycle, Ordering::Relaxed);
+            }
+            std::thread::yield_now();
+            continue 'run;
+        }
+        let idle0 = std::time::Instant::now();
+        'idle: while !stop.load(Ordering::Relaxed) {
+            for lane in lanes.iter_mut() {
+                lane.sched.idle_waits += 1;
+            }
+            // Epoch before the ready check: a ring between the check
+            // and the wait is never lost (same protocol as
+            // `Endpoint::wait_any`, widened over all lanes).
+            let seen = doorbell.epoch();
+            let mut any_ready = false;
+            for lane in lanes.iter_mut() {
+                match lane.link.rx_ready() {
+                    Ok(r) => any_ready |= r,
+                    Err(e) => {
+                        result = Err(e);
+                        break 'run;
+                    }
+                }
+            }
+            if any_ready {
+                // Drain *before* the next tick: control frames (acks,
+                // handshakes) are absorbed inside the poll and must
+                // not consume a cycle — only payload traffic re-enters
+                // the service phase, so the cycle at which a request
+                // is processed depends on the message sequence alone,
+                // never on ack timing.
+                let mut payload = 0usize;
+                for lane in lanes.iter_mut() {
+                    match lane.drain_inject(&mut inbox) {
+                        Ok(n) => {
+                            if n > 0 {
+                                lane.sched.wakeups += 1;
+                                payload += n;
+                            }
+                        }
+                        Err(e) => {
+                            result = Err(e);
+                            break 'run;
+                        }
+                    }
+                }
+                if payload > 0 {
+                    break 'idle;
+                }
+                // Control-only wake (or a partial frame): nothing for
+                // any platform. Brief nap so a straggling frame tail
+                // cannot hot-spin us.
+                std::thread::sleep(Duration::from_micros(20));
+                continue 'idle;
+            }
+            if doorbell.is_wired() {
+                doorbell.wait(seen, idle_slice);
+            } else {
+                // Socket transports cannot ring: nap-poll with the
+                // same granularity the single-device loop used.
+                std::thread::sleep(idle_slice.min(Duration::from_micros(50)));
+            }
+        }
+        let idle_elapsed = idle0.elapsed();
+        for lane in lanes.iter_mut() {
+            lane.sched.wall_idle += idle_elapsed;
+        }
     }
 
-    cycles_out.store(sim.cycle, Ordering::Relaxed);
+    for (i, lane) in lanes.iter().enumerate() {
+        cycles_out[i].store(lane.sim.cycle, Ordering::Relaxed);
+    }
     result?;
-    let vcd_changes = match vcd.as_mut() {
-        Some(w) => {
-            w.flush()?;
-            w.changes
-        }
-        None => 0,
-    };
-    Ok(HdlReport {
-        cycles: sim.cycle,
-        wall: t0.elapsed(),
-        wall_busy: sched.wall_busy,
-        wall_idle: sched.wall_idle,
-        fast_forwarded_cycles: sched.fast_forwarded,
-        idle_waits: sched.idle_waits,
-        wakeups: sched.wakeups,
-        mmio_reads: platform.bridge.mmio_reads,
-        mmio_writes: platform.bridge.mmio_writes,
-        dma_read_reqs: platform.bridge.dma_read_reqs,
-        dma_write_reqs: platform.bridge.dma_write_reqs,
-        irqs_sent: platform.bridge.irqs_sent,
-        idle_polls: platform.bridge.idle_polls,
-        records_done: platform.sorter.records_done,
-        vcd_changes,
-    })
+    let wall = t0.elapsed();
+    lanes.into_iter().map(|l| l.into_report(wall)).collect()
 }
 
 /// A fully assembled co-simulation (VM side in this process).
@@ -339,20 +580,38 @@ pub struct CoSim {
 }
 
 impl CoSim {
-    /// Bring up both sides per the configuration. For
+    /// Bring up both sides per the configuration — N devices when
+    /// `cfg.devices > 1` (each with its own BDF, link channels and
+    /// platform lane; every lane runs on the one HDL thread). For
     /// [`TransportKind::Uds`], the HDL side is *not* spawned here —
-    /// use [`super::lifecycle::HdlProcess`] or `vmhdl hdl-side`.
+    /// use [`super::lifecycle::HdlProcess`] or `vmhdl hdl-side`
+    /// (device k rendezvouses under `dir/devk`, device 0 under `dir`
+    /// itself).
     pub fn launch(cfg: CoSimCfg) -> Result<CoSim> {
+        let n = cfg.devices.max(1);
+        assert!(
+            n <= crate::pcie::board::MAX_DEVICES,
+            "devices {n} exceeds the BAR window layout ({})",
+            crate::pcie::board::MAX_DEVICES
+        );
         match &cfg.transport {
             TransportKind::InProc => {
-                let (vm_ep, hdl_ep) = Endpoint::inproc_pair();
-                let platform = Platform::new(cfg.platform.clone());
+                let mut vm_eps = Vec::with_capacity(n);
+                let mut lanes = Vec::with_capacity(n);
+                let mut cycles = Vec::with_capacity(n);
+                for k in 0..n {
+                    let (vm_ep, hdl_ep) = Endpoint::inproc_pair_on(k as u8);
+                    let mut pcfg = cfg.platform.clone();
+                    pcfg.device_index = k;
+                    lanes.push((Platform::new(pcfg), hdl_ep));
+                    vm_eps.push(vm_ep);
+                    cycles.push(Arc::new(AtomicU64::new(0)));
+                }
                 let stop = Arc::new(AtomicBool::new(false));
-                let cycles = Arc::new(AtomicU64::new(0));
                 let (s2, c2, cfg2) = (stop.clone(), cycles.clone(), cfg.clone());
                 let handle =
-                    std::thread::spawn(move || run_hdl_loop(platform, hdl_ep, &cfg2, s2, c2));
-                let vmm = Vmm::new(vm_ep, cfg.mode, cfg.ram_size);
+                    std::thread::spawn(move || run_hdl_multi_loop(lanes, &cfg2, s2, c2));
+                let vmm = Vmm::new_multi(vm_eps, cfg.mode, cfg.ram_size);
                 Ok(CoSim {
                     cfg,
                     vmm,
@@ -360,24 +619,39 @@ impl CoSim {
                 })
             }
             TransportKind::Uds(dir) => {
-                std::fs::create_dir_all(dir)?;
                 // A fresh session id per incarnation — the pid alone
                 // is NOT enough (a relaunched VM in the same process
                 // would be mistaken for the old incarnation and its
                 // renumbered messages dropped as duplicates).
                 let session = super::lifecycle::fresh_session();
-                let ep = Endpoint::uds(Side::Vm, dir, session)?;
-                let vmm = Vmm::new(ep, cfg.mode, cfg.ram_size);
+                let mut vm_eps = Vec::with_capacity(n);
+                for k in 0..n {
+                    let devdir = Endpoint::uds_device_dir(dir, k as u8);
+                    std::fs::create_dir_all(&devdir)?;
+                    let mut ep = Endpoint::uds(Side::Vm, &devdir, session)?;
+                    ep.set_device_id(k as u8);
+                    vm_eps.push(ep);
+                }
+                let vmm = Vmm::new_multi(vm_eps, cfg.mode, cfg.ram_size);
                 Ok(CoSim { cfg, vmm, hdl: None })
             }
         }
     }
 
-    /// Stop the in-proc HDL side and return its report.
-    pub fn shutdown(mut self) -> Result<HdlReport> {
+    /// Stop the in-proc HDL side and return device 0's report (the
+    /// single-device convenience; multi-device callers want
+    /// [`CoSim::shutdown_all`]).
+    pub fn shutdown(self) -> Result<HdlReport> {
+        let mut reports = self.shutdown_all()?;
+        Ok(reports.drain(..).next().unwrap_or_default())
+    }
+
+    /// Stop the in-proc HDL side and return every device's report
+    /// (index = device id).
+    pub fn shutdown_all(mut self) -> Result<Vec<HdlReport>> {
         match self.hdl.take() {
             Some(h) => h.stop(),
-            None => Ok(HdlReport::default()),
+            None => Ok(vec![HdlReport::default(); self.vmm.devices()]),
         }
     }
 }
@@ -517,6 +791,40 @@ mod tests {
         assert_eq!(report.mm2s_dmasr & 0x1, 1, "MM2S should read Halted");
         assert_eq!(report.s2mm_dmasr & 0x1, 1, "S2MM should read Halted");
         cosim.shutdown().unwrap();
+    }
+
+    #[test]
+    fn multi_device_inproc_probe_and_sort() {
+        let cfg = CoSimCfg { devices: 2, ..Default::default() };
+        let mut cosim = CoSim::launch(cfg).unwrap();
+        let mut hook = NoopHook;
+        for k in 0..2usize {
+            let mut env = GuestEnv::for_device(&mut cosim.vmm, &mut hook, k);
+            let mut drv = SortDriver::for_device(1024, k);
+            drv.timeout = Duration::from_secs(30);
+            drv.probe(&mut env).unwrap();
+            let report = app::run_sort(&mut env, &mut drv, 1, 0xAB00 + k as u64).unwrap();
+            assert!(report.verified, "device {k} result mismatched");
+            assert!(report.device_cycles > 0);
+        }
+        let reports = cosim.shutdown_all().unwrap();
+        assert_eq!(reports.len(), 2);
+        for (k, r) in reports.iter().enumerate() {
+            assert_eq!(r.records_done, 1, "device {k} record count");
+            assert!(r.irqs_sent >= 1, "device {k} sent no MSI");
+        }
+    }
+
+    #[test]
+    fn driver_rejects_mismatched_env_device() {
+        let cfg = CoSimCfg { devices: 2, ..Default::default() };
+        let mut cosim = CoSim::launch(cfg).unwrap();
+        let mut hook = NoopHook;
+        let mut env = GuestEnv::for_device(&mut cosim.vmm, &mut hook, 0);
+        let mut drv = SortDriver::for_device(1024, 1);
+        let err = drv.probe(&mut env).unwrap_err();
+        assert!(err.to_string().contains("bound to device"), "{err}");
+        cosim.shutdown_all().unwrap();
     }
 
     #[test]

@@ -10,4 +10,4 @@ pub mod scenario;
 pub mod stats;
 
 pub use cosim::{CoSim, CoSimCfg, HdlSideHandle, TransportKind};
-pub use scenario::{ScenarioReport, TimeGap};
+pub use scenario::{ScenarioReport, ShardPolicy, ShardedReport, TimeGap};

@@ -22,6 +22,27 @@
 //! high-level messages (the vpcie baseline): it must fragment reads,
 //! match completions by tag, and reverse-map bus addresses onto BARs —
 //! exactly the "extra software to process" the paper calls out.
+//!
+//! Data path (one clock domain; every box boundary is a registered
+//! [`Fifo`] or a link message):
+//!
+//! ```text
+//!            VM side (link messages)                 FPGA platform (AXI)
+//!
+//!  MmioRead/Write ──▶ mmio_queue ──▶ lite master ──▶ AR/AW+W ──▶ interconnect
+//!  MmioReadResp   ◀── complete_read ◀── R / B ◀─────────────────── (slaves)
+//!
+//!  DmaRead        ◀── serve_dma_slave ◀── AR ◀────── AXI DMA (MM2S fetch)
+//!  DmaReadResp    ──▶ dma_reads[tag].data ──▶ R beats ──▶ DMA ──▶ sorter
+//!  DmaWrite       ◀── wr_collect (AW + W burst) ◀──── AXI DMA (S2MM drain)
+//!
+//!  Interrupt      ◀── rising edge on irq_in[i] ◀───── DMA introut / regfile
+//! ```
+//!
+//! Multi-device topologies instantiate one bridge per device lane; a
+//! bridge only ever sees its own device's endpoint (the link layer
+//! stamps and checks the device id in every frame), so nothing here
+//! needs to know how many neighbours exist.
 
 use std::collections::VecDeque;
 

@@ -10,6 +10,25 @@
 //! Bus behaviour: bursts of up to 16 beats × 128 bits (256 B),
 //! 4 KiB-boundary safe, up to two outstanding read bursts (matching
 //! the modest pipelining of the real IP at this configuration).
+//!
+//! Data path (each channel is an independent engine; all wires are
+//! registered [`Fifo`]s):
+//!
+//! ```text
+//!            AXI-Lite slave (driver programs DMACR/SA/DA/LENGTH)
+//!                               │
+//!        ┌──────────────────────┴──────────────────────┐
+//!        ▼  MM2S (memory → stream)                     ▼  S2MM (stream → memory)
+//!  AR ──▶ bridge ──▶ host mem          s2mm_axis ──▶ s2mm_buf (≤16 beats)
+//!  R  ◀── bridge ◀── DmaReadResp            │ promote full/final buffer
+//!  R beats ──▶ mm2s_axis ──▶ sorter         ▼
+//!  (TLAST on final beat)               AW + W burst ──▶ bridge ──▶ DmaWrite
+//!  IOC irq on last beat                B ◀── bridge; IOC irq when drained
+//! ```
+//!
+//! Completion raises the channel's IOC bit (W1C in DMASR) and the
+//! level `introut` pin the bridge edge-detects into an MSI — the
+//! interrupt the guest driver's `wait_complete` blocks on.
 
 use std::collections::VecDeque;
 

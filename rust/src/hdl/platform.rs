@@ -50,6 +50,11 @@ pub struct PlatformCfg {
     /// Link poll interval in cycles (1 = every cycle, the paper's
     /// behaviour; see EXPERIMENTS.md §Perf for the ablation).
     pub poll_interval: u64,
+    /// Index of this device on a multi-device topology (0-based).
+    /// Selects the guest-physical BAR windows the bridge reverse-maps
+    /// in TLP mode — device k's windows sit at
+    /// [`crate::pcie::board::bar0_gpa`]`(k)` / `bar2_gpa(k)`.
+    pub device_index: usize,
 }
 
 impl Default for PlatformCfg {
@@ -60,6 +65,7 @@ impl Default for PlatformCfg {
             bram_size: 64 * 1024,
             stream_fifo_depth: 64,
             poll_interval: 1,
+            device_index: 0,
         }
     }
 }
@@ -97,13 +103,13 @@ impl Platform {
                 bar: 0,
                 axi_base: 0x0000,
                 size: 0x1_0000,
-                bus_base: crate::pcie::board::BAR0_GPA,
+                bus_base: crate::pcie::board::bar0_gpa(cfg.device_index),
             },
             BarWindow {
                 bar: 2,
                 axi_base: 0x10_0000,
                 size: 0x10_0000,
-                bus_base: crate::pcie::board::BAR2_GPA,
+                bus_base: crate::pcie::board::bar2_gpa(cfg.device_index),
             },
         ];
         let map = vec![

@@ -277,6 +277,59 @@ impl Horizon {
     }
 }
 
+/// Merged event horizon over N devices: a min-heap of per-device next
+/// events used by the multi-device run loop to pick which platform to
+/// service next ([`crate::coordinator::cosim::run_hdl_multi_loop`]).
+///
+/// Each device keeps its **own** cycle counter (device clocks are
+/// independent — an idle device's time must not advance because a
+/// busy neighbour's does), so the heap orders lanes by their own
+/// next-event cycle: a lane reporting [`Horizon::Now`] is keyed at
+/// its current cycle (service immediately), [`Horizon::At(c)`] at `c`
+/// (fast-forward candidate), and [`Horizon::Idle`] is not enqueued at
+/// all — an empty heap therefore means *every* device is idle and the
+/// loop may block on the shared link doorbell.
+///
+/// Determinism note: servicing order between lanes affects only wall
+/// time, never per-device cycle counts — each device's clock advances
+/// purely as a function of its own message sequence (the PR 1
+/// invariant, now holding per device). Ties break on the lower device
+/// index so the heap itself is deterministic too.
+#[derive(Debug, Default)]
+pub struct MergedHorizon {
+    heap: std::collections::BinaryHeap<std::cmp::Reverse<(u64, usize)>>,
+}
+
+impl MergedHorizon {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Enqueue device `idx` whose platform reported `h` at its local
+    /// cycle `now`. `Idle` devices are intentionally dropped.
+    pub fn push(&mut self, idx: usize, h: Horizon, now: u64) {
+        match h {
+            Horizon::Now => self.heap.push(std::cmp::Reverse((now, idx))),
+            Horizon::At(c) => self.heap.push(std::cmp::Reverse((c.max(now), idx))),
+            Horizon::Idle => {}
+        }
+    }
+
+    /// Next device to service: the one with the earliest pending
+    /// event (ties → lowest index). `None` ⇔ all devices idle.
+    pub fn pop(&mut self) -> Option<(usize, u64)> {
+        self.heap.pop().map(|std::cmp::Reverse((cycle, idx))| (idx, cycle))
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    pub fn clear(&mut self) {
+        self.heap.clear();
+    }
+}
+
 /// Pacing state and accounting for an event-driven co-sim run loop:
 /// tracks how wall time splits between ticking and waiting, and how
 /// many cycles were fast-forwarded rather than ticked.
@@ -403,6 +456,30 @@ mod tests {
         assert!(s.at_poll_boundary(8));
         let every = Scheduler::new(0); // clamped to 1
         assert!(every.at_poll_boundary(17));
+    }
+
+    #[test]
+    fn merged_horizon_orders_devices_and_drops_idle() {
+        let mut m = MergedHorizon::new();
+        m.push(0, Horizon::At(500), 100);
+        m.push(1, Horizon::Now, 40);
+        m.push(2, Horizon::Idle, 7);
+        m.push(3, Horizon::At(60), 10);
+        // Now@40 first, then At(60), then At(500); the Idle lane never
+        // appears.
+        assert_eq!(m.pop(), Some((1, 40)));
+        assert_eq!(m.pop(), Some((3, 60)));
+        assert_eq!(m.pop(), Some((0, 500)));
+        assert_eq!(m.pop(), None);
+        assert!(m.is_empty());
+        // A stale At target behind the device clock is clamped to now.
+        m.push(4, Horizon::At(5), 90);
+        assert_eq!(m.pop(), Some((4, 90)));
+        // Ties break toward the lower device index.
+        m.push(9, Horizon::Now, 10);
+        m.push(2, Horizon::Now, 10);
+        assert_eq!(m.pop(), Some((2, 10)));
+        assert_eq!(m.pop(), Some((9, 10)));
     }
 
     #[test]

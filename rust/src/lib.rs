@@ -58,8 +58,26 @@
 //! wall cost and makes same-seed runs cycle-deterministic (identical
 //! `device_cycles` and VCD change counts).
 //!
-//! See `DESIGN.md` for the full inventory and `EXPERIMENTS.md` §Perf
-//! for the measured before/after time-gap factors.
+//! ## Multi-device topologies
+//!
+//! The core generalizes to **N PCIe FPGAs per VM**: the VMM
+//! enumerates N pseudo devices on one simulated bus (unique BDFs from
+//! [`pcie::BusAllocator`], per-device BAR windows), each with its own
+//! channel set (device id in every frame) and its own cycle-accurate
+//! platform lane. One HDL thread drives all lanes
+//! ([`coordinator::cosim::run_hdl_multi_loop`]) through a merged
+//! event-horizon min-heap ([`hdl::sim::MergedHorizon`]), blocking on
+//! a single shared doorbell when every device is idle. Scenario
+//! batches shard across devices
+//! ([`coordinator::scenario::run_sharded_offload`], CLI `--devices N
+//! --shard round-robin|size`) with results merged in submission
+//! order; device clocks stay independent, so per-device cycle counts
+//! remain deterministic at any N.
+//!
+//! See `DESIGN.md` for the full inventory, `DEBUGGING.md` for the
+//! full-visibility debugging guide, and `EXPERIMENTS.md` §Perf for
+//! the measured before/after time-gap factors and the multi-device
+//! scaling row.
 
 pub mod config;
 pub mod coordinator;

@@ -12,6 +12,27 @@
 //! on the reverse channel of the pair; unacknowledged frames stay in
 //! the sender's outbox and are replayed after a [`Msg::Hello`]
 //! handshake whenever the peer (re)connects with a new session id.
+//!
+//! Data path of one endpoint (two pairs = four unidirectional
+//! channels; every frame carries the endpoint's device id):
+//!
+//! ```text
+//!            VM endpoint (device k)            HDL endpoint (device k)
+//!
+//!  send(Mmio*) ─▶ TxA: seq#, outbox ═══ frames ══▶ RxA: dedup ─▶ poll() ─▶ bridge
+//!  poll() ◀─ RxA'(resp): dedup ◀══════ frames ═══ TxA'(resp) ◀─ send(MmioReadResp)
+//!  send(DmaReadResp) ─▶ TxB' ═════════ frames ══▶ RxB' ─▶ poll() ─▶ bridge
+//!  poll() ◀─ RxB: dedup ◀═════════════ frames ═══ TxB ◀─ send(DmaRead/Irq)
+//!                 │                                   │
+//!                 └── Doorbell (ring on enqueue) ◀────┘  wait_any() blocks here
+//! ```
+//!
+//! Multi-device topologies run one endpoint pair *per device*; each
+//! endpoint stamps its device id into every frame and rejects frames
+//! carrying any other id ([`Endpoint::set_device_id`]), and the HDL
+//! side's N endpoints can share one wake-up [`Doorbell`]
+//! ([`Endpoint::share_doorbell`]) so a single scheduler thread can
+//! block for traffic on any device.
 
 use std::collections::VecDeque;
 use std::sync::Arc;
@@ -35,6 +56,8 @@ pub struct ReliableTx {
     transport: Box<dyn Transport>,
     next_seq: u64,
     outbox: VecDeque<(u64, Vec<u8>)>,
+    /// Device id stamped on every frame (multi-device multiplexing).
+    device: u8,
     /// Frames queued while the peer is down (flushed on reconnect).
     pub sent: u64,
     pub replayed: u64,
@@ -47,6 +70,7 @@ impl ReliableTx {
             transport,
             next_seq: 1,
             outbox: VecDeque::new(),
+            device: 0,
             sent: 0,
             replayed: 0,
             bytes: 0,
@@ -57,7 +81,7 @@ impl ReliableTx {
     fn send(&mut self, msg: &Msg) -> Result<()> {
         let seq = self.next_seq;
         self.next_seq += 1;
-        let frame = msg.encode(seq);
+        let frame = msg.encode_on(seq, self.device);
         self.bytes += frame.len() as u64;
         self.sent += 1;
         self.outbox.push_back((seq, frame.clone()));
@@ -69,7 +93,7 @@ impl ReliableTx {
 
     /// Send a control message (outside the reliable stream, seq 0).
     fn send_control(&mut self, msg: &Msg) {
-        let _ = self.transport.send(&msg.encode(0));
+        let _ = self.transport.send(&msg.encode_on(0, self.device));
     }
 
     /// Drop acknowledged frames.
@@ -138,6 +162,11 @@ pub struct LinkPair {
     session: u64,
     peer_session: u64,
     connected: bool,
+    /// Device id of the owning endpoint: stamped on every outgoing
+    /// frame and checked on every incoming one, so a cross-wired
+    /// multi-device rendezvous fails loudly instead of routing MMIO
+    /// to the wrong platform.
+    device: u8,
     /// Diagnostic tracing (VMHDL_LINK_TRACE=1).
     trace: bool,
 }
@@ -156,8 +185,15 @@ impl LinkPair {
             session,
             peer_session: 0,
             connected: false,
+            device: 0,
             trace: std::env::var("VMHDL_LINK_TRACE").as_deref() == Ok("1"),
         }
+    }
+
+    /// Assign the device id stamped on (and expected in) frames.
+    fn set_device(&mut self, device: u8) {
+        self.device = device;
+        self.tx.device = device;
     }
 
     fn trace(&self, what: &str) {
@@ -235,7 +271,7 @@ impl LinkPair {
 
         while let Some(frame) = self.rx.transport.try_recv()? {
             self.rx.bytes += frame.len() as u64;
-            let (seq, msg) = match Msg::decode(&frame) {
+            let (seq, dev, msg) = match Msg::decode_on(&frame) {
                 Ok(v) => v,
                 Err(e) => {
                     // A corrupt frame is a bug or a truncated restart;
@@ -246,6 +282,16 @@ impl LinkPair {
                     )));
                 }
             };
+            if dev != self.device {
+                // A frame for another device on this channel is a
+                // wiring bug in the multi-device rendezvous — always
+                // fail loudly, never deliver to the wrong platform.
+                return Err(Error::link(format!(
+                    "{}: cross-device frame (got device {dev}, this channel is \
+                     device {})",
+                    self.name, self.device
+                )));
+            }
             match msg {
                 Msg::Ack { up_to } => self.tx.ack(up_to),
                 Msg::Hello {
@@ -344,6 +390,9 @@ pub struct Endpoint {
     pub side: Side,
     pub pair_a: LinkPair,
     pub pair_b: LinkPair,
+    /// Device id of this endpoint on a multi-device topology (0 on
+    /// single-device setups). Stamped into every frame header.
+    device: u8,
     /// Per-label message counters (for the §V vpcie comparison).
     pub sent_by_label: std::collections::BTreeMap<&'static str, u64>,
     pub recv_by_label: std::collections::BTreeMap<&'static str, u64>,
@@ -362,10 +411,44 @@ impl Endpoint {
             side,
             pair_a,
             pair_b,
+            device: 0,
             sent_by_label: Default::default(),
             recv_by_label: Default::default(),
             doorbell,
         }
+    }
+
+    /// This endpoint's device id on the shared topology.
+    pub fn device_id(&self) -> u8 {
+        self.device
+    }
+
+    /// Assign the device id (multi-device topologies). Both pairs
+    /// stamp it on outgoing frames and reject frames carrying any
+    /// other id. Must be set identically on both ends of the link.
+    pub fn set_device_id(&mut self, device: u8) {
+        self.device = device;
+        self.pair_a.set_device(device);
+        self.pair_b.set_device(device);
+    }
+
+    /// Replace this endpoint's doorbell with a shared one, so one
+    /// waiter can block for traffic on *any* of N per-device endpoints
+    /// (the multi-device HDL scheduler's merged idle wait). Senders
+    /// into any sharing endpoint ring the same bell.
+    pub fn share_doorbell(&mut self, db: &Arc<Doorbell>) {
+        self.doorbell = db.clone();
+        self.pair_a.attach_doorbell(db);
+        self.pair_b.attach_doorbell(db);
+    }
+
+    /// Create a connected in-process endpoint pair `(vm, hdl)` for
+    /// device id `device` on a multi-device topology.
+    pub fn inproc_pair_on(device: u8) -> (Endpoint, Endpoint) {
+        let (mut vm, mut hdl) = Self::inproc_pair();
+        vm.set_device_id(device);
+        hdl.set_device_id(device);
+        (vm, hdl)
     }
 
     /// Create a connected in-process endpoint pair `(vm, hdl)`.
@@ -390,6 +473,17 @@ impl Endpoint {
             LinkPair::new("B@hdl", Box::new(b_req_tx), Box::new(b_resp_rx), session_hdl),
         );
         (vm, hdl)
+    }
+
+    /// Rendezvous directory for device `device` under the base
+    /// directory: device 0 keeps the base itself (single-device
+    /// layouts are unchanged), device k > 0 gets a `devk/` subdir.
+    pub fn uds_device_dir(dir: &std::path::Path, device: u8) -> std::path::PathBuf {
+        if device == 0 {
+            dir.to_path_buf()
+        } else {
+            dir.join(format!("dev{device}"))
+        }
     }
 
     /// Socket file names for the four unidirectional channels under a
@@ -538,6 +632,32 @@ impl Endpoint {
                 std::thread::sleep(UNWIRED_NAP.min(deadline - now));
             }
         }
+    }
+
+    /// Like [`Endpoint::wait_any`], but hands control back to the
+    /// caller after **one** doorbell wake (or nap) even when this
+    /// endpoint's own receive side is still empty. With a doorbell
+    /// shared across N endpoints ([`Endpoint::share_doorbell`]) this
+    /// is how a loop blocked on one device stays responsive to the
+    /// others: any sharing endpoint's traffic rings the same bell,
+    /// this returns, and the caller services *all* links before
+    /// re-waiting. (Plain `wait_any` would swallow such wakes and
+    /// re-sleep until its own traffic or the deadline.)
+    pub fn wait_any_shared(&mut self, timeout: Duration) -> Result<bool> {
+        // Epoch before the ready check, as in `wait_any`.
+        let seen = self.doorbell.epoch();
+        if self.rx_ready()? {
+            return Ok(true);
+        }
+        if timeout.is_zero() {
+            return Ok(false);
+        }
+        if self.doorbell.is_wired() {
+            self.doorbell.wait(seen, timeout);
+        } else {
+            std::thread::sleep(UNWIRED_NAP.min(timeout));
+        }
+        self.rx_ready()
     }
 
     /// Poll until `pred` matches a delivered message or the timeout
@@ -702,6 +822,58 @@ mod tests {
         assert_eq!(hdl.poll_into(&mut buf).unwrap(), 1);
         assert_eq!(buf.len(), 1);
         assert_eq!(buf.capacity(), cap, "cleared buffer must be reused, not reallocated");
+    }
+
+    #[test]
+    fn device_id_stamped_and_cross_device_rejected() {
+        // Same-id endpoints interoperate.
+        let (mut vm, mut hdl) = Endpoint::inproc_pair_on(3);
+        vm.send(&Msg::MmioRead { tag: 1, bar: 0, addr: 0, len: 4 }).unwrap();
+        assert_eq!(hdl.poll().unwrap().len(), 1);
+        // A mismatched receiver treats the frame as a wiring bug.
+        let (mut vm2, mut hdl2) = Endpoint::inproc_pair();
+        vm2.set_device_id(1);
+        hdl2.set_device_id(2);
+        vm2.send(&Msg::MmioRead { tag: 1, bar: 0, addr: 0, len: 4 }).unwrap();
+        let err = hdl2.poll().unwrap_err();
+        assert!(err.to_string().contains("cross-device"), "{err}");
+    }
+
+    #[test]
+    fn shared_doorbell_wakes_on_any_endpoint() {
+        use crate::link::transport::Doorbell;
+        let (mut vm_a, mut hdl_a) = Endpoint::inproc_pair_on(0);
+        let (vm_b, mut hdl_b) = Endpoint::inproc_pair_on(1);
+        let db = Doorbell::new();
+        hdl_a.share_doorbell(&db);
+        hdl_b.share_doorbell(&db);
+        // Traffic for device 1 must wake a waiter parked on device 0's
+        // (shared) bell: sample the epoch, send on B, epoch moves.
+        let seen = db.epoch();
+        let h = std::thread::spawn(move || {
+            let mut vm_b = vm_b;
+            std::thread::sleep(Duration::from_millis(10));
+            vm_b.send(&Msg::Interrupt { vector: 0 }).unwrap();
+            vm_b
+        });
+        db.wait(seen, Duration::from_secs(5));
+        assert_ne!(db.epoch(), seen, "shared doorbell never rang");
+        let _ = h.join().unwrap();
+        assert_eq!(hdl_b.poll().unwrap().len(), 1);
+        // Device A's channels still work over the shared bell.
+        vm_a.send(&Msg::MmioWrite { bar: 0, addr: 0, data: vec![0; 4] }).unwrap();
+        assert!(hdl_a.wait_any(Duration::from_secs(1)).unwrap());
+        assert_eq!(hdl_a.poll().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn uds_device_dirs_are_disjoint() {
+        let base = std::path::Path::new("/tmp/vmhdl-x");
+        assert_eq!(Endpoint::uds_device_dir(base, 0), base);
+        let d1 = Endpoint::uds_device_dir(base, 1);
+        let d2 = Endpoint::uds_device_dir(base, 2);
+        assert_ne!(d1, d2);
+        assert!(d1.starts_with(base));
     }
 
     #[test]

@@ -10,15 +10,22 @@
 //! draws in §V.
 //!
 //! Wire format (little-endian throughout):
-//! `magic u16 | version u8 | kind u8 | seq u64 | body...`
+//! `magic u16 | version u8 | kind u8 | dev u8 | seq u64 | body...`
 //! Frames are length-prefixed by the transport, not here.
+//!
+//! `dev` is the **device id** of the endpoint the frame belongs to —
+//! multi-device topologies multiplex N per-device channel sets over
+//! the same rendezvous, and the id in the framing turns any cross-
+//! device wiring mistake into an immediate, diagnosable link error
+//! instead of silent misrouted MMIO.
 
 use crate::{Error, Result};
 
 /// Wire magic ("VH").
 pub const MAGIC: u16 = 0x5648;
 /// Codec version; bumped on any incompatible body change.
-pub const VERSION: u8 = 1;
+/// v2: device id added to the frame header (multi-device topologies).
+pub const VERSION: u8 = 2;
 
 /// Which end of the link a participant is.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -188,13 +195,21 @@ impl<'a> Rd<'a> {
 }
 
 impl Msg {
-    /// Encode with the frame header. `seq` is the reliable-channel
-    /// sequence number (0 for control messages outside the stream).
+    /// Encode with the frame header for device 0 (the single-device
+    /// default). `seq` is the reliable-channel sequence number (0 for
+    /// control messages outside the stream).
     pub fn encode(&self, seq: u64) -> Vec<u8> {
+        self.encode_on(seq, 0)
+    }
+
+    /// Encode with the frame header, stamping the owning endpoint's
+    /// device id (multi-device channel multiplexing).
+    pub fn encode_on(&self, seq: u64, dev: u8) -> Vec<u8> {
         let mut buf = Vec::with_capacity(32);
         put_u16(&mut buf, MAGIC);
         buf.push(VERSION);
         buf.push(self.kind());
+        buf.push(dev);
         put_u64(&mut buf, seq);
         match self {
             Msg::MmioRead { tag, bar, addr, len } => {
@@ -244,8 +259,15 @@ impl Msg {
         buf
     }
 
-    /// Decode a frame; returns `(seq, msg)`.
+    /// Decode a frame; returns `(seq, msg)`, discarding the device id
+    /// (single-device callers).
     pub fn decode(frame: &[u8]) -> Result<(u64, Msg)> {
+        let (seq, _dev, msg) = Self::decode_on(frame)?;
+        Ok((seq, msg))
+    }
+
+    /// Decode a frame; returns `(seq, device_id, msg)`.
+    pub fn decode_on(frame: &[u8]) -> Result<(u64, u8, Msg)> {
         let mut r = Rd { b: frame, off: 0 };
         let magic = r.u16()?;
         if magic != MAGIC {
@@ -256,6 +278,7 @@ impl Msg {
             return Err(Error::link(format!("codec version {ver} != {VERSION}")));
         }
         let kind = r.u8()?;
+        let dev = r.u8()?;
         let seq = r.u64()?;
         let msg = match kind {
             kind::MMIO_READ => Msg::MmioRead {
@@ -298,7 +321,7 @@ impl Msg {
             other => return Err(Error::link(format!("unknown kind {other}"))),
         };
         r.done()?;
-        Ok((seq, msg))
+        Ok((seq, dev, msg))
     }
 
     fn kind(&self) -> u8 {
@@ -374,6 +397,19 @@ mod tests {
             assert_eq!(seq, i as u64);
             assert_eq!(back, m);
         }
+    }
+
+    #[test]
+    fn device_id_roundtrips_in_header() {
+        for dev in [0u8, 1, 3, 255] {
+            let f = Msg::MmioRead { tag: 1, bar: 0, addr: 2, len: 4 }.encode_on(9, dev);
+            let (seq, got_dev, msg) = Msg::decode_on(&f).unwrap();
+            assert_eq!((seq, got_dev), (9, dev));
+            assert!(matches!(msg, Msg::MmioRead { tag: 1, .. }));
+        }
+        // The single-device encode stamps device 0.
+        let f = Msg::Bye.encode(0);
+        assert_eq!(Msg::decode_on(&f).unwrap().1, 0);
     }
 
     #[test]

@@ -2,7 +2,9 @@
 //!
 //! ```text
 //! vmhdl cosim     [--records N] [--mode mmio|tlp] [--transport inproc|uds]
+//!                 [--devices N] [--shard round-robin|size]
 //!                 [--vcd out.vcd] [--golden true] ...   run a full co-simulation
+//!                 (devices > 1 shards the batch across N PCIe FPGAs)
 //! vmhdl hdl-side  --dir <sockets> [...]    the HDL simulator process (UDS)
 //! vmhdl vm-side   [--dir <sockets>] [...]  the VM process (UDS)
 //! vmhdl rtt       [--iters N]              MMIO round-trip microbench (Table III)
@@ -22,7 +24,7 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use vmhdl::config::Config;
-use vmhdl::coordinator::cosim::run_hdl_loop;
+use vmhdl::coordinator::cosim::{run_hdl_loop, run_hdl_multi_loop};
 use vmhdl::coordinator::stats::fmt_dur;
 use vmhdl::coordinator::scenario;
 use vmhdl::costmodel::{flow, FlowModel, ResourceModel};
@@ -88,10 +90,11 @@ fn print_usage() {
 
 fn cmd_cosim(cfg: &Config) -> Result<()> {
     println!(
-        "co-simulation: {} records, mode={:?}, transport={}, golden={}{}",
+        "co-simulation: {} records, mode={:?}, transport={}, devices={}, golden={}{}",
         cfg.records,
         cfg.mode,
         cfg.transport,
+        cfg.devices,
         cfg.golden,
         if cfg.golden { format!(" (backend {})", cfg.backend) } else { String::new() }
     );
@@ -100,6 +103,9 @@ fn cmd_cosim(cfg: &Config) -> Result<()> {
     } else {
         None
     };
+    if cfg.devices > 1 {
+        return cmd_cosim_sharded(cfg, golden.as_deref_mut());
+    }
     let rep =
         scenario::run_sort_offload(cfg.cosim()?, cfg.records, cfg.seed, golden.as_deref_mut())?;
     println!(
@@ -139,27 +145,109 @@ fn cmd_cosim(cfg: &Config) -> Result<()> {
     Ok(())
 }
 
+/// Multi-device cosim: shard the batch, then report aggregate and
+/// per-device figures.
+fn cmd_cosim_sharded(cfg: &Config, golden: Option<&mut dyn GoldenBackend>) -> Result<()> {
+    let (rep, _outs) = scenario::run_sharded_offload(
+        cfg.cosim()?,
+        cfg.records,
+        cfg.seed,
+        cfg.shard,
+        golden,
+    )?;
+    println!(
+        "sharded offload: {} records over {} devices ({} policy) in {} wall \
+         ({:.1} records/s aggregate)",
+        rep.records,
+        rep.devices,
+        rep.policy,
+        fmt_dur(rep.wall),
+        rep.records as f64 / rep.wall.as_secs_f64().max(1e-9),
+    );
+    for (k, hdl) in rep.hdl.iter().enumerate() {
+        let ticked = hdl.cycles.saturating_sub(hdl.fast_forwarded_cycles);
+        println!(
+            "  dev{k}: {} records, {} device-cycles ({} ticked, {} fast-forwarded), \
+             {} busy / {} idle, {} irqs",
+            rep.per_device_records[k],
+            rep.per_device_cycles[k],
+            ticked,
+            hdl.fast_forwarded_cycles,
+            fmt_dur(hdl.wall_busy),
+            fmt_dur(hdl.wall_idle),
+            hdl.irqs_sent,
+        );
+    }
+    println!(
+        "link: {} messages, {} bytes over {} channel sets{}",
+        rep.link_msgs,
+        rep.link_bytes,
+        rep.devices,
+        if rep.golden_checked { " — results golden-checked" } else { "" }
+    );
+    Ok(())
+}
+
 fn cmd_hdl_side(cfg: &Config) -> Result<()> {
     let cc = cfg.cosim()?;
     let session = vmhdl::coordinator::lifecycle::fresh_session();
-    let ep = Endpoint::uds(Side::Hdl, &cfg.socket_dir, session)?;
+    let n = cfg.devices.max(1);
     println!(
-        "hdl-side: sockets at {}, session {session:#x}, vcd={:?}",
+        "hdl-side: sockets at {}, devices {n}, session {session:#x}, vcd={:?}",
         cfg.socket_dir.display(),
         cfg.vcd
     );
-    let platform = Platform::new(cc.platform.clone());
-    // Runs until killed (the supervisor / user stops us).
+    if n == 1 {
+        let ep = Endpoint::uds(Side::Hdl, &cfg.socket_dir, session)?;
+        let platform = Platform::new(cc.platform.clone());
+        // Runs until killed (the supervisor / user stops us).
+        let stop = Arc::new(AtomicBool::new(false));
+        let cycles = Arc::new(AtomicU64::new(0));
+        let report = run_hdl_loop(platform, ep, &cc, stop, cycles)?;
+        println!("hdl-side: done: {report:?}");
+        return Ok(());
+    }
+    // Multi-device: one lane per device, rendezvousing under per-
+    // device socket subdirectories (dev0 = the base dir).
+    let mut lanes = Vec::with_capacity(n);
+    for k in 0..n {
+        let devdir = Endpoint::uds_device_dir(&cfg.socket_dir, k as u8);
+        std::fs::create_dir_all(&devdir)?;
+        let mut ep = Endpoint::uds(Side::Hdl, &devdir, session)?;
+        ep.set_device_id(k as u8);
+        let mut pcfg = cc.platform.clone();
+        pcfg.device_index = k;
+        lanes.push((Platform::new(pcfg), ep));
+    }
     let stop = Arc::new(AtomicBool::new(false));
-    let cycles = Arc::new(AtomicU64::new(0));
-    let report = run_hdl_loop(platform, ep, &cc, stop, cycles)?;
-    println!("hdl-side: done: {report:?}");
+    let cycles: Vec<_> = (0..n).map(|_| Arc::new(AtomicU64::new(0))).collect();
+    let reports = run_hdl_multi_loop(lanes, &cc, stop, cycles)?;
+    for (k, report) in reports.iter().enumerate() {
+        println!("hdl-side: dev{k} done: {report:?}");
+    }
     Ok(())
 }
 
 fn cmd_vm_side(cfg: &Config) -> Result<()> {
     let mut c2 = cfg.clone();
     c2.transport = "uds".to_string();
+    if cfg.devices > 1 {
+        let (rep, _outs) = scenario::run_sharded_offload(
+            c2.cosim()?,
+            cfg.records,
+            cfg.seed,
+            cfg.shard,
+            None,
+        )?;
+        println!(
+            "vm-side: {} records ok over {} devices in {} (per-device cycles {:?})",
+            rep.records,
+            rep.devices,
+            fmt_dur(rep.wall),
+            rep.per_device_cycles
+        );
+        return Ok(());
+    }
     let rep = scenario::run_sort_offload(c2.cosim()?, cfg.records, cfg.seed, None)?;
     println!(
         "vm-side: {} records ok in {} ({} device cycles)",

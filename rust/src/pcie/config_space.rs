@@ -1,4 +1,8 @@
-//! PCI configuration space model (type-0 header + MSI capability).
+//! PCI configuration space model (type-0 header + MSI capability),
+//! plus the bus-level identity/allocation plumbing for multi-function
+//! topologies: [`Bdf`] (bus/device/function) and [`BusAllocator`],
+//! the enumeration-time allocator that hands each pseudo device a
+//! unique BDF and non-overlapping guest-physical BAR windows.
 //!
 //! Implements the subset a guest driver exercises when probing and
 //! binding the FPGA board: vendor/device id, command register, BAR
@@ -7,6 +11,94 @@
 
 use super::bar::{BarKind, BarSet};
 use crate::{Error, Result};
+
+/// A PCI bus/device/function address — the identity a config-space
+/// function has on the bus, and the requester id it stamps on its
+/// transactions.
+///
+/// Multi-device co-simulation: each of the N pseudo devices enumerated
+/// by the VM gets its own `Bdf` from a [`BusAllocator`], so the guest
+/// can tell the endpoints apart exactly as `lspci` would.
+///
+/// ```
+/// use vmhdl::pcie::config_space::Bdf;
+/// let bdf = Bdf::new(0, 3, 0);
+/// assert_eq!(bdf.requester_id(), 3 << 3);
+/// assert_eq!(bdf.to_string(), "00:03.0");
+/// ```
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct Bdf {
+    pub bus: u8,
+    /// Device number (5 bits on real PCI).
+    pub dev: u8,
+    /// Function number (3 bits).
+    pub func: u8,
+}
+
+impl Bdf {
+    pub fn new(bus: u8, dev: u8, func: u8) -> Self {
+        assert!(dev < 32 && func < 8, "BDF out of range: {dev}/{func}");
+        Self { bus, dev, func }
+    }
+
+    /// The 16-bit requester/completer id carried in TLPs:
+    /// `bus[15:8] | dev[7:3] | func[2:0]`.
+    pub fn requester_id(self) -> u16 {
+        ((self.bus as u16) << 8) | ((self.dev as u16) << 3) | self.func as u16
+    }
+}
+
+impl std::fmt::Display for Bdf {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{:02x}:{:02x}.{}", self.bus, self.dev, self.func)
+    }
+}
+
+/// Enumeration-time allocator: assigns sequential device numbers on a
+/// bus and carves non-overlapping, naturally aligned guest-physical
+/// windows for their BARs — the "BIOS" side of bringing up N endpoints
+/// on one simulated PCIe topology.
+///
+/// ```
+/// use vmhdl::pcie::config_space::BusAllocator;
+/// let mut alloc = BusAllocator::new(0, 0xF000_0000);
+/// let (bdf0, bars0) = alloc.alloc(&[64 * 1024, 1024 * 1024]);
+/// let (bdf1, bars1) = alloc.alloc(&[64 * 1024, 1024 * 1024]);
+/// assert_ne!(bdf0, bdf1);
+/// // Windows never overlap and are size-aligned.
+/// assert!(bars1[0] >= bars0[1] + 1024 * 1024);
+/// assert_eq!(bars0[1] % (1024 * 1024), 0);
+/// ```
+#[derive(Debug, Clone)]
+pub struct BusAllocator {
+    bus: u8,
+    next_dev: u8,
+    next_base: u64,
+}
+
+impl BusAllocator {
+    /// Allocate on `bus`, placing BAR windows upward from `mem_base`.
+    pub fn new(bus: u8, mem_base: u64) -> Self {
+        // Device 0 is conventionally the host bridge; endpoints start
+        // at device 1.
+        Self { bus, next_dev: 1, next_base: mem_base }
+    }
+
+    /// Allocate the next function: returns its BDF and one base per
+    /// requested BAR size (aligned to the size, as hardware BARs are).
+    pub fn alloc(&mut self, bar_sizes: &[u64]) -> (Bdf, Vec<u64>) {
+        let bdf = Bdf::new(self.bus, self.next_dev, 0);
+        self.next_dev += 1;
+        let mut bases = Vec::with_capacity(bar_sizes.len());
+        for &size in bar_sizes {
+            let size = size.max(1).next_power_of_two();
+            let base = (self.next_base + size - 1) & !(size - 1);
+            bases.push(base);
+            self.next_base = base + size;
+        }
+        (bdf, bases)
+    }
+}
 
 /// Standard offsets.
 pub mod regs {
@@ -57,6 +149,9 @@ pub struct ConfigSpace {
     sizing: [bool; 6],
     msi: MsiState,
     msi_cap_vectors: u16,
+    /// Bus address of this function (default `00:00.0`; set by the
+    /// enumerating VMM via [`ConfigSpace::with_bdf`]).
+    bdf: Bdf,
 }
 
 impl ConfigSpace {
@@ -75,6 +170,7 @@ impl ConfigSpace {
             sizing: [false; 6],
             msi: MsiState::default(),
             msi_cap_vectors: msi_vectors,
+            bdf: Bdf::default(),
         };
         cs.put16(regs::VENDOR_ID, vendor);
         cs.put16(regs::DEVICE_ID, device);
@@ -102,6 +198,18 @@ impl ConfigSpace {
     }
     fn get16(&self, off: u16) -> u16 {
         u16::from_le_bytes(self.raw[off as usize..off as usize + 2].try_into().unwrap())
+    }
+
+    /// Assign this function's bus address (builder style, used by the
+    /// enumerating VMM).
+    pub fn with_bdf(mut self, bdf: Bdf) -> Self {
+        self.bdf = bdf;
+        self
+    }
+
+    /// This function's bus/device/function address.
+    pub fn bdf(&self) -> Bdf {
+        self.bdf
     }
 
     pub fn bars(&self) -> &BarSet {
@@ -344,5 +452,32 @@ mod tests {
         let d = dev();
         assert!(d.read32(2).is_err());
         assert!(d.read32(254).is_err());
+    }
+
+    #[test]
+    fn bdf_requester_id_and_display() {
+        let bdf = Bdf::new(1, 2, 3);
+        assert_eq!(bdf.requester_id(), (1 << 8) | (2 << 3) | 3);
+        assert_eq!(bdf.to_string(), "01:02.3");
+        let d = dev().with_bdf(bdf);
+        assert_eq!(d.bdf(), bdf);
+    }
+
+    #[test]
+    fn bus_allocator_unique_bdfs_and_disjoint_windows() {
+        let mut alloc = BusAllocator::new(0, board::BAR0_GPA);
+        let mut seen = Vec::new();
+        let mut prev_end = 0u64;
+        for _ in 0..4 {
+            let (bdf, bases) = alloc.alloc(&[board::BAR0_SIZE, board::BAR2_SIZE]);
+            assert!(!seen.contains(&bdf), "duplicate BDF {bdf}");
+            seen.push(bdf);
+            assert_eq!(bases.len(), 2);
+            for (&base, &size) in bases.iter().zip([board::BAR0_SIZE, board::BAR2_SIZE].iter()) {
+                assert_eq!(base % size, 0, "BAR base {base:#x} unaligned to {size:#x}");
+                assert!(base >= prev_end, "window overlap at {base:#x}");
+                prev_end = base + size;
+            }
+        }
     }
 }

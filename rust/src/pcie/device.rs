@@ -61,12 +61,23 @@ pub struct PcieFpgaDevice {
     /// which is exactly the debugging scenario the framework exists for.
     pub mmio_timeout: Duration,
     pub stats: PseudoDeviceStats,
-    /// Requester id used in TLPs (bus 0, dev 1, fn 0 by default).
+    /// Requester id used in TLPs — derived from the function's BDF at
+    /// construction (multi-device topologies give every endpoint a
+    /// distinct id, so completions route back unambiguously).
     requester_id: u16,
 }
 
 impl PcieFpgaDevice {
     pub fn new(config: ConfigSpace, link: Endpoint, mode: LinkMode) -> Self {
+        let bdf = config.bdf();
+        // An unenumerated function (default 00:00.0) keeps the seed's
+        // conventional 00:01.0 requester so TLP traffic never claims
+        // the host bridge's id.
+        let requester_id = if bdf == crate::pcie::Bdf::default() {
+            crate::pcie::Bdf::new(0, 1, 0).requester_id()
+        } else {
+            bdf.requester_id()
+        };
         Self {
             config,
             link,
@@ -75,8 +86,13 @@ impl PcieFpgaDevice {
             max_payload_dw: 64, // 256B, a common MPS
             mmio_timeout: Duration::from_secs(10),
             stats: PseudoDeviceStats::default(),
-            requester_id: 0x0008,
+            requester_id,
         }
+    }
+
+    /// This function's bus address (set by the enumerating VMM).
+    pub fn bdf(&self) -> crate::pcie::Bdf {
+        self.config.bdf()
     }
 
     pub fn mode(&self) -> LinkMode {

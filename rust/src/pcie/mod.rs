@@ -32,7 +32,7 @@ pub mod device;
 pub mod tlp;
 
 pub use bar::{BarDef, BarKind, BarSet};
-pub use config_space::ConfigSpace;
+pub use config_space::{Bdf, BusAllocator, ConfigSpace};
 pub use device::{DmaTarget, IrqSink, PcieFpgaDevice, PseudoDeviceStats};
 pub use tlp::Tlp;
 
@@ -53,7 +53,38 @@ pub mod board {
     /// Canonical guest-physical BAR placements (what the guest "BIOS"
     /// assigns at enumeration; the TLP-mode bridge needs them to
     /// reverse-map bus addresses — DESIGN.md documents this static
-    /// assignment in lieu of forwarding CfgWr TLPs).
+    /// assignment in lieu of forwarding CfgWr TLPs). These are the
+    /// **device 0** placements; multi-device topologies stride per
+    /// device — see [`bar0_gpa`] / [`bar2_gpa`].
     pub const BAR0_GPA: u64 = 0xF000_0000;
     pub const BAR2_GPA: u64 = 0xF800_0000;
+    /// Per-device stride of the static BAR placement: each enumerated
+    /// endpoint's windows sit `BAR_GPA_STRIDE` above the previous
+    /// device's (1 MiB covers BAR0's 64 KiB and BAR2's full 1 MiB).
+    pub const BAR_GPA_STRIDE: u64 = 0x10_0000;
+    /// Maximum devices on the topology: bound by the 5-bit PCI device
+    /// number (31 endpoints on bus 0 — device 0 is the host bridge),
+    /// which is tighter than the 128 windows the static BAR layout
+    /// could carve below `BAR2_GPA`.
+    pub const MAX_DEVICES: usize = {
+        let by_windows = ((BAR2_GPA - BAR0_GPA) / BAR_GPA_STRIDE) as usize;
+        let by_bus = 31;
+        if by_bus < by_windows {
+            by_bus
+        } else {
+            by_windows
+        }
+    };
+
+    /// BAR0 guest-physical base of device `index` on the shared bus.
+    pub fn bar0_gpa(index: usize) -> u64 {
+        assert!(index < MAX_DEVICES, "device index {index} out of range");
+        BAR0_GPA + index as u64 * BAR_GPA_STRIDE
+    }
+
+    /// BAR2 guest-physical base of device `index`.
+    pub fn bar2_gpa(index: usize) -> u64 {
+        assert!(index < MAX_DEVICES, "device index {index} out of range");
+        BAR2_GPA + index as u64 * BAR_GPA_STRIDE
+    }
 }

@@ -19,7 +19,7 @@ use crate::hdl::regfile::{regs as rf_regs, ID_VALUE};
 use crate::pcie::board;
 use crate::pcie::config_space::{cmd, regs as cfg_regs};
 use crate::vm::mem::DmaBuf;
-use crate::vm::vmm::{GuestEnv, BAR0_GPA, BAR2_GPA};
+use crate::vm::vmm::GuestEnv;
 use crate::{Error, Result};
 
 /// BAR0 offsets of the two IP blocks.
@@ -88,6 +88,12 @@ pub struct SortDriver {
     /// Extended while the device demonstrably makes progress — see
     /// `hang_progress_cycles`.
     pub timeout: Duration,
+    /// Index of the enumerated device this driver instance is bound
+    /// to (its BDF is `00:0{device+1}.0`; see
+    /// [`crate::pcie::BusAllocator`]). Every MMIO/IRQ/config access
+    /// must run through a [`GuestEnv`] bound to the same index —
+    /// [`SortDriver::probe`] enforces the match.
+    pub device: usize,
     /// Hang detection is **cycle-based**, not wall-clock-based: while
     /// waiting for completion the driver samples the device's
     /// free-running cycle counter; if it advances by more than this
@@ -107,7 +113,15 @@ pub struct SortDriver {
 const HANG_STALL_SAMPLES: u32 = 4;
 
 impl SortDriver {
+    /// Driver bound to device 0 (the single-device default).
     pub fn new(n: usize) -> Self {
+        Self::for_device(n, 0)
+    }
+
+    /// Driver bound to device index `device` of a multi-device
+    /// topology (per-BDF binding: the probe sizes and assigns *that*
+    /// function's BARs at its own guest-physical windows).
+    pub fn for_device(n: usize, device: usize) -> Self {
         Self {
             state: DriverState::Unbound,
             mode: CompletionMode::Irq,
@@ -117,6 +131,7 @@ impl SortDriver {
             n,
             stats: XferStats::default(),
             timeout: Duration::from_secs(10),
+            device,
             hang_progress_cycles: 64,
         }
     }
@@ -130,9 +145,15 @@ impl SortDriver {
     /// allocate DMA buffers. Equivalent to the kernel module's
     /// `probe()` + `open()`.
     pub fn probe(&mut self, env: &mut GuestEnv) -> Result<()> {
+        if env.device != self.device {
+            return Err(Error::vm(format!(
+                "probe: driver bound to device {} given an env for device {}",
+                self.device, env.device
+            )));
+        }
         env.state("probe:config")?;
         // --- config space: identify ---
-        let id = env.vmm.dev.config.read32(cfg_regs::VENDOR_ID)?;
+        let id = env.config_read32(cfg_regs::VENDOR_ID)?;
         let (vendor, device) = ((id & 0xFFFF) as u16, (id >> 16) as u16);
         if vendor != board::VENDOR_ID || device != board::DEVICE_ID {
             self.state = DriverState::Failed;
@@ -140,35 +161,32 @@ impl SortDriver {
                 "probe: unexpected id {vendor:04x}:{device:04x}"
             )));
         }
-        // --- BAR sizing protocol + assignment ---
-        for (slot_off, gpa) in [(0u16, BAR0_GPA), (8u16, BAR2_GPA)] {
+        // --- BAR sizing protocol + assignment (per-device windows:
+        //     function k's BARs land at bar0_gpa(k)/bar2_gpa(k)) ---
+        let bar0_gpa = board::bar0_gpa(self.device);
+        let bar2_gpa = board::bar2_gpa(self.device);
+        for (slot_off, gpa) in [(0u16, bar0_gpa), (8u16, bar2_gpa)] {
             let off = cfg_regs::BAR0 + slot_off;
-            env.vmm.dev.config.write32(off, u32::MAX)?;
-            let mask = env.vmm.dev.config.read32(off)?;
+            env.config_write32(off, u32::MAX)?;
+            let mask = env.config_read32(off)?;
             let size = !(mask as u64 & !0xF) + 1;
             if size == 0 {
                 self.state = DriverState::Failed;
                 return Err(Error::vm(format!("probe: BAR at {off:#x} reports size 0")));
             }
-            env.vmm.dev.config.write32(off, gpa as u32)?;
+            env.config_write32(off, gpa as u32)?;
             if slot_off == 8 {
                 // 64-bit BAR: high half.
-                env.vmm.dev.config.write32(off + 4, (gpa >> 32) as u32)?;
+                env.config_write32(off + 4, (gpa >> 32) as u32)?;
             }
         }
         // --- command register: MEM + BME ---
-        env.vmm
-            .dev
-            .config
-            .write32(cfg_regs::COMMAND, (cmd::MEM_ENABLE | cmd::BUS_MASTER) as u32)?;
+        env.config_write32(cfg_regs::COMMAND, (cmd::MEM_ENABLE | cmd::BUS_MASTER) as u32)?;
         // --- MSI: address/data + enable 4 vectors (MME=2) ---
-        env.vmm.dev.config.write32(cfg_regs::MSI_CAP + 4, 0xFEE0_0000)?;
-        env.vmm.dev.config.write32(cfg_regs::MSI_CAP + 8, 0)?;
-        env.vmm.dev.config.write32(cfg_regs::MSI_CAP + 12, 0x0040)?;
-        env.vmm
-            .dev
-            .config
-            .write32(cfg_regs::MSI_CAP, (1 | (2 << 4)) << 16)?;
+        env.config_write32(cfg_regs::MSI_CAP + 4, 0xFEE0_0000)?;
+        env.config_write32(cfg_regs::MSI_CAP + 8, 0)?;
+        env.config_write32(cfg_regs::MSI_CAP + 12, 0x0040)?;
+        env.config_write32(cfg_regs::MSI_CAP, (1 | (2 << 4)) << 16)?;
 
         env.state("probe:ident")?;
         // --- platform sanity: ID + scratch ---
@@ -222,10 +240,23 @@ impl SortDriver {
 
     /// Offload one record: stage input, program S2MM then MM2S, wait
     /// for completion, read back the sorted result.
+    ///
+    /// [`SortDriver::submit_record`] + [`SortDriver::finish_record`]
+    /// expose the same path split in two, so a sharding runner can
+    /// keep one record in flight on *each* device before collecting
+    /// any result (the overlap that makes N devices faster than one).
     pub fn sort_record(&mut self, env: &mut GuestEnv, data: &[i32]) -> Result<Vec<i32>> {
+        self.submit_record(env, data)?;
+        self.finish_record(env)
+    }
+
+    /// Stage one record and program both DMA channels, without
+    /// waiting: the device starts fetching/sorting immediately; call
+    /// [`SortDriver::finish_record`] to collect the result.
+    pub fn submit_record(&mut self, env: &mut GuestEnv, data: &[i32]) -> Result<()> {
         if self.state != DriverState::Ready && self.state != DriverState::Complete {
             return Err(Error::vm(format!(
-                "sort_record in state {:?}",
+                "submit_record in state {:?}",
                 self.state
             )));
         }
@@ -259,6 +290,19 @@ impl SortDriver {
         env.write32(0, DMA_BASE + dma_regs::MM2S_SA as u64, src.addr as u32)?;
         env.write32(0, DMA_BASE + dma_regs::MM2S_SA_MSB as u64, (src.addr >> 32) as u32)?;
         env.write32(0, DMA_BASE + dma_regs::MM2S_LENGTH as u64, len)?;
+        Ok(())
+    }
+
+    /// Wait for the completion interrupt of a submitted record and
+    /// read back the sorted result.
+    pub fn finish_record(&mut self, env: &mut GuestEnv) -> Result<Vec<i32>> {
+        if self.state != DriverState::Submitted {
+            return Err(Error::vm(format!(
+                "finish_record in state {:?} (no record in flight)",
+                self.state
+            )));
+        }
+        let dst = self.dst.ok_or_else(|| Error::vm("no dst buffer"))?;
 
         env.state("xfer:wait")?;
         self.wait_complete(env)?;

@@ -111,9 +111,9 @@ impl MonitorHook {
             Cmd::DevInfo { reply } => {
                 let s = format!(
                     "stats={:?} link_sent={} link_bytes={}",
-                    vmm.dev.stats,
-                    vmm.dev.link().msgs_sent(),
-                    vmm.dev.link().bytes_sent(),
+                    vmm.dev().stats,
+                    vmm.dev().link().msgs_sent(),
+                    vmm.dev().link().bytes_sent(),
                 );
                 let _ = reply.send(s);
             }

@@ -1,11 +1,17 @@
 //! The virtual machine monitor: guest memory + the PCIe FPGA pseudo
-//! device + interrupt delivery + the debug-hook plumbing.
+//! device(s) + interrupt delivery + the debug-hook plumbing.
 //!
-//! Mirrors the QEMU structure the paper modifies: the pseudo device's
+//! Mirrors the QEMU structure the paper modifies: each pseudo device's
 //! communication channels are "registered with the VMM's main loop"
 //! ([`Vmm::poll`]) so HDL-side DMA and MSI requests are serviced
 //! whenever the VM is otherwise idle, and guest MMIO goes through the
 //! device's callback path ([`Vmm::mmio_read32`] / [`Vmm::mmio_write32`]).
+//!
+//! Multi-device topologies: [`Vmm::new_multi`] enumerates N endpoints
+//! on one simulated bus — each gets a unique BDF from a
+//! [`crate::pcie::BusAllocator`], its own link endpoint, and its own
+//! pending-interrupt queue. Guest software addresses a specific device
+//! through [`GuestEnv::for_device`].
 
 use std::collections::VecDeque;
 
@@ -13,7 +19,7 @@ use crate::link::{Endpoint, LinkMode};
 use crate::pcie::bar::{BarDef, BarKind, BarSet};
 use crate::pcie::board;
 use crate::pcie::config_space::ConfigSpace;
-use crate::pcie::{IrqSink, PcieFpgaDevice};
+use crate::pcie::{BusAllocator, IrqSink, PcieFpgaDevice};
 use crate::vm::mem::GuestMem;
 use crate::{Error, Result};
 
@@ -38,49 +44,110 @@ pub use crate::pcie::board::{BAR0_GPA, BAR2_GPA};
 /// The VMM.
 pub struct Vmm {
     pub mem: GuestMem,
-    pub dev: PcieFpgaDevice,
-    pub irqs: IrqQueue,
+    /// The enumerated pseudo devices, indexed by device id (the same
+    /// index the HDL side's lanes and the link framing use).
+    pub devs: Vec<PcieFpgaDevice>,
+    /// Per-device pending-interrupt queues (each function's MSI
+    /// vectors are a private namespace, as after OS vector allocation).
+    pub irqs: Vec<IrqQueue>,
     /// Wall-clock spent inside blocking MMIO reads (Table III input).
     pub mmio_wait: std::time::Duration,
     pub mmio_ops: u64,
 }
 
 impl Vmm {
-    /// Build a VMM around an already-connected link endpoint.
-    /// `ram_size` is the guest RAM (all DMA-able).
+    /// Build a single-device VMM around an already-connected link
+    /// endpoint. `ram_size` is the guest RAM (all DMA-able).
     pub fn new(link: Endpoint, mode: LinkMode, ram_size: usize) -> Self {
-        let config = ConfigSpace::new(
-            board::VENDOR_ID,
-            board::DEVICE_ID,
-            board::SUBSYS_ID,
-            0x058000,
-            BarSet::new(vec![
-                BarDef::new(0, board::BAR0_SIZE, BarKind::Mem32),
-                BarDef::new(2, board::BAR2_SIZE, BarKind::Mem64),
-            ]),
-            board::MSI_VECTORS,
-        );
+        Self::new_multi(vec![link], mode, ram_size)
+    }
+
+    /// Build a VMM enumerating one pseudo device per link endpoint —
+    /// the N-device topology. Endpoint k becomes device index k with a
+    /// unique BDF (`00:01.0`, `00:02.0`, ...) on the simulated bus.
+    pub fn new_multi(mut links: Vec<Endpoint>, mode: LinkMode, ram_size: usize) -> Self {
+        assert!(!links.is_empty(), "a VMM needs at least one device");
+        assert!(links.len() <= board::MAX_DEVICES);
+        if links.len() > 1 {
+            // One doorbell across all VM-side endpoints: a guest
+            // blocked waiting on device k still wakes when any other
+            // device needs service (DMA reads must be answered
+            // promptly for the devices to overlap), then services
+            // every link via [`Vmm::poll`].
+            let doorbell = crate::link::Doorbell::new();
+            for l in links.iter_mut() {
+                l.share_doorbell(&doorbell);
+            }
+        }
+        let mut alloc = BusAllocator::new(0, board::BAR0_GPA);
+        let mut devs = Vec::with_capacity(links.len());
+        let mut irqs = Vec::with_capacity(links.len());
+        for link in links {
+            // The allocator hands out BDFs; the BAR *windows* follow
+            // the static per-device layout (`board::bar0_gpa(k)` /
+            // `bar2_gpa(k)`) that the TLP-mode bridge reverse-maps —
+            // the repo's documented stand-in for forwarding CfgWr
+            // TLPs (DESIGN.md §2). The guest driver writes those
+            // bases during its probe, exactly like the BIOS+kernel
+            // would.
+            let (bdf, _bases) = alloc.alloc(&[]);
+            let config = ConfigSpace::new(
+                board::VENDOR_ID,
+                board::DEVICE_ID,
+                board::SUBSYS_ID,
+                0x058000,
+                BarSet::new(vec![
+                    BarDef::new(0, board::BAR0_SIZE, BarKind::Mem32),
+                    BarDef::new(2, board::BAR2_SIZE, BarKind::Mem64),
+                ]),
+                board::MSI_VECTORS,
+            )
+            .with_bdf(bdf);
+            devs.push(PcieFpgaDevice::new(config, link, mode));
+            irqs.push(IrqQueue::default());
+        }
         Self {
             mem: GuestMem::new(ram_size),
-            dev: PcieFpgaDevice::new(config, link, mode),
-            irqs: IrqQueue::default(),
+            devs,
+            irqs,
             mmio_wait: std::time::Duration::ZERO,
             mmio_ops: 0,
         }
     }
 
-    /// One main-loop iteration: service HDL-side traffic. Returns the
-    /// number of messages handled.
-    pub fn poll(&mut self) -> Result<usize> {
-        self.dev.poll_service(&mut self.mem, &mut self.irqs)
+    /// Number of enumerated devices.
+    pub fn devices(&self) -> usize {
+        self.devs.len()
     }
 
-    /// Blocking guest MMIO read (32-bit) at `offset` within `bar`.
-    pub fn mmio_read32(&mut self, bar: u8, offset: u64) -> Result<u32> {
+    /// Device 0 (the single-device convenience view).
+    pub fn dev(&self) -> &PcieFpgaDevice {
+        &self.devs[0]
+    }
+    pub fn dev_mut(&mut self) -> &mut PcieFpgaDevice {
+        &mut self.devs[0]
+    }
+
+    /// One main-loop iteration: service HDL-side traffic on every
+    /// device. Returns the number of messages handled.
+    pub fn poll(&mut self) -> Result<usize> {
+        let mut n = 0;
+        for (dev, irq) in self.devs.iter_mut().zip(self.irqs.iter_mut()) {
+            n += dev.poll_service(&mut self.mem, irq)?;
+        }
+        Ok(n)
+    }
+
+    /// Blocking guest MMIO read (32-bit) on device `idx`.
+    pub fn mmio_read32_at(&mut self, idx: usize, bar: u8, offset: u64) -> Result<u32> {
         let t0 = std::time::Instant::now();
-        let data = self
-            .dev
-            .mmio_read(bar, offset, 4, &mut self.mem, &mut self.irqs)?;
+        let data = self.devs[idx].mmio_read(
+            bar,
+            offset,
+            4,
+            &mut self.mem,
+            &mut self.irqs[idx],
+        )?;
         self.mmio_wait += t0.elapsed();
         self.mmio_ops += 1;
         if data.len() < 4 {
@@ -89,35 +156,70 @@ impl Vmm {
         Ok(u32::from_le_bytes(data[..4].try_into().unwrap()))
     }
 
-    /// Posted guest MMIO write (32-bit).
-    pub fn mmio_write32(&mut self, bar: u8, offset: u64, val: u32) -> Result<()> {
+    /// Posted guest MMIO write (32-bit) on device `idx`.
+    pub fn mmio_write32_at(&mut self, idx: usize, bar: u8, offset: u64, val: u32) -> Result<()> {
         self.mmio_ops += 1;
-        self.dev.mmio_write(bar, offset, &val.to_le_bytes())
+        self.devs[idx].mmio_write(bar, offset, &val.to_le_bytes())
     }
 
-    /// Take the next pending interrupt, servicing the link first so
-    /// freshly arrived MSIs are visible.
-    pub fn take_irq(&mut self) -> Result<Option<u16>> {
+    /// Blocking guest MMIO read (32-bit) on device 0.
+    pub fn mmio_read32(&mut self, bar: u8, offset: u64) -> Result<u32> {
+        self.mmio_read32_at(0, bar, offset)
+    }
+
+    /// Posted guest MMIO write (32-bit) on device 0.
+    pub fn mmio_write32(&mut self, bar: u8, offset: u64, val: u32) -> Result<()> {
+        self.mmio_write32_at(0, bar, offset, val)
+    }
+
+    /// Take the next pending interrupt of device `idx`, servicing all
+    /// links first so freshly arrived MSIs are visible.
+    pub fn take_irq_on(&mut self, idx: usize) -> Result<Option<u16>> {
         self.poll()?;
-        Ok(self.irqs.pending.pop_front())
+        Ok(self.irqs[idx].pending.pop_front())
     }
 
-    /// Block until an interrupt arrives or `timeout` expires (the
-    /// guest's `wait_event_interruptible` analogue). Sleeps on the
-    /// link doorbell, so an MSI enqueued by the HDL side wakes the
-    /// guest immediately instead of after a poll nap.
-    pub fn wait_irq(&mut self, timeout: std::time::Duration) -> Result<Option<u16>> {
+    /// Take the next pending interrupt of device 0.
+    pub fn take_irq(&mut self) -> Result<Option<u16>> {
+        self.take_irq_on(0)
+    }
+
+    /// Block until an interrupt of device `idx` arrives or `timeout`
+    /// expires (the guest's `wait_event_interruptible` analogue).
+    /// Sleeps on that device's link doorbell, so an MSI enqueued by
+    /// the HDL side wakes the guest immediately instead of after a
+    /// poll nap.
+    pub fn wait_irq_on(
+        &mut self,
+        idx: usize,
+        timeout: std::time::Duration,
+    ) -> Result<Option<u16>> {
         let deadline = std::time::Instant::now() + timeout;
+        let multi = self.devs.len() > 1;
         loop {
-            if let Some(v) = self.take_irq()? {
+            if let Some(v) = self.take_irq_on(idx)? {
                 return Ok(Some(v));
             }
             let now = std::time::Instant::now();
             if now >= deadline {
                 return Ok(None);
             }
-            self.dev.link_mut().wait_any(deadline - now)?;
+            if multi {
+                // Shared-doorbell topology: regain control on *any*
+                // device's ring so the next `take_irq_on` iteration
+                // (→ `Vmm::poll`) services every link — a DMA read
+                // from a neighbour device must never stall behind
+                // this device's IRQ wait.
+                self.devs[idx].link_mut().wait_any_shared(deadline - now)?;
+            } else {
+                self.devs[idx].link_mut().wait_any(deadline - now)?;
+            }
         }
+    }
+
+    /// Block for an interrupt of device 0.
+    pub fn wait_irq(&mut self, timeout: std::time::Duration) -> Result<Option<u16>> {
+        self.wait_irq_on(0, timeout)
     }
 }
 
@@ -157,17 +259,47 @@ pub trait DebugHook: Send {
 pub struct NoopHook;
 impl DebugHook for NoopHook {}
 
-/// Guest execution environment: the VMM plus the active debug hook.
-/// All guest software (driver, apps) performs its accesses through
-/// this, which is what gives the monitor full visibility.
+/// Guest execution environment: the VMM plus the active debug hook,
+/// bound to one device of the topology. All guest software (driver,
+/// apps) performs its accesses through this, which is what gives the
+/// monitor full visibility.
 pub struct GuestEnv<'a> {
     pub vmm: &'a mut Vmm,
     pub hook: &'a mut dyn DebugHook,
+    /// Which enumerated device this environment addresses (its MMIO,
+    /// config space and interrupt queue). A driver bound per-BDF gets
+    /// an env for its own device index.
+    pub device: usize,
 }
 
 impl<'a> GuestEnv<'a> {
+    /// Environment addressing device 0 (single-device convenience).
     pub fn new(vmm: &'a mut Vmm, hook: &'a mut dyn DebugHook) -> Self {
-        Self { vmm, hook }
+        Self::for_device(vmm, hook, 0)
+    }
+
+    /// Environment addressing device `device` of a multi-device VMM.
+    pub fn for_device(vmm: &'a mut Vmm, hook: &'a mut dyn DebugHook, device: usize) -> Self {
+        assert!(device < vmm.devices(), "device {device} not enumerated");
+        Self { vmm, hook, device }
+    }
+
+    /// The bound device's pseudo-device state.
+    pub fn dev(&self) -> &crate::pcie::PcieFpgaDevice {
+        &self.vmm.devs[self.device]
+    }
+    pub fn dev_mut(&mut self) -> &mut crate::pcie::PcieFpgaDevice {
+        &mut self.vmm.devs[self.device]
+    }
+
+    /// Config-space read on the bound device (probe path).
+    pub fn config_read32(&mut self, off: u16) -> Result<u32> {
+        self.vmm.devs[self.device].config.read32(off)
+    }
+
+    /// Config-space write on the bound device (probe path).
+    pub fn config_write32(&mut self, off: u16, val: u32) -> Result<()> {
+        self.vmm.devs[self.device].config.write32(off, val)
     }
 
     fn apply(&mut self, patches: Vec<MemPatch>) -> Result<()> {
@@ -177,20 +309,20 @@ impl<'a> GuestEnv<'a> {
         Ok(())
     }
 
-    /// Hooked 32-bit MMIO read.
+    /// Hooked 32-bit MMIO read (on the bound device).
     pub fn read32(&mut self, bar: u8, offset: u64) -> Result<u32> {
         let ev = DebugEvent::Mmio { bar, offset, is_write: false, value: None };
         let patches = self.hook.on_event(&ev, self.vmm);
         self.apply(patches)?;
-        self.vmm.mmio_read32(bar, offset)
+        self.vmm.mmio_read32_at(self.device, bar, offset)
     }
 
-    /// Hooked 32-bit MMIO write.
+    /// Hooked 32-bit MMIO write (on the bound device).
     pub fn write32(&mut self, bar: u8, offset: u64, val: u32) -> Result<()> {
         let ev = DebugEvent::Mmio { bar, offset, is_write: true, value: Some(val) };
         let patches = self.hook.on_event(&ev, self.vmm);
         self.apply(patches)?;
-        self.vmm.mmio_write32(bar, offset, val)
+        self.vmm.mmio_write32_at(self.device, bar, offset, val)
     }
 
     /// Hooked driver state transition.
@@ -200,9 +332,9 @@ impl<'a> GuestEnv<'a> {
         self.apply(patches)
     }
 
-    /// Hooked interrupt wait.
+    /// Hooked interrupt wait (on the bound device's queue).
     pub fn wait_irq(&mut self, timeout: std::time::Duration) -> Result<Option<u16>> {
-        let got = self.vmm.wait_irq(timeout)?;
+        let got = self.vmm.wait_irq_on(self.device, timeout)?;
         if let Some(vector) = got {
             let ev = DebugEvent::Irq { vector };
             let patches = self.hook.on_event(&ev, self.vmm);
@@ -227,11 +359,11 @@ mod tests {
     fn poll_services_dma_and_irq() {
         use crate::pcie::config_space::{cmd, regs};
         let (mut vmm, mut hdl) = vmm_with_peer();
-        vmm.dev
+        vmm.dev_mut()
             .config
             .write32(regs::COMMAND, (cmd::MEM_ENABLE | cmd::BUS_MASTER) as u32)
             .unwrap();
-        vmm.dev.config.write32(regs::MSI_CAP, 1 << 16).unwrap();
+        vmm.dev_mut().config.write32(regs::MSI_CAP, 1 << 16).unwrap();
         vmm.mem.write(0x100, &[5, 6, 7, 8]).unwrap();
         hdl.send(&Msg::DmaRead { tag: 1, addr: 0x100, len: 4 }).unwrap();
         hdl.send(&Msg::Interrupt { vector: 0 }).unwrap();
@@ -272,5 +404,78 @@ mod tests {
         let (mut vmm, _hdl) = vmm_with_peer();
         let got = vmm.wait_irq(std::time::Duration::from_millis(20)).unwrap();
         assert_eq!(got, None);
+    }
+
+    #[test]
+    fn multi_device_enumeration_routes_per_device() {
+        use crate::pcie::config_space::{cmd, regs};
+        let (vm0, mut hdl0) = Endpoint::inproc_pair_on(0);
+        let (vm1, mut hdl1) = Endpoint::inproc_pair_on(1);
+        let mut vmm = Vmm::new_multi(vec![vm0, vm1], LinkMode::Mmio, 64 * 1024);
+        assert_eq!(vmm.devices(), 2);
+        // Unique BDFs, in enumeration order.
+        assert_eq!(vmm.devs[0].bdf().to_string(), "00:01.0");
+        assert_eq!(vmm.devs[1].bdf().to_string(), "00:02.0");
+        // MMIO on device 1 reaches only device 1's link.
+        for d in 0..2 {
+            vmm.devs[d]
+                .config
+                .write32(regs::COMMAND, (cmd::MEM_ENABLE | cmd::BUS_MASTER) as u32)
+                .unwrap();
+        }
+        vmm.mmio_write32_at(1, 0, 0x08, 7).unwrap();
+        assert!(hdl0.poll().unwrap().is_empty());
+        assert_eq!(hdl1.poll().unwrap().len(), 1);
+        // Interrupt queues are per device.
+        vmm.devs[0].config.write32(regs::MSI_CAP, 1 << 16).unwrap();
+        vmm.devs[1].config.write32(regs::MSI_CAP, 1 << 16).unwrap();
+        hdl1.send(&Msg::Interrupt { vector: 0 }).unwrap();
+        assert_eq!(vmm.take_irq_on(0).unwrap(), None);
+        assert_eq!(vmm.take_irq_on(1).unwrap(), Some(0));
+    }
+
+    #[test]
+    fn irq_wait_on_one_device_services_the_others() {
+        // Regression: a guest blocked in wait_irq_on(device 0) must
+        // still answer device 1's DMA reads promptly (shared VM-side
+        // doorbell + wait_any_shared) instead of stalling them until
+        // device 0's own traffic or the wait deadline.
+        use crate::pcie::config_space::{cmd, regs};
+        use std::time::{Duration, Instant};
+        let (vm0, _hdl0) = Endpoint::inproc_pair_on(0);
+        let (vm1, mut hdl1) = Endpoint::inproc_pair_on(1);
+        let mut vmm = Vmm::new_multi(vec![vm0, vm1], LinkMode::Mmio, 64 * 1024);
+        for d in 0..2 {
+            vmm.devs[d]
+                .config
+                .write32(regs::COMMAND, (cmd::MEM_ENABLE | cmd::BUS_MASTER) as u32)
+                .unwrap();
+        }
+        vmm.mem.write(0x40, &[9, 9, 9, 9]).unwrap();
+        let sender = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(20));
+            hdl1.send(&Msg::DmaRead { tag: 5, addr: 0x40, len: 4 }).unwrap();
+            let t0 = Instant::now();
+            loop {
+                let got = hdl1.poll().unwrap();
+                if got.iter().any(|m| matches!(m, Msg::DmaReadResp { tag: 5, .. })) {
+                    return t0.elapsed();
+                }
+                assert!(
+                    t0.elapsed() < Duration::from_secs(5),
+                    "DMA read never answered while VM waited on device 0"
+                );
+                std::thread::sleep(Duration::from_millis(1));
+            }
+        });
+        // No IRQ ever arrives on device 0; the wait must time out —
+        // but device 1 must have been serviced long before that.
+        let got = vmm.wait_irq_on(0, Duration::from_millis(400)).unwrap();
+        assert_eq!(got, None);
+        let latency = sender.join().unwrap();
+        assert!(
+            latency < Duration::from_millis(300),
+            "cross-device DMA stalled {latency:?} behind an IRQ wait"
+        );
     }
 }

@@ -90,7 +90,7 @@ fn hdl_killed_mid_wait_yields_timeout_not_crash() {
     cfg.vcd = None;
     let mut hdl = HdlThread::spawn(&dir, cfg.clone()).unwrap();
     let mut cosim = CoSim::launch(cfg).unwrap();
-    cosim.vmm.dev.mmio_timeout = Duration::from_millis(800);
+    cosim.vmm.dev_mut().mmio_timeout = Duration::from_millis(800);
     let mut hook = NoopHook;
     let mut env = GuestEnv::new(&mut cosim.vmm, &mut hook);
     let mut drv = SortDriver::new(1024);
