@@ -64,7 +64,8 @@ fn main() {
             let recs = rep.per_device_records[k] as u64;
             if recs > 0 {
                 assert!(
-                    c > 1256 && c < 100_000 * recs,
+                    c > scenario::DEVICE_CYCLES_MIN
+                        && c < scenario::DEVICE_CYCLES_MAX_PER_RECORD * recs,
                     "dev{k} cycle count {c} outside envelope for {recs} records"
                 );
             }

@@ -67,8 +67,16 @@ pub struct Config {
     /// (`--devices N`; 1 = the paper's single-board setup).
     pub devices: usize,
     /// Shard policy splitting a record batch across devices
-    /// (`--shard round-robin|size`).
+    /// (`--shard round-robin|size|work-steal`).
     pub shard: ShardPolicy,
+    /// Records kept in flight per device (`--queue-depth D`): 1 = the
+    /// direct-register driver, > 1 = the SG descriptor-ring driver
+    /// with a D-slot ring per device.
+    pub queue_depth: usize,
+    /// Per-device sorter-latency overrides (`--device-latency
+    /// k=cycles[,k=cycles...]`, repeatable): heterogeneous topologies
+    /// where device k's sorter takes a different number of cycles.
+    pub device_latency: Vec<(usize, u64)>,
 }
 
 impl Default for Config {
@@ -91,6 +99,8 @@ impl Default for Config {
             iters: 100,
             devices: 1,
             shard: ShardPolicy::RoundRobin,
+            queue_depth: 1,
+            device_latency: Vec::new(),
         }
     }
 }
@@ -134,12 +144,36 @@ impl Config {
             "iters" => self.iters = value.parse().map_err(|_| bad("iters"))?,
             "devices" => {
                 let n: usize = value.parse().map_err(|_| bad("devices"))?;
-                if n < 1 || n > crate::pcie::board::MAX_DEVICES {
+                if !(1..=crate::pcie::board::MAX_DEVICES).contains(&n) {
                     return Err(bad("devices"));
                 }
                 self.devices = n;
             }
             "shard" => self.shard = value.parse()?,
+            "queue-depth" => {
+                let d: usize = value.parse().map_err(|_| bad("queue-depth"))?;
+                if !(1..=MAX_QUEUE_DEPTH).contains(&d) {
+                    return Err(bad("queue-depth"));
+                }
+                self.queue_depth = d;
+            }
+            "device-latency" => {
+                // `k=cycles`, comma-separable and repeatable; later
+                // entries for the same device win.
+                for part in value.split(',') {
+                    let (k, cyc) = part
+                        .split_once('=')
+                        .ok_or_else(|| bad("device-latency (want k=cycles)"))?;
+                    let k: usize =
+                        k.trim().parse().map_err(|_| bad("device-latency index"))?;
+                    let cyc: u64 = cyc
+                        .trim()
+                        .parse()
+                        .map_err(|_| bad("device-latency cycles"))?;
+                    self.device_latency.retain(|&(i, _)| i != k);
+                    self.device_latency.push((k, cyc));
+                }
+            }
             other => return Err(Error::config(format!("unknown option {other:?}"))),
         }
         Ok(())
@@ -189,6 +223,28 @@ impl Config {
             "uds" => TransportKind::Uds(self.socket_dir.clone()),
             other => return Err(Error::config(format!("transport {other:?}"))),
         };
+        // Validate latency overrides here, where n is known: the
+        // sorter rejects sub-structural latencies at elaboration, and
+        // a config error beats an HDL-thread panic.
+        let lb = crate::hdl::sorter::structural_latency_lb(
+            self.n,
+            crate::hdl::axi::WORDS_PER_BEAT,
+        );
+        for &(k, cyc) in &self.device_latency {
+            if k >= self.devices {
+                return Err(Error::config(format!(
+                    "device-latency: device {k} not on a {}-device topology",
+                    self.devices
+                )));
+            }
+            if cyc < lb {
+                return Err(Error::config(format!(
+                    "device-latency: {cyc} cycles below the structural lower \
+                     bound {lb} for n={}",
+                    self.n
+                )));
+            }
+        }
         Ok(CoSimCfg {
             mode: self.mode,
             transport,
@@ -196,13 +252,22 @@ impl Config {
                 sorter: SorterCfg {
                     n: self.n,
                     latency: self.sorter_latency,
-                    pipeline_records: 8,
+                    // The accelerator pipeline must be able to hold at
+                    // least the whole descriptor ring: a ring deeper
+                    // than the sorter's record capacity lets MM2S
+                    // stream records the sorter cannot absorb, parking
+                    // data beats ahead of the next S2MM descriptor
+                    // fetch response on the shared read channel —
+                    // head-of-line deadlock. Deeper rings model a
+                    // deeper pipeline.
+                    pipeline_records: self.queue_depth.max(8),
                 },
                 link_mode: self.mode,
                 poll_interval: self.poll_interval,
                 ..PlatformCfg::default()
             },
             devices: self.devices,
+            device_latency: self.device_latency.clone(),
             ram_size: self.ram_size,
             vcd: self.vcd.clone(),
             poll_interval: self.poll_interval,
@@ -210,6 +275,11 @@ impl Config {
         })
     }
 }
+
+/// Ring-depth ceiling: keeps the per-device ring + buffer footprint
+/// (2 × D records + 2 × D descriptors) well inside the default guest
+/// RAM even at the maximum device count.
+pub const MAX_QUEUE_DEPTH: usize = 64;
 
 #[cfg(test)]
 mod tests {
@@ -277,6 +347,51 @@ mod tests {
         assert!(c.set("devices", "0").is_err());
         assert!(c.set("devices", "100000").is_err());
         assert!(c.set("shard", "hash").is_err());
+    }
+
+    #[test]
+    fn queue_depth_and_work_steal_knobs() {
+        let mut c = Config::default();
+        assert_eq!(c.queue_depth, 1, "direct mode must be the default");
+        c.set("queue-depth", "8").unwrap();
+        c.set("shard", "work-steal").unwrap();
+        assert_eq!(c.queue_depth, 8);
+        assert_eq!(c.shard, ShardPolicy::WorkSteal);
+        assert!(c.set("queue-depth", "0").is_err());
+        assert!(c.set("queue-depth", "1000").is_err());
+        assert!(c.set("queue-depth", "x").is_err());
+        // The sorter pipeline is sized to hold the whole ring (the
+        // head-of-line-deadlock invariant — see cosim()).
+        c.set("queue-depth", "16").unwrap();
+        assert_eq!(c.cosim().unwrap().platform.sorter.pipeline_records, 16);
+        c.set("queue-depth", "2").unwrap();
+        assert_eq!(c.cosim().unwrap().platform.sorter.pipeline_records, 8);
+    }
+
+    #[test]
+    fn device_latency_overrides_parse_and_validate() {
+        let mut c = Config::default();
+        c.set("devices", "4").unwrap();
+        c.set("device-latency", "1=2500,3=5000").unwrap();
+        c.set("device-latency", "1=3000").unwrap(); // later write wins
+        let mut dl = c.device_latency.clone();
+        dl.sort_unstable();
+        assert_eq!(dl, vec![(1, 3000), (3, 5000)]);
+        let cc = c.cosim().unwrap();
+        assert_eq!(cc.device_latency.len(), 2);
+        // Malformed syntax.
+        assert!(c.clone().set("device-latency", "nope").is_err());
+        assert!(c.clone().set("device-latency", "1=abc").is_err());
+        // Out-of-range device index fails at materialization.
+        let mut bad = c.clone();
+        bad.set("device-latency", "9=2000").unwrap();
+        assert!(bad.cosim().is_err());
+        // Sub-structural latency fails at materialization, not in the
+        // HDL thread.
+        let mut too_fast = c.clone();
+        too_fast.set("device-latency", "0=10").unwrap();
+        let err = too_fast.cosim().unwrap_err().to_string();
+        assert!(err.contains("structural"), "{err}");
     }
 
     #[test]

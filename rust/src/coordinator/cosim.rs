@@ -66,6 +66,12 @@ pub struct CoSimCfg {
     /// gets its own BDF, BAR windows, link channels and HDL platform
     /// lane). 1 = the paper's single-board setup.
     pub devices: usize,
+    /// Per-device sorter-latency overrides `(device, cycles)` — the
+    /// first heterogeneity knob: device k's platform is elaborated
+    /// with its own pipeline latency (all other devices keep
+    /// `platform.sorter.latency`). Validated upstream against the
+    /// structural lower bound (see `Config::cosim`).
+    pub device_latency: Vec<(usize, u64)>,
     /// Guest RAM bytes.
     pub ram_size: usize,
     /// Record waveforms of the entire platform to this VCD file.
@@ -89,6 +95,7 @@ impl Default for CoSimCfg {
             transport: TransportKind::InProc,
             platform: PlatformCfg::default(),
             devices: 1,
+            device_latency: Vec::new(),
             ram_size: 4 << 20,
             vcd: None,
             poll_interval: 1,
@@ -131,6 +138,10 @@ pub struct HdlReport {
     pub irqs_sent: u64,
     pub idle_polls: u64,
     pub records_done: u64,
+    /// SG descriptor fetches / status writebacks the DMA performed
+    /// (0 on direct-register-mode runs).
+    pub desc_fetches: u64,
+    pub desc_writebacks: u64,
     pub vcd_changes: u64,
 }
 
@@ -188,6 +199,18 @@ fn tick_checked(platform: &mut Platform, ctx: &TickCtx, link: &mut Endpoint) -> 
             )))
         }
     }
+}
+
+/// The platform configuration for device `k` of a topology: the
+/// shared template with the device index and any per-device sorter
+/// latency override applied (heterogeneous topologies).
+pub fn platform_cfg_for(cfg: &CoSimCfg, k: usize) -> PlatformCfg {
+    let mut pcfg = cfg.platform.clone();
+    pcfg.device_index = k;
+    if let Some(&(_, cycles)) = cfg.device_latency.iter().find(|&&(d, _)| d == k) {
+        pcfg.sorter.latency = cycles;
+    }
+    pcfg
 }
 
 /// Per-device VCD path: device 0 records to `path` itself; device k
@@ -324,6 +347,8 @@ impl HdlLane {
             irqs_sent: self.platform.bridge.irqs_sent,
             idle_polls: self.platform.bridge.idle_polls,
             records_done: self.platform.sorter.records_done,
+            desc_fetches: self.platform.dma.desc_fetches,
+            desc_writebacks: self.platform.dma.desc_writebacks,
             vcd_changes,
         })
     }
@@ -601,9 +626,7 @@ impl CoSim {
                 let mut cycles = Vec::with_capacity(n);
                 for k in 0..n {
                     let (vm_ep, hdl_ep) = Endpoint::inproc_pair_on(k as u8);
-                    let mut pcfg = cfg.platform.clone();
-                    pcfg.device_index = k;
-                    lanes.push((Platform::new(pcfg), hdl_ep));
+                    lanes.push((Platform::new(platform_cfg_for(&cfg, k)), hdl_ep));
                     vm_eps.push(vm_ep);
                     cycles.push(Arc::new(AtomicU64::new(0)));
                 }

@@ -105,8 +105,8 @@ pub struct Bridge {
     /// device time stays a pure function of the message sequence.
     dma_rd_resume_at: u64,
     next_tag: u64,
-    /// Write burst being collected (addr, beats, data).
-    wr_collect: Option<(u64, u8, Vec<u8>)>,
+    /// Write burst being collected (addr, beats, axi id, data).
+    wr_collect: Option<(u64, u8, u8, Vec<u8>)>,
     // ---- interrupts ----
     irq_prev: [bool; IRQ_PINS],
     /// Poll the link every N cycles (1 = the paper's every-cycle
@@ -545,14 +545,14 @@ impl Bridge {
         // Collect write bursts.
         if self.wr_collect.is_none() {
             if let Some(req) = aw.pop() {
-                self.wr_collect = Some((req.addr, req.len, Vec::new()));
+                self.wr_collect = Some((req.addr, req.len, req.id, Vec::new()));
             }
         }
-        if let Some((addr, _len, data)) = &mut self.wr_collect {
+        if let Some((addr, _len, id, data)) = &mut self.wr_collect {
             if let Some(beat) = w.pop() {
                 data.extend_from_slice(&beat.data);
                 if beat.last {
-                    let (addr, data) = (*addr, std::mem::take(data));
+                    let (addr, id, data) = (*addr, *id, std::mem::take(data));
                     self.dma_write_reqs += 1;
                     match self.mode {
                         LinkMode::Mmio => link.send(&Msg::DmaWrite { addr, data })?,
@@ -562,7 +562,9 @@ impl Bridge {
                         }
                     }
                     if b.can_push() {
-                        b.push(B { id: 1, resp: resp::OKAY });
+                        // Echo the AW id so the DMA can attribute the
+                        // response (data burst vs SG status writeback).
+                        b.push(B { id, resp: resp::OKAY });
                     }
                     self.wr_collect = None;
                 }

@@ -1,11 +1,42 @@
-//! Xilinx-style AXI DMA (direct register mode): MM2S (memory→stream)
-//! and S2MM (stream→memory) channels.
+//! Xilinx-style AXI DMA: MM2S (memory→stream) and S2MM
+//! (stream→memory) channels, in **direct register mode** or
+//! **scatter-gather (SG) descriptor-ring mode**.
 //!
 //! The paper's platform: "A Xilinx DMA is used to fetch input data
 //! from the host memory through PCIe, stream data through the sorting
 //! unit, and write the results back to the host memory." The register
-//! map below is the AXI DMA v7.1 direct-mode subset the Linux driver
-//! exercises (DMACR/DMASR, SA/DA, LENGTH; IOC interrupt on complete).
+//! map below is the AXI DMA v7.1 subset the Linux driver exercises:
+//! direct mode (DMACR/DMASR, SA/DA, LENGTH; IOC interrupt on
+//! complete) plus the SG subset (CURDESC/TAILDESC, descriptor fetch
+//! and completion writeback over the AXI master, IOC interrupt
+//! coalescing via the DMACR IRQThreshold field).
+//!
+//! ## Scatter-gather mode
+//!
+//! The driver builds a ring of 64-byte descriptors in guest memory
+//! (see [`desc`] for the layout), writes CURDESC while the channel is
+//! halted, sets DMACR.RS, then writes TAILDESC to arm the engine.
+//! Per descriptor the engine:
+//!
+//! 1. **fetches** the 64-byte descriptor through the AXI master — the
+//!    same bridge→link→guest-memory path every data burst takes, so a
+//!    descriptor fetch *costs* a real round trip of simulated cycles;
+//! 2. runs the data mover for `control.len` bytes (MM2S streams out
+//!    with TLAST on the final beat of an EOF descriptor; S2MM fills
+//!    the buffer until the stream's TLAST or `len` bytes);
+//! 3. **writes back** the status word (`Cmplt` | transferred bytes)
+//!    into the descriptor — a posted single-beat write that reaches
+//!    guest memory *before* the completion MSI, so a driver woken by
+//!    the interrupt always observes the completed status;
+//! 4. raises IOC when `IRQThreshold` descriptors have completed (and
+//!    always when the engine stops at TAILDESC, so the final partial
+//!    batch is never silent), then follows `next` — stopping iff the
+//!    completed descriptor was the tail.
+//!
+//! Fetching a descriptor whose status already carries `Cmplt` is the
+//! Xilinx stale-descriptor error: the channel halts with SGIntErr —
+//! the classic symptom of a driver resubmitting a ring slot without
+//! clearing its status word.
 //!
 //! Bus behaviour: bursts of up to 16 beats × 128 bits (256 B),
 //! 4 KiB-boundary safe, up to two outstanding read bursts (matching
@@ -43,11 +74,19 @@ use super::signal::{ProbeSink, Probed};
 pub mod regs {
     pub const MM2S_DMACR: u32 = 0x00;
     pub const MM2S_DMASR: u32 = 0x04;
+    pub const MM2S_CURDESC: u32 = 0x08;
+    pub const MM2S_CURDESC_MSB: u32 = 0x0C;
+    pub const MM2S_TAILDESC: u32 = 0x10;
+    pub const MM2S_TAILDESC_MSB: u32 = 0x14;
     pub const MM2S_SA: u32 = 0x18;
     pub const MM2S_SA_MSB: u32 = 0x1C;
     pub const MM2S_LENGTH: u32 = 0x28;
     pub const S2MM_DMACR: u32 = 0x30;
     pub const S2MM_DMASR: u32 = 0x34;
+    pub const S2MM_CURDESC: u32 = 0x38;
+    pub const S2MM_CURDESC_MSB: u32 = 0x3C;
+    pub const S2MM_TAILDESC: u32 = 0x40;
+    pub const S2MM_TAILDESC_MSB: u32 = 0x44;
     pub const S2MM_DA: u32 = 0x48;
     pub const S2MM_DA_MSB: u32 = 0x4C;
     pub const S2MM_LENGTH: u32 = 0x58;
@@ -59,16 +98,57 @@ pub mod cr {
     pub const RESET: u32 = 1 << 2;
     pub const IOC_IRQ_EN: u32 = 1 << 12;
     pub const ERR_IRQ_EN: u32 = 1 << 14;
+    /// SG interrupt-coalescing threshold (IOC fires after this many
+    /// descriptor completions; 0 reads as 1, like the real IP).
+    pub const IRQ_THRESHOLD_SHIFT: u32 = 16;
+    pub const IRQ_THRESHOLD_MASK: u32 = 0xFF << 16;
 }
 
 /// DMASR bits.
 pub mod sr {
     pub const HALTED: u32 = 1 << 0;
     pub const IDLE: u32 = 1 << 1;
+    /// Scatter-gather engine included (this model always has one).
+    pub const SG_INCLD: u32 = 1 << 3;
     pub const DMA_INT_ERR: u32 = 1 << 4;
     pub const DMA_SLV_ERR: u32 = 1 << 5;
+    /// SG descriptor error (misaligned ring, stale `Cmplt` descriptor).
+    pub const SG_INT_ERR: u32 = 1 << 8;
     pub const IOC_IRQ: u32 = 1 << 12;
     pub const ERR_IRQ: u32 = 1 << 14;
+}
+
+/// SG descriptor layout: 64 bytes, 64-byte aligned (16 × u32, the
+/// Xilinx alignment), little-endian words at these byte offsets.
+pub mod desc {
+    /// Descriptor size and required alignment in guest memory.
+    pub const SIZE: u32 = 64;
+    pub const ALIGN: u64 = 64;
+    /// Byte offsets of the fields within a descriptor.
+    pub const OFF_NXT: usize = 0x00;
+    pub const OFF_NXT_MSB: usize = 0x04;
+    pub const OFF_BUF: usize = 0x08;
+    pub const OFF_BUF_MSB: usize = 0x0C;
+    pub const OFF_CTRL: usize = 0x14;
+    pub const OFF_STATUS: usize = 0x18;
+    /// CONTROL word: transfer length plus packet-boundary flags.
+    pub const CTRL_LEN_MASK: u32 = 0x03FF_FFFF;
+    pub const CTRL_EOF: u32 = 1 << 26;
+    pub const CTRL_SOF: u32 = 1 << 27;
+    /// STATUS word: completion flag plus transferred-byte count.
+    pub const STS_CMPLT: u32 = 1 << 31;
+    pub const STS_LEN_MASK: u32 = 0x03FF_FFFF;
+}
+
+/// AXI ids on the DMA's AXI4 master port, distinguishing data traffic
+/// from SG descriptor traffic (the bridge echoes the AW id in B).
+mod axi_id {
+    pub const MM2S_DATA: u8 = 0;
+    pub const S2MM_DATA: u8 = 1;
+    pub const MM2S_SG_FETCH: u8 = 2;
+    pub const MM2S_SG_WB: u8 = 3;
+    pub const S2MM_SG_FETCH: u8 = 4;
+    pub const S2MM_SG_WB: u8 = 5;
 }
 
 /// Max transfer length (26-bit LENGTH register).
@@ -123,7 +203,8 @@ impl Chan {
             self.state = ChanState::Halted;
             return;
         }
-        self.cr = v & (cr::RS | cr::IOC_IRQ_EN | cr::ERR_IRQ_EN);
+        self.cr =
+            v & (cr::RS | cr::IOC_IRQ_EN | cr::ERR_IRQ_EN | cr::IRQ_THRESHOLD_MASK);
         if self.cr & cr::RS != 0 {
             if self.state == ChanState::Halted {
                 self.state = ChanState::Idle;
@@ -136,6 +217,90 @@ impl Chan {
     fn irq_out(&self) -> bool {
         (self.sr_irq & sr::IOC_IRQ != 0 && self.cr & cr::IOC_IRQ_EN != 0)
             || (self.sr_irq & sr::ERR_IRQ != 0 && self.cr & cr::ERR_IRQ_EN != 0)
+    }
+
+    /// Effective SG interrupt-coalescing threshold (≥ 1).
+    fn irq_threshold(&self) -> u32 {
+        ((self.cr & cr::IRQ_THRESHOLD_MASK) >> cr::IRQ_THRESHOLD_SHIFT).max(1)
+    }
+}
+
+/// SG engine state machine (per channel).
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum SgState {
+    /// No descriptor in progress (channel halted, or the engine ran
+    /// the ring dry at TAILDESC and awaits a new tail write).
+    Stopped,
+    /// A descriptor fetch needs to be issued for `cur`.
+    Fetch,
+    /// Descriptor fetch in flight; collecting the 4 R beats.
+    Fetching,
+    /// Descriptor parsed; the data mover is running its transfer.
+    Data,
+    /// Transfer done; the status writeback needs to be issued.
+    Writeback,
+}
+
+/// Per-channel scatter-gather engine state.
+#[derive(Debug)]
+struct SgEngine {
+    /// SG mode armed for this channel (CURDESC written while halted).
+    /// Direct-register mode is rejected while set; RESET clears it.
+    enabled: bool,
+    state: SgState,
+    /// Next descriptor to fetch (CURDESC, engine-advanced).
+    cur: u64,
+    /// Last descriptor to process (TAILDESC; a write kicks the engine).
+    tail: u64,
+    /// Raw bytes of the descriptor being processed (fetch collects 64;
+    /// kept until the next fetch so the writeback can preserve the
+    /// non-status words of the beat it rewrites).
+    raw: Vec<u8>,
+    /// Guest address of the descriptor being processed.
+    desc_addr: u64,
+    /// Parsed fields of the descriptor being processed.
+    nxt: u64,
+    ctrl: u32,
+    /// Bytes moved for the current descriptor (status writeback value).
+    transferred: u32,
+    /// SGIntErr latched (stale/misaligned descriptor).
+    err: bool,
+    /// Outstanding writeback B responses (quiesce accounting only —
+    /// posted writes are ordered by the link, not by B).
+    wb_pending: u32,
+    /// Descriptor completions since the last IOC (coalescing counter).
+    completed_since_irq: u32,
+}
+
+impl SgEngine {
+    fn new() -> Self {
+        Self {
+            enabled: false,
+            state: SgState::Stopped,
+            cur: 0,
+            tail: 0,
+            raw: Vec::with_capacity(desc::SIZE as usize),
+            desc_addr: 0,
+            nxt: 0,
+            ctrl: 0,
+            transferred: 0,
+            err: false,
+            wb_pending: 0,
+            completed_since_irq: 0,
+        }
+    }
+
+    /// The 16-byte writeback beat: descriptor bytes 0x10..0x20 as
+    /// fetched, with the STATUS word replaced by `Cmplt | transferred`.
+    fn wb_beat(&self) -> [u8; DATA_BYTES] {
+        let mut beat = [0u8; DATA_BYTES];
+        if self.raw.len() >= 2 * DATA_BYTES {
+            beat.copy_from_slice(&self.raw[DATA_BYTES..2 * DATA_BYTES]);
+        }
+        let status = desc::STS_CMPLT | (self.transferred & desc::STS_LEN_MASK);
+        beat[desc::OFF_STATUS - DATA_BYTES..desc::OFF_STATUS - DATA_BYTES + 4]
+            .copy_from_slice(&status.to_le_bytes());
+        beat
     }
 }
 
@@ -154,6 +319,9 @@ pub struct AxiDma {
     s2mm_issue: Option<(u64, Vec<AxisBeat>, usize)>, // (addr, beats, sent)
     s2mm_awaiting_b: u32,
     s2mm_stream_done: bool,
+    // SG engines (descriptor-ring mode).
+    mm2s_sg: SgEngine,
+    s2mm_sg: SgEngine,
     // AXI-Lite pending write.
     pend_aw: Option<LiteAw>,
     pend_w: Option<LiteW>,
@@ -164,6 +332,11 @@ pub struct AxiDma {
     pub bytes_written: u64,
     pub completions_mm2s: u64,
     pub completions_s2mm: u64,
+    /// SG descriptor fetches / status writebacks issued (these ride
+    /// the same AXI master as data, but are counted separately so the
+    /// payload counters stay comparable across modes).
+    pub desc_fetches: u64,
+    pub desc_writebacks: u64,
 }
 
 impl Default for AxiDma {
@@ -186,6 +359,8 @@ impl AxiDma {
             s2mm_issue: None,
             s2mm_awaiting_b: 0,
             s2mm_stream_done: false,
+            mm2s_sg: SgEngine::new(),
+            s2mm_sg: SgEngine::new(),
             pend_aw: None,
             pend_w: None,
             rd_bursts: 0,
@@ -194,6 +369,8 @@ impl AxiDma {
             bytes_written: 0,
             completions_mm2s: 0,
             completions_s2mm: 0,
+            desc_fetches: 0,
+            desc_writebacks: 0,
         }
     }
 
@@ -215,6 +392,27 @@ impl AxiDma {
         if self.pend_aw.is_some() || self.pend_w.is_some() {
             return Horizon::Now;
         }
+        // SG engines with internally actionable work: a fetch or a
+        // writeback can be issued on the next tick. `Fetching` waits on
+        // link-fed R beats and `Data` on the data mover, so neither
+        // pins the horizon here — a premature `Now` in those states
+        // would spin device cycles against wall-clock while the VM
+        // services the fetch, breaking cycle determinism.
+        for (chan, sg) in [(&self.mm2s, &self.mm2s_sg), (&self.s2mm, &self.s2mm_sg)] {
+            if sg.enabled
+                && chan.state == ChanState::Active
+                && matches!(sg.state, SgState::Fetch | SgState::Writeback)
+            {
+                return Horizon::Now;
+            }
+        }
+        // S2MM SG transfer completion pending (Data → Writeback).
+        if self.s2mm_sg.enabled
+            && self.s2mm_sg.state == SgState::Data
+            && self.s2mm_transfer_done()
+        {
+            return Horizon::Now;
+        }
         if self.mm2s.state == ChanState::Active
             && self.mm2s_ar_remaining > 0
             && self.mm2s_outstanding.len() < 2
@@ -225,22 +423,77 @@ impl AxiDma {
             if !self.s2mm_buf.is_empty() || self.s2mm_issue.is_some() {
                 return Horizon::Now; // burst to promote or drive
             }
-            if self.s2mm_remaining == 0 && self.s2mm_awaiting_b == 0 {
-                return Horizon::Now; // completion fires next tick
+            if !self.s2mm_sg.enabled && self.s2mm_remaining == 0 && self.s2mm_awaiting_b == 0
+            {
+                return Horizon::Now; // direct-mode completion fires next tick
             }
         }
         Horizon::Idle
     }
 
+    /// S2MM data mover finished the current transfer: every expected
+    /// byte (or the early-TLAST remainder) drained to memory and all
+    /// data write responses collected.
+    fn s2mm_transfer_done(&self) -> bool {
+        (self.s2mm_remaining == 0 || self.s2mm_stream_done)
+            && self.s2mm_issue.is_none()
+            && self.s2mm_buf.is_empty()
+            && self.s2mm_awaiting_b == 0
+    }
+
+    /// True if the S2MM engine would accept a stream beat this tick.
+    /// The platform's event horizon needs this: between SG
+    /// descriptors the engine is *waiting on link input* (its next
+    /// descriptor fetch), so stream beats parked in the FIFO must not
+    /// force ticks — that would spin device cycles against the
+    /// fetch's wall-clock round trip.
+    pub fn s2mm_stream_ready(&self) -> bool {
+        self.s2mm.state == ChanState::Active
+            && (!self.s2mm_sg.enabled || self.s2mm_sg.state == SgState::Data)
+            && !self.s2mm_stream_done
+            && self.s2mm_buf.len() < MAX_BURST_BEATS as usize
+            && self.s2mm_issue.is_none()
+    }
+
+    /// True if an R beat with AXI id `front_id` at the head of the
+    /// read-data channel would be consumed this tick
+    /// (`mm2s_axis_has_room` = the MM2S stream FIFO can take a beat).
+    /// Descriptor-fetch beats are always consumed; data beats wait on
+    /// stream-FIFO room.
+    pub fn r_consumable(&self, front_id: u8, mm2s_axis_has_room: bool) -> bool {
+        match front_id {
+            axi_id::MM2S_DATA => {
+                self.mm2s.state == ChanState::Active && mm2s_axis_has_room
+            }
+            _ => true,
+        }
+    }
+
     fn read_reg(&mut self, addr: u32) -> (u32, u8) {
         let v = match addr & 0xFFC {
             regs::MM2S_DMACR => self.mm2s.cr,
-            regs::MM2S_DMASR => self.mm2s.sr(),
+            regs::MM2S_DMASR => {
+                self.mm2s.sr()
+                    | sr::SG_INCLD
+                    | if self.mm2s_sg.err { sr::SG_INT_ERR } else { 0 }
+            }
+            regs::MM2S_CURDESC => self.mm2s_sg.cur as u32,
+            regs::MM2S_CURDESC_MSB => (self.mm2s_sg.cur >> 32) as u32,
+            regs::MM2S_TAILDESC => self.mm2s_sg.tail as u32,
+            regs::MM2S_TAILDESC_MSB => (self.mm2s_sg.tail >> 32) as u32,
             regs::MM2S_SA => self.mm2s.addr as u32,
             regs::MM2S_SA_MSB => (self.mm2s.addr >> 32) as u32,
             regs::MM2S_LENGTH => self.mm2s.bytes_total,
             regs::S2MM_DMACR => self.s2mm.cr,
-            regs::S2MM_DMASR => self.s2mm.sr(),
+            regs::S2MM_DMASR => {
+                self.s2mm.sr()
+                    | sr::SG_INCLD
+                    | if self.s2mm_sg.err { sr::SG_INT_ERR } else { 0 }
+            }
+            regs::S2MM_CURDESC => self.s2mm_sg.cur as u32,
+            regs::S2MM_CURDESC_MSB => (self.s2mm_sg.cur >> 32) as u32,
+            regs::S2MM_TAILDESC => self.s2mm_sg.tail as u32,
+            regs::S2MM_TAILDESC_MSB => (self.s2mm_sg.tail >> 32) as u32,
             regs::S2MM_DA => self.s2mm.addr as u32,
             regs::S2MM_DA_MSB => (self.s2mm.addr >> 32) as u32,
             regs::S2MM_LENGTH => self.s2mm.bytes_total,
@@ -251,8 +504,21 @@ impl AxiDma {
 
     fn write_reg(&mut self, addr: u32, v: u32) -> u8 {
         match addr & 0xFFC {
-            regs::MM2S_DMACR => self.mm2s.write_cr(v),
+            regs::MM2S_DMACR => {
+                self.mm2s.write_cr(v);
+                if v & cr::RESET != 0 {
+                    self.mm2s_sg = SgEngine::new();
+                }
+            }
             regs::MM2S_DMASR => self.mm2s.sr_irq &= !(v & (sr::IOC_IRQ | sr::ERR_IRQ)),
+            regs::MM2S_CURDESC => return self.write_curdesc(true, v as u64, 0xFFFF_FFFF),
+            regs::MM2S_CURDESC_MSB => {
+                return self.write_curdesc(true, (v as u64) << 32, 0xFFFF_FFFF << 32)
+            }
+            regs::MM2S_TAILDESC => return self.write_taildesc(true, v as u64, true),
+            regs::MM2S_TAILDESC_MSB => {
+                return self.write_taildesc(true, (v as u64) << 32, false)
+            }
             regs::MM2S_SA => {
                 self.mm2s.addr = (self.mm2s.addr & !0xFFFF_FFFF) | v as u64
             }
@@ -260,8 +526,21 @@ impl AxiDma {
                 self.mm2s.addr = (self.mm2s.addr & 0xFFFF_FFFF) | ((v as u64) << 32)
             }
             regs::MM2S_LENGTH => return self.start_mm2s(v),
-            regs::S2MM_DMACR => self.s2mm.write_cr(v),
+            regs::S2MM_DMACR => {
+                self.s2mm.write_cr(v);
+                if v & cr::RESET != 0 {
+                    self.s2mm_sg = SgEngine::new();
+                }
+            }
             regs::S2MM_DMASR => self.s2mm.sr_irq &= !(v & (sr::IOC_IRQ | sr::ERR_IRQ)),
+            regs::S2MM_CURDESC => return self.write_curdesc(false, v as u64, 0xFFFF_FFFF),
+            regs::S2MM_CURDESC_MSB => {
+                return self.write_curdesc(false, (v as u64) << 32, 0xFFFF_FFFF << 32)
+            }
+            regs::S2MM_TAILDESC => return self.write_taildesc(false, v as u64, true),
+            regs::S2MM_TAILDESC_MSB => {
+                return self.write_taildesc(false, (v as u64) << 32, false)
+            }
             regs::S2MM_DA => {
                 self.s2mm.addr = (self.s2mm.addr & !0xFFFF_FFFF) | v as u64
             }
@@ -274,11 +553,54 @@ impl AxiDma {
         resp::OKAY
     }
 
+    /// CURDESC write: legal only while the channel is halted (the real
+    /// IP ignores it otherwise — a driver bug we surface as SLVERR).
+    /// Arms SG mode for the channel.
+    fn write_curdesc(&mut self, mm2s: bool, bits: u64, mask: u64) -> u8 {
+        let (chan, sg) = if mm2s {
+            (&self.mm2s, &mut self.mm2s_sg)
+        } else {
+            (&self.s2mm, &mut self.s2mm_sg)
+        };
+        if chan.state != ChanState::Halted {
+            return resp::SLVERR;
+        }
+        sg.cur = (sg.cur & !mask) | bits;
+        sg.enabled = true;
+        resp::OKAY
+    }
+
+    /// TAILDESC write. The low-word write is the trigger (write the
+    /// MSB first, as the Xilinx driver does): it (re)arms the engine,
+    /// which runs descriptors from CURDESC until the one at TAILDESC
+    /// completes. Requires SG mode and a running channel.
+    fn write_taildesc(&mut self, mm2s: bool, bits: u64, trigger: bool) -> u8 {
+        let (chan, sg) = if mm2s {
+            (&mut self.mm2s, &mut self.mm2s_sg)
+        } else {
+            (&mut self.s2mm, &mut self.s2mm_sg)
+        };
+        if !sg.enabled || chan.state == ChanState::Halted {
+            return resp::SLVERR;
+        }
+        if trigger {
+            sg.tail = (sg.tail & !0xFFFF_FFFFu64) | bits;
+            if sg.state == SgState::Stopped {
+                sg.state = SgState::Fetch;
+            }
+            chan.state = ChanState::Active;
+        } else {
+            sg.tail = (sg.tail & 0xFFFF_FFFF) | bits;
+        }
+        resp::OKAY
+    }
+
     fn start_mm2s(&mut self, len: u32) -> u8 {
         let len = len & MAX_LENGTH;
         // Writing LENGTH while halted or mid-transfer is ignored by
-        // the real IP; while busy it is a driver bug we surface.
-        if self.mm2s.state != ChanState::Idle || len == 0 {
+        // the real IP; while busy (or in SG mode, where LENGTH does
+        // not exist on the datapath) it is a driver bug we surface.
+        if self.mm2s_sg.enabled || self.mm2s.state != ChanState::Idle || len == 0 {
             return resp::SLVERR;
         }
         if len % DATA_BYTES as u32 != 0 || self.mm2s.addr % DATA_BYTES as u64 != 0 {
@@ -299,7 +621,7 @@ impl AxiDma {
 
     fn start_s2mm(&mut self, len: u32) -> u8 {
         let len = len & MAX_LENGTH;
-        if self.s2mm.state != ChanState::Idle || len == 0 {
+        if self.s2mm_sg.enabled || self.s2mm.state != ChanState::Idle || len == 0 {
             return resp::SLVERR;
         }
         if len % DATA_BYTES as u32 != 0 || self.s2mm.addr % DATA_BYTES as u64 != 0 {
@@ -372,7 +694,20 @@ impl AxiDma {
             }
         }
 
-        // ---------------- MM2S engine ----------------
+        // ---------------- SG engines ----------------
+        // (fetch + writeback issue; they share the AXI master with the
+        // data movers, distinguished by AXI id)
+        self.sg_tick(true, m_ar, m_aw, m_w);
+        self.sg_tick(false, m_ar, m_aw, m_w);
+
+        // ---------------- R routing ----------------
+        // One R beat per cycle off the shared read-data channel,
+        // dispatched by AXI id: data beats feed the MM2S stream,
+        // descriptor beats feed the SG fetch collectors. In-order per
+        // the single R channel, exactly like the real interconnect.
+        self.route_r(m_r, mm2s_axis);
+
+        // ---------------- MM2S data mover ----------------
         if self.mm2s.state == ChanState::Active {
             // Issue read bursts (≤2 outstanding).
             if self.mm2s_ar_remaining > 0
@@ -384,7 +719,7 @@ impl AxiDma {
                     m_ar.push(Ar {
                         addr: self.mm2s_ar_addr,
                         len: (beats - 1) as u8,
-                        id: 0,
+                        id: axi_id::MM2S_DATA,
                     });
                     self.mm2s_outstanding.push_back(beats);
                     self.mm2s_ar_addr += beats as u64 * DATA_BYTES as u64;
@@ -392,37 +727,15 @@ impl AxiDma {
                     self.rd_bursts += 1;
                 }
             }
-            // Move R beats to the stream.
-            if m_r.can_pop() && mm2s_axis.can_push() {
-                let r = m_r.pop().unwrap();
-                if r.resp != resp::OKAY {
-                    self.mm2s.err = true;
-                    self.mm2s.sr_irq |= sr::ERR_IRQ;
-                }
-                self.mm2s_data_remaining =
-                    self.mm2s_data_remaining.saturating_sub(DATA_BYTES as u32);
-                self.bytes_read += DATA_BYTES as u64;
-                let last_of_transfer = self.mm2s_data_remaining == 0;
-                mm2s_axis.push(AxisBeat {
-                    data: r.data,
-                    keep: 0xFFFF,
-                    last: last_of_transfer,
-                });
-                if r.last {
-                    self.mm2s_outstanding.pop_front();
-                }
-                if last_of_transfer {
-                    self.mm2s.state = ChanState::Idle;
-                    self.mm2s.sr_irq |= sr::IOC_IRQ;
-                    self.completions_mm2s += 1;
-                }
-            }
         }
 
         // ---------------- S2MM engine ----------------
         if self.s2mm.state == ChanState::Active {
-            // Accept stream beats into the burst buffer.
-            if !self.s2mm_stream_done
+            // Accept stream beats into the burst buffer. In SG mode
+            // only while a descriptor's transfer is programmed — beats
+            // arriving between descriptors wait in the stream FIFO.
+            if (!self.s2mm_sg.enabled || self.s2mm_sg.state == SgState::Data)
+                && !self.s2mm_stream_done
                 && s2mm_axis.can_pop()
                 && self.s2mm_buf.len() < MAX_BURST_BEATS as usize
                 && self.s2mm_issue.is_none()
@@ -454,7 +767,7 @@ impl AxiDma {
                         m_aw.push(Aw {
                             addr: *addr,
                             len: (burst.len() - 1) as u8,
-                            id: 1,
+                            id: axi_id::S2MM_DATA,
                         });
                         self.wr_bursts += 1;
                         *sent = 1; // AW sent; W beats follow
@@ -480,19 +793,10 @@ impl AxiDma {
                     }
                 }
             }
-            // Collect write responses. A stray B (e.g. stale traffic
-            // straddling a soft reset) must not underflow the counter
-            // and take the HDL thread down.
-            if m_b.can_pop() {
-                let b = m_b.pop().unwrap();
-                if b.resp != resp::OKAY {
-                    self.s2mm.err = true;
-                    self.s2mm.sr_irq |= sr::ERR_IRQ;
-                }
-                self.s2mm_awaiting_b = self.s2mm_awaiting_b.saturating_sub(1);
-            }
-            // Completion.
-            if self.s2mm_remaining == 0
+            // Direct-mode completion (SG completes per descriptor in
+            // `sg_tick`, which owns the IOC coalescing).
+            if !self.s2mm_sg.enabled
+                && self.s2mm_remaining == 0
                 && self.s2mm_issue.is_none()
                 && self.s2mm_buf.is_empty()
                 && self.s2mm_awaiting_b == 0
@@ -502,6 +806,275 @@ impl AxiDma {
                 self.completions_s2mm += 1;
             }
         }
+
+        // ---------------- B routing ----------------
+        // Write responses come back with the AW id echoed; route to
+        // the owning engine. A stray B (e.g. stale traffic straddling
+        // a soft reset) must not underflow any counter and take the
+        // HDL thread down.
+        if m_b.can_pop() {
+            let b = m_b.pop().unwrap();
+            match b.id {
+                axi_id::S2MM_DATA => {
+                    if b.resp != resp::OKAY {
+                        self.s2mm.err = true;
+                        self.s2mm.sr_irq |= sr::ERR_IRQ;
+                    }
+                    self.s2mm_awaiting_b = self.s2mm_awaiting_b.saturating_sub(1);
+                }
+                axi_id::MM2S_SG_WB => {
+                    self.mm2s_sg.wb_pending = self.mm2s_sg.wb_pending.saturating_sub(1);
+                }
+                axi_id::S2MM_SG_WB => {
+                    self.s2mm_sg.wb_pending = self.s2mm_sg.wb_pending.saturating_sub(1);
+                }
+                _ => {}
+            }
+        }
+    }
+
+    /// True while no data-mover write burst is mid-W — the window in
+    /// which a single-beat descriptor writeback (AW+W pushed in one
+    /// cycle) may be interleaved without violating W-after-AW order on
+    /// the shared write channel.
+    fn wb_slot_free(&self) -> bool {
+        match &self.s2mm_issue {
+            Some((_, _, sent)) => *sent == 0,
+            None => true,
+        }
+    }
+
+    /// One tick of a channel's SG engine (`mm2s` selects which).
+    fn sg_tick(
+        &mut self,
+        mm2s: bool,
+        m_ar: &mut Fifo<Ar>,
+        m_aw: &mut Fifo<Aw>,
+        m_w: &mut Fifo<W>,
+    ) {
+        let (chan_state, sg_state, enabled) = {
+            let (chan, sg) = if mm2s {
+                (&self.mm2s, &self.mm2s_sg)
+            } else {
+                (&self.s2mm, &self.s2mm_sg)
+            };
+            (chan.state, sg.state, sg.enabled)
+        };
+        if !enabled || chan_state != ChanState::Active {
+            return;
+        }
+        match sg_state {
+            SgState::Fetch => {
+                let cur = if mm2s { self.mm2s_sg.cur } else { self.s2mm_sg.cur };
+                if cur % desc::ALIGN != 0 {
+                    self.sg_halt(mm2s);
+                    return;
+                }
+                if m_ar.can_push() {
+                    let fetch_id = if mm2s {
+                        axi_id::MM2S_SG_FETCH
+                    } else {
+                        axi_id::S2MM_SG_FETCH
+                    };
+                    // 64 B = 4 beats; 64-aligned, so never boundary-split.
+                    m_ar.push(Ar { addr: cur, len: 3, id: fetch_id });
+                    self.desc_fetches += 1;
+                    let sg = if mm2s { &mut self.mm2s_sg } else { &mut self.s2mm_sg };
+                    sg.desc_addr = cur;
+                    sg.raw.clear();
+                    sg.state = SgState::Fetching;
+                }
+            }
+            SgState::Data => {
+                // MM2S moves to Writeback from the R-routing path (on
+                // the final data beat); S2MM when its drain quiesces.
+                if !mm2s && self.s2mm_transfer_done() {
+                    self.s2mm_sg.transferred =
+                        self.s2mm.bytes_total - self.s2mm_remaining;
+                    self.s2mm_sg.state = SgState::Writeback;
+                }
+            }
+            SgState::Writeback => {
+                if !(self.wb_slot_free() && m_aw.can_push() && m_w.can_push()) {
+                    return;
+                }
+                let wb_id = if mm2s { axi_id::MM2S_SG_WB } else { axi_id::S2MM_SG_WB };
+                // Status writeback: the descriptor's 0x10..0x20 beat
+                // with Cmplt | transferred in the STATUS word. AW and
+                // its single W go out in the same cycle, so the burst
+                // can never interleave with a data burst's W beats.
+                let (desc_addr, beat) = {
+                    let sg = if mm2s { &mut self.mm2s_sg } else { &mut self.s2mm_sg };
+                    sg.wb_pending += 1;
+                    sg.completed_since_irq += 1;
+                    (sg.desc_addr, sg.wb_beat())
+                };
+                m_aw.push(Aw { addr: desc_addr + DATA_BYTES as u64, len: 0, id: wb_id });
+                m_w.push(W { data: beat, strb: 0xFFFF, last: true });
+                self.desc_writebacks += 1;
+                {
+                    let (chan, sg) = if mm2s {
+                        (&mut self.mm2s, &mut self.mm2s_sg)
+                    } else {
+                        (&mut self.s2mm, &mut self.s2mm_sg)
+                    };
+                    let at_tail = sg.desc_addr == sg.tail;
+                    sg.cur = sg.nxt;
+                    // IOC coalescing: fire at the threshold, and always
+                    // flush when the engine stops at the tail so the
+                    // final partial batch is never silent.
+                    if sg.completed_since_irq >= chan.irq_threshold() || at_tail {
+                        chan.sr_irq |= sr::IOC_IRQ;
+                        sg.completed_since_irq = 0;
+                    }
+                    if at_tail {
+                        sg.state = SgState::Stopped;
+                        chan.state = ChanState::Idle;
+                    } else {
+                        sg.state = SgState::Fetch;
+                    }
+                }
+                if mm2s {
+                    self.completions_mm2s += 1;
+                } else {
+                    self.completions_s2mm += 1;
+                }
+            }
+            SgState::Stopped | SgState::Fetching => {}
+        }
+    }
+
+    /// Route one R beat by AXI id: data → MM2S stream, descriptor
+    /// beats → the owning SG fetch collector.
+    fn route_r(&mut self, m_r: &mut Fifo<R>, mm2s_axis: &mut Fifo<AxisBeat>) {
+        let Some(front) = m_r.peek() else { return };
+        match front.id {
+            axi_id::MM2S_DATA => {
+                if self.mm2s.state != ChanState::Active || !mm2s_axis.can_push() {
+                    return; // backpressure: beat stays on the channel
+                }
+                let r = m_r.pop().unwrap();
+                if r.resp != resp::OKAY {
+                    self.mm2s.err = true;
+                    self.mm2s.sr_irq |= sr::ERR_IRQ;
+                }
+                self.mm2s_data_remaining =
+                    self.mm2s_data_remaining.saturating_sub(DATA_BYTES as u32);
+                self.bytes_read += DATA_BYTES as u64;
+                let last_of_transfer = self.mm2s_data_remaining == 0;
+                // TLAST: every direct-mode transfer is one packet; in
+                // SG mode only an EOF descriptor closes the packet.
+                let tlast = last_of_transfer
+                    && (!self.mm2s_sg.enabled
+                        || self.mm2s_sg.ctrl & desc::CTRL_EOF != 0);
+                mm2s_axis.push(AxisBeat { data: r.data, keep: 0xFFFF, last: tlast });
+                if r.last {
+                    self.mm2s_outstanding.pop_front();
+                }
+                if last_of_transfer {
+                    if self.mm2s_sg.enabled {
+                        self.mm2s_sg.transferred = self.mm2s.bytes_total;
+                        self.mm2s_sg.state = SgState::Writeback;
+                    } else {
+                        self.mm2s.state = ChanState::Idle;
+                        self.mm2s.sr_irq |= sr::IOC_IRQ;
+                        self.completions_mm2s += 1;
+                    }
+                }
+            }
+            axi_id::MM2S_SG_FETCH => {
+                let r = m_r.pop().unwrap();
+                self.sg_collect(true, r);
+            }
+            axi_id::S2MM_SG_FETCH => {
+                let r = m_r.pop().unwrap();
+                self.sg_collect(false, r);
+            }
+            _ => {
+                // Stale id (e.g. traffic straddling a reset): drop.
+                m_r.pop();
+            }
+        }
+    }
+
+    /// Collect one descriptor-fetch R beat; on the burst's last beat,
+    /// parse the descriptor and program the data mover.
+    fn sg_collect(&mut self, mm2s: bool, r: R) {
+        let bad = {
+            let sg = if mm2s { &mut self.mm2s_sg } else { &mut self.s2mm_sg };
+            if sg.state != SgState::Fetching {
+                return; // stale beat from before a reset
+            }
+            sg.raw.extend_from_slice(&r.data);
+            if !r.last {
+                return;
+            }
+            r.resp != resp::OKAY || sg.raw.len() != desc::SIZE as usize
+        };
+        if bad {
+            self.sg_halt(mm2s);
+            return;
+        }
+        // Parse.
+        let (nxt, buf, ctrl, status) = {
+            let sg = if mm2s { &self.mm2s_sg } else { &self.s2mm_sg };
+            let rd32 = |off: usize| {
+                u32::from_le_bytes(sg.raw[off..off + 4].try_into().unwrap())
+            };
+            (
+                rd32(desc::OFF_NXT) as u64 | ((rd32(desc::OFF_NXT_MSB) as u64) << 32),
+                rd32(desc::OFF_BUF) as u64 | ((rd32(desc::OFF_BUF_MSB) as u64) << 32),
+                rd32(desc::OFF_CTRL),
+                rd32(desc::OFF_STATUS),
+            )
+        };
+        let len = ctrl & desc::CTRL_LEN_MASK;
+        // Stale descriptor (already completed, never re-armed by the
+        // driver) or malformed geometry: halt with SGIntErr.
+        if status & desc::STS_CMPLT != 0
+            || len == 0
+            || len % DATA_BYTES as u32 != 0
+            || buf % DATA_BYTES as u64 != 0
+            || nxt % desc::ALIGN != 0
+        {
+            self.sg_halt(mm2s);
+            return;
+        }
+        {
+            let sg = if mm2s { &mut self.mm2s_sg } else { &mut self.s2mm_sg };
+            sg.nxt = nxt;
+            sg.ctrl = ctrl;
+            sg.state = SgState::Data;
+        }
+        // Program the data mover with the descriptor's buffer.
+        if mm2s {
+            self.mm2s.bytes_total = len;
+            self.mm2s_ar_addr = buf;
+            self.mm2s_ar_remaining = len;
+            self.mm2s_data_remaining = len;
+        } else {
+            self.s2mm.addr = buf;
+            self.s2mm.bytes_total = len;
+            self.s2mm_remaining = len;
+            self.s2mm_buf.clear();
+            self.s2mm_issue = None;
+            self.s2mm_stream_done = false;
+        }
+    }
+
+    /// SG error: latch SGIntErr + ERR_IRQ and halt the channel (the
+    /// Xilinx response to a stale or malformed descriptor).
+    fn sg_halt(&mut self, mm2s: bool) {
+        let (chan, sg) = if mm2s {
+            (&mut self.mm2s, &mut self.mm2s_sg)
+        } else {
+            (&mut self.s2mm, &mut self.s2mm_sg)
+        };
+        sg.err = true;
+        sg.state = SgState::Stopped;
+        chan.err = true;
+        chan.sr_irq |= sr::ERR_IRQ;
+        chan.state = ChanState::Halted;
     }
 }
 
@@ -525,6 +1098,31 @@ impl Probed for AxiDma {
         sink.sig("platform.dma.wr_bursts", 32, self.wr_bursts);
         sink.sig("platform.dma.bytes_read", 32, self.bytes_read);
         sink.sig("platform.dma.bytes_written", 32, self.bytes_written);
+        // SG engine visibility: the signals to watch when a descriptor
+        // ring wedges (see DEBUGGING.md §"stuck descriptor ring").
+        for (name_state, name_cur, name_tail, name_wb, sg) in [
+            (
+                "platform.dma.mm2s_sg_state",
+                "platform.dma.mm2s_curdesc",
+                "platform.dma.mm2s_taildesc",
+                "platform.dma.mm2s_sg_wb_pending",
+                &self.mm2s_sg,
+            ),
+            (
+                "platform.dma.s2mm_sg_state",
+                "platform.dma.s2mm_curdesc",
+                "platform.dma.s2mm_taildesc",
+                "platform.dma.s2mm_sg_wb_pending",
+                &self.s2mm_sg,
+            ),
+        ] {
+            sink.sig(name_state, 3, sg.state as u64);
+            sink.sig(name_cur, 64, sg.cur);
+            sink.sig(name_tail, 64, sg.tail);
+            sink.sig(name_wb, 8, sg.wb_pending as u64);
+        }
+        sink.sig("platform.dma.desc_fetches", 32, self.desc_fetches);
+        sink.sig("platform.dma.desc_writebacks", 32, self.desc_writebacks);
     }
 }
 
@@ -548,8 +1146,8 @@ mod tests {
         s2mm: Fifo<AxisBeat>,
         /// Simple host-memory model behind the AXI master port.
         host: Vec<u8>,
-        rd_queue: VecDeque<(u64, u16, u16)>, // addr, beats, emitted
-        wr_state: Option<(u64, u16)>,
+        rd_queue: VecDeque<(u64, u16, u16, u8)>, // addr, beats, emitted, id
+        wr_state: Option<(u64, u16, u8)>,        // addr, beat, id
     }
 
     impl Harness {
@@ -589,19 +1187,20 @@ mod tests {
             self.s2mm.commit();
         }
 
-        /// Host-memory slave servicing the DMA's AXI master.
+        /// Host-memory slave servicing the DMA's AXI master (echoes
+        /// the request id back on R/B, like the bridge does).
         fn host_service(&mut self) {
             if let Some(ar) = self.m_ar.pop() {
-                self.rd_queue.push_back((ar.addr, ar.beats(), 0));
+                self.rd_queue.push_back((ar.addr, ar.beats(), 0, ar.id));
             }
-            if let Some((addr, beats, emitted)) = self.rd_queue.front_mut() {
+            if let Some((addr, beats, emitted, id)) = self.rd_queue.front_mut() {
                 if self.m_r.can_push() {
                     let off = (*addr as usize) + *emitted as usize * DATA_BYTES;
                     let mut data = [0u8; DATA_BYTES];
                     data.copy_from_slice(&self.host[off..off + DATA_BYTES]);
                     *emitted += 1;
                     let last = *emitted == *beats;
-                    self.m_r.push(R { data, id: 0, resp: resp::OKAY, last });
+                    self.m_r.push(R { data, id: *id, resp: resp::OKAY, last });
                     if last {
                         self.rd_queue.pop_front();
                     }
@@ -609,20 +1208,20 @@ mod tests {
             }
             if self.wr_state.is_none() {
                 if let Some(aw) = self.m_aw.pop() {
-                    self.wr_state = Some((aw.addr, 0));
+                    self.wr_state = Some((aw.addr, 0, aw.id));
                 }
             }
-            if let Some((addr, beat)) = self.wr_state {
+            if let Some((addr, beat, id)) = self.wr_state {
                 if let Some(w) = self.m_w.pop() {
                     let off = addr as usize + beat as usize * DATA_BYTES;
                     self.host[off..off + DATA_BYTES].copy_from_slice(&w.data);
                     if w.last {
                         if self.m_b.can_push() {
-                            self.m_b.push(B { id: 1, resp: resp::OKAY });
+                            self.m_b.push(B { id, resp: resp::OKAY });
                         }
                         self.wr_state = None;
                     } else {
-                        self.wr_state = Some((addr, beat + 1));
+                        self.wr_state = Some((addr, beat + 1, id));
                     }
                 }
             }
@@ -770,6 +1369,238 @@ mod tests {
         assert_eq!(got, 32);
         // First burst must stop at the boundary: 0xF80..0x1000 = 8 beats.
         assert!(h.dma.rd_bursts >= 3, "boundary split expected");
+    }
+
+    /// Write a 64-byte SG descriptor into harness host memory.
+    fn write_desc(h: &mut Harness, at: u64, nxt: u64, buf: u64, ctrl: u32, status: u32) {
+        let mut d = [0u8; desc::SIZE as usize];
+        d[desc::OFF_NXT..desc::OFF_NXT + 4].copy_from_slice(&(nxt as u32).to_le_bytes());
+        d[desc::OFF_NXT_MSB..desc::OFF_NXT_MSB + 4]
+            .copy_from_slice(&((nxt >> 32) as u32).to_le_bytes());
+        d[desc::OFF_BUF..desc::OFF_BUF + 4].copy_from_slice(&(buf as u32).to_le_bytes());
+        d[desc::OFF_BUF_MSB..desc::OFF_BUF_MSB + 4]
+            .copy_from_slice(&((buf >> 32) as u32).to_le_bytes());
+        d[desc::OFF_CTRL..desc::OFF_CTRL + 4].copy_from_slice(&ctrl.to_le_bytes());
+        d[desc::OFF_STATUS..desc::OFF_STATUS + 4].copy_from_slice(&status.to_le_bytes());
+        h.host[at as usize..at as usize + desc::SIZE as usize].copy_from_slice(&d);
+    }
+
+    fn desc_status(h: &Harness, at: u64) -> u32 {
+        let off = at as usize + desc::OFF_STATUS;
+        u32::from_le_bytes(h.host[off..off + 4].try_into().unwrap())
+    }
+
+    #[test]
+    fn sg_mm2s_ring_streams_descriptors_and_writes_back_status() {
+        let mut h = Harness::new();
+        for (i, b) in h.host.iter_mut().enumerate().skip(0x2000).take(0x2000) {
+            *b = (i % 253) as u8;
+        }
+        let ctrl = 256 | desc::CTRL_SOF | desc::CTRL_EOF;
+        write_desc(&mut h, 0x1000, 0x1040, 0x2000, ctrl, 0);
+        write_desc(&mut h, 0x1040, 0x1000, 0x3000, ctrl, 0);
+        // Probe sequence: CURDESC while halted, run, tail triggers.
+        assert_eq!(h.write_reg(regs::MM2S_CURDESC, 0x1000), resp::OKAY);
+        h.write_reg(regs::MM2S_DMACR, cr::RS | cr::IOC_IRQ_EN);
+        h.write_reg(regs::MM2S_TAILDESC_MSB, 0);
+        assert_eq!(h.write_reg(regs::MM2S_TAILDESC, 0x1040), resp::OKAY);
+        let mut beats = Vec::new();
+        for _ in 0..4000 {
+            h.step();
+            while let Some(b) = h.mm2s.pop() {
+                beats.push(b);
+            }
+            if beats.len() == 32 && h.dma.desc_writebacks == 2 {
+                break;
+            }
+        }
+        assert_eq!(beats.len(), 32, "2 × 256 B = 32 beats expected");
+        // TLAST per EOF descriptor.
+        assert!(beats[15].last && beats[31].last);
+        assert!(beats[..15].iter().all(|b| !b.last));
+        let bytes: Vec<u8> = beats[..16].iter().flat_map(|b| b.data).collect();
+        assert_eq!(&bytes[..], &h.host[0x2000..0x2100]);
+        // Status writebacks landed with Cmplt | transferred.
+        assert_eq!(desc_status(&h, 0x1000), desc::STS_CMPLT | 256);
+        assert_eq!(desc_status(&h, 0x1040), desc::STS_CMPLT | 256);
+        assert_eq!(h.dma.completions_mm2s, 2);
+        assert_eq!(h.dma.desc_fetches, 2);
+        // IOC raised; channel idle at tail; SG bits visible.
+        assert!(h.dma.irq().0);
+        let sr_v = h.read_reg(regs::MM2S_DMASR);
+        assert_ne!(sr_v & sr::IOC_IRQ, 0);
+        assert_ne!(sr_v & sr::SG_INCLD, 0);
+        assert_ne!(sr_v & sr::IDLE, 0);
+        assert_eq!(sr_v & sr::SG_INT_ERR, 0);
+        // CURDESC advanced through the ring (back to the head link).
+        assert_eq!(h.read_reg(regs::MM2S_CURDESC), 0x1000);
+    }
+
+    #[test]
+    fn sg_s2mm_ring_fills_buffers_and_writes_back_status() {
+        let mut h = Harness::new();
+        write_desc(&mut h, 0x1000, 0x1040, 0x4000, 256, 0);
+        write_desc(&mut h, 0x1040, 0x1000, 0x5000, 256, 0);
+        assert_eq!(h.write_reg(regs::S2MM_CURDESC, 0x1000), resp::OKAY);
+        h.write_reg(regs::S2MM_DMACR, cr::RS | cr::IOC_IRQ_EN);
+        h.write_reg(regs::S2MM_TAILDESC_MSB, 0);
+        assert_eq!(h.write_reg(regs::S2MM_TAILDESC, 0x1040), resp::OKAY);
+        // Feed two 16-beat records (TLAST on each 16th beat).
+        let mut fed = 0u32;
+        for _ in 0..6000 {
+            if fed < 32 && h.s2mm.can_push() {
+                let mut data = [0u8; DATA_BYTES];
+                data[0] = fed as u8;
+                data[1] = 0xC3;
+                h.s2mm.push(AxisBeat {
+                    data,
+                    keep: 0xFFFF,
+                    last: fed % 16 == 15,
+                });
+                fed += 1;
+            }
+            h.step();
+            if h.dma.desc_writebacks == 2 {
+                break;
+            }
+        }
+        assert_eq!(h.dma.desc_writebacks, 2, "both descriptors must complete");
+        for i in 0..16usize {
+            assert_eq!(h.host[0x4000 + i * DATA_BYTES], i as u8);
+            assert_eq!(h.host[0x5000 + i * DATA_BYTES], (16 + i) as u8);
+            assert_eq!(h.host[0x4000 + i * DATA_BYTES + 1], 0xC3);
+        }
+        assert_eq!(desc_status(&h, 0x1000), desc::STS_CMPLT | 256);
+        assert_eq!(desc_status(&h, 0x1040), desc::STS_CMPLT | 256);
+        assert_eq!(h.dma.completions_s2mm, 2);
+        assert!(h.dma.irq().1, "S2MM IOC expected");
+    }
+
+    #[test]
+    fn sg_irq_coalescing_threshold_batches_completions() {
+        let mut h = Harness::new();
+        let ctrl = 64 | desc::CTRL_SOF | desc::CTRL_EOF;
+        write_desc(&mut h, 0x1000, 0x1040, 0x2000, ctrl, 0);
+        write_desc(&mut h, 0x1040, 0x1080, 0x2100, ctrl, 0);
+        write_desc(&mut h, 0x1080, 0x1000, 0x2200, ctrl, 0);
+        h.write_reg(regs::MM2S_CURDESC, 0x1000);
+        // Threshold 2: the first completion alone must not interrupt.
+        h.write_reg(
+            regs::MM2S_DMACR,
+            cr::RS | cr::IOC_IRQ_EN | (2 << cr::IRQ_THRESHOLD_SHIFT),
+        );
+        h.write_reg(regs::MM2S_TAILDESC, 0x1080);
+        let mut irqs = 0u32;
+        for _ in 0..6000 {
+            let before = h.dma.irq().0;
+            h.step();
+            while h.mm2s.pop().is_some() {}
+            if h.dma.irq().0 && !before {
+                irqs += 1;
+                // At the first IOC at least 2 descriptors completed —
+                // coalescing held back the first completion.
+                if irqs == 1 {
+                    assert!(
+                        h.dma.completions_mm2s >= 2,
+                        "IOC fired after only {} completions",
+                        h.dma.completions_mm2s
+                    );
+                }
+                h.write_reg(regs::MM2S_DMASR, sr::IOC_IRQ);
+            }
+            if h.dma.completions_mm2s == 3 && !h.dma.irq().0 {
+                break;
+            }
+        }
+        assert_eq!(h.dma.completions_mm2s, 3);
+        // Threshold batch (2) + tail flush (1) = exactly two IOCs.
+        assert_eq!(irqs, 2, "expected threshold IOC + tail-flush IOC");
+    }
+
+    #[test]
+    fn sg_stale_descriptor_halts_with_sginterr() {
+        let mut h = Harness::new();
+        // Status already carries Cmplt — a resubmitted ring slot whose
+        // status the driver forgot to clear.
+        write_desc(
+            &mut h,
+            0x1000,
+            0x1000,
+            0x2000,
+            256 | desc::CTRL_EOF,
+            desc::STS_CMPLT | 256,
+        );
+        h.write_reg(regs::MM2S_CURDESC, 0x1000);
+        h.write_reg(regs::MM2S_DMACR, cr::RS | cr::ERR_IRQ_EN);
+        h.write_reg(regs::MM2S_TAILDESC, 0x1000);
+        for _ in 0..200 {
+            h.step();
+        }
+        let sr_v = h.read_reg(regs::MM2S_DMASR);
+        assert_ne!(sr_v & sr::SG_INT_ERR, 0, "SGIntErr expected, sr={sr_v:#x}");
+        assert_ne!(sr_v & sr::HALTED, 0, "channel must halt on SG error");
+        assert!(h.dma.irq().0, "error interrupt expected");
+        assert_eq!(h.dma.completions_mm2s, 0);
+    }
+
+    #[test]
+    fn sg_register_protocol_errors() {
+        let mut h = Harness::new();
+        // TAILDESC before SG mode / while halted: rejected.
+        assert_eq!(h.write_reg(regs::MM2S_TAILDESC, 0x1000), resp::SLVERR);
+        write_desc(&mut h, 0x1000, 0x1000, 0x2000, 256 | desc::CTRL_EOF, 0);
+        assert_eq!(h.write_reg(regs::MM2S_CURDESC, 0x1000), resp::OKAY);
+        // Direct-mode LENGTH is illegal once SG is armed.
+        h.write_reg(regs::MM2S_DMACR, cr::RS);
+        assert_eq!(h.write_reg(regs::MM2S_LENGTH, 64), resp::SLVERR);
+        // CURDESC is writable only while halted.
+        assert_eq!(h.write_reg(regs::MM2S_CURDESC, 0x2000), resp::SLVERR);
+        // Reset clears SG mode: LENGTH becomes legal again.
+        h.write_reg(regs::MM2S_DMACR, cr::RESET);
+        h.write_reg(regs::MM2S_DMACR, cr::RS);
+        h.write_reg(regs::MM2S_SA, 0);
+        assert_eq!(h.write_reg(regs::MM2S_LENGTH, 64), resp::OKAY);
+    }
+
+    #[test]
+    fn sg_misaligned_curdesc_halts() {
+        let mut h = Harness::new();
+        h.write_reg(regs::MM2S_CURDESC, 0x1010); // not 64-byte aligned
+        h.write_reg(regs::MM2S_DMACR, cr::RS | cr::ERR_IRQ_EN);
+        h.write_reg(regs::MM2S_TAILDESC, 0x1010);
+        for _ in 0..50 {
+            h.step();
+        }
+        let sr_v = h.read_reg(regs::MM2S_DMASR);
+        assert_ne!(sr_v & sr::SG_INT_ERR, 0);
+        assert_ne!(sr_v & sr::HALTED, 0);
+    }
+
+    #[test]
+    fn sg_tail_rewrite_resumes_a_stopped_ring() {
+        // Depth-1 ring resubmission: engine stops at tail, the driver
+        // clears the status and rewrites TAILDESC, engine runs again.
+        let mut h = Harness::new();
+        let ctrl = 64 | desc::CTRL_SOF | desc::CTRL_EOF;
+        write_desc(&mut h, 0x1000, 0x1000, 0x2000, ctrl, 0); // self-loop
+        h.write_reg(regs::MM2S_CURDESC, 0x1000);
+        h.write_reg(regs::MM2S_DMACR, cr::RS | cr::IOC_IRQ_EN);
+        for round in 1..=3u64 {
+            // Driver refreshes the slot: clear status, kick the tail.
+            let off = 0x1000 + desc::OFF_STATUS;
+            h.host[off..off + 4].copy_from_slice(&0u32.to_le_bytes());
+            assert_eq!(h.write_reg(regs::MM2S_TAILDESC, 0x1000), resp::OKAY);
+            for _ in 0..2000 {
+                h.step();
+                while h.mm2s.pop().is_some() {}
+                if h.dma.completions_mm2s == round {
+                    break;
+                }
+            }
+            assert_eq!(h.dma.completions_mm2s, round, "round {round} never completed");
+            assert_eq!(desc_status(&h, 0x1000), desc::STS_CMPLT | 64);
+            h.write_reg(regs::MM2S_DMASR, sr::IOC_IRQ);
+        }
     }
 
     #[test]

@@ -238,10 +238,20 @@ impl Platform {
             || !self.dm_aw.is_empty()
     }
 
-    /// True if every inter-module wire is empty — a precondition for
-    /// any horizon other than [`Horizon::Now`]: a beat sitting in any
-    /// FIFO means some module acts on the very next tick.
-    fn wires_quiet(&self) -> bool {
+    /// True if every **control-plane** wire is empty (AXI-Lite ports
+    /// and the DMA master's AR/AW/W/B channels). A beat on any of
+    /// these means some module acts on the very next tick — their
+    /// consumers drain unconditionally.
+    ///
+    /// The **stream-side** wires (`dm_r`, `mm2s_axis`, `s2mm_axis`)
+    /// are deliberately *not* covered: their consumers can be blocked
+    /// waiting on link input (an SG descriptor fetch in flight, a
+    /// not-ready sorter), in which case a parked beat cannot change
+    /// any state and must not force ticks — spinning there would
+    /// advance device time against the wall-clock of the fetch round
+    /// trip, breaking cycle determinism. [`Platform::next_event`]
+    /// applies consumer-aware rules to those three instead.
+    fn ctrl_wires_quiet(&self) -> bool {
         fn port_quiet(p: &LitePort) -> bool {
             p.aw.is_empty() && p.w.is_empty() && p.b.is_empty() && p.ar.is_empty()
                 && p.r.is_empty()
@@ -249,12 +259,9 @@ impl Platform {
         port_quiet(&self.cfg_port)
             && self.slave_ports.iter().all(port_quiet)
             && self.dm_ar.is_empty()
-            && self.dm_r.is_empty()
             && self.dm_aw.is_empty()
             && self.dm_w.is_empty()
             && self.dm_b.is_empty()
-            && self.mm2s_axis.is_empty()
-            && self.s2mm_axis.is_empty()
     }
 
     /// Feed an already-polled link message into the platform (bridge)
@@ -284,18 +291,40 @@ impl Platform {
         if self.bridge.irq_edge_pending(irq) {
             return Horizon::Now;
         }
-        if !self.wires_quiet() {
+        if !self.ctrl_wires_quiet() {
             return Horizon::Now;
         }
-        self.bridge
+        // Stream-side wires force a tick only when their consumer can
+        // actually take the beat (see `ctrl_wires_quiet` for why):
+        // R beats by AXI id/stream room, stream beats by the sorter's
+        // tready and the S2MM engine's per-descriptor readiness.
+        if let Some(r) = self.dm_r.peek() {
+            if self.dma.r_consumable(r.id, self.mm2s_axis.can_push()) {
+                return Horizon::Now;
+            }
+        }
+        if !self.mm2s_axis.is_empty() && self.sorter.input_ready() {
+            return Horizon::Now;
+        }
+        if !self.s2mm_axis.is_empty() && self.dma.s2mm_stream_ready() {
+            return Horizon::Now;
+        }
+        let mut h = self
+            .bridge
             .horizon()
             .min(self.dma.horizon())
             .min(self.regfile.horizon())
-            .min(self.bram.horizon())
-            .min(self.sorter.horizon(now))
+            .min(self.bram.horizon());
+        // The sorter's scheduled output can only become an event if
+        // the output FIFO has room; a backpressured sorter wakes via
+        // the S2MM-consumes-a-beat rule above instead.
+        if self.s2mm_axis.can_push() {
+            h = h.min(self.sorter.horizon(now));
+        }
+        h
         // The interconnect carries no horizon of its own: every one of
-        // its wait states is pinned to a non-empty wire, which
-        // `wires_quiet` already forces to `Now`.
+        // its wait states is pinned to a non-empty control wire, which
+        // `ctrl_wires_quiet` already forces to `Now`.
     }
 }
 

@@ -178,6 +178,14 @@ impl Sorter {
         !self.collecting.is_empty() || !self.inflight.is_empty()
     }
 
+    /// True if the sorter would accept an input beat this tick
+    /// (`s_axis_tready`'s natural value). The platform's event
+    /// horizon needs this: an input beat waiting on a *not-ready*
+    /// sorter cannot force a tick by itself.
+    pub fn input_ready(&self) -> bool {
+        self.inflight.len() < self.cfg.pipeline_records
+    }
+
     /// Event horizon (see [`Horizon`]): with a record in flight, the
     /// next observable change is its scheduled first-output cycle —
     /// every tick before `out_earliest` is a no-op given empty stream

@@ -58,6 +58,12 @@ pub struct ReliableTx {
     outbox: VecDeque<(u64, Vec<u8>)>,
     /// Device id stamped on every frame (multi-device multiplexing).
     device: u8,
+    /// Reused encode buffer for control frames (acks, hellos): the
+    /// control plane runs on every poll, so it must not allocate per
+    /// frame. Payload frames still allocate — their bytes *live* in
+    /// the outbox until acknowledged, which is the reliability
+    /// contract, not a hot-path leak.
+    ctrl_buf: Vec<u8>,
     /// Frames queued while the peer is down (flushed on reconnect).
     pub sent: u64,
     pub replayed: u64,
@@ -71,6 +77,7 @@ impl ReliableTx {
             next_seq: 1,
             outbox: VecDeque::new(),
             device: 0,
+            ctrl_buf: Vec::with_capacity(32),
             sent: 0,
             replayed: 0,
             bytes: 0,
@@ -84,16 +91,20 @@ impl ReliableTx {
         let frame = msg.encode_on(seq, self.device);
         self.bytes += frame.len() as u64;
         self.sent += 1;
-        self.outbox.push_back((seq, frame.clone()));
         // Best-effort immediate transmit; failures are fine — the
         // frame stays in the outbox and is replayed on reconnect.
         let _ = self.transport.send(&frame);
+        self.outbox.push_back((seq, frame));
         Ok(())
     }
 
-    /// Send a control message (outside the reliable stream, seq 0).
+    /// Send a control message (outside the reliable stream, seq 0)
+    /// through the reused scratch buffer — zero allocations per frame.
     fn send_control(&mut self, msg: &Msg) {
-        let _ = self.transport.send(&msg.encode_on(0, self.device));
+        let mut buf = std::mem::take(&mut self.ctrl_buf);
+        msg.encode_into(0, self.device, &mut buf);
+        let _ = self.transport.send(&buf);
+        self.ctrl_buf = buf;
     }
 
     /// Drop acknowledged frames.
@@ -167,6 +178,9 @@ pub struct LinkPair {
     /// multi-device rendezvous fails loudly instead of routing MMIO
     /// to the wrong platform.
     device: u8,
+    /// Reused receive-frame buffer for the poll loop (see
+    /// [`crate::link::Msg::encode_into`]'s allocation notes).
+    rd_scratch: Vec<u8>,
     /// Diagnostic tracing (VMHDL_LINK_TRACE=1).
     trace: bool,
 }
@@ -186,6 +200,7 @@ impl LinkPair {
             peer_session: 0,
             connected: false,
             device: 0,
+            rd_scratch: Vec::with_capacity(64),
             trace: std::env::var("VMHDL_LINK_TRACE").as_deref() == Ok("1"),
         }
     }
@@ -269,7 +284,11 @@ impl LinkPair {
             self.connected = false;
         }
 
-        while let Some(frame) = self.rx.transport.try_recv()? {
+        // Receive through the pair's reused scratch buffer: the frame
+        // bytes never take a per-frame allocation on this path (only
+        // a decoded message's owned payload does).
+        let mut frame = std::mem::take(&mut self.rd_scratch);
+        while self.rx.transport.try_recv_into(&mut frame)? {
             self.rx.bytes += frame.len() as u64;
             let (seq, dev, msg) = match Msg::decode_on(&frame) {
                 Ok(v) => v,
@@ -353,6 +372,7 @@ impl LinkPair {
                 }
             }
         }
+        self.rd_scratch = frame;
         // Piggyback a cumulative ack for anything still pending.
         if self.rx.unacked > 0 {
             self.flush_ack();

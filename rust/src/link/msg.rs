@@ -206,57 +206,67 @@ impl Msg {
     /// device id (multi-device channel multiplexing).
     pub fn encode_on(&self, seq: u64, dev: u8) -> Vec<u8> {
         let mut buf = Vec::with_capacity(32);
-        put_u16(&mut buf, MAGIC);
+        self.encode_into(seq, dev, &mut buf);
+        buf
+    }
+
+    /// Encode into a caller-owned buffer (cleared first). The reliable
+    /// channel's control plane (acks, hellos) runs on every poll, so
+    /// it reuses one scratch buffer through this instead of paying a
+    /// `Vec` allocation per control frame — see
+    /// `channel_throughput`'s allocation notes for the enforcement.
+    pub fn encode_into(&self, seq: u64, dev: u8, buf: &mut Vec<u8>) {
+        buf.clear();
+        put_u16(buf, MAGIC);
         buf.push(VERSION);
         buf.push(self.kind());
         buf.push(dev);
-        put_u64(&mut buf, seq);
+        put_u64(buf, seq);
         match self {
             Msg::MmioRead { tag, bar, addr, len } => {
-                put_u64(&mut buf, *tag);
+                put_u64(buf, *tag);
                 buf.push(*bar);
-                put_u64(&mut buf, *addr);
-                put_u32(&mut buf, *len);
+                put_u64(buf, *addr);
+                put_u32(buf, *len);
             }
             Msg::MmioWrite { bar, addr, data } => {
                 buf.push(*bar);
-                put_u64(&mut buf, *addr);
-                put_bytes(&mut buf, data);
+                put_u64(buf, *addr);
+                put_bytes(buf, data);
             }
             Msg::MmioReadResp { tag, data } => {
-                put_u64(&mut buf, *tag);
-                put_bytes(&mut buf, data);
+                put_u64(buf, *tag);
+                put_bytes(buf, data);
             }
             Msg::DmaRead { tag, addr, len } => {
-                put_u64(&mut buf, *tag);
-                put_u64(&mut buf, *addr);
-                put_u32(&mut buf, *len);
+                put_u64(buf, *tag);
+                put_u64(buf, *addr);
+                put_u32(buf, *len);
             }
             Msg::DmaWrite { addr, data } => {
-                put_u64(&mut buf, *addr);
-                put_bytes(&mut buf, data);
+                put_u64(buf, *addr);
+                put_bytes(buf, data);
             }
             Msg::Interrupt { vector } => {
-                put_u16(&mut buf, *vector);
+                put_u16(buf, *vector);
             }
             Msg::DmaReadResp { tag, data } => {
-                put_u64(&mut buf, *tag);
-                put_bytes(&mut buf, data);
+                put_u64(buf, *tag);
+                put_bytes(buf, data);
             }
             Msg::Tlp { bytes } => {
-                put_bytes(&mut buf, bytes);
+                put_bytes(buf, bytes);
             }
             Msg::Hello { side_is_vm, session, last_seq_seen } => {
                 buf.push(*side_is_vm as u8);
-                put_u64(&mut buf, *session);
-                put_u64(&mut buf, *last_seq_seen);
+                put_u64(buf, *session);
+                put_u64(buf, *last_seq_seen);
             }
             Msg::Ack { up_to } => {
-                put_u64(&mut buf, *up_to);
+                put_u64(buf, *up_to);
             }
             Msg::Bye => {}
         }
-        buf
     }
 
     /// Decode a frame; returns `(seq, msg)`, discarding the device id

@@ -82,6 +82,22 @@ pub trait Transport: Send {
     fn send(&mut self, frame: &[u8]) -> Result<()>;
     /// Non-blocking receive.
     fn try_recv(&mut self) -> Result<Option<Vec<u8>>>;
+    /// Non-blocking receive into a caller-owned buffer (cleared, then
+    /// filled with the frame bytes); returns whether a frame arrived.
+    /// The reliable channel polls through this with one reused
+    /// scratch buffer per pair, so transports with internal
+    /// reassembly buffers (UDS) override it to make the per-frame
+    /// receive allocation-free. The default delegates to `try_recv`.
+    fn try_recv_into(&mut self, out: &mut Vec<u8>) -> Result<bool> {
+        match self.try_recv()? {
+            Some(f) => {
+                out.clear();
+                out.extend_from_slice(&f);
+                Ok(true)
+            }
+            None => Ok(false),
+        }
+    }
     /// True if a receive would make progress right now. Implementations
     /// should pull pending bytes into their buffers (and attempt a
     /// non-blocking reconnect) so an idle waiter observes arrivals.
@@ -237,6 +253,9 @@ pub struct UdsTransport {
     role: UdsRole,
     stream: Option<UnixStream>,
     rdbuf: Vec<u8>,
+    /// Reused header+frame staging buffer for `send` — one syscall's
+    /// worth of bytes, no allocation per frame.
+    wrbuf: Vec<u8>,
     newly_connected: bool,
 }
 
@@ -256,6 +275,7 @@ impl UdsTransport {
             role: UdsRole::Listener(l),
             stream: None,
             rdbuf: Vec::new(),
+            wrbuf: Vec::new(),
             newly_connected: false,
         })
     }
@@ -266,6 +286,7 @@ impl UdsTransport {
             role: UdsRole::Connector(path.to_path_buf()),
             stream: None,
             rdbuf: Vec::new(),
+            wrbuf: Vec::new(),
             newly_connected: false,
         };
         let _ = t.reconnect();
@@ -322,31 +343,46 @@ impl UdsTransport {
 
     /// Pop one complete frame from rdbuf if available.
     fn pop_frame(&mut self) -> Option<Vec<u8>> {
+        let mut out = Vec::new();
+        self.pop_frame_into(&mut out).then_some(out)
+    }
+
+    /// Pop one complete frame from rdbuf into `out` (allocation-free
+    /// once `out`'s capacity has warmed up).
+    fn pop_frame_into(&mut self, out: &mut Vec<u8>) -> bool {
         if self.rdbuf.len() < 4 {
-            return None;
+            return false;
         }
         let n = u32::from_le_bytes(self.rdbuf[..4].try_into().unwrap()) as usize;
         if self.rdbuf.len() < 4 + n {
-            return None;
+            return false;
         }
-        let frame = self.rdbuf[4..4 + n].to_vec();
+        out.clear();
+        out.extend_from_slice(&self.rdbuf[4..4 + n]);
         self.rdbuf.drain(..4 + n);
-        Some(frame)
+        true
     }
 }
 
 impl Transport for UdsTransport {
     fn send(&mut self, frame: &[u8]) -> Result<()> {
-        let Some(s) = self.stream.as_mut() else {
+        if self.stream.is_none() {
             return Err(Error::link("uds not connected"));
-        };
-        let mut hdr = (frame.len() as u32).to_le_bytes().to_vec();
-        hdr.extend_from_slice(frame);
+        }
+        // Length-prefix + frame staged in the reused write buffer (no
+        // per-frame allocation after warmup). Taken out for the write
+        // loop so error arms can drop the stream; error paths may
+        // leave it empty, which merely re-warms on the next send.
+        let mut buf = std::mem::take(&mut self.wrbuf);
+        buf.clear();
+        buf.extend_from_slice(&(frame.len() as u32).to_le_bytes());
+        buf.extend_from_slice(frame);
         // Write fully; the socket is nonblocking, so spin on WouldBlock
         // (frames are small; the peer drains promptly).
         let mut off = 0;
-        while off < hdr.len() {
-            match s.write(&hdr[off..]) {
+        while off < buf.len() {
+            let s = self.stream.as_mut().expect("stream checked above");
+            match s.write(&buf[off..]) {
                 Ok(n) => off += n,
                 Err(e) if e.kind() == ErrorKind::WouldBlock => {
                     std::thread::sleep(Duration::from_micros(20));
@@ -362,6 +398,7 @@ impl Transport for UdsTransport {
                 Err(e) => return Err(e.into()),
             }
         }
+        self.wrbuf = buf;
         Ok(())
     }
 
@@ -371,6 +408,14 @@ impl Transport for UdsTransport {
         }
         self.fill()?;
         Ok(self.pop_frame())
+    }
+
+    fn try_recv_into(&mut self, out: &mut Vec<u8>) -> Result<bool> {
+        if self.pop_frame_into(out) {
+            return Ok(true);
+        }
+        self.fill()?;
+        Ok(self.pop_frame_into(out))
     }
 
     fn connected(&self) -> bool {

@@ -2,9 +2,12 @@
 //!
 //! ```text
 //! vmhdl cosim     [--records N] [--mode mmio|tlp] [--transport inproc|uds]
-//!                 [--devices N] [--shard round-robin|size]
+//!                 [--devices N] [--shard round-robin|size|work-steal]
+//!                 [--queue-depth D] [--device-latency k=cycles[,..]]
 //!                 [--vcd out.vcd] [--golden true] ...   run a full co-simulation
-//!                 (devices > 1 shards the batch across N PCIe FPGAs)
+//!                 (devices > 1 shards the batch across N PCIe FPGAs;
+//!                 queue-depth > 1 pipelines D records per device over
+//!                 a scatter-gather descriptor ring)
 //! vmhdl hdl-side  --dir <sockets> [...]    the HDL simulator process (UDS)
 //! vmhdl vm-side   [--dir <sockets>] [...]  the VM process (UDS)
 //! vmhdl rtt       [--iters N]              MMIO round-trip microbench (Table III)
@@ -103,7 +106,10 @@ fn cmd_cosim(cfg: &Config) -> Result<()> {
     } else {
         None
     };
-    if cfg.devices > 1 {
+    if cfg.devices > 1
+        || cfg.queue_depth > 1
+        || cfg.shard == scenario::ShardPolicy::WorkSteal
+    {
         return cmd_cosim_sharded(cfg, golden.as_deref_mut());
     }
     let rep =
@@ -145,22 +151,24 @@ fn cmd_cosim(cfg: &Config) -> Result<()> {
     Ok(())
 }
 
-/// Multi-device cosim: shard the batch, then report aggregate and
-/// per-device figures.
+/// Multi-device / pipelined cosim: shard the batch, then report
+/// aggregate and per-device figures.
 fn cmd_cosim_sharded(cfg: &Config, golden: Option<&mut dyn GoldenBackend>) -> Result<()> {
-    let (rep, _outs) = scenario::run_sharded_offload(
+    let (rep, _outs) = scenario::run_sharded_offload_depth(
         cfg.cosim()?,
         cfg.records,
         cfg.seed,
         cfg.shard,
+        cfg.queue_depth,
         golden,
     )?;
     println!(
-        "sharded offload: {} records over {} devices ({} policy) in {} wall \
+        "sharded offload: {} records over {} devices ({} policy, depth {}) in {} wall \
          ({:.1} records/s aggregate)",
         rep.records,
         rep.devices,
         rep.policy,
+        rep.queue_depth,
         fmt_dur(rep.wall),
         rep.records as f64 / rep.wall.as_secs_f64().max(1e-9),
     );
@@ -168,7 +176,7 @@ fn cmd_cosim_sharded(cfg: &Config, golden: Option<&mut dyn GoldenBackend>) -> Re
         let ticked = hdl.cycles.saturating_sub(hdl.fast_forwarded_cycles);
         println!(
             "  dev{k}: {} records, {} device-cycles ({} ticked, {} fast-forwarded), \
-             {} busy / {} idle, {} irqs",
+             {} busy / {} idle, {} irqs, {} desc fetches",
             rep.per_device_records[k],
             rep.per_device_cycles[k],
             ticked,
@@ -176,6 +184,7 @@ fn cmd_cosim_sharded(cfg: &Config, golden: Option<&mut dyn GoldenBackend>) -> Re
             fmt_dur(hdl.wall_busy),
             fmt_dur(hdl.wall_idle),
             hdl.irqs_sent,
+            hdl.desc_fetches,
         );
     }
     println!(
@@ -199,7 +208,7 @@ fn cmd_hdl_side(cfg: &Config) -> Result<()> {
     );
     if n == 1 {
         let ep = Endpoint::uds(Side::Hdl, &cfg.socket_dir, session)?;
-        let platform = Platform::new(cc.platform.clone());
+        let platform = Platform::new(vmhdl::coordinator::cosim::platform_cfg_for(&cc, 0));
         // Runs until killed (the supervisor / user stops us).
         let stop = Arc::new(AtomicBool::new(false));
         let cycles = Arc::new(AtomicU64::new(0));
@@ -215,9 +224,10 @@ fn cmd_hdl_side(cfg: &Config) -> Result<()> {
         std::fs::create_dir_all(&devdir)?;
         let mut ep = Endpoint::uds(Side::Hdl, &devdir, session)?;
         ep.set_device_id(k as u8);
-        let mut pcfg = cc.platform.clone();
-        pcfg.device_index = k;
-        lanes.push((Platform::new(pcfg), ep));
+        lanes.push((
+            Platform::new(vmhdl::coordinator::cosim::platform_cfg_for(&cc, k)),
+            ep,
+        ));
     }
     let stop = Arc::new(AtomicBool::new(false));
     let cycles: Vec<_> = (0..n).map(|_| Arc::new(AtomicU64::new(0))).collect();
@@ -231,12 +241,16 @@ fn cmd_hdl_side(cfg: &Config) -> Result<()> {
 fn cmd_vm_side(cfg: &Config) -> Result<()> {
     let mut c2 = cfg.clone();
     c2.transport = "uds".to_string();
-    if cfg.devices > 1 {
-        let (rep, _outs) = scenario::run_sharded_offload(
+    if cfg.devices > 1
+        || cfg.queue_depth > 1
+        || cfg.shard == scenario::ShardPolicy::WorkSteal
+    {
+        let (rep, _outs) = scenario::run_sharded_offload_depth(
             c2.cosim()?,
             cfg.records,
             cfg.seed,
             cfg.shard,
+            cfg.queue_depth,
             None,
         )?;
         println!(

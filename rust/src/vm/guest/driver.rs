@@ -1,11 +1,18 @@
-//! The sorting-offload device driver (kernel-module analogue).
+//! The sorting-offload device drivers (kernel-module analogues).
 //!
 //! Probe sequence, BAR sizing, command-register and MSI setup, DMA
-//! buffer management, descriptor-free (direct register mode) DMA
-//! programming and interrupt handling — the exact code paths a Linux
-//! driver for the paper's platform exercises, expressed over the
-//! [`GuestEnv`] MMIO interface so they run identically against the
-//! HDL simulation and (hypothetically) real hardware.
+//! buffer management, DMA programming and interrupt handling — the
+//! exact code paths a Linux driver for the paper's platform
+//! exercises, expressed over the [`GuestEnv`] MMIO interface so they
+//! run identically against the HDL simulation and (hypothetically)
+//! real hardware. Two programming models, as with the real Xilinx IP:
+//!
+//! * [`SortDriver`] — direct register mode: SA/DA/LENGTH per record,
+//!   one completion interrupt round trip each;
+//! * [`SortDriverSg`] — scatter-gather mode: descriptor rings in
+//!   guest memory keep up to D records outstanding per device
+//!   (`--queue-depth D`), completions reaped from the ring's status
+//!   words in submission order.
 //!
 //! Fault injection ([`FaultInjection`]) reproduces the bug classes the
 //! paper's debugging story is about: forgetting to start a DMA
@@ -14,7 +21,7 @@
 
 use std::time::Duration;
 
-use crate::hdl::dma::{cr, regs as dma_regs, sr};
+use crate::hdl::dma::{cr, desc, regs as dma_regs, sr};
 use crate::hdl::regfile::{regs as rf_regs, ID_VALUE};
 use crate::pcie::board;
 use crate::pcie::config_space::{cmd, regs as cfg_regs};
@@ -112,6 +119,11 @@ pub struct SortDriver {
 /// hung (each sample is one IRQ-wait slice).
 const HANG_STALL_SAMPLES: u32 = 4;
 
+/// How long the polled SG reap waits with zero progress before it
+/// spends an MMIO read probing DMASR for a latched error (fail-fast
+/// on a halted ring without putting MMIO on the healthy wait path).
+const ERR_CHECK_AFTER: Duration = Duration::from_secs(2);
+
 impl SortDriver {
     /// Driver bound to device 0 (the single-device default).
     pub fn new(n: usize) -> Self {
@@ -145,6 +157,25 @@ impl SortDriver {
     /// allocate DMA buffers. Equivalent to the kernel module's
     /// `probe()` + `open()`.
     pub fn probe(&mut self, env: &mut GuestEnv) -> Result<()> {
+        self.probe_platform(env)?;
+
+        env.state("probe:buffers")?;
+        // --- DMA buffers ---
+        self.src = Some(env.vmm.mem.alloc(self.rec_bytes())?);
+        self.dst = Some(env.vmm.mem.alloc(self.rec_bytes())?);
+
+        // --- put both DMA channels in run state ---
+        self.channel_init(env)?;
+        self.state = DriverState::Ready;
+        env.state("probe:done")?;
+        Ok(())
+    }
+
+    /// The mode-independent front half of `probe()`: config-space
+    /// identification, BAR sizing/assignment, MEM+BME, MSI setup, and
+    /// the platform ID / scratch sanity check. Shared by the direct
+    /// driver and [`SortDriverSg`].
+    fn probe_platform(&mut self, env: &mut GuestEnv) -> Result<()> {
         if env.device != self.device {
             return Err(Error::vm(format!(
                 "probe: driver bound to device {} given an env for device {}",
@@ -204,16 +235,6 @@ impl SortDriver {
             return Err(Error::vm(format!("probe: scratch mismatch {back:#x}")));
         }
         self.state = DriverState::Probed;
-
-        env.state("probe:buffers")?;
-        // --- DMA buffers ---
-        self.src = Some(env.vmm.mem.alloc(self.rec_bytes())?);
-        self.dst = Some(env.vmm.mem.alloc(self.rec_bytes())?);
-
-        // --- put both DMA channels in run state ---
-        self.channel_init(env)?;
-        self.state = DriverState::Ready;
-        env.state("probe:done")?;
         Ok(())
     }
 
@@ -451,6 +472,461 @@ impl SortDriver {
     }
 }
 
+/// One ring slot of the SG driver: a source/destination buffer pair
+/// plus the guest addresses of its MM2S and S2MM descriptors.
+#[derive(Debug, Clone, Copy)]
+struct SgSlot {
+    src: DmaBuf,
+    dst: DmaBuf,
+    mm2s_desc: u64,
+    s2mm_desc: u64,
+}
+
+/// Scatter-gather sorting driver: keeps up to `depth` records
+/// outstanding per device over descriptor rings in guest memory.
+///
+/// Where [`SortDriver`] programs SA/DA/LENGTH and takes one interrupt
+/// round trip *per record*, this driver builds two circular rings of
+/// [`crate::hdl::dma::desc`]-format descriptors (one per channel, one
+/// slot per in-flight record), arms the DMA's SG engines once at
+/// probe, and afterwards only:
+///
+/// * **submit**: stage the input, clear the slot's status words, bump
+///   both TAILDESC registers (two posted MMIO writes per channel) —
+///   the device starts fetching immediately and pipelines the record
+///   behind whatever is already in flight;
+/// * **reap**: poll the oldest slot's S2MM descriptor status word in
+///   guest memory (`Cmplt` is written back by the device *before* the
+///   completion MSI), read the result, acknowledge the IRQ.
+///
+/// Completions are reaped oldest-first, so results always come back
+/// in submission order per device even though the device runs several
+/// records at once. `depth == 1` degenerates to the direct driver's
+/// schedule with descriptor-fetch overhead.
+pub struct SortDriverSg {
+    /// Shared probe/identify/hang machinery (also carries `n`,
+    /// `device`, `timeout`, `stats` and the fault-injection knobs).
+    pub drv: SortDriver,
+    /// Ring depth: max records outstanding on this device.
+    pub depth: usize,
+    /// S2MM IOC coalescing threshold programmed into DMACR (1 = an
+    /// interrupt per record; larger values batch completions and the
+    /// engine's stop-at-tail flush covers the final partial batch).
+    pub irq_threshold: u32,
+    ring_mm2s: Option<DmaBuf>,
+    ring_s2mm: Option<DmaBuf>,
+    slots: Vec<SgSlot>,
+    /// Next slot to submit into / oldest in-flight slot.
+    head: usize,
+    tail: usize,
+    in_flight: usize,
+}
+
+impl SortDriverSg {
+    /// Driver for device `device` with ring depth `depth` (≥ 1).
+    pub fn new(n: usize, device: usize, depth: usize) -> Self {
+        assert!(depth >= 1, "queue depth must be at least 1");
+        Self {
+            drv: SortDriver::for_device(n, device),
+            depth,
+            irq_threshold: 1,
+            ring_mm2s: None,
+            ring_s2mm: None,
+            slots: Vec::new(),
+            head: 0,
+            tail: 0,
+            in_flight: 0,
+        }
+    }
+
+    /// Records currently outstanding on the device.
+    pub fn in_flight(&self) -> usize {
+        self.in_flight
+    }
+
+    /// True if another record can be submitted without reaping first.
+    pub fn can_submit(&self) -> bool {
+        self.in_flight < self.depth
+    }
+
+    /// Probe the device and build both descriptor rings: platform
+    /// identification as in [`SortDriver::probe`], then per-slot
+    /// buffers, ring construction in guest memory, and SG channel
+    /// bring-up (CURDESC while halted → RS + IRQ threshold).
+    pub fn probe(&mut self, env: &mut GuestEnv) -> Result<()> {
+        self.drv.probe_platform(env)?;
+
+        env.state("probe:sg-rings")?;
+        let rec = self.drv.rec_bytes();
+        // Rings need 64-byte alignment; the allocator guarantees 16.
+        let ring_bytes = self.depth as u32 * desc::SIZE + (desc::ALIGN as u32 - 16);
+        let ring_mm2s = env.vmm.mem.alloc(ring_bytes)?;
+        let ring_s2mm = env.vmm.mem.alloc(ring_bytes)?;
+        let mm2s_base = align_up(ring_mm2s.addr, desc::ALIGN);
+        let s2mm_base = align_up(ring_s2mm.addr, desc::ALIGN);
+        self.ring_mm2s = Some(ring_mm2s);
+        self.ring_s2mm = Some(ring_s2mm);
+        self.slots.clear();
+        for i in 0..self.depth {
+            self.slots.push(SgSlot {
+                src: env.vmm.mem.alloc(rec)?,
+                dst: env.vmm.mem.alloc(rec)?,
+                mm2s_desc: mm2s_base + (i as u64) * desc::SIZE as u64,
+                s2mm_desc: s2mm_base + (i as u64) * desc::SIZE as u64,
+            });
+        }
+        // Write the circular descriptor chains. Lengths are fixed per
+        // record, so CONTROL is set once here; submit only refreshes
+        // the status words (and the input data).
+        let len = if self.drv.faults.bad_length { rec - 4 } else { rec };
+        for i in 0..self.depth {
+            let next = (i + 1) % self.depth;
+            let s = self.slots[i];
+            write_descriptor(
+                env,
+                s.mm2s_desc,
+                self.slots[next].mm2s_desc,
+                s.src.addr,
+                len | desc::CTRL_SOF | desc::CTRL_EOF,
+            )?;
+            write_descriptor(env, s.s2mm_desc, self.slots[next].s2mm_desc, s.dst.addr, len)?;
+        }
+
+        env.state("probe:sg-channels")?;
+        // Bring up both channels in SG mode: reset, CURDESC while
+        // halted, then run with the IOC/ERR enables and the
+        // coalescing threshold. MM2S completions are implied by S2MM
+        // completions (in-order data path), so only errors interrupt
+        // on the read side — half the IRQ load of direct mode.
+        let thresh = (self.irq_threshold.clamp(1, 0xFF)) << cr::IRQ_THRESHOLD_SHIFT;
+        for (cr_reg, cur_reg, cur_msb, desc0, irq_en) in [
+            (
+                dma_regs::MM2S_DMACR,
+                dma_regs::MM2S_CURDESC,
+                dma_regs::MM2S_CURDESC_MSB,
+                self.slots[0].mm2s_desc,
+                cr::ERR_IRQ_EN,
+            ),
+            (
+                dma_regs::S2MM_DMACR,
+                dma_regs::S2MM_CURDESC,
+                dma_regs::S2MM_CURDESC_MSB,
+                self.slots[0].s2mm_desc,
+                cr::IOC_IRQ_EN | cr::ERR_IRQ_EN,
+            ),
+        ] {
+            env.write32(0, DMA_BASE + cr_reg as u64, cr::RESET)?;
+            env.write32(0, DMA_BASE + cur_msb as u64, (desc0 >> 32) as u32)?;
+            env.write32(0, DMA_BASE + cur_reg as u64, desc0 as u32)?;
+            if !self.drv.faults.skip_run_start {
+                env.write32(0, DMA_BASE + cr_reg as u64, cr::RS | irq_en | thresh)?;
+            }
+        }
+        self.drv.state = DriverState::Ready;
+        env.state("probe:done")?;
+        Ok(())
+    }
+
+    /// Submit one record into the next free ring slot (two posted
+    /// TAILDESC bumps per channel — no completion wait). Errors if the
+    /// ring is full; check [`SortDriverSg::can_submit`] first.
+    pub fn submit_record(&mut self, env: &mut GuestEnv, data: &[i32]) -> Result<()> {
+        if !self.can_submit() {
+            return Err(Error::vm(format!(
+                "submit_record: ring full ({} of {} in flight)",
+                self.in_flight, self.depth
+            )));
+        }
+        if data.len() != self.drv.n {
+            return Err(Error::vm(format!(
+                "record length {} != hardware N {}",
+                data.len(),
+                self.drv.n
+            )));
+        }
+        let slot = self.slots[self.head];
+        env.state("xfer:sg-stage")?;
+        env.vmm.mem.write_i32(slot.src.addr, data)?;
+        // Re-arm the slot: the SG engine treats a still-set Cmplt as
+        // the stale-descriptor error, so clear both status words
+        // before moving the tails past them.
+        for d in [slot.mm2s_desc, slot.s2mm_desc] {
+            env.vmm.mem.write(d + desc::OFF_STATUS as u64, &0u32.to_le_bytes())?;
+        }
+        env.state("xfer:sg-submit")?;
+        // S2MM first (sink armed before the source streams), then
+        // MM2S — same ordering discipline as the direct driver.
+        env.write32(
+            0,
+            DMA_BASE + dma_regs::S2MM_TAILDESC_MSB as u64,
+            (slot.s2mm_desc >> 32) as u32,
+        )?;
+        env.write32(0, DMA_BASE + dma_regs::S2MM_TAILDESC as u64, slot.s2mm_desc as u32)?;
+        env.write32(
+            0,
+            DMA_BASE + dma_regs::MM2S_TAILDESC_MSB as u64,
+            (slot.mm2s_desc >> 32) as u32,
+        )?;
+        env.write32(0, DMA_BASE + dma_regs::MM2S_TAILDESC as u64, slot.mm2s_desc as u32)?;
+        self.head = (self.head + 1) % self.depth;
+        self.in_flight += 1;
+        self.drv.state = DriverState::Submitted;
+        Ok(())
+    }
+
+    /// Non-blocking reap of the **oldest** outstanding record: drains
+    /// pending device traffic, then polls the slot's S2MM descriptor
+    /// status in guest memory. Deliberately MMIO-free — the completion
+    /// writeback lands in coherent DMA memory *before* the MSI,
+    /// exactly the ordering a real driver's completion-ring poll
+    /// relies on. Interrupt acknowledgement is separate
+    /// ([`SortDriverSg::ack_completions`]) so a caller can choose when
+    /// the ack's MMIO lands (see the determinism note there).
+    pub fn try_reap(&mut self, env: &mut GuestEnv) -> Result<Option<Vec<i32>>> {
+        if self.in_flight == 0 {
+            return Ok(None);
+        }
+        // Apply any delivered-but-unprocessed DMA writes first, so a
+        // completion that is already on the link becomes visible.
+        env.vmm.poll()?;
+        let slot = self.slots[self.tail];
+        let status = read_u32(env, slot.s2mm_desc + desc::OFF_STATUS as u64)?;
+        if status & desc::STS_CMPLT == 0 {
+            return Ok(None);
+        }
+        let out = env.vmm.mem.read_i32(slot.dst.addr, self.drv.n)?;
+        self.tail = (self.tail + 1) % self.depth;
+        self.in_flight -= 1;
+        self.drv.stats.records += 1;
+        if self.in_flight == 0 {
+            self.drv.state = DriverState::Complete;
+        }
+        Ok(Some(out))
+    }
+
+    /// Acknowledge latched completion interrupts (W1C on S2MM DMASR)
+    /// so the level `introut` re-arms and the next completion edges a
+    /// fresh MSI.
+    ///
+    /// Determinism note: this is the only *control* MMIO of the reap
+    /// path, and an MMIO transaction that lands while the device
+    /// pipeline is mid-flight may share ticks with data-path work
+    /// (wall-timing dependent), whereas one landing on a quiesced
+    /// device always costs its full serialized cycles. Callers that
+    /// care about bit-identical per-device cycle counts (the static
+    /// shard policies) therefore ack once per *drained* ring; the
+    /// work-steal runner acks per reap sweep and accepts
+    /// schedule-dependent cycles.
+    pub fn ack_completions(&mut self, env: &mut GuestEnv) -> Result<()> {
+        if self.drv.faults.skip_irq_ack {
+            return Ok(());
+        }
+        env.write32(
+            0,
+            DMA_BASE + dma_regs::S2MM_DMASR as u64,
+            sr::IOC_IRQ | sr::ERR_IRQ,
+        )
+    }
+
+    /// Blocking reap of the oldest outstanding record by **memory
+    /// polling only**: no MMIO on the wait path (the wait blocks on
+    /// the link doorbell — a completion writeback is itself the wake
+    /// signal). This is what keeps a pipelined device's cycle count a
+    /// pure function of its record schedule: the device sees only
+    /// ring submissions, its own data path, and batch-boundary acks.
+    ///
+    /// On timeout the ring registers are read *then* (the run is
+    /// already broken) and folded into the error — CURDESC/TAILDESC
+    /// and DMASR are exactly what to stare at for a wedged ring.
+    pub fn reap_record_polled(&mut self, env: &mut GuestEnv) -> Result<Vec<i32>> {
+        if self.in_flight == 0 {
+            return Err(Error::vm("reap_record_polled with nothing in flight".to_string()));
+        }
+        env.state("xfer:sg-wait")?;
+        let deadline = std::time::Instant::now() + self.drv.timeout;
+        let slice = Duration::from_millis(10);
+        // A halted ring (SGIntErr / DMAIntErr) never completes, so the
+        // wait also samples DMASR for latched errors — but only after
+        // seconds of no progress: a healthy record completes orders of
+        // magnitude faster, so the error probe's MMIO never lands on a
+        // healthy pipeline (the determinism property of this path).
+        let mut next_err_check = std::time::Instant::now() + ERR_CHECK_AFTER;
+        loop {
+            if let Some(out) = self.try_reap(env)? {
+                env.state("xfer:sg-readback")?;
+                return Ok(out);
+            }
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                return Err(self.ring_stuck_error(env));
+            }
+            if now >= next_err_check {
+                next_err_check = now + ERR_CHECK_AFTER;
+                for reg in [dma_regs::S2MM_DMASR, dma_regs::MM2S_DMASR] {
+                    let s = env.read32(0, DMA_BASE + reg as u64)?;
+                    if s & (sr::DMA_INT_ERR | sr::SG_INT_ERR) != 0 {
+                        self.drv.state = DriverState::Failed;
+                        return Err(Error::vm(format!(
+                            "SG channel error while polling (DMASR={s:#x} at \
+                             {reg:#x}) — see DEBUGGING.md §stuck descriptor ring"
+                        )));
+                    }
+                }
+            }
+            // Block for any device traffic (shared doorbell on
+            // multi-device VMMs, so neighbours' service is never
+            // starved — the next try_reap's poll answers them all).
+            let _ = env.dev_mut().link_mut().wait_any_shared(slice)?;
+        }
+    }
+
+    /// Diagnostic error for a ring that never completed: sample the
+    /// SG registers so the report says where the engine wedged.
+    pub(crate) fn ring_stuck_error(&mut self, env: &mut GuestEnv) -> Error {
+        self.drv.state = DriverState::Failed;
+        let rd = |env: &mut GuestEnv, reg: u32| -> u64 {
+            env.read32(0, DMA_BASE + reg as u64).map(u64::from).unwrap_or(u64::MAX)
+        };
+        let s2mm_sr = rd(env, dma_regs::S2MM_DMASR);
+        let cur = rd(env, dma_regs::S2MM_CURDESC);
+        let tail_reg = rd(env, dma_regs::S2MM_TAILDESC);
+        Error::cosim(format!(
+            "SG completion never arrived with {} in flight — stuck descriptor \
+             ring? S2MM DMASR={s2mm_sr:#x} CURDESC={cur:#x} TAILDESC={tail_reg:#x} \
+             (see DEBUGGING.md §stuck descriptor ring)",
+            self.in_flight
+        ))
+    }
+
+    /// Blocking reap of the oldest outstanding record: waits on the
+    /// completion interrupt (with the same cycle-based hang detection
+    /// as the direct driver's `wait_complete`) and returns the sorted
+    /// record in submission order.
+    pub fn reap_record(&mut self, env: &mut GuestEnv) -> Result<Vec<i32>> {
+        if self.in_flight == 0 {
+            return Err(Error::vm("reap_record with nothing in flight".to_string()));
+        }
+        env.state("xfer:sg-wait")?;
+        let slice = self.drv.timeout.min(Duration::from_millis(50));
+        let mut deadline = std::time::Instant::now() + self.drv.timeout;
+        let hard_deadline = std::time::Instant::now() + self.drv.timeout * 10;
+        let mut last_cycles: Option<u64> = None;
+        let mut stalled = 0u32;
+        loop {
+            if let Some(out) = self.try_reap(env)? {
+                // Re-arm the completion MSI for the records behind us.
+                self.ack_completions(env)?;
+                env.state("xfer:sg-readback")?;
+                return Ok(out);
+            }
+            match env.wait_irq(slice)? {
+                Some(IRQ_S2MM) => {
+                    self.drv.stats.irqs_taken += 1;
+                    // Completion (or error) signalled: the next
+                    // try_reap observes the written-back status. Check
+                    // for latched errors while we are here.
+                    let s = env.read32(0, DMA_BASE + dma_regs::S2MM_DMASR as u64)?;
+                    self.drv.stats.mmio_reads += 1;
+                    if s & (sr::DMA_INT_ERR | sr::SG_INT_ERR) != 0 {
+                        self.drv.state = DriverState::Failed;
+                        return Err(Error::vm(format!("S2MM SG error, DMASR={s:#x}")));
+                    }
+                }
+                Some(IRQ_MM2S) => {
+                    self.drv.stats.irqs_taken += 1;
+                    // Read-side errors only (IOC is off for MM2S).
+                    let s = env.read32(0, DMA_BASE + dma_regs::MM2S_DMASR as u64)?;
+                    self.drv.stats.mmio_reads += 1;
+                    if s & (sr::DMA_INT_ERR | sr::SG_INT_ERR) != 0 {
+                        self.drv.state = DriverState::Failed;
+                        return Err(Error::vm(format!("MM2S SG error, DMASR={s:#x}")));
+                    }
+                    env.write32(
+                        0,
+                        DMA_BASE + dma_regs::MM2S_DMASR as u64,
+                        sr::IOC_IRQ | sr::ERR_IRQ,
+                    )?;
+                }
+                Some(_) => {}
+                None => {
+                    // Same cycle-based hang detection as the direct
+                    // driver: a frozen counter across several slices
+                    // is a hang; progress extends the wall deadline.
+                    let now_c = self.drv.read_cycles(env)?;
+                    let progressed = last_cycles
+                        .is_some_and(|c| now_c.saturating_sub(c) > self.drv.hang_progress_cycles);
+                    let first = last_cycles.is_none();
+                    last_cycles = Some(now_c);
+                    if progressed || first {
+                        stalled = 0;
+                        deadline = std::time::Instant::now() + self.drv.timeout;
+                    } else {
+                        stalled += 1;
+                    }
+                    let now = std::time::Instant::now();
+                    if stalled >= HANG_STALL_SAMPLES || now >= deadline.min(hard_deadline) {
+                        self.drv.state = DriverState::Failed;
+                        return Err(Error::cosim(format!(
+                            "SG completion never arrived — device cycle counter \
+                             frozen at {now_c} with {} in flight (stuck \
+                             descriptor ring? read CURDESC/TAILDESC — see \
+                             DEBUGGING.md)",
+                            self.in_flight
+                        )));
+                    }
+                }
+            }
+        }
+    }
+
+    /// Release rings and buffers (module unload analogue).
+    pub fn release(&mut self, env: &mut GuestEnv) -> Result<()> {
+        for s in self.slots.drain(..) {
+            env.vmm.mem.free(s.src);
+            env.vmm.mem.free(s.dst);
+        }
+        if let Some(b) = self.ring_mm2s.take() {
+            env.vmm.mem.free(b);
+        }
+        if let Some(b) = self.ring_s2mm.take() {
+            env.vmm.mem.free(b);
+        }
+        self.head = 0;
+        self.tail = 0;
+        self.in_flight = 0;
+        self.drv.state = DriverState::Unbound;
+        Ok(())
+    }
+}
+
+fn align_up(addr: u64, align: u64) -> u64 {
+    (addr + align - 1) & !(align - 1)
+}
+
+fn read_u32(env: &GuestEnv, addr: u64) -> Result<u32> {
+    let raw = env.vmm.mem.read(addr, 4)?;
+    Ok(u32::from_le_bytes(raw.try_into().unwrap()))
+}
+
+/// Write one 64-byte SG descriptor into guest memory.
+fn write_descriptor(
+    env: &mut GuestEnv,
+    at: u64,
+    nxt: u64,
+    buf: u64,
+    ctrl: u32,
+) -> Result<()> {
+    let mut d = [0u8; desc::SIZE as usize];
+    d[desc::OFF_NXT..desc::OFF_NXT + 4].copy_from_slice(&(nxt as u32).to_le_bytes());
+    d[desc::OFF_NXT_MSB..desc::OFF_NXT_MSB + 4]
+        .copy_from_slice(&((nxt >> 32) as u32).to_le_bytes());
+    d[desc::OFF_BUF..desc::OFF_BUF + 4].copy_from_slice(&(buf as u32).to_le_bytes());
+    d[desc::OFF_BUF_MSB..desc::OFF_BUF_MSB + 4]
+        .copy_from_slice(&((buf >> 32) as u32).to_le_bytes());
+    d[desc::OFF_CTRL..desc::OFF_CTRL + 4].copy_from_slice(&ctrl.to_le_bytes());
+    env.vmm.mem.write(at, &d)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -480,5 +956,26 @@ mod tests {
         let mut drv = SortDriver::new(8);
         let err = drv.sort_record(&mut env, &[0; 8]).unwrap_err();
         assert!(err.to_string().contains("state"));
+    }
+
+    #[test]
+    fn sg_submit_rejects_full_ring_and_bad_length() {
+        let (vm_ep, _hdl) = Endpoint::inproc_pair();
+        let mut vmm = Vmm::new(vm_ep, LinkMode::Mmio, 64 * 1024);
+        let mut hook = NoopHook;
+        let mut env = GuestEnv::new(&mut vmm, &mut hook);
+        let mut drv = SortDriverSg::new(4, 0, 1);
+        // Wrong record length is rejected before touching the ring.
+        let err = drv.submit_record(&mut env, &[1, 2, 3]).unwrap_err();
+        assert!(err.to_string().contains("record length"), "{err}");
+        // A full ring is rejected with the occupancy in the message.
+        drv.in_flight = 1;
+        let err = drv.submit_record(&mut env, &[1, 2, 3, 4]).unwrap_err();
+        assert!(err.to_string().contains("ring full"), "{err}");
+        assert!(!drv.can_submit());
+        assert_eq!(drv.in_flight(), 1);
+        // Reaping with nothing genuinely complete cannot invent data.
+        drv.in_flight = 0;
+        assert!(drv.try_reap(&mut env).unwrap().is_none());
     }
 }

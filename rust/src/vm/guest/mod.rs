@@ -10,4 +10,4 @@
 pub mod app;
 pub mod driver;
 
-pub use driver::{CompletionMode, DriverState, FaultInjection, SortDriver};
+pub use driver::{CompletionMode, DriverState, FaultInjection, SortDriver, SortDriverSg};
