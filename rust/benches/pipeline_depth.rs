@@ -19,7 +19,19 @@
 //!     asserting, so one noisy CI scheduling burp does not red the
 //!     build while a real regression still does.
 //!
-//! Machine-readable output: the full grid is also written as JSON to
+//! Extra rows beyond the grid:
+//!   * hetero sorter-latency (cycles-visible heterogeneity, reported);
+//!   * hetero **link latency** (`--device-link-latency`): wall-visible
+//!     heterogeneity — asserted: work-steal routes strictly more of
+//!     the batch to the clean-wire device (one re-measure absorbs a
+//!     noisy scheduler);
+//!   * **mixed fleet** (2×sort + 1×checksum + 1×stats at N=4, D=2,
+//!     static and work-steal): every record verified against the
+//!     matching golden op by the runner; the row pins that every
+//!     device participates and the batch sums up.
+//!
+//! Machine-readable output: the full grid (plus the mixed-fleet and
+//! link-latency rows) is also written as JSON to
 //! `BENCH_pipeline.json` (override with `VMHDL_BENCH_JSON=path`), and
 //! CI uploads it as an artifact — this is the file EXPERIMENTS.md
 //! §Perf snapshots come from.
@@ -215,6 +227,93 @@ fn main() {
         );
     }
 
+    // The *wall-visible* heterogeneity row: device 1's link pays a
+    // modelled per-message latency, so its slowness costs records/s,
+    // not only device cycles — and work-steal must route around it.
+    // Asserted (with one re-measure to absorb scheduler noise):
+    // under work-steal the clean-wire device takes strictly more of
+    // the batch than the slow-wire device.
+    let het_link = |policy: ShardPolicy| {
+        let mut cfg = Config { devices: 2, queue_depth: 4, ..Config::default() };
+        cfg.device_link_latency = vec![(1, 400)]; // µs per payload message
+        scenario::run_sharded_offload_depth(
+            cfg.cosim().unwrap(),
+            RECORDS,
+            SEED,
+            policy,
+            4,
+            None,
+        )
+        .expect("hetero link cell failed")
+    };
+    println!("\nheterogeneous link latency (dev1 wire +400us/msg), N=2, D=4:");
+    let mut steal_split = (0usize, 0usize);
+    for attempt in 0..2 {
+        let (rr, outs_rr) = het_link(ShardPolicy::RoundRobin);
+        let (ws, outs_ws) = het_link(ShardPolicy::WorkSteal);
+        assert_eq!(outs_rr, baseline, "link-latency RR outputs diverged");
+        assert_eq!(outs_ws, baseline, "link-latency WS outputs diverged");
+        println!(
+            "  round-robin  {:>10} wall ({:>6.1} rec/s), records {:?}\n  \
+             work-steal   {:>10} wall ({:>6.1} rec/s), records {:?}",
+            fmt_dur(rr.wall),
+            rr.records as f64 / rr.wall.as_secs_f64().max(1e-9),
+            rr.per_device_records,
+            fmt_dur(ws.wall),
+            ws.records as f64 / ws.wall.as_secs_f64().max(1e-9),
+            ws.per_device_records,
+        );
+        steal_split = (ws.per_device_records[0], ws.per_device_records[1]);
+        if steal_split.0 > steal_split.1 {
+            break;
+        }
+        if attempt == 0 {
+            eprintln!("work-steal split {steal_split:?} not divergent; re-measuring once");
+        }
+    }
+    assert!(
+        steal_split.0 > steal_split.1,
+        "work-steal must favour the clean wire: dev0 took {} records, \
+         slow-wire dev1 took {}",
+        steal_split.0,
+        steal_split.1
+    );
+
+    // Mixed-fleet row (the heterogeneous-kernel scenario): N=4 with
+    // 2×sort + 1×checksum + 1×stats, static and work-steal. Every
+    // record is verified against the matching GoldenBackend op inside
+    // the runner; here we pin fleet shape and participation.
+    println!("\nmixed fleet (2x sort, 1x checksum, 1x stats), N=4, D=2:");
+    let mut mixed_rows: Vec<(ShardPolicy, f64, Vec<usize>)> = Vec::new();
+    for policy in [ShardPolicy::RoundRobin, ShardPolicy::WorkSteal] {
+        let mut cfg = Config { devices: 4, queue_depth: 2, ..Config::default() };
+        cfg.set("kernel", "2=checksum,3=stats").unwrap();
+        let (rep, outs) = scenario::run_sharded_offload_depth(
+            cfg.cosim().unwrap(),
+            RECORDS,
+            SEED,
+            policy,
+            2,
+            None,
+        )
+        .expect("mixed-fleet cell failed");
+        assert_eq!(outs.len(), RECORDS);
+        assert_eq!(rep.per_device_records.iter().sum::<usize>(), RECORDS);
+        assert!(
+            rep.per_device_records.iter().all(|&r| r > 0),
+            "{policy}: some device sat out the mixed fleet: {:?}",
+            rep.per_device_records
+        );
+        let rate = rep.records as f64 / rep.wall.as_secs_f64().max(1e-9);
+        println!(
+            "  {policy:<12} {:>10} wall ({rate:>6.1} rec/s), records {:?}, cycles {:?}",
+            fmt_dur(rep.wall),
+            rep.per_device_records,
+            rep.per_device_cycles,
+        );
+        mixed_rows.push((policy, rate, rep.per_device_records.clone()));
+    }
+
     // Machine-readable grid for the CI artifact / EXPERIMENTS.md.
     let mut json = String::new();
     let _ = write!(
@@ -229,7 +328,24 @@ fn main() {
         }
         json.push_str(&json_cell(c));
     }
-    json.push_str("]}");
+    json.push_str("],\"mixed_fleet\":[");
+    for (i, (policy, rate, recs)) in mixed_rows.iter().enumerate() {
+        if i > 0 {
+            json.push(',');
+        }
+        let recs: Vec<String> = recs.iter().map(|v| v.to_string()).collect();
+        let _ = write!(
+            json,
+            "{{\"policy\":\"{policy}\",\"records_per_s\":{rate:.2},\
+             \"per_device_records\":[{}]}}",
+            recs.join(",")
+        );
+    }
+    let _ = write!(
+        json,
+        "],\"link_latency_ws_split\":[{},{}]}}",
+        steal_split.0, steal_split.1
+    );
     let path = std::env::var("VMHDL_BENCH_JSON")
         .unwrap_or_else(|_| "BENCH_pipeline.json".to_string());
     std::fs::write(&path, &json).expect("write bench json");

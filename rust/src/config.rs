@@ -10,8 +10,8 @@ use std::time::Duration;
 
 use crate::coordinator::cosim::{CoSimCfg, TransportKind};
 use crate::coordinator::scenario::ShardPolicy;
+use crate::hdl::kernel::{KernelCfg, KernelKind};
 use crate::hdl::platform::PlatformCfg;
-use crate::hdl::sorter::SorterCfg;
 use crate::link::LinkMode;
 use crate::runtime::BackendKind;
 use crate::{Error, Result};
@@ -40,8 +40,24 @@ pub struct Config {
     pub socket_dir: PathBuf,
     /// Record length in words.
     pub n: usize,
-    /// Sorter pipeline latency (cycles).
+    /// Stream kernel every device carries unless overridden per
+    /// device (`--kernel sort|checksum|stats`, or `--kernel k=kind`
+    /// for device k — repeatable / comma-separable).
+    pub kernel: KernelKind,
+    /// Kernel pipeline latency in cycles (`--sorter-latency`, kept
+    /// under its historical name). Applies to devices with the
+    /// template geometry; a device whose kernel or record length is
+    /// overridden gets that geometry's default latency instead unless
+    /// `--device-latency` pins it. When the flag is *not* given
+    /// (`sorter_latency_set` false), the template latency is derived
+    /// from the template kernel and `n` — so `--kernel checksum` and
+    /// `--kernel 0=checksum --kernel 1=checksum` model the identical
+    /// fleet. The all-defaults sorter still resolves to the paper's
+    /// 1256.
     pub sorter_latency: u64,
+    /// Whether `--sorter-latency` was given explicitly (see
+    /// [`Config::sorter_latency`]).
+    pub sorter_latency_set: bool,
     /// Records per workload.
     pub records: usize,
     /// Workload RNG seed.
@@ -73,10 +89,23 @@ pub struct Config {
     /// direct-register driver, > 1 = the SG descriptor-ring driver
     /// with a D-slot ring per device.
     pub queue_depth: usize,
-    /// Per-device sorter-latency overrides (`--device-latency
+    /// Per-device kernel-latency overrides (`--device-latency
     /// k=cycles[,k=cycles...]`, repeatable): heterogeneous topologies
-    /// where device k's sorter takes a different number of cycles.
+    /// where device k's kernel takes a different number of cycles.
     pub device_latency: Vec<(usize, u64)>,
+    /// Per-device stream-kernel overrides (`--kernel k=kind`): the
+    /// heterogeneous-fleet knob — device k carries a different compute
+    /// core (sort / checksum / stats) on the same topology.
+    pub device_kernel: Vec<(usize, KernelKind)>,
+    /// Per-device record-length overrides (`--device-n k=N`): device k
+    /// is elaborated (and its driver probed) for a different record
+    /// length.
+    pub device_n: Vec<(usize, usize)>,
+    /// Per-device link-latency overrides in microseconds
+    /// (`--device-link-latency k=us`): a wall-visible slow wire on
+    /// device k's link — the knob that makes work-steal divergence
+    /// show up in records/s.
+    pub device_link_latency: Vec<(usize, u64)>,
 }
 
 impl Default for Config {
@@ -86,7 +115,9 @@ impl Default for Config {
             transport: "inproc".to_string(),
             socket_dir: std::env::temp_dir().join("vmhdl-sockets"),
             n: 1024,
+            kernel: KernelKind::Sort,
             sorter_latency: 1256,
+            sorter_latency_set: false,
             records: 4,
             seed: 0xC0FFEE,
             ram_size: 4 << 20,
@@ -101,8 +132,36 @@ impl Default for Config {
             shard: ShardPolicy::RoundRobin,
             queue_depth: 1,
             device_latency: Vec::new(),
+            device_kernel: Vec::new(),
+            device_n: Vec::new(),
+            device_link_latency: Vec::new(),
         }
     }
+}
+
+/// Parse one `k=value` override list (`1=checksum,3=stats`): calls
+/// `put(k, v)` per entry, with later entries for the same device
+/// winning (the caller's `put` handles the retain-then-push).
+fn parse_overrides<T, F>(value: &str, what: &str, mut put: F) -> Result<()>
+where
+    T: std::str::FromStr,
+    F: FnMut(usize, T),
+{
+    for part in value.split(',') {
+        let (k, v) = part.split_once('=').ok_or_else(|| {
+            Error::config(format!("bad {what}: {part:?} (want k=value)"))
+        })?;
+        let k: usize = k
+            .trim()
+            .parse()
+            .map_err(|_| Error::config(format!("bad {what} device index: {part:?}")))?;
+        let v: T = v
+            .trim()
+            .parse()
+            .map_err(|_| Error::config(format!("bad {what} value: {part:?}")))?;
+        put(k, v);
+    }
+    Ok(())
 }
 
 impl Config {
@@ -119,8 +178,36 @@ impl Config {
             }
             "socket-dir" | "dir" => self.socket_dir = PathBuf::from(value),
             "n" => self.n = value.parse().map_err(|_| bad("n"))?,
+            "kernel" => {
+                // Either a bare kind ("checksum" — every device) or a
+                // per-device list ("1=checksum,2=stats").
+                if value.contains('=') {
+                    let dk = &mut self.device_kernel;
+                    parse_overrides::<KernelKind, _>(value, "kernel", |k, v| {
+                        dk.retain(|&(i, _)| i != k);
+                        dk.push((k, v));
+                    })?;
+                } else {
+                    self.kernel = value.parse()?;
+                }
+            }
+            "device-n" => {
+                let dn = &mut self.device_n;
+                parse_overrides::<usize, _>(value, "device-n", |k, v| {
+                    dn.retain(|&(i, _)| i != k);
+                    dn.push((k, v));
+                })?;
+            }
+            "device-link-latency" => {
+                let dl = &mut self.device_link_latency;
+                parse_overrides::<u64, _>(value, "device-link-latency", |k, v| {
+                    dl.retain(|&(i, _)| i != k);
+                    dl.push((k, v));
+                })?;
+            }
             "sorter-latency" => {
-                self.sorter_latency = value.parse().map_err(|_| bad("sorter-latency"))?
+                self.sorter_latency = value.parse().map_err(|_| bad("sorter-latency"))?;
+                self.sorter_latency_set = true;
             }
             "records" => self.records = value.parse().map_err(|_| bad("records"))?,
             "seed" => {
@@ -158,21 +245,11 @@ impl Config {
                 self.queue_depth = d;
             }
             "device-latency" => {
-                // `k=cycles`, comma-separable and repeatable; later
-                // entries for the same device win.
-                for part in value.split(',') {
-                    let (k, cyc) = part
-                        .split_once('=')
-                        .ok_or_else(|| bad("device-latency (want k=cycles)"))?;
-                    let k: usize =
-                        k.trim().parse().map_err(|_| bad("device-latency index"))?;
-                    let cyc: u64 = cyc
-                        .trim()
-                        .parse()
-                        .map_err(|_| bad("device-latency cycles"))?;
-                    self.device_latency.retain(|&(i, _)| i != k);
-                    self.device_latency.push((k, cyc));
-                }
+                let dl = &mut self.device_latency;
+                parse_overrides::<u64, _>(value, "device-latency", |k, v| {
+                    dl.retain(|&(i, _)| i != k);
+                    dl.push((k, v));
+                })?;
             }
             other => return Err(Error::config(format!("unknown option {other:?}"))),
         }
@@ -216,6 +293,21 @@ impl Config {
         Ok(())
     }
 
+    /// True when this configuration must run through the sharded /
+    /// mixed-fleet scenario path rather than the single-device
+    /// direct runner: any multi-device, pipelined, work-steal or
+    /// heterogeneous-kernel knob engaged. Both CLI entry points
+    /// (`cosim` and `vm-side`) dispatch on this one definition, so a
+    /// future knob cannot drift them apart.
+    pub fn needs_sharded_runner(&self) -> bool {
+        self.devices > 1
+            || self.queue_depth > 1
+            || self.shard == ShardPolicy::WorkSteal
+            || self.kernel != KernelKind::Sort
+            || !self.device_kernel.is_empty()
+            || !self.device_n.is_empty()
+    }
+
     /// Materialize the co-simulation configuration.
     pub fn cosim(&self) -> Result<CoSimCfg> {
         let transport = match self.transport.as_str() {
@@ -223,39 +315,109 @@ impl Config {
             "uds" => TransportKind::Uds(self.socket_dir.clone()),
             other => return Err(Error::config(format!("transport {other:?}"))),
         };
-        // Validate latency overrides here, where n is known: the
-        // sorter rejects sub-structural latencies at elaboration, and
-        // a config error beats an HDL-thread panic.
-        let lb = crate::hdl::sorter::structural_latency_lb(
-            self.n,
-            crate::hdl::axi::WORDS_PER_BEAT,
-        );
-        for &(k, cyc) in &self.device_latency {
+        // Validate the heterogeneity overrides here, where the whole
+        // per-device geometry is known: the kernels reject
+        // sub-structural latencies at elaboration, and a config error
+        // beats an HDL-thread panic.
+        let w = crate::hdl::axi::WORDS_PER_BEAT;
+        // The template geometry itself must be elaborable (the
+        // per-device `--device-n` path already gets this check).
+        if !self.n.is_power_of_two() || self.n < w {
+            return Err(Error::config(format!(
+                "n: {} is not a power of two ≥ {w}",
+                self.n
+            )));
+        }
+        // Template latency: explicit flag, or derived from the
+        // template kernel's geometry — so the bare `--kernel` and the
+        // per-device spellings of the same fleet model identical
+        // latencies (all-defaults sorter = the paper's 1256).
+        let template_latency = if self.sorter_latency_set {
+            self.sorter_latency
+        } else {
+            self.kernel.default_latency(self.n)
+        };
+        let check_idx = |what: &str, k: usize| -> Result<()> {
             if k >= self.devices {
                 return Err(Error::config(format!(
-                    "device-latency: device {k} not on a {}-device topology",
+                    "{what}: device {k} not on a {}-device topology",
                     self.devices
                 )));
             }
+            Ok(())
+        };
+        for &(k, _) in &self.device_kernel {
+            check_idx("kernel", k)?;
+        }
+        for &(k, n) in &self.device_n {
+            check_idx("device-n", k)?;
+            if !n.is_power_of_two() || n < w {
+                return Err(Error::config(format!(
+                    "device-n: {n} is not a power of two ≥ {w}"
+                )));
+            }
+        }
+        for &(k, us) in &self.device_link_latency {
+            check_idx("device-link-latency", k)?;
+            if us > 10_000 {
+                return Err(Error::config(format!(
+                    "device-link-latency: {us} µs per message is beyond any \
+                     plausible wire (max 10000)"
+                )));
+            }
+        }
+        // Per-device effective geometry, for latency validation: an
+        // explicit --device-latency must respect the structural lower
+        // bound of *that* device's kernel and record length.
+        let geometry = |k: usize| -> (KernelKind, usize) {
+            let kind = self
+                .device_kernel
+                .iter()
+                .find(|&&(d, _)| d == k)
+                .map(|&(_, v)| v)
+                .unwrap_or(self.kernel);
+            let n = self
+                .device_n
+                .iter()
+                .find(|&&(d, _)| d == k)
+                .map(|&(_, v)| v)
+                .unwrap_or(self.n);
+            (kind, n)
+        };
+        for &(k, cyc) in &self.device_latency {
+            check_idx("device-latency", k)?;
+            let (kind, n) = geometry(k);
+            let lb = kind.structural_lb(n, w);
             if cyc < lb {
                 return Err(Error::config(format!(
                     "device-latency: {cyc} cycles below the structural lower \
-                     bound {lb} for n={}",
-                    self.n
+                     bound {lb} for the {kind} kernel at n={n}"
                 )));
             }
+        }
+        // The template latency must be achievable by the template
+        // kernel (devices with overridden geometry get that geometry's
+        // default latency instead — see `platform_cfg_for`).
+        let template_lb = self.kernel.structural_lb(self.n, w);
+        if template_latency < template_lb {
+            return Err(Error::config(format!(
+                "sorter-latency: {template_latency} below the structural lower \
+                 bound {template_lb} for the {} kernel at n={}",
+                self.kernel, self.n
+            )));
         }
         Ok(CoSimCfg {
             mode: self.mode,
             transport,
             platform: PlatformCfg {
-                sorter: SorterCfg {
+                kernel: KernelCfg {
+                    kind: self.kernel,
                     n: self.n,
-                    latency: self.sorter_latency,
+                    latency: template_latency,
                     // The accelerator pipeline must be able to hold at
                     // least the whole descriptor ring: a ring deeper
-                    // than the sorter's record capacity lets MM2S
-                    // stream records the sorter cannot absorb, parking
+                    // than the kernel's record capacity lets MM2S
+                    // stream records the kernel cannot absorb, parking
                     // data beats ahead of the next S2MM descriptor
                     // fetch response on the shared read channel —
                     // head-of-line deadlock. Deeper rings model a
@@ -268,6 +430,9 @@ impl Config {
             },
             devices: self.devices,
             device_latency: self.device_latency.clone(),
+            device_kernel: self.device_kernel.clone(),
+            device_n: self.device_n.clone(),
+            device_link_latency_us: self.device_link_latency.clone(),
             ram_size: self.ram_size,
             vcd: self.vcd.clone(),
             poll_interval: self.poll_interval,
@@ -289,7 +454,8 @@ mod tests {
     fn defaults_build_a_cosim_cfg() {
         let c = Config::default();
         let cc = c.cosim().unwrap();
-        assert_eq!(cc.platform.sorter.latency, 1256);
+        assert_eq!(cc.platform.kernel.latency, 1256);
+        assert_eq!(cc.platform.kernel.kind, KernelKind::Sort);
         assert!(matches!(cc.transport, TransportKind::InProc));
     }
 
@@ -360,12 +526,101 @@ mod tests {
         assert!(c.set("queue-depth", "0").is_err());
         assert!(c.set("queue-depth", "1000").is_err());
         assert!(c.set("queue-depth", "x").is_err());
-        // The sorter pipeline is sized to hold the whole ring (the
+        // The kernel pipeline is sized to hold the whole ring (the
         // head-of-line-deadlock invariant — see cosim()).
         c.set("queue-depth", "16").unwrap();
-        assert_eq!(c.cosim().unwrap().platform.sorter.pipeline_records, 16);
+        assert_eq!(c.cosim().unwrap().platform.kernel.pipeline_records, 16);
         c.set("queue-depth", "2").unwrap();
-        assert_eq!(c.cosim().unwrap().platform.sorter.pipeline_records, 8);
+        assert_eq!(c.cosim().unwrap().platform.kernel.pipeline_records, 8);
+    }
+
+    #[test]
+    fn kernel_fleet_knobs_parse_and_validate() {
+        use crate::coordinator::cosim::platform_cfg_for;
+        let mut c = Config::default();
+        assert_eq!(c.kernel, KernelKind::Sort, "sort must be the default");
+        // Per-device overrides (the mixed-fleet CLI of the CI smoke
+        // step: `--devices 3 --kernel 1=checksum --kernel 2=stats`).
+        c.set("devices", "3").unwrap();
+        c.set("kernel", "1=checksum").unwrap();
+        c.set("kernel", "2=stats").unwrap();
+        let cc = c.cosim().unwrap();
+        assert_eq!(cc.device_kernel.len(), 2);
+        assert_eq!(platform_cfg_for(&cc, 0).kernel.kind, KernelKind::Sort);
+        assert_eq!(platform_cfg_for(&cc, 1).kernel.kind, KernelKind::Checksum);
+        assert_eq!(platform_cfg_for(&cc, 2).kernel.kind, KernelKind::Stats);
+        // A regeometried device gets its own default latency; the
+        // template keeps the configured one.
+        assert_eq!(platform_cfg_for(&cc, 0).kernel.latency, 1256);
+        assert_eq!(
+            platform_cfg_for(&cc, 1).kernel.latency,
+            KernelKind::Checksum.default_latency(1024)
+        );
+        // Bare kind sets the whole fleet — and models the *same*
+        // latency as the per-device spelling of the identical fleet
+        // (no explicit --sorter-latency ⇒ the template latency is
+        // derived from the template kernel's geometry).
+        let mut all = Config::default();
+        all.set("kernel", "checksum").unwrap();
+        assert_eq!(all.kernel, KernelKind::Checksum);
+        let all_cc = all.cosim().unwrap();
+        assert_eq!(all_cc.platform.kernel.kind, KernelKind::Checksum);
+        assert_eq!(
+            all_cc.platform.kernel.latency,
+            KernelKind::Checksum.default_latency(1024),
+            "bare --kernel must not keep the sorter's 1256 template latency"
+        );
+        assert_eq!(
+            platform_cfg_for(&all_cc, 0).kernel.latency,
+            platform_cfg_for(&cc, 1).kernel.latency,
+            "two spellings of the same checksum device must model the same latency"
+        );
+        // An explicit --sorter-latency still pins the template.
+        let mut pinned = Config::default();
+        pinned.set("kernel", "checksum").unwrap();
+        pinned.set("sorter-latency", "500").unwrap();
+        assert_eq!(pinned.cosim().unwrap().platform.kernel.latency, 500);
+        // The template n is validated like --device-n (config error,
+        // not an elaboration panic in the HDL thread).
+        let mut bad_n = Config::default();
+        bad_n.set("n", "1000").unwrap();
+        let err = bad_n.cosim().unwrap_err().to_string();
+        assert!(err.contains("power of two"), "{err}");
+        // Bad values error cleanly.
+        assert!(c.clone().set("kernel", "1=fft").is_err());
+        assert!(c.clone().set("kernel", "fft").is_err());
+        let mut oob = c.clone();
+        oob.set("kernel", "7=stats").unwrap();
+        assert!(oob.cosim().is_err(), "out-of-range device must fail");
+    }
+
+    #[test]
+    fn device_n_and_link_latency_knobs() {
+        use crate::coordinator::cosim::{link_latency_for, platform_cfg_for};
+        let mut c = Config::default();
+        c.set("devices", "2").unwrap();
+        c.set("device-n", "1=256").unwrap();
+        c.set("device-link-latency", "1=200").unwrap();
+        let cc = c.cosim().unwrap();
+        assert_eq!(platform_cfg_for(&cc, 0).kernel.n, 1024);
+        let d1 = platform_cfg_for(&cc, 1).kernel;
+        assert_eq!(d1.n, 256);
+        // Heterogeneous n re-derives the latency for that geometry.
+        assert_eq!(d1.latency, KernelKind::Sort.default_latency(256));
+        assert_eq!(link_latency_for(&cc, 0), Duration::ZERO);
+        assert_eq!(link_latency_for(&cc, 1), Duration::from_micros(200));
+        // An explicit per-device latency wins over the derived default
+        // and is validated against that geometry's lower bound.
+        c.set("device-latency", "1=999").unwrap();
+        let cc = c.cosim().unwrap();
+        assert_eq!(platform_cfg_for(&cc, 1).kernel.latency, 999);
+        let mut bad_n = c.clone();
+        bad_n.set("device-n", "1=1000").unwrap();
+        assert!(bad_n.cosim().is_err(), "non-power-of-two n must fail");
+        let mut bad_l = c.clone();
+        bad_l.set("device-link-latency", "0=999999").unwrap();
+        assert!(bad_l.cosim().is_err(), "absurd link latency must fail");
+        assert!(c.clone().set("device-n", "nope").is_err());
     }
 
     #[test]
@@ -392,6 +647,26 @@ mod tests {
         too_fast.set("device-latency", "0=10").unwrap();
         let err = too_fast.cosim().unwrap_err().to_string();
         assert!(err.contains("structural"), "{err}");
+    }
+
+    #[test]
+    fn needs_sharded_runner_covers_every_fleet_knob() {
+        assert!(!Config::default().needs_sharded_runner());
+        for (k, v) in [
+            ("devices", "2"),
+            ("queue-depth", "2"),
+            ("shard", "work-steal"),
+            ("kernel", "checksum"),
+            ("kernel", "0=stats"),
+            ("device-n", "0=256"),
+        ] {
+            let mut c = Config::default();
+            c.set(k, v).unwrap();
+            assert!(
+                c.needs_sharded_runner(),
+                "--{k} {v} must route through the sharded runner"
+            );
+        }
     }
 
     #[test]

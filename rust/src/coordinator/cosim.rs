@@ -26,6 +26,7 @@ use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
 
+use crate::hdl::kernel::KernelKind;
 use crate::hdl::platform::{Platform, PlatformCfg};
 use crate::hdl::signal::{ProbeFrame, Probed};
 use crate::hdl::sim::{Horizon, MergedHorizon, Scheduler, Sim, TickCtx};
@@ -66,12 +67,30 @@ pub struct CoSimCfg {
     /// gets its own BDF, BAR windows, link channels and HDL platform
     /// lane). 1 = the paper's single-board setup.
     pub devices: usize,
-    /// Per-device sorter-latency overrides `(device, cycles)` — the
+    /// Per-device kernel-latency overrides `(device, cycles)` — the
     /// first heterogeneity knob: device k's platform is elaborated
     /// with its own pipeline latency (all other devices keep
-    /// `platform.sorter.latency`). Validated upstream against the
+    /// `platform.kernel.latency`). Validated upstream against the
     /// structural lower bound (see `Config::cosim`).
     pub device_latency: Vec<(usize, u64)>,
+    /// Per-device stream-kernel overrides `(device, kind)`: device k
+    /// is elaborated with that [`KernelKind`] instead of the shared
+    /// `platform.kernel.kind` — the heterogeneous-fleet knob
+    /// (`--kernel k=sort|checksum|stats`). Devices without an entry
+    /// keep the shared kind, so the default fleet is byte-identical
+    /// to the all-sorter topology.
+    pub device_kernel: Vec<(usize, KernelKind)>,
+    /// Per-device record-length overrides `(device, words)`
+    /// (`--device-n k=N`): heterogeneous record lengths on one
+    /// topology. The guest driver adopts the probed length, so the
+    /// sharded runners route each record to a matching device.
+    pub device_n: Vec<(usize, usize)>,
+    /// Per-device link-latency overrides `(device, microseconds)`
+    /// (`--device-link-latency k=us`): modelled at device k's HDL
+    /// link endpoint on every payload send, so a slow wire costs
+    /// *wall clock* — the knob that makes work-steal divergence show
+    /// up in records/s, not only in per-device cycle accounting.
+    pub device_link_latency_us: Vec<(usize, u64)>,
     /// Guest RAM bytes.
     pub ram_size: usize,
     /// Record waveforms of the entire platform to this VCD file.
@@ -96,6 +115,9 @@ impl Default for CoSimCfg {
             platform: PlatformCfg::default(),
             devices: 1,
             device_latency: Vec::new(),
+            device_kernel: Vec::new(),
+            device_n: Vec::new(),
+            device_link_latency_us: Vec::new(),
             ram_size: 4 << 20,
             vcd: None,
             poll_interval: 1,
@@ -202,15 +224,46 @@ fn tick_checked(platform: &mut Platform, ctx: &TickCtx, link: &mut Endpoint) -> 
 }
 
 /// The platform configuration for device `k` of a topology: the
-/// shared template with the device index and any per-device sorter
-/// latency override applied (heterogeneous topologies).
+/// shared template with the device index and any per-device kernel /
+/// record-length / latency overrides applied (heterogeneous fleets).
+///
+/// Order matters: kind and `n` first, then latency — a device whose
+/// kernel or record length differs from the template gets that
+/// geometry's default latency unless an explicit per-device latency
+/// override pins it (`Config::cosim` resolves CLI knobs into exactly
+/// these vectors).
 pub fn platform_cfg_for(cfg: &CoSimCfg, k: usize) -> PlatformCfg {
     let mut pcfg = cfg.platform.clone();
     pcfg.device_index = k;
+    let mut regeometried = false;
+    if let Some(&(_, kind)) = cfg.device_kernel.iter().find(|&&(d, _)| d == k) {
+        regeometried |= kind != pcfg.kernel.kind;
+        pcfg.kernel.kind = kind;
+    }
+    if let Some(&(_, n)) = cfg.device_n.iter().find(|&&(d, _)| d == k) {
+        regeometried |= n != pcfg.kernel.n;
+        pcfg.kernel.n = n;
+    }
+    if regeometried {
+        // A different engine or record length invalidates the shared
+        // latency; fall back to that geometry's default so direct
+        // `CoSimCfg` users cannot elaborate an impossible (or
+        // absurdly slow) kernel by accident.
+        pcfg.kernel.latency = pcfg.kernel.kind.default_latency(pcfg.kernel.n);
+    }
     if let Some(&(_, cycles)) = cfg.device_latency.iter().find(|&&(d, _)| d == k) {
-        pcfg.sorter.latency = cycles;
+        pcfg.kernel.latency = cycles;
     }
     pcfg
+}
+
+/// The link-latency modelled at device `k`'s HDL endpoint.
+pub fn link_latency_for(cfg: &CoSimCfg, k: usize) -> Duration {
+    cfg.device_link_latency_us
+        .iter()
+        .find(|&&(d, _)| d == k)
+        .map(|&(_, us)| Duration::from_micros(us))
+        .unwrap_or(Duration::ZERO)
 }
 
 /// Per-device VCD path: device 0 records to `path` itself; device k
@@ -346,7 +399,7 @@ impl HdlLane {
             dma_write_reqs: self.platform.bridge.dma_write_reqs,
             irqs_sent: self.platform.bridge.irqs_sent,
             idle_polls: self.platform.bridge.idle_polls,
-            records_done: self.platform.sorter.records_done,
+            records_done: self.platform.kernel.status().records_done,
             desc_fetches: self.platform.dma.desc_fetches,
             desc_writebacks: self.platform.dma.desc_writebacks,
             vcd_changes,
@@ -624,9 +677,13 @@ impl CoSim {
                 let mut vm_eps = Vec::with_capacity(n);
                 let mut lanes = Vec::with_capacity(n);
                 let mut cycles = Vec::with_capacity(n);
+                let mut kernel_ids = Vec::with_capacity(n);
                 for k in 0..n {
-                    let (vm_ep, hdl_ep) = Endpoint::inproc_pair_on(k as u8);
-                    lanes.push((Platform::new(platform_cfg_for(&cfg, k)), hdl_ep));
+                    let (vm_ep, mut hdl_ep) = Endpoint::inproc_pair_on(k as u8);
+                    hdl_ep.set_send_latency(link_latency_for(&cfg, k));
+                    let pcfg = platform_cfg_for(&cfg, k);
+                    kernel_ids.push(pcfg.kernel.kind.id());
+                    lanes.push((Platform::new(pcfg), hdl_ep));
                     vm_eps.push(vm_ep);
                     cycles.push(Arc::new(AtomicU64::new(0)));
                 }
@@ -634,7 +691,8 @@ impl CoSim {
                 let (s2, c2, cfg2) = (stop.clone(), cycles.clone(), cfg.clone());
                 let handle =
                     std::thread::spawn(move || run_hdl_multi_loop(lanes, &cfg2, s2, c2));
-                let vmm = Vmm::new_multi(vm_eps, cfg.mode, cfg.ram_size);
+                let vmm =
+                    Vmm::new_multi_with_kernels(vm_eps, cfg.mode, cfg.ram_size, &kernel_ids);
                 Ok(CoSim {
                     cfg,
                     vmm,
@@ -648,14 +706,17 @@ impl CoSim {
                 // renumbered messages dropped as duplicates).
                 let session = super::lifecycle::fresh_session();
                 let mut vm_eps = Vec::with_capacity(n);
+                let mut kernel_ids = Vec::with_capacity(n);
                 for k in 0..n {
                     let devdir = Endpoint::uds_device_dir(dir, k as u8);
                     std::fs::create_dir_all(&devdir)?;
                     let mut ep = Endpoint::uds(Side::Vm, &devdir, session)?;
                     ep.set_device_id(k as u8);
                     vm_eps.push(ep);
+                    kernel_ids.push(platform_cfg_for(&cfg, k).kernel.kind.id());
                 }
-                let vmm = Vmm::new_multi(vm_eps, cfg.mode, cfg.ram_size);
+                let vmm =
+                    Vmm::new_multi_with_kernels(vm_eps, cfg.mode, cfg.ram_size, &kernel_ids);
                 Ok(CoSim { cfg, vmm, hdl: None })
             }
         }

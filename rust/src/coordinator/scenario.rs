@@ -21,7 +21,9 @@
 use std::collections::VecDeque;
 use std::time::{Duration, Instant};
 
-use super::cosim::{CoSim, CoSimCfg, HdlReport};
+use super::cosim::{platform_cfg_for, CoSim, CoSimCfg, HdlReport};
+use crate::hdl::kernel::{pack_checksum_words, pack_stats_words, KernelKind};
+use crate::runtime::native::{record_checksum, record_stats};
 use crate::runtime::GoldenBackend;
 use crate::testutil::XorShift64;
 use crate::vm::guest::{app, SortDriver, SortDriverSg};
@@ -76,6 +78,88 @@ impl std::fmt::Display for ShardPolicy {
             ShardPolicy::Size => "size",
             ShardPolicy::WorkSteal => "work-steal",
         })
+    }
+}
+
+/// Per-device geometry of a topology: which stream kernel the device
+/// carries and the record length it is elaborated for. Derived from
+/// the co-sim config exactly the way the HDL side elaborates lanes
+/// ([`platform_cfg_for`]), so routing decisions and reality cannot
+/// drift apart.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct DeviceSpec {
+    pub kernel: KernelKind,
+    pub n: usize,
+}
+
+/// The per-device specs of a topology (index = device id).
+pub fn device_specs(cfg: &CoSimCfg) -> Vec<DeviceSpec> {
+    (0..cfg.devices.max(1))
+        .map(|k| {
+            let kc = platform_cfg_for(cfg, k).kernel;
+            DeviceSpec { kernel: kc.kind, n: kc.n }
+        })
+        .collect()
+}
+
+/// Verify one completed record against the matching golden op.
+///
+/// The caller-provided backend is used whenever it fits (sort records
+/// of its record length; any checksum/stats record of its length);
+/// everything else is checked against the shared spec functions
+/// ([`record_checksum`] / [`record_stats`] / a local reference sort) —
+/// the same contract the backends implement. Returns whether the
+/// *backend* performed the check (for the reports' `golden_checked`).
+fn verify_record(
+    kernel: KernelKind,
+    input: &[i32],
+    out: &[i32],
+    desc: bool,
+    golden: &mut Option<&mut dyn GoldenBackend>,
+) -> Result<bool> {
+    let fits = golden.as_deref().map(|g| g.n() == input.len()).unwrap_or(false);
+    match kernel {
+        KernelKind::Sort => {
+            if fits {
+                golden.as_deref_mut().unwrap().check_sorted(input, out, desc)?;
+                return Ok(true);
+            }
+            let mut e = input.to_vec();
+            e.sort_unstable();
+            if desc {
+                e.reverse();
+            }
+            if out != e {
+                return Err(Error::cosim("sort result mismatch (local check)"));
+            }
+            Ok(false)
+        }
+        KernelKind::Checksum => {
+            let (c, used) = if fits {
+                (golden.as_deref_mut().unwrap().checksum(input)?, true)
+            } else {
+                (record_checksum(input), false)
+            };
+            if out != pack_checksum_words(c) {
+                return Err(Error::cosim(format!(
+                    "checksum completion {out:?} does not match the golden op"
+                )));
+            }
+            Ok(used)
+        }
+        KernelKind::Stats => {
+            let (s, used) = if fits {
+                (golden.as_deref_mut().unwrap().stats_summary(input)?, true)
+            } else {
+                (record_stats(input), false)
+            };
+            if out != pack_stats_words(s.min, s.max, s.sum, s.count) {
+                return Err(Error::cosim(format!(
+                    "stats completion {out:?} does not match the golden op"
+                )));
+            }
+            Ok(used)
+        }
     }
 }
 
@@ -182,16 +266,7 @@ pub fn run_sort_offload(
     for _ in 0..records {
         let input = rng.vec_i32(drv.n);
         let out = drv.sort_record(&mut env, &input)?;
-        if let Some(g) = golden.as_deref_mut() {
-            g.check_sorted(&input, &out, false)?;
-        } else {
-            let mut e = input.clone();
-            e.sort_unstable();
-            if out != e {
-                return Err(Error::cosim("result mismatch (local check)"));
-            }
-            golden_checked = false;
-        }
+        golden_checked &= verify_record(drv.kernel, &input, &out, false, &mut golden)?;
     }
     let wall = t0.elapsed();
     let c1 = drv.read_cycles(&mut env)?;
@@ -279,7 +354,18 @@ pub fn run_sharded_offload_depth(
     golden: Option<&mut dyn GoldenBackend>,
 ) -> Result<(ShardedReport, Vec<Vec<i32>>)> {
     assert!(depth >= 1, "queue depth must be at least 1");
-    if depth == 1 && policy.is_static() {
+    // A fleet that differs from "every device is the template sorter"
+    // routes by (kernel, n) through the mixed runner; the homogeneous
+    // sort fleet keeps the original byte-identical paths.
+    let template = DeviceSpec {
+        kernel: cfg.platform.kernel.kind,
+        n: cfg.platform.kernel.n,
+    };
+    let homogeneous_sort = template.kernel == KernelKind::Sort
+        && device_specs(&cfg).iter().all(|s| *s == template);
+    if !homogeneous_sort {
+        run_mixed_fleet(cfg, records, seed, policy, depth, golden)
+    } else if depth == 1 && policy.is_static() {
         run_sharded_direct(cfg, records, seed, policy, golden)
     } else {
         run_sharded_sg(cfg, records, seed, policy, depth, golden)
@@ -296,12 +382,19 @@ fn run_sharded_direct(
     mut golden: Option<&mut dyn GoldenBackend>,
 ) -> Result<(ShardedReport, Vec<Vec<i32>>)> {
     let devices = cfg.devices.max(1);
-    let n = cfg.platform.sorter.n;
+    let n = cfg.platform.kernel.n;
     let mut cosim = CoSim::launch(cfg)?;
     let mut hook = NoopHook;
 
-    // Probe a driver per device (per-BDF binding).
-    let mut drvs: Vec<SortDriver> = (0..devices).map(|k| SortDriver::for_device(n, k)).collect();
+    // Probe a driver per device (per-BDF binding). The dispatcher
+    // guarantees an all-sorter fleet; the probe enforces it.
+    let mut drvs: Vec<SortDriver> = (0..devices)
+        .map(|k| {
+            let mut d = SortDriver::for_device(n, k);
+            d.expect_kernel = Some(KernelKind::Sort);
+            d
+        })
+        .collect();
     for (k, drv) in drvs.iter_mut().enumerate() {
         drv.timeout = Duration::from_secs(60);
         let mut env = GuestEnv::for_device(&mut cosim.vmm, &mut hook, k);
@@ -431,26 +524,31 @@ fn run_sharded_sg(
     mut golden: Option<&mut dyn GoldenBackend>,
 ) -> Result<(ShardedReport, Vec<Vec<i32>>)> {
     let devices = cfg.devices.max(1);
-    let n = cfg.platform.sorter.n;
+    let n = cfg.platform.kernel.n;
     // Ring-depth vs pipeline-capacity invariant: a ring deeper than
-    // the sorter can hold lets MM2S stream records the sorter cannot
+    // the kernel can hold lets MM2S stream records the kernel cannot
     // absorb, and the parked data beats block the next S2MM
     // descriptor fetch response on the shared read channel
     // (head-of-line deadlock). `Config::cosim` sizes the pipeline to
     // the ring automatically; direct `CoSimCfg` users get a clean
     // error instead of a hang.
-    if depth > cfg.platform.sorter.pipeline_records {
+    if depth > cfg.platform.kernel.pipeline_records {
         return Err(Error::config(format!(
-            "queue depth {depth} exceeds the sorter pipeline capacity {} — \
-             raise sorter pipeline_records to at least the ring depth",
-            cfg.platform.sorter.pipeline_records
+            "queue depth {depth} exceeds the kernel pipeline capacity {} — \
+             raise kernel pipeline_records to at least the ring depth",
+            cfg.platform.kernel.pipeline_records
         )));
     }
     let mut cosim = CoSim::launch(cfg)?;
     let mut hook = NoopHook;
 
-    let mut drvs: Vec<SortDriverSg> =
-        (0..devices).map(|k| SortDriverSg::new(n, k, depth)).collect();
+    let mut drvs: Vec<SortDriverSg> = (0..devices)
+        .map(|k| {
+            let mut d = SortDriverSg::new(n, k, depth);
+            d.drv.expect_kernel = Some(KernelKind::Sort);
+            d
+        })
+        .collect();
     for (k, drv) in drvs.iter_mut().enumerate() {
         drv.drv.timeout = Duration::from_secs(60);
         let mut env = GuestEnv::for_device(&mut cosim.vmm, &mut hook, k);
@@ -617,6 +715,250 @@ fn run_sharded_sg(
     let wall = t0.elapsed();
 
     // Per-device cycle deltas.
+    let mut per_device_cycles = vec![0u64; devices];
+    for (k, drv) in drvs.iter_mut().enumerate() {
+        let mut env = GuestEnv::for_device(&mut cosim.vmm, &mut hook, k);
+        per_device_cycles[k] = drv.drv.read_cycles(&mut env)?.saturating_sub(c0[k]);
+    }
+    let link_msgs = cosim.vmm.devs.iter().map(|d| d.link().msgs_sent()).sum();
+    let link_bytes = cosim.vmm.devs.iter().map(|d| d.link().bytes_sent()).sum();
+    let hdl = cosim.shutdown_all()?;
+    let merged: Vec<Vec<i32>> = results
+        .into_iter()
+        .enumerate()
+        .map(|(i, r)| r.ok_or_else(|| Error::cosim(format!("record {i} never completed"))))
+        .collect::<Result<_>>()?;
+    Ok((
+        ShardedReport {
+            devices,
+            policy,
+            queue_depth: depth,
+            records,
+            wall,
+            per_device_cycles,
+            per_device_records,
+            golden_checked,
+            hdl,
+            link_msgs,
+            link_bytes,
+        },
+        merged,
+    ))
+}
+
+/// Heterogeneous-fleet runner: N devices carrying any mix of stream
+/// kernels (and record lengths) on one topology, driven concurrently.
+///
+/// Routing key is the device group `(kernel, n)`: record i belongs to
+/// group `i mod G` (G = distinct geometries, in device order) and is
+/// generated with that group's record length, so the same seed always
+/// produces the same batch for a given fleet shape. Within a group:
+///
+/// * static policies assign group records round-robin over the
+///   group's devices and drive them with the same deterministic
+///   fill → drain → ack batch discipline as the homogeneous SG
+///   runner, so per-device cycle counts stay a pure function of the
+///   record schedule;
+/// * [`ShardPolicy::WorkSteal`] keeps one shared queue *per group*
+///   (a checksum record can never be stolen by a sorter), and any
+///   free ring slot on a matching device pulls the next record in
+///   completion order.
+///
+/// Every driver probes with `expect_kernel` set, so a record can only
+/// ever be fed to an engine whose capability register matches its
+/// group. Every result is verified against the matching golden op;
+/// the caller's backend is used where its record length fits, the
+/// shared spec functions everywhere else.
+pub fn run_mixed_fleet(
+    cfg: CoSimCfg,
+    records: usize,
+    seed: u64,
+    policy: ShardPolicy,
+    depth: usize,
+    mut golden: Option<&mut dyn GoldenBackend>,
+) -> Result<(ShardedReport, Vec<Vec<i32>>)> {
+    assert!(depth >= 1, "queue depth must be at least 1");
+    let devices = cfg.devices.max(1);
+    let specs = device_specs(&cfg);
+    if depth > cfg.platform.kernel.pipeline_records {
+        return Err(Error::config(format!(
+            "queue depth {depth} exceeds the kernel pipeline capacity {} — \
+             raise kernel pipeline_records to at least the ring depth",
+            cfg.platform.kernel.pipeline_records
+        )));
+    }
+    // Group devices by geometry, in first-appearance order.
+    let mut groups: Vec<(DeviceSpec, Vec<usize>)> = Vec::new();
+    for (k, s) in specs.iter().enumerate() {
+        match groups.iter_mut().find(|(gs, _)| gs == s) {
+            Some((_, members)) => members.push(k),
+            None => groups.push((*s, vec![k])),
+        }
+    }
+    let ngroups = groups.len();
+    let group_of_device: Vec<usize> = (0..devices)
+        .map(|k| groups.iter().position(|(_, m)| m.contains(&k)).unwrap())
+        .collect();
+
+    let mut cosim = CoSim::launch(cfg)?;
+    let mut hook = NoopHook;
+
+    // One SG driver per device (ring depth 1 degenerates to the
+    // direct schedule plus descriptor fetches), pinned to its kernel.
+    let mut drvs: Vec<SortDriverSg> = (0..devices)
+        .map(|k| {
+            let mut d = SortDriverSg::new(specs[k].n, k, depth);
+            d.drv.expect_kernel = Some(specs[k].kernel);
+            d
+        })
+        .collect();
+    for (k, drv) in drvs.iter_mut().enumerate() {
+        drv.drv.timeout = Duration::from_secs(60);
+        let mut env = GuestEnv::for_device(&mut cosim.vmm, &mut hook, k);
+        drv.probe(&mut env)?;
+    }
+
+    // Pre-warm the golden model (backend preparation — e.g. a PJRT
+    // compile — must not be billed to the offload, exactly as in the
+    // homogeneous runners).
+    if let Some(g) = golden.as_deref_mut() {
+        let warm = vec![0i32; g.n()];
+        let _ = g.sort_i32(&[warm], false)?;
+    }
+
+    // The whole batch up front, in submission order: record i is
+    // shaped for its group.
+    let mut rng = XorShift64::new(seed);
+    let rec_group: Vec<usize> = (0..records).map(|i| i % ngroups).collect();
+    let inputs: Vec<Vec<i32>> =
+        rec_group.iter().map(|&g| rng.vec_i32(groups[g].0.n)).collect();
+
+    // Static: per-device queues (round-robin within the group).
+    // Work-steal: one shared queue per group.
+    let mut queues: Vec<VecDeque<usize>> = vec![VecDeque::new(); devices];
+    let mut group_queues: Vec<VecDeque<usize>> = vec![VecDeque::new(); ngroups];
+    if policy.is_static() {
+        let mut next_in_group = vec![0usize; ngroups];
+        for (i, &g) in rec_group.iter().enumerate() {
+            let members = &groups[g].1;
+            let k = members[next_in_group[g] % members.len()];
+            next_in_group[g] += 1;
+            queues[k].push_back(i);
+        }
+    } else {
+        for (i, &g) in rec_group.iter().enumerate() {
+            group_queues[g].push_back(i);
+        }
+    }
+
+    // Per-device cycle baselines.
+    let mut c0 = vec![0u64; devices];
+    for (k, drv) in drvs.iter_mut().enumerate() {
+        let mut env = GuestEnv::for_device(&mut cosim.vmm, &mut hook, k);
+        c0[k] = drv.drv.read_cycles(&mut env)?;
+    }
+
+    let t0 = Instant::now();
+    let mut results: Vec<Option<Vec<i32>>> = vec![None; records];
+    let mut per_device_records = vec![0usize; devices];
+    let mut inflight_ids: Vec<VecDeque<usize>> = vec![VecDeque::new(); devices];
+    let mut golden_checked = golden.is_some();
+
+    if policy.is_static() {
+        // The deterministic batch discipline of the homogeneous SG
+        // runner (see `run_sharded_sg`), unchanged: fill every ring,
+        // drain each fully by memory polling, one ack per quiesced
+        // device.
+        loop {
+            for k in 0..devices {
+                while drvs[k].can_submit() {
+                    let Some(i) = queues[k].pop_front() else { break };
+                    let mut env = GuestEnv::for_device(&mut cosim.vmm, &mut hook, k);
+                    drvs[k].submit_record(&mut env, &inputs[i])?;
+                    inflight_ids[k].push_back(i);
+                }
+            }
+            let mut any = false;
+            for k in 0..devices {
+                if drvs[k].in_flight() == 0 {
+                    continue;
+                }
+                any = true;
+                while drvs[k].in_flight() > 0 {
+                    let mut env = GuestEnv::for_device(&mut cosim.vmm, &mut hook, k);
+                    let out = drvs[k].reap_record_polled(&mut env)?;
+                    let i = inflight_ids[k].pop_front().unwrap();
+                    golden_checked &=
+                        verify_record(specs[k].kernel, &inputs[i], &out, false, &mut golden)?;
+                    results[i] = Some(out);
+                    per_device_records[k] += 1;
+                }
+                let mut env = GuestEnv::for_device(&mut cosim.vmm, &mut hook, k);
+                drvs[k].ack_completions(&mut env)?;
+            }
+            if !any {
+                break;
+            }
+        }
+    } else {
+        // Work-steal within each kernel group: a free ring slot pulls
+        // the next record *of its own geometry* in completion order.
+        let mut done = 0usize;
+        let mut last_progress = Instant::now();
+        while done < records {
+            let mut progressed = false;
+            for k in 0..devices {
+                let g = group_of_device[k];
+                while drvs[k].can_submit() {
+                    let Some(i) = group_queues[g].pop_front() else { break };
+                    let mut env = GuestEnv::for_device(&mut cosim.vmm, &mut hook, k);
+                    drvs[k].submit_record(&mut env, &inputs[i])?;
+                    inflight_ids[k].push_back(i);
+                }
+            }
+            for k in 0..devices {
+                let mut reaped = false;
+                while drvs[k].in_flight() > 0 {
+                    let mut env = GuestEnv::for_device(&mut cosim.vmm, &mut hook, k);
+                    let Some(out) = drvs[k].try_reap(&mut env)? else { break };
+                    let i = inflight_ids[k].pop_front().unwrap();
+                    golden_checked &=
+                        verify_record(specs[k].kernel, &inputs[i], &out, false, &mut golden)?;
+                    results[i] = Some(out);
+                    per_device_records[k] += 1;
+                    done += 1;
+                    reaped = true;
+                }
+                if reaped {
+                    let mut env = GuestEnv::for_device(&mut cosim.vmm, &mut hook, k);
+                    drvs[k].ack_completions(&mut env)?;
+                    progressed = true;
+                }
+            }
+            if progressed {
+                last_progress = Instant::now();
+            } else if done < records {
+                // Nothing ready anywhere: block on the shared doorbell
+                // (any device's completion writeback rings it), then
+                // re-sweep — same discipline as the homogeneous
+                // work-steal runner.
+                let k = (0..devices)
+                    .filter(|&k| drvs[k].in_flight() > 0)
+                    .min_by_key(|&k| inflight_ids[k].front().copied().unwrap_or(usize::MAX))
+                    .expect("records pending but nothing in flight");
+                let mut env = GuestEnv::for_device(&mut cosim.vmm, &mut hook, k);
+                if last_progress.elapsed() > drvs[k].drv.timeout {
+                    return Err(drvs[k].ring_stuck_error(&mut env));
+                }
+                let _ = env
+                    .dev_mut()
+                    .link_mut()
+                    .wait_any_shared(Duration::from_millis(10))?;
+            }
+        }
+    }
+    let wall = t0.elapsed();
+
     let mut per_device_cycles = vec![0u64; devices];
     for (k, drv) in drvs.iter_mut().enumerate() {
         let mut env = GuestEnv::for_device(&mut cosim.vmm, &mut hook, k);
@@ -863,7 +1205,7 @@ mod tests {
     /// records than the paper platform → fast e2e property cases).
     fn small_cfg(devices: usize) -> CoSimCfg {
         let mut cfg = CoSimCfg { devices, ..Default::default() };
-        cfg.platform.sorter.n = 256;
+        cfg.platform.kernel.n = 256;
         cfg
     }
 

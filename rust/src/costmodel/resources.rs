@@ -10,6 +10,7 @@
 //! the xc7vx690t.
 
 use crate::hdl::axi::WORDS_PER_BEAT;
+use crate::hdl::kernel::KernelKind;
 use crate::hdl::sorter;
 
 /// xc7vx690t capacity (Virtex-7, NetFPGA SUME).
@@ -44,13 +45,18 @@ pub struct Utilization {
     pub ff_pct: f64,
 }
 
-/// The resource model for the sorting platform.
+/// The resource model for the streaming-accelerator platform.
 #[derive(Debug, Clone)]
 pub struct ResourceModel {
-    /// Record length (words) of the streaming sorter.
+    /// Record length (words) of the stream kernel.
     pub n: usize,
     /// Stream width (words/beat).
     pub w: usize,
+    /// Which stream kernel the platform carries between the streams.
+    /// The calibration anchor (≈11% LUT / ≈19% BRAM) is the paper's
+    /// **sort** platform and must not move; the fold kernels swap in a
+    /// far smaller accelerator block.
+    pub accel_kernel: KernelKind,
     // Per-primitive costs (7-series, 32-bit datapath):
     /// LUTs per physical compare-exchange (32-bit compare + 2:1 muxes).
     pub luts_per_cas: u64,
@@ -91,6 +97,7 @@ impl ResourceModel {
         Self {
             n: 1024,
             w: WORDS_PER_BEAT,
+            accel_kernel: KernelKind::Sort,
             luts_per_cas: 96,
             luts_per_delay_word: 8,
             srl_to_bram_threshold: 1024,
@@ -143,6 +150,48 @@ impl ResourceModel {
         self
     }
 
+    /// The platform with a different stream kernel behind the streams
+    /// (what a `--kernel checksum|stats` device would synthesize).
+    pub fn for_kernel(mut self, kind: KernelKind) -> Self {
+        self.accel_kernel = kind;
+        self
+    }
+
+    /// Structural estimate of the **checksum** fold kernel: one 32-bit
+    /// adder + xor per lane, a reduction layer, and the 64-bit
+    /// accumulator — no delay buffering at all (7-series: a 32-bit
+    /// add/xor pair is ~64 LUTs with carry chains; the accumulator and
+    /// control add a small constant).
+    pub fn checksum_kernel(&self) -> Estimate {
+        let lane_luts = self.w as u64 * 64;
+        Estimate {
+            luts: lane_luts + 160,
+            ffs: lane_luts + 96, // pipeline + accumulator registers
+            bram36: 0,
+        }
+    }
+
+    /// Structural estimate of the **stats** fold kernel: per lane a
+    /// min comparator, a max comparator and an adder (~96 LUTs), a
+    /// reduction layer, and min/max/sum/count accumulators.
+    pub fn stats_kernel(&self) -> Estimate {
+        let lane_luts = self.w as u64 * 96;
+        Estimate {
+            luts: lane_luts + 224,
+            ffs: lane_luts + 160,
+            bram36: 0,
+        }
+    }
+
+    /// The accelerator block as configured ([`ResourceModel::accel_kernel`]).
+    pub fn accelerator(&self) -> Estimate {
+        match self.accel_kernel {
+            KernelKind::Sort => self.sorter(),
+            KernelKind::Checksum => self.checksum_kernel(),
+            KernelKind::Stats => self.stats_kernel(),
+        }
+    }
+
     /// The DMA block as configured (direct or SG mode).
     pub fn dma(&self) -> Estimate {
         if self.dma_sg {
@@ -154,7 +203,8 @@ impl ResourceModel {
 
     /// Whole-platform estimate.
     pub fn platform(&self) -> Estimate {
-        self.sorter() + self.pcie_core + self.dma() + self.interconnect + self.infrastructure
+        self.accelerator() + self.pcie_core + self.dma() + self.interconnect
+            + self.infrastructure
     }
 
     /// Device utilization of the whole platform.
@@ -169,9 +219,14 @@ impl ResourceModel {
 
     /// Render the §III utilization report.
     pub fn render(&self) -> String {
-        let s = self.sorter();
+        let s = self.accelerator();
         let p = self.platform();
         let u = self.utilization();
+        let accel_name = match self.accel_kernel {
+            KernelKind::Sort => "sorter (structural)",
+            KernelKind::Checksum => "checksum kernel",
+            KernelKind::Stats => "stats kernel",
+        };
         let mut out = String::new();
         out.push_str("RESOURCE MODEL — xc7vx690t (NetFPGA SUME)\n");
         out.push_str(&format!(
@@ -179,7 +234,7 @@ impl ResourceModel {
             "block", "LUTs", "FFs", "BRAM36"
         ));
         for (name, e) in [
-            ("sorter (structural)", s),
+            (accel_name, s),
             ("pcie core", self.pcie_core),
             (
                 if self.dma_sg { "axi dma (sg mode)" } else { "axi dma" },
@@ -242,6 +297,43 @@ mod tests {
         let r = ResourceModel::paper_platform().render();
         assert!(r.contains("TOTAL"));
         assert!(r.contains("utilization"));
+    }
+
+    #[test]
+    fn fold_kernels_are_small_and_leave_the_anchor_unmoved() {
+        // Swapping the accelerator must not disturb the paper's
+        // ≈11%/19% calibration: the sort platform is untouched...
+        let sort = ResourceModel::paper_platform();
+        assert_eq!(sort.accel_kernel, KernelKind::Sort);
+        assert_eq!(sort.accelerator(), sort.sorter());
+        let u = sort.utilization();
+        assert!((9.0..13.0).contains(&u.lut_pct));
+        // ...and the fold kernels are orders of magnitude smaller than
+        // the sorting network (a handful of adders/comparators vs 55
+        // stages of compare-exchange + delay lines).
+        for kind in [KernelKind::Checksum, KernelKind::Stats] {
+            let m = ResourceModel::paper_platform().for_kernel(kind);
+            let a = m.accelerator();
+            assert!(a.luts > 0 && a.ffs > 0);
+            assert!(
+                a.luts * 10 < sort.sorter().luts,
+                "{kind} kernel implausibly large: {} LUTs",
+                a.luts
+            );
+            assert_eq!(a.bram36, 0, "a streaming fold needs no BRAM");
+            // Fixed IP blocks dominate such a platform.
+            assert!(m.platform().luts < sort.platform().luts);
+            assert!(m.utilization().lut_pct < u.lut_pct);
+        }
+        // Stats carries more comparators than checksum.
+        let c = ResourceModel::paper_platform().checksum_kernel();
+        let s = ResourceModel::paper_platform().stats_kernel();
+        assert!(s.luts > c.luts);
+        // Render names the swapped block.
+        let r = ResourceModel::paper_platform()
+            .for_kernel(KernelKind::Checksum)
+            .render();
+        assert!(r.contains("checksum kernel"), "{r}");
     }
 
     #[test]

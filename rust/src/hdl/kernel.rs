@@ -1,0 +1,934 @@
+//! The **stream-kernel layer**: a pluggable compute core behind the
+//! platform's AXI-Stream pair.
+//!
+//! The paper's framework is device-agnostic — the VM side, the link
+//! and the PCIe bridge carry MMIO/DMA/MSI and never care what RTL sits
+//! behind them. This module makes the HDL side honour the same
+//! boundary: everything between the MM2S and S2MM streams is a
+//! [`StreamKernel`] — AXI-Stream in → compute → AXI-Stream out, with a
+//! fixed record length, a pipeline latency, an event [`Horizon`] and
+//! VCD probes. [`crate::hdl::platform::Platform`] holds a boxed
+//! kernel, so a multi-device topology can run a *heterogeneous fleet*
+//! (sort + checksum + stats devices on one simulated bus) while the
+//! bridge, DMA, interconnect and regfile stay byte-identical.
+//!
+//! Kernels shipped:
+//!
+//! * [`KernelKind::Sort`] — the streaming bitonic sorting network
+//!   ([`crate::hdl::sorter::Sorter`], the paper's Spiral IP): n words
+//!   in, n words out.
+//! * [`KernelKind::Checksum`] — a streaming fold computing the
+//!   order-invariant record checksum of
+//!   `python/compile/model.py::record_checksum` (int64 sum ⊕ int32
+//!   xor-fold in the high half): n words in, **one beat** out.
+//! * [`KernelKind::Stats`] — a streaming min/max/sum/count engine:
+//!   n words in, **two beats** out.
+//!
+//! Each kernel is validated bit-exactly against the corresponding
+//! [`crate::runtime::GoldenBackend`] op; the fold engines accumulate
+//! *per beat* (the way the RTL would), deliberately not by buffering
+//! the record and calling the golden function, so agreement is a real
+//! cross-implementation check.
+//!
+//! The guest driver discovers the kernel at probe time from the
+//! regfile's capability registers ([`crate::hdl::regfile::regs::KERNEL`],
+//! `RECLEN`, `OUT_WORDS`) instead of assuming a sorter — see
+//! DEBUGGING.md §6 for the wrong-kernel walkthrough.
+
+use std::collections::VecDeque;
+
+use super::axi::{AxisBeat, WORDS_PER_BEAT};
+use super::sim::{Fifo, Horizon, TickCtx};
+use super::signal::ProbeSink;
+use super::sorter::{Sorter, SorterCfg};
+use crate::{Error, Result};
+
+/// Which compute core sits between the streams.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum KernelKind {
+    /// Streaming bitonic sorting network (the paper's platform).
+    #[default]
+    Sort,
+    /// Streaming record checksum (sum ⊕ xor-fold).
+    Checksum,
+    /// Streaming min/max/sum/count over the record.
+    Stats,
+}
+
+/// Checksum result: one stream beat — `[lo32, hi32, 0, 0]` of the
+/// i64 checksum.
+pub const CHECKSUM_OUT_WORDS: usize = WORDS_PER_BEAT;
+/// Stats result: two stream beats —
+/// `[min, max, sum_lo, sum_hi, count, 0, 0, 0]`.
+pub const STATS_OUT_WORDS: usize = 2 * WORDS_PER_BEAT;
+
+impl KernelKind {
+    /// Capability-register id (regfile `KERNEL`, and the low byte of
+    /// the PCIe subsystem id for non-sort personalities — see
+    /// [`crate::pcie::board::subsys_id_for_kernel`]). 0 is reserved
+    /// ("no kernel") so a driver reading a zeroed register fails loud.
+    pub fn id(self) -> u32 {
+        match self {
+            KernelKind::Sort => 1,
+            KernelKind::Checksum => 2,
+            KernelKind::Stats => 3,
+        }
+    }
+
+    /// Inverse of [`KernelKind::id`].
+    pub fn from_id(id: u32) -> Option<Self> {
+        match id {
+            1 => Some(KernelKind::Sort),
+            2 => Some(KernelKind::Checksum),
+            3 => Some(KernelKind::Stats),
+            _ => None,
+        }
+    }
+
+    /// Completion size in 32-bit words for a record of `n` words —
+    /// what the driver must program into S2MM and read back.
+    pub fn out_words(self, n: usize) -> usize {
+        match self {
+            KernelKind::Sort => n,
+            KernelKind::Checksum => CHECKSUM_OUT_WORDS,
+            KernelKind::Stats => STATS_OUT_WORDS,
+        }
+    }
+
+    /// Structural latency lower bound (first input beat → last output
+    /// beat) for a record of `n` words at stream width `w`: the sort
+    /// network's per-stage buffering, or — for the fold engines — the
+    /// input drain plus the output beats plus a pipeline register.
+    pub fn structural_lb(self, n: usize, w: usize) -> u64 {
+        match self {
+            KernelKind::Sort => super::sorter::structural_latency_lb(n, w),
+            KernelKind::Checksum | KernelKind::Stats => {
+                (n / w) as u64 + self.out_words(n).div_ceil(w) as u64 + 1
+            }
+        }
+    }
+
+    /// Default pipeline latency for a record of `n` words: the Spiral
+    /// IP's published 1256 for the paper's n=1024 sorter, a
+    /// structural-bound-plus-margin figure everywhere else.
+    pub fn default_latency(self, n: usize) -> u64 {
+        match self {
+            KernelKind::Sort if n == 1024 => 1256,
+            kind => kind.structural_lb(n, WORDS_PER_BEAT) + 16,
+        }
+    }
+}
+
+impl std::str::FromStr for KernelKind {
+    type Err = Error;
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "sort" => Ok(KernelKind::Sort),
+            "checksum" => Ok(KernelKind::Checksum),
+            "stats" => Ok(KernelKind::Stats),
+            other => Err(Error::config(format!(
+                "unknown kernel {other:?} (expected sort|checksum|stats)"
+            ))),
+        }
+    }
+}
+
+impl std::fmt::Display for KernelKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            KernelKind::Sort => "sort",
+            KernelKind::Checksum => "checksum",
+            KernelKind::Stats => "stats",
+        })
+    }
+}
+
+/// Configuration of the compute core behind the streams — the
+/// kernel-generic generalisation of [`SorterCfg`].
+#[derive(Debug, Clone)]
+pub struct KernelCfg {
+    pub kind: KernelKind,
+    /// Record length in 32-bit words (power of two).
+    pub n: usize,
+    /// First-input→last-output latency in cycles for an unstalled
+    /// record.
+    pub latency: u64,
+    /// Max records in flight before input stalls (pipeline capacity).
+    pub pipeline_records: usize,
+}
+
+impl Default for KernelCfg {
+    fn default() -> Self {
+        Self {
+            kind: KernelKind::Sort,
+            n: 1024,
+            latency: 1256,
+            pipeline_records: 8,
+        }
+    }
+}
+
+impl KernelCfg {
+    /// Completion size in words for this configuration.
+    pub fn out_words(&self) -> usize {
+        self.kind.out_words(self.n)
+    }
+}
+
+/// Status wires every kernel exposes toward the regfile CSR block
+/// (pushed by the platform each cycle).
+#[derive(Debug, Default, Clone, Copy)]
+pub struct KernelStatus {
+    pub busy: bool,
+    pub records_done: u64,
+    pub stall_in: u64,
+    pub stall_out: u64,
+    pub beats_in: u64,
+    pub beats_out: u64,
+    pub length_error: bool,
+}
+
+/// The pluggable compute core: AXI-Stream in → compute → AXI-Stream
+/// out. Everything the platform needs from the accelerator, and
+/// nothing it does not — swapping the implementation must not touch
+/// the bridge, DMA, interconnect, regfile or any VM-side layer.
+pub trait StreamKernel: Send {
+    /// Which kernel this is (capability-register id source).
+    fn kind(&self) -> KernelKind;
+    /// Record length in words this instance is elaborated for.
+    fn n(&self) -> usize;
+    /// Words produced per completed record.
+    fn out_words(&self) -> usize;
+    /// Anything collecting or in flight.
+    fn busy(&self) -> bool;
+    /// Would an input beat be accepted this tick (`s_axis_tready`'s
+    /// natural value)? The platform's event horizon needs this.
+    fn input_ready(&self) -> bool;
+    /// Event horizon (see [`Horizon`]).
+    fn horizon(&self, now: u64) -> Horizon;
+    /// One clock cycle: consume ≤1 input beat, produce ≤1 output beat.
+    fn tick(&mut self, ctx: &TickCtx, s_axis: &mut Fifo<AxisBeat>, m_axis: &mut Fifo<AxisBeat>);
+    /// Soft reset (regfile CONTROL bit): drop all in-flight state.
+    fn soft_reset(&mut self);
+    /// CONTROL bit 0 (descending order). Only meaningful for the
+    /// sorter; fold kernels are order-invariant and ignore it.
+    fn set_order_desc(&mut self, desc: bool);
+    /// Current descending-order setting (CONTROL read-back).
+    fn order_desc(&self) -> bool;
+    /// Status wires toward the regfile.
+    fn status(&self) -> KernelStatus;
+    /// Waveform probes (named under `platform.<kernel>.`).
+    fn probe(&self, sink: &mut dyn ProbeSink);
+}
+
+/// Elaborate the kernel a [`KernelCfg`] asks for.
+pub fn build_kernel(cfg: &KernelCfg) -> Box<dyn StreamKernel> {
+    match cfg.kind {
+        KernelKind::Sort => Box::new(Sorter::new(SorterCfg {
+            n: cfg.n,
+            latency: cfg.latency,
+            pipeline_records: cfg.pipeline_records,
+        })),
+        KernelKind::Checksum | KernelKind::Stats => Box::new(FoldEngine::new(cfg.clone())),
+    }
+}
+
+/// Wire layout of a checksum completion (one beat).
+pub fn pack_checksum_words(c: i64) -> [i32; CHECKSUM_OUT_WORDS] {
+    [c as i32, (c >> 32) as i32, 0, 0]
+}
+
+/// Wire layout of a stats completion (two beats).
+pub fn pack_stats_words(min: i32, max: i32, sum: i64, count: u32) -> [i32; STATS_OUT_WORDS] {
+    [min, max, sum as i32, (sum >> 32) as i32, count as i32, 0, 0, 0]
+}
+
+#[derive(Debug)]
+struct InFlightOut {
+    words: Vec<i32>,
+    /// Earliest cycle the first output beat may appear.
+    out_earliest: u64,
+    emitted_beats: usize,
+}
+
+/// Streaming fold engine: the checksum and stats kernels. Accumulates
+/// per input beat (running min/max/sum/xor — one adder/comparator per
+/// lane, the way the RTL would), emits the packed result
+/// `latency` cycles after the first input beat.
+///
+/// Cycle semantics mirror [`Sorter`]: fixed first-input→last-output
+/// latency for an unstalled record, initiation interval of `n/w`
+/// beats (back-to-back capable), correct stall behaviour under input
+/// starvation and output backpressure, and the same malformed-packet
+/// handling (a short or long record is flagged and dropped).
+pub struct FoldEngine {
+    cfg: KernelCfg,
+    in_beats: usize,
+    out_beats: usize,
+    // Streaming accumulators of the record being collected.
+    words_seen: usize,
+    first_beat_cycle: u64,
+    acc_min: i32,
+    acc_max: i32,
+    acc_sum: i64,
+    acc_xor: i32,
+    // Finished results awaiting output.
+    inflight: VecDeque<InFlightOut>,
+    order_desc: bool,
+    // Status / perf counters (probed + readable via regfile).
+    pub records_done: u64,
+    pub beats_in: u64,
+    pub beats_out: u64,
+    pub stall_in: u64,
+    pub stall_out: u64,
+    pub length_errors: u64,
+    // Force-signal names (per kind, so `checksum.s_axis_tready` and
+    // `stats.s_axis_tready` are distinct forceable wires).
+    force_in: &'static str,
+    force_out: &'static str,
+}
+
+impl FoldEngine {
+    pub fn new(cfg: KernelCfg) -> Self {
+        assert!(
+            matches!(cfg.kind, KernelKind::Checksum | KernelKind::Stats),
+            "FoldEngine only implements the fold kernels"
+        );
+        assert!(cfg.n.is_power_of_two() && cfg.n >= WORDS_PER_BEAT);
+        let lb = cfg.kind.structural_lb(cfg.n, WORDS_PER_BEAT);
+        assert!(
+            cfg.latency >= lb,
+            "configured latency {} below structural lower bound {} — \
+             no streaming fold could achieve this",
+            cfg.latency,
+            lb
+        );
+        let (force_in, force_out) = match cfg.kind {
+            KernelKind::Checksum => ("checksum.s_axis_tready", "checksum.m_axis_tvalid"),
+            _ => ("stats.s_axis_tready", "stats.m_axis_tvalid"),
+        };
+        Self {
+            in_beats: cfg.n / WORDS_PER_BEAT,
+            out_beats: cfg.out_words() / WORDS_PER_BEAT,
+            words_seen: 0,
+            first_beat_cycle: 0,
+            acc_min: i32::MAX,
+            acc_max: i32::MIN,
+            acc_sum: 0,
+            acc_xor: 0,
+            inflight: VecDeque::new(),
+            order_desc: false,
+            records_done: 0,
+            beats_in: 0,
+            beats_out: 0,
+            stall_in: 0,
+            stall_out: 0,
+            length_errors: 0,
+            force_in,
+            force_out,
+            cfg,
+        }
+    }
+
+    fn reset_accumulators(&mut self) {
+        self.words_seen = 0;
+        self.acc_min = i32::MAX;
+        self.acc_max = i32::MIN;
+        self.acc_sum = 0;
+        self.acc_xor = 0;
+    }
+
+    fn finalize_words(&self) -> Vec<i32> {
+        match self.cfg.kind {
+            KernelKind::Checksum => {
+                let c = ((self.acc_xor as i64) << 32) ^ self.acc_sum;
+                pack_checksum_words(c).to_vec()
+            }
+            _ => pack_stats_words(
+                self.acc_min,
+                self.acc_max,
+                self.acc_sum,
+                self.cfg.n as u32,
+            )
+            .to_vec(),
+        }
+    }
+}
+
+impl StreamKernel for FoldEngine {
+    fn kind(&self) -> KernelKind {
+        self.cfg.kind
+    }
+
+    fn n(&self) -> usize {
+        self.cfg.n
+    }
+
+    fn out_words(&self) -> usize {
+        self.cfg.out_words()
+    }
+
+    fn busy(&self) -> bool {
+        self.words_seen > 0 || !self.inflight.is_empty()
+    }
+
+    fn input_ready(&self) -> bool {
+        self.inflight.len() < self.cfg.pipeline_records
+    }
+
+    fn horizon(&self, now: u64) -> Horizon {
+        match self.inflight.front() {
+            Some(front) => Horizon::at_or_now(front.out_earliest, now),
+            None => Horizon::Idle,
+        }
+    }
+
+    fn tick(
+        &mut self,
+        ctx: &TickCtx,
+        s_axis: &mut Fifo<AxisBeat>,
+        m_axis: &mut Fifo<AxisBeat>,
+    ) {
+        // ---- input side ----
+        let in_ready_natural = self.inflight.len() < self.cfg.pipeline_records;
+        let in_ready = ctx.forced_bool(self.force_in, in_ready_natural);
+        if s_axis.can_pop() && in_ready {
+            let beat = s_axis.pop().unwrap();
+            if self.words_seen == 0 {
+                self.first_beat_cycle = ctx.cycle;
+            }
+            for v in beat.words() {
+                self.acc_min = self.acc_min.min(v);
+                self.acc_max = self.acc_max.max(v);
+                self.acc_sum += v as i64;
+                self.acc_xor ^= v;
+            }
+            self.words_seen += WORDS_PER_BEAT;
+            self.beats_in += 1;
+            let complete_len = self.words_seen >= self.cfg.n;
+            if beat.last || complete_len {
+                if self.words_seen != self.cfg.n {
+                    // Malformed packet: the fixed-N fold cannot pair it
+                    // with a completion; flag and drop (sticky error).
+                    self.length_errors += 1;
+                } else {
+                    // Earliest first-output: the unstalled schedule, or
+                    // the residual after the (possibly stalled) last
+                    // input beat — whichever is later.
+                    let ideal = self.first_beat_cycle + self.cfg.latency
+                        - self.out_beats as u64;
+                    let residual = self
+                        .cfg
+                        .latency
+                        .saturating_sub((self.in_beats + self.out_beats - 1) as u64)
+                        .max(1);
+                    self.inflight.push_back(InFlightOut {
+                        words: self.finalize_words(),
+                        out_earliest: ideal.max(ctx.cycle + residual),
+                        emitted_beats: 0,
+                    });
+                }
+                self.reset_accumulators();
+            }
+        } else if s_axis.can_pop() {
+            self.stall_in += 1;
+        }
+
+        // ---- output side ----
+        let out_valid_natural = self
+            .inflight
+            .front()
+            .map(|r| ctx.cycle >= r.out_earliest)
+            .unwrap_or(false);
+        let out_valid = ctx.forced_bool(self.force_out, out_valid_natural);
+        // A forced-high tvalid with an empty pipeline has no data to
+        // drive (hardware would put X on the bus); the model ignores
+        // the force rather than panicking the HDL thread.
+        if out_valid && !self.inflight.is_empty() {
+            if m_axis.can_push() {
+                let ob = self.out_beats;
+                let rec = self.inflight.front_mut().unwrap();
+                let i = rec.emitted_beats;
+                let mut words = [0i32; WORDS_PER_BEAT];
+                words.copy_from_slice(&rec.words[i * WORDS_PER_BEAT..(i + 1) * WORDS_PER_BEAT]);
+                m_axis.push(AxisBeat::from_words(words, i == ob - 1));
+                rec.emitted_beats += 1;
+                self.beats_out += 1;
+                if rec.emitted_beats == ob {
+                    self.inflight.pop_front();
+                    self.records_done += 1;
+                }
+            } else {
+                self.stall_out += 1;
+            }
+        }
+    }
+
+    fn soft_reset(&mut self) {
+        self.reset_accumulators();
+        self.inflight.clear();
+    }
+
+    fn set_order_desc(&mut self, desc: bool) {
+        // Order-invariant fold: latched for CONTROL read-back only.
+        self.order_desc = desc;
+    }
+
+    fn order_desc(&self) -> bool {
+        self.order_desc
+    }
+
+    fn status(&self) -> KernelStatus {
+        KernelStatus {
+            busy: StreamKernel::busy(self),
+            records_done: self.records_done,
+            stall_in: self.stall_in,
+            stall_out: self.stall_out,
+            beats_in: self.beats_in,
+            beats_out: self.beats_out,
+            length_error: self.length_errors > 0,
+        }
+    }
+
+    fn probe(&self, sink: &mut dyn ProbeSink) {
+        // Static per-kind signal paths: probing runs every recorded
+        // tick, so the hot path must not allocate.
+        let names: &[&str; 9] = if self.cfg.kind == KernelKind::Checksum {
+            &[
+                "platform.checksum.busy",
+                "platform.checksum.collecting_words",
+                "platform.checksum.inflight",
+                "platform.checksum.records_done",
+                "platform.checksum.beats_in",
+                "platform.checksum.beats_out",
+                "platform.checksum.stall_in",
+                "platform.checksum.stall_out",
+                "platform.checksum.length_errors",
+            ]
+        } else {
+            &[
+                "platform.stats.busy",
+                "platform.stats.collecting_words",
+                "platform.stats.inflight",
+                "platform.stats.records_done",
+                "platform.stats.beats_in",
+                "platform.stats.beats_out",
+                "platform.stats.stall_in",
+                "platform.stats.stall_out",
+                "platform.stats.length_errors",
+            ]
+        };
+        sink.sig(names[0], 1, StreamKernel::busy(self) as u64);
+        sink.sig(names[1], 16, self.words_seen as u64);
+        sink.sig(names[2], 8, self.inflight.len() as u64);
+        sink.sig(names[3], 32, self.records_done);
+        sink.sig(names[4], 32, self.beats_in);
+        sink.sig(names[5], 32, self.beats_out);
+        sink.sig(names[6], 32, self.stall_in);
+        sink.sig(names[7], 32, self.stall_out);
+        sink.sig(names[8], 8, self.length_errors);
+    }
+}
+
+impl StreamKernel for Sorter {
+    fn kind(&self) -> KernelKind {
+        KernelKind::Sort
+    }
+
+    fn n(&self) -> usize {
+        self.cfg().n
+    }
+
+    fn out_words(&self) -> usize {
+        self.cfg().n
+    }
+
+    fn busy(&self) -> bool {
+        Sorter::busy(self)
+    }
+
+    fn input_ready(&self) -> bool {
+        Sorter::input_ready(self)
+    }
+
+    fn horizon(&self, now: u64) -> Horizon {
+        Sorter::horizon(self, now)
+    }
+
+    fn tick(
+        &mut self,
+        ctx: &TickCtx,
+        s_axis: &mut Fifo<AxisBeat>,
+        m_axis: &mut Fifo<AxisBeat>,
+    ) {
+        Sorter::tick(self, ctx, s_axis, m_axis)
+    }
+
+    fn soft_reset(&mut self) {
+        Sorter::soft_reset(self)
+    }
+
+    fn set_order_desc(&mut self, desc: bool) {
+        self.order_desc = desc;
+    }
+
+    fn order_desc(&self) -> bool {
+        self.order_desc
+    }
+
+    fn status(&self) -> KernelStatus {
+        KernelStatus {
+            busy: Sorter::busy(self),
+            records_done: self.records_done,
+            stall_in: self.stall_in,
+            stall_out: self.stall_out,
+            beats_in: self.beats_in,
+            beats_out: self.beats_out,
+            length_error: self.length_errors > 0,
+        }
+    }
+
+    fn probe(&self, sink: &mut dyn ProbeSink) {
+        crate::hdl::signal::Probed::probe(self, sink)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hdl::axi::words_to_beats;
+    use crate::hdl::sim::ForceMap;
+    use crate::runtime::native::{record_checksum, record_stats};
+    use crate::testutil::{forall, XorShift64};
+
+    /// Drive a kernel standalone: feed `inputs`, collect completions,
+    /// returning (outputs, first_in_cycle, last_out_cycle).
+    fn run_kernel(
+        k: &mut dyn StreamKernel,
+        inputs: &[Vec<i32>],
+        forces: &ForceMap,
+        max_cycles: u64,
+    ) -> (Vec<Vec<i32>>, u64, u64) {
+        let mut s_axis = Fifo::new(2);
+        let mut m_axis = Fifo::new(2);
+        let mut pending: VecDeque<AxisBeat> =
+            inputs.iter().flat_map(|r| words_to_beats(r)).collect();
+        let out_n = k.out_words();
+        let mut out_words: Vec<i32> = Vec::new();
+        let mut outputs = Vec::new();
+        let mut first_in = None;
+        let mut last_out = 0;
+        for cycle in 0..max_cycles {
+            if let Some(b) = pending.front() {
+                if s_axis.can_push() {
+                    if first_in.is_none() {
+                        first_in = Some(cycle);
+                    }
+                    s_axis.push(*b);
+                    pending.pop_front();
+                }
+            }
+            let ctx = TickCtx { cycle, forces };
+            k.tick(&ctx, &mut s_axis, &mut m_axis);
+            if let Some(b) = m_axis.pop() {
+                out_words.extend_from_slice(&b.words());
+                last_out = cycle;
+                if out_words.len() == out_n {
+                    outputs.push(std::mem::take(&mut out_words));
+                }
+            }
+            s_axis.commit();
+            m_axis.commit();
+            if outputs.len() == inputs.len() && pending.is_empty() {
+                break;
+            }
+        }
+        (outputs, first_in.unwrap_or(0), last_out)
+    }
+
+    fn fold_cfg(kind: KernelKind, n: usize, extra: u64) -> KernelCfg {
+        KernelCfg {
+            kind,
+            n,
+            latency: kind.structural_lb(n, WORDS_PER_BEAT) + extra,
+            pipeline_records: 4,
+        }
+    }
+
+    #[test]
+    fn kernel_kind_ids_roundtrip_and_parse() {
+        for kind in [KernelKind::Sort, KernelKind::Checksum, KernelKind::Stats] {
+            assert_eq!(KernelKind::from_id(kind.id()), Some(kind));
+            assert_eq!(kind.to_string().parse::<KernelKind>().unwrap(), kind);
+        }
+        assert_eq!(KernelKind::from_id(0), None);
+        assert!("bogus".parse::<KernelKind>().is_err());
+        assert_eq!(KernelKind::Sort.out_words(1024), 1024);
+        assert_eq!(KernelKind::Checksum.out_words(1024), 4);
+        assert_eq!(KernelKind::Stats.out_words(1024), 8);
+        // The paper's sorter keeps its published figure as default.
+        assert_eq!(KernelKind::Sort.default_latency(1024), 1256);
+        for kind in [KernelKind::Sort, KernelKind::Checksum, KernelKind::Stats] {
+            for n in [64usize, 256, 1024] {
+                assert!(kind.default_latency(n) >= kind.structural_lb(n, 4));
+            }
+        }
+    }
+
+    #[test]
+    fn build_kernel_elaborates_every_kind() {
+        for kind in [KernelKind::Sort, KernelKind::Checksum, KernelKind::Stats] {
+            let cfg = KernelCfg {
+                kind,
+                n: 64,
+                latency: kind.default_latency(64),
+                pipeline_records: 4,
+            };
+            let k = build_kernel(&cfg);
+            assert_eq!(k.kind(), kind);
+            assert_eq!(k.n(), 64);
+            assert_eq!(k.out_words(), kind.out_words(64));
+            assert!(!k.busy());
+            assert_eq!(k.horizon(0), Horizon::Idle);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "below structural lower bound")]
+    fn impossible_fold_latency_rejected() {
+        FoldEngine::new(KernelCfg {
+            kind: KernelKind::Checksum,
+            n: 1024,
+            latency: 4,
+            pipeline_records: 4,
+        });
+    }
+
+    #[test]
+    fn checksum_one_record_matches_golden_with_exact_latency() {
+        let cfg = fold_cfg(KernelKind::Checksum, 256, 16);
+        let latency = cfg.latency;
+        let mut k = FoldEngine::new(cfg);
+        let mut rng = XorShift64::new(0xC5);
+        let input = rng.vec_i32(256);
+        let forces = ForceMap::new();
+        let (outs, first_in, last_out) = run_kernel(&mut k, &[input.clone()], &forces, 10_000);
+        assert_eq!(outs.len(), 1);
+        assert_eq!(outs[0], pack_checksum_words(record_checksum(&input)).to_vec());
+        let span = last_out - first_in + 1;
+        assert!(
+            (latency..=latency + 4).contains(&span),
+            "span {span} outside registered-interface tolerance of {latency}"
+        );
+        assert_eq!(k.records_done, 1);
+    }
+
+    #[test]
+    fn stats_one_record_matches_golden() {
+        let mut k = FoldEngine::new(fold_cfg(KernelKind::Stats, 64, 8));
+        let mut rng = XorShift64::new(0x57A7);
+        let input = rng.vec_i32(64);
+        let forces = ForceMap::new();
+        let (outs, _, _) = run_kernel(&mut k, &[input.clone()], &forces, 10_000);
+        let s = record_stats(&input);
+        assert_eq!(outs, vec![pack_stats_words(s.min, s.max, s.sum, s.count).to_vec()]);
+        assert_eq!(s.count, 64);
+    }
+
+    #[test]
+    fn fold_backpressure_and_forced_tready() {
+        // Forced tready=0 blocks input (the paper's "force signal
+        // values" hook works on fold kernels too).
+        let mut k = FoldEngine::new(fold_cfg(KernelKind::Stats, 64, 8));
+        let mut forces = ForceMap::new();
+        forces.insert("stats.s_axis_tready".into(), 0);
+        let mut s_axis = Fifo::new(2);
+        let mut m_axis = Fifo::new(2);
+        s_axis.push(AxisBeat::from_words([1, 2, 3, 4], false));
+        s_axis.commit();
+        for cycle in 0..100 {
+            let ctx = TickCtx { cycle, forces: &forces };
+            StreamKernel::tick(&mut k, &ctx, &mut s_axis, &mut m_axis);
+            s_axis.commit();
+            m_axis.commit();
+        }
+        assert_eq!(k.beats_in, 0, "forced tready=0 must block input");
+        assert!(k.stall_in > 0);
+    }
+
+    #[test]
+    fn forced_tvalid_on_empty_pipeline_is_ignored_not_a_panic() {
+        // The paper's force-signal hook must never take the HDL
+        // thread down: tvalid forced high with nothing in flight has
+        // no data to drive and is ignored (RTL would emit X).
+        for (kind, wire) in [
+            (KernelKind::Checksum, "checksum.m_axis_tvalid"),
+            (KernelKind::Stats, "stats.m_axis_tvalid"),
+        ] {
+            let mut k = FoldEngine::new(fold_cfg(kind, 64, 8));
+            let mut forces = ForceMap::new();
+            forces.insert(wire.into(), 1);
+            let mut s_axis = Fifo::new(2);
+            let mut m_axis = Fifo::new(2);
+            for cycle in 0..50 {
+                let ctx = TickCtx { cycle, forces: &forces };
+                StreamKernel::tick(&mut k, &ctx, &mut s_axis, &mut m_axis);
+                s_axis.commit();
+                m_axis.commit();
+            }
+            assert_eq!(k.beats_out, 0, "{kind}: no data must have been invented");
+        }
+        // Same guard on the sorter (shared forceable-wire semantics).
+        let mut s = crate::hdl::sorter::Sorter::new(crate::hdl::sorter::SorterCfg {
+            n: 64,
+            latency: 200,
+            pipeline_records: 4,
+        });
+        let mut forces = ForceMap::new();
+        forces.insert("sorter.m_axis_tvalid".into(), 1);
+        let mut s_axis = Fifo::new(2);
+        let mut m_axis = Fifo::new(2);
+        for cycle in 0..50 {
+            let ctx = TickCtx { cycle, forces: &forces };
+            Sorter::tick(&mut s, &ctx, &mut s_axis, &mut m_axis);
+            s_axis.commit();
+            m_axis.commit();
+        }
+        assert_eq!(s.beats_out, 0);
+    }
+
+    #[test]
+    fn fold_short_packet_flags_length_error() {
+        let mut k = FoldEngine::new(fold_cfg(KernelKind::Checksum, 64, 8));
+        let beats = words_to_beats(&(0..8).collect::<Vec<i32>>());
+        let mut s_axis = Fifo::new(4);
+        let mut m_axis = Fifo::new(4);
+        for b in beats {
+            s_axis.push(b);
+        }
+        s_axis.commit();
+        let forces = ForceMap::new();
+        for cycle in 0..50 {
+            let ctx = TickCtx { cycle, forces: &forces };
+            StreamKernel::tick(&mut k, &ctx, &mut s_axis, &mut m_axis);
+            s_axis.commit();
+            m_axis.commit();
+        }
+        assert_eq!(k.length_errors, 1);
+        assert_eq!(k.records_done, 0);
+        assert!(!StreamKernel::busy(&k), "dropped record must not linger");
+    }
+
+    #[test]
+    fn prop_fold_kernels_match_golden_ops_over_random_batches() {
+        // The tentpole bit-exactness contract at the kernel level: for
+        // random record sizes, batch sizes and contents, the streaming
+        // fold engines agree with the GoldenBackend native ops.
+        forall(
+            0xF01D,
+            25,
+            |g| {
+                let lg = g.rng.range(2, 8); // n in 4..=256
+                let n = 1usize << lg;
+                let records = g.rng.range(1, 3);
+                let data: Vec<Vec<i32>> = (0..records).map(|_| g.rng.vec_i32(n)).collect();
+                let checksum = g.rng.chance(1, 2);
+                (n, data, checksum)
+            },
+            |(n, data, checksum)| {
+                let kind = if *checksum { KernelKind::Checksum } else { KernelKind::Stats };
+                let mut k = FoldEngine::new(fold_cfg(kind, *n, 8));
+                let forces = ForceMap::new();
+                let (outs, _, _) = run_kernel(&mut k, data, &forces, 200_000);
+                if outs.len() != data.len() {
+                    return Err(format!("{} of {} records emerged", outs.len(), data.len()));
+                }
+                for (o, i) in outs.iter().zip(data) {
+                    let expect = match kind {
+                        KernelKind::Checksum => {
+                            pack_checksum_words(record_checksum(i)).to_vec()
+                        }
+                        _ => {
+                            let s = record_stats(i);
+                            pack_stats_words(s.min, s.max, s.sum, s.count).to_vec()
+                        }
+                    };
+                    if o != &expect {
+                        return Err(format!("{kind} kernel diverged from the golden op"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn fold_pipelines_back_to_back_records() {
+        // 4 records streamed back-to-back must finish in roughly
+        // latency + 3·II, not 4·latency (fully pipelined, like the
+        // sorter).
+        let cfg = fold_cfg(KernelKind::Checksum, 256, 16);
+        let latency = cfg.latency;
+        let mut k = FoldEngine::new(cfg);
+        let mut rng = XorShift64::new(0xBB);
+        let inputs: Vec<Vec<i32>> = (0..4).map(|_| rng.vec_i32(256)).collect();
+        let forces = ForceMap::new();
+        let (outs, first_in, last_out) = run_kernel(&mut k, &inputs, &forces, 20_000);
+        assert_eq!(outs.len(), 4);
+        let span = last_out - first_in + 1;
+        let ii = 64; // n/w beats per record
+        assert!(
+            span < latency + 3 * ii + 32,
+            "span {span}: not pipelined (4·latency would be {})",
+            4 * latency
+        );
+        assert_eq!(k.records_done, 4);
+    }
+
+    #[test]
+    fn sorter_implements_stream_kernel() {
+        let k: Box<dyn StreamKernel> = build_kernel(&KernelCfg::default());
+        assert_eq!(k.kind(), KernelKind::Sort);
+        assert_eq!(k.n(), 1024);
+        assert_eq!(k.out_words(), 1024);
+        let mut rng = XorShift64::new(0x50);
+        let input = rng.vec_i32(1024);
+        let mut expect = input.clone();
+        expect.sort_unstable();
+        let mut boxed = k;
+        let forces = ForceMap::new();
+        let (outs, _, _) = run_kernel(boxed.as_mut(), &[input], &forces, 20_000);
+        assert_eq!(outs, vec![expect]);
+        assert_eq!(boxed.status().records_done, 1);
+    }
+
+    #[test]
+    fn fold_horizon_tracks_inflight_schedule() {
+        let mut k = FoldEngine::new(fold_cfg(KernelKind::Stats, 64, 32));
+        assert_eq!(StreamKernel::horizon(&k, 0), Horizon::Idle);
+        let beats = words_to_beats(&(0..64).collect::<Vec<i32>>());
+        let mut s_axis = Fifo::new(64);
+        let mut m_axis = Fifo::new(2);
+        for b in beats {
+            s_axis.push(b);
+        }
+        s_axis.commit();
+        let forces = ForceMap::new();
+        let mut cycle = 0u64;
+        while k.beats_in < 16 {
+            let ctx = TickCtx { cycle, forces: &forces };
+            StreamKernel::tick(&mut k, &ctx, &mut s_axis, &mut m_axis);
+            s_axis.commit();
+            m_axis.commit();
+            cycle += 1;
+            assert!(cycle < 1000, "record never consumed");
+        }
+        match StreamKernel::horizon(&k, cycle) {
+            Horizon::At(c) => {
+                assert!(c > cycle, "horizon {c} not in the future of {cycle}");
+                assert_eq!(StreamKernel::horizon(&k, c), Horizon::Now);
+            }
+            other => panic!("expected At(_) with a record in flight, got {other:?}"),
+        }
+    }
+}

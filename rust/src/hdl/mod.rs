@@ -10,8 +10,12 @@
 //! * [`interconnect`] — AXI-Lite address-decode interconnect,
 //! * [`regfile`] — accelerator control/status registers,
 //! * [`dma`] — Xilinx-style AXI DMA (MM2S + S2MM, direct register mode),
+//! * [`kernel`] — the pluggable **stream-kernel layer**
+//!   ([`kernel::StreamKernel`]): the compute core between the streams,
+//!   selectable per device (sort / checksum / stats),
 //! * [`sorter`] — the streaming sorting network (1024 × 32-bit in 1256
-//!   cycles, 128-bit streams — the Spiral IP of the paper §III),
+//!   cycles, 128-bit streams — the Spiral IP of the paper §III; the
+//!   default kernel),
 //! * [`bridge`] — the **PCIe simulation bridge** (paper §II): AXI-facing,
 //!   pin-compatible stand-in for the hardware PCIe-AXI bridge,
 //! * [`platform`] — the top-level wiring of all of the above.
@@ -26,6 +30,7 @@ pub mod bram;
 pub mod bridge;
 pub mod dma;
 pub mod interconnect;
+pub mod kernel;
 pub mod platform;
 pub mod regfile;
 pub mod signal;

@@ -13,21 +13,27 @@
 //!            ├── 0x0000  regfile ────────┘ ctrl           │
 //!            ├── 0x1000  dma ctrl                         │ (irq_test)
 //!            └── 0x100000 bram (BAR2 window)
-//!          [DMA] ── MM2S stream ──▶ [sorter] ── stream ──▶ [DMA S2MM]
+//!          [DMA] ── MM2S stream ──▶ [stream kernel] ── stream ──▶ [DMA S2MM]
 //! ```
 //!
 //! Address map: BAR0 → `0x0000` (regfile at +0x0000, DMA at +0x1000);
 //! BAR2 → `0x10_0000` (BRAM). All modules share the 250 MHz clock.
+//!
+//! The compute core between the streams is a pluggable
+//! [`StreamKernel`] selected by [`PlatformCfg::kernel`] — the sorter
+//! by default (the paper's platform, byte-identical), or the checksum
+//! / stats engines for heterogeneous fleets. Everything else on this
+//! page is kernel-agnostic.
 
 use super::axi::{Ar, Aw, AxisBeat, B, R, W};
 use super::bram::Bram;
 use super::bridge::{BarWindow, Bridge, IRQ_PINS};
 use super::dma::AxiDma;
 use super::interconnect::{Interconnect, LitePort, MapEntry};
-use super::regfile::{RegFile, SorterStatus};
+use super::kernel::{build_kernel, KernelCfg, StreamKernel};
+use super::regfile::{KernelInfo, RegFile};
 use super::sim::{Fifo, ForceMap, Horizon, TickCtx};
 use super::signal::{ProbeSink, Probed};
-use super::sorter::{Sorter, SorterCfg};
 use crate::link::{Endpoint, LinkMode};
 use crate::Result;
 
@@ -41,7 +47,9 @@ pub mod irq_map {
 /// Platform configuration.
 #[derive(Debug, Clone)]
 pub struct PlatformCfg {
-    pub sorter: SorterCfg,
+    /// The compute core between the streams (kind + record length +
+    /// latency + pipeline capacity). Defaults to the paper's sorter.
+    pub kernel: KernelCfg,
     pub link_mode: LinkMode,
     /// BRAM size behind BAR2 (bytes).
     pub bram_size: usize,
@@ -60,7 +68,7 @@ pub struct PlatformCfg {
 impl Default for PlatformCfg {
     fn default() -> Self {
         Self {
-            sorter: SorterCfg::default(),
+            kernel: KernelCfg::default(),
             link_mode: LinkMode::Mmio,
             bram_size: 64 * 1024,
             stream_fifo_depth: 64,
@@ -77,7 +85,8 @@ pub struct Platform {
     pub xbar: Interconnect,
     pub regfile: RegFile,
     pub dma: AxiDma,
-    pub sorter: Sorter,
+    /// The pluggable compute core between the MM2S and S2MM streams.
+    pub kernel: Box<dyn StreamKernel>,
     pub bram: Bram,
     // Bridge master → interconnect.
     cfg_port: LitePort,
@@ -119,12 +128,19 @@ impl Platform {
         ];
         let mut bridge = Bridge::new(cfg.link_mode, windows);
         bridge.poll_interval = cfg.poll_interval;
+        let kernel = build_kernel(&cfg.kernel);
+        let mut regfile = RegFile::new();
+        regfile.set_kernel_info(KernelInfo {
+            kernel_id: kernel.kind().id(),
+            reclen: kernel.n() as u32,
+            out_words: kernel.out_words() as u32,
+        });
         Self {
             bridge,
             xbar: Interconnect::new(map),
-            regfile: RegFile::new(),
+            regfile,
             dma: AxiDma::new(),
-            sorter: Sorter::new(cfg.sorter.clone()),
+            kernel,
             bram: Bram::new(cfg.bram_size),
             cfg_port: LitePort::new(),
             slave_ports: vec![LitePort::new(), LitePort::new(), LitePort::new()],
@@ -166,16 +182,8 @@ impl Platform {
         // 2. Interconnect: route config transactions.
         self.xbar.tick(&mut self.cfg_port, &mut self.slave_ports);
 
-        // 3. Regfile (slave 0) with sorter status wires.
-        let status = SorterStatus {
-            busy: self.sorter.busy(),
-            records_done: self.sorter.records_done,
-            stall_in: self.sorter.stall_in,
-            stall_out: self.sorter.stall_out,
-            beats_in: self.sorter.beats_in,
-            beats_out: self.sorter.beats_out,
-            length_error: self.sorter.length_errors > 0,
-        };
+        // 3. Regfile (slave 0) with the kernel's status wires.
+        let status = self.kernel.status();
         {
             let p = &mut self.slave_ports[0];
             self.regfile.tick(
@@ -183,9 +191,9 @@ impl Platform {
             );
         }
         // CONTROL wiring.
-        self.sorter.order_desc = self.regfile.order_desc;
+        self.kernel.set_order_desc(self.regfile.order_desc);
         if self.regfile.soft_reset_pulse {
-            self.sorter.soft_reset();
+            self.kernel.soft_reset();
         }
         self.irq_test_level = self.regfile.irq_test_pulse.is_some();
 
@@ -205,8 +213,8 @@ impl Platform {
             self.bram.tick(&mut p.aw, &mut p.w, &mut p.b, &mut p.ar, &mut p.r);
         }
 
-        // 6. Sorter between the streams.
-        self.sorter.tick(ctx, &mut self.mm2s_axis, &mut self.s2mm_axis);
+        // 6. The stream kernel between the streams.
+        self.kernel.tick(ctx, &mut self.mm2s_axis, &mut self.s2mm_axis);
 
         // End of cycle: every registered element latches.
         self.commit();
@@ -230,7 +238,7 @@ impl Platform {
     /// True if any part of the platform still has work in flight
     /// (used by run loops to know when the design has gone quiet).
     pub fn busy(&self) -> bool {
-        self.sorter.busy()
+        self.kernel.busy()
             || self.bridge.busy()
             || !self.mm2s_axis.is_empty()
             || !self.s2mm_axis.is_empty()
@@ -303,7 +311,7 @@ impl Platform {
                 return Horizon::Now;
             }
         }
-        if !self.mm2s_axis.is_empty() && self.sorter.input_ready() {
+        if !self.mm2s_axis.is_empty() && self.kernel.input_ready() {
             return Horizon::Now;
         }
         if !self.s2mm_axis.is_empty() && self.dma.s2mm_stream_ready() {
@@ -315,11 +323,11 @@ impl Platform {
             .min(self.dma.horizon())
             .min(self.regfile.horizon())
             .min(self.bram.horizon());
-        // The sorter's scheduled output can only become an event if
-        // the output FIFO has room; a backpressured sorter wakes via
+        // The kernel's scheduled output can only become an event if
+        // the output FIFO has room; a backpressured kernel wakes via
         // the S2MM-consumes-a-beat rule above instead.
         if self.s2mm_axis.can_push() {
-            h = h.min(self.sorter.horizon(now));
+            h = h.min(self.kernel.horizon(now));
         }
         h
         // The interconnect carries no horizon of its own: every one of
@@ -334,7 +342,7 @@ impl Probed for Platform {
         self.xbar.probe(sink);
         self.regfile.probe(sink);
         self.dma.probe(sink);
-        self.sorter.probe(sink);
+        self.kernel.probe(sink);
         self.bram.probe(sink);
         sink.sig("platform.mm2s_axis.level", 8, self.mm2s_axis.len() as u64);
         sink.sig("platform.s2mm_axis.level", 8, self.s2mm_axis.len() as u64);
@@ -502,6 +510,131 @@ mod tests {
         assert!(sim.cycle < 20_000, "offload took {} cycles", sim.cycle);
 
         // Record count visible via the regfile.
+        assert_eq!(rd32!(rregs::REC_COUNT), 1);
+
+        // Capability registers advertise the default sorter.
+        assert_eq!(rd32!(rregs::KERNEL), crate::hdl::kernel::KernelKind::Sort.id());
+        assert_eq!(rd32!(rregs::RECLEN), 1024);
+        assert_eq!(rd32!(rregs::OUT_WORDS), 1024);
+    }
+
+    #[test]
+    fn full_offload_checksum_through_platform() {
+        // The same bridge/DMA/regfile path, with the checksum kernel
+        // behind the streams: 256 words in, one 16-byte completion
+        // out, bit-exact with the golden checksum op.
+        use crate::hdl::dma::{cr, regs as dregs};
+        use crate::hdl::kernel::{pack_checksum_words, KernelCfg, KernelKind};
+        use crate::hdl::regfile::regs as rregs;
+        use crate::runtime::native::record_checksum;
+
+        let (mut vm_ep, mut hdl_ep) = Endpoint::inproc_pair();
+        let kernel = KernelCfg {
+            kind: KernelKind::Checksum,
+            n: 256,
+            latency: KernelKind::Checksum.default_latency(256),
+            pipeline_records: 8,
+        };
+        let mut plat = Platform::new(PlatformCfg { kernel, ..PlatformCfg::default() });
+        let mut sim = Sim::new();
+        let mut host = vec![0u8; 64 * 1024];
+        let mut irqs: Vec<u16> = Vec::new();
+        let mut rng = XorShift64::new(0xC0DE);
+        let input = rng.vec_i32(256);
+        for (i, v) in input.iter().enumerate() {
+            host[0x1000 + i * 4..0x1000 + i * 4 + 4].copy_from_slice(&v.to_le_bytes());
+        }
+        let forces = ForceMap::new();
+        let mut pending_reads: Vec<(u64, Vec<u8>)> = Vec::new();
+
+        macro_rules! cycles {
+            ($n:expr) => {
+                for _ in 0..$n {
+                    let ctx = TickCtx { cycle: sim.cycle, forces: &forces };
+                    plat.tick(&ctx, &mut hdl_ep).unwrap();
+                    for m in vm_ep.poll().unwrap() {
+                        match m {
+                            Msg::DmaRead { tag, addr, len } => {
+                                let d = host[addr as usize..(addr + len as u64) as usize]
+                                    .to_vec();
+                                vm_ep.send(&Msg::DmaReadResp { tag, data: d }).unwrap();
+                            }
+                            Msg::DmaWrite { addr, data } => {
+                                host[addr as usize..addr as usize + data.len()]
+                                    .copy_from_slice(&data);
+                            }
+                            Msg::Interrupt { vector } => irqs.push(vector),
+                            Msg::MmioReadResp { tag, data } => pending_reads.push((tag, data)),
+                            _ => {}
+                        }
+                    }
+                    sim.cycle += 1;
+                }
+            };
+        }
+        macro_rules! wr32 {
+            ($addr:expr, $val:expr) => {
+                vm_ep
+                    .send(&Msg::MmioWrite {
+                        bar: 0,
+                        addr: $addr as u64,
+                        data: ($val as u32).to_le_bytes().to_vec(),
+                    })
+                    .unwrap();
+                cycles!(16);
+            };
+        }
+        macro_rules! rd32 {
+            ($addr:expr) => {{
+                vm_ep
+                    .send(&Msg::MmioRead { tag: 9, bar: 0, addr: $addr as u64, len: 4 })
+                    .unwrap();
+                let mut val = None;
+                for _ in 0..500 {
+                    cycles!(1);
+                    if let Some(pos) = pending_reads.iter().position(|(t, _)| *t == 9) {
+                        let (_, d) = pending_reads.remove(pos);
+                        val = Some(u32::from_le_bytes(d[..4].try_into().unwrap()));
+                        break;
+                    }
+                }
+                val.expect("mmio read timeout")
+            }};
+        }
+
+        // Probe-driven identity: the capability registers say exactly
+        // what RTL sits behind the streams.
+        assert_eq!(rd32!(rregs::KERNEL), KernelKind::Checksum.id());
+        assert_eq!(rd32!(rregs::RECLEN), 256);
+        assert_eq!(rd32!(rregs::OUT_WORDS), 4);
+
+        const DMA: u32 = 0x1000;
+        wr32!(DMA + dregs::S2MM_DMACR, cr::RS | cr::IOC_IRQ_EN);
+        wr32!(DMA + dregs::S2MM_DA, 0x8000u32);
+        wr32!(DMA + dregs::S2MM_LENGTH, 16u32); // the probed out size
+        wr32!(DMA + dregs::MM2S_DMACR, cr::RS | cr::IOC_IRQ_EN);
+        wr32!(DMA + dregs::MM2S_SA, 0x1000u32);
+        wr32!(DMA + dregs::MM2S_LENGTH, 1024u32);
+
+        let mut done = false;
+        for _ in 0..40 {
+            cycles!(200);
+            if irqs.contains(&(irq_map::S2MM as u16)) {
+                done = true;
+                break;
+            }
+        }
+        assert!(done, "no checksum completion interrupt");
+        let got: Vec<i32> = (0..4)
+            .map(|i| {
+                i32::from_le_bytes(host[0x8000 + i * 4..0x8000 + i * 4 + 4].try_into().unwrap())
+            })
+            .collect();
+        assert_eq!(
+            got,
+            pack_checksum_words(record_checksum(&input)).to_vec(),
+            "platform checksum diverged from the golden op"
+        );
         assert_eq!(rd32!(rregs::REC_COUNT), 1);
     }
 }

@@ -1,17 +1,21 @@
 //! Accelerator control/status register file (AXI4-Lite slave).
 //!
 //! Occupies BAR0 offsets `0x0000..0x1000` (the DMA sits at `0x1000`,
-//! see [`crate::hdl::platform`]). The guest driver probes the ID and
-//! version, configures the sort order, observes completion counters,
-//! and uses the scratch register as a link sanity check.
+//! see [`crate::hdl::platform`]). The guest driver probes the ID,
+//! version and the **kernel capability registers** (which
+//! [`crate::hdl::kernel::StreamKernel`] sits behind the streams, its
+//! record length and its completion size), configures the sort order,
+//! observes completion counters, and uses the scratch register as a
+//! link sanity check.
 
 use super::axi::{resp, LiteAr, LiteAw, LiteB, LiteR, LiteW};
+use super::kernel::KernelStatus;
 use super::sim::{Fifo, Horizon};
 use super::signal::{ProbeSink, Probed};
 
 /// Register offsets within the regfile window.
 pub mod regs {
-    /// RO: identifies the sorting platform ("SRT1").
+    /// RO: identifies the streaming-accelerator platform ("SRT1").
     pub const ID: u32 = 0x00;
     /// RO: platform version.
     pub const VERSION: u32 = 0x04;
@@ -19,14 +23,14 @@ pub mod regs {
     pub const SCRATCH: u32 = 0x08;
     /// RW: control — bit0 = descending order, bit1 = soft reset (self-clearing).
     pub const CONTROL: u32 = 0x0C;
-    /// RO: status — bit0 = sorter busy, bit1 = length-error sticky.
+    /// RO: status — bit0 = kernel busy, bit1 = length-error sticky.
     pub const STATUS: u32 = 0x10;
     /// RO: completed records.
     pub const REC_COUNT: u32 = 0x14;
     /// RO: free-running cycle counter (lo/hi).
     pub const CYCLES_LO: u32 = 0x18;
     pub const CYCLES_HI: u32 = 0x1C;
-    /// RO: sorter perf counters.
+    /// RO: kernel perf counters.
     pub const STALL_IN: u32 = 0x20;
     pub const STALL_OUT: u32 = 0x24;
     /// RO: beats in/out (throughput observation).
@@ -35,24 +39,41 @@ pub mod regs {
     /// RW: interrupt test doorbell — writing vector v fires MSI v
     /// (used by the driver self-test and the irq_latency example).
     pub const IRQ_TEST: u32 = 0x30;
+    /// RO: **kernel capability** — which compute core sits between the
+    /// streams ([`crate::hdl::kernel::KernelKind::id`]: 1 = sort,
+    /// 2 = checksum, 3 = stats). The driver probes this instead of
+    /// assuming a sorter; see DEBUGGING.md §6.
+    pub const KERNEL: u32 = 0x34;
+    /// RO: record length the kernel is elaborated for (32-bit words).
+    pub const RECLEN: u32 = 0x38;
+    /// RO: completion size per record (32-bit words) — what the driver
+    /// must program into S2MM and read back.
+    pub const OUT_WORDS: u32 = 0x3C;
 }
 
 /// Magic id value ("SRT1" little-endian).
 pub const ID_VALUE: u32 = 0x3154_5253;
-/// Version reported.
-pub const VERSION_VALUE: u32 = 0x0001_0003;
+/// Version reported (bumped to .4 when the kernel capability registers
+/// appeared at 0x34..0x40).
+pub const VERSION_VALUE: u32 = 0x0001_0004;
 
-/// Mirror of sorter state the regfile exposes (pushed by the platform
-/// each cycle — models the status wires into the CSR block).
-#[derive(Debug, Default, Clone, Copy)]
-pub struct SorterStatus {
-    pub busy: bool,
-    pub records_done: u64,
-    pub stall_in: u64,
-    pub stall_out: u64,
-    pub beats_in: u64,
-    pub beats_out: u64,
-    pub length_error: bool,
+/// Kernel identity the regfile advertises through the capability
+/// registers (latched at elaboration by the platform).
+#[derive(Debug, Clone, Copy)]
+pub struct KernelInfo {
+    /// [`crate::hdl::kernel::KernelKind::id`] of the elaborated kernel.
+    pub kernel_id: u32,
+    /// Record length in 32-bit words.
+    pub reclen: u32,
+    /// Completion size in 32-bit words.
+    pub out_words: u32,
+}
+
+impl Default for KernelInfo {
+    fn default() -> Self {
+        // The paper's platform: the n=1024 sorter.
+        Self { kernel_id: 1, reclen: 1024, out_words: 1024 }
+    }
 }
 
 /// The register file module.
@@ -64,8 +85,11 @@ pub struct RegFile {
     pub soft_reset_pulse: bool,
     /// Pulse: IRQ_TEST written; carries the vector.
     pub irq_test_pulse: Option<u16>,
-    /// Status wires from the sorter.
-    pub status: SorterStatus,
+    /// Status wires from the stream kernel.
+    pub status: KernelStatus,
+    /// Capability-register contents (set once by the platform at
+    /// elaboration via [`RegFile::set_kernel_info`]).
+    pub kernel_info: KernelInfo,
     /// Sticky length-error (cleared by writing STATUS).
     sticky_len_err: bool,
     cycle_lo_latch: u32,
@@ -90,7 +114,8 @@ impl RegFile {
             order_desc: false,
             soft_reset_pulse: false,
             irq_test_pulse: None,
-            status: SorterStatus::default(),
+            status: KernelStatus::default(),
+            kernel_info: KernelInfo::default(),
             sticky_len_err: false,
             cycle_lo_latch: 0,
             cycles: 0,
@@ -99,6 +124,11 @@ impl RegFile {
             reads: 0,
             writes: 0,
         }
+    }
+
+    /// Latch the capability-register contents (platform elaboration).
+    pub fn set_kernel_info(&mut self, info: KernelInfo) {
+        self.kernel_info = info;
     }
 
     fn read_reg(&mut self, addr: u32) -> (u32, u8) {
@@ -122,6 +152,9 @@ impl RegFile {
             regs::BEATS_IN => self.status.beats_in as u32,
             regs::BEATS_OUT => self.status.beats_out as u32,
             regs::IRQ_TEST => 0,
+            regs::KERNEL => self.kernel_info.kernel_id,
+            regs::RECLEN => self.kernel_info.reclen,
+            regs::OUT_WORDS => self.kernel_info.out_words,
             _ => return (0xDEAD_BEEF, resp::SLVERR),
         };
         (val, resp::OKAY)
@@ -144,7 +177,8 @@ impl RegFile {
             regs::IRQ_TEST => self.irq_test_pulse = Some(data as u16),
             regs::ID | regs::VERSION | regs::REC_COUNT | regs::CYCLES_LO
             | regs::CYCLES_HI | regs::STALL_IN | regs::STALL_OUT
-            | regs::BEATS_IN | regs::BEATS_OUT => return resp::SLVERR, // RO
+            | regs::BEATS_IN | regs::BEATS_OUT | regs::KERNEL | regs::RECLEN
+            | regs::OUT_WORDS => return resp::SLVERR, // RO
             _ => return resp::SLVERR,
         }
         resp::OKAY
@@ -175,7 +209,7 @@ impl RegFile {
     pub fn tick(
         &mut self,
         cycle: u64,
-        status: SorterStatus,
+        status: KernelStatus,
         aw: &mut Fifo<LiteAw>,
         w: &mut Fifo<LiteW>,
         b: &mut Fifo<LiteB>,
@@ -254,7 +288,7 @@ mod tests {
             self.ar.commit();
             self.r.commit();
         }
-        fn tick(&mut self, rf: &mut RegFile, cycle: u64, st: SorterStatus) {
+        fn tick(&mut self, rf: &mut RegFile, cycle: u64, st: KernelStatus) {
             rf.tick(cycle, st, &mut self.aw, &mut self.w, &mut self.b, &mut self.ar, &mut self.r);
             self.commit();
         }
@@ -264,7 +298,7 @@ mod tests {
         ch.ar.push(LiteAr { addr });
         ch.commit();
         for c in 0..4 {
-            ch.tick(rf, c, SorterStatus::default());
+            ch.tick(rf, c, KernelStatus::default());
             if let Some(r) = ch.r.pop() {
                 return (r.data, r.resp);
             }
@@ -277,7 +311,7 @@ mod tests {
         ch.w.push(LiteW { data, strb: 0xF });
         ch.commit();
         for c in 0..4 {
-            ch.tick(rf, c, SorterStatus::default());
+            ch.tick(rf, c, KernelStatus::default());
             if let Some(b) = ch.b.pop() {
                 return b.resp;
             }
@@ -320,11 +354,31 @@ mod tests {
         ch.commit();
         let mut pulsed = false;
         for c in 0..4 {
-            ch.tick(&mut rf, c, SorterStatus::default());
+            ch.tick(&mut rf, c, KernelStatus::default());
             pulsed |= rf.soft_reset_pulse;
         }
         assert!(pulsed, "soft reset pulse missing");
         assert!(!rf.order_desc, "bit0 cleared by second write");
+    }
+
+    #[test]
+    fn kernel_capability_registers_read_and_are_ro() {
+        let mut rf = RegFile::new();
+        // Defaults advertise the paper's n=1024 sorter.
+        let mut ch = Ch::new();
+        assert_eq!(read(&mut rf, &mut ch, regs::KERNEL), (1, resp::OKAY));
+        assert_eq!(read(&mut rf, &mut ch, regs::RECLEN), (1024, resp::OKAY));
+        assert_eq!(read(&mut rf, &mut ch, regs::OUT_WORDS), (1024, resp::OKAY));
+        // The platform latches the elaborated kernel's identity.
+        rf.set_kernel_info(KernelInfo { kernel_id: 3, reclen: 64, out_words: 8 });
+        assert_eq!(read(&mut rf, &mut ch, regs::KERNEL), (3, resp::OKAY));
+        assert_eq!(read(&mut rf, &mut ch, regs::RECLEN), (64, resp::OKAY));
+        assert_eq!(read(&mut rf, &mut ch, regs::OUT_WORDS), (8, resp::OKAY));
+        // Capability registers are RO toward the guest.
+        assert_eq!(write(&mut rf, &mut ch, regs::KERNEL, 1), resp::SLVERR);
+        assert_eq!(write(&mut rf, &mut ch, regs::RECLEN, 1), resp::SLVERR);
+        assert_eq!(write(&mut rf, &mut ch, regs::OUT_WORDS, 1), resp::SLVERR);
+        assert_eq!(rf.kernel_info.kernel_id, 3, "RO write must not land");
     }
 
     #[test]
@@ -351,7 +405,7 @@ mod tests {
         ch.w.push(LiteW { data: 1, strb: 0x3 });
         ch.commit();
         for c in 0..4 {
-            ch.tick(&mut rf, c, SorterStatus::default());
+            ch.tick(&mut rf, c, KernelStatus::default());
             if let Some(b) = ch.b.pop() {
                 assert_eq!(b.resp, resp::SLVERR);
                 return;
@@ -368,7 +422,7 @@ mod tests {
         ch.tick(
             &mut rf,
             0,
-            SorterStatus { busy: true, length_error: true, ..Default::default() },
+            KernelStatus { busy: true, length_error: true, ..Default::default() },
         );
         let (v, _) = read(&mut rf, &mut ch, regs::STATUS);
         assert_eq!(v & 0b10, 0b10, "sticky error visible");
@@ -386,7 +440,7 @@ mod tests {
         ch.commit();
         let mut seen = None;
         for c in 0..4 {
-            ch.tick(&mut rf, c, SorterStatus::default());
+            ch.tick(&mut rf, c, KernelStatus::default());
             if let Some(v) = rf.irq_test_pulse {
                 seen = Some(v);
             }

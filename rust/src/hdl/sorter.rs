@@ -259,7 +259,10 @@ impl Sorter {
             .map(|r| ctx.cycle >= r.out_earliest)
             .unwrap_or(false);
         let out_valid = ctx.forced_bool("sorter.m_axis_tvalid", out_valid_natural);
-        if out_valid {
+        // A forced-high tvalid with an empty pipeline has no data to
+        // drive (hardware would put X on the bus); the model ignores
+        // the force rather than panicking the HDL thread.
+        if out_valid && !self.inflight.is_empty() {
             if m_axis.can_push() {
                 let bpr = self.beats_per_record;
                 let rec = self.inflight.front_mut().unwrap();

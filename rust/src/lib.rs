@@ -19,7 +19,13 @@
 //! The demonstration workload is the paper's sorting offload: a
 //! streaming sorting network (1024 × 32-bit ints in 1256 cycles,
 //! 128-bit AXI-Stream) fed by a Xilinx-style AXI DMA ([`hdl::dma`],
-//! [`hdl::sorter`]), driven by a guest driver ([`vm::guest`]).
+//! [`hdl::sorter`]), driven by a guest driver ([`vm::guest`]). The
+//! compute core is pluggable ([`hdl::kernel::StreamKernel`]): the
+//! sorter is the default, with streaming checksum and stats engines
+//! alongside — a multi-device topology can carry any mix
+//! (`--kernel k=sort|checksum|stats`), the guest driver discovering
+//! each device's kernel, record length and completion size from BAR0
+//! capability registers at probe time.
 //!
 //! Results are checked against a pluggable **golden model**
 //! ([`runtime`]): by default a pure-Rust bitonic-network reference

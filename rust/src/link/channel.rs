@@ -420,6 +420,15 @@ pub struct Endpoint {
     /// idle side can block in [`Endpoint::wait_any`] instead of
     /// spin-polling (the event-driven scheduler's wake path).
     doorbell: Arc<Doorbell>,
+    /// Wall-clock latency modelled on every **payload** send from this
+    /// endpoint (control frames — acks, handshakes — are exempt):
+    /// the per-device link-latency heterogeneity knob
+    /// (`--device-link-latency k=us`). Zero = the ideal wire of the
+    /// paper's setup. Applied at the endpoint so the cost is visible
+    /// in *records per second*, not only in device-cycle accounting
+    /// (the event-driven scheduler fast-forwards device-time gaps, so
+    /// a cycles-only model would be wall-invisible).
+    send_latency: Duration,
 }
 
 impl Endpoint {
@@ -435,7 +444,23 @@ impl Endpoint {
             sent_by_label: Default::default(),
             recv_by_label: Default::default(),
             doorbell,
+            send_latency: Duration::ZERO,
         }
+    }
+
+    /// Model a per-message wall-clock latency on this endpoint's
+    /// payload sends (the `--device-link-latency` heterogeneity knob;
+    /// zero disables it). On a multi-lane HDL thread the stall is
+    /// shared — a slow wire delays the whole PHY servicing loop — but
+    /// only *this* device's traffic pays it, which is exactly the
+    /// asymmetry work-steal sharding exploits.
+    pub fn set_send_latency(&mut self, latency: Duration) {
+        self.send_latency = latency;
+    }
+
+    /// The modelled per-send latency (zero = ideal wire).
+    pub fn send_latency(&self) -> Duration {
+        self.send_latency
     }
 
     /// This endpoint's device id on the shared topology.
@@ -560,14 +585,23 @@ impl Endpoint {
 
     /// Send on pair A (VM-initiated transactions and their responses).
     pub fn send_a(&mut self, msg: &Msg) -> Result<()> {
+        self.model_wire_latency();
         *self.sent_by_label.entry(msg.label()).or_default() += 1;
         self.pair_a.send(msg)
     }
 
     /// Send on pair B (HDL-initiated transactions and their responses).
     pub fn send_b(&mut self, msg: &Msg) -> Result<()> {
+        self.model_wire_latency();
         *self.sent_by_label.entry(msg.label()).or_default() += 1;
         self.pair_b.send(msg)
+    }
+
+    #[inline]
+    fn model_wire_latency(&self) {
+        if !self.send_latency.is_zero() {
+            std::thread::sleep(self.send_latency);
+        }
     }
 
     /// Route a payload message to the conventional pair for its type.
@@ -894,6 +928,28 @@ mod tests {
         let d2 = Endpoint::uds_device_dir(base, 2);
         assert_ne!(d1, d2);
         assert!(d1.starts_with(base));
+    }
+
+    #[test]
+    fn send_latency_knob_costs_wall_time_per_payload_send() {
+        let (mut vm, mut hdl) = Endpoint::inproc_pair();
+        hdl.set_send_latency(Duration::from_millis(5));
+        assert_eq!(hdl.send_latency(), Duration::from_millis(5));
+        // The latency applies to the configured endpoint's sends...
+        let t0 = Instant::now();
+        for v in 0..3u16 {
+            hdl.send(&Msg::Interrupt { vector: v }).unwrap();
+        }
+        assert!(
+            t0.elapsed() >= Duration::from_millis(15),
+            "3 sends at 5 ms each finished in {:?}",
+            t0.elapsed()
+        );
+        assert_eq!(vm.poll().unwrap().len(), 3, "latency must not drop frames");
+        // ...and not to the peer's (asymmetric wire model).
+        let t1 = Instant::now();
+        vm.send(&Msg::MmioWrite { bar: 0, addr: 0, data: vec![0; 4] }).unwrap();
+        assert!(t1.elapsed() < Duration::from_millis(5));
     }
 
     #[test]

@@ -4,10 +4,14 @@
 //! vmhdl cosim     [--records N] [--mode mmio|tlp] [--transport inproc|uds]
 //!                 [--devices N] [--shard round-robin|size|work-steal]
 //!                 [--queue-depth D] [--device-latency k=cycles[,..]]
+//!                 [--kernel sort|checksum|stats | --kernel k=kind[,..]]
+//!                 [--device-n k=N] [--device-link-latency k=us]
 //!                 [--vcd out.vcd] [--golden true] ...   run a full co-simulation
 //!                 (devices > 1 shards the batch across N PCIe FPGAs;
 //!                 queue-depth > 1 pipelines D records per device over
-//!                 a scatter-gather descriptor ring)
+//!                 a scatter-gather descriptor ring; per-device --kernel
+//!                 / --device-n runs a heterogeneous mixed fleet with
+//!                 records routed to matching-kernel devices)
 //! vmhdl hdl-side  --dir <sockets> [...]    the HDL simulator process (UDS)
 //! vmhdl vm-side   [--dir <sockets>] [...]  the VM process (UDS)
 //! vmhdl rtt       [--iters N]              MMIO round-trip microbench (Table III)
@@ -106,10 +110,7 @@ fn cmd_cosim(cfg: &Config) -> Result<()> {
     } else {
         None
     };
-    if cfg.devices > 1
-        || cfg.queue_depth > 1
-        || cfg.shard == scenario::ShardPolicy::WorkSteal
-    {
+    if cfg.needs_sharded_runner() {
         return cmd_cosim_sharded(cfg, golden.as_deref_mut());
     }
     let rep =
@@ -151,11 +152,13 @@ fn cmd_cosim(cfg: &Config) -> Result<()> {
     Ok(())
 }
 
-/// Multi-device / pipelined cosim: shard the batch, then report
-/// aggregate and per-device figures.
+/// Multi-device / pipelined / mixed-fleet cosim: shard the batch,
+/// then report aggregate and per-device figures.
 fn cmd_cosim_sharded(cfg: &Config, golden: Option<&mut dyn GoldenBackend>) -> Result<()> {
+    let cc = cfg.cosim()?;
+    let specs = scenario::device_specs(&cc);
     let (rep, _outs) = scenario::run_sharded_offload_depth(
-        cfg.cosim()?,
+        cc,
         cfg.records,
         cfg.seed,
         cfg.shard,
@@ -175,8 +178,10 @@ fn cmd_cosim_sharded(cfg: &Config, golden: Option<&mut dyn GoldenBackend>) -> Re
     for (k, hdl) in rep.hdl.iter().enumerate() {
         let ticked = hdl.cycles.saturating_sub(hdl.fast_forwarded_cycles);
         println!(
-            "  dev{k}: {} records, {} device-cycles ({} ticked, {} fast-forwarded), \
+            "  dev{k} [{} n={}]: {} records, {} device-cycles ({} ticked, {} fast-forwarded), \
              {} busy / {} idle, {} irqs, {} desc fetches",
+            specs[k].kernel,
+            specs[k].n,
             rep.per_device_records[k],
             rep.per_device_cycles[k],
             ticked,
@@ -207,7 +212,8 @@ fn cmd_hdl_side(cfg: &Config) -> Result<()> {
         cfg.vcd
     );
     if n == 1 {
-        let ep = Endpoint::uds(Side::Hdl, &cfg.socket_dir, session)?;
+        let mut ep = Endpoint::uds(Side::Hdl, &cfg.socket_dir, session)?;
+        ep.set_send_latency(vmhdl::coordinator::cosim::link_latency_for(&cc, 0));
         let platform = Platform::new(vmhdl::coordinator::cosim::platform_cfg_for(&cc, 0));
         // Runs until killed (the supervisor / user stops us).
         let stop = Arc::new(AtomicBool::new(false));
@@ -224,6 +230,7 @@ fn cmd_hdl_side(cfg: &Config) -> Result<()> {
         std::fs::create_dir_all(&devdir)?;
         let mut ep = Endpoint::uds(Side::Hdl, &devdir, session)?;
         ep.set_device_id(k as u8);
+        ep.set_send_latency(vmhdl::coordinator::cosim::link_latency_for(&cc, k));
         lanes.push((
             Platform::new(vmhdl::coordinator::cosim::platform_cfg_for(&cc, k)),
             ep,
@@ -241,10 +248,7 @@ fn cmd_hdl_side(cfg: &Config) -> Result<()> {
 fn cmd_vm_side(cfg: &Config) -> Result<()> {
     let mut c2 = cfg.clone();
     c2.transport = "uds".to_string();
-    if cfg.devices > 1
-        || cfg.queue_depth > 1
-        || cfg.shard == scenario::ShardPolicy::WorkSteal
-    {
+    if cfg.needs_sharded_runner() {
         let (rep, _outs) = scenario::run_sharded_offload_depth(
             c2.cosim()?,
             cfg.records,
@@ -367,8 +371,10 @@ fn topology() -> String {
      │        │ MMIO / IRQ / DMA buffers  │      │   ├─ 0x0000   regfile (CSR)        │\n\
      │ VMM                                │      │   ├─ 0x1000   AXI DMA (MM2S/S2MM)  │\n\
      │   ├─ guest memory (DMA target)     │      │   └─ 0x100000 BRAM (BAR2)          │\n\
-     │   └─ PCIe FPGA pseudo device       │      │   DMA ⇄ sorter: AXI-Stream 128b    │\n\
-     │        BAR0 64K, BAR2 1M, MSI×4    │      │   sorter: 1024×32b in 1256 cycles  │\n\
+     │   └─ PCIe FPGA pseudo device       │      │   DMA ⇄ kernel: AXI-Stream 128b    │\n\
+     │        BAR0 64K, BAR2 1M, MSI×4    │      │   stream kernel (probed via CSR):  │\n\
+     │        │                           │      │   sort 1024×32b in 1256 cycles |   │\n\
+     │        │                           │      │   checksum | stats                 │\n\
      │        │                           │      │   PCIe simulation bridge           │\n\
      └────────┼───────────────────────────┘      └────────┬───────────────────────────┘\n\
      \n\

@@ -48,8 +48,38 @@ pub mod board {
     pub const BAR2_SIZE: u64 = 1024 * 1024;
     /// Number of MSI vectors advertised.
     pub const MSI_VECTORS: u16 = 4;
-    /// Subsystem id (NetFPGA SUME).
+    /// Subsystem id (NetFPGA SUME) — the sort-kernel personality the
+    /// paper's bitstream reports.
     pub const SUBSYS_ID: u16 = 0x0007;
+    /// Subsystem-id base for non-sort stream-kernel personalities:
+    /// a bitstream carrying kernel id `k` (see
+    /// [`crate::hdl::kernel::KernelKind::id`]) reports
+    /// `KERNEL_SUBSYS_BASE | k`. The sort kernel keeps the original
+    /// [`SUBSYS_ID`], so the default personality is bit-identical to
+    /// the paper's board.
+    pub const KERNEL_SUBSYS_BASE: u16 = 0x0100;
+
+    /// The subsystem id a bitstream with stream-kernel id
+    /// `kernel_id` reports. This is the config-space *hint* the driver
+    /// cross-checks against the authoritative BAR0 capability register
+    /// (`regfile::regs::KERNEL`) during probe — a mismatch means the
+    /// enumerated personality and the RTL behind the bridge disagree
+    /// (DEBUGGING.md §6).
+    pub fn subsys_id_for_kernel(kernel_id: u32) -> u16 {
+        match kernel_id {
+            1 => SUBSYS_ID,
+            k => KERNEL_SUBSYS_BASE | (k as u16 & 0xFF),
+        }
+    }
+
+    /// Inverse of [`subsys_id_for_kernel`].
+    pub fn kernel_id_for_subsys(subsys: u16) -> u32 {
+        if subsys == SUBSYS_ID {
+            1
+        } else {
+            (subsys & 0xFF) as u32
+        }
+    }
     /// Canonical guest-physical BAR placements (what the guest "BIOS"
     /// assigns at enumeration; the TLP-mode bridge needs them to
     /// reverse-map bus addresses — DESIGN.md documents this static

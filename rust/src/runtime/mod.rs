@@ -44,6 +44,18 @@ pub use native::NativeGolden;
 #[cfg(feature = "pjrt")]
 pub use pjrt::PjrtGolden;
 
+/// Summary statistics of one record — the golden op behind the HDL
+/// stats stream kernel ([`crate::hdl::kernel::KernelKind::Stats`]).
+/// The wire layout of the corresponding completion is
+/// [`crate::hdl::kernel::pack_stats_words`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StatsSummary {
+    pub min: i32,
+    pub max: i32,
+    pub sum: i64,
+    pub count: u32,
+}
+
 /// Cumulative cost accounting of a backend (all backends report the
 /// same shape so scenario output stays comparable across them).
 #[derive(Debug, Clone, Copy, Default)]
@@ -105,6 +117,21 @@ pub trait GoldenBackend {
     /// Order-invariant record checksum (used by the coordinator to
     /// pair DMA input/output buffers without retaining full inputs).
     fn checksum(&mut self, record: &[i32]) -> Result<i64>;
+
+    /// Summary statistics (min/max/sum/count) of a record — the golden
+    /// twin of the HDL stats stream kernel. The default follows the
+    /// shared spec ([`native::record_stats`]); backends with their own
+    /// engine may override, but must agree bit-for-bit.
+    fn stats_summary(&mut self, record: &[i32]) -> Result<StatsSummary> {
+        if record.len() != self.n() {
+            return Err(Error::runtime(format!(
+                "stats: record has {} words, backend is for n={}",
+                record.len(),
+                self.n()
+            )));
+        }
+        Ok(native::record_stats(record))
+    }
 
     /// Cumulative cost accounting.
     fn stats(&self) -> BackendStats;

@@ -51,6 +51,22 @@ pub fn record_checksum(record: &[i32]) -> i64 {
     ((xor as i64) << 32) ^ sum
 }
 
+/// Summary statistics of a record (min/max/sum/count) — the golden op
+/// the HDL stats stream kernel must agree with bit-for-bit. `sum` is
+/// accumulated in i64, so it cannot wrap for any record length this
+/// framework supports.
+pub fn record_stats(record: &[i32]) -> crate::runtime::StatsSummary {
+    let mut min = i32::MAX;
+    let mut max = i32::MIN;
+    let mut sum = 0i64;
+    for &v in record {
+        min = min.min(v);
+        max = max.max(v);
+        sum += v as i64;
+    }
+    crate::runtime::StatsSummary { min, max, sum, count: record.len() as u32 }
+}
+
 /// The pure-Rust golden backend (default). Self-contained: no
 /// artifacts, no Python, no external libraries.
 pub struct NativeGolden {
@@ -200,6 +216,24 @@ mod tests {
         let mut edited = rec;
         edited[0] ^= 1 << 30;
         assert_ne!(record_checksum(&rec), record_checksum(&edited));
+    }
+
+    #[test]
+    fn stats_summary_matches_a_naive_scan() {
+        use crate::runtime::GoldenBackend as _;
+        let mut m = model();
+        let mut rng = XorShift64::new(15);
+        let rec = rng.vec_i32(1024);
+        let s = m.stats_summary(&rec).unwrap();
+        assert_eq!(s.min, *rec.iter().min().unwrap());
+        assert_eq!(s.max, *rec.iter().max().unwrap());
+        assert_eq!(s.sum, rec.iter().map(|&v| v as i64).sum::<i64>());
+        assert_eq!(s.count, 1024);
+        // Order-invariant, like the checksum.
+        let mut rev = rec.clone();
+        rev.reverse();
+        assert_eq!(m.stats_summary(&rev).unwrap(), s);
+        assert!(m.stats_summary(&[1, 2, 3]).is_err());
     }
 
     #[test]

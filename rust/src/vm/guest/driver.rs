@@ -1,11 +1,25 @@
-//! The sorting-offload device drivers (kernel-module analogues).
+//! The stream-offload device drivers (kernel-module analogues).
 //!
 //! Probe sequence, BAR sizing, command-register and MSI setup, DMA
 //! buffer management, DMA programming and interrupt handling — the
 //! exact code paths a Linux driver for the paper's platform
 //! exercises, expressed over the [`GuestEnv`] MMIO interface so they
 //! run identically against the HDL simulation and (hypothetically)
-//! real hardware. Two programming models, as with the real Xilinx IP:
+//! real hardware.
+//!
+//! **Probe-driven kernel discovery**: the driver no longer assumes a
+//! sorter. During probe it reads the platform's capability registers
+//! (`regfile::regs::{KERNEL, RECLEN, OUT_WORDS}`) and adopts the
+//! advertised record length and completion size — the S2MM transfer
+//! is sized from what the *device* says it produces (a sorter returns
+//! `n` words, the checksum kernel one beat, the stats kernel two).
+//! The config-space subsystem id carries the same kernel id as an
+//! enumeration-level hint and is cross-checked against the BAR0
+//! register; callers that require a specific kernel set
+//! [`SortDriver::expect_kernel`] and the probe refuses a mismatched
+//! device (DEBUGGING.md §6 walks through that failure).
+//!
+//! Two programming models, as with the real Xilinx IP:
 //!
 //! * [`SortDriver`] — direct register mode: SA/DA/LENGTH per record,
 //!   one completion interrupt round trip each;
@@ -22,6 +36,7 @@
 use std::time::Duration;
 
 use crate::hdl::dma::{cr, desc, regs as dma_regs, sr};
+use crate::hdl::kernel::KernelKind;
 use crate::hdl::regfile::{regs as rf_regs, ID_VALUE};
 use crate::pcie::board;
 use crate::pcie::config_space::{cmd, regs as cfg_regs};
@@ -88,8 +103,21 @@ pub struct SortDriver {
     /// DMA buffers (src = MM2S source, dst = S2MM destination).
     pub src: Option<DmaBuf>,
     pub dst: Option<DmaBuf>,
-    /// Record length in words (fixed by the hardware sorter).
+    /// Record length in words. Seeded by the caller, **overwritten at
+    /// probe** with the device's RECLEN capability register — the
+    /// hardware, not the caller, knows its record length.
     pub n: usize,
+    /// Which stream kernel the probed device carries (capability
+    /// register KERNEL; [`KernelKind::Sort`] until probed).
+    pub kernel: KernelKind,
+    /// Completion size in words (capability register OUT_WORDS; equal
+    /// to `n` for the sorter, one beat for checksum, two for stats).
+    /// Sizes the S2MM transfer and the readback.
+    pub out_words: usize,
+    /// If set, probe refuses a device whose capability register
+    /// advertises any other kernel — the guard a mixed-fleet runner
+    /// relies on to never feed records to the wrong engine.
+    pub expect_kernel: Option<KernelKind>,
     pub stats: XferStats,
     /// Completion timeout (a hung device is reported, not spun forever).
     /// Extended while the device demonstrably makes progress — see
@@ -141,6 +169,9 @@ impl SortDriver {
             src: None,
             dst: None,
             n,
+            kernel: KernelKind::Sort,
+            out_words: n,
+            expect_kernel: None,
             stats: XferStats::default(),
             timeout: Duration::from_secs(10),
             device,
@@ -152,6 +183,11 @@ impl SortDriver {
         (self.n * 4) as u32
     }
 
+    /// Completion size in bytes (probed; sizes S2MM and the readback).
+    fn out_bytes(&self) -> u32 {
+        (self.out_words * 4) as u32
+    }
+
     /// PCI probe: identify the device, size + assign BARs, enable
     /// memory/bus-master, configure MSI, verify the platform ID, and
     /// allocate DMA buffers. Equivalent to the kernel module's
@@ -160,9 +196,9 @@ impl SortDriver {
         self.probe_platform(env)?;
 
         env.state("probe:buffers")?;
-        // --- DMA buffers ---
+        // --- DMA buffers (dst sized from the probed completion) ---
         self.src = Some(env.vmm.mem.alloc(self.rec_bytes())?);
-        self.dst = Some(env.vmm.mem.alloc(self.rec_bytes())?);
+        self.dst = Some(env.vmm.mem.alloc(self.out_bytes())?);
 
         // --- put both DMA channels in run state ---
         self.channel_init(env)?;
@@ -172,9 +208,10 @@ impl SortDriver {
     }
 
     /// The mode-independent front half of `probe()`: config-space
-    /// identification, BAR sizing/assignment, MEM+BME, MSI setup, and
-    /// the platform ID / scratch sanity check. Shared by the direct
-    /// driver and [`SortDriverSg`].
+    /// identification, BAR sizing/assignment, MEM+BME, MSI setup, the
+    /// platform ID / scratch sanity check, and **kernel discovery**
+    /// from the capability registers. Shared by the direct driver and
+    /// [`SortDriverSg`].
     fn probe_platform(&mut self, env: &mut GuestEnv) -> Result<()> {
         if env.device != self.device {
             return Err(Error::vm(format!(
@@ -234,6 +271,55 @@ impl SortDriver {
             self.state = DriverState::Failed;
             return Err(Error::vm(format!("probe: scratch mismatch {back:#x}")));
         }
+
+        env.state("probe:kernel")?;
+        // --- kernel discovery: the capability registers are the
+        //     authority on what RTL sits behind the streams ---
+        let kernel_id = env.read32(0, REGFILE_BASE + rf_regs::KERNEL as u64)?;
+        let Some(kernel) = KernelKind::from_id(kernel_id) else {
+            self.state = DriverState::Failed;
+            return Err(Error::vm(format!(
+                "probe: unknown kernel id {kernel_id} in the capability register"
+            )));
+        };
+        if let Some(expect) = self.expect_kernel {
+            if kernel != expect {
+                self.state = DriverState::Failed;
+                return Err(Error::vm(format!(
+                    "probe: device {} carries the {kernel} kernel, driver \
+                     expected {expect} — refusing to bind (wrong-kernel \
+                     probe; see DEBUGGING.md §6)",
+                    self.device
+                )));
+            }
+        }
+        // Cross-check the enumeration-level hint: the subsystem id the
+        // config space reported must name the same kernel. A mismatch
+        // means the enumerated personality and the RTL disagree.
+        let subsys = (env.config_read32(cfg_regs::SUBSYS_VENDOR)? >> 16) as u16;
+        if board::kernel_id_for_subsys(subsys) != kernel_id {
+            self.state = DriverState::Failed;
+            return Err(Error::vm(format!(
+                "probe: config-space subsystem id {subsys:#06x} names kernel \
+                 {}, but the capability register reads {kernel} — personality \
+                 mismatch (see DEBUGGING.md §6)",
+                board::kernel_id_for_subsys(subsys)
+            )));
+        }
+        // Adopt the device's geometry: record length and completion
+        // size come from the hardware, not from the caller's guess.
+        let reclen = env.read32(0, REGFILE_BASE + rf_regs::RECLEN as u64)? as usize;
+        let out_words = env.read32(0, REGFILE_BASE + rf_regs::OUT_WORDS as u64)? as usize;
+        if reclen == 0 || out_words == 0 {
+            self.state = DriverState::Failed;
+            return Err(Error::vm(format!(
+                "probe: implausible geometry (reclen {reclen}, out {out_words})"
+            )));
+        }
+        self.kernel = kernel;
+        self.n = reclen;
+        self.out_words = out_words;
+
         self.state = DriverState::Probed;
         Ok(())
     }
@@ -296,21 +382,28 @@ impl SortDriver {
         self.state = DriverState::Submitted;
 
         // S2MM first (sink ready before source floods), then MM2S —
-        // the order the Xilinx driver uses.
+        // the order the Xilinx driver uses. The sink is sized from the
+        // *probed* completion (OUT_WORDS), the source from the record:
+        // for a sorter the two coincide; for the fold kernels the
+        // completion is a beat or two while the record is n words.
         env.state("xfer:program_s2mm")?;
         env.write32(0, DMA_BASE + dma_regs::S2MM_DA as u64, dst.addr as u32)?;
         env.write32(0, DMA_BASE + dma_regs::S2MM_DA_MSB as u64, (dst.addr >> 32) as u32)?;
-        let len = if self.faults.bad_length {
-            self.rec_bytes() - 4
-        } else {
-            self.rec_bytes()
-        };
-        env.write32(0, DMA_BASE + dma_regs::S2MM_LENGTH as u64, len)?;
+        let fault = if self.faults.bad_length { 4 } else { 0 };
+        env.write32(
+            0,
+            DMA_BASE + dma_regs::S2MM_LENGTH as u64,
+            self.out_bytes() - fault,
+        )?;
 
         env.state("xfer:program_mm2s")?;
         env.write32(0, DMA_BASE + dma_regs::MM2S_SA as u64, src.addr as u32)?;
         env.write32(0, DMA_BASE + dma_regs::MM2S_SA_MSB as u64, (src.addr >> 32) as u32)?;
-        env.write32(0, DMA_BASE + dma_regs::MM2S_LENGTH as u64, len)?;
+        env.write32(
+            0,
+            DMA_BASE + dma_regs::MM2S_LENGTH as u64,
+            self.rec_bytes() - fault,
+        )?;
         Ok(())
     }
 
@@ -329,7 +422,7 @@ impl SortDriver {
         self.wait_complete(env)?;
 
         env.state("xfer:readback")?;
-        let out = env.vmm.mem.read_i32(dst.addr, self.n)?;
+        let out = env.vmm.mem.read_i32(dst.addr, self.out_words)?;
         self.state = DriverState::Complete;
         self.stats.records += 1;
         Ok(out)
@@ -558,6 +651,7 @@ impl SortDriverSg {
 
         env.state("probe:sg-rings")?;
         let rec = self.drv.rec_bytes();
+        let out = self.drv.out_bytes();
         // Rings need 64-byte alignment; the allocator guarantees 16.
         let ring_bytes = self.depth as u32 * desc::SIZE + (desc::ALIGN as u32 - 16);
         let ring_mm2s = env.vmm.mem.alloc(ring_bytes)?;
@@ -570,15 +664,16 @@ impl SortDriverSg {
         for i in 0..self.depth {
             self.slots.push(SgSlot {
                 src: env.vmm.mem.alloc(rec)?,
-                dst: env.vmm.mem.alloc(rec)?,
+                dst: env.vmm.mem.alloc(out)?,
                 mm2s_desc: mm2s_base + (i as u64) * desc::SIZE as u64,
                 s2mm_desc: s2mm_base + (i as u64) * desc::SIZE as u64,
             });
         }
         // Write the circular descriptor chains. Lengths are fixed per
         // record, so CONTROL is set once here; submit only refreshes
-        // the status words (and the input data).
-        let len = if self.drv.faults.bad_length { rec - 4 } else { rec };
+        // the status words (and the input data). The MM2S side streams
+        // the record, the S2MM side lands the probed completion size.
+        let fault = if self.drv.faults.bad_length { 4 } else { 0 };
         for i in 0..self.depth {
             let next = (i + 1) % self.depth;
             let s = self.slots[i];
@@ -587,9 +682,15 @@ impl SortDriverSg {
                 s.mm2s_desc,
                 self.slots[next].mm2s_desc,
                 s.src.addr,
-                len | desc::CTRL_SOF | desc::CTRL_EOF,
+                (rec - fault) | desc::CTRL_SOF | desc::CTRL_EOF,
             )?;
-            write_descriptor(env, s.s2mm_desc, self.slots[next].s2mm_desc, s.dst.addr, len)?;
+            write_descriptor(
+                env,
+                s.s2mm_desc,
+                self.slots[next].s2mm_desc,
+                s.dst.addr,
+                out - fault,
+            )?;
         }
 
         env.state("probe:sg-channels")?;
@@ -694,7 +795,7 @@ impl SortDriverSg {
         if status & desc::STS_CMPLT == 0 {
             return Ok(None);
         }
-        let out = env.vmm.mem.read_i32(slot.dst.addr, self.drv.n)?;
+        let out = env.vmm.mem.read_i32(slot.dst.addr, self.drv.out_words)?;
         self.tail = (self.tail + 1) % self.depth;
         self.in_flight -= 1;
         self.drv.stats.records += 1;

@@ -65,8 +65,27 @@ impl Vmm {
     /// Build a VMM enumerating one pseudo device per link endpoint —
     /// the N-device topology. Endpoint k becomes device index k with a
     /// unique BDF (`00:01.0`, `00:02.0`, ...) on the simulated bus.
-    pub fn new_multi(mut links: Vec<Endpoint>, mode: LinkMode, ram_size: usize) -> Self {
+    /// Every device reports the sort-kernel personality (the paper's
+    /// board); heterogeneous fleets use [`Vmm::new_multi_with_kernels`].
+    pub fn new_multi(links: Vec<Endpoint>, mode: LinkMode, ram_size: usize) -> Self {
+        let kernels = vec![1u32; links.len()];
+        Self::new_multi_with_kernels(links, mode, ram_size, &kernels)
+    }
+
+    /// [`Vmm::new_multi`] with a per-device stream-kernel personality:
+    /// `kernels[k]` is the kernel id device k's config space reports
+    /// in its subsystem id
+    /// ([`crate::pcie::board::subsys_id_for_kernel`]) — the
+    /// enumeration-level half of kernel probing (the authoritative
+    /// half is the device's own BAR0 capability register).
+    pub fn new_multi_with_kernels(
+        mut links: Vec<Endpoint>,
+        mode: LinkMode,
+        ram_size: usize,
+        kernels: &[u32],
+    ) -> Self {
         assert!(!links.is_empty(), "a VMM needs at least one device");
+        assert_eq!(links.len(), kernels.len(), "one kernel id per device");
         assert!(links.len() <= board::MAX_DEVICES);
         if links.len() > 1 {
             // One doorbell across all VM-side endpoints: a guest
@@ -82,7 +101,7 @@ impl Vmm {
         let mut alloc = BusAllocator::new(0, board::BAR0_GPA);
         let mut devs = Vec::with_capacity(links.len());
         let mut irqs = Vec::with_capacity(links.len());
-        for link in links {
+        for (link, &kernel_id) in links.into_iter().zip(kernels) {
             // The allocator hands out BDFs; the BAR *windows* follow
             // the static per-device layout (`board::bar0_gpa(k)` /
             // `bar2_gpa(k)`) that the TLP-mode bridge reverse-maps —
@@ -94,7 +113,7 @@ impl Vmm {
             let config = ConfigSpace::new(
                 board::VENDOR_ID,
                 board::DEVICE_ID,
-                board::SUBSYS_ID,
+                board::subsys_id_for_kernel(kernel_id),
                 0x058000,
                 BarSet::new(vec![
                     BarDef::new(0, board::BAR0_SIZE, BarKind::Mem32),

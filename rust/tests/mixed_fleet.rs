@@ -1,0 +1,233 @@
+//! End-to-end tests of the heterogeneous stream-kernel fleet: N PCIe
+//! devices carrying different compute cores (sort / checksum / stats)
+//! and different record lengths on one simulated topology, driven
+//! concurrently by the sharded runners — the acceptance surface of
+//! the pluggable [`vmhdl::hdl::kernel::StreamKernel`] layer.
+
+use std::time::Duration;
+
+use vmhdl::coordinator::cosim::{CoSim, CoSimCfg};
+use vmhdl::coordinator::scenario::{self, device_specs, DeviceSpec, ShardPolicy};
+use vmhdl::hdl::kernel::{pack_checksum_words, pack_stats_words, KernelKind};
+use vmhdl::pcie::board;
+use vmhdl::pcie::config_space::regs as cfg_regs;
+use vmhdl::runtime::native::{record_checksum, record_stats};
+use vmhdl::testutil::XorShift64;
+use vmhdl::vm::guest::{SortDriver, SortDriverSg};
+use vmhdl::vm::vmm::{GuestEnv, NoopHook};
+
+/// The acceptance fleet: device 0 sorts 256-word records, device 1
+/// checksums 256-word records, device 2 computes stats over 64-word
+/// records (a per-device `n` override on top of the kernel override).
+fn mixed_cfg() -> CoSimCfg {
+    let mut cfg = CoSimCfg { devices: 3, ..Default::default() };
+    cfg.platform.kernel.n = 256;
+    cfg.device_kernel = vec![(1, KernelKind::Checksum), (2, KernelKind::Stats)];
+    cfg.device_n = vec![(2, 64)];
+    cfg
+}
+
+/// Expected outputs for `records` drawn from `seed` against the fleet
+/// of `specs`, reproducing the runner's routing (record i → group
+/// i mod G, groups in device order) and the matching golden op.
+fn expected_outputs(specs: &[DeviceSpec], records: usize, seed: u64) -> Vec<Vec<i32>> {
+    let mut groups: Vec<DeviceSpec> = Vec::new();
+    for s in specs {
+        if !groups.contains(s) {
+            groups.push(*s);
+        }
+    }
+    let mut rng = XorShift64::new(seed);
+    (0..records)
+        .map(|i| {
+            let g = groups[i % groups.len()];
+            let input = rng.vec_i32(g.n);
+            match g.kernel {
+                KernelKind::Sort => {
+                    let mut e = input;
+                    e.sort_unstable();
+                    e
+                }
+                KernelKind::Checksum => pack_checksum_words(record_checksum(&input)).to_vec(),
+                KernelKind::Stats => {
+                    let s = record_stats(&input);
+                    pack_stats_words(s.min, s.max, s.sum, s.count).to_vec()
+                }
+            }
+        })
+        .collect()
+}
+
+#[test]
+fn mixed_fleet_static_and_work_steal_match_golden_ops() {
+    // The acceptance criterion: a 3-device sort+checksum+stats run
+    // (static and work-steal) completes with every record's result
+    // equal to the matching GoldenBackend op, per-device n honored.
+    let records = 9;
+    let seed = 0x3F1EE7;
+    let specs = device_specs(&mixed_cfg());
+    assert_eq!(
+        specs,
+        vec![
+            DeviceSpec { kernel: KernelKind::Sort, n: 256 },
+            DeviceSpec { kernel: KernelKind::Checksum, n: 256 },
+            DeviceSpec { kernel: KernelKind::Stats, n: 64 },
+        ]
+    );
+    let expect = expected_outputs(&specs, records, seed);
+    for policy in [ShardPolicy::RoundRobin, ShardPolicy::WorkSteal] {
+        for depth in [1usize, 2] {
+            let (rep, outs) = scenario::run_sharded_offload_depth(
+                mixed_cfg(),
+                records,
+                seed,
+                policy,
+                depth,
+                None,
+            )
+            .unwrap_or_else(|e| panic!("{policy} depth {depth}: {e}"));
+            assert_eq!(outs, expect, "{policy} depth {depth}: outputs diverged");
+            assert_eq!(rep.records, records);
+            assert_eq!(rep.per_device_records.iter().sum::<usize>(), records);
+            // Sort results are 256 words, checksum 4, stats 8 — the
+            // probed completion size drove every S2MM transfer.
+            assert_eq!(outs[0].len(), 256);
+            assert_eq!(outs[1].len(), 4);
+            assert_eq!(outs[2].len(), 8);
+            // Every device did real, accounted work.
+            assert!(rep.per_device_cycles.iter().all(|&c| c > 0));
+            assert_eq!(rep.hdl.len(), 3);
+            assert_eq!(
+                rep.hdl.iter().map(|h| h.records_done).sum::<u64>(),
+                records as u64
+            );
+        }
+    }
+}
+
+#[test]
+fn mixed_fleet_same_seed_runs_are_cycle_deterministic_at_depth2() {
+    // The determinism contract survives heterogeneity: under a static
+    // policy the fill→drain→ack discipline lands every control MMIO
+    // on a quiesced device, whatever kernel it carries.
+    let run = || {
+        scenario::run_sharded_offload_depth(
+            mixed_cfg(),
+            6,
+            0xD37A11,
+            ShardPolicy::RoundRobin,
+            2,
+            None,
+        )
+        .unwrap()
+    };
+    let (a, outs_a) = run();
+    let (b, outs_b) = run();
+    assert_eq!(
+        a.per_device_cycles, b.per_device_cycles,
+        "mixed-fleet per-device cycles must not depend on host timing"
+    );
+    assert_eq!(outs_a, outs_b);
+    assert_eq!(a.per_device_records, b.per_device_records);
+    // Depth 2 ran the SG rings on every device.
+    for (k, h) in a.hdl.iter().enumerate() {
+        assert!(h.desc_fetches > 0, "device {k} never fetched a descriptor");
+        assert_eq!(h.desc_fetches, h.desc_writebacks, "device {k} ring leaked");
+    }
+}
+
+#[test]
+fn wrong_kernel_probe_is_refused_with_diagnosis() {
+    // DEBUGGING.md §6: a driver that requires a sorter must refuse a
+    // checksum device at probe time — before any record is staged.
+    let mut cosim = CoSim::launch(mixed_cfg()).unwrap();
+    let mut hook = NoopHook;
+    {
+        let mut env = GuestEnv::for_device(&mut cosim.vmm, &mut hook, 1);
+        let mut drv = SortDriver::for_device(256, 1);
+        drv.expect_kernel = Some(KernelKind::Sort);
+        let err = drv.probe(&mut env).unwrap_err().to_string();
+        assert!(err.contains("checksum"), "{err}");
+        assert!(err.contains("wrong-kernel") || err.contains("refusing"), "{err}");
+    }
+    // The SG driver shares the probe front half, so it refuses too.
+    {
+        let mut env = GuestEnv::for_device(&mut cosim.vmm, &mut hook, 2);
+        let mut drv = SortDriverSg::new(64, 2, 2);
+        drv.drv.expect_kernel = Some(KernelKind::Checksum);
+        let err = drv.probe(&mut env).unwrap_err().to_string();
+        assert!(err.contains("stats"), "{err}");
+    }
+    cosim.shutdown_all().unwrap();
+}
+
+#[test]
+fn probe_adopts_capability_registers_and_subsys_hint() {
+    let mut cosim = CoSim::launch(mixed_cfg()).unwrap();
+    let mut hook = NoopHook;
+    // Device 2 advertises the stats kernel at n=64; an unopinionated
+    // driver adopts the probed geometry wholesale (the caller's guess
+    // of 1024 is overwritten).
+    {
+        let mut env = GuestEnv::for_device(&mut cosim.vmm, &mut hook, 2);
+        let mut drv = SortDriver::for_device(1024, 2);
+        drv.timeout = Duration::from_secs(30);
+        drv.probe(&mut env).unwrap();
+        assert_eq!(drv.kernel, KernelKind::Stats);
+        assert_eq!(drv.n, 64);
+        assert_eq!(drv.out_words, 8);
+        // The enumeration-level hint matches: the subsystem id names
+        // the same kernel the BAR0 capability register reports.
+        let subsys = (env.config_read32(cfg_regs::SUBSYS_VENDOR).unwrap() >> 16) as u16;
+        assert_eq!(subsys, board::subsys_id_for_kernel(KernelKind::Stats.id()));
+        // A record sized for the caller's wrong guess is refused.
+        let err = drv.sort_record(&mut env, &[0i32; 1024]).unwrap_err();
+        assert!(err.to_string().contains("record length"), "{err}");
+        // One correctly-sized record flows end to end.
+        let mut rng = XorShift64::new(0xAB5);
+        let input = rng.vec_i32(64);
+        let out = drv.sort_record(&mut env, &input).unwrap();
+        let s = record_stats(&input);
+        assert_eq!(out, pack_stats_words(s.min, s.max, s.sum, s.count).to_vec());
+    }
+    // Device 0 keeps the paper's sort personality (subsystem id
+    // byte-identical to the seed board).
+    {
+        let mut env = GuestEnv::for_device(&mut cosim.vmm, &mut hook, 0);
+        let subsys = (env.config_read32(cfg_regs::SUBSYS_VENDOR).unwrap() >> 16) as u16;
+        assert_eq!(subsys, board::SUBSYS_ID);
+    }
+    cosim.shutdown_all().unwrap();
+}
+
+#[test]
+fn homogeneous_checksum_fleet_runs_through_the_sharded_path() {
+    // `--kernel checksum` with no per-device overrides: the whole
+    // fleet swaps engines, and the dispatcher routes through the
+    // mixed runner (single group).
+    let mut cfg = CoSimCfg { devices: 2, ..Default::default() };
+    cfg.platform.kernel.kind = KernelKind::Checksum;
+    cfg.platform.kernel.n = 256;
+    cfg.platform.kernel.latency = KernelKind::Checksum.default_latency(256);
+    let records = 5;
+    let seed = 0xC5C5;
+    let (rep, outs) = scenario::run_sharded_offload_depth(
+        cfg,
+        records,
+        seed,
+        ShardPolicy::RoundRobin,
+        1,
+        None,
+    )
+    .unwrap();
+    assert_eq!(rep.per_device_records.iter().sum::<usize>(), records);
+    let mut rng = XorShift64::new(seed);
+    for (i, out) in outs.iter().enumerate() {
+        let input = rng.vec_i32(256);
+        assert_eq!(
+            out,
+            &pack_checksum_words(record_checksum(&input)).to_vec(),
+            "record {i} checksum mismatch"
+        );
+    }
+}
