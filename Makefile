@@ -2,13 +2,19 @@
 # `cargo build --release && cargo test -q` is self-contained (native
 # golden backend). `make artifacts` is only for the `pjrt` backend.
 
-.PHONY: build test artifacts pytest
+.PHONY: build test analyze artifacts pytest
 
 build:
 	cargo build --release
 
 test:
 	cargo test -q
+
+# Static analysis over the co-sim core (determinism, regmap, panic
+# passes against analysis/allow.toml) — same gate as the CI `analyze`
+# job. See README "Static analysis".
+analyze:
+	cargo xtask analyze
 
 # Lower the jax/Pallas model to HLO-text artifacts for the PJRT golden
 # backend (rust builds with `--features pjrt` read these at run time).

@@ -71,24 +71,48 @@ use super::sim::{Fifo, Horizon};
 use super::signal::{ProbeSink, Probed};
 
 /// DMA register offsets (within the DMA's AXI-Lite window).
+///
+/// As in [`crate::hdl::regfile::regs`], the first doc-comment token of
+/// each constant (`RO:`/`RW:`/`W1C:`/`WO:`) is a machine-readable
+/// access attribute consumed by the `cargo xtask analyze` register-map
+/// pass. DMASR is write-1-to-clear for its IRQ bits (matching the
+/// Xilinx AXI DMA v7.1 spec); everything else here is plain RW.
 pub mod regs {
+    /// RW: MM2S control (run/stop, reset, IRQ enables, threshold).
     pub const MM2S_DMACR: u32 = 0x00;
+    /// W1C: MM2S status — IOC/ERR IRQ bits clear on writing 1.
     pub const MM2S_DMASR: u32 = 0x04;
+    /// RW: MM2S first-descriptor pointer (SG mode, low half).
     pub const MM2S_CURDESC: u32 = 0x08;
+    /// RW: MM2S first-descriptor pointer (SG mode, high half).
     pub const MM2S_CURDESC_MSB: u32 = 0x0C;
+    /// RW: MM2S tail-descriptor pointer — writing starts the SG fetch.
     pub const MM2S_TAILDESC: u32 = 0x10;
+    /// RW: MM2S tail-descriptor pointer (high half).
     pub const MM2S_TAILDESC_MSB: u32 = 0x14;
+    /// RW: MM2S source address (direct mode, low half).
     pub const MM2S_SA: u32 = 0x18;
+    /// RW: MM2S source address (direct mode, high half).
     pub const MM2S_SA_MSB: u32 = 0x1C;
+    /// RW: MM2S transfer length in bytes — writing starts direct mode.
     pub const MM2S_LENGTH: u32 = 0x28;
+    /// RW: S2MM control (run/stop, reset, IRQ enables, threshold).
     pub const S2MM_DMACR: u32 = 0x30;
+    /// W1C: S2MM status — IOC/ERR IRQ bits clear on writing 1.
     pub const S2MM_DMASR: u32 = 0x34;
+    /// RW: S2MM first-descriptor pointer (SG mode, low half).
     pub const S2MM_CURDESC: u32 = 0x38;
+    /// RW: S2MM first-descriptor pointer (SG mode, high half).
     pub const S2MM_CURDESC_MSB: u32 = 0x3C;
+    /// RW: S2MM tail-descriptor pointer — writing starts the SG fetch.
     pub const S2MM_TAILDESC: u32 = 0x40;
+    /// RW: S2MM tail-descriptor pointer (high half).
     pub const S2MM_TAILDESC_MSB: u32 = 0x44;
+    /// RW: S2MM destination address (direct mode, low half).
     pub const S2MM_DA: u32 = 0x48;
+    /// RW: S2MM destination address (direct mode, high half).
     pub const S2MM_DA_MSB: u32 = 0x4C;
+    /// RW: S2MM buffer length in bytes — writing arms direct mode.
     pub const S2MM_LENGTH: u32 = 0x58;
 }
 

@@ -14,6 +14,13 @@ use super::sim::{Fifo, Horizon};
 use super::signal::{ProbeSink, Probed};
 
 /// Register offsets within the regfile window.
+///
+/// Every offset constant carries a machine-readable access attribute
+/// as the first token of its doc comment — `RO:`, `RW:`, `W1C:` or
+/// `WO:` — which `cargo xtask analyze` (register-map pass) parses and
+/// cross-checks against every driver MMIO access site. Keep the
+/// markers in sync with `write_reg` below: that match arm is the
+/// behavioural truth these annotations describe.
 pub mod regs {
     /// RO: identifies the streaming-accelerator platform ("SRT1").
     pub const ID: u32 = 0x00;
@@ -23,18 +30,22 @@ pub mod regs {
     pub const SCRATCH: u32 = 0x08;
     /// RW: control — bit0 = descending order, bit1 = soft reset (self-clearing).
     pub const CONTROL: u32 = 0x0C;
-    /// RO: status — bit0 = kernel busy, bit1 = length-error sticky.
+    /// W1C: status — bit0 = kernel busy, bit1 = length-error sticky
+    /// (any write clears the sticky bits; busy is live).
     pub const STATUS: u32 = 0x10;
     /// RO: completed records.
     pub const REC_COUNT: u32 = 0x14;
-    /// RO: free-running cycle counter (lo/hi).
+    /// RO: free-running cycle counter (low half).
     pub const CYCLES_LO: u32 = 0x18;
+    /// RO: free-running cycle counter (high half).
     pub const CYCLES_HI: u32 = 0x1C;
-    /// RO: kernel perf counters.
+    /// RO: kernel input-stall perf counter.
     pub const STALL_IN: u32 = 0x20;
+    /// RO: kernel output-stall perf counter.
     pub const STALL_OUT: u32 = 0x24;
-    /// RO: beats in/out (throughput observation).
+    /// RO: beats in (throughput observation).
     pub const BEATS_IN: u32 = 0x28;
+    /// RO: beats out (throughput observation).
     pub const BEATS_OUT: u32 = 0x2C;
     /// RW: interrupt test doorbell — writing vector v fires MSI v
     /// (used by the driver self-test and the irq_latency example).

@@ -7,7 +7,7 @@
 //! paper contrasts with logic-analyzer-style debugging (limited probe
 //! count, re-synthesis to move probes).
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 /// Interned signal id.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
@@ -26,9 +26,14 @@ pub trait Probed {
 }
 
 /// Path → id interner with width bookkeeping.
+///
+/// `by_path` is a `BTreeMap` on purpose: the registry is part of the
+/// deterministic core, and any iteration over it (now or in a future
+/// refactor) must be order-stable so VCD output and probe-driven
+/// tooling never depend on hash seeds.
 #[derive(Default)]
 pub struct SignalRegistry {
-    by_path: HashMap<String, SigId>,
+    by_path: BTreeMap<String, SigId>,
     paths: Vec<(String, u8)>,
 }
 

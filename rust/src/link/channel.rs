@@ -634,7 +634,7 @@ impl Endpoint {
         let start = out.len();
         self.pair_a.poll(self.side, out)?;
         self.pair_b.poll(self.side, out)?;
-        for m in &out[start..] {
+        for m in out.iter().skip(start) {
             *self.recv_by_label.entry(m.label()).or_default() += 1;
         }
         Ok(out.len() - start)

@@ -150,28 +150,42 @@ struct Rd<'a> {
 
 impl<'a> Rd<'a> {
     fn take(&mut self, n: usize) -> Result<&'a [u8]> {
-        if self.off + n > self.b.len() {
-            return Err(Error::link(format!(
+        // `get` (not slice indexing): a truncated or corrupt frame
+        // from the peer must surface as `Error::link`, never as a
+        // panic in the receive hot path.
+        let end = self.off.checked_add(n).ok_or_else(|| {
+            Error::link(format!("frame length overflow: need {n} at {}", self.off))
+        })?;
+        let s = self.b.get(self.off..end).ok_or_else(|| {
+            Error::link(format!(
                 "truncated frame: need {n} at {}, have {}",
                 self.off,
                 self.b.len()
-            )));
-        }
-        let s = &self.b[self.off..self.off + n];
-        self.off += n;
+            ))
+        })?;
+        self.off = end;
         Ok(s)
     }
     fn u8(&mut self) -> Result<u8> {
-        Ok(self.take(1)?[0])
+        Ok(self.take(1)?.first().copied().unwrap_or_default())
     }
     fn u16(&mut self) -> Result<u16> {
-        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+        let b = self.take(2)?;
+        Ok(u16::from_le_bytes(
+            b.try_into().map_err(|_| Error::link("u16 field width"))?,
+        ))
     }
     fn u32(&mut self) -> Result<u32> {
-        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes(
+            b.try_into().map_err(|_| Error::link("u32 field width"))?,
+        ))
     }
     fn u64(&mut self) -> Result<u64> {
-        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes(
+            b.try_into().map_err(|_| Error::link("u64 field width"))?,
+        ))
     }
     fn bytes(&mut self) -> Result<Vec<u8>> {
         let n = self.u32()? as usize;

@@ -15,11 +15,28 @@
 use std::io::{ErrorKind, Read, Write};
 use std::os::unix::net::{UnixListener, UnixStream};
 use std::path::{Path, PathBuf};
+use std::sync::Arc;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
+// Under `--cfg loom` the Doorbell (and the in-proc queue it guards
+// against) is built on loom's model-checked primitives so the
+// epoch/condvar wake protocol can be exhaustively explored — see
+// `rust/tests/loom_doorbell.rs`. Production builds use std.
+#[cfg(loom)]
+use loom::sync::{Condvar, Mutex, MutexGuard};
+#[cfg(not(loom))]
+use std::sync::{Condvar, Mutex, MutexGuard};
+
 use crate::{Error, Result};
+
+/// Lock a mutex, riding through poisoning: a peer thread that panicked
+/// while holding the lock must not cascade a second panic into the
+/// link hot path — the data (an epoch counter or a frame queue) stays
+/// structurally valid under every partial update we perform.
+fn locked<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
 
 /// Receiver-side wakeup doorbell: lets an idle endpoint block until a
 /// peer enqueues traffic instead of spin-polling (the event-driven
@@ -46,23 +63,32 @@ impl Doorbell {
 
     /// Wake every waiter (called by senders after enqueueing a frame).
     pub fn ring(&self) {
-        let mut e = self.epoch.lock().unwrap();
+        let mut e = locked(&self.epoch);
         *e = e.wrapping_add(1);
         self.cv.notify_all();
     }
 
     /// Current epoch — sample *before* checking for data.
     pub fn epoch(&self) -> u64 {
-        *self.epoch.lock().unwrap()
+        *locked(&self.epoch)
     }
 
     /// Block until the epoch moves past `seen` or `timeout` elapses.
+    #[cfg(not(loom))]
     pub fn wait(&self, seen: u64, timeout: Duration) {
-        let g = self.epoch.lock().unwrap();
-        let _ = self
-            .cv
-            .wait_timeout_while(g, timeout, |e| *e == seen)
-            .unwrap();
+        let g = locked(&self.epoch);
+        let _ = self.cv.wait_timeout_while(g, timeout, |e| *e == seen);
+    }
+
+    /// Loom model: no timed waits (loom cannot model timeouts), so the
+    /// model blocks until rung. The epoch protocol under test is
+    /// identical.
+    #[cfg(loom)]
+    pub fn wait(&self, seen: u64, _timeout: Duration) {
+        let mut g = locked(&self.epoch);
+        while *g == seen {
+            g = self.cv.wait(g).unwrap_or_else(|e| e.into_inner());
+        }
     }
 
     pub fn mark_wired(&self) {
@@ -201,13 +227,13 @@ impl Transport for InProcTransport {
             return Err(Error::link("inproc peer dropped"));
         }
         {
-            let mut q = self.tx.q.lock().unwrap();
+            let mut q = locked(&self.tx.q);
             q.push_back(frame.to_vec());
             self.tx.len.store(q.len(), Ordering::Release);
         }
         // Wake the receiver if it sleeps on a doorbell (after the
         // queue lock is released, so the waiter finds the frame).
-        if let Some(db) = self.tx.doorbell.lock().unwrap().as_ref() {
+        if let Some(db) = locked(&self.tx.doorbell).as_ref() {
             db.ring();
         }
         Ok(())
@@ -218,7 +244,7 @@ impl Transport for InProcTransport {
         if self.rx.len.load(Ordering::Acquire) == 0 {
             return Ok(None);
         }
-        let mut q = self.rx.q.lock().unwrap();
+        let mut q = locked(&self.rx.q);
         let f = q.pop_front();
         self.rx.len.store(q.len(), Ordering::Release);
         Ok(f)
@@ -230,7 +256,7 @@ impl Transport for InProcTransport {
 
     fn set_doorbell(&mut self, db: Arc<Doorbell>) {
         db.mark_wired();
-        *self.rx.doorbell.lock().unwrap() = Some(db);
+        *locked(&self.rx.doorbell) = Some(db);
     }
 
     fn label(&self) -> &'static str {
@@ -326,7 +352,12 @@ impl UdsTransport {
                     self.drop_stream();
                     return Ok(());
                 }
-                Ok(n) => self.rdbuf.extend_from_slice(&tmp[..n]),
+                // `get`-based: `n ≤ tmp.len()` by the `Read` contract,
+                // but a misbehaving impl must not panic the hot path.
+                Ok(n) => match tmp.get(..n) {
+                    Some(chunk) => self.rdbuf.extend_from_slice(chunk),
+                    None => return Err(Error::link("read overran its buffer")),
+                },
                 Err(e) if e.kind() == ErrorKind::WouldBlock => return Ok(()),
                 Err(e) if e.kind() == ErrorKind::Interrupted => continue,
                 Err(e)
@@ -350,15 +381,19 @@ impl UdsTransport {
     /// Pop one complete frame from rdbuf into `out` (allocation-free
     /// once `out`'s capacity has warmed up).
     fn pop_frame_into(&mut self, out: &mut Vec<u8>) -> bool {
-        if self.rdbuf.len() < 4 {
+        // `get`-based header/body slicing: socket bytes are untrusted
+        // input, so a short buffer is "no frame yet", never a panic.
+        let Some(hdr) = self.rdbuf.get(..4) else {
             return false;
-        }
-        let n = u32::from_le_bytes(self.rdbuf[..4].try_into().unwrap()) as usize;
-        if self.rdbuf.len() < 4 + n {
+        };
+        let mut len4 = [0u8; 4];
+        len4.copy_from_slice(hdr);
+        let n = u32::from_le_bytes(len4) as usize;
+        let Some(body) = self.rdbuf.get(4..4 + n) else {
             return false;
-        }
+        };
         out.clear();
-        out.extend_from_slice(&self.rdbuf[4..4 + n]);
+        out.extend_from_slice(body);
         self.rdbuf.drain(..4 + n);
         true
     }
@@ -380,9 +415,14 @@ impl Transport for UdsTransport {
         // Write fully; the socket is nonblocking, so spin on WouldBlock
         // (frames are small; the peer drains promptly).
         let mut off = 0;
-        while off < buf.len() {
-            let s = self.stream.as_mut().expect("stream checked above");
-            match s.write(&buf[off..]) {
+        while let Some(rest) = buf.get(off..).filter(|r| !r.is_empty()) {
+            // `let-else` instead of `expect`: the stream was checked at
+            // entry and no arm below clears it without returning, but
+            // the hot path must stay panic-free by construction.
+            let Some(s) = self.stream.as_mut() else {
+                return Err(Error::link("uds stream lost mid-send"));
+            };
+            match s.write(rest) {
                 Ok(n) => off += n,
                 Err(e) if e.kind() == ErrorKind::WouldBlock => {
                     std::thread::sleep(Duration::from_micros(20));

@@ -219,13 +219,26 @@ impl PcieFpgaDevice {
         irq: &mut dyn IrqSink,
         mut extract: impl FnMut(&Msg) -> Option<T>,
     ) -> Result<T> {
-        let deadline = std::time::Instant::now() + self.mmio_timeout;
+        // Poll-budget deadline instead of a wall-clock one: each
+        // fruitless wait slice burns one unit of budget, and any link
+        // traffic (the HDL side making observable progress) refills
+        // it. The hang verdict therefore depends only on the message
+        // stream, never on host scheduling jitter — the same
+        // discipline as the PR 1 cycle-based driver hang detector —
+        // while a detached/hung peer still times out after roughly
+        // `mmio_timeout` of wall because each empty slice blocks for
+        // `WAIT_SLICE` at most.
+        const WAIT_SLICE: Duration = Duration::from_millis(5);
+        let budget = (self.mmio_timeout.as_millis() / WAIT_SLICE.as_millis()).max(1) as u64;
+        let mut empty_slices = 0u64;
         loop {
             // Process the WHOLE batch even after the completion is
             // found — HDL-side requests (DMA reads!) may share the
             // batch and must never be dropped.
             let mut found = None;
+            let mut progressed = false;
             for m in self.link.poll()? {
+                progressed = true;
                 if found.is_none() {
                     if let Some(v) = extract(&m) {
                         found = Some(v);
@@ -237,8 +250,9 @@ impl PcieFpgaDevice {
             if let Some(v) = found {
                 return Ok(v);
             }
-            let now = std::time::Instant::now();
-            if now >= deadline {
+            if progressed {
+                empty_slices = 0;
+            } else if empty_slices >= budget {
                 self.stats.mmio_timeouts += 1;
                 return Err(Error::cosim(format!(
                     "MMIO completion timeout after {:?} — HDL side hung or detached",
@@ -248,7 +262,8 @@ impl PcieFpgaDevice {
             // Block on the link doorbell instead of sleep-polling: an
             // in-proc completion wakes us the instant it is enqueued
             // (the RTT path of Table III), sockets nap-poll inside.
-            self.link.wait_any((deadline - now).min(Duration::from_millis(5)))?;
+            self.link.wait_any(WAIT_SLICE)?;
+            empty_slices += 1;
         }
     }
 

@@ -110,7 +110,9 @@ pub fn run_bram_stress(env: &mut GuestEnv, words: u32, seed: u64) -> Result<()> 
     }
     // Readback in a different order (reverse) — later writes to the
     // same offset win, so check against the last write per offset.
-    let mut last = std::collections::HashMap::new();
+    // BTreeMap: readback order is part of the deterministic scenario
+    // transcript, so it must not depend on hash seeds.
+    let mut last = std::collections::BTreeMap::new();
     for &(off, val) in &written {
         last.insert(off, val);
     }

@@ -1006,7 +1006,12 @@ fn align_up(addr: u64, align: u64) -> u64 {
 
 fn read_u32(env: &GuestEnv, addr: u64) -> Result<u32> {
     let raw = env.vmm.mem.read(addr, 4)?;
-    Ok(u32::from_le_bytes(raw.try_into().unwrap()))
+    // Checked conversion: this runs on the descriptor-reap path, where
+    // a short guest-memory read must be an error, not a panic.
+    let b: [u8; 4] = raw
+        .try_into()
+        .map_err(|_| Error::vm(format!("short guest memory read at {addr:#x}")))?;
+    Ok(u32::from_le_bytes(b))
 }
 
 /// Write one 64-byte SG descriptor into guest memory.

@@ -1,0 +1,105 @@
+//! Loom model of the `link::Doorbell` epoch/condvar protocol.
+//!
+//! The doorbell's correctness claim (transport.rs): *sample the epoch,
+//! check for data, then wait only while the epoch is unchanged — a
+//! ring between the check and the wait is never lost.* That is a
+//! textbook lost-wakeup shape, so it gets a model checker, not just
+//! unit tests: loom explores every interleaving of the consumer's
+//! check-then-wait against producer rings and fails on any execution
+//! where the consumer blocks forever (lost wakeup ⇒ loom deadlock).
+//!
+//! This file only compiles under `RUSTFLAGS="--cfg loom"`; the
+//! non-blocking CI `loom` job adds the loom crate transiently
+//! (`cargo add loom@0.7 --target 'cfg(loom)'`) and runs
+//! `cargo test -p vmhdl --release --test loom_doorbell`. Plain
+//! `cargo test` compiles this to an empty crate — the offline build
+//! never needs the dependency.
+//!
+//! Under loom, `Doorbell::wait` is the untimed variant (loom cannot
+//! model timeouts); the epoch protocol under test is identical to the
+//! timed production build.
+
+#![cfg(loom)]
+
+use std::time::Duration;
+
+use loom::sync::atomic::{AtomicUsize, Ordering};
+use loom::thread;
+
+use vmhdl::link::Doorbell;
+
+const TICK: Duration = Duration::from_millis(1);
+
+/// The headline race: the producer rings in the window between the
+/// consumer sampling the epoch and the consumer deciding to wait.
+/// The epoch comparison inside `wait` must make that ring visible —
+/// if it were lost, the consumer would block forever and loom would
+/// report a deadlock.
+#[test]
+fn ring_between_check_and_wait_is_not_lost() {
+    loom::model(|| {
+        let bell = Doorbell::new();
+        let data = loom::sync::Arc::new(AtomicUsize::new(0));
+
+        let producer = {
+            let bell = bell.clone();
+            let data = data.clone();
+            thread::spawn(move || {
+                data.store(1, Ordering::SeqCst);
+                bell.ring();
+            })
+        };
+
+        // Consumer: epoch-sample → data-check → conditional wait.
+        // Loom schedules the producer's store+ring at every possible
+        // point in that sequence.
+        let seen = bell.epoch();
+        if data.load(Ordering::SeqCst) == 0 {
+            bell.wait(seen, TICK);
+        }
+        assert_eq!(
+            data.load(Ordering::SeqCst),
+            1,
+            "wait returned before the producer's write became visible"
+        );
+
+        producer.join().expect("producer panicked");
+    });
+}
+
+/// Two producers ringing concurrently: every ring bumps the epoch
+/// under the same mutex, so the consumer's re-check loop must observe
+/// both items without ever blocking past the final ring.
+#[test]
+fn concurrent_producers_all_observed() {
+    loom::model(|| {
+        let bell = Doorbell::new();
+        let count = loom::sync::Arc::new(AtomicUsize::new(0));
+
+        let p1 = {
+            let (bell, count) = (bell.clone(), count.clone());
+            thread::spawn(move || {
+                count.fetch_add(1, Ordering::SeqCst);
+                bell.ring();
+            })
+        };
+        let p2 = {
+            let (bell, count) = (bell.clone(), count.clone());
+            thread::spawn(move || {
+                count.fetch_add(1, Ordering::SeqCst);
+                bell.ring();
+            })
+        };
+
+        loop {
+            let seen = bell.epoch();
+            if count.load(Ordering::SeqCst) == 2 {
+                break;
+            }
+            bell.wait(seen, TICK);
+        }
+
+        p1.join().expect("producer 1 panicked");
+        p2.join().expect("producer 2 panicked");
+    });
+}

@@ -1,0 +1,26 @@
+//! Fixture: an unordered container in the deterministic core.
+//!
+//! Iterating a `HashMap` makes completion-servicing order depend on
+//! the hasher's per-process random seed, so two runs of the same
+//! scenario replay completions in different orders. The fix is always
+//! the same: `BTreeMap` (see `hdl/signal.rs` for the real instance
+//! this pass caught).
+
+use std::collections::HashMap;
+
+pub struct CompletionBoard {
+    pending: HashMap<u64, u32>,
+}
+
+impl CompletionBoard {
+    pub fn post(&mut self, tag: u64, len: u32) {
+        self.pending.insert(tag, len);
+    }
+
+    /// BAD: drain order follows hasher seed, not tag order.
+    pub fn drain_in_hash_order(&mut self) -> Vec<(u64, u32)> {
+        let out: Vec<(u64, u32)> = self.pending.iter().map(|(k, v)| (*k, *v)).collect();
+        self.pending.clear();
+        out
+    }
+}

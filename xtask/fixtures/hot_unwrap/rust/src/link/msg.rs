@@ -1,0 +1,24 @@
+//! Fixture: a panic path on the link hot path.
+//!
+//! Every byte here arrives from the peer process; a malformed frame
+//! must surface as `Error::link`, never as a panic that takes the
+//! whole co-simulation down. The panic pass forbids `.unwrap()` /
+//! `.expect()` / `panic!` / slice indexing in this file outside tests.
+
+pub fn parse_len(frame: &[u8]) -> u32 {
+    // BAD: a short frame from the peer panics the VM-side process.
+    let hdr: [u8; 4] = frame.get(..4).map(|b| b.try_into().ok()).flatten().unwrap();
+    u32::from_le_bytes(hdr)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::parse_len;
+
+    #[test]
+    fn parses_little_endian() {
+        // unwrap in tests is sanctioned — this must NOT be flagged
+        // beyond the one hot-path finding above.
+        assert_eq!(parse_len(&[1, 0, 0, 0]), 1);
+    }
+}

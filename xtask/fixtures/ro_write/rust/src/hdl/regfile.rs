@@ -1,0 +1,8 @@
+//! Fixture register table: a read-only ID and a writable scratch.
+
+pub mod regs {
+    /// RO: device identification word — writes are dropped by the RTL.
+    pub const ID: u32 = 0x00;
+    /// RW: scratch register for link sanity checks.
+    pub const SCRATCH: u32 = 0x08;
+}

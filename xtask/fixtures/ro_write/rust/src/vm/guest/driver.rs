@@ -1,0 +1,19 @@
+//! Fixture: a write to a register the table declares read-only.
+//!
+//! The RTL silently drops the write, so the bug surfaces far away as
+//! "the device ignored my configuration". The regmap pass turns it
+//! into a build failure at the offending line instead.
+
+use crate::hdl::regfile::regs as rf_regs;
+use crate::vm::guest::GuestEnv;
+use crate::Result;
+
+pub const REGFILE_BASE: u64 = 0x0000;
+
+pub fn scribble(env: &mut GuestEnv) -> Result<()> {
+    // GOOD: SCRATCH is RW.
+    env.write32(0, REGFILE_BASE + rf_regs::SCRATCH as u64, 0xA5A5_5A5A)?;
+    // BAD: ID is RO.
+    env.write32(0, REGFILE_BASE + rf_regs::ID as u64, 0xDEAD_BEEF)?;
+    Ok(())
+}

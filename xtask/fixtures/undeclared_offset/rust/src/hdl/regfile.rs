@@ -1,0 +1,8 @@
+//! Fixture register table: two declared registers, nothing at 0x50.
+
+pub mod regs {
+    /// RO: device identification word.
+    pub const ID: u32 = 0x00;
+    /// RW: scratch register for link sanity checks.
+    pub const SCRATCH: u32 = 0x08;
+}

@@ -1,0 +1,19 @@
+//! Fixture: an MMIO read of an offset no register table declares.
+//!
+//! The classic co-development drift: the RTL moved a register, the
+//! driver kept the old magic number. The regmap pass cross-checks
+//! every BAR0 literal against the declared windows.
+
+use crate::hdl::regfile::regs as rf_regs;
+use crate::vm::guest::GuestEnv;
+use crate::Result;
+
+pub const REGFILE_BASE: u64 = 0x0000;
+
+pub fn probe(env: &mut GuestEnv) -> Result<u32> {
+    // GOOD: symbolic, declared.
+    let id = env.read32(0, REGFILE_BASE + rf_regs::ID as u64)?;
+    // BAD: 0x50 is inside the regfile window but declared nowhere.
+    let magic = env.read32(0, 0x0050)?;
+    Ok(id ^ magic)
+}

@@ -1,0 +1,32 @@
+//! Fixture: a wall-clock read inside the deterministic core.
+//!
+//! `Instant::now()` feeding a cycle decision is exactly the hazard the
+//! determinism pass exists for — two runs of the same scenario would
+//! step different cycle counts depending on host load.
+
+use std::time::Instant;
+
+pub struct Ticker {
+    pub cycles: u64,
+    pub started: Option<Instant>,
+}
+
+impl Ticker {
+    /// BAD: steps a variable number of cycles per call depending on
+    /// how long the host happened to stall since the last call.
+    pub fn tick(&mut self) -> u64 {
+        let now = Instant::now();
+        if let Some(prev) = self.started.replace(now) {
+            let elapsed = now.duration_since(prev).as_micros() as u64;
+            self.cycles += elapsed.max(1);
+        }
+        self.cycles
+    }
+
+    /// GOOD (and must NOT be flagged): test code may use the wall
+    /// clock freely.
+    #[cfg(test)]
+    pub fn wall_reference() -> Instant {
+        Instant::now()
+    }
+}

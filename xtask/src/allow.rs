@@ -1,0 +1,176 @@
+//! `analysis/allow.toml` — the audited list of sanctioned findings.
+//!
+//! Hand-rolled parser for the tiny TOML subset the allowlist uses
+//! (`[[allow]]` tables with string values only); pulling in a real
+//! TOML crate would break the zero-dependency offline build. Every
+//! entry MUST carry a `reason`: the allowlist is documentation of
+//! *why* each wall seam / unresolved access is legitimate, not an
+//! escape hatch.
+//!
+//! ```toml
+//! [[allow]]
+//! pass = "determinism"        # determinism | regmap | panic
+//! path = "link/channel.rs"    # file, relative to rust/src
+//! rule = "wall-clock"         # optional: restrict to one rule
+//! func = "wait_any"           # optional: restrict to one fn
+//! reason = "bounded wait deadline; never feeds simulated state"
+//! ```
+
+use std::path::Path;
+
+use crate::Finding;
+
+#[derive(Debug, Clone)]
+pub struct AllowEntry {
+    pub pass: String,
+    pub path: String,
+    pub rule: Option<String>,
+    pub func: Option<String>,
+    pub reason: String,
+    /// Line of the `[[allow]]` header (for unused-entry reports).
+    pub line: usize,
+}
+
+impl AllowEntry {
+    pub fn matches(&self, f: &Finding) -> bool {
+        self.pass == f.pass
+            && self.path == f.path
+            && self.rule.as_deref().map_or(true, |r| r == f.rule)
+            && self
+                .func
+                .as_deref()
+                .map_or(true, |n| Some(n) == f.func.as_deref())
+    }
+
+    pub fn describe(&self) -> String {
+        format!(
+            "allow.toml:{}: pass={} path={}{}{}",
+            self.line,
+            self.pass,
+            self.path,
+            self.rule.as_deref().map(|r| format!(" rule={r}")).unwrap_or_default(),
+            self.func.as_deref().map(|f| format!(" func={f}")).unwrap_or_default(),
+        )
+    }
+}
+
+const PASSES: [&str; 3] = ["determinism", "regmap", "panic"];
+
+/// Parse the allowlist; errors carry line numbers.
+pub fn parse(text: &str) -> Result<Vec<AllowEntry>, String> {
+    let mut out: Vec<AllowEntry> = Vec::new();
+    let mut cur: Option<AllowEntry> = None;
+    for (idx, raw_line) in text.lines().enumerate() {
+        let lineno = idx + 1;
+        let line = raw_line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        if line == "[[allow]]" {
+            if let Some(e) = cur.take() {
+                validate(&e)?;
+                out.push(e);
+            }
+            cur = Some(AllowEntry {
+                pass: String::new(),
+                path: String::new(),
+                rule: None,
+                func: None,
+                reason: String::new(),
+                line: lineno,
+            });
+            continue;
+        }
+        let Some((key, value)) = line.split_once('=') else {
+            return Err(format!("allow.toml:{lineno}: expected `key = \"value\"`"));
+        };
+        let Some(e) = cur.as_mut() else {
+            return Err(format!(
+                "allow.toml:{lineno}: key outside an [[allow]] table"
+            ));
+        };
+        let key = key.trim();
+        let value = value.trim();
+        let unquoted = value
+            .strip_prefix('"')
+            .and_then(|v| v.strip_suffix('"'))
+            .ok_or_else(|| {
+                format!("allow.toml:{lineno}: value for `{key}` must be a quoted string")
+            })?;
+        if unquoted.contains('\\') || unquoted.contains('"') {
+            return Err(format!(
+                "allow.toml:{lineno}: escapes are not supported in values"
+            ));
+        }
+        match key {
+            "pass" => e.pass = unquoted.to_string(),
+            "path" => e.path = unquoted.to_string(),
+            "rule" => e.rule = Some(unquoted.to_string()),
+            "func" => e.func = Some(unquoted.to_string()),
+            "reason" => e.reason = unquoted.to_string(),
+            other => {
+                return Err(format!("allow.toml:{lineno}: unknown key `{other}`"));
+            }
+        }
+    }
+    if let Some(e) = cur.take() {
+        validate(&e)?;
+        out.push(e);
+    }
+    Ok(out)
+}
+
+fn validate(e: &AllowEntry) -> Result<(), String> {
+    if !PASSES.contains(&e.pass.as_str()) {
+        return Err(format!(
+            "allow.toml:{}: `pass` must be one of {PASSES:?}, got `{}`",
+            e.line, e.pass
+        ));
+    }
+    if e.path.is_empty() {
+        return Err(format!("allow.toml:{}: missing `path`", e.line));
+    }
+    if e.reason.trim().is_empty() {
+        return Err(format!(
+            "allow.toml:{}: every allow entry must carry a `reason` justifying it",
+            e.line
+        ));
+    }
+    Ok(())
+}
+
+/// Load and parse `path`; a missing file is an empty allowlist.
+pub fn load(path: &Path) -> Result<Vec<AllowEntry>, String> {
+    if !path.exists() {
+        return Ok(Vec::new());
+    }
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| format!("{}: {e}", path.display()))?;
+    parse(&text)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_minimal_entry() {
+        let t = "# header\n[[allow]]\npass = \"determinism\"\npath = \"a.rs\"\nreason = \"r\"\n";
+        let v = parse(t).unwrap();
+        assert_eq!(v.len(), 1);
+        assert_eq!(v[0].pass, "determinism");
+        assert!(v[0].rule.is_none());
+    }
+
+    #[test]
+    fn rejects_missing_reason() {
+        let t = "[[allow]]\npass = \"panic\"\npath = \"a.rs\"\n";
+        assert!(parse(t).unwrap_err().contains("reason"));
+    }
+
+    #[test]
+    fn rejects_unknown_pass() {
+        let t = "[[allow]]\npass = \"nope\"\npath = \"a.rs\"\nreason = \"r\"\n";
+        assert!(parse(t).is_err());
+    }
+}

@@ -1,0 +1,121 @@
+//! Determinism lint.
+//!
+//! The framework's core invariant (PR 1, EXPERIMENTS.md §"cycle
+//! determinism"): device cycles are a pure function of the link
+//! message sequence. Anything that lets *wall* time or ambient
+//! randomness influence the deterministic core breaks same-seed
+//! reproducibility, so inside the scoped paths this pass flags:
+//!
+//! * `wall-clock` — `Instant::now`, any `SystemTime` use;
+//! * `wall-sleep` — `sleep(…)` calls (wall pacing; the
+//!   `set_send_latency` sleeper and socket nap-polls are the known
+//!   sanctioned seams, each allowlisted with a reason);
+//! * `ambient-randomness` — `thread_rng`, `from_entropy` (all
+//!   scenario randomness must flow from the seeded `XorShift64`);
+//! * `hash-collections` — `HashMap`/`HashSet`: iteration order is
+//!   hash-seed dependent, so ordered containers (`BTreeMap`/
+//!   `BTreeSet`) are required in the deterministic core.
+
+use crate::scan::SourceFile;
+use crate::Finding;
+
+/// Paths (relative to `rust/src`) forming the deterministic core.
+const SCOPE_DIRS: [&str; 4] = ["hdl/", "pcie/", "link/", "vm/guest/"];
+const SCOPE_FILES: [&str; 2] = ["coordinator/scenario.rs", "coordinator/cosim.rs"];
+
+pub fn in_scope(rel: &str) -> bool {
+    SCOPE_DIRS.iter().any(|d| rel.starts_with(d)) || SCOPE_FILES.contains(&rel)
+}
+
+pub fn run(files: &[SourceFile]) -> Vec<Finding> {
+    let mut out = Vec::new();
+    for f in files.iter().filter(|f| in_scope(&f.rel)) {
+        for (a, b) in f.words() {
+            if f.is_test(a) {
+                continue;
+            }
+            match f.word(a, b) {
+                "Instant" => {
+                    if is_instant_now(f, b) {
+                        out.push(finding(
+                            f,
+                            a,
+                            "wall-clock",
+                            "wall-clock read (`Instant::now`) in the deterministic core",
+                            "derive deadlines from cycle/poll counts; if this is a \
+                             sanctioned wall seam, add an allow entry with a reason",
+                        ));
+                    }
+                }
+                "SystemTime" => out.push(finding(
+                    f,
+                    a,
+                    "wall-clock",
+                    "wall-clock type (`SystemTime`) in the deterministic core",
+                    "wall time must not feed simulated state; allowlist only \
+                     reporting-path uses",
+                )),
+                "thread_rng" | "from_entropy" => out.push(finding(
+                    f,
+                    a,
+                    "ambient-randomness",
+                    "ambient randomness in the deterministic core",
+                    "thread all randomness from the scenario seed (`XorShift64`)",
+                )),
+                "sleep" => {
+                    let j = f.next_nonws(b);
+                    if f.code.get(j) == Some(&b'(') {
+                        out.push(finding(
+                            f,
+                            a,
+                            "wall-sleep",
+                            "wall sleep in the deterministic core",
+                            "block on the link doorbell/horizon instead; allowlist \
+                             known nap-poll seams with a reason",
+                        ));
+                    }
+                }
+                "HashMap" | "HashSet" => out.push(finding(
+                    f,
+                    a,
+                    "hash-collections",
+                    "hash-seeded container in the deterministic core \
+                     (iteration order is unstable across runs)",
+                    "use BTreeMap/BTreeSet (or justify why iteration order \
+                     can never be observed)",
+                )),
+                _ => {}
+            }
+        }
+    }
+    out
+}
+
+/// True if the token after `after_instant` spells `::now`.
+fn is_instant_now(f: &SourceFile, after_instant: usize) -> bool {
+    let j = f.next_nonws(after_instant);
+    if f.code.get(j) != Some(&b':') || f.code.get(j + 1) != Some(&b':') {
+        return false;
+    }
+    let k = f.next_nonws(j + 2);
+    f.code[k..].starts_with(b"now")
+        && f.code.get(k + 3).map_or(true, |&c| !crate::scan::is_ident(c))
+}
+
+fn finding(
+    f: &SourceFile,
+    off: usize,
+    rule: &'static str,
+    msg: &str,
+    remedy: &'static str,
+) -> Finding {
+    Finding {
+        pass: "determinism",
+        rule,
+        path: f.rel.clone(),
+        line: f.line_of(off),
+        func: f.enclosing_fn(off).map(str::to_string),
+        message: msg.to_string(),
+        remedy,
+    }
+}

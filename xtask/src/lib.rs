@@ -1,0 +1,187 @@
+//! Repo-specific static analysis for the co-simulation core, exposed
+//! as `cargo xtask analyze` (see `src/main.rs` for the CLI).
+//!
+//! Three passes (each its own module, each documenting the invariant
+//! it enforces):
+//!
+//! * [`determinism`] — no wall clock / ambient randomness / unordered
+//!   containers in the deterministic core;
+//! * [`regmap`] — driver MMIO sites agree with the register tables in
+//!   `hdl/regfile.rs` + `hdl/dma.rs` (offsets, RO/RW/W1C, widths);
+//! * [`panic_audit`] — no panic paths in the link layer / driver reap
+//!   code that external input can reach.
+//!
+//! Findings are matched against `analysis/allow.toml`; the remainder
+//! fail the build. Unused allow entries are reported so the allowlist
+//! cannot rot. Everything is zero-dependency std so it builds in the
+//! offline container; see each pass for the lexical approximations
+//! this implies.
+
+pub mod allow;
+pub mod determinism;
+pub mod panic_audit;
+pub mod regmap;
+pub mod scan;
+
+use std::fmt;
+use std::io;
+use std::path::{Path, PathBuf};
+
+use allow::AllowEntry;
+use scan::SourceFile;
+
+/// One diagnostic from a pass.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    pub pass: &'static str,
+    pub rule: &'static str,
+    /// Path relative to the `rust/src` scan root, `/`-separated.
+    pub path: String,
+    pub line: usize,
+    /// Innermost enclosing named fn, if any.
+    pub func: Option<String>,
+    pub message: String,
+    pub remedy: &'static str,
+}
+
+impl fmt::Display for Finding {
+    fn fmt(&self, w: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(
+            w,
+            "rust/src/{}:{}: [{}/{}] {}{}",
+            self.path,
+            self.line,
+            self.pass,
+            self.rule,
+            self.message,
+            self.func
+                .as_deref()
+                .map(|f| format!(" (in fn {f})"))
+                .unwrap_or_default(),
+        )?;
+        write!(w, "    remedy: {}", self.remedy)
+    }
+}
+
+/// Which passes to run.
+#[derive(Debug, Clone, Copy)]
+pub struct PassSet {
+    pub determinism: bool,
+    pub regmap: bool,
+    pub panic: bool,
+}
+
+impl Default for PassSet {
+    fn default() -> Self {
+        PassSet { determinism: true, regmap: true, panic: true }
+    }
+}
+
+impl PassSet {
+    pub fn none() -> Self {
+        PassSet { determinism: false, regmap: false, panic: false }
+    }
+
+    pub fn enable(&mut self, name: &str) -> Result<(), String> {
+        match name {
+            "determinism" => self.determinism = true,
+            "regmap" => self.regmap = true,
+            "panic" => self.panic = true,
+            other => return Err(format!("unknown pass `{other}`")),
+        }
+        Ok(())
+    }
+}
+
+/// Result of an analysis run.
+#[derive(Debug, Default)]
+pub struct Report {
+    /// Findings NOT covered by the allowlist — these fail the build.
+    pub findings: Vec<Finding>,
+    /// Count of findings suppressed by allow entries.
+    pub suppressed: usize,
+    /// Allow entries that matched nothing (stale — should be pruned).
+    pub unused_allows: Vec<String>,
+}
+
+/// Run the configured passes over `<root>/rust/src`.
+pub fn analyze(root: &Path, allow: &[AllowEntry], passes: PassSet) -> io::Result<Report> {
+    let src = root.join("rust").join("src");
+    if !src.is_dir() {
+        return Err(io::Error::new(
+            io::ErrorKind::NotFound,
+            format!("scan root {} is not a directory", src.display()),
+        ));
+    }
+    let files = load_tree(&src)?;
+
+    let mut all = Vec::new();
+    if passes.determinism {
+        all.extend(determinism::run(&files));
+    }
+    if passes.regmap {
+        all.extend(regmap::run(&files));
+    }
+    if passes.panic {
+        all.extend(panic_audit::run(&files));
+    }
+    all.sort_by(|x, y| {
+        (x.path.as_str(), x.line, x.pass, x.rule).cmp(&(y.path.as_str(), y.line, y.pass, y.rule))
+    });
+
+    let mut used = vec![false; allow.len()];
+    let mut report = Report::default();
+    for f in all {
+        let mut hit = false;
+        for (i, e) in allow.iter().enumerate() {
+            if e.matches(&f) {
+                used[i] = true;
+                hit = true;
+            }
+        }
+        if hit {
+            report.suppressed += 1;
+        } else {
+            report.findings.push(f);
+        }
+    }
+    report.unused_allows = allow
+        .iter()
+        .zip(&used)
+        .filter(|(_, u)| !**u)
+        .map(|(e, _)| e.describe())
+        .collect();
+    Ok(report)
+}
+
+/// Load every `.rs` file under `src` (sorted, recursive).
+fn load_tree(src: &Path) -> io::Result<Vec<SourceFile>> {
+    let mut paths = Vec::new();
+    collect(src, &mut paths)?;
+    paths.sort();
+    let mut files = Vec::with_capacity(paths.len());
+    for p in paths {
+        let raw = std::fs::read_to_string(&p)?;
+        let rel = p
+            .strip_prefix(src)
+            .map_err(|e| io::Error::other(e.to_string()))?
+            .components()
+            .map(|c| c.as_os_str().to_string_lossy())
+            .collect::<Vec<_>>()
+            .join("/");
+        files.push(SourceFile::new(rel, raw));
+    }
+    Ok(files)
+}
+
+fn collect(dir: &Path, out: &mut Vec<PathBuf>) -> io::Result<()> {
+    for entry in std::fs::read_dir(dir)? {
+        let path = entry?.path();
+        if path.is_dir() {
+            collect(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}

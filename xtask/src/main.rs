@@ -1,0 +1,123 @@
+//! `cargo xtask` — repo tooling. One subcommand so far:
+//!
+//! ```text
+//! cargo xtask analyze [--root DIR] [--allow FILE] [--pass NAME]... [-q]
+//! ```
+//!
+//! Runs the static-analysis suite (determinism, regmap, panic passes)
+//! over `<root>/rust/src`, matched against `<root>/analysis/allow.toml`
+//! (override with `--allow`). Exits 1 on any unsuppressed finding,
+//! 2 on usage/config errors.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use xtask::{analyze, PassSet};
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match args.first().map(String::as_str) {
+        Some("analyze") => run_analyze(&args[1..]),
+        Some(other) => {
+            eprintln!("xtask: unknown subcommand `{other}`");
+            eprintln!(
+                "usage: cargo xtask analyze [--root DIR] [--allow FILE] [--pass NAME]... [-q]"
+            );
+            ExitCode::from(2)
+        }
+        None => {
+            eprintln!(
+                "usage: cargo xtask analyze [--root DIR] [--allow FILE] [--pass NAME]... [-q]"
+            );
+            ExitCode::from(2)
+        }
+    }
+}
+
+fn run_analyze(args: &[String]) -> ExitCode {
+    let mut root: Option<PathBuf> = None;
+    let mut allow_path: Option<PathBuf> = None;
+    let mut passes: Option<PassSet> = None;
+    let mut quiet = false;
+
+    let mut it = args.iter();
+    while let Some(a) = it.next() {
+        match a.as_str() {
+            "--root" => match it.next() {
+                Some(v) => root = Some(PathBuf::from(v)),
+                None => return usage_err("--root needs a value"),
+            },
+            "--allow" => match it.next() {
+                Some(v) => allow_path = Some(PathBuf::from(v)),
+                None => return usage_err("--allow needs a value"),
+            },
+            "--pass" => match it.next() {
+                Some(v) => {
+                    let set = passes.get_or_insert_with(PassSet::none);
+                    if let Err(e) = set.enable(v) {
+                        return usage_err(&e);
+                    }
+                }
+                None => return usage_err("--pass needs a value"),
+            },
+            "-q" | "--quiet" => quiet = true,
+            other => return usage_err(&format!("unknown flag `{other}`")),
+        }
+    }
+
+    // Default root: the workspace root (xtask runs from anywhere via
+    // the cargo alias; CARGO_MANIFEST_DIR is xtask/).
+    let root = root.unwrap_or_else(|| {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+            .parent()
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("."))
+    });
+    let allow_path = allow_path.unwrap_or_else(|| root.join("analysis").join("allow.toml"));
+
+    let allow = match xtask::allow::load(&allow_path) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("xtask analyze: {e}");
+            return ExitCode::from(2);
+        }
+    };
+
+    let report = match analyze(&root, &allow, passes.unwrap_or_default()) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("xtask analyze: {e}");
+            return ExitCode::from(2);
+        }
+    };
+
+    for stale in &report.unused_allows {
+        eprintln!("warning: unused allow entry ({stale}) — prune it");
+    }
+    if report.findings.is_empty() {
+        if !quiet {
+            println!(
+                "xtask analyze: clean ({} finding(s) suppressed by {} allow entr{})",
+                report.suppressed,
+                allow.len(),
+                if allow.len() == 1 { "y" } else { "ies" },
+            );
+        }
+        ExitCode::SUCCESS
+    } else {
+        for f in &report.findings {
+            println!("{f}");
+        }
+        println!(
+            "xtask analyze: {} finding(s) ({} suppressed by the allowlist)",
+            report.findings.len(),
+            report.suppressed,
+        );
+        ExitCode::FAILURE
+    }
+}
+
+fn usage_err(msg: &str) -> ExitCode {
+    eprintln!("xtask analyze: {msg}");
+    ExitCode::from(2)
+}

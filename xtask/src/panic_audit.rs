@@ -1,0 +1,142 @@
+//! Panic-path audit.
+//!
+//! The link layer is fed by a peer process over a socket; the driver
+//! reap path runs against device-written guest memory. Both consume
+//! *external* input, so a malformed byte stream must surface as
+//! `Error::link`/`Error::vm`, never as a panic that tears down the
+//! co-simulation (the one sanctioned panic seam is the lane
+//! `catch_unwind` boundary in `coordinator/cosim.rs`, which converts
+//! HDL model panics into `Error::hdl`). Outside `#[cfg(test)]` this
+//! pass forbids, in the scoped files:
+//!
+//! * `unwrap` / `expect` — `.unwrap()` / `.expect(…)` calls
+//!   (`unwrap_or_else(|e| e.into_inner())`-style non-panicking forms
+//!   are fine and not matched);
+//! * `panic-macro` — `panic!`, `unreachable!`, `todo!`,
+//!   `unimplemented!`;
+//! * `slice-index` — `x[…]` indexing in the `link/` hot path, where
+//!   every length field is attacker-ish input; use `get`-based
+//!   slicing. (Pattern positions like `let [a, b] = …` and types like
+//!   `&'a [u8]` are recognized and skipped.)
+
+use crate::scan::{is_ident, SourceFile};
+use crate::Finding;
+
+/// Files whose non-test code must be panic-free.
+const SCOPE: [&str; 4] = [
+    "link/msg.rs",
+    "link/channel.rs",
+    "link/transport.rs",
+    "vm/guest/driver.rs",
+];
+
+/// Slice-indexing is additionally forbidden here (the wire hot path).
+const INDEX_SCOPE_PREFIX: &str = "link/";
+
+pub fn run(files: &[SourceFile]) -> Vec<Finding> {
+    let mut out = Vec::new();
+    for f in files.iter().filter(|f| SCOPE.contains(&f.rel.as_str())) {
+        for (a, b) in f.words() {
+            if f.is_test(a) {
+                continue;
+            }
+            match f.word(a, b) {
+                w @ ("unwrap" | "expect") => {
+                    let dotted = a > 0
+                        && f.prev_nonws(a - 1).is_some_and(|p| f.code[p] == b'.');
+                    let called = f.code.get(f.next_nonws(b)) == Some(&b'(');
+                    if dotted && called {
+                        out.push(finding(
+                            f,
+                            a,
+                            if w == "unwrap" { "unwrap" } else { "expect" },
+                            format!(".{w}() on a hot path fed by external input"),
+                            "propagate an Error::link/Error::vm instead \
+                             (map_err / ok_or_else / let-else)",
+                        ));
+                    }
+                }
+                w @ ("panic" | "unreachable" | "todo" | "unimplemented") => {
+                    if f.code.get(f.next_nonws(b)) == Some(&b'!') {
+                        out.push(finding(
+                            f,
+                            a,
+                            "panic-macro",
+                            format!("`{w}!` in a hot path fed by external input"),
+                            "return an error; the only sanctioned panic seam is the \
+                             lane catch_unwind boundary in coordinator/cosim.rs",
+                        ));
+                    }
+                }
+                _ => {}
+            }
+        }
+        if f.rel.starts_with(INDEX_SCOPE_PREFIX) {
+            scan_indexing(f, &mut out);
+        }
+    }
+    out
+}
+
+/// Keywords that legitimately precede `[` without it being an index
+/// expression (patterns, array types/literals).
+const PRE_BRACKET_KEYWORDS: [&str; 10] = [
+    "let", "mut", "ref", "in", "return", "else", "match", "move", "box", "dyn",
+];
+
+fn scan_indexing(f: &SourceFile, out: &mut Vec<Finding>) {
+    for (i, &byte) in f.code.iter().enumerate() {
+        if byte != b'[' || f.is_test(i) || i == 0 {
+            continue;
+        }
+        let Some(p) = f.prev_nonws(i - 1) else {
+            continue;
+        };
+        let prev = f.code[p];
+        if !(is_ident(prev) || prev == b')' || prev == b']') {
+            continue;
+        }
+        if is_ident(prev) {
+            // Walk back over the identifier; skip keywords and
+            // lifetimes (`&'a [u8]`).
+            let mut s = p;
+            while s > 0 && is_ident(f.code[s - 1]) {
+                s -= 1;
+            }
+            let word = f.word(s, p + 1);
+            if PRE_BRACKET_KEYWORDS.contains(&word) {
+                continue;
+            }
+            if s > 0 && f.code[s - 1] == b'\'' {
+                continue;
+            }
+        }
+        out.push(finding(
+            f,
+            i,
+            "slice-index",
+            "slice/array indexing in the link hot path (panics on \
+             out-of-range input)"
+                .to_string(),
+            "use .get(..)/.get_mut(..) and surface Error::link on miss",
+        ));
+    }
+}
+
+fn finding(
+    f: &SourceFile,
+    off: usize,
+    rule: &'static str,
+    message: String,
+    remedy: &'static str,
+) -> Finding {
+    Finding {
+        pass: "panic",
+        rule,
+        path: f.rel.clone(),
+        line: f.line_of(off),
+        func: f.enclosing_fn(off).map(str::to_string),
+        message,
+        remedy,
+    }
+}

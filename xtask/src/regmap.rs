@@ -1,0 +1,435 @@
+//! Register-map consistency pass.
+//!
+//! The chronic HW/SW co-development failure mode (PAPERS.md:
+//! Kruszewski; Zabołotny's QEMU-DAQ) is the driver and the RTL
+//! disagreeing about the register map. This pass makes the agreement
+//! checkable on every commit:
+//!
+//! 1. Extract the register tables from `hdl/regfile.rs` and
+//!    `hdl/dma.rs`: every `pub const NAME: u32 = OFFSET;` inside
+//!    `pub mod regs`, with its access attribute taken from the first
+//!    doc-comment token (`RO:` / `RW:` / `W1C:` / `WO:`). A constant
+//!    without a marker is itself a finding (`missing-attr`).
+//! 2. Walk every `readN(bar, offset…)` / `writeN(bar, offset…, v)`
+//!    MMIO call in `vm/guest/driver.rs` and `vm/guest/app.rs` (BAR0
+//!    only — that's where the regfile @0x0000 and DMA @0x1000 windows
+//!    live) and check each site against the tables:
+//!    * `undeclared-offset` — literal offset not in any table;
+//!    * `ro-write` / `wo-read` — access forbidden by the attribute;
+//!    * `width-mismatch` — non-32-bit access to a 32-bit register;
+//!    * `base-mismatch` — `dma_regs::` constant used without
+//!      `DMA_BASE` (or `rf_regs::` beyond the regfile window);
+//!    * `unresolved-offset` — the offset expression is not statically
+//!      resolvable (e.g. a register held in a local); such sites need
+//!      an allow entry explaining where the offset comes from.
+
+use std::collections::BTreeMap;
+
+use crate::scan::{match_paren, SourceFile, Words};
+use crate::Finding;
+
+const REGFILE: &str = "hdl/regfile.rs";
+const DMA: &str = "hdl/dma.rs";
+const DRIVERS: [&str; 2] = ["vm/guest/driver.rs", "vm/guest/app.rs"];
+
+const REGFILE_BASE: u64 = 0x0000;
+const DMA_BASE: u64 = 0x1000;
+/// Each BAR0 window is 4 KiB (see `hdl/platform`).
+const WINDOW: u64 = 0x1000;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Attr {
+    Ro,
+    Rw,
+    W1c,
+    Wo,
+}
+
+impl Attr {
+    fn parse(s: &str) -> Option<Attr> {
+        match s {
+            "RO" => Some(Attr::Ro),
+            "RW" => Some(Attr::Rw),
+            "W1C" => Some(Attr::W1c),
+            "WO" => Some(Attr::Wo),
+            _ => None,
+        }
+    }
+
+    fn writable(self) -> bool {
+        !matches!(self, Attr::Ro)
+    }
+
+    fn readable(self) -> bool {
+        !matches!(self, Attr::Wo)
+    }
+}
+
+#[derive(Debug, Clone)]
+struct RegDef {
+    name: String,
+    offset: u64,
+    attr: Option<Attr>,
+}
+
+struct RegTable {
+    /// Module path prefix driver code uses (`rf_regs` / `dma_regs`).
+    alias: &'static str,
+    base: u64,
+    by_name: BTreeMap<String, RegDef>,
+    by_offset: BTreeMap<u64, String>,
+}
+
+pub fn run(files: &[SourceFile]) -> Vec<Finding> {
+    let mut out = Vec::new();
+    let Some(rf_file) = files.iter().find(|f| f.rel == REGFILE) else {
+        // No register file under this root (analyzer fixture trees):
+        // nothing to cross-check.
+        return out;
+    };
+    let rf = parse_table(rf_file, "rf_regs", REGFILE_BASE, &mut out);
+    let dma = files
+        .iter()
+        .find(|f| f.rel == DMA)
+        .map(|f| parse_table(f, "dma_regs", DMA_BASE, &mut out));
+    let tables: Vec<&RegTable> = std::iter::once(&rf).chain(dma.as_ref()).collect();
+
+    for f in files.iter().filter(|f| DRIVERS.contains(&f.rel.as_str())) {
+        check_sites(f, &tables, &mut out);
+    }
+    out
+}
+
+/// Extract the `pub mod regs` table of `file`, emitting `missing-attr`
+/// findings for constants without an access marker.
+fn parse_table(
+    file: &SourceFile,
+    alias: &'static str,
+    base: u64,
+    out: &mut Vec<Finding>,
+) -> RegTable {
+    let mut table = RegTable {
+        alias,
+        base,
+        by_name: BTreeMap::new(),
+        by_offset: BTreeMap::new(),
+    };
+    let Some(mod_start) = find_subslice(&file.code, b"pub mod regs") else {
+        return table;
+    };
+    let Some(open_rel) = file.code[mod_start..].iter().position(|&b| b == b'{') else {
+        return table;
+    };
+    let open = mod_start + open_rel;
+    let close = crate::scan::match_brace(&file.code, open);
+    let first_line = file.line_of(open);
+    let last_line = file.line_of(close);
+
+    let mut pending: Option<Attr> = None;
+    for (idx, raw_line) in file.raw.lines().enumerate() {
+        let lineno = idx + 1;
+        if lineno < first_line || lineno > last_line {
+            continue;
+        }
+        let t = raw_line.trim();
+        if let Some(doc) = t.strip_prefix("///") {
+            let doc = doc.trim_start();
+            if let Some((head, _)) = doc.split_once(':') {
+                if let Some(a) = Attr::parse(head.trim()) {
+                    pending = Some(a);
+                }
+            }
+            continue;
+        }
+        if let Some(rest) = t.strip_prefix("pub const ") {
+            let Some((name, rest)) = rest.split_once(':') else {
+                continue;
+            };
+            let Some((_ty, value)) = rest.split_once('=') else {
+                continue;
+            };
+            let value = value.trim().trim_end_matches(';').trim();
+            let Some(offset) = parse_int(value) else {
+                continue;
+            };
+            let name = name.trim().to_string();
+            let attr = pending.take();
+            if attr.is_none() {
+                out.push(Finding {
+                    pass: "regmap",
+                    rule: "missing-attr",
+                    path: file.rel.clone(),
+                    line: lineno,
+                    func: None,
+                    message: format!(
+                        "register constant `{name}` has no access attribute marker"
+                    ),
+                    remedy: "prefix its doc comment with `RO:`, `RW:`, `W1C:` or `WO:`",
+                });
+            }
+            table.by_offset.insert(offset, name.clone());
+            table.by_name.insert(name.clone(), RegDef { name, offset, attr });
+        }
+    }
+    table
+}
+
+/// Scan one driver file for MMIO call sites and check them.
+fn check_sites(file: &SourceFile, tables: &[&RegTable], out: &mut Vec<Finding>) {
+    let accessors: [(&str, bool, u32); 8] = [
+        ("read8", false, 1),
+        ("read16", false, 2),
+        ("read32", false, 4),
+        ("read64", false, 8),
+        ("write8", true, 1),
+        ("write16", true, 2),
+        ("write32", true, 4),
+        ("write64", true, 8),
+    ];
+    for (a, b) in Words::new(&file.code) {
+        if file.is_test(a) {
+            continue;
+        }
+        let word = file.word(a, b);
+        let Some(&(_, is_write, width)) = accessors.iter().find(|(n, _, _)| *n == word) else {
+            continue;
+        };
+        let open = file.next_nonws(b);
+        if file.code.get(open) != Some(&b'(') {
+            continue;
+        }
+        let close = match_paren(&file.code, open);
+        let args = split_args(&file.code[open + 1..close]);
+        if args.len() < 2 {
+            continue;
+        }
+        // Only BAR0 carries the declared register windows.
+        if parse_int(&args[0]) != Some(0) {
+            continue;
+        }
+        let site = Site {
+            file,
+            off: a,
+            is_write,
+            width,
+        };
+        check_offset_expr(&site, &args[1], tables, out);
+    }
+}
+
+struct Site<'a> {
+    file: &'a SourceFile,
+    off: usize,
+    is_write: bool,
+    width: u32,
+}
+
+fn check_offset_expr(site: &Site<'_>, expr: &str, tables: &[&RegTable], out: &mut Vec<Finding>) {
+    let mut e = expr.to_string();
+    // Strip integer casts (whitespace is already gone).
+    for cast in ["asu64", "asu32", "asu16", "asusize"] {
+        while let Some(stripped) = e.strip_suffix(cast) {
+            e = stripped.to_string();
+        }
+    }
+    // Peel a named base prefix.
+    let mut named_base: Option<&str> = None;
+    for base in ["REGFILE_BASE+", "DMA_BASE+"] {
+        if let Some(rest) = e.strip_prefix(base) {
+            named_base = Some(base.trim_end_matches('+'));
+            e = rest.to_string();
+            break;
+        }
+    }
+
+    // Symbolic register reference?
+    for t in tables {
+        let prefix = format!("{}::", t.alias);
+        if let Some(name) = e.strip_prefix(&prefix) {
+            let expect_base = if t.base == 0 { None } else { Some("DMA_BASE") };
+            let base_ok = match (named_base, expect_base) {
+                (Some("REGFILE_BASE") | None, None) => true,
+                (Some("DMA_BASE"), Some("DMA_BASE")) => true,
+                _ => false,
+            };
+            if !base_ok {
+                emit(
+                    site,
+                    "base-mismatch",
+                    format!("`{}::{name}` addressed through the wrong window base", t.alias),
+                    "pair rf_regs with REGFILE_BASE and dma_regs with DMA_BASE",
+                    out,
+                );
+                return;
+            }
+            match t.by_name.get(name) {
+                Some(def) => check_attr(site, t, def, out),
+                None => emit(
+                    site,
+                    "undeclared-offset",
+                    format!("`{}::{name}` is not declared in the register table", t.alias),
+                    "declare the register (with an access attribute) in the regs module",
+                    out,
+                ),
+            }
+            return;
+        }
+    }
+
+    // Literal offset?
+    if let Some(v) = parse_int(&e) {
+        let base = named_base.map_or(0, |b| if b == "DMA_BASE" { DMA_BASE } else { REGFILE_BASE });
+        let abs = v + base;
+        for t in tables {
+            if abs >= t.base && abs < t.base + WINDOW {
+                match t.by_offset.get(&(abs - t.base)) {
+                    Some(name) => {
+                        let def = &t.by_name[name];
+                        check_attr(site, t, def, out);
+                    }
+                    None => emit(
+                        site,
+                        "undeclared-offset",
+                        format!("literal offset {abs:#x} matches no declared register"),
+                        "use the declared `rf_regs::`/`dma_regs::` constant, or declare it",
+                        out,
+                    ),
+                }
+                return;
+            }
+        }
+        emit(
+            site,
+            "undeclared-offset",
+            format!("literal offset {abs:#x} is outside every declared register window"),
+            "BAR0 registers live in 0x0000..0x2000; declare the register first",
+            out,
+        );
+        return;
+    }
+
+    emit(
+        site,
+        "unresolved-offset",
+        format!("offset expression `{expr}` is not statically resolvable"),
+        "reference `rf_regs::`/`dma_regs::` constants directly at the call site, \
+         or allowlist the site with a reason naming where the offset comes from",
+        out,
+    );
+}
+
+fn check_attr(site: &Site<'_>, t: &RegTable, def: &RegDef, out: &mut Vec<Finding>) {
+    let Some(attr) = def.attr else {
+        // Declaration-side finding already emitted by parse_table.
+        return;
+    };
+    if site.is_write && !attr.writable() {
+        emit(
+            site,
+            "ro-write",
+            format!("write to read-only register `{}::{}`", t.alias, def.name),
+            "drop the write, or fix the register's attribute in the regs module \
+             if the hardware actually accepts it",
+            out,
+        );
+    }
+    if !site.is_write && !attr.readable() {
+        emit(
+            site,
+            "wo-read",
+            format!("read of write-only register `{}::{}`", t.alias, def.name),
+            "drop the read, or fix the register's attribute",
+            out,
+        );
+    }
+    if site.width != 4 {
+        emit(
+            site,
+            "width-mismatch",
+            format!(
+                "{}-byte access to 32-bit register `{}::{}` (offset {:#x})",
+                site.width, t.alias, def.name, def.offset
+            ),
+            "all platform registers are 32-bit; use read32/write32",
+            out,
+        );
+    }
+}
+
+fn emit(
+    site: &Site<'_>,
+    rule: &'static str,
+    message: String,
+    remedy: &'static str,
+    out: &mut Vec<Finding>,
+) {
+    out.push(Finding {
+        pass: "regmap",
+        rule,
+        path: site.file.rel.clone(),
+        line: site.file.line_of(site.off),
+        func: site.file.enclosing_fn(site.off).map(str::to_string),
+        message,
+        remedy,
+    });
+}
+
+/// Split a (comment-stripped) argument byte range on top-level commas,
+/// returning whitespace-free strings; trailing empties are dropped.
+fn split_args(bytes: &[u8]) -> Vec<String> {
+    let mut parts = Vec::new();
+    let mut cur = String::new();
+    let mut depth = 0i64;
+    for &b in bytes {
+        match b {
+            b'(' | b'[' | b'{' => depth += 1,
+            b')' | b']' | b'}' => depth -= 1,
+            _ => {}
+        }
+        if b == b',' && depth == 0 {
+            parts.push(std::mem::take(&mut cur));
+            continue;
+        }
+        if !(b as char).is_whitespace() {
+            cur.push(b as char);
+        }
+    }
+    parts.push(cur);
+    while parts.last().is_some_and(|p| p.is_empty()) {
+        parts.pop();
+    }
+    parts
+}
+
+/// Parse a decimal or `0x` hex literal (with `_` separators).
+fn parse_int(s: &str) -> Option<u64> {
+    let s = s.replace('_', "");
+    if let Some(hex) = s.strip_prefix("0x").or_else(|| s.strip_prefix("0X")) {
+        u64::from_str_radix(hex, 16).ok()
+    } else {
+        s.parse().ok()
+    }
+}
+
+fn find_subslice(haystack: &[u8], needle: &[u8]) -> Option<usize> {
+    haystack.windows(needle.len()).position(|w| w == needle)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn split_args_handles_nesting() {
+        let v = split_args(b"0, DMA_BASE + regs::X as u64, f(a, b), ");
+        assert_eq!(v, vec!["0", "DMA_BASE+regs::Xasu64", "f(a,b)"]);
+    }
+
+    #[test]
+    fn parse_int_hex_and_dec() {
+        assert_eq!(parse_int("0x1C"), Some(0x1C));
+        assert_eq!(parse_int("0x5A5A_A5A5"), Some(0x5A5A_A5A5));
+        assert_eq!(parse_int("12"), Some(12));
+        assert_eq!(parse_int("rf_regs::ID"), None);
+    }
+}

@@ -1,0 +1,455 @@
+//! Lexical preprocessing shared by every analysis pass.
+//!
+//! The analyzer is deliberately a *token scanner*, not a full parser:
+//! the container toolchain is offline, so `xtask` must build with zero
+//! dependencies (no `syn`). The passes only need four things, all
+//! computable lexically:
+//!
+//! 1. `code`: the source with comments, string/char literals blanked
+//!    out (byte-for-byte, newlines preserved) so keyword/identifier
+//!    matches never fire inside text.
+//! 2. `#[cfg(test)]` (and `#[cfg(loom)]`) item spans, so test-only
+//!    code is exempt.
+//! 3. Enclosing-`fn` spans, so allowlist entries can be scoped to a
+//!    function instead of a whole file.
+//! 4. Line numbers for diagnostics.
+
+/// One preprocessed source file.
+pub struct SourceFile {
+    /// Path relative to the scan root (`rust/src`), `/`-separated.
+    pub rel: String,
+    /// Original text (used for doc-comment attribute parsing).
+    pub raw: String,
+    /// Comment/string-blanked copy, same byte length as `raw`.
+    pub code: Vec<u8>,
+    line_starts: Vec<usize>,
+    test_regions: Vec<(usize, usize)>,
+    fns: Vec<FnSpan>,
+}
+
+struct FnSpan {
+    name: String,
+    open: usize,
+    close: usize,
+}
+
+pub fn is_ident(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+fn blank(out: &mut [u8], a: usize, b: usize) {
+    let end = b.min(out.len());
+    for x in out.iter_mut().take(end).skip(a) {
+        if *x != b'\n' && *x != b'\r' {
+            *x = b' ';
+        }
+    }
+}
+
+/// Blank comments, string literals and char literals, preserving byte
+/// offsets and newlines. Lifetimes (`'a`) are left in place.
+pub fn strip_code(src: &[u8]) -> Vec<u8> {
+    let mut out = src.to_vec();
+    let n = src.len();
+    let mut i = 0usize;
+    while i < n {
+        let c = src[i];
+        if c == b'/' && i + 1 < n && src[i + 1] == b'/' {
+            let mut j = i;
+            while j < n && src[j] != b'\n' {
+                j += 1;
+            }
+            blank(&mut out, i, j);
+            i = j;
+        } else if c == b'/' && i + 1 < n && src[i + 1] == b'*' {
+            let mut depth = 1usize;
+            let mut j = i + 2;
+            while j < n && depth > 0 {
+                if src[j] == b'/' && j + 1 < n && src[j + 1] == b'*' {
+                    depth += 1;
+                    j += 2;
+                } else if src[j] == b'*' && j + 1 < n && src[j + 1] == b'/' {
+                    depth -= 1;
+                    j += 2;
+                } else {
+                    j += 1;
+                }
+            }
+            blank(&mut out, i, j);
+            i = j;
+        } else if c == b'r' && (i == 0 || !is_ident(src[i - 1])) && raw_string_len(src, i) > 0 {
+            let j = i + raw_string_len(src, i);
+            blank(&mut out, i, j);
+            i = j;
+        } else if c == b'"' {
+            let mut j = i + 1;
+            while j < n {
+                if src[j] == b'\\' {
+                    j = (j + 2).min(n);
+                } else if src[j] == b'"' {
+                    j += 1;
+                    break;
+                } else {
+                    j += 1;
+                }
+            }
+            blank(&mut out, i, j);
+            i = j;
+        } else if c == b'\'' {
+            if i + 1 < n && src[i + 1] == b'\\' {
+                // Escaped char literal: '\n', '\x7f', '\u{..}'.
+                let mut j = i + 2;
+                while j < n && src[j] != b'\'' {
+                    j += 1;
+                }
+                let end = (j + 1).min(n);
+                blank(&mut out, i, end);
+                i = end;
+            } else if i + 2 < n && src[i + 2] == b'\'' && src[i + 1] != b'\'' {
+                // Plain one-byte char literal: 'x'.
+                blank(&mut out, i, i + 3);
+                i += 3;
+            } else {
+                // Lifetime (or a multi-byte char literal, which no
+                // pass keyword can match anyway).
+                i += 1;
+            }
+        } else {
+            i += 1;
+        }
+    }
+    out
+}
+
+/// If `src[i..]` starts a raw string literal (`r"…"`, `r#"…"#`, …),
+/// return its total byte length, else 0.
+fn raw_string_len(src: &[u8], i: usize) -> usize {
+    let n = src.len();
+    let mut j = i + 1;
+    let mut hashes = 0usize;
+    while j < n && src[j] == b'#' {
+        hashes += 1;
+        j += 1;
+    }
+    if j >= n || src[j] != b'"' {
+        return 0;
+    }
+    j += 1;
+    while j < n {
+        if src[j] == b'"' {
+            let mut k = j + 1;
+            let mut h = 0usize;
+            while k < n && h < hashes && src[k] == b'#' {
+                h += 1;
+                k += 1;
+            }
+            if h == hashes {
+                return k - i;
+            }
+        }
+        j += 1;
+    }
+    n - i
+}
+
+/// Index of the matching `}` for the `{` at `open` (or EOF).
+pub fn match_brace(code: &[u8], open: usize) -> usize {
+    let mut depth = 0i64;
+    let mut j = open;
+    while j < code.len() {
+        match code[j] {
+            b'{' => depth += 1,
+            b'}' => {
+                depth -= 1;
+                if depth == 0 {
+                    return j;
+                }
+            }
+            _ => {}
+        }
+        j += 1;
+    }
+    code.len().saturating_sub(1)
+}
+
+/// Index of the matching `)` for the `(` at `open` (or EOF).
+pub fn match_paren(code: &[u8], open: usize) -> usize {
+    let mut depth = 0i64;
+    let mut j = open;
+    while j < code.len() {
+        match code[j] {
+            b'(' => depth += 1,
+            b')' => {
+                depth -= 1;
+                if depth == 0 {
+                    return j;
+                }
+            }
+            _ => {}
+        }
+        j += 1;
+    }
+    code.len().saturating_sub(1)
+}
+
+/// Spans of items gated behind `#[cfg(test)]`/`#[cfg(all(test, …))]`
+/// (and `loom` likewise — model-only code is not production code).
+fn test_regions(code: &[u8]) -> Vec<(usize, usize)> {
+    let n = code.len();
+    let mut out = Vec::new();
+    let mut i = 0usize;
+    while i < n {
+        if code[i] != b'#' {
+            i += 1;
+            continue;
+        }
+        let mut j = i + 1;
+        while j < n && (code[j] as char).is_whitespace() {
+            j += 1;
+        }
+        if j >= n || code[j] != b'[' {
+            i += 1;
+            continue;
+        }
+        let Some(close) = code[j..].iter().position(|&b| b == b']').map(|p| j + p) else {
+            break;
+        };
+        let attr: String = code[j + 1..close]
+            .iter()
+            .map(|&b| b as char)
+            .filter(|c| !c.is_whitespace())
+            .collect();
+        let gated = attr.starts_with("cfg(test")
+            || attr.starts_with("cfg(loom")
+            || attr.starts_with("cfg(all(test")
+            || attr.starts_with("cfg(all(loom")
+            || attr.starts_with("cfg(any(test");
+        if !gated {
+            i = close + 1;
+            continue;
+        }
+        // Skip any further attributes, then find the item's body.
+        let mut k = close + 1;
+        loop {
+            while k < n && (code[k] as char).is_whitespace() {
+                k += 1;
+            }
+            if k < n && code[k] == b'#' {
+                match code[k..].iter().position(|&b| b == b']') {
+                    Some(p) => k += p + 1,
+                    None => break,
+                }
+            } else {
+                break;
+            }
+        }
+        let mut brace = None;
+        let mut m = k;
+        while m < n {
+            if code[m] == b';' {
+                break;
+            }
+            if code[m] == b'{' {
+                brace = Some(m);
+                break;
+            }
+            m += 1;
+        }
+        match brace {
+            Some(b) => {
+                let end = match_brace(code, b);
+                out.push((i, end));
+                i = b + 1;
+            }
+            None => i = k.max(i + 1),
+        }
+    }
+    out
+}
+
+/// Named-function body spans (lexical; closures are attributed to the
+/// nearest enclosing named fn).
+fn fn_spans(code: &[u8]) -> Vec<FnSpan> {
+    let mut out = Vec::new();
+    for (a, b) in Words::new(code) {
+        if &code[a..b] != b"fn" {
+            continue;
+        }
+        // Next word is the fn name.
+        let mut j = b;
+        while j < code.len() && (code[j] as char).is_whitespace() {
+            j += 1;
+        }
+        let start = j;
+        while j < code.len() && is_ident(code[j]) {
+            j += 1;
+        }
+        if j == start {
+            continue;
+        }
+        let name: String = code[start..j].iter().map(|&c| c as char).collect();
+        let mut brace = None;
+        let mut m = j;
+        while m < code.len() {
+            if code[m] == b';' {
+                break;
+            }
+            if code[m] == b'{' {
+                brace = Some(m);
+                break;
+            }
+            m += 1;
+        }
+        if let Some(open) = brace {
+            out.push(FnSpan { name, open, close: match_brace(code, open) });
+        }
+    }
+    out
+}
+
+fn line_starts(src: &[u8]) -> Vec<usize> {
+    let mut v = vec![0usize];
+    for (i, b) in src.iter().enumerate() {
+        if *b == b'\n' {
+            v.push(i + 1);
+        }
+    }
+    v
+}
+
+impl SourceFile {
+    pub fn new(rel: String, raw: String) -> SourceFile {
+        let code = strip_code(raw.as_bytes());
+        let line_starts = line_starts(raw.as_bytes());
+        let test_regions = test_regions(&code);
+        let fns = fn_spans(&code);
+        SourceFile { rel, raw, code, line_starts, test_regions, fns }
+    }
+
+    /// 1-based line number of byte offset `off`.
+    pub fn line_of(&self, off: usize) -> usize {
+        match self.line_starts.binary_search(&off) {
+            Ok(i) => i + 1,
+            Err(i) => i,
+        }
+    }
+
+    pub fn is_test(&self, off: usize) -> bool {
+        self.test_regions.iter().any(|&(a, b)| a <= off && off <= b)
+    }
+
+    /// Name of the innermost named fn containing `off`.
+    pub fn enclosing_fn(&self, off: usize) -> Option<&str> {
+        self.fns
+            .iter()
+            .filter(|s| s.open <= off && off <= s.close)
+            .min_by_key(|s| s.close - s.open)
+            .map(|s| s.name.as_str())
+    }
+
+    /// Iterator over identifier words in `code`.
+    pub fn words(&self) -> Words<'_> {
+        Words::new(&self.code)
+    }
+
+    pub fn word(&self, a: usize, b: usize) -> &str {
+        std::str::from_utf8(&self.code[a..b]).unwrap_or("")
+    }
+
+    /// First non-whitespace offset at or after `i`.
+    pub fn next_nonws(&self, i: usize) -> usize {
+        let mut j = i;
+        while j < self.code.len() && (self.code[j] as char).is_whitespace() {
+            j += 1;
+        }
+        j
+    }
+
+    /// Last non-whitespace offset at or before `i`, if any.
+    pub fn prev_nonws(&self, i: usize) -> Option<usize> {
+        let mut j = i as i64;
+        while j >= 0 && (self.code[j as usize] as char).is_whitespace() {
+            j -= 1;
+        }
+        (j >= 0).then_some(j as usize)
+    }
+}
+
+/// Iterator yielding `(start, end)` of identifier-shaped words.
+pub struct Words<'a> {
+    code: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Words<'a> {
+    pub fn new(code: &'a [u8]) -> Words<'a> {
+        Words { code, i: 0 }
+    }
+}
+
+impl<'a> Iterator for Words<'a> {
+    type Item = (usize, usize);
+
+    fn next(&mut self) -> Option<(usize, usize)> {
+        let code = self.code;
+        let n = code.len();
+        let mut i = self.i;
+        while i < n {
+            if (code[i].is_ascii_alphabetic() || code[i] == b'_')
+                && (i == 0 || !is_ident(code[i - 1]))
+            {
+                let mut j = i + 1;
+                while j < n && is_ident(code[j]) {
+                    j += 1;
+                }
+                self.i = j;
+                return Some((i, j));
+            }
+            i += 1;
+        }
+        self.i = i;
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strips_comments_and_strings() {
+        let src = br#"let a = "Instant::now()"; // Instant::now()
+let b = 'x'; /* HashMap */ let c = 1;"#;
+        let code = strip_code(src);
+        let s = String::from_utf8(code).unwrap();
+        assert!(!s.contains("Instant"));
+        assert!(!s.contains("HashMap"));
+        assert!(s.contains("let b ="));
+        assert_eq!(s.len(), src.len());
+    }
+
+    #[test]
+    fn lifetimes_survive_stripping() {
+        let src = b"fn f<'a>(b: &'a [u8]) -> &'a [u8] { b }";
+        let code = strip_code(src);
+        assert_eq!(&code[..], &src[..]);
+    }
+
+    #[test]
+    fn test_regions_cover_mod_tests() {
+        let src =
+            b"fn live() {}\n#[cfg(test)]\nmod tests {\n    fn t() { bad(); }\n}\nfn live2() {}";
+        let f = SourceFile::new("x.rs".into(), String::from_utf8(src.to_vec()).unwrap());
+        let bad = f.raw.find("bad").unwrap();
+        assert!(f.is_test(bad));
+        assert!(!f.is_test(f.raw.find("live2").unwrap()));
+    }
+
+    #[test]
+    fn enclosing_fn_innermost() {
+        let src = "fn outer() { fn inner() { mark(); } }";
+        let f = SourceFile::new("x.rs".into(), src.to_string());
+        let mark = src.find("mark").unwrap();
+        assert_eq!(f.enclosing_fn(mark), Some("inner"));
+    }
+}

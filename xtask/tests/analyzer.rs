@@ -1,0 +1,146 @@
+//! Integration tests for `cargo xtask analyze`.
+//!
+//! Two contracts, both directions:
+//!
+//! * every fixture under `xtask/fixtures/` trips exactly its intended
+//!   rule (the passes can still see the hazards), and nothing else
+//!   (the fixtures double as false-positive regressions);
+//! * the real tree plus `analysis/allow.toml` is clean — zero
+//!   unsuppressed findings AND zero stale allow entries. This is the
+//!   same invariant the blocking CI `analyze` job enforces, kept here
+//!   so plain `cargo test` catches drift without the CI round-trip.
+
+use std::path::{Path, PathBuf};
+
+use xtask::{analyze, PassSet, Report};
+
+fn fixture_root(name: &str) -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("fixtures").join(name)
+}
+
+fn repo_root() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("xtask/ lives one level below the repo root")
+        .to_path_buf()
+}
+
+/// Run all passes over a fixture with an empty allowlist.
+fn scan_fixture(name: &str) -> Report {
+    analyze(&fixture_root(name), &[], PassSet::default())
+        .unwrap_or_else(|e| panic!("analyze({name}) failed: {e}"))
+}
+
+fn assert_only_rule(report: &Report, pass: &str, rule: &str, expect_n: usize) {
+    assert_eq!(
+        report.findings.len(),
+        expect_n,
+        "expected exactly {expect_n} finding(s), got:\n{}",
+        render(report),
+    );
+    for f in &report.findings {
+        assert_eq!(
+            (f.pass, f.rule),
+            (pass, rule),
+            "unexpected finding:\n{}",
+            render(report),
+        );
+    }
+}
+
+fn render(report: &Report) -> String {
+    report
+        .findings
+        .iter()
+        .map(|f| f.to_string())
+        .collect::<Vec<_>>()
+        .join("\n")
+}
+
+#[test]
+fn fixture_wall_clock_trips_determinism() {
+    let r = scan_fixture("wall_clock");
+    assert_only_rule(&r, "determinism", "wall-clock", 1);
+    // The Instant::now inside #[cfg(test)] must NOT be flagged; one
+    // finding total proves the test-region skip still works.
+}
+
+#[test]
+fn fixture_hashmap_iter_trips_hash_collections() {
+    let r = scan_fixture("hashmap_iter");
+    assert!(
+        !r.findings.is_empty(),
+        "hashmap_iter fixture produced no findings"
+    );
+    for f in &r.findings {
+        assert_eq!((f.pass, f.rule), ("determinism", "hash-collections"));
+    }
+}
+
+#[test]
+fn fixture_undeclared_offset_trips_regmap() {
+    let r = scan_fixture("undeclared_offset");
+    assert_only_rule(&r, "regmap", "undeclared-offset", 1);
+    // The symbolic rf_regs::ID read in the same fn must resolve clean.
+}
+
+#[test]
+fn fixture_ro_write_trips_regmap() {
+    let r = scan_fixture("ro_write");
+    assert_only_rule(&r, "regmap", "ro-write", 1);
+    // The RW SCRATCH write in the same fn must resolve clean.
+}
+
+#[test]
+fn fixture_hot_unwrap_trips_panic_audit() {
+    let r = scan_fixture("hot_unwrap");
+    assert_only_rule(&r, "panic", "unwrap", 1);
+    // The unwrap-equivalent inside #[cfg(test)] mod tests is sanctioned.
+}
+
+#[test]
+fn pass_gating_skips_disabled_passes() {
+    // Running only the determinism pass over a regmap-bad fixture must
+    // report nothing: --pass selection genuinely disables the others.
+    let mut only_det = PassSet::none();
+    only_det.enable("determinism").expect("known pass name");
+    let r = analyze(&fixture_root("ro_write"), &[], only_det).expect("analyze");
+    assert!(
+        r.findings.is_empty(),
+        "determinism-only run leaked regmap findings:\n{}",
+        render(&r),
+    );
+}
+
+#[test]
+fn repo_allowlist_is_scoped_not_blanket() {
+    // The repo allowlist must not accidentally suppress fixture-style
+    // hazards: its entries are (pass, path, rule, fn)-scoped, so a hot
+    // path unwrap in link/msg.rs still fails even with it loaded.
+    let allow = xtask::allow::load(&repo_root().join("analysis").join("allow.toml"))
+        .expect("allow.toml parses");
+    let r = analyze(&fixture_root("hot_unwrap"), &allow, PassSet::default()).expect("analyze");
+    assert_eq!(r.findings.len(), 1, "allowlist over-suppressed:\n{}", render(&r));
+}
+
+/// The headline invariant: today's tree is clean under today's
+/// allowlist, and the allowlist carries no stale entries.
+#[test]
+fn real_tree_is_clean_under_allowlist() {
+    let root = repo_root();
+    let allow = xtask::allow::load(&root.join("analysis").join("allow.toml"))
+        .expect("allow.toml parses");
+    assert!(!allow.is_empty(), "allow.toml should not be empty");
+    let r = analyze(&root, &allow, PassSet::default()).expect("analyze");
+    assert!(
+        r.findings.is_empty(),
+        "unsuppressed findings in the real tree:\n{}",
+        render(&r),
+    );
+    assert!(
+        r.unused_allows.is_empty(),
+        "stale allow entries:\n{}",
+        r.unused_allows.join("\n"),
+    );
+    assert!(r.suppressed > 0, "expected the documented wall seams to be suppressed");
+}
