@@ -1,0 +1,138 @@
+//! Bench: **impairment sweep** — what link loss costs, measured.
+//!
+//! Grid: drop ∈ {0, 0.01, 0.05} (with proportional dup/reorder riding
+//! along) over a 2-device, depth-2 sharded offload on the in-proc
+//! transport, plus one UDP row (real loopback datagrams, clean) for
+//! the transport-tax comparison.
+//!
+//! Assertions (the acceptance gates of the lossy-link PR):
+//!   * outputs of every cell are byte-identical to the clean baseline
+//!     (loss must never change answers);
+//!   * every lossy cell's healing counters are nonzero (the fault
+//!     injector demonstrably engaged);
+//!   * every cell converges — no hangs at these loss rates.
+//!
+//! Machine-readable output: the sweep is written as JSON to
+//! `BENCH_link.json` (override with `VMHDL_BENCH_JSON=path`); CI
+//! uploads it as an artifact — the EXPERIMENTS.md impairment-sweep
+//! protocol reads this file.
+//!
+//! Run: `cargo bench --bench link_impairment`
+
+use std::fmt::Write as _;
+use std::time::Duration;
+
+use vmhdl::config::Config;
+use vmhdl::coordinator::scenario::{self, ShardPolicy};
+use vmhdl::coordinator::stats::fmt_dur;
+
+const RECORDS: usize = 8;
+const SEED: u64 = 0x11A7;
+
+struct Row {
+    label: String,
+    wall: Duration,
+    rate: f64,
+    retransmits: u64,
+    dups_dropped: u64,
+    reorders_healed: u64,
+    corrupt_dropped: u64,
+}
+
+fn run_row(label: &str, transport: &str, impair: Option<&str>) -> (Row, Vec<Vec<i32>>) {
+    let mut cfg = Config { devices: 2, queue_depth: 2, ..Config::default() };
+    cfg.set("transport", transport).unwrap();
+    if let Some(spec) = impair {
+        cfg.set("impair", spec).unwrap();
+    }
+    let (rep, outs) = scenario::run_sharded_offload_depth(
+        cfg.cosim().unwrap(),
+        RECORDS,
+        SEED,
+        ShardPolicy::RoundRobin,
+        2,
+        None,
+    )
+    .unwrap_or_else(|e| panic!("{label}: impairment cell failed: {e}"));
+    let row = Row {
+        label: label.to_string(),
+        wall: rep.wall,
+        rate: rep.records as f64 / rep.wall.as_secs_f64().max(1e-9),
+        retransmits: rep.hdl.iter().map(|h| h.retransmits).sum(),
+        dups_dropped: rep.hdl.iter().map(|h| h.dups_dropped).sum(),
+        reorders_healed: rep.hdl.iter().map(|h| h.reorders_healed).sum(),
+        corrupt_dropped: rep.hdl.iter().map(|h| h.corrupt_dropped).sum(),
+    };
+    (row, outs)
+}
+
+fn main() {
+    println!("LINK IMPAIRMENT SWEEP — {RECORDS} records, N=2, D=2, round-robin");
+    println!(
+        "{:<24}{:>12}{:>12}{:>8}{:>8}{:>8}{:>9}",
+        "link", "wall", "records/s", "rtx", "dups", "heals", "corrupt"
+    );
+
+    let cells: [(&str, &str, Option<&str>); 4] = [
+        ("inproc clean", "inproc", None),
+        ("inproc drop=0.01", "inproc", Some("drop=0.01,dup=0.005,reorder=0.01,seed=11")),
+        ("inproc drop=0.05", "inproc", Some("drop=0.05,dup=0.01,reorder=0.05,seed=11")),
+        ("udp clean", "udp", None),
+    ];
+
+    let (baseline_row, baseline) = run_row(cells[0].0, cells[0].1, None);
+    let mut rows = vec![baseline_row];
+    for (label, transport, impair) in cells.iter().skip(1) {
+        let (row, outs) = run_row(label, transport, *impair);
+        assert_eq!(outs, baseline, "{label}: outputs diverged from the clean baseline");
+        if impair.is_some() {
+            let healed =
+                row.retransmits + row.dups_dropped + row.reorders_healed + row.corrupt_dropped;
+            assert!(healed > 0, "{label}: faults never engaged");
+        }
+        rows.push(row);
+    }
+
+    for r in &rows {
+        println!(
+            "{:<24}{:>12}{:>12.1}{:>8}{:>8}{:>8}{:>9}",
+            r.label,
+            fmt_dur(r.wall),
+            r.rate,
+            r.retransmits,
+            r.dups_dropped,
+            r.reorders_healed,
+            r.corrupt_dropped,
+        );
+    }
+
+    // Machine-readable sweep for the CI artifact / EXPERIMENTS.md.
+    let mut json = String::new();
+    let _ = write!(
+        json,
+        "{{\"bench\":\"link_impairment\",\"records\":{RECORDS},\"seed\":{SEED},\"rows\":["
+    );
+    for (i, r) in rows.iter().enumerate() {
+        if i > 0 {
+            json.push(',');
+        }
+        let _ = write!(
+            json,
+            "{{\"link\":\"{}\",\"records_per_s\":{:.2},\"wall_us\":{},\
+             \"retransmits\":{},\"dups_dropped\":{},\"reorders_healed\":{},\
+             \"corrupt_dropped\":{}}}",
+            r.label,
+            r.rate,
+            r.wall.as_micros(),
+            r.retransmits,
+            r.dups_dropped,
+            r.reorders_healed,
+            r.corrupt_dropped,
+        );
+    }
+    json.push_str("]}");
+    let path =
+        std::env::var("VMHDL_BENCH_JSON").unwrap_or_else(|_| "BENCH_link.json".to_string());
+    std::fs::write(&path, &json).expect("write bench json");
+    println!("\nOK: loss never changed answers; sweep written to {path}");
+}

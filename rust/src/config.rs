@@ -12,7 +12,7 @@ use crate::coordinator::cosim::{CoSimCfg, TransportKind};
 use crate::coordinator::scenario::ShardPolicy;
 use crate::hdl::kernel::{KernelCfg, KernelKind};
 use crate::hdl::platform::PlatformCfg;
-use crate::link::LinkMode;
+use crate::link::{ImpairCfg, LinkMode};
 use crate::runtime::BackendKind;
 use crate::{Error, Result};
 
@@ -34,10 +34,23 @@ use crate::{Error, Result};
 pub struct Config {
     /// Link abstraction: `mmio` (paper) or `tlp` (vpcie baseline).
     pub mode: LinkMode,
-    /// `inproc` or `uds`.
+    /// `inproc`, `uds`, or `udp` (loopback datagrams — a real lossy
+    /// wire under the reliability layer).
     pub transport: String,
     /// Rendezvous directory for uds sockets.
     pub socket_dir: PathBuf,
+    /// Base port of the fixed UDP rendezvous scheme (`--udp-port`;
+    /// each device claims four consecutive-ish ports — see
+    /// `link::udp::device_port`). Only split-process runs use it:
+    /// single-process `--transport udp` runs pick OS-assigned ports.
+    pub udp_port: u16,
+    /// Link fault injection applied to every device (`--impair
+    /// drop=0.05,dup=0.01,reorder=0.1,corrupt=0.01,seed=7`); `None` =
+    /// clean wire.
+    pub impair: Option<ImpairCfg>,
+    /// Per-device impairment overrides (`--device-impair k:spec` —
+    /// note the colon: the spec itself contains commas).
+    pub device_impair: Vec<(usize, ImpairCfg)>,
     /// Record length in words.
     pub n: usize,
     /// Stream kernel every device carries unless overridden per
@@ -114,6 +127,9 @@ impl Default for Config {
             mode: LinkMode::Mmio,
             transport: "inproc".to_string(),
             socket_dir: std::env::temp_dir().join("vmhdl-sockets"),
+            udp_port: 47_800,
+            impair: None,
+            device_impair: Vec::new(),
             n: 1024,
             kernel: KernelKind::Sort,
             sorter_latency: 1256,
@@ -171,12 +187,30 @@ impl Config {
         match key {
             "mode" => self.mode = value.parse()?,
             "transport" => {
-                if value != "inproc" && value != "uds" {
+                if value != "inproc" && value != "uds" && value != "udp" {
                     return Err(bad("transport"));
                 }
                 self.transport = value.to_string();
             }
             "socket-dir" | "dir" => self.socket_dir = PathBuf::from(value),
+            "udp-port" => self.udp_port = value.parse().map_err(|_| bad("udp-port"))?,
+            "impair" => self.impair = Some(ImpairCfg::parse(value)?),
+            "device-impair" => {
+                // `k:spec` — the spec uses commas internally, so the
+                // generic `k=v,k=v` override parser cannot split it.
+                let (k, spec) = value.split_once(':').ok_or_else(|| {
+                    Error::config(format!(
+                        "bad device-impair: {value:?} (want k:drop=..,seed=..)"
+                    ))
+                })?;
+                let k: usize = k
+                    .trim()
+                    .parse()
+                    .map_err(|_| bad("device-impair device index"))?;
+                let cfg = ImpairCfg::parse(spec)?;
+                self.device_impair.retain(|&(i, _)| i != k);
+                self.device_impair.push((k, cfg));
+            }
             "n" => self.n = value.parse().map_err(|_| bad("n"))?,
             "kernel" => {
                 // Either a bare kind ("checksum" — every device) or a
@@ -313,6 +347,10 @@ impl Config {
         let transport = match self.transport.as_str() {
             "inproc" => TransportKind::InProc,
             "uds" => TransportKind::Uds(self.socket_dir.clone()),
+            // Single-command spelling: both sides in this process over
+            // real loopback datagrams. The split-process entry points
+            // (`vm-side` / `hdl-side`) override `hdl_in_proc`.
+            "udp" => TransportKind::Udp { port: self.udp_port, hdl_in_proc: true },
             other => return Err(Error::config(format!("transport {other:?}"))),
         };
         // Validate the heterogeneity overrides here, where the whole
@@ -356,6 +394,9 @@ impl Config {
                     "device-n: {n} is not a power of two ≥ {w}"
                 )));
             }
+        }
+        for &(k, _) in &self.device_impair {
+            check_idx("device-impair", k)?;
         }
         for &(k, us) in &self.device_link_latency {
             check_idx("device-link-latency", k)?;
@@ -433,6 +474,8 @@ impl Config {
             device_kernel: self.device_kernel.clone(),
             device_n: self.device_n.clone(),
             device_link_latency_us: self.device_link_latency.clone(),
+            impair: self.impair,
+            device_impair: self.device_impair.clone(),
             ram_size: self.ram_size,
             vcd: self.vcd.clone(),
             poll_interval: self.poll_interval,
@@ -667,6 +710,43 @@ mod tests {
                 "--{k} {v} must route through the sharded runner"
             );
         }
+    }
+
+    #[test]
+    fn impair_and_udp_knobs() {
+        use crate::coordinator::cosim::impair_for;
+        let mut c = Config::default();
+        assert!(c.impair.is_none(), "clean wire must be the default");
+        c.set("transport", "udp").unwrap();
+        c.set("udp-port", "50000").unwrap();
+        c.set("impair", "drop=0.05,dup=0.01,reorder=0.1,seed=7").unwrap();
+        let cc = c.cosim().unwrap();
+        assert!(matches!(
+            cc.transport,
+            TransportKind::Udp { port: 50000, hdl_in_proc: true }
+        ));
+        let ic = impair_for(&cc, 0).unwrap();
+        assert_eq!(ic.drop_ppm, 50_000);
+        assert_eq!(ic.seed, 7);
+        // Per-device override (colon syntax) wins over the global.
+        c.set("devices", "2").unwrap();
+        c.set("device-impair", "1:drop=0.5,seed=3").unwrap();
+        let cc = c.cosim().unwrap();
+        assert_eq!(impair_for(&cc, 0).unwrap().drop_ppm, 50_000);
+        assert_eq!(impair_for(&cc, 1).unwrap().drop_ppm, 500_000);
+        assert_eq!(impair_for(&cc, 1).unwrap().seed, 3);
+        // Later writes for the same device win.
+        c.set("device-impair", "1:drop=0.25").unwrap();
+        assert_eq!(c.device_impair.len(), 1);
+        // Validation: bad specs, bad syntax, out-of-range devices.
+        assert!(c.clone().set("impair", "drop=2.0").is_err());
+        assert!(c.clone().set("impair", "warp=0.1").is_err());
+        assert!(c.clone().set("device-impair", "drop=0.1").is_err());
+        assert!(c.clone().set("udp-port", "x").is_err());
+        assert!(c.clone().set("transport", "tcp").is_err());
+        let mut oob = c.clone();
+        oob.set("device-impair", "9:drop=0.1").unwrap();
+        assert!(oob.cosim().is_err(), "out-of-range device must fail");
     }
 
     #[test]

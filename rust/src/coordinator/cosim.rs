@@ -31,7 +31,7 @@ use crate::hdl::platform::{Platform, PlatformCfg};
 use crate::hdl::signal::{ProbeFrame, Probed};
 use crate::hdl::sim::{Horizon, MergedHorizon, Scheduler, Sim, TickCtx};
 use crate::hdl::vcd::VcdWriter;
-use crate::link::{Doorbell, Endpoint, LinkMode, Side};
+use crate::link::{Doorbell, Endpoint, ImpairCfg, LinkMode, Side};
 use crate::vm::Vmm;
 use crate::{Error, Result};
 
@@ -43,6 +43,13 @@ pub enum TransportKind {
     /// Unix-domain sockets under this rendezvous directory; the HDL
     /// side may live in another process and be restarted freely.
     Uds(PathBuf),
+    /// Loopback UDP datagrams — a genuinely lossy, reordering wire.
+    /// With `hdl_in_proc` the HDL side runs on a thread in this
+    /// process but traffic still crosses real sockets (OS-assigned
+    /// ports, so parallel runs never collide); otherwise the VM side
+    /// dials the fixed [`crate::link::udp::device_port`] scheme at
+    /// `port` and the HDL side is a separate `vmhdl hdl-side` process.
+    Udp { port: u16, hdl_in_proc: bool },
 }
 
 /// Co-simulation configuration.
@@ -91,6 +98,16 @@ pub struct CoSimCfg {
     /// *wall clock* — the knob that makes work-steal divergence show
     /// up in records/s, not only in per-device cycle accounting.
     pub device_link_latency_us: Vec<(usize, u64)>,
+    /// Deterministic fault injection applied to every device's link
+    /// (`--impair drop=0.05,dup=0.01,reorder=0.1,seed=N`): faults are
+    /// a pure function of `(seed, device, channel, send index)`, so
+    /// same-seed impaired runs deliver identical sequences. `None` =
+    /// clean wire.
+    pub impair: Option<ImpairCfg>,
+    /// Per-device impairment overrides `(device, cfg)`
+    /// (`--device-impair k:spec`): device k gets this config instead
+    /// of the global `impair` (heterogeneous link quality).
+    pub device_impair: Vec<(usize, ImpairCfg)>,
     /// Guest RAM bytes.
     pub ram_size: usize,
     /// Record waveforms of the entire platform to this VCD file.
@@ -118,6 +135,8 @@ impl Default for CoSimCfg {
             device_kernel: Vec::new(),
             device_n: Vec::new(),
             device_link_latency_us: Vec::new(),
+            impair: None,
+            device_impair: Vec::new(),
             ram_size: 4 << 20,
             vcd: None,
             poll_interval: 1,
@@ -165,6 +184,15 @@ pub struct HdlReport {
     pub desc_fetches: u64,
     pub desc_writebacks: u64,
     pub vcd_changes: u64,
+    /// Reliability-layer counters of this lane's link endpoint (both
+    /// pairs summed): frames replayed by the poll-round retransmit
+    /// timer, duplicate frames rejected, out-of-order frames healed by
+    /// the reorder buffer, and undecodable frames dropped on the
+    /// loss-tolerant receive path. All zero on a clean wire.
+    pub retransmits: u64,
+    pub dups_dropped: u64,
+    pub reorders_healed: u64,
+    pub corrupt_dropped: u64,
 }
 
 /// Handle to a running HDL side (thread flavour) — one thread driving
@@ -174,6 +202,18 @@ pub struct HdlSideHandle {
     /// Live cycle counters, one per device lane.
     pub cycles: Vec<Arc<AtomicU64>>,
     handle: Option<std::thread::JoinHandle<Result<Vec<HdlReport>>>>,
+}
+
+impl Drop for HdlSideHandle {
+    /// An error-path drop (a scenario that failed before shutdown —
+    /// e.g. a driver timeout over a blackholed link) must not leak a
+    /// retransmitting HDL thread for the rest of the process.
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
 }
 
 impl HdlSideHandle {
@@ -264,6 +304,16 @@ pub fn link_latency_for(cfg: &CoSimCfg, k: usize) -> Duration {
         .find(|&&(d, _)| d == k)
         .map(|&(_, us)| Duration::from_micros(us))
         .unwrap_or(Duration::ZERO)
+}
+
+/// The fault-injection config for device `k`'s link: the per-device
+/// override when present, the global `impair` otherwise.
+pub fn impair_for(cfg: &CoSimCfg, k: usize) -> Option<ImpairCfg> {
+    cfg.device_impair
+        .iter()
+        .find(|&&(d, _)| d == k)
+        .map(|&(_, c)| c)
+        .or(cfg.impair)
 }
 
 /// Per-device VCD path: device 0 records to `path` itself; device k
@@ -403,6 +453,10 @@ impl HdlLane {
             desc_fetches: self.platform.dma.desc_fetches,
             desc_writebacks: self.platform.dma.desc_writebacks,
             vcd_changes,
+            retransmits: self.link.retransmits(),
+            dups_dropped: self.link.dups_dropped(),
+            reorders_healed: self.link.reorders_healed(),
+            corrupt_dropped: self.link.corrupt_dropped(),
         })
     }
 }
@@ -624,8 +678,13 @@ pub fn run_hdl_multi_loop(
                 }
                 // Control-only wake (or a partial frame): nothing for
                 // any platform. Brief nap so a straggling frame tail
-                // cannot hot-spin us.
+                // cannot hot-spin us. Keep the retransmit schedule
+                // ticking — this branch bypasses the bottom-of-loop
+                // nudge.
                 std::thread::sleep(Duration::from_micros(20));
+                for lane in lanes.iter_mut() {
+                    lane.link.nudge_retransmit();
+                }
                 continue 'idle;
             }
             if doorbell.is_wired() {
@@ -634,6 +693,14 @@ pub fn run_hdl_multi_loop(
                 // Socket transports cannot ring: nap-poll with the
                 // same granularity the single-device loop used.
                 std::thread::sleep(idle_slice.min(Duration::from_micros(50)));
+            }
+            // Lossy wires: an idle side must keep the poll-round
+            // retransmit schedule ticking, because the frame it is
+            // blocked waiting for may be exactly the one that was
+            // dropped — the doorbell would then never ring. No-op on a
+            // clean wire (empty outboxes reset the counter).
+            for lane in lanes.iter_mut() {
+                lane.link.nudge_retransmit();
             }
         }
         let idle_elapsed = idle0.elapsed();
@@ -673,14 +740,32 @@ impl CoSim {
             crate::pcie::board::MAX_DEVICES
         );
         match &cfg.transport {
-            TransportKind::InProc => {
+            TransportKind::InProc | TransportKind::Udp { hdl_in_proc: true, .. } => {
                 let mut vm_eps = Vec::with_capacity(n);
                 let mut lanes = Vec::with_capacity(n);
                 let mut cycles = Vec::with_capacity(n);
                 let mut kernel_ids = Vec::with_capacity(n);
                 for k in 0..n {
-                    let (vm_ep, mut hdl_ep) = Endpoint::inproc_pair_on(k as u8);
+                    let (mut vm_ep, mut hdl_ep) = match &cfg.transport {
+                        // Real loopback datagrams on OS-assigned ports
+                        // (parallel runs never collide); the fixed
+                        // `port` scheme is only for split processes.
+                        TransportKind::Udp { .. } => {
+                            let session = super::lifecycle::fresh_session();
+                            Endpoint::udp_pair_on(k as u8, session, session)?
+                        }
+                        _ => Endpoint::inproc_pair_on(k as u8),
+                    };
                     hdl_ep.set_send_latency(link_latency_for(&cfg, k));
+                    if let Some(ic) = impair_for(&cfg, k) {
+                        // Both ends: each wraps its own tx when the
+                        // direction selects it, and both become
+                        // loss-tolerant (corruption is injected at the
+                        // sender, so the receiver's own transport may
+                        // look clean).
+                        vm_ep.impair(&ic);
+                        hdl_ep.impair(&ic);
+                    }
                     let pcfg = platform_cfg_for(&cfg, k);
                     kernel_ids.push(pcfg.kernel.kind.id());
                     lanes.push((Platform::new(pcfg), hdl_ep));
@@ -699,6 +784,22 @@ impl CoSim {
                     hdl: Some(HdlSideHandle { stop, cycles, handle: Some(handle) }),
                 })
             }
+            TransportKind::Udp { port, hdl_in_proc: false } => {
+                let session = super::lifecycle::fresh_session();
+                let mut vm_eps = Vec::with_capacity(n);
+                let mut kernel_ids = Vec::with_capacity(n);
+                for k in 0..n {
+                    let mut ep = Endpoint::udp(Side::Vm, *port, k as u8, session)?;
+                    if let Some(ic) = impair_for(&cfg, k) {
+                        ep.impair(&ic);
+                    }
+                    vm_eps.push(ep);
+                    kernel_ids.push(platform_cfg_for(&cfg, k).kernel.kind.id());
+                }
+                let vmm =
+                    Vmm::new_multi_with_kernels(vm_eps, cfg.mode, cfg.ram_size, &kernel_ids);
+                Ok(CoSim { cfg, vmm, hdl: None })
+            }
             TransportKind::Uds(dir) => {
                 // A fresh session id per incarnation — the pid alone
                 // is NOT enough (a relaunched VM in the same process
@@ -712,6 +813,9 @@ impl CoSim {
                     std::fs::create_dir_all(&devdir)?;
                     let mut ep = Endpoint::uds(Side::Vm, &devdir, session)?;
                     ep.set_device_id(k as u8);
+                    if let Some(ic) = impair_for(&cfg, k) {
+                        ep.impair(&ic);
+                    }
                     vm_eps.push(ep);
                     kernel_ids.push(platform_cfg_for(&cfg, k).kernel.kind.id());
                 }

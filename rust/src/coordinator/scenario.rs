@@ -27,7 +27,7 @@ use crate::runtime::native::{record_checksum, record_stats};
 use crate::runtime::GoldenBackend;
 use crate::testutil::XorShift64;
 use crate::vm::guest::{app, SortDriver, SortDriverSg};
-use crate::vm::vmm::{GuestEnv, NoopHook};
+use crate::vm::vmm::{GuestEnv, NoopHook, Vmm};
 use crate::{Error, Result};
 
 /// How a record batch is split across devices.
@@ -234,6 +234,42 @@ impl TimeGap {
     }
 }
 
+/// One-line VM-side link-health summary across every device.
+///
+/// Appended to scenario errors so a lossy-link hang is diagnosable
+/// from the message alone: a stuck `backlog` with climbing
+/// `retransmits` means frames are being lost faster than the
+/// reliability layer can heal them (DEBUGGING.md §9 is the
+/// walkthrough that reads these fields).
+fn link_health(vmm: &Vmm) -> String {
+    vmm.devs
+        .iter()
+        .enumerate()
+        .map(|(k, d)| {
+            let l = d.link();
+            format!(
+                "dev{k}: backlog={} retransmits={} dups_dropped={} \
+                 reorders_healed={} corrupt_dropped={}",
+                l.backlog(),
+                l.retransmits(),
+                l.dups_dropped(),
+                l.reorders_healed(),
+                l.corrupt_dropped()
+            )
+        })
+        .collect::<Vec<_>>()
+        .join("; ")
+}
+
+/// Wrap a scenario error with every device's link health so a
+/// lossy-link failure is loud and self-describing.
+fn with_link_context(err: Error, vmm: &Vmm) -> Error {
+    Error::cosim(format!(
+        "{err} [link health: {}] — see DEBUGGING.md §9 (lossy links)",
+        link_health(vmm)
+    ))
+}
+
 /// Run the paper's §III workload: probe, offload `records` sorted
 /// records, optionally golden-check every result against a
 /// [`GoldenBackend`] (native reference or AOT XLA — the caller picks),
@@ -242,13 +278,53 @@ pub fn run_sort_offload(
     cfg: CoSimCfg,
     records: usize,
     seed: u64,
+    golden: Option<&mut dyn GoldenBackend>,
+) -> Result<ScenarioReport> {
+    run_sort_offload_with_timeout(cfg, records, seed, golden, Duration::from_secs(60))
+}
+
+/// [`run_sort_offload`] with an explicit per-access driver timeout.
+/// The lossy-link tests shrink it so a blackholed link fails in
+/// seconds — loudly, with link health attached — instead of a minute.
+pub fn run_sort_offload_with_timeout(
+    cfg: CoSimCfg,
+    records: usize,
+    seed: u64,
     mut golden: Option<&mut dyn GoldenBackend>,
+    timeout: Duration,
 ) -> Result<ScenarioReport> {
     let mut cosim = CoSim::launch(cfg)?;
+    let (wall, device_cycles, golden_checked) =
+        sort_offload_drive(&mut cosim.vmm, records, seed, &mut golden, timeout)
+            .map_err(|e| with_link_context(e, &cosim.vmm))?;
+    let link_msgs = cosim.vmm.dev().link().msgs_sent();
+    let link_bytes = cosim.vmm.dev().link().bytes_sent();
+    let hdl = cosim.shutdown()?;
+    Ok(ScenarioReport {
+        records,
+        wall,
+        device_cycles,
+        golden_checked,
+        hdl,
+        link_msgs,
+        link_bytes,
+    })
+}
+
+/// The guest-driver phase of [`run_sort_offload`], split out so the
+/// caller can attach link health to any failure once the guest's
+/// mutable borrow of the VMM has ended.
+fn sort_offload_drive(
+    vmm: &mut Vmm,
+    records: usize,
+    seed: u64,
+    golden: &mut Option<&mut dyn GoldenBackend>,
+    timeout: Duration,
+) -> Result<(Duration, u64, bool)> {
     let mut hook = NoopHook;
-    let mut env = GuestEnv::new(&mut cosim.vmm, &mut hook);
+    let mut env = GuestEnv::new(vmm, &mut hook);
     let mut drv = SortDriver::new(1024);
-    drv.timeout = Duration::from_secs(60);
+    drv.timeout = timeout;
     drv.probe(&mut env)?;
 
     // Pre-warm the golden model: backend preparation (PJRT compiles
@@ -266,22 +342,11 @@ pub fn run_sort_offload(
     for _ in 0..records {
         let input = rng.vec_i32(drv.n);
         let out = drv.sort_record(&mut env, &input)?;
-        golden_checked &= verify_record(drv.kernel, &input, &out, false, &mut golden)?;
+        golden_checked &= verify_record(drv.kernel, &input, &out, false, golden)?;
     }
     let wall = t0.elapsed();
     let c1 = drv.read_cycles(&mut env)?;
-    let link_msgs = cosim.vmm.dev().link().msgs_sent();
-    let link_bytes = cosim.vmm.dev().link().bytes_sent();
-    let hdl = cosim.shutdown()?;
-    Ok(ScenarioReport {
-        records,
-        wall,
-        device_cycles: c1.saturating_sub(c0),
-        golden_checked,
-        hdl,
-        link_msgs,
-        link_bytes,
-    })
+    Ok((wall, c1.saturating_sub(c0), golden_checked))
 }
 
 /// Report of a sharded multi-device offload.
@@ -397,8 +462,11 @@ fn run_sharded_direct(
         .collect();
     for (k, drv) in drvs.iter_mut().enumerate() {
         drv.timeout = Duration::from_secs(60);
-        let mut env = GuestEnv::for_device(&mut cosim.vmm, &mut hook, k);
-        drv.probe(&mut env)?;
+        let r = {
+            let mut env = GuestEnv::for_device(&mut cosim.vmm, &mut hook, k);
+            drv.probe(&mut env)
+        };
+        r.map_err(|e| with_link_context(e, &cosim.vmm))?;
     }
 
     // Pre-warm the golden model (backend preparation must not be
@@ -440,8 +508,11 @@ fn run_sharded_direct(
         for k in 0..devices {
             if inflight[k].is_none() {
                 if let Some(i) = queues[k].pop_front() {
-                    let mut env = GuestEnv::for_device(&mut cosim.vmm, &mut hook, k);
-                    drvs[k].submit_record(&mut env, &inputs[i])?;
+                    let r = {
+                        let mut env = GuestEnv::for_device(&mut cosim.vmm, &mut hook, k);
+                        drvs[k].submit_record(&mut env, &inputs[i])
+                    };
+                    r.map_err(|e| with_link_context(e, &cosim.vmm))?;
                     inflight[k] = Some(i);
                 }
             }
@@ -449,8 +520,11 @@ fn run_sharded_direct(
         for k in 0..devices {
             if let Some(i) = inflight[k].take() {
                 any = true;
-                let mut env = GuestEnv::for_device(&mut cosim.vmm, &mut hook, k);
-                let out = drvs[k].finish_record(&mut env)?;
+                let r = {
+                    let mut env = GuestEnv::for_device(&mut cosim.vmm, &mut hook, k);
+                    drvs[k].finish_record(&mut env)
+                };
+                let out = r.map_err(|e| with_link_context(e, &cosim.vmm))?;
                 if let Some(g) = golden.as_deref_mut() {
                     g.check_sorted(&inputs[i], &out, false)?;
                 } else {
@@ -551,8 +625,11 @@ fn run_sharded_sg(
         .collect();
     for (k, drv) in drvs.iter_mut().enumerate() {
         drv.drv.timeout = Duration::from_secs(60);
-        let mut env = GuestEnv::for_device(&mut cosim.vmm, &mut hook, k);
-        drv.probe(&mut env)?;
+        let r = {
+            let mut env = GuestEnv::for_device(&mut cosim.vmm, &mut hook, k);
+            drv.probe(&mut env)
+        };
+        r.map_err(|e| with_link_context(e, &cosim.vmm))?;
     }
 
     // Pre-warm the golden model (backend preparation must not be
@@ -638,8 +715,11 @@ fn run_sharded_sg(
                 }
                 any = true;
                 while drvs[k].in_flight() > 0 {
-                    let mut env = GuestEnv::for_device(&mut cosim.vmm, &mut hook, k);
-                    let out = drvs[k].reap_record_polled(&mut env)?;
+                    let r = {
+                        let mut env = GuestEnv::for_device(&mut cosim.vmm, &mut hook, k);
+                        drvs[k].reap_record_polled(&mut env)
+                    };
+                    let out = r.map_err(|e| with_link_context(e, &cosim.vmm))?;
                     let i = inflight_ids[k].pop_front().unwrap();
                     check!(k, i, out);
                     results[i] = Some(out);
@@ -701,10 +781,14 @@ fn run_sharded_sg(
                     .filter(|&k| drvs[k].in_flight() > 0)
                     .min_by_key(|&k| inflight_ids[k].front().copied().unwrap_or(usize::MAX))
                     .expect("records pending but nothing in flight");
-                let mut env = GuestEnv::for_device(&mut cosim.vmm, &mut hook, k);
                 if last_progress.elapsed() > drvs[k].drv.timeout {
-                    return Err(drvs[k].ring_stuck_error(&mut env));
+                    let e = {
+                        let mut env = GuestEnv::for_device(&mut cosim.vmm, &mut hook, k);
+                        drvs[k].ring_stuck_error(&mut env)
+                    };
+                    return Err(with_link_context(e, &cosim.vmm));
                 }
+                let mut env = GuestEnv::for_device(&mut cosim.vmm, &mut hook, k);
                 let _ = env
                     .dev_mut()
                     .link_mut()
@@ -814,8 +898,11 @@ pub fn run_mixed_fleet(
         .collect();
     for (k, drv) in drvs.iter_mut().enumerate() {
         drv.drv.timeout = Duration::from_secs(60);
-        let mut env = GuestEnv::for_device(&mut cosim.vmm, &mut hook, k);
-        drv.probe(&mut env)?;
+        let r = {
+            let mut env = GuestEnv::for_device(&mut cosim.vmm, &mut hook, k);
+            drv.probe(&mut env)
+        };
+        r.map_err(|e| with_link_context(e, &cosim.vmm))?;
     }
 
     // Pre-warm the golden model (backend preparation — e.g. a PJRT
@@ -885,8 +972,11 @@ pub fn run_mixed_fleet(
                 }
                 any = true;
                 while drvs[k].in_flight() > 0 {
-                    let mut env = GuestEnv::for_device(&mut cosim.vmm, &mut hook, k);
-                    let out = drvs[k].reap_record_polled(&mut env)?;
+                    let r = {
+                        let mut env = GuestEnv::for_device(&mut cosim.vmm, &mut hook, k);
+                        drvs[k].reap_record_polled(&mut env)
+                    };
+                    let out = r.map_err(|e| with_link_context(e, &cosim.vmm))?;
                     let i = inflight_ids[k].pop_front().unwrap();
                     golden_checked &=
                         verify_record(specs[k].kernel, &inputs[i], &out, false, &mut golden)?;
@@ -946,10 +1036,14 @@ pub fn run_mixed_fleet(
                     .filter(|&k| drvs[k].in_flight() > 0)
                     .min_by_key(|&k| inflight_ids[k].front().copied().unwrap_or(usize::MAX))
                     .expect("records pending but nothing in flight");
-                let mut env = GuestEnv::for_device(&mut cosim.vmm, &mut hook, k);
                 if last_progress.elapsed() > drvs[k].drv.timeout {
-                    return Err(drvs[k].ring_stuck_error(&mut env));
+                    let e = {
+                        let mut env = GuestEnv::for_device(&mut cosim.vmm, &mut hook, k);
+                        drvs[k].ring_stuck_error(&mut env)
+                    };
+                    return Err(with_link_context(e, &cosim.vmm));
                 }
+                let mut env = GuestEnv::for_device(&mut cosim.vmm, &mut hook, k);
                 let _ = env
                     .dev_mut()
                     .link_mut()

@@ -34,12 +34,14 @@
 //! ([`Endpoint::share_doorbell`]) so a single scheduler thread can
 //! block for traffic on any device.
 
-use std::collections::VecDeque;
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
+use super::impair::{stream_seed, ImpairCfg, ImpairedTransport};
 use super::msg::{Msg, Side};
 use super::transport::{Doorbell, Transport};
+use super::udp::{device_port, UdpTransport};
 use crate::{Error, Result};
 
 /// Nap length while waiting on a transport that has no doorbell
@@ -51,11 +53,87 @@ const UNWIRED_NAP: Duration = Duration::from_micros(20);
 /// pushed (Acks are otherwise piggybacked on the next poll).
 const ACK_EVERY: u64 = 32;
 
+/// Poll rounds an unacked outbox sits before the first retransmit
+/// burst fires. Measured in poll rounds — never wall clock — so the
+/// retransmit schedule is a pure function of the poll sequence and the
+/// determinism pass stays green.
+const RETRANSMIT_AFTER_ROUNDS: u64 = 512;
+/// Exponential-backoff ceiling for the retransmit threshold (doubled
+/// after each burst, reset on ack progress) — bounds duplicate traffic
+/// from the HDL busy loop's per-cycle polls under heavy loss.
+const RETRANSMIT_MAX_ROUNDS: u64 = 8_192;
+/// Frames replayed per retransmit burst (oldest unacked first).
+const RETRANSMIT_BURST: usize = 64;
+/// Rounds credited per [`Endpoint::nudge_retransmit`] call — idle-side
+/// waiters (the HDL idle phase, a VM blocked in `wait_any`) tick the
+/// schedule in coarse steps since they are not polling per cycle.
+const RETRANSMIT_NUDGE: u64 = 64;
+/// Wait-slice cap inside [`Endpoint::wait_any`] while frames are
+/// unacked: the waiter wakes this often to nudge the retransmit
+/// schedule, because a dropped frame means the doorbell may never ring.
+const RETRANSMIT_WAIT_SLICE: Duration = Duration::from_millis(2);
+/// Out-of-order frames buffered per receive direction; beyond this the
+/// frame is dropped and retransmit re-delivers it in order. Public so
+/// the fuzz harness can assert the reorder buffer never exceeds it.
+pub const PENDING_CAP: usize = 1_024;
+
+/// Named snapshot of one channel's send-side counters (replaces the
+/// old positional `(sent, replayed, bytes, backlog)` tuple whose
+/// misread fields were a standing bug magnet).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct TxStats {
+    /// Payload frames entered into the reliable stream.
+    pub sent: u64,
+    /// Frames replayed by reconnect handshakes.
+    pub replayed: u64,
+    /// Frames re-sent by the poll-round retransmit timer.
+    pub retransmits: u64,
+    /// Wire bytes (payload frames, first transmission).
+    pub bytes: u64,
+    /// Frames awaiting acknowledgement.
+    pub backlog: usize,
+    /// Frames sent on the unreliable-sequenced channel.
+    pub unreliable_sent: u64,
+}
+
+/// Named snapshot of one channel's receive-side counters.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct RxStats {
+    /// Payload frames that arrived (pre-dedup).
+    pub received: u64,
+    /// Duplicate frames rejected by the seq watermark.
+    pub duplicates: u64,
+    /// Frames delivered out of the reorder buffer once their gap
+    /// filled — each one is a reorder the reliability layer healed.
+    pub reorders_healed: u64,
+    /// Frames that arrived ahead of a gap (out-of-order arrivals).
+    pub gaps: u64,
+    /// Undecodable frames dropped in loss-tolerant mode.
+    pub corrupt_dropped: u64,
+    /// Stale unreliable-channel frames dropped by the sequenced check.
+    pub stale_unreliable: u64,
+    /// Wire bytes received.
+    pub bytes: u64,
+}
+
 /// Sender half of one unidirectional channel (seq numbering + outbox).
 pub struct ReliableTx {
     transport: Box<dyn Transport>,
     next_seq: u64,
     outbox: VecDeque<(u64, Vec<u8>)>,
+    /// Seqs the peer selectively acked via [`Msg::AckBits`]: still in
+    /// the outbox (cumulative-ack bookkeeping) but skipped by
+    /// retransmit bursts.
+    sacked: BTreeSet<u64>,
+    /// Poll rounds accumulated since the last retransmit/ack progress.
+    rounds_waiting: u64,
+    /// Current retransmit threshold (exponential backoff between
+    /// [`RETRANSMIT_AFTER_ROUNDS`] and [`RETRANSMIT_MAX_ROUNDS`]).
+    cur_threshold: u64,
+    /// Sequence counter of the unreliable-sequenced side channel
+    /// (independent of the reliable stream's numbering; the receiver
+    /// tells the streams apart by message kind).
+    unrel_seq: u64,
     /// Device id stamped on every frame (multi-device multiplexing).
     device: u8,
     /// Reused encode buffer for control frames (acks, hellos): the
@@ -64,9 +142,10 @@ pub struct ReliableTx {
     /// the outbox until acknowledged, which is the reliability
     /// contract, not a hot-path leak.
     ctrl_buf: Vec<u8>,
-    /// Frames queued while the peer is down (flushed on reconnect).
     pub sent: u64,
     pub replayed: u64,
+    pub retransmits: u64,
+    pub unreliable_sent: u64,
     pub bytes: u64,
 }
 
@@ -76,10 +155,16 @@ impl ReliableTx {
             transport,
             next_seq: 1,
             outbox: VecDeque::new(),
+            sacked: BTreeSet::new(),
+            rounds_waiting: 0,
+            cur_threshold: RETRANSMIT_AFTER_ROUNDS,
+            unrel_seq: 0,
             device: 0,
             ctrl_buf: Vec::with_capacity(32),
             sent: 0,
             replayed: 0,
+            retransmits: 0,
+            unreliable_sent: 0,
             bytes: 0,
         }
     }
@@ -107,22 +192,108 @@ impl ReliableTx {
         self.ctrl_buf = buf;
     }
 
-    /// Drop acknowledged frames.
+    /// Send one message on the unreliable-sequenced side channel: its
+    /// own seq numbering, no outbox, no replay — loss and staleness are
+    /// the contract (doorbell/stats telemetry, renet's
+    /// sequenced-unreliable channel class).
+    fn send_unreliable(&mut self, msg: &Msg) {
+        self.unrel_seq += 1;
+        let mut buf = std::mem::take(&mut self.ctrl_buf);
+        msg.encode_into(self.unrel_seq, self.device, &mut buf);
+        self.bytes += buf.len() as u64;
+        self.unreliable_sent += 1;
+        let _ = self.transport.send(&buf);
+        self.ctrl_buf = buf;
+    }
+
+    /// Drop acknowledged frames; ack progress resets the retransmit
+    /// backoff (the link is moving again).
     fn ack(&mut self, up_to: u64) {
+        let mut progressed = false;
         while let Some(&(seq, _)) = self.outbox.front() {
             if seq <= up_to {
                 self.outbox.pop_front();
+                progressed = true;
             } else {
                 break;
             }
         }
+        if progressed {
+            self.rounds_waiting = 0;
+            self.cur_threshold = RETRANSMIT_AFTER_ROUNDS;
+            while let Some(&s) = self.sacked.first() {
+                if s <= up_to {
+                    self.sacked.pop_first();
+                } else {
+                    break;
+                }
+            }
+        }
+    }
+
+    /// Apply a cumulative-plus-selective ack: everything ≤ `up_to` is
+    /// done; bit `i` of `bits` marks seq `up_to + 1 + i` as buffered at
+    /// the receiver, so retransmit bursts skip it. Only seqs actually
+    /// in the outbox are recorded, so a hostile bitfield cannot grow
+    /// state unboundedly.
+    fn on_ack_bits(&mut self, up_to: u64, bits: u32) {
+        self.ack(up_to);
+        for i in 0..32u64 {
+            if bits & (1u32 << i) == 0 {
+                continue;
+            }
+            let Some(s) = up_to.checked_add(i + 1) else {
+                break;
+            };
+            if self.outbox.iter().any(|(q, _)| *q == s) {
+                self.sacked.insert(s);
+            }
+        }
+    }
+
+    /// Credit `n` poll rounds to the retransmit timer; when the backlog
+    /// has waited past the threshold, burst-retransmit the oldest
+    /// unacked (and not selectively-acked) frames. Rounds — not wall
+    /// time — drive this, so same-seed runs replay identically.
+    fn on_rounds(&mut self, n: u64) {
+        if self.outbox.is_empty() {
+            self.rounds_waiting = 0;
+            return;
+        }
+        self.rounds_waiting = self.rounds_waiting.saturating_add(n);
+        if self.rounds_waiting < self.cur_threshold {
+            return;
+        }
+        self.rounds_waiting = 0;
+        self.cur_threshold = (self.cur_threshold * 2).min(RETRANSMIT_MAX_ROUNDS);
+        let mut burst = 0;
+        for (seq, frame) in &self.outbox {
+            if burst >= RETRANSMIT_BURST {
+                break;
+            }
+            if self.sacked.contains(seq) {
+                continue;
+            }
+            let _ = self.transport.send(frame);
+            self.retransmits += 1;
+            burst += 1;
+        }
+    }
+
+    /// Lowest seq this sender can still supply: the front of the
+    /// outbox, or the next fresh seq when everything is acked. Sent as
+    /// [`Msg::Resume`] so a restarted peer fast-forwards past frames
+    /// that no longer exist instead of deadlocking in-order delivery.
+    fn resume_point(&self) -> u64 {
+        self.outbox.front().map_or(self.next_seq, |&(seq, _)| seq)
     }
 
     /// Replay every unacknowledged frame (post-reconnect, after the
-    /// peer told us its high-water mark via Hello).
+    /// peer told us its high-water mark via Hello). Selectively-acked
+    /// frames are skipped — the peer holds them already.
     fn replay_after(&mut self, last_seq_seen: u64) {
         for (seq, frame) in &self.outbox {
-            if *seq > last_seq_seen {
+            if *seq > last_seq_seen && !self.sacked.contains(seq) {
                 let _ = self.transport.send(frame);
                 self.replayed += 1;
             }
@@ -135,28 +306,141 @@ impl ReliableTx {
     }
 }
 
-/// Receiver half of one unidirectional channel (dedup + delivery).
+/// Receiver half of one unidirectional channel: dedup, strict in-order
+/// delivery through a bounded reorder buffer, and the stale check of
+/// the unreliable-sequenced side channel.
 pub struct ReliableRx {
     transport: Box<dyn Transport>,
     last_delivered: u64,
     unacked: u64,
+    /// Out-of-order frames parked until their gap fills (bounded by
+    /// [`PENDING_CAP`]; an overflowing frame is dropped and healed by
+    /// retransmit).
+    pending: BTreeMap<u64, Msg>,
+    /// True when `pending` changed since the last ack flush — triggers
+    /// an eager [`Msg::AckBits`] so the sender learns what to skip.
+    pending_dirty: bool,
+    /// Highest unreliable-channel seq delivered.
+    last_unrel: u64,
     pub received: u64,
     pub duplicates: u64,
+    pub reorders_healed: u64,
     pub gaps: u64,
+    pub corrupt_dropped: u64,
+    pub stale_unreliable: u64,
     pub bytes: u64,
 }
 
 impl ReliableRx {
-    fn new(transport: Box<dyn Transport>) -> Self {
+    /// Public (with [`on_frame`](Self::on_frame)) so the fuzz harness
+    /// can drive a bare receiver state machine over any transport.
+    pub fn new(transport: Box<dyn Transport>) -> Self {
         Self {
             transport,
             last_delivered: 0,
             unacked: 0,
+            pending: BTreeMap::new(),
+            pending_dirty: false,
+            last_unrel: 0,
             received: 0,
             duplicates: 0,
+            reorders_healed: 0,
             gaps: 0,
+            corrupt_dropped: 0,
+            stale_unreliable: 0,
             bytes: 0,
         }
+    }
+
+    /// Feed one decoded payload frame through the delivery state
+    /// machine; in-order deliveries (including any that a filled gap
+    /// releases from the reorder buffer) are appended to `out`.
+    ///
+    /// Public so the fuzz harness can drive the exact production path
+    /// with adversarial `(seq, msg)` inputs: for any input sequence
+    /// this must neither panic nor grow state past [`PENDING_CAP`],
+    /// and must deliver each reliable seq at most once, in order.
+    pub fn on_frame(&mut self, seq: u64, msg: Msg, out: &mut Vec<Msg>) {
+        self.received += 1;
+        if msg.is_unreliable() {
+            // Sequenced-unreliable: newer-than-last wins, stale drops.
+            if seq <= self.last_unrel {
+                self.stale_unreliable += 1;
+                return;
+            }
+            self.last_unrel = seq;
+            out.push(msg);
+            return;
+        }
+        if seq <= self.last_delivered {
+            self.duplicates += 1;
+            // A duplicate means our ack was lost or outrun by the
+            // sender's retransmit timer: republish the ack state at
+            // the end of this poll so the replaying stops (otherwise
+            // an idle link retransmits until the next fresh delivery).
+            self.pending_dirty = true;
+            return;
+        }
+        if seq == self.last_delivered + 1 {
+            self.last_delivered = seq;
+            self.unacked += 1;
+            out.push(msg);
+            self.drain_consecutive(out);
+        } else {
+            self.gaps += 1;
+            if self.pending.contains_key(&seq) {
+                self.duplicates += 1;
+                self.pending_dirty = true;
+            } else if self.pending.len() < PENDING_CAP {
+                self.pending.insert(seq, msg);
+                self.pending_dirty = true;
+            }
+            // Over cap: drop — retransmit re-delivers in order.
+        }
+    }
+
+    /// Reorder-buffer occupancy (exposed for the fuzz harness's
+    /// bounded-state assertion).
+    pub fn pending_len(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// Deliver parked frames made consecutive by the new watermark.
+    fn drain_consecutive(&mut self, out: &mut Vec<Msg>) {
+        loop {
+            let Some(next) = self.last_delivered.checked_add(1) else {
+                return;
+            };
+            let Some(m) = self.pending.remove(&next) else {
+                return;
+            };
+            self.last_delivered = next;
+            self.unacked += 1;
+            self.reorders_healed += 1;
+            out.push(m);
+        }
+    }
+
+    /// Apply a peer [`Msg::Resume`]: fast-forward the watermark to
+    /// `from - 1` (everything earlier was cumulatively acked by a
+    /// previous incarnation, so skipping it is always safe), discard
+    /// overtaken parked frames, and deliver any the new watermark
+    /// reaches.
+    fn fast_forward_into(&mut self, from: u64, out: &mut Vec<Msg>) {
+        let Some(target) = from.checked_sub(1) else {
+            return;
+        };
+        if target > self.last_delivered {
+            self.last_delivered = target;
+        }
+        while let Some((&s, _)) = self.pending.first_key_value() {
+            if s <= self.last_delivered {
+                self.pending.pop_first();
+            } else {
+                break;
+            }
+        }
+        self.drain_consecutive(out);
     }
 }
 
@@ -181,6 +465,11 @@ pub struct LinkPair {
     /// Reused receive-frame buffer for the poll loop (see
     /// [`crate::link::Msg::encode_into`]'s allocation notes).
     rd_scratch: Vec<u8>,
+    /// Tolerate undecodable frames (count + drop instead of fatal).
+    /// Forced on when the *peer's* send path is impaired: corruption
+    /// is injected at the sender, so the receiving transport itself
+    /// may not report `lossy()`.
+    tolerant: bool,
     /// Diagnostic tracing (VMHDL_LINK_TRACE=1).
     trace: bool,
 }
@@ -201,6 +490,7 @@ impl LinkPair {
             connected: false,
             device: 0,
             rd_scratch: Vec::with_capacity(64),
+            tolerant: false,
             trace: std::env::var("VMHDL_LINK_TRACE").as_deref() == Ok("1"),
         }
     }
@@ -250,12 +540,19 @@ impl LinkPair {
         Ok(())
     }
 
-    /// Announce ourselves (startup and after any reconnect).
-    fn hello(&mut self, side: Side) {
+    /// Announce ourselves (startup and after any reconnect), then tell
+    /// the peer where our reliable numbering resumes. The Resume lets
+    /// a fresh peer fast-forward past seqs its previous incarnation
+    /// already acked — without it, strict in-order delivery would wait
+    /// forever for frames we pruned from the outbox.
+    fn handshake(&mut self, side: Side) {
         self.tx.send_control(&Msg::Hello {
             side_is_vm: side == Side::Vm,
             session: self.session,
             last_seq_seen: self.rx.last_delivered,
+        });
+        self.tx.send_control(&Msg::Resume {
+            from: self.tx.resume_point(),
         });
     }
 
@@ -274,7 +571,7 @@ impl LinkPair {
         if now_up && (fresh || !self.connected) {
             self.connected = true;
             self.trace("connect/fresh: hello + full replay");
-            self.hello(side);
+            self.handshake(side);
             // Replay everything unacknowledged onto the new stream;
             // the receiver's seq watermark dedups anything it has
             // already processed.
@@ -293,8 +590,18 @@ impl LinkPair {
             let (seq, dev, msg) = match Msg::decode_on(&frame) {
                 Ok(v) => v,
                 Err(e) => {
-                    // A corrupt frame is a bug or a truncated restart;
+                    // On a lossy wire (or with an impaired peer) a
+                    // mangled frame is expected weather: count it and
+                    // let retransmit heal the gap. On a trusted wire a
+                    // corrupt frame is a bug or a truncated restart;
                     // surface it rather than silently dropping.
+                    if self.tolerant || self.rx.transport.lossy() {
+                        self.rx.corrupt_dropped += 1;
+                        if self.trace {
+                            self.trace(&format!("drop corrupt frame: {e}"));
+                        }
+                        continue;
+                    }
                     return Err(Error::link(format!(
                         "{}: undecodable frame: {e}",
                         self.name
@@ -313,6 +620,8 @@ impl LinkPair {
             }
             match msg {
                 Msg::Ack { up_to } => self.tx.ack(up_to),
+                Msg::AckBits { up_to, bits } => self.tx.on_ack_bits(up_to, bits),
+                Msg::Resume { from } => self.rx.fast_forward_into(from, out),
                 Msg::Hello {
                     session,
                     last_seq_seen,
@@ -337,70 +646,135 @@ impl LinkPair {
                         if is_restart {
                             self.rx.last_delivered = 0;
                             self.rx.unacked = 0;
+                            self.rx.pending.clear();
+                            self.rx.pending_dirty = false;
+                            self.rx.last_unrel = 0;
+                            // Selective acks came from the dead
+                            // incarnation; the new one has nothing.
+                            self.tx.sacked.clear();
                         }
                         // Replay anything the peer has not seen (it
                         // may have missed frames while its transport
                         // was down); the receiver dedups by seq.
                         self.tx.replay_after(last_seq_seen);
                         // Answer so the peer can replay toward us too.
-                        self.hello(side);
+                        self.handshake(side);
                     }
                 }
                 Msg::Bye => {
                     self.connected = false;
                 }
                 payload => {
-                    self.rx.received += 1;
-                    if seq <= self.rx.last_delivered {
-                        self.rx.duplicates += 1;
-                        if self.trace {
-                            self.trace(&format!("drop dup seq={seq} {}", payload.label()));
-                        }
-                        continue; // replay of something we processed
-                    }
-                    if seq > self.rx.last_delivered + 1 {
-                        // Possible after a survivor replays past frames
-                        // acked by our previous incarnation.
-                        self.rx.gaps += 1;
-                    }
-                    self.rx.last_delivered = seq;
-                    self.rx.unacked += 1;
+                    self.rx.on_frame(seq, payload, out);
                     if self.rx.unacked >= ACK_EVERY {
                         self.flush_ack();
                     }
-                    out.push(payload);
                 }
             }
         }
         self.rd_scratch = frame;
-        // Piggyback a cumulative ack for anything still pending.
-        if self.rx.unacked > 0 {
+        // Piggyback a cumulative ack for anything still pending, and
+        // publish the reorder buffer eagerly so the sender's
+        // retransmit bursts skip frames we already hold.
+        if self.rx.unacked > 0 || self.rx.pending_dirty {
             self.flush_ack();
         }
+        // One poll round elapsed on this pair: advance the poll-round
+        // retransmit clock (wall-clock-free, so same-seed runs fire
+        // retransmits at the same points in the delivered sequence).
+        self.tx.on_rounds(1);
         Ok(())
     }
 
-    fn flush_ack(&mut self) {
-        self.tx.send_control(&Msg::Ack {
-            up_to: self.rx.last_delivered,
-        });
-        self.rx.unacked = 0;
+    /// Send a sequenced-unreliable message on this pair (doorbell- or
+    /// stats-grade traffic: never retransmitted, stale drops at the
+    /// receiver).
+    pub fn send_unreliable(&mut self, msg: &Msg) {
+        debug_assert!(msg.is_unreliable());
+        self.tx.send_unreliable(msg);
     }
 
-    /// Stats accessors (metrics + tests).
-    pub fn tx_stats(&self) -> (u64, u64, u64, usize) {
-        (self.tx.sent, self.tx.replayed, self.tx.bytes, self.tx.backlog())
+    fn flush_ack(&mut self) {
+        if self.rx.pending.is_empty() {
+            self.tx.send_control(&Msg::Ack {
+                up_to: self.rx.last_delivered,
+            });
+        } else {
+            // Selective ack: bit i covers seq `up_to + 1 + i`.
+            let up_to = self.rx.last_delivered;
+            let mut bits = 0u32;
+            for i in 0..32u32 {
+                if let Some(seq) = up_to.checked_add(u64::from(i) + 1) {
+                    if self.rx.pending.contains_key(&seq) {
+                        bits |= 1 << i;
+                    }
+                }
+            }
+            self.tx.send_control(&Msg::AckBits { up_to, bits });
+        }
+        self.rx.unacked = 0;
+        self.rx.pending_dirty = false;
     }
-    pub fn rx_stats(&self) -> (u64, u64, u64, u64) {
-        (
-            self.rx.received,
-            self.rx.duplicates,
-            self.rx.gaps,
-            self.rx.bytes,
-        )
+
+    /// Wrap this pair's transmit transport in place (fault-injection
+    /// decorators). The placeholder handed to `wrap` callers never
+    /// escapes: `std::mem::replace` swaps the real transport out and
+    /// the wrapped one back in atomically within this call.
+    fn wrap_tx(&mut self, wrap: impl FnOnce(Box<dyn Transport>) -> Box<dyn Transport>) {
+        let inner = std::mem::replace(
+            &mut self.tx.transport,
+            Box::new(DisconnectedTransport),
+        );
+        self.tx.transport = wrap(inner);
+    }
+
+    /// Tolerate (count + drop) undecodable received frames. See the
+    /// field docs: required when the *peer's* sender is impaired.
+    fn set_tolerant(&mut self, on: bool) {
+        self.tolerant = on;
+    }
+
+    /// Transmit-side stats (metrics + tests).
+    pub fn tx_stats(&self) -> TxStats {
+        TxStats {
+            sent: self.tx.sent,
+            replayed: self.tx.replayed,
+            retransmits: self.tx.retransmits,
+            bytes: self.tx.bytes,
+            backlog: self.tx.backlog(),
+            unreliable_sent: self.tx.unreliable_sent,
+        }
+    }
+    /// Receive-side stats (metrics + tests).
+    pub fn rx_stats(&self) -> RxStats {
+        RxStats {
+            received: self.rx.received,
+            duplicates: self.rx.duplicates,
+            reorders_healed: self.rx.reorders_healed,
+            gaps: self.rx.gaps,
+            corrupt_dropped: self.rx.corrupt_dropped,
+            stale_unreliable: self.rx.stale_unreliable,
+            bytes: self.rx.bytes,
+        }
     }
     pub fn is_connected(&self) -> bool {
         self.connected
+    }
+}
+
+/// Placeholder transport used only inside [`LinkPair::wrap_tx`]'s
+/// `mem::replace` swap; sending through it is a wiring bug.
+struct DisconnectedTransport;
+
+impl Transport for DisconnectedTransport {
+    fn send(&mut self, _frame: &[u8]) -> Result<()> {
+        Err(Error::link("send on placeholder transport"))
+    }
+    fn try_recv(&mut self) -> Result<Option<Vec<u8>>> {
+        Ok(None)
+    }
+    fn label(&self) -> &'static str {
+        "placeholder"
     }
 }
 
@@ -583,6 +957,150 @@ impl Endpoint {
         Ok(ep)
     }
 
+    /// Build the UDP endpoint for `side`, device `device`, on the
+    /// fixed loopback port scheme ([`device_port`]): each channel's
+    /// receiver binds its port and the peer's sender dials it.
+    /// `session` must be fresh per incarnation.
+    pub fn udp(side: Side, base_port: u16, device: u8, session: u64) -> Result<Endpoint> {
+        let p = |chan| device_port(base_port, device, chan);
+        let mut ep = match side {
+            Side::Hdl => Endpoint::new(
+                side,
+                LinkPair::new(
+                    "A@hdl",
+                    Box::new(UdpTransport::sender(p(1)?, session)?),
+                    Box::new(UdpTransport::receiver(p(0)?)?),
+                    session,
+                ),
+                LinkPair::new(
+                    "B@hdl",
+                    Box::new(UdpTransport::sender(p(2)?, session)?),
+                    Box::new(UdpTransport::receiver(p(3)?)?),
+                    session,
+                ),
+            ),
+            Side::Vm => Endpoint::new(
+                side,
+                LinkPair::new(
+                    "A@vm",
+                    Box::new(UdpTransport::sender(p(0)?, session)?),
+                    Box::new(UdpTransport::receiver(p(1)?)?),
+                    session,
+                ),
+                LinkPair::new(
+                    "B@vm",
+                    Box::new(UdpTransport::sender(p(3)?, session)?),
+                    Box::new(UdpTransport::receiver(p(2)?)?),
+                    session,
+                ),
+            ),
+        };
+        ep.set_device_id(device);
+        Ok(ep)
+    }
+
+    /// Create a connected UDP-loopback endpoint pair `(vm, hdl)` for
+    /// in-process use, on OS-assigned ports so concurrent tests never
+    /// collide. Exercises the real datagram path end to end.
+    pub fn udp_pair_on(
+        device: u8,
+        session_vm: u64,
+        session_hdl: u64,
+    ) -> Result<(Endpoint, Endpoint)> {
+        // Bind all four receivers first (port 0 = OS-assigned), then
+        // point each sender at its channel's bound port.
+        let a_req_rx = UdpTransport::receiver(0)?; // VM → HDL requests
+        let a_resp_rx = UdpTransport::receiver(0)?; // HDL → VM responses
+        let b_req_rx = UdpTransport::receiver(0)?; // HDL → VM requests
+        let b_resp_rx = UdpTransport::receiver(0)?; // VM → HDL responses
+        let a_req_tx = UdpTransport::sender(a_req_rx.local_port()?, session_vm)?;
+        let a_resp_tx = UdpTransport::sender(a_resp_rx.local_port()?, session_hdl)?;
+        let b_req_tx = UdpTransport::sender(b_req_rx.local_port()?, session_hdl)?;
+        let b_resp_tx = UdpTransport::sender(b_resp_rx.local_port()?, session_vm)?;
+        let mut vm = Endpoint::new(
+            Side::Vm,
+            LinkPair::new("A@vm", Box::new(a_req_tx), Box::new(a_resp_rx), session_vm),
+            LinkPair::new("B@vm", Box::new(b_resp_tx), Box::new(b_req_rx), session_vm),
+        );
+        let mut hdl = Endpoint::new(
+            Side::Hdl,
+            LinkPair::new("A@hdl", Box::new(a_resp_tx), Box::new(a_req_rx), session_hdl),
+            LinkPair::new("B@hdl", Box::new(b_req_tx), Box::new(b_resp_rx), session_hdl),
+        );
+        vm.set_device_id(device);
+        hdl.set_device_id(device);
+        Ok((vm, hdl))
+    }
+
+    /// Tolerate (count + drop) undecodable received frames on both
+    /// pairs instead of failing the link.
+    pub fn set_loss_tolerant(&mut self, on: bool) {
+        self.pair_a.set_tolerant(on);
+        self.pair_b.set_tolerant(on);
+    }
+
+    /// Apply a fault-injection config to this endpoint. Always marks
+    /// the endpoint loss-tolerant — faults are injected at the
+    /// *sender*, so a clean receiving transport can still see mangled
+    /// frames from an impaired peer — and wraps this side's two
+    /// transmit transports only when `cfg.dir` selects it as the
+    /// impaired sender. Convention: call on BOTH endpoints of a link
+    /// with the same config.
+    pub fn impair(&mut self, cfg: &ImpairCfg) {
+        self.set_loss_tolerant(true);
+        if cfg.is_null() || !cfg.applies_to(self.side) {
+            return;
+        }
+        let (c, dev, side) = (*cfg, self.device, self.side);
+        self.pair_a.wrap_tx(|t| {
+            Box::new(ImpairedTransport::new(t, c, stream_seed(c.seed, dev, side, 0)))
+        });
+        self.pair_b.wrap_tx(|t| {
+            Box::new(ImpairedTransport::new(t, c, stream_seed(c.seed, dev, side, 1)))
+        });
+    }
+
+    /// Advance both pairs' poll-round retransmit clocks without a full
+    /// poll. Idle loops that block instead of polling must call this,
+    /// or a frame lost while both sides are quiescent is never
+    /// replayed (each nudge counts [`RETRANSMIT_NUDGE`] rounds).
+    pub fn nudge_retransmit(&mut self) {
+        self.pair_a.tx.on_rounds(RETRANSMIT_NUDGE);
+        self.pair_b.tx.on_rounds(RETRANSMIT_NUDGE);
+    }
+
+    /// Send a sequenced-unreliable message (stats/doorbell grade) on
+    /// this side's initiating pair: never retransmitted, stale frames
+    /// drop at the receiver.
+    pub fn send_unreliable(&mut self, msg: &Msg) {
+        *self.sent_by_label.entry(msg.label()).or_default() += 1;
+        match self.side {
+            Side::Hdl => self.pair_b.send_unreliable(msg),
+            Side::Vm => self.pair_a.send_unreliable(msg),
+        }
+    }
+
+    /// Frames retransmitted by timeout across both pairs.
+    pub fn retransmits(&self) -> u64 {
+        self.pair_a.tx.retransmits + self.pair_b.tx.retransmits
+    }
+    /// Duplicate frames rejected across both pairs.
+    pub fn dups_dropped(&self) -> u64 {
+        self.pair_a.rx.duplicates + self.pair_b.rx.duplicates
+    }
+    /// Out-of-order frames healed by the reorder buffers.
+    pub fn reorders_healed(&self) -> u64 {
+        self.pair_a.rx.reorders_healed + self.pair_b.rx.reorders_healed
+    }
+    /// Undecodable frames dropped on the tolerant receive path.
+    pub fn corrupt_dropped(&self) -> u64 {
+        self.pair_a.rx.corrupt_dropped + self.pair_b.rx.corrupt_dropped
+    }
+    /// Unacknowledged frames currently buffered for replay.
+    pub fn backlog(&self) -> usize {
+        self.pair_a.tx.backlog() + self.pair_b.tx.backlog()
+    }
+
     /// Send on pair A (VM-initiated transactions and their responses).
     pub fn send_a(&mut self, msg: &Msg) -> Result<()> {
         self.model_wire_latency();
@@ -680,10 +1198,24 @@ impl Endpoint {
             if now >= deadline {
                 return Ok(false);
             }
+            let mut slice = deadline - now;
+            // With unacked frames in flight, a blocked waiter must
+            // still advance the poll-round retransmit clock — on a
+            // lossy wire the wake we are waiting for may be the very
+            // frame that was dropped. Cap the sleep and nudge between
+            // slices; on a clean wire (empty backlog) behaviour is
+            // unchanged.
+            let backlog = self.backlog() > 0;
+            if backlog {
+                slice = slice.min(RETRANSMIT_WAIT_SLICE);
+            }
             if self.doorbell.is_wired() {
-                self.doorbell.wait(seen, deadline - now);
+                self.doorbell.wait(seen, slice);
             } else {
-                std::thread::sleep(UNWIRED_NAP.min(deadline - now));
+                std::thread::sleep(UNWIRED_NAP.min(slice));
+            }
+            if backlog {
+                self.nudge_retransmit();
             }
         }
     }
@@ -748,12 +1280,12 @@ impl Endpoint {
 
     /// Total wire bytes sent on both pairs.
     pub fn bytes_sent(&self) -> u64 {
-        self.pair_a.tx_stats().2 + self.pair_b.tx_stats().2
+        self.pair_a.tx_stats().bytes + self.pair_b.tx_stats().bytes
     }
 
     /// Total payload messages sent.
     pub fn msgs_sent(&self) -> u64 {
-        self.pair_a.tx_stats().0 + self.pair_b.tx_stats().0
+        self.pair_a.tx_stats().sent + self.pair_b.tx_stats().sent
     }
 }
 
@@ -811,10 +1343,14 @@ mod tests {
         for _ in 0..10 {
             vm.send(&Msg::MmioWrite { bar: 0, addr: 0, data: vec![0] }).unwrap();
         }
-        assert_eq!(vm.pair_a.tx_stats().3, 10);
+        assert_eq!(vm.pair_a.tx_stats().backlog, 10);
         let _ = hdl.poll().unwrap(); // delivers + acks
         let _ = vm.poll().unwrap(); // processes acks
-        assert_eq!(vm.pair_a.tx_stats().3, 0, "outbox should be empty after ack");
+        assert_eq!(
+            vm.pair_a.tx_stats().backlog,
+            0,
+            "outbox should be empty after ack"
+        );
     }
 
     #[test]
@@ -950,6 +1486,140 @@ mod tests {
         let t1 = Instant::now();
         vm.send(&Msg::MmioWrite { bar: 0, addr: 0, data: vec![0; 4] }).unwrap();
         assert!(t1.elapsed() < Duration::from_millis(5));
+    }
+
+    #[test]
+    fn on_frame_strict_order_dedup_and_heal() {
+        use crate::link::transport::make_inproc_pair;
+        let (t, _r) = make_inproc_pair();
+        let mut rx = ReliableRx::new(Box::new(t));
+        let m = |a| Msg::MmioWrite { bar: 0, addr: a, data: vec![] };
+        let mut out = Vec::new();
+        rx.on_frame(1, m(1), &mut out);
+        rx.on_frame(3, m(3), &mut out); // gap: parked
+        assert_eq!(out.len(), 1, "out-of-order frame must not deliver early");
+        assert_eq!(rx.gaps, 1);
+        rx.on_frame(3, m(3), &mut out); // dup of a parked frame
+        rx.on_frame(1, m(1), &mut out); // dup of a delivered frame
+        assert_eq!(rx.duplicates, 2);
+        rx.on_frame(2, m(2), &mut out); // fills the gap, releases 3
+        assert_eq!(out.len(), 3);
+        assert_eq!(rx.reorders_healed, 1);
+        for (i, msg) in out.iter().enumerate() {
+            match msg {
+                Msg::MmioWrite { addr, .. } => assert_eq!(*addr, i as u64 + 1),
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn resume_fast_forwards_past_acked_history() {
+        use crate::link::transport::make_inproc_pair;
+        let (t, _r) = make_inproc_pair();
+        let mut rx = ReliableRx::new(Box::new(t));
+        let mut out = Vec::new();
+        // from=0 (pre-handshake placeholder) must be a no-op.
+        rx.fast_forward_into(0, &mut out);
+        assert_eq!(rx.last_delivered, 0);
+        // Peer's outbox starts at 101: everything below was acked to a
+        // previous incarnation of this receiver, so skip it.
+        rx.fast_forward_into(101, &mut out);
+        assert!(out.is_empty());
+        rx.on_frame(101, Msg::Interrupt { vector: 1 }, &mut out);
+        assert_eq!(out.len(), 1, "watermark should sit just below the resume point");
+        // Parked frames overtaken by a later Resume are discarded,
+        // ones the new watermark reaches are delivered.
+        rx.on_frame(105, Msg::Interrupt { vector: 5 }, &mut out);
+        rx.on_frame(107, Msg::Interrupt { vector: 7 }, &mut out);
+        rx.fast_forward_into(107, &mut out);
+        assert_eq!(out.len(), 2);
+        assert!(matches!(out[1], Msg::Interrupt { vector: 7 }));
+        assert!(rx.pending.is_empty());
+    }
+
+    #[test]
+    fn unreliable_channel_is_sequenced_newest_wins() {
+        let (mut vm, mut hdl) = Endpoint::inproc_pair();
+        hdl.send_unreliable(&Msg::StatTick { cycles: 1, records_done: 0 });
+        hdl.send_unreliable(&Msg::StatTick { cycles: 2, records_done: 1 });
+        let got = vm.poll().unwrap();
+        assert_eq!(got.len(), 2);
+        // Unreliable traffic never parks in the replay outbox.
+        assert_eq!(hdl.pair_b.tx_stats().backlog, 0);
+        assert_eq!(hdl.pair_b.tx_stats().unreliable_sent, 2);
+        // A stale frame (older than the delivered watermark) drops.
+        let mut out = Vec::new();
+        vm.pair_b
+            .rx
+            .on_frame(1, Msg::StatTick { cycles: 0, records_done: 0 }, &mut out);
+        assert!(out.is_empty());
+        assert_eq!(vm.pair_b.rx_stats().stale_unreliable, 1);
+    }
+
+    #[test]
+    fn impaired_pair_delivers_exactly_once_in_order() {
+        let cfg =
+            ImpairCfg::parse("drop=0.2,dup=0.1,reorder=0.2,corrupt=0.1,seed=42").unwrap();
+        let (mut vm, mut hdl) = Endpoint::inproc_pair();
+        vm.impair(&cfg);
+        hdl.impair(&cfg);
+        let n = 300u64;
+        for i in 0..n {
+            vm.send(&Msg::MmioWrite { bar: 0, addr: i, data: vec![i as u8] })
+                .unwrap();
+        }
+        let mut got = Vec::new();
+        let mut rounds = 0u32;
+        while (got.len() as u64) < n {
+            hdl.poll_into(&mut got).unwrap();
+            let _ = vm.poll().unwrap();
+            vm.nudge_retransmit();
+            hdl.nudge_retransmit();
+            rounds += 1;
+            assert!(
+                rounds < 100_000,
+                "link never converged: {} of {n} delivered",
+                got.len()
+            );
+        }
+        for (i, m) in got.iter().enumerate() {
+            match m {
+                Msg::MmioWrite { addr, .. } => assert_eq!(*addr, i as u64),
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+        // Nothing extra trickles out afterwards (exactly-once).
+        assert_eq!(hdl.poll().unwrap().len(), 0);
+        // The loss/dup machinery demonstrably did work (deterministic
+        // given the fixed seed, so these never flake).
+        assert!(vm.retransmits() > 0, "drops must force retransmits");
+        assert!(
+            hdl.dups_dropped() + hdl.reorders_healed() > 0,
+            "dup/reorder handling never engaged"
+        );
+    }
+
+    #[test]
+    fn udp_endpoint_pair_request_response() {
+        let (mut vm, mut hdl) = Endpoint::udp_pair_on(2, 0x11, 0x22).unwrap();
+        vm.send(&Msg::MmioRead { tag: 7, bar: 0, addr: 8, len: 4 }).unwrap();
+        let mut spill = Vec::new();
+        let req = hdl
+            .poll_until(Duration::from_secs(10), &mut spill, |m| {
+                matches!(m, Msg::MmioRead { tag: 7, .. })
+            })
+            .unwrap();
+        assert!(req.is_some(), "request never crossed the UDP loopback");
+        hdl.send(&Msg::MmioReadResp { tag: 7, data: vec![1, 2, 3, 4] })
+            .unwrap();
+        let resp = vm
+            .poll_until(Duration::from_secs(10), &mut spill, |m| {
+                matches!(m, Msg::MmioReadResp { tag: 7, .. })
+            })
+            .unwrap();
+        assert_eq!(resp, Some(Msg::MmioReadResp { tag: 7, data: vec![1, 2, 3, 4] }));
+        assert!(spill.is_empty());
     }
 
     #[test]

@@ -10,18 +10,25 @@
 //!
 //! The paper used ZeroMQ; the offline environment has no zmq, so
 //! [`channel`] implements the same contract — reliable, ordered,
-//! reconnectable message queues — over two transports:
-//! in-process ([`transport::InProcTransport`], `std::sync::mpsc`) and
+//! reconnectable message queues — over three transports:
+//! in-process ([`transport::InProcTransport`], `std::sync::mpsc`),
 //! Unix-domain sockets ([`transport::UdsTransport`]) for running the
 //! VM side and the HDL side as separate, independently restartable
-//! processes.
+//! processes, and loopback UDP datagrams ([`udp::UdpTransport`]) — a
+//! genuinely lossy, reordering wire that exercises the reliability
+//! layer for real. [`impair`] adds seeded deterministic fault
+//! injection (drop/dup/reorder/corrupt) on top of any of them.
 
 pub mod channel;
+pub mod impair;
 pub mod msg;
 pub mod transport;
+pub mod udp;
 
-pub use channel::{Endpoint, LinkPair, ReliableRx, ReliableTx};
+pub use channel::{Endpoint, LinkPair, ReliableRx, ReliableTx, RxStats, TxStats};
+pub use impair::{ImpairCfg, ImpairDir, ImpairedTransport};
 pub use msg::{LinkMode, Msg, Side};
 pub use transport::{
     make_inproc_pair, Doorbell, InProcTransport, Transport, UdsListener, UdsTransport,
 };
+pub use udp::UdpTransport;

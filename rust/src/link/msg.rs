@@ -110,6 +110,21 @@ pub enum Msg {
     Ack { up_to: u64 },
     /// Orderly shutdown of a side.
     Bye,
+    /// Reliable-stream resume point, sent right after every [`Msg::Hello`]:
+    /// `from` is the lowest seq the sender can still supply (front of
+    /// its outbox, or its next fresh seq when nothing is unacked). The
+    /// receiver fast-forwards its delivery watermark to `from - 1` —
+    /// always safe, since every earlier seq was cumulatively acked —
+    /// so a restarted receiver's strict in-order delivery cannot
+    /// deadlock waiting for frames its previous incarnation consumed.
+    Resume { from: u64 },
+    /// Cumulative ack plus a renet-style 32-wide selective-ack window:
+    /// bit `i` set ⇒ seq `up_to + 1 + i` is buffered out-of-order at
+    /// the receiver, so the sender can skip retransmitting it.
+    AckBits { up_to: u64, bits: u32 },
+    /// Unreliable-sequenced telemetry tick (stats channel): stale ticks
+    /// are dropped by the receiver, never retransmitted, never acked.
+    StatTick { cycles: u64, records_done: u64 },
 }
 
 /// Kind bytes (wire stable; append-only).
@@ -125,6 +140,9 @@ mod kind {
     pub const HELLO: u8 = 9;
     pub const ACK: u8 = 10;
     pub const BYE: u8 = 11;
+    pub const RESUME: u8 = 12;
+    pub const ACK_BITS: u8 = 13;
+    pub const STAT_TICK: u8 = 14;
 }
 
 /// Append a `u16/u32/u64` little-endian.
@@ -280,6 +298,17 @@ impl Msg {
                 put_u64(buf, *up_to);
             }
             Msg::Bye => {}
+            Msg::Resume { from } => {
+                put_u64(buf, *from);
+            }
+            Msg::AckBits { up_to, bits } => {
+                put_u64(buf, *up_to);
+                put_u32(buf, *bits);
+            }
+            Msg::StatTick { cycles, records_done } => {
+                put_u64(buf, *cycles);
+                put_u64(buf, *records_done);
+            }
         }
     }
 
@@ -336,12 +365,29 @@ impl Msg {
             },
             kind::TLP => Msg::Tlp { bytes: r.bytes()? },
             kind::HELLO => Msg::Hello {
-                side_is_vm: r.u8()? != 0,
+                // Strictly 0/1 so every accepted frame re-encodes
+                // byte-identically (the fuzz harness pins this).
+                side_is_vm: match r.u8()? {
+                    0 => false,
+                    1 => true,
+                    other => {
+                        return Err(Error::link(format!("hello side byte {other}")))
+                    }
+                },
                 session: r.u64()?,
                 last_seq_seen: r.u64()?,
             },
             kind::ACK => Msg::Ack { up_to: r.u64()? },
             kind::BYE => Msg::Bye,
+            kind::RESUME => Msg::Resume { from: r.u64()? },
+            kind::ACK_BITS => Msg::AckBits {
+                up_to: r.u64()?,
+                bits: r.u32()?,
+            },
+            kind::STAT_TICK => Msg::StatTick {
+                cycles: r.u64()?,
+                records_done: r.u64()?,
+            },
             other => return Err(Error::link(format!("unknown kind {other}"))),
         };
         r.done()?;
@@ -361,12 +407,28 @@ impl Msg {
             Msg::Hello { .. } => kind::HELLO,
             Msg::Ack { .. } => kind::ACK,
             Msg::Bye => kind::BYE,
+            Msg::Resume { .. } => kind::RESUME,
+            Msg::AckBits { .. } => kind::ACK_BITS,
+            Msg::StatTick { .. } => kind::STAT_TICK,
         }
     }
 
     /// True for control-plane messages that bypass the reliable stream.
     pub fn is_control(&self) -> bool {
-        matches!(self, Msg::Hello { .. } | Msg::Ack { .. } | Msg::Bye)
+        matches!(
+            self,
+            Msg::Hello { .. }
+                | Msg::Ack { .. }
+                | Msg::Bye
+                | Msg::Resume { .. }
+                | Msg::AckBits { .. }
+        )
+    }
+
+    /// True for payloads on the unreliable-sequenced channel: delivered
+    /// best-effort, stale ones dropped, never acked or retransmitted.
+    pub fn is_unreliable(&self) -> bool {
+        matches!(self, Msg::StatTick { .. })
     }
 
     /// Short human label for logs/metrics.
@@ -383,6 +445,9 @@ impl Msg {
             Msg::Hello { .. } => "hello",
             Msg::Ack { .. } => "ack",
             Msg::Bye => "bye",
+            Msg::Resume { .. } => "resume",
+            Msg::AckBits { .. } => "ack_bits",
+            Msg::StatTick { .. } => "stat_tick",
         }
     }
 
@@ -410,6 +475,9 @@ mod tests {
             Msg::Hello { side_is_vm: true, session: 42, last_seq_seen: 17 },
             Msg::Ack { up_to: 1234 },
             Msg::Bye,
+            Msg::Resume { from: 51 },
+            Msg::AckBits { up_to: 90, bits: 0b1011 },
+            Msg::StatTick { cycles: 123_456, records_done: 789 },
         ]
     }
 
@@ -434,6 +502,26 @@ mod tests {
         // The single-device encode stamps device 0.
         let f = Msg::Bye.encode(0);
         assert_eq!(Msg::decode_on(&f).unwrap().1, 0);
+    }
+
+    #[test]
+    fn control_and_unreliable_classification() {
+        // Exactly the reliability-layer control frames are control...
+        for m in sample_msgs() {
+            let ctrl = matches!(
+                m,
+                Msg::Hello { .. }
+                    | Msg::Ack { .. }
+                    | Msg::Bye
+                    | Msg::Resume { .. }
+                    | Msg::AckBits { .. }
+            );
+            assert_eq!(m.is_control(), ctrl, "{}", m.label());
+            // ...and nothing is both control and unreliable payload.
+            assert!(!(m.is_control() && m.is_unreliable()), "{}", m.label());
+        }
+        assert!(Msg::StatTick { cycles: 1, records_done: 0 }.is_unreliable());
+        assert!(!Msg::Interrupt { vector: 0 }.is_unreliable());
     }
 
     #[test]

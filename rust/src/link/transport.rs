@@ -171,6 +171,14 @@ pub trait Transport: Send {
     fn take_reconnected(&mut self) -> bool {
         false
     }
+    /// True for transports that may lose, corrupt, or reorder frames
+    /// (UDP, fault injection). The reliable layer tolerates undecodable
+    /// frames from lossy transports — counting and dropping them —
+    /// while a corrupt frame from a perfect transport stays a loud
+    /// link error, because there it can only mean a codec bug.
+    fn lossy(&self) -> bool {
+        false
+    }
     /// Human label for logs.
     fn label(&self) -> &'static str;
 }

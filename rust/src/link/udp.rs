@@ -1,0 +1,346 @@
+//! UDP loopback transport: real sockets, real loss.
+//!
+//! The step from "co-sim on one host over perfect pipes" toward a
+//! simulated datacenter fabric (ROADMAP's renet direction): frames ride
+//! UDP datagrams, which the kernel may drop, and which the reliable
+//! channel layer above must survive. One [`UdpTransport`] is one
+//! unidirectional channel, matching the paper's four-channel topology;
+//! datagrams are naturally framed, so no length prefix is needed.
+//!
+//! Datagram layout (little-endian):
+//! `session u64 | tseq u64 | frame bytes`
+//!
+//! * `session` — the sender incarnation's stamp. The receiver adopts
+//!   the first stamp it sees; a *changed* stamp means the peer
+//!   restarted, and is surfaced through `take_reconnected` so the
+//!   reliable layer re-handshakes and replays — the same semantics a
+//!   UDS re-accept provides.
+//! * `tseq` — per-transport datagram counter. Used only to *observe*
+//!   network reordering in stats; ordering and dedup are the reliable
+//!   layer's job (frames carry their own stream seq).
+//!
+//! Everything here is wall-clock-free: no deadlines, no naps — the
+//! blocking-wait seams live in the channel layer and the trait's
+//! default `recv_timeout`, both already sanctioned in
+//! `analysis/allow.toml`.
+
+use std::io::ErrorKind;
+use std::net::UdpSocket;
+
+use super::transport::Transport;
+use crate::{Error, Result};
+
+/// Datagram header: session stamp + transport sequence.
+const HDR: usize = 16;
+
+/// Largest frame accepted for a single datagram (safely under the
+/// 65,507-byte UDP payload ceiling; link frames are ≤ a few KiB).
+pub const MAX_UDP_FRAME: usize = 60_000;
+
+/// One unidirectional UDP channel end (loopback-first: both ends bind
+/// 127.0.0.1). Build senders with [`UdpTransport::sender`] and
+/// receivers with [`UdpTransport::receiver`].
+pub struct UdpTransport {
+    sock: UdpSocket,
+    /// Incarnation stamp on outgoing datagrams (sender role).
+    session: u64,
+    /// Outgoing datagram counter.
+    tx_seq: u64,
+    /// Adopted peer stamp (receiver role); 0 = nothing received yet.
+    peer_session: u64,
+    /// Highest transport seq seen from the current peer incarnation.
+    last_tseq: u64,
+    newly_connected: bool,
+    /// One datagram pulled ahead by `ready` and served by the next
+    /// receive call.
+    pending: Option<Vec<u8>>,
+    rdbuf: Vec<u8>,
+    wrbuf: Vec<u8>,
+    /// Sends the kernel refused (peer port unbound, buffer full, …) —
+    /// loss, by this transport's contract, never an error.
+    pub send_lost: u64,
+    /// Datagrams too short to carry the header.
+    pub runts: u64,
+    /// Peer session stamp changes after the first adoption.
+    pub session_flips: u64,
+    /// Datagrams that arrived behind an already-seen transport seq.
+    pub reorder_observed: u64,
+}
+
+impl UdpTransport {
+    fn new(sock: UdpSocket, session: u64) -> Result<Self> {
+        sock.set_nonblocking(true)?;
+        Ok(Self {
+            sock,
+            session,
+            tx_seq: 0,
+            peer_session: 0,
+            last_tseq: 0,
+            newly_connected: false,
+            pending: None,
+            rdbuf: vec![0u8; 64 * 1024],
+            wrbuf: Vec::with_capacity(256),
+            send_lost: 0,
+            runts: 0,
+            session_flips: 0,
+            reorder_observed: 0,
+        })
+    }
+
+    /// Sending end: bind an ephemeral loopback port and direct all
+    /// datagrams at `peer_port`. `session` must be fresh per
+    /// incarnation (see `coordinator::lifecycle::fresh_session`).
+    pub fn sender(peer_port: u16, session: u64) -> Result<Self> {
+        let sock = UdpSocket::bind(("127.0.0.1", 0))?;
+        sock.connect(("127.0.0.1", peer_port))?;
+        Self::new(sock, session)
+    }
+
+    /// Receiving end: bind `port` on loopback (0 = OS-assigned; read it
+    /// back with [`UdpTransport::local_port`]).
+    pub fn receiver(port: u16) -> Result<Self> {
+        Self::new(UdpSocket::bind(("127.0.0.1", port))?, 0)
+    }
+
+    /// The locally bound port (the rendezvous coordinate peers send to).
+    pub fn local_port(&self) -> Result<u16> {
+        Ok(self.sock.local_addr()?.port())
+    }
+
+    /// Pull one datagram off the socket, strip and validate the header.
+    fn recv_raw(&mut self) -> Result<Option<Vec<u8>>> {
+        loop {
+            match self.sock.recv_from(&mut self.rdbuf) {
+                Ok((n, _from)) => {
+                    if n < HDR || n > self.rdbuf.len() {
+                        self.runts += 1;
+                        continue;
+                    }
+                    let (Some(s8), Some(t8)) =
+                        (self.rdbuf.get(..8), self.rdbuf.get(8..HDR))
+                    else {
+                        self.runts += 1;
+                        continue;
+                    };
+                    let mut w = [0u8; 8];
+                    w.copy_from_slice(s8);
+                    let sess = u64::from_le_bytes(w);
+                    w.copy_from_slice(t8);
+                    let tseq = u64::from_le_bytes(w);
+                    if sess != self.peer_session {
+                        // First datagram, or a restarted peer: either
+                        // way a fresh stream for the reliable layer.
+                        if self.peer_session != 0 {
+                            self.session_flips += 1;
+                        }
+                        self.peer_session = sess;
+                        self.newly_connected = true;
+                        self.last_tseq = 0;
+                    }
+                    if tseq <= self.last_tseq && self.last_tseq != 0 {
+                        self.reorder_observed += 1;
+                    } else {
+                        self.last_tseq = tseq;
+                    }
+                    let body = self
+                        .rdbuf
+                        .get(HDR..n)
+                        .ok_or_else(|| Error::link("udp recv overran its buffer"))?;
+                    return Ok(Some(body.to_vec()));
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => return Ok(None),
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                // ICMP port-unreachable residue from a connected
+                // socket's earlier sends surfaces here; it means "peer
+                // not up yet", which on a lossy link is not an error.
+                Err(e)
+                    if e.kind() == ErrorKind::ConnectionRefused
+                        || e.kind() == ErrorKind::ConnectionReset =>
+                {
+                    continue
+                }
+                Err(e) => return Err(e.into()),
+            }
+        }
+    }
+}
+
+impl Transport for UdpTransport {
+    fn send(&mut self, frame: &[u8]) -> Result<()> {
+        if frame.len() > MAX_UDP_FRAME {
+            return Err(Error::link(format!(
+                "frame of {} bytes exceeds the {MAX_UDP_FRAME}-byte udp cap",
+                frame.len()
+            )));
+        }
+        self.tx_seq += 1;
+        let mut buf = std::mem::take(&mut self.wrbuf);
+        buf.clear();
+        buf.extend_from_slice(&self.session.to_le_bytes());
+        buf.extend_from_slice(&self.tx_seq.to_le_bytes());
+        buf.extend_from_slice(frame);
+        // A refused/overflowing send is loss, not failure: the frame
+        // stays in the reliable layer's outbox and retransmit heals it
+        // (this is what rides out the peer-process startup race).
+        if self.sock.send(&buf).is_err() {
+            self.send_lost += 1;
+        }
+        self.wrbuf = buf;
+        Ok(())
+    }
+
+    fn try_recv(&mut self) -> Result<Option<Vec<u8>>> {
+        if let Some(f) = self.pending.take() {
+            return Ok(Some(f));
+        }
+        self.recv_raw()
+    }
+
+    fn ready(&mut self) -> Result<bool> {
+        if self.pending.is_some() {
+            return Ok(true);
+        }
+        self.pending = self.recv_raw()?;
+        Ok(self.pending.is_some())
+    }
+
+    fn peek_reconnected(&self) -> bool {
+        self.newly_connected
+    }
+
+    fn take_reconnected(&mut self) -> bool {
+        std::mem::take(&mut self.newly_connected)
+    }
+
+    fn lossy(&self) -> bool {
+        true
+    }
+
+    fn label(&self) -> &'static str {
+        "udp"
+    }
+}
+
+/// Port of channel `chan` (0–3: a_req, a_resp, b_req, b_resp) for
+/// device `device` on base port `base` — the fixed rendezvous scheme
+/// split VM/HDL processes agree on (`--udp-port`).
+pub fn device_port(base: u16, device: u8, chan: u8) -> Result<u16> {
+    let off = device as u32 * 4 + chan as u32;
+    u16::try_from(base as u32 + off).map_err(|_| {
+        Error::config(format!(
+            "udp port overflow: base {base} + device {device} channel {chan}"
+        ))
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    /// Collision-free pair: receiver binds an OS-assigned port.
+    fn pair(session: u64) -> (UdpTransport, UdpTransport) {
+        let rx = UdpTransport::receiver(0).unwrap();
+        let tx = UdpTransport::sender(rx.local_port().unwrap(), session).unwrap();
+        (tx, rx)
+    }
+
+    #[test]
+    fn loopback_roundtrip_preserves_frames() {
+        let (mut tx, mut rx) = pair(7);
+        tx.send(b"hello").unwrap();
+        tx.send(&vec![9u8; 4096]).unwrap();
+        let f1 = rx.recv_timeout(Duration::from_secs(2)).unwrap().unwrap();
+        assert_eq!(f1, b"hello");
+        let f2 = rx.recv_timeout(Duration::from_secs(2)).unwrap().unwrap();
+        assert_eq!(f2.len(), 4096);
+        assert!(f2.iter().all(|&b| b == 9));
+        assert!(rx.try_recv().unwrap().is_none());
+        assert!(tx.lossy() && rx.lossy());
+    }
+
+    #[test]
+    fn first_datagram_marks_fresh_stream() {
+        let (mut tx, mut rx) = pair(42);
+        assert!(!rx.peek_reconnected());
+        tx.send(b"x").unwrap();
+        let _ = rx.recv_timeout(Duration::from_secs(2)).unwrap().unwrap();
+        assert!(rx.peek_reconnected());
+        assert!(rx.take_reconnected());
+        assert!(!rx.take_reconnected(), "flag must be consumed once");
+    }
+
+    #[test]
+    fn session_change_resurfaces_fresh_stream() {
+        let rx0 = UdpTransport::receiver(0).unwrap();
+        let port = rx0.local_port().unwrap();
+        let mut rx = rx0;
+        let mut tx1 = UdpTransport::sender(port, 100).unwrap();
+        tx1.send(b"a").unwrap();
+        let _ = rx.recv_timeout(Duration::from_secs(2)).unwrap().unwrap();
+        assert!(rx.take_reconnected());
+        // Same incarnation: no flip.
+        tx1.send(b"b").unwrap();
+        let _ = rx.recv_timeout(Duration::from_secs(2)).unwrap().unwrap();
+        assert!(!rx.take_reconnected());
+        // Restarted peer (new session stamp): fresh stream again.
+        let mut tx2 = UdpTransport::sender(port, 101).unwrap();
+        tx2.send(b"c").unwrap();
+        let _ = rx.recv_timeout(Duration::from_secs(2)).unwrap().unwrap();
+        assert!(rx.take_reconnected());
+        assert_eq!(rx.session_flips, 1);
+    }
+
+    #[test]
+    fn send_to_unbound_port_is_counted_loss_not_error() {
+        // Bind-then-drop to get a port that is almost surely unbound.
+        let port = {
+            let probe = UdpTransport::receiver(0).unwrap();
+            probe.local_port().unwrap()
+        };
+        let mut tx = UdpTransport::sender(port, 1).unwrap();
+        for _ in 0..4 {
+            tx.send(b"into the void").unwrap();
+        }
+        // At least some sends bounce once the ICMP unreachable lands;
+        // either way none of them may error.
+        let _ = tx.send_lost;
+    }
+
+    #[test]
+    fn oversize_frame_is_rejected_runts_are_dropped() {
+        let (mut tx, mut rx) = pair(1);
+        assert!(tx.send(&vec![0u8; MAX_UDP_FRAME + 1]).is_err());
+        // A headerless datagram straight on the socket is dropped.
+        let raw = UdpSocket::bind(("127.0.0.1", 0)).unwrap();
+        raw.send_to(b"runt", ("127.0.0.1", rx.local_port().unwrap())).unwrap();
+        tx.send(b"real").unwrap();
+        let f = rx.recv_timeout(Duration::from_secs(2)).unwrap().unwrap();
+        assert_eq!(f, b"real");
+        assert_eq!(rx.runts, 1);
+    }
+
+    #[test]
+    fn device_port_scheme_is_disjoint_and_bounded() {
+        let mut seen = std::collections::BTreeSet::new();
+        for dev in 0..4u8 {
+            for chan in 0..4u8 {
+                assert!(seen.insert(device_port(40_000, dev, chan).unwrap()));
+            }
+        }
+        assert!(device_port(u16::MAX - 2, 200, 3).is_err());
+    }
+
+    #[test]
+    fn ready_prefetch_does_not_lose_frames() {
+        let (mut tx, mut rx) = pair(5);
+        tx.send(b"one").unwrap();
+        // Give loopback a moment, then ready() must prefetch.
+        let deadline = std::time::Instant::now() + Duration::from_secs(2);
+        while !rx.ready().unwrap() {
+            assert!(std::time::Instant::now() < deadline, "datagram never arrived");
+            std::thread::sleep(Duration::from_micros(100));
+        }
+        assert_eq!(rx.try_recv().unwrap().unwrap(), b"one");
+    }
+}

@@ -1,19 +1,25 @@
 //! `vmhdl` — command-line front end of the co-simulation framework.
 //!
 //! ```text
-//! vmhdl cosim     [--records N] [--mode mmio|tlp] [--transport inproc|uds]
+//! vmhdl cosim     [--records N] [--mode mmio|tlp] [--transport inproc|uds|udp]
 //!                 [--devices N] [--shard round-robin|size|work-steal]
 //!                 [--queue-depth D] [--device-latency k=cycles[,..]]
 //!                 [--kernel sort|checksum|stats | --kernel k=kind[,..]]
 //!                 [--device-n k=N] [--device-link-latency k=us]
+//!                 [--impair drop=P,dup=P,reorder=P,corrupt=P,seed=N[,dir=up|down]]
+//!                 [--device-impair k:spec] [--udp-port BASE]
 //!                 [--vcd out.vcd] [--golden true] ...   run a full co-simulation
 //!                 (devices > 1 shards the batch across N PCIe FPGAs;
 //!                 queue-depth > 1 pipelines D records per device over
 //!                 a scatter-gather descriptor ring; per-device --kernel
 //!                 / --device-n runs a heterogeneous mixed fleet with
-//!                 records routed to matching-kernel devices)
-//! vmhdl hdl-side  --dir <sockets> [...]    the HDL simulator process (UDS)
-//! vmhdl vm-side   [--dir <sockets>] [...]  the VM process (UDS)
+//!                 records routed to matching-kernel devices; --transport
+//!                 udp crosses real loopback datagrams and --impair adds
+//!                 seeded deterministic drop/dup/reorder/corrupt faults
+//!                 that the reliability layer must absorb)
+//! vmhdl hdl-side  --dir <sockets> [...]    the HDL simulator process
+//!                 (UDS, or --transport udp --udp-port BASE)
+//! vmhdl vm-side   [--dir <sockets>] [...]  the VM process (UDS or udp)
 //! vmhdl rtt       [--iters N]              MMIO round-trip microbench (Table III)
 //! vmhdl irq       [--iters N]              interrupt-latency microbench
 //! vmhdl golden    [--records N] [--backend native|pjrt]
@@ -31,7 +37,7 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use vmhdl::config::Config;
-use vmhdl::coordinator::cosim::{run_hdl_loop, run_hdl_multi_loop};
+use vmhdl::coordinator::cosim::{run_hdl_multi_loop, TransportKind};
 use vmhdl::coordinator::stats::fmt_dur;
 use vmhdl::coordinator::scenario;
 use vmhdl::costmodel::{flow, FlowModel, ResourceModel};
@@ -206,31 +212,38 @@ fn cmd_hdl_side(cfg: &Config) -> Result<()> {
     let cc = cfg.cosim()?;
     let session = vmhdl::coordinator::lifecycle::fresh_session();
     let n = cfg.devices.max(1);
-    println!(
-        "hdl-side: sockets at {}, devices {n}, session {session:#x}, vcd={:?}",
-        cfg.socket_dir.display(),
-        cfg.vcd
-    );
-    if n == 1 {
-        let mut ep = Endpoint::uds(Side::Hdl, &cfg.socket_dir, session)?;
-        ep.set_send_latency(vmhdl::coordinator::cosim::link_latency_for(&cc, 0));
-        let platform = Platform::new(vmhdl::coordinator::cosim::platform_cfg_for(&cc, 0));
-        // Runs until killed (the supervisor / user stops us).
-        let stop = Arc::new(AtomicBool::new(false));
-        let cycles = Arc::new(AtomicU64::new(0));
-        let report = run_hdl_loop(platform, ep, &cc, stop, cycles)?;
-        println!("hdl-side: done: {report:?}");
-        return Ok(());
+    let udp = cfg.transport == "udp";
+    if udp {
+        println!(
+            "hdl-side: udp base port {}, devices {n}, session {session:#x}, vcd={:?}",
+            cfg.udp_port, cfg.vcd
+        );
+    } else {
+        println!(
+            "hdl-side: sockets at {}, devices {n}, session {session:#x}, vcd={:?}",
+            cfg.socket_dir.display(),
+            cfg.vcd
+        );
     }
-    // Multi-device: one lane per device, rendezvousing under per-
-    // device socket subdirectories (dev0 = the base dir).
+    // One lane per device on the selected transport (UDS devices
+    // rendezvous under per-device socket subdirectories, dev0 = the
+    // base dir; UDP devices bind the fixed device_port scheme). Runs
+    // until killed (the supervisor / user stops us).
     let mut lanes = Vec::with_capacity(n);
     for k in 0..n {
-        let devdir = Endpoint::uds_device_dir(&cfg.socket_dir, k as u8);
-        std::fs::create_dir_all(&devdir)?;
-        let mut ep = Endpoint::uds(Side::Hdl, &devdir, session)?;
-        ep.set_device_id(k as u8);
+        let mut ep = if udp {
+            Endpoint::udp(Side::Hdl, cfg.udp_port, k as u8, session)?
+        } else {
+            let devdir = Endpoint::uds_device_dir(&cfg.socket_dir, k as u8);
+            std::fs::create_dir_all(&devdir)?;
+            let mut ep = Endpoint::uds(Side::Hdl, &devdir, session)?;
+            ep.set_device_id(k as u8);
+            ep
+        };
         ep.set_send_latency(vmhdl::coordinator::cosim::link_latency_for(&cc, k));
+        if let Some(ic) = vmhdl::coordinator::cosim::impair_for(&cc, k) {
+            ep.impair(&ic);
+        }
         lanes.push((
             Platform::new(vmhdl::coordinator::cosim::platform_cfg_for(&cc, k)),
             ep,
@@ -247,10 +260,20 @@ fn cmd_hdl_side(cfg: &Config) -> Result<()> {
 
 fn cmd_vm_side(cfg: &Config) -> Result<()> {
     let mut c2 = cfg.clone();
-    c2.transport = "uds".to_string();
+    // A vm-side process is by definition split from the HDL side:
+    // inproc makes no sense here. An explicit udp selection is kept;
+    // anything else becomes uds.
+    if c2.transport != "udp" {
+        c2.transport = "uds".to_string();
+    }
+    let mut cc = c2.cosim()?;
+    if let TransportKind::Udp { hdl_in_proc, .. } = &mut cc.transport {
+        // The HDL side is the peer `vmhdl hdl-side` process.
+        *hdl_in_proc = false;
+    }
     if cfg.needs_sharded_runner() {
         let (rep, _outs) = scenario::run_sharded_offload_depth(
-            c2.cosim()?,
+            cc,
             cfg.records,
             cfg.seed,
             cfg.shard,
@@ -266,7 +289,7 @@ fn cmd_vm_side(cfg: &Config) -> Result<()> {
         );
         return Ok(());
     }
-    let rep = scenario::run_sort_offload(c2.cosim()?, cfg.records, cfg.seed, None)?;
+    let rep = scenario::run_sort_offload(cc, cfg.records, cfg.seed, None)?;
     println!(
         "vm-side: {} records ok in {} ({} device cycles)",
         rep.records,

@@ -1,0 +1,161 @@
+//! Seeded byte-level fuzzing helpers — the offline stand-in for a
+//! coverage-guided fuzzer (no `cargo-fuzz`/`libFuzzer` in the vendored
+//! crate set; DESIGN.md §4 documents the substitution pattern).
+//!
+//! [`ByteMutator`] produces deterministic corruption: every mutation
+//! sequence is a pure function of the seed, so a failing fuzz case is
+//! reported as `(seed, case index)` and re-runnable in isolation —
+//! the same contract as [`crate::testutil::forall`]. The link fuzz
+//! harness (`tests/link_fuzz.rs`) drives mutated and purely random
+//! frames through `Msg::decode_on` and `ReliableRx::on_frame`.
+
+use super::rng::XorShift64;
+
+/// Hard cap a mutated buffer can grow to: larger than any legal link
+/// frame, small enough that a million cases never balloon memory.
+pub const MUTATE_MAX_LEN: usize = 4096;
+
+/// Deterministic byte-buffer mutator over [`XorShift64`].
+///
+/// Each [`mutate`](ByteMutator::mutate) call applies 1–4 randomly
+/// chosen edits from a classic mutation menu: bit flips, byte
+/// overwrites, interesting-value splats, truncation, random-tail
+/// extension, range duplication, insertion and deletion. Lengths are
+/// clamped to [`MUTATE_MAX_LEN`].
+#[derive(Debug, Clone)]
+pub struct ByteMutator {
+    rng: XorShift64,
+}
+
+/// Boundary bytes that historically shake out parser bugs (sign bits,
+/// off-by-one lengths, magic-adjacent values).
+const INTERESTING: [u8; 8] = [0x00, 0x01, 0x7F, 0x80, 0xFE, 0xFF, 0x56, 0x48];
+
+impl ByteMutator {
+    pub fn new(seed: u64) -> Self {
+        Self {
+            rng: XorShift64::new(seed),
+        }
+    }
+
+    /// Apply 1–4 random edits to `buf` in place. An empty buffer is
+    /// seeded with random bytes first so every edit has a target.
+    pub fn mutate(&mut self, buf: &mut Vec<u8>) {
+        if buf.is_empty() {
+            let n = self.rng.range(1, 64);
+            *buf = self.rng.vec_u8(n);
+        }
+        let edits = self.rng.range(1, 4);
+        for _ in 0..edits {
+            self.mutate_once(buf);
+        }
+        buf.truncate(MUTATE_MAX_LEN);
+    }
+
+    /// A fresh buffer of random bytes, length in `[0, max_len]`.
+    pub fn random_frame(&mut self, max_len: usize) -> Vec<u8> {
+        let n = self.rng.range(0, max_len.min(MUTATE_MAX_LEN));
+        self.rng.vec_u8(n)
+    }
+
+    fn mutate_once(&mut self, buf: &mut Vec<u8>) {
+        if buf.is_empty() {
+            buf.push(self.rng.next_u64() as u8);
+            return;
+        }
+        let len = buf.len();
+        match self.rng.below(7) {
+            // Flip one bit.
+            0 => {
+                let i = self.rng.range(0, len - 1);
+                buf[i] ^= 1 << self.rng.below(8);
+            }
+            // Overwrite one byte with a random value.
+            1 => {
+                let i = self.rng.range(0, len - 1);
+                buf[i] = self.rng.next_u64() as u8;
+            }
+            // Splat an interesting boundary value.
+            2 => {
+                let i = self.rng.range(0, len - 1);
+                buf[i] = INTERESTING[self.rng.below(INTERESTING.len() as u64) as usize];
+            }
+            // Truncate to a random prefix (possibly empty).
+            3 => {
+                buf.truncate(self.rng.range(0, len));
+            }
+            // Extend with a random tail.
+            4 => {
+                let extra = self.rng.range(1, 32);
+                let tail = self.rng.vec_u8(extra);
+                buf.extend_from_slice(&tail);
+            }
+            // Duplicate a random range onto the end (length growth).
+            5 => {
+                let a = self.rng.range(0, len - 1);
+                let b = self.rng.range(a, len - 1);
+                let slice = buf[a..=b].to_vec();
+                buf.extend_from_slice(&slice);
+            }
+            // Delete a random range.
+            _ => {
+                let a = self.rng.range(0, len - 1);
+                let b = self.rng.range(a, len - 1);
+                buf.drain(a..=b);
+            }
+        }
+        buf.truncate(MUTATE_MAX_LEN);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_from_seed() {
+        let mut a = ByteMutator::new(11);
+        let mut b = ByteMutator::new(11);
+        for _ in 0..200 {
+            let mut x = vec![1, 2, 3, 4, 5, 6, 7, 8];
+            let mut y = x.clone();
+            a.mutate(&mut x);
+            b.mutate(&mut y);
+            assert_eq!(x, y);
+        }
+    }
+
+    #[test]
+    fn length_stays_bounded() {
+        let mut m = ByteMutator::new(3);
+        let mut buf = vec![0u8; 16];
+        for _ in 0..10_000 {
+            m.mutate(&mut buf);
+            assert!(buf.len() <= MUTATE_MAX_LEN);
+        }
+    }
+
+    #[test]
+    fn mutations_actually_change_bytes() {
+        let mut m = ByteMutator::new(5);
+        let orig = vec![0xAAu8; 32];
+        let mut changed = 0;
+        for _ in 0..100 {
+            let mut buf = orig.clone();
+            m.mutate(&mut buf);
+            if buf != orig {
+                changed += 1;
+            }
+        }
+        // Truncate-to-same-length edits can no-op; most cases must not.
+        assert!(changed > 80, "only {changed}/100 mutations changed the buffer");
+    }
+
+    #[test]
+    fn random_frame_respects_cap() {
+        let mut m = ByteMutator::new(9);
+        for _ in 0..1000 {
+            assert!(m.random_frame(100).len() <= 100);
+        }
+    }
+}

@@ -12,8 +12,10 @@
 //! only so integration tests, benches and examples share the same
 //! generators.
 
+pub mod fuzz;
 pub mod prop;
 pub mod rng;
 
+pub use fuzz::ByteMutator;
 pub use prop::{forall, Gen};
 pub use rng::XorShift64;

@@ -1,0 +1,102 @@
+//! Property: over an impaired link, the reliable channel delivers
+//! every payload exactly once, in order, in both directions — for any
+//! seeded fault mix of drops, duplicates, reorders and corruption.
+//!
+//! The regression corpus (`tests/corpus/impair_regressions.txt`) runs
+//! first: specs distilled from past failures plus each fault in
+//! isolation. Then a random sweep of ~20 `(seed, drop, dup, reorder,
+//! corrupt)` configs derived from one suite seed; every case prints
+//! its exact spec on failure, ready to be pasted into the corpus.
+
+use vmhdl::link::{Endpoint, ImpairCfg, ImpairDir, Msg};
+use vmhdl::testutil::XorShift64;
+
+const CORPUS: &str = include_str!("corpus/impair_regressions.txt");
+
+/// Random sweep size on top of the corpus.
+const RANDOM_CASES: u64 = 20;
+
+/// Drive `n` payloads each way across an impaired in-proc pair and
+/// assert exactly-once, in-order delivery on both sides.
+fn check_exactly_once(cfg: &ImpairCfg, label: &str) {
+    let n = 120u64;
+    let (mut vm, mut hdl) = Endpoint::inproc_pair();
+    vm.impair(cfg);
+    hdl.impair(cfg);
+    for i in 0..n {
+        vm.send(&Msg::MmioWrite { bar: 0, addr: i, data: vec![i as u8] })
+            .unwrap();
+        hdl.send(&Msg::Interrupt { vector: i as u16 }).unwrap();
+    }
+    let mut down = Vec::new(); // delivered at HDL
+    let mut up = Vec::new(); // delivered at VM
+    let mut rounds = 0u32;
+    while (down.len() as u64) < n || (up.len() as u64) < n {
+        hdl.poll_into(&mut down).unwrap();
+        vm.poll_into(&mut up).unwrap();
+        vm.nudge_retransmit();
+        hdl.nudge_retransmit();
+        rounds += 1;
+        assert!(
+            rounds < 200_000,
+            "{label}: link never converged ({} down, {} up of {n})",
+            down.len(),
+            up.len()
+        );
+    }
+    for (i, m) in down.iter().enumerate() {
+        match m {
+            Msg::MmioWrite { addr, .. } => {
+                assert_eq!(*addr, i as u64, "{label}: VM→HDL out of order at {i}")
+            }
+            other => panic!("{label}: unexpected VM→HDL delivery {other:?}"),
+        }
+    }
+    for (i, m) in up.iter().enumerate() {
+        match m {
+            Msg::Interrupt { vector } => {
+                assert_eq!(*vector, i as u16, "{label}: HDL→VM out of order at {i}")
+            }
+            other => panic!("{label}: unexpected HDL→VM delivery {other:?}"),
+        }
+    }
+    // Exactly-once: nothing extra trickles out afterwards.
+    assert_eq!(hdl.poll().unwrap().len(), 0, "{label}: extra VM→HDL deliveries");
+    assert_eq!(vm.poll().unwrap().len(), 0, "{label}: extra HDL→VM deliveries");
+}
+
+#[test]
+fn prop_corpus_configs_deliver_exactly_once_in_order() {
+    let mut ran = 0;
+    for line in CORPUS.lines() {
+        let spec = line.trim();
+        if spec.is_empty() || spec.starts_with('#') {
+            continue;
+        }
+        let cfg = ImpairCfg::parse(spec)
+            .unwrap_or_else(|e| panic!("corpus line {spec:?} failed to parse: {e}"));
+        check_exactly_once(&cfg, &format!("corpus[{spec}]"));
+        ran += 1;
+    }
+    assert!(ran >= 8, "corpus unexpectedly small: {ran} configs");
+}
+
+#[test]
+fn prop_random_impairments_deliver_exactly_once_in_order() {
+    let mut rng = XorShift64::new(0x11A7_4B0B_5EED_0001);
+    for case in 0..RANDOM_CASES {
+        let cfg = ImpairCfg {
+            drop_ppm: rng.below(300_001) as u32,
+            dup_ppm: rng.below(150_001) as u32,
+            reorder_ppm: rng.below(300_001) as u32,
+            corrupt_ppm: rng.below(100_001) as u32,
+            seed: rng.next_u64(),
+            dir: ImpairDir::Both,
+        };
+        let label = format!(
+            "random case {case}: drop={},dup={},reorder={},corrupt={},seed={:#x} (ppm)",
+            cfg.drop_ppm, cfg.dup_ppm, cfg.reorder_ppm, cfg.corrupt_ppm, cfg.seed
+        );
+        check_exactly_once(&cfg, &label);
+    }
+}

@@ -23,10 +23,12 @@ use crate::scan::{is_ident, SourceFile};
 use crate::Finding;
 
 /// Files whose non-test code must be panic-free.
-const SCOPE: [&str; 4] = [
+const SCOPE: [&str; 6] = [
     "link/msg.rs",
     "link/channel.rs",
     "link/transport.rs",
+    "link/udp.rs",
+    "link/impair.rs",
     "vm/guest/driver.rs",
 ];
 
