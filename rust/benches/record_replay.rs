@@ -1,0 +1,115 @@
+//! Bench: **record/replay cost** — what `--record` costs a live run,
+//! and how the offline replay's wall time compares to the run it
+//! reproduces.
+//!
+//! Three phases over the same 3-device mixed fleet (sort + checksum +
+//! stats, queue depth 2):
+//!   1. baseline live run,
+//!   2. the same run with `--record` tapping every frame to disk,
+//!   3. `coordinator::replay` of that log — no VM side, one thread.
+//!
+//! Printed: wall per phase, recording size, and the recording
+//! overhead / replay speed ratios. Shape assertions (lenient — CI
+//! runners are noisy):
+//!   * recording must not change per-device cycle counts (the tap is
+//!     an observer, not a participant), and
+//!   * the recorded run must stay within a generous overhead envelope
+//!     of the baseline (the tap is buffered sequential writes).
+//!
+//! Run: `cargo bench --bench record_replay`
+
+use std::time::Instant;
+
+use vmhdl::coordinator::cosim::CoSimCfg;
+use vmhdl::coordinator::replay::replay_dir;
+use vmhdl::coordinator::scenario::{self, ShardPolicy};
+use vmhdl::coordinator::stats::fmt_dur;
+use vmhdl::hdl::kernel::KernelKind;
+use vmhdl::link::recorder::REC_FILE;
+
+const RECORDS: usize = 8;
+const SEED: u64 = 0x2EC0;
+const DEPTH: usize = 2;
+
+fn fleet_cfg() -> CoSimCfg {
+    let mut cfg = CoSimCfg { devices: 3, ..Default::default() };
+    cfg.platform.kernel.n = 256;
+    cfg.device_kernel = vec![(1, KernelKind::Checksum), (2, KernelKind::Stats)];
+    cfg.seed = SEED;
+    cfg
+}
+
+fn main() {
+    println!("RECORD/REPLAY — 3-device mixed fleet, {RECORDS} records, depth {DEPTH}");
+
+    let t0 = Instant::now();
+    let (base, _) = scenario::run_sharded_offload_depth(
+        fleet_cfg(),
+        RECORDS,
+        SEED,
+        ShardPolicy::RoundRobin,
+        DEPTH,
+        None,
+    )
+    .expect("baseline run failed");
+    let live = t0.elapsed();
+
+    let dir = std::env::temp_dir().join(format!("vhrec-bench-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let mut cfg = fleet_cfg();
+    cfg.record = Some(dir.clone());
+    let t0 = Instant::now();
+    let (taped, _) = scenario::run_sharded_offload_depth(
+        cfg,
+        RECORDS,
+        SEED,
+        ShardPolicy::RoundRobin,
+        DEPTH,
+        None,
+    )
+    .expect("recorded run failed");
+    let recorded = t0.elapsed();
+    let log_bytes = std::fs::metadata(dir.join(REC_FILE)).map(|m| m.len()).unwrap_or(0);
+
+    // The tap must be a pure observer: same seed, same schedule, same
+    // per-device clocks whether or not the log is being written.
+    assert_eq!(
+        base.per_device_cycles, taped.per_device_cycles,
+        "recording changed device cycle counts"
+    );
+
+    let t0 = Instant::now();
+    let rep = replay_dir(&dir, None).expect("replay diverged from its own recording");
+    let replayed = t0.elapsed();
+    let _ = std::fs::remove_dir_all(&dir);
+
+    println!("{:>12}{:>14}{:>16}", "phase", "wall", "notes");
+    println!("{:>12}{:>14}{:>16}", "live", fmt_dur(live), "-");
+    println!(
+        "{:>12}{:>14}{:>16}",
+        "recorded",
+        fmt_dur(recorded),
+        format!("{log_bytes} B log")
+    );
+    println!(
+        "{:>12}{:>14}{:>16}",
+        "replay",
+        fmt_dur(replayed),
+        format!("{} frames", rep.compared)
+    );
+    println!(
+        "\noverhead: record {:.2}x live; replay {:.2}x live (single thread, no VM)",
+        recorded.as_secs_f64() / live.as_secs_f64().max(1e-9),
+        replayed.as_secs_f64() / live.as_secs_f64().max(1e-9),
+    );
+
+    assert!(rep.compared > 0, "replay compared no payload frames");
+    assert!(log_bytes > 0, "recording left no log on disk");
+    // Generous envelope: buffered sequential writes must not blow up
+    // the run. 10x + 500ms absorbs runner noise on tiny walls.
+    assert!(
+        recorded.as_secs_f64() < live.as_secs_f64() * 10.0 + 0.5,
+        "recording overhead exploded: {recorded:?} vs live {live:?}"
+    );
+    println!("OK: recording is a pure observer and the log replays bit-exactly");
+}

@@ -79,6 +79,9 @@ pub struct Config {
     pub ram_size: usize,
     /// VCD output path (empty = off).
     pub vcd: Option<PathBuf>,
+    /// Record every link frame to `<dir>/run.vhrec` for offline
+    /// VM-less replay (`--record dir`, then `vmhdl replay dir`).
+    pub record: Option<PathBuf>,
     /// Artifacts directory for the golden model (pjrt backend only).
     pub artifacts: PathBuf,
     /// Golden-check results against the selected backend.
@@ -138,6 +141,7 @@ impl Default for Config {
             seed: 0xC0FFEE,
             ram_size: 4 << 20,
             vcd: None,
+            record: None,
             artifacts: PathBuf::from("artifacts"),
             golden: false,
             backend: BackendKind::Native,
@@ -253,6 +257,7 @@ impl Config {
             }
             "ram-size" => self.ram_size = value.parse().map_err(|_| bad("ram-size"))?,
             "vcd" => self.vcd = Some(PathBuf::from(value)),
+            "record" => self.record = Some(PathBuf::from(value)),
             "artifacts" => self.artifacts = PathBuf::from(value),
             "golden" => self.golden = value.parse().map_err(|_| bad("golden"))?,
             "backend" => self.backend = value.parse()?,
@@ -480,6 +485,8 @@ impl Config {
             vcd: self.vcd.clone(),
             poll_interval: self.poll_interval,
             idle_sleep: Duration::from_micros(self.idle_sleep_us),
+            record: self.record.clone(),
+            seed: self.seed,
         })
     }
 }
@@ -532,6 +539,16 @@ mod tests {
         assert_eq!(c.records, 11, "flag after file must win");
         assert_eq!(c.sorter_latency, 1300);
         let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn record_knob() {
+        let mut c = Config::default();
+        assert!(c.record.is_none(), "recording must be off by default");
+        c.set("record", "/tmp/rec-dir").unwrap();
+        let cc = c.cosim().unwrap();
+        assert_eq!(cc.record.as_deref(), Some(std::path::Path::new("/tmp/rec-dir")));
+        assert_eq!(cc.seed, c.seed, "the workload seed must reach the recorder");
     }
 
     #[test]

@@ -31,6 +31,7 @@ use crate::hdl::platform::{Platform, PlatformCfg};
 use crate::hdl::signal::{ProbeFrame, Probed};
 use crate::hdl::sim::{Horizon, MergedHorizon, Scheduler, Sim, TickCtx};
 use crate::hdl::vcd::VcdWriter;
+use crate::link::recorder::{DeviceFinal, DeviceMeta, RecordMeta, RecorderSink};
 use crate::link::{Doorbell, Endpoint, ImpairCfg, LinkMode, Side};
 use crate::vm::Vmm;
 use crate::{Error, Result};
@@ -122,6 +123,15 @@ pub struct CoSimCfg {
     /// enables blocking on the link doorbell (the value itself only
     /// bounds how quickly a stop request is noticed while idle).
     pub idle_sleep: Duration,
+    /// Record every link frame (both directions, every device) into a
+    /// [`crate::link::recorder::REC_FILE`] log under this directory,
+    /// for offline VM-less replay (`vmhdl replay <dir>`). Requires an
+    /// in-process HDL side (the taps wrap the HDL endpoints).
+    pub record: Option<PathBuf>,
+    /// Workload seed stamped into the recording header — metadata for
+    /// humans reproducing the run; replay re-injects recorded frames
+    /// and never re-generates the workload.
+    pub seed: u64,
 }
 
 impl Default for CoSimCfg {
@@ -143,6 +153,8 @@ impl Default for CoSimCfg {
             // The testbed is single-core: an idle HDL side must not
             // starve the VM side (see EXPERIMENTS.md §Perf).
             idle_sleep: Duration::from_micros(20),
+            record: None,
+            seed: 0,
         }
     }
 }
@@ -202,29 +214,56 @@ pub struct HdlSideHandle {
     /// Live cycle counters, one per device lane.
     pub cycles: Vec<Arc<AtomicU64>>,
     handle: Option<std::thread::JoinHandle<Result<Vec<HdlReport>>>>,
+    /// Frame recorder to finalize on shutdown (`--record` runs only).
+    recorder: Option<RecorderSink>,
 }
 
 impl Drop for HdlSideHandle {
     /// An error-path drop (a scenario that failed before shutdown —
     /// e.g. a driver timeout over a blackholed link) must not leak a
-    /// retransmitting HDL thread for the rest of the process.
+    /// retransmitting HDL thread for the rest of the process — and
+    /// must not leave a truncated recording either: the partial log is
+    /// flushed (usable with `allow_partial`) but gets no trailer, so
+    /// replay can tell a crash log from a clean one.
     fn drop(&mut self) {
         self.stop.store(true, Ordering::Relaxed);
         if let Some(h) = self.handle.take() {
             let _ = h.join();
+        }
+        if let Some(sink) = self.recorder.take() {
+            sink.abort();
         }
     }
 }
 
 impl HdlSideHandle {
     /// Ask the side to stop and collect every lane's report (index =
-    /// device id).
+    /// device id). On a recording run this also finalizes the log:
+    /// clean shutdown writes the trailer (per-device final cycles and
+    /// record counts — the ground truth replay asserts against); an
+    /// errored run flushes the partial log without one.
     pub fn stop(mut self) -> Result<Vec<HdlReport>> {
         self.stop.store(true, Ordering::Relaxed);
-        match self.handle.take().unwrap().join() {
+        let joined = match self.handle.take().unwrap().join() {
             Ok(r) => r,
             Err(_) => Err(Error::hdl("HDL side panicked")),
+        };
+        if let Some(sink) = self.recorder.take() {
+            match &joined {
+                Ok(reports) => {
+                    let finals: Vec<DeviceFinal> = reports
+                        .iter()
+                        .map(|r| DeviceFinal {
+                            cycles: r.cycles,
+                            records_done: r.records_done,
+                        })
+                        .collect();
+                    sink.finish(&finals)?;
+                }
+                Err(_) => sink.abort(),
+            }
         }
+        joined
     }
 
     /// Current cycle of device 0 (live).
@@ -316,6 +355,53 @@ pub fn impair_for(cfg: &CoSimCfg, k: usize) -> Option<ImpairCfg> {
         .or(cfg.impair)
 }
 
+/// The `FromStr`-round-trippable spelling of a link mode (the link
+/// layer deliberately has no `Display` for it).
+fn link_mode_str(mode: LinkMode) -> &'static str {
+    match mode {
+        LinkMode::Mmio => "mmio",
+        LinkMode::Tlp => "tlp",
+    }
+}
+
+/// The recording header for a run of `cfg`: everything replay needs
+/// to rebuild cycle-identical platforms without the original CLI —
+/// one [`DeviceMeta`] per device with all overrides already resolved.
+pub fn record_meta_for(cfg: &CoSimCfg) -> RecordMeta {
+    let n = cfg.devices.max(1);
+    let devices = (0..n)
+        .map(|k| {
+            let pcfg = platform_cfg_for(cfg, k);
+            DeviceMeta {
+                kernel: pcfg.kernel.kind.to_string(),
+                n: pcfg.kernel.n as u64,
+                latency: pcfg.kernel.latency,
+                pipeline_records: pcfg.kernel.pipeline_records as u64,
+                link_mode: link_mode_str(pcfg.link_mode).to_string(),
+                bram_size: pcfg.bram_size as u64,
+                stream_fifo_depth: pcfg.stream_fifo_depth as u64,
+                poll_interval: pcfg.poll_interval,
+                device_index: k as u64,
+                impair: impair_for(cfg, k)
+                    .filter(|ic| !ic.is_null())
+                    .map(|ic| format!("{ic:?}"))
+                    .unwrap_or_default(),
+            }
+        })
+        .collect();
+    RecordMeta {
+        seed: cfg.seed,
+        scenario: format!("devices={n} mode={}", link_mode_str(cfg.mode)),
+        git: crate::link::recorder::git_describe(),
+        impair: cfg
+            .impair
+            .filter(|ic| !ic.is_null())
+            .map(|ic| format!("{ic:?}"))
+            .unwrap_or_default(),
+        devices,
+    }
+}
+
 /// Per-device VCD path: device 0 records to `path` itself; device k
 /// to `<stem>-devk.<ext>` next to it.
 pub fn vcd_path_for_device(path: &std::path::Path, device: usize) -> PathBuf {
@@ -333,17 +419,22 @@ pub fn vcd_path_for_device(path: &std::path::Path, device: usize) -> PathBuf {
 /// shared — an idle device consumes no device time no matter how busy
 /// its neighbours are, which is what keeps per-device cycle counts a
 /// pure function of that device's own message sequence.
-struct HdlLane {
-    platform: Platform,
-    link: Endpoint,
-    sim: Sim,
-    sched: Scheduler,
+pub(crate) struct HdlLane {
+    pub(crate) platform: Platform,
+    pub(crate) link: Endpoint,
+    pub(crate) sim: Sim,
+    pub(crate) sched: Scheduler,
     vcd: Option<VcdWriter<std::io::BufWriter<std::fs::File>>>,
     frame: ProbeFrame,
 }
 
 impl HdlLane {
-    fn new(platform: Platform, link: Endpoint, device: usize, cfg: &CoSimCfg) -> Result<Self> {
+    pub(crate) fn new(
+        platform: Platform,
+        link: Endpoint,
+        device: usize,
+        cfg: &CoSimCfg,
+    ) -> Result<Self> {
         let vcd = match &cfg.vcd {
             Some(path) => {
                 let path = vcd_path_for_device(path, device);
@@ -363,14 +454,14 @@ impl HdlLane {
     }
 
     /// This lane's next-event horizon at its own clock.
-    fn horizon(&self) -> Horizon {
+    pub(crate) fn horizon(&self) -> Horizon {
         self.platform.next_event(self.sim.cycle, &self.sim.forces)
     }
 
     /// Drain the link outside a tick, injecting payload messages into
     /// the bridge (control-only traffic consumes no device time).
     /// Returns the number of payload messages injected.
-    fn drain_inject(&mut self, inbox: &mut Vec<crate::link::Msg>) -> Result<usize> {
+    pub(crate) fn drain_inject(&mut self, inbox: &mut Vec<crate::link::Msg>) -> Result<usize> {
         inbox.clear();
         let n = self.link.poll_into(inbox)?;
         for m in inbox.drain(..) {
@@ -383,7 +474,7 @@ impl HdlLane {
     /// provably idle `At` gaps, until the platform reports `Idle` (or
     /// `stop`). Identical per-device semantics to the PR 1 single
     /// device loop — this *is* that loop, factored per lane.
-    fn run_busy(&mut self, stop: &AtomicBool, cycles_out: &AtomicU64) -> Result<()> {
+    pub(crate) fn run_busy(&mut self, stop: &AtomicBool, cycles_out: &AtomicU64) -> Result<()> {
         let busy0 = std::time::Instant::now();
         loop {
             let ctx = TickCtx { cycle: self.sim.cycle, forces: &self.sim.forces };
@@ -741,6 +832,12 @@ impl CoSim {
         );
         match &cfg.transport {
             TransportKind::InProc | TransportKind::Udp { hdl_in_proc: true, .. } => {
+                // Frame recording taps the HDL-side endpoints, so it
+                // needs them in this process.
+                let recorder = match &cfg.record {
+                    Some(dir) => Some(RecorderSink::create(dir, &record_meta_for(&cfg))?),
+                    None => None,
+                };
                 let mut vm_eps = Vec::with_capacity(n);
                 let mut lanes = Vec::with_capacity(n);
                 let mut cycles = Vec::with_capacity(n);
@@ -766,6 +863,13 @@ impl CoSim {
                         vm_ep.impair(&ic);
                         hdl_ep.impair(&ic);
                     }
+                    if let Some(sink) = &recorder {
+                        // After `impair`: the tap must wrap outermost
+                        // on tx so the log holds the frames the
+                        // platform *meant* to send (pre-impairment),
+                        // while rx logs what actually arrived.
+                        hdl_ep.record(sink);
+                    }
                     let pcfg = platform_cfg_for(&cfg, k);
                     kernel_ids.push(pcfg.kernel.kind.id());
                     lanes.push((Platform::new(pcfg), hdl_ep));
@@ -781,10 +885,21 @@ impl CoSim {
                 Ok(CoSim {
                     cfg,
                     vmm,
-                    hdl: Some(HdlSideHandle { stop, cycles, handle: Some(handle) }),
+                    hdl: Some(HdlSideHandle {
+                        stop,
+                        cycles,
+                        handle: Some(handle),
+                        recorder,
+                    }),
                 })
             }
             TransportKind::Udp { port, hdl_in_proc: false } => {
+                if cfg.record.is_some() {
+                    return Err(Error::cosim(
+                        "--record needs the HDL side in this process \
+                         (inproc, or udp with an in-proc HDL side)",
+                    ));
+                }
                 let session = super::lifecycle::fresh_session();
                 let mut vm_eps = Vec::with_capacity(n);
                 let mut kernel_ids = Vec::with_capacity(n);
@@ -801,6 +916,12 @@ impl CoSim {
                 Ok(CoSim { cfg, vmm, hdl: None })
             }
             TransportKind::Uds(dir) => {
+                if cfg.record.is_some() {
+                    return Err(Error::cosim(
+                        "--record needs the HDL side in this process \
+                         (inproc, or udp with an in-proc HDL side)",
+                    ));
+                }
                 // A fresh session id per incarnation — the pid alone
                 // is NOT enough (a relaunched VM in the same process
                 // would be mistaken for the old incarnation and its
@@ -1013,6 +1134,44 @@ mod tests {
         let err = drv.probe(&mut env).unwrap_err();
         assert!(err.to_string().contains("bound to device"), "{err}");
         cosim.shutdown_all().unwrap();
+    }
+
+    #[test]
+    fn record_run_writes_decodable_log_with_trailer() {
+        let dir = std::env::temp_dir().join(format!("vmhdl-rec-test-{}", std::process::id()));
+        let cfg = CoSimCfg { record: Some(dir.clone()), seed: 0xBEEF, ..Default::default() };
+        let mut cosim = CoSim::launch(cfg).unwrap();
+        let mut hook = NoopHook;
+        let mut env = GuestEnv::new(&mut cosim.vmm, &mut hook);
+        let mut drv = SortDriver::new(1024);
+        drv.timeout = Duration::from_secs(30);
+        drv.probe(&mut env).unwrap();
+        app::run_sort(&mut env, &mut drv, 1, 0xBEEF).unwrap();
+        let hdl = cosim.shutdown().unwrap();
+        let rec = crate::link::recorder::read_recording(&dir, false).unwrap();
+        assert_eq!(rec.meta.seed, 0xBEEF);
+        assert_eq!(rec.meta.devices.len(), 1);
+        assert_eq!(rec.meta.devices[0].kernel, "sort");
+        assert!(!rec.events.is_empty(), "no frames recorded");
+        assert!(!rec.partial);
+        let trailer = rec.trailer.expect("clean shutdown must write a trailer");
+        assert_eq!(trailer.len(), 1);
+        assert_eq!(trailer[0].cycles, hdl.cycles);
+        assert_eq!(trailer[0].records_done, 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn record_requires_in_process_hdl_side() {
+        let dir = std::env::temp_dir().join("vmhdl-rec-reject");
+        let cfg = CoSimCfg {
+            record: Some(dir.clone()),
+            transport: TransportKind::Uds(std::env::temp_dir().join("vmhdl-rec-uds")),
+            ..Default::default()
+        };
+        let err = CoSim::launch(cfg).unwrap_err();
+        assert!(err.to_string().contains("record"), "{err}");
+        assert!(!dir.join("run.vhrec").exists(), "rejected launch must not create a log");
     }
 
     #[test]

@@ -6,8 +6,10 @@
 
 pub mod cosim;
 pub mod lifecycle;
+pub mod replay;
 pub mod scenario;
 pub mod stats;
 
 pub use cosim::{CoSim, CoSimCfg, HdlSideHandle, TransportKind};
+pub use replay::{replay_dir, replay_recording, ReplayReport};
 pub use scenario::{ScenarioReport, ShardPolicy, ShardedReport, TimeGap};

@@ -1,0 +1,514 @@
+//! VM-less offline replay of a recorded co-simulation run.
+//!
+//! A recording (see [`crate::link::recorder`]) holds every link frame
+//! that crossed each device's channels, in arrival order. Because a
+//! device's clock advances only as a function of its own message
+//! sequence — never of wall-clock (the PR 1 determinism invariant) —
+//! feeding the recorded guest→device frames back into fresh platform
+//! lanes reproduces the run exactly: same device→guest byte stream,
+//! same per-device final cycle counts. No VM, no guest driver, no
+//! threads — the whole replay is one deterministic inline loop, so a
+//! CI failure with a recording attached becomes a single-process
+//! repro under a debugger.
+//!
+//! The walk is *gated*: inject one recorded guest→device frame, run
+//! every lane to quiescence, compare whatever the devices said back
+//! against the recorded device→guest stream, repeat. Divergence is
+//! reported with the recording's global event index, the channel, and
+//! a hex diff of the first differing frame.
+//!
+//! Teardown is trivial by construction: the lanes live on this
+//! thread, so an early divergence return cannot orphan anything (the
+//! recording side's counterpart — flushing a partial log when the
+//! *recording* run errors — lives in
+//! [`super::cosim::HdlSideHandle::stop`] and its `Drop`).
+
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicU64};
+
+use crate::hdl::kernel::{KernelCfg, KernelKind};
+use crate::hdl::platform::{Platform, PlatformCfg};
+use crate::hdl::sim::Horizon;
+use crate::link::recorder::{read_recording, DeviceMeta, Dir, Recording};
+use crate::link::{Endpoint, LinkMode, Msg, ReplayTaps};
+use crate::{Error, Result};
+
+use super::cosim::{CoSimCfg, HdlLane};
+
+/// What a replay run did and found. Returned on *success* — any
+/// divergence is an [`Error::Cosim`] instead, carrying the diff.
+#[derive(Debug, Clone, Default)]
+pub struct ReplayReport {
+    /// Devices rebuilt from the recording header.
+    pub devices: usize,
+    /// Total events in the recording (both directions).
+    pub events: usize,
+    /// Guest→device frames injected.
+    pub injected: usize,
+    /// Device→guest payload frames byte-compared against the log.
+    pub compared: usize,
+    /// Final cycle counter per device (matches the trailer when the
+    /// recording has one).
+    pub per_device_cycles: Vec<u64>,
+    /// Final kernel record count per device.
+    pub per_device_records: Vec<u64>,
+    /// True if the recording was a partial (crash) log: the replay
+    /// ran the recorded prefix and the trailer checks were skipped.
+    pub partial: bool,
+    /// True if the walk forked through a snapshot/restore checkpoint.
+    pub checkpoint_forked: bool,
+}
+
+/// Replay the recording under `dir` (see
+/// [`crate::link::recorder::REC_FILE`]). `checkpoint` = fork the run
+/// through a [`Platform::snapshot`]/[`Platform::restore`] round-trip
+/// after that many injected frames — proving a mid-run checkpoint is
+/// a valid fork point, not just byte soup.
+pub fn replay_dir(dir: &Path, checkpoint: Option<usize>) -> Result<ReplayReport> {
+    let rec = read_recording(dir, true)?;
+    replay_recording(&rec, checkpoint)
+}
+
+/// Replay an already-decoded [`Recording`]. See [`replay_dir`].
+pub fn replay_recording(rec: &Recording, checkpoint: Option<usize>) -> Result<ReplayReport> {
+    let n = rec.meta.devices.len();
+    if n == 0 {
+        return Err(Error::cosim("replay: recording header lists no devices"));
+    }
+    for (i, ev) in rec.events.iter().enumerate() {
+        if ev.device as usize >= n {
+            return Err(Error::cosim(format!(
+                "replay: event {i} names device {} but the header lists {n}",
+                ev.device
+            )));
+        }
+    }
+
+    // -- rebuild one lane per device, exactly as the recorded run
+    // elaborated it, with the VM-side transport halves as raw taps.
+    let mut pcfgs = Vec::with_capacity(n);
+    let mut lanes: Vec<HdlLane> = Vec::with_capacity(n);
+    let mut taps: Vec<ReplayTaps> = Vec::with_capacity(n);
+    for (k, meta) in rec.meta.devices.iter().enumerate() {
+        let pcfg = platform_cfg_from_meta(meta)?;
+        let (mut link, tap) = Endpoint::inproc_hdl_with_taps(k as u8);
+        if !meta.impair.is_empty() || !rec.meta.impair.is_empty() {
+            // The recorded arrivals include whatever the impaired wire
+            // delivered (dups, mangled frames); the replayed endpoint
+            // must tolerate them exactly like the live one did.
+            link.set_loss_tolerant(true);
+        }
+        let lane_cfg = CoSimCfg { poll_interval: pcfg.poll_interval, ..CoSimCfg::default() };
+        lanes.push(HdlLane::new(Platform::new(pcfg.clone()), link, k, &lane_cfg)?);
+        taps.push(tap);
+        pcfgs.push(pcfg);
+    }
+
+    // -- the expected device→guest stream: first transmissions of
+    // payload frames, per (device, channel), in log order. Control
+    // frames (acks, handshakes) and retransmissions (seq at or below
+    // the high-water mark) are reliability chatter, not behaviour.
+    let mut expected: Vec<Vec<ExpectedFrame>> = vec![Vec::new(); n * 2];
+    let mut rec_watermark: Vec<Option<u64>> = vec![None; n * 2];
+    for (i, ev) in rec.events.iter().enumerate() {
+        if ev.dir != Dir::DeviceToGuest {
+            continue;
+        }
+        let slot = ev.device as usize * 2 + (ev.chan & 1) as usize;
+        if payload_seq(&ev.bytes, &mut rec_watermark[slot]) {
+            expected[slot].push(ExpectedFrame { index: i, bytes: ev.bytes.clone() });
+        }
+    }
+    // Cursor into each slot's expected stream, and the replayed
+    // stream's own retransmission watermarks.
+    let mut cursor = vec![0usize; n * 2];
+    let mut replay_watermark: Vec<Option<u64>> = vec![None; n * 2];
+
+    let stop = AtomicBool::new(false);
+    let cycles_scratch = AtomicU64::new(0);
+    let mut inbox: Vec<Msg> = Vec::with_capacity(32);
+    let mut compared = 0usize;
+    let mut injected = 0usize;
+    let mut checkpoint_forked = false;
+
+    // Priming busy pass, mirroring `run_hdl_multi_loop`: the live
+    // loop ticks each lane once on entry before first idling, so
+    // cycle offsets must match.
+    for lane in lanes.iter_mut() {
+        lane.run_busy(&stop, &cycles_scratch)?;
+    }
+    observe_and_compare(
+        &mut taps, &expected, &mut cursor, &mut replay_watermark, &mut compared,
+    )?;
+
+    // -- the gated walk.
+    for ev in rec.events.iter() {
+        if ev.dir != Dir::GuestToDevice {
+            continue;
+        }
+        taps[ev.device as usize].inject(ev.chan, &ev.bytes)?;
+        injected += 1;
+        settle(&mut lanes, &stop, &cycles_scratch, &mut inbox)?;
+        observe_and_compare(
+            &mut taps, &expected, &mut cursor, &mut replay_watermark, &mut compared,
+        )?;
+        if checkpoint == Some(injected) {
+            fork_through_snapshot(&mut lanes, &pcfgs)?;
+            checkpoint_forked = true;
+        }
+    }
+    settle(&mut lanes, &stop, &cycles_scratch, &mut inbox)?;
+    observe_and_compare(
+        &mut taps, &expected, &mut cursor, &mut replay_watermark, &mut compared,
+    )?;
+    if let Some(k) = checkpoint {
+        if !checkpoint_forked {
+            return Err(Error::cosim(format!(
+                "replay: checkpoint after {k} frames never reached \
+                 (recording has {injected} guest→device frames)"
+            )));
+        }
+    }
+
+    // -- every expected frame must have been produced. (A partial log
+    // legitimately stops mid-stream on the *guest→device* side, but
+    // frames the log says the device sent must still appear.)
+    for (slot, exp) in expected.iter().enumerate() {
+        if cursor[slot] < exp.len() {
+            let missing = &exp[cursor[slot]];
+            return Err(Error::cosim(format!(
+                "replay divergence: device {} chan {} never produced recorded \
+                 event {} ({} more expected): {}",
+                slot / 2,
+                slot % 2,
+                missing.index,
+                exp.len() - cursor[slot],
+                frame_label(&missing.bytes),
+            )));
+        }
+    }
+
+    // -- trailer: per-device final cycles and record counts, bit-exact.
+    let per_device_cycles: Vec<u64> = lanes.iter().map(|l| l.sim.cycle).collect();
+    let per_device_records: Vec<u64> =
+        lanes.iter().map(|l| l.platform.kernel.status().records_done).collect();
+    if let Some(finals) = &rec.trailer {
+        if finals.len() != n {
+            return Err(Error::cosim(format!(
+                "replay: trailer covers {} devices, header lists {n}",
+                finals.len()
+            )));
+        }
+        for (k, f) in finals.iter().enumerate() {
+            if per_device_cycles[k] != f.cycles {
+                return Err(Error::cosim(format!(
+                    "replay divergence: device {k} finished at cycle {} \
+                     but the recording says {}",
+                    per_device_cycles[k], f.cycles
+                )));
+            }
+            if per_device_records[k] != f.records_done {
+                return Err(Error::cosim(format!(
+                    "replay divergence: device {k} completed {} records \
+                     but the recording says {}",
+                    per_device_records[k], f.records_done
+                )));
+            }
+        }
+    }
+
+    Ok(ReplayReport {
+        devices: n,
+        events: rec.events.len(),
+        injected,
+        compared,
+        per_device_cycles,
+        per_device_records,
+        partial: rec.partial,
+        checkpoint_forked,
+    })
+}
+
+struct ExpectedFrame {
+    /// Global index in `Recording::events` (for divergence reports).
+    index: usize,
+    bytes: Vec<u8>,
+}
+
+/// Rebuild device `meta`'s platform configuration from the recording
+/// header (the header stores `FromStr` spellings, so this round-trips
+/// without the link layer depending on `hdl::` types).
+pub fn platform_cfg_from_meta(meta: &DeviceMeta) -> Result<PlatformCfg> {
+    let kind: KernelKind = meta.kernel.parse()?;
+    let link_mode: LinkMode = meta.link_mode.parse()?;
+    Ok(PlatformCfg {
+        kernel: KernelCfg {
+            kind,
+            n: meta.n as usize,
+            latency: meta.latency,
+            pipeline_records: meta.pipeline_records as usize,
+        },
+        link_mode,
+        bram_size: meta.bram_size as usize,
+        stream_fifo_depth: meta.stream_fifo_depth as usize,
+        poll_interval: meta.poll_interval,
+        device_index: meta.device_index as usize,
+    })
+}
+
+/// Does `frame` hold a **first-transmission payload** message? Updates
+/// the per-stream watermark. Undecodable frames (impairment mangling),
+/// control chatter, unreliable datagrams and retransmissions all
+/// return false — they carry no replayable behaviour.
+fn payload_seq(frame: &[u8], watermark: &mut Option<u64>) -> bool {
+    let Ok((seq, _dev, msg)) = Msg::decode_on(frame) else {
+        return false;
+    };
+    if msg.is_control() || msg.is_unreliable() {
+        return false;
+    }
+    if watermark.is_some_and(|w| seq <= w) {
+        return false; // retransmission
+    }
+    *watermark = Some(seq);
+    true
+}
+
+/// Run every lane to provable quiescence: busy-run non-idle lanes,
+/// drain buffered link input into idle ones (outside a tick, exactly
+/// like the live loop's idle phase — control traffic must consume no
+/// device time), and repeat until nothing makes progress.
+fn settle(
+    lanes: &mut [HdlLane],
+    stop: &AtomicBool,
+    cycles_scratch: &AtomicU64,
+    inbox: &mut Vec<Msg>,
+) -> Result<()> {
+    loop {
+        let mut progress = false;
+        for lane in lanes.iter_mut() {
+            if lane.horizon() != Horizon::Idle {
+                lane.run_busy(stop, cycles_scratch)?;
+                progress = true;
+            }
+            if lane.link.rx_ready()? {
+                lane.drain_inject(inbox)?;
+                progress = true;
+            }
+        }
+        if !progress {
+            return Ok(());
+        }
+    }
+}
+
+/// Drain the observe taps and byte-compare every replayed
+/// first-transmission payload frame against the recorded stream.
+fn observe_and_compare(
+    taps: &mut [ReplayTaps],
+    expected: &[Vec<ExpectedFrame>],
+    cursor: &mut [usize],
+    replay_watermark: &mut [Option<u64>],
+    compared: &mut usize,
+) -> Result<()> {
+    for (k, tap) in taps.iter_mut().enumerate() {
+        for chan in 0..2u8 {
+            let slot = k * 2 + chan as usize;
+            while let Some(frame) = tap.observe(chan)? {
+                if !payload_seq(&frame, &mut replay_watermark[slot]) {
+                    continue;
+                }
+                let Some(exp) = expected[slot].get(cursor[slot]) else {
+                    return Err(Error::cosim(format!(
+                        "replay divergence: device {k} chan {chan} produced an \
+                         extra frame beyond the recorded stream: {}",
+                        frame_label(&frame),
+                    )));
+                };
+                if exp.bytes != frame {
+                    return Err(Error::cosim(diff_report(
+                        k, chan, exp.index, &exp.bytes, &frame,
+                    )));
+                }
+                cursor[slot] += 1;
+                *compared += 1;
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Snapshot every lane's platform, restore each into a freshly built
+/// same-geometry platform, and continue the walk on the restored
+/// copies — the mid-run checkpoint fork.
+fn fork_through_snapshot(lanes: &mut [HdlLane], pcfgs: &[PlatformCfg]) -> Result<()> {
+    for (lane, pcfg) in lanes.iter_mut().zip(pcfgs.iter()) {
+        let blob = lane.platform.snapshot(lane.sim.cycle);
+        let mut fresh = Platform::new(pcfg.clone());
+        let cycle = fresh.restore(&blob)?;
+        if cycle != lane.sim.cycle {
+            return Err(Error::cosim(format!(
+                "replay checkpoint: snapshot says cycle {cycle}, lane is at {}",
+                lane.sim.cycle
+            )));
+        }
+        lane.platform = fresh;
+    }
+    Ok(())
+}
+
+/// Short human label for a frame in an error message.
+fn frame_label(frame: &[u8]) -> String {
+    match Msg::decode_on(frame) {
+        Ok((seq, dev, msg)) => {
+            format!("{} (seq {seq}, dev {dev}, {} bytes)", msg.label(), frame.len())
+        }
+        Err(_) => format!("undecodable frame ({} bytes)", frame.len()),
+    }
+}
+
+/// First-divergent-frame report: event index, channel, decoded labels
+/// and a bounded hex diff around the first differing byte.
+fn diff_report(device: usize, chan: u8, index: usize, want: &[u8], got: &[u8]) -> String {
+    let at = want
+        .iter()
+        .zip(got.iter())
+        .position(|(a, b)| a != b)
+        .unwrap_or_else(|| want.len().min(got.len()));
+    let window = |b: &[u8]| -> String {
+        let lo = at.saturating_sub(8);
+        let hi = (at + 24).min(b.len());
+        let mut s = String::new();
+        for (i, byte) in b.iter().enumerate().take(hi).skip(lo) {
+            if i == at {
+                s.push('[');
+            }
+            s.push_str(&format!("{byte:02x}"));
+            if i == at {
+                s.push(']');
+            }
+            s.push(' ');
+        }
+        s.trim_end().to_string()
+    };
+    format!(
+        "replay divergence at recorded event {index}: device {device} chan {chan} \
+         byte {at}: recorded {} ({} bytes: {}) vs replayed {} ({} bytes: {})",
+        frame_label(want),
+        want.len(),
+        window(want),
+        frame_label(got),
+        got.len(),
+        window(got),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::link::recorder::{DeviceFinal, FrameEvent, RecordMeta, Recording};
+
+    fn meta_1dev() -> RecordMeta {
+        RecordMeta {
+            devices: vec![DeviceMeta {
+                kernel: "sort".into(),
+                n: 1024,
+                latency: KernelKind::Sort.default_latency(1024),
+                pipeline_records: 8,
+                link_mode: "mmio".into(),
+                bram_size: 64 * 1024,
+                stream_fifo_depth: 64,
+                poll_interval: 1,
+                device_index: 0,
+                impair: String::new(),
+            }],
+            ..RecordMeta::default()
+        }
+    }
+
+    #[test]
+    fn empty_recording_replays_to_zero_cycles() {
+        let rec = Recording {
+            meta: meta_1dev(),
+            events: Vec::new(),
+            trailer: None,
+            partial: false,
+        };
+        let rep = replay_recording(&rec, None).unwrap();
+        assert_eq!(rep.devices, 1);
+        assert_eq!(rep.injected, 0);
+        assert_eq!(rep.compared, 0);
+        // The priming busy pass on a fresh platform is a no-op tick
+        // pattern identical to the live loop's entry.
+        assert_eq!(rep.per_device_records, vec![0]);
+    }
+
+    #[test]
+    fn headerless_devices_rejected() {
+        let rec = Recording {
+            meta: RecordMeta::default(),
+            events: Vec::new(),
+            trailer: None,
+            partial: false,
+        };
+        let err = replay_recording(&rec, None).unwrap_err();
+        assert!(err.to_string().contains("no devices"), "{err}");
+    }
+
+    #[test]
+    fn out_of_range_device_rejected() {
+        let rec = Recording {
+            meta: meta_1dev(),
+            events: vec![FrameEvent {
+                dir: Dir::GuestToDevice,
+                device: 3,
+                chan: 0,
+                bytes: vec![0; 4],
+            }],
+            trailer: None,
+            partial: false,
+        };
+        let err = replay_recording(&rec, None).unwrap_err();
+        assert!(err.to_string().contains("device 3"), "{err}");
+    }
+
+    #[test]
+    fn mismatched_trailer_is_divergence() {
+        // An empty event stream with a trailer claiming cycles the
+        // devices never ran must be reported as divergence, not
+        // silently accepted.
+        let rec = Recording {
+            meta: meta_1dev(),
+            events: Vec::new(),
+            trailer: Some(vec![DeviceFinal { cycles: 12345, records_done: 7 }]),
+            partial: false,
+        };
+        let err = replay_recording(&rec, None).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("divergence"), "{msg}");
+        assert!(msg.contains("12345"), "{msg}");
+    }
+
+    #[test]
+    fn diff_report_marks_first_differing_byte() {
+        let a = Msg::MmioReadResp { tag: 1, data: vec![1, 2, 3, 4] }.encode_on(5, 0);
+        let mut b = a.clone();
+        let last = b.len() - 1;
+        b[last] ^= 0xFF;
+        let s = diff_report(0, 1, 42, &a, &b);
+        assert!(s.contains("event 42"), "{s}");
+        assert!(s.contains("chan 1"), "{s}");
+        assert!(s.contains('['), "{s}");
+    }
+
+    #[test]
+    fn watermark_filters_retransmissions_and_control() {
+        let payload = Msg::MmioReadResp { tag: 1, data: vec![0; 4] }.encode_on(3, 0);
+        let ctrl = Msg::Ack { up_to: 3 }.encode_on(0, 0);
+        let mut wm = None;
+        assert!(payload_seq(&payload, &mut wm));
+        assert!(!payload_seq(&payload, &mut wm), "retransmission must filter");
+        assert!(!payload_seq(&ctrl, &mut wm), "control chatter must filter");
+        assert!(!payload_seq(&[0xde, 0xad], &mut wm), "garbage must filter");
+    }
+}

@@ -7,6 +7,7 @@
 use super::axi::{resp, LiteAr, LiteAw, LiteB, LiteR, LiteW};
 use super::sim::{Fifo, Horizon};
 use super::signal::{ProbeSink, Probed};
+use super::snapshot::{get_opt, put_opt, SnapReader, SnapWriter};
 
 /// The BRAM module.
 pub struct Bram {
@@ -96,6 +97,34 @@ impl Bram {
                 self.pend_w = None;
             }
         }
+    }
+
+    /// Serialize memory contents + pending write + counters.
+    pub fn save_state(&self, w: &mut SnapWriter) {
+        w.put_bytes(&self.mem);
+        put_opt(w, &self.pend_aw);
+        put_opt(w, &self.pend_w);
+        w.put_u64(self.reads);
+        w.put_u64(self.writes);
+    }
+
+    /// Restore state saved by [`Bram::save_state`]. The memory size is
+    /// geometry: a snapshot from a different-sized BRAM is rejected.
+    pub fn load_state(&mut self, r: &mut SnapReader) -> crate::Result<()> {
+        let mem = r.get_vec("bram.mem")?;
+        if mem.len() != self.mem.len() {
+            return Err(crate::Error::hdl(format!(
+                "snapshot bram holds {} bytes, this bram has {}",
+                mem.len(),
+                self.mem.len()
+            )));
+        }
+        self.mem = mem;
+        self.pend_aw = get_opt(r, "bram.pend_aw")?;
+        self.pend_w = get_opt(r, "bram.pend_w")?;
+        self.reads = r.get_u64("bram.reads")?;
+        self.writes = r.get_u64("bram.writes")?;
+        Ok(())
     }
 }
 

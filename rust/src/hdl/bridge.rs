@@ -49,6 +49,7 @@ use std::collections::VecDeque;
 use super::axi::{resp, Ar, Aw, LiteAr, LiteAw, LiteW, B, R, W, DATA_BYTES};
 use super::interconnect::LitePort;
 use super::sim::{Fifo, Horizon, TickCtx};
+use super::snapshot::{self, SnapReader, SnapWriter};
 use super::signal::{ProbeSink, Probed};
 use crate::link::{Endpoint, LinkMode, Msg};
 use crate::pcie::tlp::{self, Tlp};
@@ -594,6 +595,110 @@ impl Bridge {
         // TLP tags are 8-bit; skip 0 and avoid colliding live tags.
         self.next_tag = if self.next_tag >= 0xFF { 1 } else { self.next_tag + 1 };
         t
+    }
+
+    /// Serialize mutable state (queues, in-flight transactions, irq
+    /// levels, counters). Geometry — mode, BAR windows, poll interval —
+    /// is rebuilt from config; `poll_buf` is drained within each tick
+    /// and therefore always empty between cycles.
+    pub fn save_state(&self, w: &mut SnapWriter) {
+        snapshot::put_seq(w, self.mmio_queue.iter());
+        match self.lite_rd_inflight {
+            Some((tag, len)) => {
+                w.put_bool(true);
+                w.put_u64(tag);
+                w.put_u32(len);
+            }
+            None => w.put_bool(false),
+        }
+        w.put_bool(self.lite_wr_inflight);
+        w.put_u64(self.dma_reads.len() as u64);
+        for p in &self.dma_reads {
+            w.put_u64(p.tag);
+            w.put_bytes(&p.data);
+            w.put_bool(p.ready);
+            w.put_usize(p.beats_emitted);
+            w.put_usize(p.beats_total);
+            w.put_u8(p.axi_id);
+        }
+        w.put_u64(self.dma_rd_resume_at);
+        w.put_u64(self.next_tag);
+        match &self.wr_collect {
+            Some((addr, len, id, data)) => {
+                w.put_bool(true);
+                w.put_u64(*addr);
+                w.put_u8(*len);
+                w.put_u8(*id);
+                w.put_bytes(data);
+            }
+            None => w.put_bool(false),
+        }
+        for p in self.irq_prev {
+            w.put_bool(p);
+        }
+        for c in [
+            self.mmio_reads,
+            self.mmio_writes,
+            self.dma_read_reqs,
+            self.dma_write_reqs,
+            self.irqs_sent,
+            self.slverrs_seen,
+            self.idle_polls,
+        ] {
+            w.put_u64(c);
+        }
+    }
+
+    /// Restore state saved by [`Bridge::save_state`].
+    pub fn load_state(&mut self, r: &mut SnapReader) -> Result<()> {
+        let mmio: Vec<Msg> = snapshot::get_seq(r, "bridge.mmio_queue")?;
+        self.mmio_queue = mmio.into();
+        self.lite_rd_inflight = if r.get_bool("bridge.lite_rd_inflight")? {
+            Some((r.get_u64("bridge.lite_rd_tag")?, r.get_u32("bridge.lite_rd_len")?))
+        } else {
+            None
+        };
+        self.lite_wr_inflight = r.get_bool("bridge.lite_wr_inflight")?;
+        let n = r.get_usize("bridge.dma_reads.len")?;
+        if n > 64 {
+            return Err(crate::Error::hdl(format!(
+                "snapshot bridge.dma_reads claims {n} pending bursts"
+            )));
+        }
+        self.dma_reads.clear();
+        for _ in 0..n {
+            self.dma_reads.push_back(PendingRead {
+                tag: r.get_u64("bridge.pending.tag")?,
+                data: r.get_vec("bridge.pending.data")?,
+                ready: r.get_bool("bridge.pending.ready")?,
+                beats_emitted: r.get_usize("bridge.pending.beats_emitted")?,
+                beats_total: r.get_usize("bridge.pending.beats_total")?,
+                axi_id: r.get_u8("bridge.pending.axi_id")?,
+            });
+        }
+        self.dma_rd_resume_at = r.get_u64("bridge.dma_rd_resume_at")?;
+        self.next_tag = r.get_u64("bridge.next_tag")?;
+        self.wr_collect = if r.get_bool("bridge.wr_collect")? {
+            Some((
+                r.get_u64("bridge.wr_collect.addr")?,
+                r.get_u8("bridge.wr_collect.len")?,
+                r.get_u8("bridge.wr_collect.id")?,
+                r.get_vec("bridge.wr_collect.data")?,
+            ))
+        } else {
+            None
+        };
+        for p in self.irq_prev.iter_mut() {
+            *p = r.get_bool("bridge.irq_prev")?;
+        }
+        self.mmio_reads = r.get_u64("bridge.mmio_reads")?;
+        self.mmio_writes = r.get_u64("bridge.mmio_writes")?;
+        self.dma_read_reqs = r.get_u64("bridge.dma_read_reqs")?;
+        self.dma_write_reqs = r.get_u64("bridge.dma_write_reqs")?;
+        self.irqs_sent = r.get_u64("bridge.irqs_sent")?;
+        self.slverrs_seen = r.get_u64("bridge.slverrs_seen")?;
+        self.idle_polls = r.get_u64("bridge.idle_polls")?;
+        Ok(())
     }
 }
 

@@ -69,6 +69,7 @@ use super::axi::{
 };
 use super::sim::{Fifo, Horizon};
 use super::signal::{ProbeSink, Probed};
+use super::snapshot::{get_opt, get_seq, put_opt, put_seq, SnapReader, SnapWriter};
 
 /// DMA register offsets (within the DMA's AXI-Lite window).
 ///
@@ -247,6 +248,38 @@ impl Chan {
     fn irq_threshold(&self) -> u32 {
         ((self.cr & cr::IRQ_THRESHOLD_MASK) >> cr::IRQ_THRESHOLD_SHIFT).max(1)
     }
+
+    fn save_state(&self, w: &mut SnapWriter) {
+        w.put_u32(self.cr);
+        w.put_u32(self.sr_irq);
+        w.put_bool(self.err);
+        w.put_u64(self.addr);
+        w.put_u8(match self.state {
+            ChanState::Halted => 0,
+            ChanState::Idle => 1,
+            ChanState::Active => 2,
+        });
+        w.put_u32(self.bytes_total);
+    }
+
+    fn load_state(&mut self, r: &mut SnapReader) -> crate::Result<()> {
+        self.cr = r.get_u32("dma.chan.cr")?;
+        self.sr_irq = r.get_u32("dma.chan.sr_irq")?;
+        self.err = r.get_bool("dma.chan.err")?;
+        self.addr = r.get_u64("dma.chan.addr")?;
+        self.state = match r.get_u8("dma.chan.state")? {
+            0 => ChanState::Halted,
+            1 => ChanState::Idle,
+            2 => ChanState::Active,
+            v => {
+                return Err(crate::Error::hdl(format!(
+                    "snapshot dma.chan.state has invalid tag {v}"
+                )))
+            }
+        };
+        self.bytes_total = r.get_u32("dma.chan.bytes_total")?;
+        Ok(())
+    }
 }
 
 /// SG engine state machine (per channel).
@@ -325,6 +358,61 @@ impl SgEngine {
         beat[desc::OFF_STATUS - DATA_BYTES..desc::OFF_STATUS - DATA_BYTES + 4]
             .copy_from_slice(&status.to_le_bytes());
         beat
+    }
+
+    fn save_state(&self, w: &mut SnapWriter) {
+        w.put_bool(self.enabled);
+        w.put_u8(match self.state {
+            SgState::Stopped => 0,
+            SgState::Fetch => 1,
+            SgState::Fetching => 2,
+            SgState::Data => 3,
+            SgState::Writeback => 4,
+        });
+        w.put_u64(self.cur);
+        w.put_u64(self.tail);
+        w.put_bytes(&self.raw);
+        w.put_u64(self.desc_addr);
+        w.put_u64(self.nxt);
+        w.put_u32(self.ctrl);
+        w.put_u32(self.transferred);
+        w.put_bool(self.err);
+        w.put_u32(self.wb_pending);
+        w.put_u32(self.completed_since_irq);
+    }
+
+    fn load_state(&mut self, r: &mut SnapReader) -> crate::Result<()> {
+        self.enabled = r.get_bool("dma.sg.enabled")?;
+        self.state = match r.get_u8("dma.sg.state")? {
+            0 => SgState::Stopped,
+            1 => SgState::Fetch,
+            2 => SgState::Fetching,
+            3 => SgState::Data,
+            4 => SgState::Writeback,
+            v => {
+                return Err(crate::Error::hdl(format!(
+                    "snapshot dma.sg.state has invalid tag {v}"
+                )))
+            }
+        };
+        self.cur = r.get_u64("dma.sg.cur")?;
+        self.tail = r.get_u64("dma.sg.tail")?;
+        self.raw = r.get_vec("dma.sg.raw")?;
+        if self.raw.len() > desc::SIZE as usize {
+            return Err(crate::Error::hdl(format!(
+                "snapshot dma.sg.raw holds {} bytes (descriptor is {})",
+                self.raw.len(),
+                desc::SIZE
+            )));
+        }
+        self.desc_addr = r.get_u64("dma.sg.desc_addr")?;
+        self.nxt = r.get_u64("dma.sg.nxt")?;
+        self.ctrl = r.get_u32("dma.sg.ctrl")?;
+        self.transferred = r.get_u32("dma.sg.transferred")?;
+        self.err = r.get_bool("dma.sg.err")?;
+        self.wb_pending = r.get_u32("dma.sg.wb_pending")?;
+        self.completed_since_irq = r.get_u32("dma.sg.completed_since_irq")?;
+        Ok(())
     }
 }
 
@@ -1099,6 +1187,83 @@ impl AxiDma {
         chan.err = true;
         chan.sr_irq |= sr::ERR_IRQ;
         chan.state = ChanState::Halted;
+    }
+
+    /// Serialize the full DMA state: both channels' registers, both
+    /// data movers, both SG engines, the half-assembled register
+    /// write, and the counters.
+    pub fn save_state(&self, w: &mut SnapWriter) {
+        self.mm2s.save_state(w);
+        self.s2mm.save_state(w);
+        w.put_u32(self.mm2s_ar_remaining);
+        w.put_u64(self.mm2s_ar_addr);
+        w.put_u32(self.mm2s_data_remaining);
+        put_seq(w, self.mm2s_outstanding.iter());
+        w.put_u32(self.s2mm_remaining);
+        put_seq(w, self.s2mm_buf.iter());
+        match &self.s2mm_issue {
+            Some((addr, beats, sent)) => {
+                w.put_bool(true);
+                w.put_u64(*addr);
+                put_seq(w, beats.iter());
+                w.put_usize(*sent);
+            }
+            None => w.put_bool(false),
+        }
+        w.put_u32(self.s2mm_awaiting_b);
+        w.put_bool(self.s2mm_stream_done);
+        self.mm2s_sg.save_state(w);
+        self.s2mm_sg.save_state(w);
+        put_opt(w, &self.pend_aw);
+        put_opt(w, &self.pend_w);
+        for c in [
+            self.rd_bursts,
+            self.wr_bursts,
+            self.bytes_read,
+            self.bytes_written,
+            self.completions_mm2s,
+            self.completions_s2mm,
+            self.desc_fetches,
+            self.desc_writebacks,
+        ] {
+            w.put_u64(c);
+        }
+    }
+
+    /// Restore state saved by [`AxiDma::save_state`].
+    pub fn load_state(&mut self, r: &mut SnapReader) -> crate::Result<()> {
+        self.mm2s.load_state(r)?;
+        self.s2mm.load_state(r)?;
+        self.mm2s_ar_remaining = r.get_u32("dma.mm2s_ar_remaining")?;
+        self.mm2s_ar_addr = r.get_u64("dma.mm2s_ar_addr")?;
+        self.mm2s_data_remaining = r.get_u32("dma.mm2s_data_remaining")?;
+        self.mm2s_outstanding = get_seq::<u16>(r, "dma.mm2s_outstanding")?.into();
+        self.s2mm_remaining = r.get_u32("dma.s2mm_remaining")?;
+        self.s2mm_buf = get_seq(r, "dma.s2mm_buf")?;
+        self.s2mm_issue = if r.get_bool("dma.s2mm_issue")? {
+            Some((
+                r.get_u64("dma.s2mm_issue.addr")?,
+                get_seq(r, "dma.s2mm_issue.beats")?,
+                r.get_usize("dma.s2mm_issue.sent")?,
+            ))
+        } else {
+            None
+        };
+        self.s2mm_awaiting_b = r.get_u32("dma.s2mm_awaiting_b")?;
+        self.s2mm_stream_done = r.get_bool("dma.s2mm_stream_done")?;
+        self.mm2s_sg.load_state(r)?;
+        self.s2mm_sg.load_state(r)?;
+        self.pend_aw = get_opt(r, "dma.pend_aw")?;
+        self.pend_w = get_opt(r, "dma.pend_w")?;
+        self.rd_bursts = r.get_u64("dma.rd_bursts")?;
+        self.wr_bursts = r.get_u64("dma.wr_bursts")?;
+        self.bytes_read = r.get_u64("dma.bytes_read")?;
+        self.bytes_written = r.get_u64("dma.bytes_written")?;
+        self.completions_mm2s = r.get_u64("dma.completions_mm2s")?;
+        self.completions_s2mm = r.get_u64("dma.completions_s2mm")?;
+        self.desc_fetches = r.get_u64("dma.desc_fetches")?;
+        self.desc_writebacks = r.get_u64("dma.desc_writebacks")?;
+        Ok(())
     }
 }
 

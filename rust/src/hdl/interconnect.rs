@@ -10,6 +10,7 @@
 use super::axi::{resp, LiteAr, LiteAw, LiteB, LiteR, LiteW};
 use super::sim::Fifo;
 use super::signal::{ProbeSink, Probed};
+use super::snapshot::{SnapReader, SnapWriter};
 
 /// One slave port's channel bundle.
 pub struct LitePort {
@@ -37,6 +38,25 @@ impl LitePort {
         self.b.commit();
         self.ar.commit();
         self.r.commit();
+    }
+
+    /// Serialize all five channel FIFOs.
+    pub fn save_state(&self, w: &mut SnapWriter) {
+        self.aw.save_state(w);
+        self.w.save_state(w);
+        self.b.save_state(w);
+        self.ar.save_state(w);
+        self.r.save_state(w);
+    }
+
+    /// Restore state saved by [`LitePort::save_state`].
+    pub fn load_state(&mut self, r: &mut SnapReader) -> crate::Result<()> {
+        self.aw.load_state(r)?;
+        self.w.load_state(r)?;
+        self.b.load_state(r)?;
+        self.ar.load_state(r)?;
+        self.r.load_state(r)?;
+        Ok(())
     }
 }
 
@@ -191,6 +211,58 @@ impl Interconnect {
                 self.wr_route = None;
             }
         }
+    }
+
+    fn save_route(w: &mut SnapWriter, route: &Option<Route>) {
+        match route {
+            None => w.put_u8(0),
+            Some(Route::Slave(s)) => {
+                w.put_u8(1);
+                w.put_usize(*s);
+            }
+            Some(Route::Decerr) => w.put_u8(2),
+        }
+    }
+
+    fn load_route(&self, r: &mut SnapReader) -> crate::Result<Option<Route>> {
+        match r.get_u8("xbar.route")? {
+            0 => Ok(None),
+            1 => {
+                let s = r.get_usize("xbar.route.slave")?;
+                if self.map.iter().all(|e| e.slave != s) {
+                    return Err(crate::Error::hdl(format!(
+                        "snapshot xbar route targets unmapped slave {s}"
+                    )));
+                }
+                Ok(Some(Route::Slave(s)))
+            }
+            2 => Ok(Some(Route::Decerr)),
+            v => Err(crate::Error::hdl(format!(
+                "snapshot xbar route has invalid tag {v}"
+            ))),
+        }
+    }
+
+    /// Serialize in-flight routing state + counters (the address map
+    /// is elaboration geometry).
+    pub fn save_state(&self, w: &mut SnapWriter) {
+        Self::save_route(w, &self.rd_route);
+        Self::save_route(w, &self.wr_route);
+        w.put_bool(self.wr_data_sent);
+        w.put_u64(self.decerrs);
+        w.put_u64(self.reads);
+        w.put_u64(self.writes);
+    }
+
+    /// Restore state saved by [`Interconnect::save_state`].
+    pub fn load_state(&mut self, r: &mut SnapReader) -> crate::Result<()> {
+        self.rd_route = self.load_route(r)?;
+        self.wr_route = self.load_route(r)?;
+        self.wr_data_sent = r.get_bool("xbar.wr_data_sent")?;
+        self.decerrs = r.get_u64("xbar.decerrs")?;
+        self.reads = r.get_u64("xbar.reads")?;
+        self.writes = r.get_u64("xbar.writes")?;
+        Ok(())
     }
 }
 

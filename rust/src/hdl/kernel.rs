@@ -40,6 +40,7 @@ use std::collections::VecDeque;
 use super::axi::{AxisBeat, WORDS_PER_BEAT};
 use super::sim::{Fifo, Horizon, TickCtx};
 use super::signal::ProbeSink;
+use super::snapshot::{get_seq, put_seq, SnapReader, SnapWriter};
 use super::sorter::{Sorter, SorterCfg};
 use crate::{Error, Result};
 
@@ -219,6 +220,12 @@ pub trait StreamKernel: Send {
     fn status(&self) -> KernelStatus;
     /// Waveform probes (named under `platform.<kernel>.`).
     fn probe(&self, sink: &mut dyn ProbeSink);
+    /// Serialize mutable state (accumulators, in-flight records,
+    /// counters) for a platform snapshot. Geometry — kind, n, latency —
+    /// is carried by the [`KernelCfg`] and checked by the platform.
+    fn save_state(&self, w: &mut SnapWriter);
+    /// Restore state saved by [`StreamKernel::save_state`].
+    fn load_state(&mut self, r: &mut SnapReader) -> Result<()>;
 }
 
 /// Elaborate the kernel a [`KernelCfg`] asks for.
@@ -528,6 +535,64 @@ impl StreamKernel for FoldEngine {
         sink.sig(names[7], 32, self.stall_out);
         sink.sig(names[8], 8, self.length_errors);
     }
+
+    fn save_state(&self, w: &mut SnapWriter) {
+        w.put_usize(self.words_seen);
+        w.put_u64(self.first_beat_cycle);
+        w.put_i32(self.acc_min);
+        w.put_i32(self.acc_max);
+        w.put_i64(self.acc_sum);
+        w.put_i32(self.acc_xor);
+        w.put_u64(self.inflight.len() as u64);
+        for f in &self.inflight {
+            put_seq(w, f.words.iter());
+            w.put_u64(f.out_earliest);
+            w.put_usize(f.emitted_beats);
+        }
+        w.put_bool(self.order_desc);
+        for c in [
+            self.records_done,
+            self.beats_in,
+            self.beats_out,
+            self.stall_in,
+            self.stall_out,
+            self.length_errors,
+        ] {
+            w.put_u64(c);
+        }
+    }
+
+    fn load_state(&mut self, r: &mut SnapReader) -> Result<()> {
+        self.words_seen = r.get_usize("fold.words_seen")?;
+        self.first_beat_cycle = r.get_u64("fold.first_beat_cycle")?;
+        self.acc_min = r.get_i32("fold.acc_min")?;
+        self.acc_max = r.get_i32("fold.acc_max")?;
+        self.acc_sum = r.get_i64("fold.acc_sum")?;
+        self.acc_xor = r.get_i32("fold.acc_xor")?;
+        let n = r.get_usize("fold.inflight.len")?;
+        if n > self.cfg.pipeline_records {
+            return Err(Error::hdl(format!(
+                "snapshot fold engine holds {n} in-flight records, pipeline depth is {}",
+                self.cfg.pipeline_records
+            )));
+        }
+        self.inflight.clear();
+        for _ in 0..n {
+            self.inflight.push_back(InFlightOut {
+                words: get_seq(r, "fold.inflight.words")?,
+                out_earliest: r.get_u64("fold.inflight.out_earliest")?,
+                emitted_beats: r.get_usize("fold.inflight.emitted_beats")?,
+            });
+        }
+        self.order_desc = r.get_bool("fold.order_desc")?;
+        self.records_done = r.get_u64("fold.records_done")?;
+        self.beats_in = r.get_u64("fold.beats_in")?;
+        self.beats_out = r.get_u64("fold.beats_out")?;
+        self.stall_in = r.get_u64("fold.stall_in")?;
+        self.stall_out = r.get_u64("fold.stall_out")?;
+        self.length_errors = r.get_u64("fold.length_errors")?;
+        Ok(())
+    }
 }
 
 impl StreamKernel for Sorter {
@@ -590,6 +655,14 @@ impl StreamKernel for Sorter {
 
     fn probe(&self, sink: &mut dyn ProbeSink) {
         crate::hdl::signal::Probed::probe(self, sink)
+    }
+
+    fn save_state(&self, w: &mut SnapWriter) {
+        Sorter::save_state(self, w)
+    }
+
+    fn load_state(&mut self, r: &mut SnapReader) -> Result<()> {
+        Sorter::load_state(self, r)
     }
 }
 

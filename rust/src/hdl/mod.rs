@@ -35,6 +35,7 @@ pub mod platform;
 pub mod regfile;
 pub mod signal;
 pub mod sim;
+pub mod snapshot;
 pub mod sorter;
 pub mod vcd;
 

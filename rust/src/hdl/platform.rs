@@ -34,6 +34,7 @@ use super::kernel::{build_kernel, KernelCfg, StreamKernel};
 use super::regfile::{KernelInfo, RegFile};
 use super::sim::{Fifo, ForceMap, Horizon, TickCtx};
 use super::signal::{ProbeSink, Probed};
+use super::snapshot::{SnapReader, SnapWriter};
 use crate::link::{Endpoint, LinkMode};
 use crate::Result;
 
@@ -334,7 +335,138 @@ impl Platform {
         // its wait states is pinned to a non-empty control wire, which
         // `ctrl_wires_quiet` already forces to `Now`.
     }
+
+    /// Serialize the complete architectural state of the platform —
+    /// every register, FIFO, pipeline stage, and counter — plus the
+    /// caller's cycle count, into a self-describing byte blob.
+    ///
+    /// The blob starts with a **geometry stamp** derived from
+    /// [`PlatformCfg`]: geometry (kernel kind/shape, BRAM size, FIFO
+    /// depth, link mode, …) is *not* state and is never restored —
+    /// [`Platform::restore`] instead verifies the stamp against the
+    /// receiving platform's config and rejects mismatches. Snapshots
+    /// are taken between cycles, when combinational wires are quiet.
+    pub fn snapshot(&self, cycle: u64) -> Vec<u8> {
+        let mut w = SnapWriter::new();
+        w.put_raw(SNAP_MAGIC);
+        w.put_u16(SNAP_VERSION);
+        // Geometry stamp.
+        w.put_u32(self.cfg.kernel.kind.id());
+        w.put_usize(self.cfg.kernel.n);
+        w.put_u64(self.cfg.kernel.latency);
+        w.put_usize(self.cfg.kernel.pipeline_records);
+        w.put_usize(self.cfg.bram_size);
+        w.put_usize(self.cfg.stream_fifo_depth);
+        w.put_u64(self.cfg.poll_interval);
+        w.put_usize(self.cfg.device_index);
+        w.put_u8(match self.cfg.link_mode {
+            LinkMode::Mmio => 0,
+            LinkMode::Tlp => 1,
+        });
+        w.put_u64(cycle);
+        // Module sections, in fixed order.
+        self.bridge.save_state(&mut w);
+        self.xbar.save_state(&mut w);
+        self.regfile.save_state(&mut w);
+        self.dma.save_state(&mut w);
+        self.kernel.save_state(&mut w);
+        self.bram.save_state(&mut w);
+        self.cfg_port.save_state(&mut w);
+        for p in &self.slave_ports {
+            p.save_state(&mut w);
+        }
+        self.dm_ar.save_state(&mut w);
+        self.dm_r.save_state(&mut w);
+        self.dm_aw.save_state(&mut w);
+        self.dm_w.save_state(&mut w);
+        self.dm_b.save_state(&mut w);
+        self.mm2s_axis.save_state(&mut w);
+        self.s2mm_axis.save_state(&mut w);
+        w.put_bool(self.irq_test_level);
+        w.into_bytes()
+    }
+
+    /// Restore state captured by [`Platform::snapshot`] into this
+    /// platform and return the snapshotted cycle count. The receiving
+    /// platform must have been built from the same [`PlatformCfg`]
+    /// geometry; any mismatch (or a truncated / trailing-garbage blob)
+    /// is a structured error and leaves no half-restored invariants
+    /// the caller should rely on — rebuild on error.
+    pub fn restore(&mut self, bytes: &[u8]) -> Result<u64> {
+        let mut r = SnapReader::new(bytes);
+        let magic = r.get_raw(SNAP_MAGIC.len(), "magic")?;
+        if magic != SNAP_MAGIC {
+            return Err(crate::Error::hdl("snapshot magic mismatch (not a VHSP blob)"));
+        }
+        let version = r.get_u16("version")?;
+        if version != SNAP_VERSION {
+            return Err(crate::Error::hdl(format!(
+                "snapshot version {version} unsupported (expected {SNAP_VERSION})"
+            )));
+        }
+        fn check(what: &str, got: u64, want: u64) -> Result<()> {
+            if got != want {
+                return Err(crate::Error::hdl(format!(
+                    "snapshot geometry mismatch: {what} is {got} in the snapshot, \
+                     {want} on this platform"
+                )));
+            }
+            Ok(())
+        }
+        check("kernel id", u64::from(r.get_u32("geom.kernel")?), u64::from(self.cfg.kernel.kind.id()))?;
+        check("kernel n", r.get_u64("geom.n")?, self.cfg.kernel.n as u64)?;
+        check("kernel latency", r.get_u64("geom.latency")?, self.cfg.kernel.latency)?;
+        check(
+            "pipeline records",
+            r.get_u64("geom.pipeline_records")?,
+            self.cfg.kernel.pipeline_records as u64,
+        )?;
+        check("bram size", r.get_u64("geom.bram_size")?, self.cfg.bram_size as u64)?;
+        check(
+            "stream fifo depth",
+            r.get_u64("geom.stream_fifo_depth")?,
+            self.cfg.stream_fifo_depth as u64,
+        )?;
+        check("poll interval", r.get_u64("geom.poll_interval")?, self.cfg.poll_interval)?;
+        check("device index", r.get_u64("geom.device_index")?, self.cfg.device_index as u64)?;
+        let mode = match self.cfg.link_mode {
+            LinkMode::Mmio => 0,
+            LinkMode::Tlp => 1,
+        };
+        check("link mode", u64::from(r.get_u8("geom.link_mode")?), mode)?;
+        let cycle = r.get_u64("cycle")?;
+        self.bridge.load_state(&mut r)?;
+        self.xbar.load_state(&mut r)?;
+        self.regfile.load_state(&mut r)?;
+        self.dma.load_state(&mut r)?;
+        self.kernel.load_state(&mut r)?;
+        self.bram.load_state(&mut r)?;
+        self.cfg_port.load_state(&mut r)?;
+        for p in &mut self.slave_ports {
+            p.load_state(&mut r)?;
+        }
+        self.dm_ar.load_state(&mut r)?;
+        self.dm_r.load_state(&mut r)?;
+        self.dm_aw.load_state(&mut r)?;
+        self.dm_w.load_state(&mut r)?;
+        self.dm_b.load_state(&mut r)?;
+        self.mm2s_axis.load_state(&mut r)?;
+        self.s2mm_axis.load_state(&mut r)?;
+        self.irq_test_level = r.get_bool("irq_test_level")?;
+        if !r.at_end() {
+            return Err(crate::Error::hdl(format!(
+                "snapshot has {} trailing bytes after the last section",
+                r.remaining()
+            )));
+        }
+        Ok(cycle)
+    }
 }
+
+/// Snapshot blob magic ("VM-HDL snapshot").
+pub const SNAP_MAGIC: &[u8; 4] = b"VHSP";
+/// Snapshot format version — bump on any layout change.
+pub const SNAP_VERSION: u16 = 1;
 
 impl Probed for Platform {
     fn probe(&self, sink: &mut dyn ProbeSink) {
@@ -387,6 +519,61 @@ mod tests {
         let mut f = ForceMap::new();
         f.insert("sorter.s_axis_tready".into(), 0);
         assert_eq!(plat.next_event(cycle, &f), Horizon::Now);
+    }
+
+    #[test]
+    fn snapshot_restore_roundtrip_mid_flight() {
+        let (mut vm_ep, mut hdl_ep) = Endpoint::inproc_pair();
+        let mut plat = Platform::new(PlatformCfg::default());
+        let forces = ForceMap::new();
+        // Put real state in flight: an MMIO write part-way through the
+        // bridge → xbar → regfile pipeline, then stop mid-drain.
+        vm_ep
+            .send(&Msg::MmioWrite { bar: 0, addr: 0x08, data: vec![7, 0, 0, 0] })
+            .unwrap();
+        for cycle in 0..3u64 {
+            let ctx = TickCtx { cycle, forces: &forces };
+            plat.tick(&ctx, &mut hdl_ep).unwrap();
+        }
+        let snap = plat.snapshot(3);
+        // Restoring into a freshly built same-geometry platform must
+        // reproduce the blob byte-for-byte.
+        let mut plat2 = Platform::new(PlatformCfg::default());
+        assert_eq!(plat2.restore(&snap).unwrap(), 3);
+        assert_eq!(plat2.snapshot(3), snap, "snapshot();restore();snapshot() diverged");
+        // And both must finish the write identically.
+        for cycle in 3..24u64 {
+            let ctx = TickCtx { cycle, forces: &forces };
+            plat.tick(&ctx, &mut hdl_ep).unwrap();
+            let ctx = TickCtx { cycle, forces: &forces };
+            plat2.tick(&ctx, &mut hdl_ep).unwrap();
+        }
+        assert_eq!(plat.regfile.scratch, 7);
+        assert_eq!(plat2.regfile.scratch, 7);
+    }
+
+    #[test]
+    fn snapshot_rejects_geometry_mismatch_and_truncation() {
+        let plat = Platform::new(PlatformCfg::default());
+        let snap = plat.snapshot(0);
+        // Different BRAM size ⇒ geometry error, not a crash.
+        let mut other = Platform::new(PlatformCfg {
+            bram_size: 128 * 1024,
+            ..PlatformCfg::default()
+        });
+        let err = other.restore(&snap).unwrap_err().to_string();
+        assert!(err.contains("bram size"), "unexpected error: {err}");
+        // Truncation anywhere ⇒ structured error.
+        let mut same = Platform::new(PlatformCfg::default());
+        for cut in [0, 3, 10, snap.len() / 2, snap.len() - 1] {
+            assert!(same.restore(&snap[..cut]).is_err(), "cut at {cut} must fail");
+        }
+        // Trailing garbage ⇒ error.
+        let mut fat = snap.clone();
+        fat.push(0);
+        assert!(same.restore(&fat).is_err());
+        // And the pristine blob still restores after all those failures.
+        assert_eq!(same.restore(&snap).unwrap(), 0);
     }
 
     #[test]

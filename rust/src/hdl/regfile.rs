@@ -12,6 +12,7 @@ use super::axi::{resp, LiteAr, LiteAw, LiteB, LiteR, LiteW};
 use super::kernel::KernelStatus;
 use super::sim::{Fifo, Horizon};
 use super::signal::{ProbeSink, Probed};
+use super::snapshot::{get_opt, put_opt, Snap, SnapReader, SnapWriter};
 
 /// Register offsets within the regfile window.
 ///
@@ -257,6 +258,48 @@ impl RegFile {
                 self.pend_w = None;
             }
         }
+    }
+
+    /// Serialize mutable state, including the latched capability
+    /// registers (they are elaboration-time constants, but carrying
+    /// them makes `snapshot(); restore(); snapshot()` byte-identical
+    /// without special cases).
+    pub fn save_state(&self, w: &mut SnapWriter) {
+        w.put_u32(self.scratch);
+        w.put_bool(self.order_desc);
+        w.put_bool(self.soft_reset_pulse);
+        put_opt(w, &self.irq_test_pulse);
+        self.status.save(w);
+        w.put_u32(self.kernel_info.kernel_id);
+        w.put_u32(self.kernel_info.reclen);
+        w.put_u32(self.kernel_info.out_words);
+        w.put_bool(self.sticky_len_err);
+        w.put_u32(self.cycle_lo_latch);
+        w.put_u64(self.cycles);
+        put_opt(w, &self.pend_aw);
+        put_opt(w, &self.pend_w);
+        w.put_u64(self.reads);
+        w.put_u64(self.writes);
+    }
+
+    /// Restore state saved by [`RegFile::save_state`].
+    pub fn load_state(&mut self, r: &mut SnapReader) -> crate::Result<()> {
+        self.scratch = r.get_u32("regfile.scratch")?;
+        self.order_desc = r.get_bool("regfile.order_desc")?;
+        self.soft_reset_pulse = r.get_bool("regfile.soft_reset_pulse")?;
+        self.irq_test_pulse = get_opt(r, "regfile.irq_test_pulse")?;
+        self.status = KernelStatus::load(r)?;
+        self.kernel_info.kernel_id = r.get_u32("regfile.kernel_id")?;
+        self.kernel_info.reclen = r.get_u32("regfile.reclen")?;
+        self.kernel_info.out_words = r.get_u32("regfile.out_words")?;
+        self.sticky_len_err = r.get_bool("regfile.sticky_len_err")?;
+        self.cycle_lo_latch = r.get_u32("regfile.cycle_lo_latch")?;
+        self.cycles = r.get_u64("regfile.cycles")?;
+        self.pend_aw = get_opt(r, "regfile.pend_aw")?;
+        self.pend_w = get_opt(r, "regfile.pend_w")?;
+        self.reads = r.get_u64("regfile.reads")?;
+        self.writes = r.get_u64("regfile.writes")?;
+        Ok(())
     }
 }
 

@@ -135,6 +135,47 @@ impl<T> Fifo<T> {
         self.q.clear();
         self.staged.clear();
     }
+
+    /// Serialize occupancy + contents for a platform snapshot. Staged
+    /// (uncommitted) elements are folded into the queue — snapshots
+    /// are taken between cycles, where the distinction is immaterial,
+    /// and folding keeps the restore path a plain refill.
+    pub fn save_state(&self, w: &mut super::snapshot::SnapWriter)
+    where
+        T: super::snapshot::Snap,
+    {
+        w.put_u64(self.total);
+        w.put_u64((self.q.len() + self.staged.len()) as u64);
+        for v in self.q.iter().chain(self.staged.iter()) {
+            v.save(w);
+        }
+    }
+
+    /// Restore contents saved by [`Fifo::save_state`]. The element
+    /// count is validated against this FIFO's capacity, so a snapshot
+    /// taken from a deeper FIFO cannot silently overfill this one.
+    pub fn load_state(
+        &mut self,
+        r: &mut super::snapshot::SnapReader,
+    ) -> crate::Result<()>
+    where
+        T: super::snapshot::Snap,
+    {
+        self.total = r.get_u64("fifo.total")?;
+        let n = r.get_usize("fifo.len")?;
+        if n > self.cap {
+            return Err(crate::Error::hdl(format!(
+                "snapshot fifo {:?}: {n} elements exceed capacity {}",
+                self.name, self.cap
+            )));
+        }
+        self.q.clear();
+        self.staged.clear();
+        for _ in 0..n {
+            self.q.push_back(<T as super::snapshot::Snap>::load(r)?);
+        }
+        Ok(())
+    }
 }
 
 /// A registered level (flip-flop): `set` in cycle N is visible via

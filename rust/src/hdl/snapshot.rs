@@ -1,0 +1,559 @@
+//! Platform state serialization — the byte codec behind
+//! [`crate::hdl::platform::Platform::snapshot`] / `restore`.
+//!
+//! A snapshot captures every register, FIFO and engine state machine
+//! of one device lane so a replay (or a forked what-if scenario) can
+//! resume mid-run instead of always starting cold. The format is a
+//! flat little-endian byte stream: each module appends its mutable
+//! state in a fixed order via [`SnapWriter`], and restores it with the
+//! bounds-checked [`SnapReader`] — corrupted or truncated snapshots
+//! surface as [`crate::Error::Hdl`] with the field that failed, never
+//! as a panic.
+//!
+//! Geometry (kernel kind, record length, FIFO depths, link mode) is
+//! deliberately *not* state: the caller rebuilds the platform from its
+//! [`crate::hdl::platform::PlatformCfg`] and `restore` verifies the
+//! snapshot's geometry stamp against it, so a snapshot can never be
+//! loaded into a structurally different device.
+
+use super::axi::{
+    Ar, Aw, AxisBeat, LiteAr, LiteAw, LiteB, LiteR, LiteW, B, DATA_BYTES, R, W,
+};
+use super::kernel::KernelStatus;
+use crate::link::Msg;
+use crate::{Error, Result};
+
+/// Upper bound on any length-prefixed sequence in a snapshot — far
+/// above anything a real platform holds, small enough that a corrupted
+/// length cannot drive allocation into the gigabytes.
+pub const MAX_SEQ: usize = 1 << 20;
+
+/// Append-only little-endian byte sink for snapshot sections.
+#[derive(Default)]
+pub struct SnapWriter {
+    buf: Vec<u8>,
+}
+
+impl SnapWriter {
+    pub fn new() -> Self {
+        Self { buf: Vec::new() }
+    }
+
+    pub fn put_u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    pub fn put_u16(&mut self, v: u16) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_i32(&mut self, v: i32) {
+        self.put_u32(v as u32);
+    }
+
+    pub fn put_i64(&mut self, v: i64) {
+        self.put_u64(v as u64);
+    }
+
+    pub fn put_bool(&mut self, v: bool) {
+        self.put_u8(v as u8);
+    }
+
+    pub fn put_usize(&mut self, v: usize) {
+        self.put_u64(v as u64);
+    }
+
+    /// Length-prefixed byte string.
+    pub fn put_bytes(&mut self, b: &[u8]) {
+        self.put_u64(b.len() as u64);
+        self.buf.extend_from_slice(b);
+    }
+
+    /// Raw bytes, no length prefix (magic numbers, fixed arrays).
+    pub fn put_raw(&mut self, b: &[u8]) {
+        self.buf.extend_from_slice(b);
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.buf
+    }
+}
+
+/// Bounds-checked little-endian reader over a snapshot byte stream.
+/// Every accessor takes a `what` label that names the field in the
+/// error when the stream is truncated or malformed.
+pub struct SnapReader<'a> {
+    b: &'a [u8],
+    off: usize,
+}
+
+impl<'a> SnapReader<'a> {
+    pub fn new(b: &'a [u8]) -> Self {
+        Self { b, off: 0 }
+    }
+
+    fn take(&mut self, n: usize, what: &str) -> Result<&'a [u8]> {
+        let end = self.off.checked_add(n).ok_or_else(|| {
+            Error::hdl(format!("snapshot length overflow reading {what}"))
+        })?;
+        let s = self.b.get(self.off..end).ok_or_else(|| {
+            Error::hdl(format!(
+                "snapshot truncated reading {what} at offset {} (need {n} of {} left)",
+                self.off,
+                self.b.len().saturating_sub(self.off)
+            ))
+        })?;
+        self.off = end;
+        Ok(s)
+    }
+
+    pub fn get_u8(&mut self, what: &str) -> Result<u8> {
+        Ok(self.take(1, what)?.first().copied().unwrap_or(0))
+    }
+
+    pub fn get_u16(&mut self, what: &str) -> Result<u16> {
+        let s = self.take(2, what)?;
+        let mut a = [0u8; 2];
+        for (d, v) in a.iter_mut().zip(s) {
+            *d = *v;
+        }
+        Ok(u16::from_le_bytes(a))
+    }
+
+    pub fn get_u32(&mut self, what: &str) -> Result<u32> {
+        let s = self.take(4, what)?;
+        let mut a = [0u8; 4];
+        for (d, v) in a.iter_mut().zip(s) {
+            *d = *v;
+        }
+        Ok(u32::from_le_bytes(a))
+    }
+
+    pub fn get_u64(&mut self, what: &str) -> Result<u64> {
+        let s = self.take(8, what)?;
+        let mut a = [0u8; 8];
+        for (d, v) in a.iter_mut().zip(s) {
+            *d = *v;
+        }
+        Ok(u64::from_le_bytes(a))
+    }
+
+    pub fn get_i32(&mut self, what: &str) -> Result<i32> {
+        Ok(self.get_u32(what)? as i32)
+    }
+
+    pub fn get_i64(&mut self, what: &str) -> Result<i64> {
+        Ok(self.get_u64(what)? as i64)
+    }
+
+    pub fn get_bool(&mut self, what: &str) -> Result<bool> {
+        match self.get_u8(what)? {
+            0 => Ok(false),
+            1 => Ok(true),
+            v => Err(Error::hdl(format!("snapshot bool {what} has value {v}"))),
+        }
+    }
+
+    pub fn get_usize(&mut self, what: &str) -> Result<usize> {
+        let v = self.get_u64(what)?;
+        usize::try_from(v)
+            .map_err(|_| Error::hdl(format!("snapshot {what} = {v} exceeds usize")))
+    }
+
+    /// Length-prefixed byte string (length sanity-capped by the
+    /// remaining input — `take` rejects anything past the end).
+    pub fn get_vec(&mut self, what: &str) -> Result<Vec<u8>> {
+        let n = self.get_usize(what)?;
+        Ok(self.take(n, what)?.to_vec())
+    }
+
+    /// One AXI data beat's worth of raw bytes.
+    pub fn get_data(&mut self, what: &str) -> Result<[u8; DATA_BYTES]> {
+        let s = self.take(DATA_BYTES, what)?;
+        let mut a = [0u8; DATA_BYTES];
+        for (d, v) in a.iter_mut().zip(s) {
+            *d = *v;
+        }
+        Ok(a)
+    }
+
+    /// Raw fixed-width field (magic numbers).
+    pub fn get_raw(&mut self, n: usize, what: &str) -> Result<&'a [u8]> {
+        self.take(n, what)
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.b.len().saturating_sub(self.off)
+    }
+
+    pub fn at_end(&self) -> bool {
+        self.remaining() == 0
+    }
+}
+
+/// A value that knows how to serialize itself into a snapshot.
+pub trait Snap: Sized {
+    fn save(&self, w: &mut SnapWriter);
+    fn load(r: &mut SnapReader) -> Result<Self>;
+}
+
+macro_rules! snap_prim {
+    ($t:ty, $put:ident, $get:ident, $what:expr) => {
+        impl Snap for $t {
+            fn save(&self, w: &mut SnapWriter) {
+                w.$put(*self);
+            }
+            fn load(r: &mut SnapReader) -> Result<Self> {
+                r.$get($what)
+            }
+        }
+    };
+}
+
+snap_prim!(u8, put_u8, get_u8, "u8");
+snap_prim!(u16, put_u16, get_u16, "u16");
+snap_prim!(u32, put_u32, get_u32, "u32");
+snap_prim!(u64, put_u64, get_u64, "u64");
+snap_prim!(i32, put_i32, get_i32, "i32");
+snap_prim!(i64, put_i64, get_i64, "i64");
+snap_prim!(bool, put_bool, get_bool, "bool");
+
+impl Snap for LiteAw {
+    fn save(&self, w: &mut SnapWriter) {
+        w.put_u32(self.addr);
+    }
+    fn load(r: &mut SnapReader) -> Result<Self> {
+        Ok(Self { addr: r.get_u32("LiteAw.addr")? })
+    }
+}
+
+impl Snap for LiteW {
+    fn save(&self, w: &mut SnapWriter) {
+        w.put_u32(self.data);
+        w.put_u8(self.strb);
+    }
+    fn load(r: &mut SnapReader) -> Result<Self> {
+        Ok(Self { data: r.get_u32("LiteW.data")?, strb: r.get_u8("LiteW.strb")? })
+    }
+}
+
+impl Snap for LiteB {
+    fn save(&self, w: &mut SnapWriter) {
+        w.put_u8(self.resp);
+    }
+    fn load(r: &mut SnapReader) -> Result<Self> {
+        Ok(Self { resp: r.get_u8("LiteB.resp")? })
+    }
+}
+
+impl Snap for LiteAr {
+    fn save(&self, w: &mut SnapWriter) {
+        w.put_u32(self.addr);
+    }
+    fn load(r: &mut SnapReader) -> Result<Self> {
+        Ok(Self { addr: r.get_u32("LiteAr.addr")? })
+    }
+}
+
+impl Snap for LiteR {
+    fn save(&self, w: &mut SnapWriter) {
+        w.put_u32(self.data);
+        w.put_u8(self.resp);
+    }
+    fn load(r: &mut SnapReader) -> Result<Self> {
+        Ok(Self { data: r.get_u32("LiteR.data")?, resp: r.get_u8("LiteR.resp")? })
+    }
+}
+
+impl Snap for Ar {
+    fn save(&self, w: &mut SnapWriter) {
+        w.put_u64(self.addr);
+        w.put_u8(self.len);
+        w.put_u8(self.id);
+    }
+    fn load(r: &mut SnapReader) -> Result<Self> {
+        Ok(Self {
+            addr: r.get_u64("Ar.addr")?,
+            len: r.get_u8("Ar.len")?,
+            id: r.get_u8("Ar.id")?,
+        })
+    }
+}
+
+impl Snap for R {
+    fn save(&self, w: &mut SnapWriter) {
+        w.put_raw(&self.data);
+        w.put_u8(self.id);
+        w.put_u8(self.resp);
+        w.put_bool(self.last);
+    }
+    fn load(r: &mut SnapReader) -> Result<Self> {
+        Ok(Self {
+            data: r.get_data("R.data")?,
+            id: r.get_u8("R.id")?,
+            resp: r.get_u8("R.resp")?,
+            last: r.get_bool("R.last")?,
+        })
+    }
+}
+
+impl Snap for Aw {
+    fn save(&self, w: &mut SnapWriter) {
+        w.put_u64(self.addr);
+        w.put_u8(self.len);
+        w.put_u8(self.id);
+    }
+    fn load(r: &mut SnapReader) -> Result<Self> {
+        Ok(Self {
+            addr: r.get_u64("Aw.addr")?,
+            len: r.get_u8("Aw.len")?,
+            id: r.get_u8("Aw.id")?,
+        })
+    }
+}
+
+impl Snap for W {
+    fn save(&self, w: &mut SnapWriter) {
+        w.put_raw(&self.data);
+        w.put_u16(self.strb);
+        w.put_bool(self.last);
+    }
+    fn load(r: &mut SnapReader) -> Result<Self> {
+        Ok(Self {
+            data: r.get_data("W.data")?,
+            strb: r.get_u16("W.strb")?,
+            last: r.get_bool("W.last")?,
+        })
+    }
+}
+
+impl Snap for B {
+    fn save(&self, w: &mut SnapWriter) {
+        w.put_u8(self.id);
+        w.put_u8(self.resp);
+    }
+    fn load(r: &mut SnapReader) -> Result<Self> {
+        Ok(Self { id: r.get_u8("B.id")?, resp: r.get_u8("B.resp")? })
+    }
+}
+
+impl Snap for AxisBeat {
+    fn save(&self, w: &mut SnapWriter) {
+        w.put_raw(&self.data);
+        w.put_u16(self.keep);
+        w.put_bool(self.last);
+    }
+    fn load(r: &mut SnapReader) -> Result<Self> {
+        Ok(Self {
+            data: r.get_data("AxisBeat.data")?,
+            keep: r.get_u16("AxisBeat.keep")?,
+            last: r.get_bool("AxisBeat.last")?,
+        })
+    }
+}
+
+impl Snap for KernelStatus {
+    fn save(&self, w: &mut SnapWriter) {
+        w.put_bool(self.busy);
+        w.put_u64(self.records_done);
+        w.put_u64(self.stall_in);
+        w.put_u64(self.stall_out);
+        w.put_u64(self.beats_in);
+        w.put_u64(self.beats_out);
+        w.put_bool(self.length_error);
+    }
+    fn load(r: &mut SnapReader) -> Result<Self> {
+        Ok(Self {
+            busy: r.get_bool("KernelStatus.busy")?,
+            records_done: r.get_u64("KernelStatus.records_done")?,
+            stall_in: r.get_u64("KernelStatus.stall_in")?,
+            stall_out: r.get_u64("KernelStatus.stall_out")?,
+            beats_in: r.get_u64("KernelStatus.beats_in")?,
+            beats_out: r.get_u64("KernelStatus.beats_out")?,
+            length_error: r.get_bool("KernelStatus.length_error")?,
+        })
+    }
+}
+
+/// Link messages are snapshotted as their wire encoding (seq/dev 0 —
+/// both are re-stamped by the reliable layer on send, so only the
+/// payload matters inside a module queue).
+impl Snap for Msg {
+    fn save(&self, w: &mut SnapWriter) {
+        w.put_bytes(&self.encode_on(0, 0));
+    }
+    fn load(r: &mut SnapReader) -> Result<Self> {
+        let f = r.get_vec("Msg.frame")?;
+        let (_, _, m) = Msg::decode_on(&f)?;
+        Ok(m)
+    }
+}
+
+/// Save an `Option<T>` as a presence flag + value.
+pub fn put_opt<T: Snap>(w: &mut SnapWriter, v: &Option<T>) {
+    match v {
+        Some(x) => {
+            w.put_bool(true);
+            x.save(w);
+        }
+        None => w.put_bool(false),
+    }
+}
+
+/// Load an `Option<T>` saved by [`put_opt`].
+pub fn get_opt<T: Snap>(r: &mut SnapReader, what: &str) -> Result<Option<T>> {
+    if r.get_bool(what)? {
+        Ok(Some(T::load(r)?))
+    } else {
+        Ok(None)
+    }
+}
+
+/// Save a length-prefixed sequence.
+pub fn put_seq<'a, T, I>(w: &mut SnapWriter, it: I)
+where
+    T: Snap + 'a,
+    I: ExactSizeIterator<Item = &'a T>,
+{
+    w.put_u64(it.len() as u64);
+    for v in it {
+        v.save(w);
+    }
+}
+
+/// Load a sequence saved by [`put_seq`], rejecting absurd lengths
+/// (a corrupted count must not drive allocation).
+pub fn get_seq<T: Snap>(r: &mut SnapReader, what: &str) -> Result<Vec<T>> {
+    let n = r.get_usize(what)?;
+    if n > MAX_SEQ {
+        return Err(Error::hdl(format!(
+            "snapshot sequence {what} claims {n} elements (max {MAX_SEQ})"
+        )));
+    }
+    let mut v = Vec::with_capacity(n.min(1024));
+    for _ in 0..n {
+        v.push(T::load(r)?);
+    }
+    Ok(v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prim_roundtrip() {
+        let mut w = SnapWriter::new();
+        w.put_u8(7);
+        w.put_u16(0xBEEF);
+        w.put_u32(0xDEAD_BEEF);
+        w.put_u64(u64::MAX - 1);
+        w.put_i32(-42);
+        w.put_i64(i64::MIN);
+        w.put_bool(true);
+        w.put_usize(12345);
+        w.put_bytes(b"hello");
+        let bytes = w.into_bytes();
+        let mut r = SnapReader::new(&bytes);
+        assert_eq!(r.get_u8("a").unwrap(), 7);
+        assert_eq!(r.get_u16("b").unwrap(), 0xBEEF);
+        assert_eq!(r.get_u32("c").unwrap(), 0xDEAD_BEEF);
+        assert_eq!(r.get_u64("d").unwrap(), u64::MAX - 1);
+        assert_eq!(r.get_i32("e").unwrap(), -42);
+        assert_eq!(r.get_i64("f").unwrap(), i64::MIN);
+        assert!(r.get_bool("g").unwrap());
+        assert_eq!(r.get_usize("h").unwrap(), 12345);
+        assert_eq!(r.get_vec("i").unwrap(), b"hello");
+        assert!(r.at_end());
+    }
+
+    #[test]
+    fn truncation_is_an_error_not_a_panic() {
+        let mut w = SnapWriter::new();
+        w.put_u64(1);
+        let bytes = w.into_bytes();
+        let mut r = SnapReader::new(&bytes[..5]);
+        let e = r.get_u64("field_x").unwrap_err().to_string();
+        assert!(e.contains("field_x"), "error names the field: {e}");
+    }
+
+    #[test]
+    fn bad_bool_rejected() {
+        let bytes = [2u8];
+        let mut r = SnapReader::new(&bytes);
+        assert!(r.get_bool("flag").is_err());
+    }
+
+    #[test]
+    fn beats_and_status_roundtrip() {
+        let mut w = SnapWriter::new();
+        let beat = AxisBeat { data: [9; DATA_BYTES], keep: 0xFFFF, last: true };
+        beat.save(&mut w);
+        let st = KernelStatus {
+            busy: true,
+            records_done: 3,
+            stall_in: 1,
+            stall_out: 2,
+            beats_in: 100,
+            beats_out: 50,
+            length_error: false,
+        };
+        st.save(&mut w);
+        let bytes = w.into_bytes();
+        let mut r = SnapReader::new(&bytes);
+        let got = AxisBeat::load(&mut r).unwrap();
+        assert_eq!((got.data, got.keep, got.last), (beat.data, beat.keep, beat.last));
+        let got = KernelStatus::load(&mut r).unwrap();
+        assert_eq!(got.records_done, 3);
+        assert!(got.busy && !got.length_error);
+    }
+
+    #[test]
+    fn opt_and_seq_roundtrip() {
+        let mut w = SnapWriter::new();
+        put_opt(&mut w, &Some(42u32));
+        put_opt::<u32>(&mut w, &None);
+        let xs = vec![1i32, -2, 3];
+        put_seq(&mut w, xs.iter());
+        let bytes = w.into_bytes();
+        let mut r = SnapReader::new(&bytes);
+        assert_eq!(get_opt::<u32>(&mut r, "o1").unwrap(), Some(42));
+        assert_eq!(get_opt::<u32>(&mut r, "o2").unwrap(), None);
+        assert_eq!(get_seq::<i32>(&mut r, "xs").unwrap(), xs);
+    }
+
+    #[test]
+    fn absurd_seq_length_rejected() {
+        let mut w = SnapWriter::new();
+        w.put_u64(u64::MAX);
+        let bytes = w.into_bytes();
+        let mut r = SnapReader::new(&bytes);
+        assert!(get_seq::<u8>(&mut r, "huge").is_err());
+    }
+
+    #[test]
+    fn msg_roundtrip() {
+        let m = Msg::MmioWrite { bar: 2, addr: 0x40, data: vec![1, 2, 3, 4] };
+        let mut w = SnapWriter::new();
+        m.save(&mut w);
+        let bytes = w.into_bytes();
+        let mut r = SnapReader::new(&bytes);
+        assert_eq!(Msg::load(&mut r).unwrap(), m);
+    }
+}

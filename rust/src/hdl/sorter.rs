@@ -27,6 +27,7 @@ use std::collections::VecDeque;
 use super::axi::{AxisBeat, WORDS_PER_BEAT};
 use super::sim::{Fifo, Horizon, TickCtx};
 use super::signal::{ProbeSink, Probed};
+use super::snapshot::{get_seq, put_seq, SnapReader, SnapWriter};
 
 /// The bitonic network stage list (k = merge block, j = partner
 /// distance) — identical to `bitonic.network_stages` on the python
@@ -288,6 +289,60 @@ impl Sorter {
     pub fn soft_reset(&mut self) {
         self.collecting.clear();
         self.inflight.clear();
+    }
+
+    /// Serialize mutable state (collector, in-flight records, status
+    /// counters). Geometry — n, latency, pipeline depth — comes from
+    /// [`SorterCfg`] and is verified by the platform's snapshot stamp.
+    pub fn save_state(&self, w: &mut SnapWriter) {
+        put_seq(w, self.collecting.iter());
+        w.put_u64(self.first_beat_cycle);
+        w.put_u64(self.inflight.len() as u64);
+        for f in &self.inflight {
+            put_seq(w, f.sorted.iter());
+            w.put_u64(f.out_earliest);
+            w.put_usize(f.emitted_beats);
+        }
+        w.put_bool(self.order_desc);
+        for c in [
+            self.records_done,
+            self.beats_in,
+            self.beats_out,
+            self.stall_in,
+            self.stall_out,
+            self.length_errors,
+        ] {
+            w.put_u64(c);
+        }
+    }
+
+    /// Restore state saved by [`Sorter::save_state`].
+    pub fn load_state(&mut self, r: &mut SnapReader) -> crate::Result<()> {
+        self.collecting = get_seq(r, "sorter.collecting")?;
+        self.first_beat_cycle = r.get_u64("sorter.first_beat_cycle")?;
+        let n = r.get_usize("sorter.inflight.len")?;
+        if n > self.cfg.pipeline_records {
+            return Err(crate::Error::hdl(format!(
+                "snapshot sorter holds {n} in-flight records, pipeline depth is {}",
+                self.cfg.pipeline_records
+            )));
+        }
+        self.inflight.clear();
+        for _ in 0..n {
+            self.inflight.push_back(InFlight {
+                sorted: get_seq(r, "sorter.inflight.sorted")?,
+                out_earliest: r.get_u64("sorter.inflight.out_earliest")?,
+                emitted_beats: r.get_usize("sorter.inflight.emitted_beats")?,
+            });
+        }
+        self.order_desc = r.get_bool("sorter.order_desc")?;
+        self.records_done = r.get_u64("sorter.records_done")?;
+        self.beats_in = r.get_u64("sorter.beats_in")?;
+        self.beats_out = r.get_u64("sorter.beats_out")?;
+        self.stall_in = r.get_u64("sorter.stall_in")?;
+        self.stall_out = r.get_u64("sorter.stall_out")?;
+        self.length_errors = r.get_u64("sorter.length_errors")?;
+        Ok(())
     }
 }
 

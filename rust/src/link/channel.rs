@@ -40,7 +40,8 @@ use std::time::{Duration, Instant};
 
 use super::impair::{stream_seed, ImpairCfg, ImpairedTransport};
 use super::msg::{Msg, Side};
-use super::transport::{Doorbell, Transport};
+use super::recorder::{RecorderSink, RecordingTransport};
+use super::transport::{Doorbell, InProcTransport, Transport};
 use super::udp::{device_port, UdpTransport};
 use crate::{Error, Result};
 
@@ -728,6 +729,16 @@ impl LinkPair {
         self.tx.transport = wrap(inner);
     }
 
+    /// Wrap this pair's receive transport in place (recording taps) —
+    /// the receive-direction mirror of [`LinkPair::wrap_tx`].
+    fn wrap_rx(&mut self, wrap: impl FnOnce(Box<dyn Transport>) -> Box<dyn Transport>) {
+        let inner = std::mem::replace(
+            &mut self.rx.transport,
+            Box::new(DisconnectedTransport),
+        );
+        self.rx.transport = wrap(inner);
+    }
+
     /// Tolerate (count + drop) undecodable received frames. See the
     /// field docs: required when the *peer's* sender is impaired.
     fn set_tolerant(&mut self, on: bool) {
@@ -775,6 +786,44 @@ impl Transport for DisconnectedTransport {
     }
     fn label(&self) -> &'static str {
         "placeholder"
+    }
+}
+
+/// The raw VM-side transport halves of an in-process link, used by
+/// the replay driver ([`crate::coordinator::replay`]) to play a
+/// recorded frame schedule against a live HDL endpoint: `inject_*`
+/// carry guest→device frames verbatim into the endpoint's receive
+/// transports, `observe_*` expose every device→guest frame it sends.
+/// Built by [`Endpoint::inproc_hdl_with_taps`].
+pub struct ReplayTaps {
+    /// Guest→device injection, pair A (VM-initiated MMIO).
+    pub inject_a: InProcTransport,
+    /// Guest→device injection, pair B (HDL-initiated DMA/IRQ responses).
+    pub inject_b: InProcTransport,
+    /// Device→guest observation, pair A.
+    pub observe_a: InProcTransport,
+    /// Device→guest observation, pair B.
+    pub observe_b: InProcTransport,
+}
+
+impl ReplayTaps {
+    /// Inject one recorded guest→device frame on channel `chan`
+    /// (0 = pair A, 1 = pair B).
+    pub fn inject(&mut self, chan: u8, frame: &[u8]) -> Result<()> {
+        match chan {
+            0 => self.inject_a.send(frame),
+            1 => self.inject_b.send(frame),
+            c => Err(Error::link(format!("replay: no such channel {c}"))),
+        }
+    }
+
+    /// Pop the next observed device→guest frame on channel `chan`.
+    pub fn observe(&mut self, chan: u8) -> Result<Option<Vec<u8>>> {
+        match chan {
+            0 => self.observe_a.try_recv(),
+            1 => self.observe_b.try_recv(),
+            c => Err(Error::link(format!("replay: no such channel {c}"))),
+        }
     }
 }
 
@@ -892,6 +941,35 @@ impl Endpoint {
             LinkPair::new("B@hdl", Box::new(b_req_tx), Box::new(b_resp_rx), session_hdl),
         );
         (vm, hdl)
+    }
+
+    /// Create an in-process **HDL** endpoint for device `device` whose
+    /// VM-side halves are handed back raw, as [`ReplayTaps`] — the
+    /// replay driver injects recorded guest→device frames and observes
+    /// device→guest frames directly at the transport level, with no
+    /// reliable VM endpoint (and no VM) in the loop. Wiring is
+    /// byte-identical to the HDL half of [`Endpoint::inproc_pair`].
+    pub fn inproc_hdl_with_taps(device: u8) -> (Endpoint, ReplayTaps) {
+        use super::transport::make_inproc_pair;
+        // Pair A: VM → HDL requests; HDL → VM responses.
+        let (a_req_tx, a_req_rx) = make_inproc_pair();
+        let (a_resp_tx, a_resp_rx) = make_inproc_pair();
+        // Pair B: HDL → VM requests; VM → HDL responses.
+        let (b_req_tx, b_req_rx) = make_inproc_pair();
+        let (b_resp_tx, b_resp_rx) = make_inproc_pair();
+        let mut hdl = Endpoint::new(
+            Side::Hdl,
+            LinkPair::new("A@hdl", Box::new(a_resp_tx), Box::new(a_req_rx), 1),
+            LinkPair::new("B@hdl", Box::new(b_req_tx), Box::new(b_resp_rx), 1),
+        );
+        hdl.set_device_id(device);
+        let taps = ReplayTaps {
+            inject_a: a_req_tx,
+            inject_b: b_resp_tx,
+            observe_a: a_resp_rx,
+            observe_b: b_req_rx,
+        };
+        (hdl, taps)
     }
 
     /// Rendezvous directory for device `device` under the base
@@ -1058,6 +1136,26 @@ impl Endpoint {
         self.pair_b.wrap_tx(|t| {
             Box::new(ImpairedTransport::new(t, c, stream_seed(c.seed, dev, side, 1)))
         });
+    }
+
+    /// Tap all four of this endpoint's transports into a frame log
+    /// ([`crate::link::recorder`]). Call on the **HDL** endpoint, and
+    /// *after* [`Endpoint::impair`]: the tap then wraps outermost on
+    /// the transmit direction, so the log keeps the well-formed
+    /// pre-impairment frames the device produced, while the receive
+    /// tap sees exactly the (possibly mangled) frames that arrived.
+    pub fn record(&mut self, sink: &RecorderSink) {
+        let dev = self.device;
+        for (pair, chan) in [(&mut self.pair_a, 0u8), (&mut self.pair_b, 1u8)] {
+            let s = sink.clone();
+            pair.wrap_tx(move |t| {
+                Box::new(RecordingTransport::new(t, s, dev, chan))
+            });
+            let s = sink.clone();
+            pair.wrap_rx(move |t| {
+                Box::new(RecordingTransport::new(t, s, dev, chan))
+            });
+        }
     }
 
     /// Advance both pairs' poll-round retransmit clocks without a full

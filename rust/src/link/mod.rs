@@ -22,12 +22,19 @@
 pub mod channel;
 pub mod impair;
 pub mod msg;
+pub mod recorder;
 pub mod transport;
 pub mod udp;
 
-pub use channel::{Endpoint, LinkPair, ReliableRx, ReliableTx, RxStats, TxStats};
+pub use channel::{
+    Endpoint, LinkPair, ReliableRx, ReliableTx, ReplayTaps, RxStats, TxStats,
+};
 pub use impair::{ImpairCfg, ImpairDir, ImpairedTransport};
 pub use msg::{LinkMode, Msg, Side};
+pub use recorder::{
+    DeviceFinal, DeviceMeta, FrameEvent, RecordMeta, RecorderSink, Recording,
+    RecordingTransport,
+};
 pub use transport::{
     make_inproc_pair, Doorbell, InProcTransport, Transport, UdsListener, UdsTransport,
 };

@@ -1,0 +1,875 @@
+//! Record/replay frame log: a transport decorator that taps every
+//! frame crossing the HDL endpoint into a versioned, length-prefixed
+//! binary log (`run.vhrec`), plus the pure codec for that format.
+//!
+//! The tap sits at the **raw transport** level, below the reliable
+//! channel — so the log captures exactly what the wire carried:
+//! handshakes, acks, retransmits, duplicated/corrupted frames from an
+//! impaired peer, everything. Since PR 1 device cycle counts are a
+//! pure function of the delivered message sequence, the guest→device
+//! half of this log is a complete, VM-free reproduction recipe for
+//! the run: `coordinator::replay` feeds it back into fresh HDL lanes
+//! and asserts the device→guest bytes and final cycle counts match.
+//!
+//! Layout (all integers little-endian):
+//!
+//! ```text
+//! header:  magic "VHRC" | version u16 | seed u64 | scenario str
+//!          | git str | impair str | device_count u32 | DeviceMeta…
+//! event:   tag u8 = 1 | dir u8 | device u8 | chan u8 | len u32 | bytes
+//! trailer: tag u8 = 2 | device_count u32 | (cycles u64, records u64)…
+//! str:     len u32 | utf-8 bytes
+//! ```
+//!
+//! A finalized log ends with exactly one trailer; a log from a run
+//! that died early is *partial* (no trailer) but still event-aligned:
+//! the sink only ever buffers whole events and flushes them on drop,
+//! so an error path never leaves a torn frame mid-file.
+//!
+//! Decoding is fully bounds-checked and never panics: this file is in
+//! the `cargo xtask analyze` panic-audit scope, and the fuzz suite
+//! (`rust/tests/recording_fuzz.rs`) mutates encoded logs to hold the
+//! "structured error, never a panic" line.
+
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex, MutexGuard};
+
+use super::transport::{Doorbell, Transport};
+use crate::{Error, Result};
+
+/// Log file magic ("VHRC": VM-HDL ReCording).
+pub const REC_MAGIC: [u8; 4] = *b"VHRC";
+/// Current log format version; bump on any layout change.
+pub const REC_VERSION: u16 = 1;
+/// File name of the frame log inside a recording directory.
+pub const REC_FILE: &str = "run.vhrec";
+
+const TAG_FRAME: u8 = 1;
+const TAG_TRAILER: u8 = 2;
+/// Upper bound on a single logged frame (wire frames are < 64 KiB;
+/// the slack keeps the bound from ever being the thing that breaks).
+pub const MAX_FRAME_LEN: usize = 1 << 24;
+const MAX_STR_LEN: usize = 1 << 16;
+const MAX_DEVICES: usize = 256;
+
+/// Direction of a logged frame, relative to the recorded HDL side.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dir {
+    /// VM/guest → device: the replay *schedule* (re-injected verbatim).
+    GuestToDevice,
+    /// Device → guest: the replay *oracle* (compared byte-for-byte).
+    DeviceToGuest,
+}
+
+impl Dir {
+    fn tag(self) -> u8 {
+        match self {
+            Dir::GuestToDevice => 0,
+            Dir::DeviceToGuest => 1,
+        }
+    }
+
+    fn from_tag(t: u8) -> Result<Dir> {
+        match t {
+            0 => Ok(Dir::GuestToDevice),
+            1 => Ok(Dir::DeviceToGuest),
+            other => Err(Error::link(format!(
+                "recording: unknown direction tag {other}"
+            ))),
+        }
+    }
+}
+
+/// Per-device elaboration parameters, enough for the replay driver to
+/// rebuild a cycle-identical `Platform` without the original CLI.
+/// Kernel kind and link mode travel as their `FromStr` spellings so
+/// the link layer stays independent of `hdl::` types.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct DeviceMeta {
+    pub kernel: String,
+    pub n: u64,
+    pub latency: u64,
+    pub pipeline_records: u64,
+    pub link_mode: String,
+    pub bram_size: u64,
+    pub stream_fifo_depth: u64,
+    pub poll_interval: u64,
+    pub device_index: u64,
+    /// Impairment summary for this device ("" = clean link). Replay
+    /// only needs the presence bit (loss tolerance); the text is for
+    /// humans reading the header.
+    pub impair: String,
+}
+
+/// Run-level metadata written into the log header.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct RecordMeta {
+    /// Workload seed of the recorded run (metadata only — replay does
+    /// not re-generate the workload, it re-injects recorded frames).
+    pub seed: u64,
+    /// Human description of the recorded scenario/CLI invocation.
+    pub scenario: String,
+    /// `git describe --always --dirty` of the recording build.
+    pub git: String,
+    /// Global impairment summary ("" = clean links).
+    pub impair: String,
+    pub devices: Vec<DeviceMeta>,
+}
+
+/// One logged frame.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FrameEvent {
+    pub dir: Dir,
+    pub device: u8,
+    /// 0 = pair A (VM-initiated MMIO), 1 = pair B (HDL-initiated DMA/IRQ).
+    pub chan: u8,
+    pub bytes: Vec<u8>,
+}
+
+/// Per-device final state written by the trailer on clean shutdown.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct DeviceFinal {
+    pub cycles: u64,
+    pub records_done: u64,
+}
+
+/// A fully decoded log.
+#[derive(Debug, Clone)]
+pub struct Recording {
+    pub meta: RecordMeta,
+    pub events: Vec<FrameEvent>,
+    /// Present iff the run shut down cleanly (trailer written).
+    pub trailer: Option<Vec<DeviceFinal>>,
+    /// True if decoding stopped at a truncated tail (allowed only via
+    /// `allow_partial` — crash logs are usable, silently-short ones
+    /// are not).
+    pub partial: bool,
+}
+
+// ------------------------------------------------------------- encode
+
+fn put_u16(out: &mut Vec<u8>, v: u16) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_str(out: &mut Vec<u8>, s: &str) {
+    let b = s.as_bytes();
+    let chunk = b.get(..b.len().min(MAX_STR_LEN)).unwrap_or(b);
+    put_u32(out, chunk.len() as u32);
+    out.extend_from_slice(chunk);
+}
+
+/// Encode the log header for `meta`.
+pub fn encode_header(meta: &RecordMeta) -> Vec<u8> {
+    let mut out = Vec::with_capacity(256);
+    out.extend_from_slice(&REC_MAGIC);
+    put_u16(&mut out, REC_VERSION);
+    put_u64(&mut out, meta.seed);
+    put_str(&mut out, &meta.scenario);
+    put_str(&mut out, &meta.git);
+    put_str(&mut out, &meta.impair);
+    put_u32(&mut out, meta.devices.len() as u32);
+    for d in &meta.devices {
+        put_str(&mut out, &d.kernel);
+        put_u64(&mut out, d.n);
+        put_u64(&mut out, d.latency);
+        put_u64(&mut out, d.pipeline_records);
+        put_str(&mut out, &d.link_mode);
+        put_u64(&mut out, d.bram_size);
+        put_u64(&mut out, d.stream_fifo_depth);
+        put_u64(&mut out, d.poll_interval);
+        put_u64(&mut out, d.device_index);
+        put_str(&mut out, &d.impair);
+    }
+    out
+}
+
+/// Append one frame event to `out`.
+pub fn encode_frame(dir: Dir, device: u8, chan: u8, frame: &[u8], out: &mut Vec<u8>) {
+    out.push(TAG_FRAME);
+    out.push(dir.tag());
+    out.push(device);
+    out.push(chan);
+    put_u32(out, frame.len() as u32);
+    out.extend_from_slice(frame);
+}
+
+/// Append the trailer to `out`.
+pub fn encode_trailer(finals: &[DeviceFinal], out: &mut Vec<u8>) {
+    out.push(TAG_TRAILER);
+    put_u32(out, finals.len() as u32);
+    for f in finals {
+        put_u64(out, f.cycles);
+        put_u64(out, f.records_done);
+    }
+}
+
+// ------------------------------------------------------------- decode
+
+/// Bounds-checked little-endian reader over the raw log bytes. Every
+/// getter names what it was reading so a truncation error pinpoints
+/// the field, not just an offset.
+struct Rd<'a> {
+    b: &'a [u8],
+    off: usize,
+}
+
+impl<'a> Rd<'a> {
+    fn new(b: &'a [u8]) -> Self {
+        Self { b, off: 0 }
+    }
+
+    fn eof(&self) -> bool {
+        self.off >= self.b.len()
+    }
+
+    fn take(&mut self, n: usize, what: &str) -> Result<&'a [u8]> {
+        let end = self.off.checked_add(n).ok_or_else(|| {
+            Error::link(format!("recording: length overflow reading {what}"))
+        })?;
+        let s = self.b.get(self.off..end).ok_or_else(|| {
+            Error::link(format!(
+                "recording: truncated at byte {} reading {what} ({} of {} bytes left)",
+                self.off,
+                self.b.len().saturating_sub(self.off),
+                n
+            ))
+        })?;
+        self.off = end;
+        Ok(s)
+    }
+
+    fn u8(&mut self, what: &str) -> Result<u8> {
+        Ok(self.take(1, what)?.first().copied().unwrap_or(0))
+    }
+
+    fn u16(&mut self, what: &str) -> Result<u16> {
+        let s = self.take(2, what)?;
+        let mut a = [0u8; 2];
+        for (d, v) in a.iter_mut().zip(s) {
+            *d = *v;
+        }
+        Ok(u16::from_le_bytes(a))
+    }
+
+    fn u32(&mut self, what: &str) -> Result<u32> {
+        let s = self.take(4, what)?;
+        let mut a = [0u8; 4];
+        for (d, v) in a.iter_mut().zip(s) {
+            *d = *v;
+        }
+        Ok(u32::from_le_bytes(a))
+    }
+
+    fn u64(&mut self, what: &str) -> Result<u64> {
+        let s = self.take(8, what)?;
+        let mut a = [0u8; 8];
+        for (d, v) in a.iter_mut().zip(s) {
+            *d = *v;
+        }
+        Ok(u64::from_le_bytes(a))
+    }
+
+    fn str_(&mut self, what: &str) -> Result<String> {
+        let n = self.u32(what)? as usize;
+        if n > MAX_STR_LEN {
+            return Err(Error::link(format!(
+                "recording: string length {n} for {what} exceeds {MAX_STR_LEN}"
+            )));
+        }
+        let s = self.take(n, what)?;
+        String::from_utf8(s.to_vec()).map_err(|_| {
+            Error::link(format!("recording: {what} is not valid utf-8"))
+        })
+    }
+}
+
+fn decode_header(r: &mut Rd) -> Result<RecordMeta> {
+    let magic = r.take(4, "magic")?;
+    if magic != REC_MAGIC {
+        return Err(Error::link(format!(
+            "recording: bad magic {magic:02x?} (expected {REC_MAGIC:02x?})"
+        )));
+    }
+    let ver = r.u16("version")?;
+    if ver != REC_VERSION {
+        return Err(Error::link(format!(
+            "recording: unsupported version {ver} (this build reads {REC_VERSION})"
+        )));
+    }
+    let seed = r.u64("seed")?;
+    let scenario = r.str_("scenario")?;
+    let git = r.str_("git")?;
+    let impair = r.str_("impair")?;
+    let ndev = r.u32("device count")? as usize;
+    if ndev == 0 || ndev > MAX_DEVICES {
+        return Err(Error::link(format!(
+            "recording: implausible device count {ndev}"
+        )));
+    }
+    let mut devices = Vec::with_capacity(ndev);
+    for k in 0..ndev {
+        devices.push(DeviceMeta {
+            kernel: r.str_("device kernel")?,
+            n: r.u64("device n")?,
+            latency: r.u64("device latency")?,
+            pipeline_records: r.u64("device pipeline_records")?,
+            link_mode: r.str_("device link_mode")?,
+            bram_size: r.u64("device bram_size")?,
+            stream_fifo_depth: r.u64("device stream_fifo_depth")?,
+            poll_interval: r.u64("device poll_interval")?,
+            device_index: r.u64("device index")?,
+            impair: r.str_("device impair")?,
+        });
+        let got = devices.last().map(|d| d.device_index).unwrap_or(0);
+        if got != k as u64 {
+            return Err(Error::link(format!(
+                "recording: device {k} header carries index {got}"
+            )));
+        }
+    }
+    Ok(RecordMeta { seed, scenario, git, impair, devices })
+}
+
+enum Event {
+    Frame(FrameEvent),
+    Trailer(Vec<DeviceFinal>),
+}
+
+fn decode_event(r: &mut Rd, ndev: usize) -> Result<Event> {
+    match r.u8("event tag")? {
+        TAG_FRAME => {
+            let dir = Dir::from_tag(r.u8("frame direction")?)?;
+            let device = r.u8("frame device")?;
+            if usize::from(device) >= ndev {
+                return Err(Error::link(format!(
+                    "recording: frame for device {device} but header declares {ndev}"
+                )));
+            }
+            let chan = r.u8("frame channel")?;
+            if chan > 1 {
+                return Err(Error::link(format!(
+                    "recording: frame channel {chan} (only pairs A=0/B=1 exist)"
+                )));
+            }
+            let len = r.u32("frame length")? as usize;
+            if len > MAX_FRAME_LEN {
+                return Err(Error::link(format!(
+                    "recording: frame length {len} exceeds {MAX_FRAME_LEN}"
+                )));
+            }
+            let bytes = r.take(len, "frame bytes")?.to_vec();
+            Ok(Event::Frame(FrameEvent { dir, device, chan, bytes }))
+        }
+        TAG_TRAILER => {
+            let n = r.u32("trailer device count")? as usize;
+            if n != ndev {
+                return Err(Error::link(format!(
+                    "recording: trailer covers {n} devices, header declares {ndev}"
+                )));
+            }
+            let mut finals = Vec::with_capacity(n);
+            for _ in 0..n {
+                finals.push(DeviceFinal {
+                    cycles: r.u64("trailer cycles")?,
+                    records_done: r.u64("trailer records")?,
+                });
+            }
+            Ok(Event::Trailer(finals))
+        }
+        other => Err(Error::link(format!(
+            "recording: unknown event tag {other} at byte {}",
+            r.off.saturating_sub(1)
+        ))),
+    }
+}
+
+/// Decode a complete log. With `allow_partial`, a truncated tail (a
+/// run that died before writing its trailer, or mid-event on a hard
+/// kill) yields the decodable prefix with `partial = true`; without
+/// it, truncation is an error. Corruption *before* the tail — bad
+/// magic, unknown tags, bytes after the trailer — is always an error.
+pub fn decode_recording(bytes: &[u8], allow_partial: bool) -> Result<Recording> {
+    let mut r = Rd::new(bytes);
+    let meta = decode_header(&mut r)?;
+    let ndev = meta.devices.len();
+    let mut events = Vec::new();
+    let mut trailer: Option<Vec<DeviceFinal>> = None;
+    let mut partial = false;
+    while !r.eof() {
+        if trailer.is_some() {
+            return Err(Error::link(format!(
+                "recording: {} trailing bytes after the trailer",
+                bytes.len().saturating_sub(r.off)
+            )));
+        }
+        match decode_event(&mut r, ndev) {
+            Ok(Event::Frame(f)) => events.push(f),
+            Ok(Event::Trailer(t)) => trailer = Some(t),
+            Err(e) => {
+                if allow_partial {
+                    partial = true;
+                    break;
+                }
+                return Err(e);
+            }
+        }
+    }
+    if trailer.is_none() && !allow_partial {
+        return Err(Error::link(
+            "recording: no trailer (run did not shut down cleanly); \
+             pass allow_partial to replay the prefix",
+        ));
+    }
+    if trailer.is_none() {
+        partial = true;
+    }
+    Ok(Recording { meta, events, trailer, partial })
+}
+
+/// Read and decode `dir/run.vhrec` (or `dir` itself if it is a file).
+pub fn read_recording(dir: &Path, allow_partial: bool) -> Result<Recording> {
+    let path = if dir.is_file() { dir.to_path_buf() } else { dir.join(REC_FILE) };
+    let bytes = std::fs::read(&path).map_err(|e| {
+        Error::link(format!("recording: cannot read {}: {e}", path.display()))
+    })?;
+    decode_recording(&bytes, allow_partial)
+}
+
+/// Best-effort `git describe --always --dirty` for the header.
+pub fn git_describe() -> String {
+    let out = std::process::Command::new("git")
+        .args(["describe", "--always", "--dirty"])
+        .output();
+    match out {
+        Ok(o) if o.status.success() => {
+            String::from_utf8_lossy(&o.stdout).trim().to_string()
+        }
+        _ => "unknown".to_string(),
+    }
+}
+
+// --------------------------------------------------------------- sink
+
+/// Shared state behind a [`RecorderSink`]. All taps of one run write
+/// through one instance, and all tap calls happen on the one HDL
+/// thread — so the log is a totally ordered, causally consistent view
+/// of the run's link traffic.
+struct RecInner {
+    out: Option<std::io::BufWriter<std::fs::File>>,
+    path: PathBuf,
+    /// Reused event staging buffer (one whole event per write, so a
+    /// flush can never leave a torn frame mid-file).
+    buf: Vec<u8>,
+    frames: u64,
+    payload_bytes: u64,
+    finished: bool,
+    /// First write error, if any (recording must never take down the
+    /// run it is observing — errors are latched and surfaced at
+    /// finish time).
+    error: Option<String>,
+}
+
+impl RecInner {
+    fn write_event(&mut self, event: &[u8]) {
+        let Some(out) = self.out.as_mut() else {
+            return;
+        };
+        if let Err(e) = out.write_all(event) {
+            self.error = Some(format!("write {}: {e}", self.path.display()));
+            self.out = None;
+        }
+    }
+
+    fn flush(&mut self) {
+        if let Some(out) = self.out.as_mut() {
+            if let Err(e) = out.flush() {
+                self.error = Some(format!("flush {}: {e}", self.path.display()));
+                self.out = None;
+            }
+        }
+    }
+}
+
+impl Drop for RecInner {
+    /// Error-path insurance: if the run dies before `finish`, flush
+    /// whatever complete events are buffered so the partial log on
+    /// disk is still decodable (`allow_partial`) — no truncated
+    /// recordings on the error path.
+    fn drop(&mut self) {
+        self.flush();
+    }
+}
+
+/// Cloneable handle to one run's frame log. Clones share the file;
+/// one clone goes into each [`RecordingTransport`] tap and one stays
+/// with the run handle to write the trailer at shutdown.
+#[derive(Clone)]
+pub struct RecorderSink {
+    inner: Arc<Mutex<RecInner>>,
+}
+
+impl RecorderSink {
+    /// Create `dir/run.vhrec` and write the header.
+    pub fn create(dir: &Path, meta: &RecordMeta) -> Result<RecorderSink> {
+        std::fs::create_dir_all(dir).map_err(|e| {
+            Error::link(format!("recording: create {}: {e}", dir.display()))
+        })?;
+        let path = dir.join(REC_FILE);
+        let f = std::fs::File::create(&path).map_err(|e| {
+            Error::link(format!("recording: create {}: {e}", path.display()))
+        })?;
+        let mut out = std::io::BufWriter::new(f);
+        out.write_all(&encode_header(meta)).map_err(|e| {
+            Error::link(format!("recording: write header {}: {e}", path.display()))
+        })?;
+        Ok(RecorderSink {
+            inner: Arc::new(Mutex::new(RecInner {
+                out: Some(out),
+                path,
+                buf: Vec::with_capacity(256),
+                frames: 0,
+                payload_bytes: 0,
+                finished: false,
+                error: None,
+            })),
+        })
+    }
+
+    /// Ride through poisoning: a tap on a panicked lane must not
+    /// cascade a second panic out of the recorder (the inner state
+    /// stays structurally valid under every partial update).
+    fn lock(&self) -> MutexGuard<'_, RecInner> {
+        self.inner.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Append one frame event. Infallible by design: a full disk must
+    /// not fail the co-sim run — the error is latched and reported by
+    /// [`RecorderSink::finish`].
+    pub fn log_frame(&self, dir: Dir, device: u8, chan: u8, frame: &[u8]) {
+        let mut g = self.lock();
+        if g.finished || g.out.is_none() {
+            return;
+        }
+        if frame.len() > MAX_FRAME_LEN {
+            g.error = Some(format!(
+                "frame of {} bytes exceeds MAX_FRAME_LEN",
+                frame.len()
+            ));
+            g.out = None;
+            return;
+        }
+        let mut buf = std::mem::take(&mut g.buf);
+        buf.clear();
+        encode_frame(dir, device, chan, frame, &mut buf);
+        g.write_event(&buf);
+        g.buf = buf;
+        g.frames += 1;
+        g.payload_bytes += frame.len() as u64;
+    }
+
+    /// Write the trailer (per-device final cycles/records) and flush.
+    /// Returns the log path; surfaces any latched write error.
+    pub fn finish(&self, finals: &[DeviceFinal]) -> Result<PathBuf> {
+        let mut g = self.lock();
+        if !g.finished {
+            let mut buf = std::mem::take(&mut g.buf);
+            buf.clear();
+            encode_trailer(finals, &mut buf);
+            g.write_event(&buf);
+            g.buf = buf;
+            g.flush();
+            g.finished = true;
+        }
+        if let Some(e) = g.error.as_ref() {
+            return Err(Error::link(format!("recording failed: {e}")));
+        }
+        Ok(g.path.clone())
+    }
+
+    /// Flush without a trailer (error-path shutdown): the log stays a
+    /// decodable partial recording.
+    pub fn abort(&self) {
+        let mut g = self.lock();
+        g.flush();
+        g.finished = true;
+    }
+
+    /// Path of the log file.
+    pub fn path(&self) -> PathBuf {
+        self.lock().path.clone()
+    }
+
+    /// Frames logged so far.
+    pub fn frames(&self) -> u64 {
+        self.lock().frames
+    }
+
+    /// First latched write error, if any.
+    pub fn error(&self) -> Option<String> {
+        self.lock().error.clone()
+    }
+}
+
+// ---------------------------------------------------------------- tap
+
+/// Transport decorator that logs every frame through it (same shape
+/// as [`super::impair::ImpairedTransport`]). Installed on the **HDL**
+/// endpoint's four transports, so `send` is device→guest and receive
+/// is guest→device. On the transmit direction the tap wraps
+/// *outermost* — an impaired inner transport drops/corrupts *after*
+/// the tap, so the log keeps the well-formed pre-impairment frame the
+/// device actually produced (what replay must reproduce).
+pub struct RecordingTransport {
+    inner: Box<dyn Transport>,
+    sink: RecorderSink,
+    device: u8,
+    chan: u8,
+}
+
+impl RecordingTransport {
+    pub fn new(
+        inner: Box<dyn Transport>,
+        sink: RecorderSink,
+        device: u8,
+        chan: u8,
+    ) -> Self {
+        Self { inner, sink, device, chan }
+    }
+}
+
+impl Transport for RecordingTransport {
+    fn send(&mut self, frame: &[u8]) -> Result<()> {
+        self.sink
+            .log_frame(Dir::DeviceToGuest, self.device, self.chan, frame);
+        self.inner.send(frame)
+    }
+
+    fn try_recv(&mut self) -> Result<Option<Vec<u8>>> {
+        let f = self.inner.try_recv()?;
+        if let Some(fr) = f.as_ref() {
+            self.sink
+                .log_frame(Dir::GuestToDevice, self.device, self.chan, fr);
+        }
+        Ok(f)
+    }
+
+    fn try_recv_into(&mut self, out: &mut Vec<u8>) -> Result<bool> {
+        if self.inner.try_recv_into(out)? {
+            self.sink
+                .log_frame(Dir::GuestToDevice, self.device, self.chan, out);
+            return Ok(true);
+        }
+        Ok(false)
+    }
+
+    fn recv_timeout(&mut self, timeout: std::time::Duration) -> Result<Option<Vec<u8>>> {
+        let f = self.inner.recv_timeout(timeout)?;
+        if let Some(fr) = f.as_ref() {
+            self.sink
+                .log_frame(Dir::GuestToDevice, self.device, self.chan, fr);
+        }
+        Ok(f)
+    }
+
+    fn ready(&mut self) -> Result<bool> {
+        self.inner.ready()
+    }
+
+    fn set_doorbell(&mut self, db: Arc<Doorbell>) {
+        self.inner.set_doorbell(db);
+    }
+
+    fn peek_reconnected(&self) -> bool {
+        self.inner.peek_reconnected()
+    }
+
+    fn connected(&self) -> bool {
+        self.inner.connected()
+    }
+
+    fn reconnect(&mut self) -> Result<bool> {
+        self.inner.reconnect()
+    }
+
+    fn take_reconnected(&mut self) -> bool {
+        self.inner.take_reconnected()
+    }
+
+    fn lossy(&self) -> bool {
+        self.inner.lossy()
+    }
+
+    fn label(&self) -> &'static str {
+        "record"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::link::transport::make_inproc_pair;
+
+    fn meta2() -> RecordMeta {
+        RecordMeta {
+            seed: 42,
+            scenario: "test scenario".into(),
+            git: "deadbeef-dirty".into(),
+            impair: "drop=0.05".into(),
+            devices: (0..2)
+                .map(|k| DeviceMeta {
+                    kernel: "sort".into(),
+                    n: 1024,
+                    latency: 1256,
+                    pipeline_records: 8,
+                    link_mode: "mmio".into(),
+                    bram_size: 65536,
+                    stream_fifo_depth: 64,
+                    poll_interval: 1,
+                    device_index: k,
+                    impair: if k == 0 { String::new() } else { "dup=0.1".into() },
+                })
+                .collect(),
+        }
+    }
+
+    fn sample_log(meta: &RecordMeta, with_trailer: bool) -> Vec<u8> {
+        let mut b = encode_header(meta);
+        encode_frame(Dir::GuestToDevice, 0, 0, b"\x48\x56req", &mut b);
+        encode_frame(Dir::DeviceToGuest, 0, 0, b"\x48\x56resp", &mut b);
+        encode_frame(Dir::GuestToDevice, 1, 1, b"", &mut b);
+        if with_trailer {
+            encode_trailer(
+                &[
+                    DeviceFinal { cycles: 1000, records_done: 3 },
+                    DeviceFinal { cycles: 7, records_done: 0 },
+                ],
+                &mut b,
+            );
+        }
+        b
+    }
+
+    #[test]
+    fn header_and_events_roundtrip() {
+        let meta = meta2();
+        let rec = decode_recording(&sample_log(&meta, true), false).unwrap();
+        assert_eq!(rec.meta, meta);
+        assert_eq!(rec.events.len(), 3);
+        assert_eq!(rec.events[0].dir, Dir::GuestToDevice);
+        assert_eq!(rec.events[1].bytes, b"\x48\x56resp");
+        assert_eq!(rec.events[2].device, 1);
+        assert_eq!(rec.events[2].chan, 1);
+        let finals = rec.trailer.unwrap();
+        assert_eq!(finals[0], DeviceFinal { cycles: 1000, records_done: 3 });
+        assert!(!rec.partial);
+    }
+
+    #[test]
+    fn missing_trailer_needs_allow_partial() {
+        let b = sample_log(&meta2(), false);
+        let err = decode_recording(&b, false).unwrap_err().to_string();
+        assert!(err.contains("no trailer"), "{err}");
+        let rec = decode_recording(&b, true).unwrap();
+        assert!(rec.partial);
+        assert!(rec.trailer.is_none());
+        assert_eq!(rec.events.len(), 3);
+    }
+
+    #[test]
+    fn truncated_tail_decodes_partial_prefix() {
+        let full = sample_log(&meta2(), false);
+        // Chop mid-way through the last event.
+        let cut = &full[..full.len() - 1];
+        assert!(decode_recording(cut, false).is_err());
+        let rec = decode_recording(cut, true).unwrap();
+        assert!(rec.partial);
+        assert_eq!(rec.events.len(), 2, "whole prefix events survive");
+    }
+
+    #[test]
+    fn version_bump_rejected() {
+        let mut b = sample_log(&meta2(), true);
+        b[4] = REC_VERSION as u8 + 1;
+        let err = decode_recording(&b, true).unwrap_err().to_string();
+        assert!(err.contains("version"), "{err}");
+    }
+
+    #[test]
+    fn garbage_after_trailer_rejected() {
+        let mut b = sample_log(&meta2(), true);
+        b.push(0xff);
+        let err = decode_recording(&b, true).unwrap_err().to_string();
+        assert!(err.contains("after the trailer"), "{err}");
+    }
+
+    #[test]
+    fn sink_writes_decodable_log_and_trailer() {
+        let dir = std::env::temp_dir()
+            .join(format!("vhrec-test-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let sink = RecorderSink::create(&dir, &meta2()).unwrap();
+        sink.log_frame(Dir::GuestToDevice, 0, 0, b"abc");
+        sink.log_frame(Dir::DeviceToGuest, 1, 1, b"defg");
+        assert_eq!(sink.frames(), 2);
+        let path = sink
+            .finish(&[
+                DeviceFinal { cycles: 10, records_done: 1 },
+                DeviceFinal { cycles: 20, records_done: 2 },
+            ])
+            .unwrap();
+        let rec = read_recording(&path, false).unwrap();
+        assert_eq!(rec.events.len(), 2);
+        assert_eq!(rec.trailer.unwrap().len(), 2);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn dropped_sink_flushes_partial_log() {
+        let dir = std::env::temp_dir()
+            .join(format!("vhrec-drop-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        {
+            let sink = RecorderSink::create(&dir, &meta2()).unwrap();
+            sink.log_frame(Dir::GuestToDevice, 0, 0, b"orphan");
+            // No finish(): simulate a run that died.
+        }
+        let rec = read_recording(&dir, true).unwrap();
+        assert!(rec.partial);
+        assert_eq!(rec.events.len(), 1);
+        assert_eq!(rec.events[0].bytes, b"orphan");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn recording_transport_taps_both_directions() {
+        let dir = std::env::temp_dir()
+            .join(format!("vhrec-tap-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let sink = RecorderSink::create(&dir, &meta2()).unwrap();
+        let (tx_end, mut peer) = make_inproc_pair();
+        let mut tap =
+            RecordingTransport::new(Box::new(tx_end), sink.clone(), 1, 0);
+        tap.send(b"out-frame").unwrap();
+        peer.send(b"in-frame").unwrap();
+        assert_eq!(tap.try_recv().unwrap().unwrap(), b"in-frame");
+        let path = sink.finish(&[DeviceFinal::default(); 2]).unwrap();
+        let rec = read_recording(&path, false).unwrap();
+        assert_eq!(rec.events.len(), 2);
+        assert_eq!(rec.events[0].dir, Dir::DeviceToGuest);
+        assert_eq!(rec.events[0].bytes, b"out-frame");
+        assert_eq!(rec.events[1].dir, Dir::GuestToDevice);
+        assert_eq!(rec.events[1].bytes, b"in-frame");
+        assert_eq!(rec.events[1].device, 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

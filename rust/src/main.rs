@@ -20,6 +20,13 @@
 //! vmhdl hdl-side  --dir <sockets> [...]    the HDL simulator process
 //!                 (UDS, or --transport udp --udp-port BASE)
 //! vmhdl vm-side   [--dir <sockets>] [...]  the VM process (UDS or udp)
+//! vmhdl replay    <dir> [--checkpoint K]   VM-less replay of a recorded run
+//!                 (record one with `cosim --record <dir>`; replay feeds the
+//!                 logged guest→device frames back into fresh platform lanes
+//!                 and asserts the device→guest byte stream and per-device
+//!                 final cycle counts match the log exactly; --checkpoint K
+//!                 forks the run through a snapshot/restore round-trip after
+//!                 K injected frames)
 //! vmhdl rtt       [--iters N]              MMIO round-trip microbench (Table III)
 //! vmhdl irq       [--iters N]              interrupt-latency microbench
 //! vmhdl golden    [--records N] [--backend native|pjrt]
@@ -64,6 +71,11 @@ fn run(args: &[String]) -> Result<()> {
         print_usage();
         return Ok(());
     };
+    if cmd == "replay" {
+        // Positional <dir> before the flag pairs — handled before the
+        // generic `--key value` parser.
+        return cmd_replay(&args[1..]);
+    }
     let mut cfg = Config::default();
     cfg.apply_args(&args[1..])?;
     match cmd.as_str() {
@@ -96,9 +108,61 @@ fn run(args: &[String]) -> Result<()> {
 fn print_usage() {
     println!(
         "vmhdl — VM-HDL co-simulation framework (paper reproduction)\n\
-         commands: cosim, hdl-side, vm-side, rtt, irq, golden, flow, resources, topology\n\
-         options:  --config file.conf plus the keys in rust/src/config.rs"
+         commands: cosim, replay, hdl-side, vm-side, rtt, irq, golden, flow, \
+         resources, topology\n\
+         options:  --config file.conf plus the keys in rust/src/config.rs\n\
+         replay:   vmhdl replay <dir> [--checkpoint K] — offline replay of a \
+         `cosim --record <dir>` recording, no VM required"
     );
+}
+
+fn cmd_replay(args: &[String]) -> Result<()> {
+    let usage = "usage: vmhdl replay <dir> [--checkpoint K]";
+    let Some(dir) = args.first().filter(|a| !a.starts_with("--")) else {
+        return Err(vmhdl::Error::config(usage));
+    };
+    let mut checkpoint: Option<usize> = None;
+    let rest = &args[1..];
+    let mut i = 0;
+    while i < rest.len() {
+        match rest[i].as_str() {
+            "--checkpoint" => {
+                let v = rest
+                    .get(i + 1)
+                    .ok_or_else(|| vmhdl::Error::config("--checkpoint needs a value"))?;
+                checkpoint = Some(
+                    v.parse()
+                        .map_err(|_| vmhdl::Error::config(format!("bad --checkpoint: {v:?}")))?,
+                );
+                i += 2;
+            }
+            other => {
+                return Err(vmhdl::Error::config(format!(
+                    "replay: unknown flag {other:?} ({usage})"
+                )))
+            }
+        }
+    }
+    let rep = vmhdl::coordinator::replay::replay_dir(std::path::Path::new(dir), checkpoint)?;
+    println!(
+        "replay: {} devices, {} recorded events — {} frames injected, {} device→guest \
+         frames byte-checked{}{}",
+        rep.devices,
+        rep.events,
+        rep.injected,
+        rep.compared,
+        if rep.checkpoint_forked { ", forked through a snapshot checkpoint" } else { "" },
+        if rep.partial { " (partial crash log: trailer checks skipped)" } else { "" },
+    );
+    for (k, (cycles, records)) in rep
+        .per_device_cycles
+        .iter()
+        .zip(rep.per_device_records.iter())
+        .enumerate()
+    {
+        println!("  dev{k}: {cycles} cycles, {records} records — matches the recording");
+    }
+    Ok(())
 }
 
 fn cmd_cosim(cfg: &Config) -> Result<()> {

@@ -1,0 +1,199 @@
+//! Replay regression corpus: every spec under
+//! `tests/corpus/recordings/` names a scenario that must stay
+//! replayable. With a committed `run.vhrec` next to the spec the test
+//! replays that exact log (a regression gate on cycle accounting and
+//! the wire format); without one it records the scenario fresh and
+//! replays its own log — so plain `cargo test -q` needs nothing but
+//! the specs. See the corpus `README.md` for the re-record protocol.
+
+use std::path::{Path, PathBuf};
+
+use vmhdl::coordinator::cosim::CoSimCfg;
+use vmhdl::coordinator::replay::replay_dir;
+use vmhdl::coordinator::scenario::{self, ShardPolicy};
+use vmhdl::hdl::kernel::KernelKind;
+use vmhdl::link::recorder::REC_FILE;
+use vmhdl::link::ImpairCfg;
+
+#[derive(Debug)]
+struct Spec {
+    name: String,
+    devices: usize,
+    records: usize,
+    seed: u64,
+    depth: usize,
+    n: usize,
+    kernels: Vec<(usize, KernelKind)>,
+    device_n: Vec<(usize, usize)>,
+    impair: Option<ImpairCfg>,
+}
+
+fn corpus_dir() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/corpus/recordings")
+}
+
+fn num(v: &str) -> u64 {
+    let v = v.trim();
+    let parsed = match v.strip_prefix("0x") {
+        Some(hex) => u64::from_str_radix(hex, 16),
+        None => v.parse(),
+    };
+    parsed.unwrap_or_else(|e| panic!("bad number {v:?} in spec: {e}"))
+}
+
+fn parse_spec(path: &Path) -> Spec {
+    let text = std::fs::read_to_string(path)
+        .unwrap_or_else(|e| panic!("read {}: {e}", path.display()));
+    let mut spec = Spec {
+        name: String::new(),
+        devices: 1,
+        records: 3,
+        seed: 1,
+        depth: 1,
+        n: 256,
+        kernels: Vec::new(),
+        device_n: Vec::new(),
+        impair: None,
+    };
+    for line in text.lines() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let (key, value) = line
+            .split_once('=')
+            .unwrap_or_else(|| panic!("{}: not a key = value line: {line:?}", path.display()));
+        let (key, value) = (key.trim(), value.trim());
+        match key.split_once('.') {
+            Some(("kernel", k)) => {
+                let kind: KernelKind = value
+                    .parse()
+                    .unwrap_or_else(|e| panic!("{}: {e}", path.display()));
+                spec.kernels.push((num(k) as usize, kind));
+            }
+            Some(("device_n", k)) => {
+                spec.device_n.push((num(k) as usize, num(value) as usize));
+            }
+            Some(("impair", field)) => {
+                let ic = spec.impair.get_or_insert_with(ImpairCfg::default);
+                match field {
+                    "drop_ppm" => ic.drop_ppm = num(value) as u32,
+                    "dup_ppm" => ic.dup_ppm = num(value) as u32,
+                    "reorder_ppm" => ic.reorder_ppm = num(value) as u32,
+                    "corrupt_ppm" => ic.corrupt_ppm = num(value) as u32,
+                    "seed" => ic.seed = num(value),
+                    other => panic!("{}: unknown impair field {other:?}", path.display()),
+                }
+            }
+            _ => match key {
+                "name" => spec.name = value.to_string(),
+                "devices" => spec.devices = num(value) as usize,
+                "records" => spec.records = num(value) as usize,
+                "seed" => spec.seed = num(value),
+                "depth" => spec.depth = num(value) as usize,
+                "n" => spec.n = num(value) as usize,
+                other => panic!("{}: unknown key {other:?}", path.display()),
+            },
+        }
+    }
+    assert!(!spec.name.is_empty(), "{}: spec has no name", path.display());
+    spec
+}
+
+fn spec_paths() -> Vec<PathBuf> {
+    let mut specs: Vec<PathBuf> = std::fs::read_dir(corpus_dir())
+        .expect("corpus directory missing")
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .filter(|p| p.extension().is_some_and(|x| x == "spec"))
+        .collect();
+    specs.sort();
+    specs
+}
+
+/// Run the spec's scenario live with `--record` pointed at `dir`.
+fn record(spec: &Spec, dir: &Path) {
+    let _ = std::fs::remove_dir_all(dir);
+    let mut cfg = CoSimCfg {
+        devices: spec.devices,
+        ..Default::default()
+    };
+    cfg.platform.kernel.n = spec.n;
+    cfg.device_kernel = spec.kernels.clone();
+    cfg.device_n = spec.device_n.clone();
+    cfg.impair = spec.impair;
+    cfg.seed = spec.seed;
+    cfg.record = Some(dir.to_path_buf());
+    scenario::run_sharded_offload_depth(
+        cfg,
+        spec.records,
+        spec.seed,
+        ShardPolicy::RoundRobin,
+        spec.depth,
+        None,
+    )
+    .unwrap_or_else(|e| panic!("{}: recording run failed: {e}", spec.name));
+}
+
+#[test]
+fn corpus_recordings_replay_bit_exactly() {
+    let rerecord = std::env::var("VMHDL_CORPUS_RERECORD").is_ok_and(|v| v == "1");
+    for path in spec_paths() {
+        let spec = parse_spec(&path);
+        let committed = corpus_dir().join(&spec.name);
+        let (dir, scratch) = if committed.join(REC_FILE).exists() && !rerecord {
+            (committed, false)
+        } else if rerecord {
+            record(&spec, &committed);
+            (committed, false)
+        } else {
+            let dir = std::env::temp_dir()
+                .join(format!("vhcorpus-{}-{}", spec.name, std::process::id()));
+            record(&spec, &dir);
+            (dir, true)
+        };
+        let rep = replay_dir(&dir, None)
+            .unwrap_or_else(|e| panic!("{}: replay diverged: {e}", spec.name));
+        assert_eq!(rep.devices, spec.devices, "{}", spec.name);
+        assert!(!rep.partial, "{}: clean run must carry a trailer", spec.name);
+        assert_eq!(
+            rep.per_device_records.iter().sum::<u64>(),
+            spec.records as u64,
+            "{}",
+            spec.name
+        );
+        assert!(
+            rep.compared > 0,
+            "{}: no device→guest payload frames compared",
+            spec.name
+        );
+        if scratch {
+            let _ = std::fs::remove_dir_all(&dir);
+        }
+    }
+}
+
+#[test]
+fn corpus_covers_the_acceptance_matrix() {
+    let specs: Vec<Spec> = spec_paths().iter().map(|p| parse_spec(p)).collect();
+    assert_eq!(specs.len(), 3, "corpus must hold exactly the three acceptance specs");
+    assert!(
+        specs
+            .iter()
+            .any(|s| s.devices == 1 && s.kernels.is_empty() && s.impair.is_none()),
+        "clean single-device sort spec missing"
+    );
+    assert!(
+        specs
+            .iter()
+            .any(|s| s.devices == 3 && s.depth == 2 && s.kernels.len() == 2),
+        "mixed-fleet depth-2 spec missing"
+    );
+    assert!(
+        specs.iter().any(|s| {
+            s.impair
+                .as_ref()
+                .is_some_and(|i| i.drop_ppm == 50_000)
+        }),
+        "impaired drop=0.05 spec missing"
+    );
+}

@@ -1,0 +1,183 @@
+//! Record→replay round-trip properties: any live co-simulation run,
+//! recorded with `--record`, must replay offline (`vmhdl replay`) to
+//! the exact per-device cycle counts and device→guest byte stream —
+//! across device counts, kernel mixes, queue depths, link impairment
+//! and policies. Plus the checkpoint-fork and snapshot identity laws
+//! the replay driver builds on.
+
+use std::path::PathBuf;
+
+use vmhdl::coordinator::cosim::CoSimCfg;
+use vmhdl::coordinator::replay::replay_dir;
+use vmhdl::coordinator::scenario::{self, ShardPolicy};
+use vmhdl::hdl::kernel::KernelKind;
+use vmhdl::hdl::platform::{Platform, PlatformCfg};
+use vmhdl::hdl::sim::{ForceMap, TickCtx};
+use vmhdl::link::recorder::{read_recording, Dir};
+use vmhdl::link::{Endpoint, ImpairCfg, LinkMode, Msg};
+use vmhdl::testutil::XorShift64;
+
+/// Fresh scratch directory for one recording (removed by the caller).
+fn tmp_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("vhrr-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+/// Draw a random co-sim configuration from `rng`: 1–3 devices, mixed
+/// kernels on some fleets, depth 1–2, sometimes an impaired link —
+/// the same knobs the CLI exposes, so the property covers what users
+/// can actually record.
+fn random_cfg(rng: &mut XorShift64) -> (CoSimCfg, usize, ShardPolicy, usize) {
+    let devices = 1 + rng.below(3) as usize;
+    let depth = 1 + rng.below(2) as usize;
+    let records = 2 + rng.below(4) as usize;
+    let mut cfg = CoSimCfg { devices, ..Default::default() };
+    cfg.platform.kernel.n = if rng.below(2) == 0 { 64 } else { 256 };
+    if devices >= 2 && rng.below(2) == 0 {
+        cfg.device_kernel.push((1, KernelKind::Checksum));
+    }
+    if devices == 3 && rng.below(2) == 0 {
+        cfg.device_kernel.push((2, KernelKind::Stats));
+        cfg.device_n.push((2, 64));
+    }
+    if rng.below(3) == 0 {
+        cfg.impair = Some(ImpairCfg {
+            drop_ppm: 20_000,
+            dup_ppm: 10_000,
+            seed: rng.next_u64(),
+            ..Default::default()
+        });
+    }
+    // Work-steal schedules are timing-dependent across runs — but the
+    // recording captures the one schedule that actually happened, so
+    // even those runs must replay exactly.
+    let policy = if rng.below(4) == 0 {
+        ShardPolicy::WorkSteal
+    } else {
+        ShardPolicy::RoundRobin
+    };
+    cfg.seed = rng.next_u64();
+    (cfg, records, policy, depth)
+}
+
+#[test]
+fn record_replay_roundtrip_over_random_configs() {
+    let mut rng = XorShift64::new(0x5EED_0FF1);
+    for case in 0..20 {
+        let (mut cfg, records, policy, depth) = random_cfg(&mut rng);
+        let dir = tmp_dir(&format!("case{case}"));
+        cfg.record = Some(dir.clone());
+        let seed = cfg.seed;
+        let impaired = cfg.impair.is_some();
+        let (live, _outs) =
+            scenario::run_sharded_offload_depth(cfg, records, seed, policy, depth, None)
+                .unwrap_or_else(|e| panic!("case {case}: live run failed: {e}"));
+        let rep = replay_dir(&dir, None).unwrap_or_else(|e| {
+            panic!("case {case} ({policy} depth {depth} impaired={impaired}): {e}")
+        });
+        assert!(!rep.partial, "case {case}: clean run must record a trailer");
+        assert_eq!(rep.devices, live.devices, "case {case}");
+        // The trailer check inside `replay_recording` already enforced
+        // this bit-exactly; re-assert against the live report so a
+        // trailer-writing bug can't vacuously pass.
+        let live_cycles: Vec<u64> = live.hdl.iter().map(|h| h.cycles).collect();
+        let live_records: Vec<u64> = live.hdl.iter().map(|h| h.records_done).collect();
+        assert_eq!(rep.per_device_cycles, live_cycles, "case {case}");
+        assert_eq!(rep.per_device_records, live_records, "case {case}");
+        assert!(
+            rep.compared > 0,
+            "case {case}: replay compared no device→guest payload frames"
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
+
+#[test]
+fn replay_can_fork_from_a_mid_run_checkpoint() {
+    let dir = tmp_dir("ckpt");
+    let mut cfg = CoSimCfg::default();
+    cfg.platform.kernel.n = 256;
+    cfg.record = Some(dir.clone());
+    cfg.seed = 0xC0FFEE;
+    let live = scenario::run_sort_offload(cfg, 2, 0xC0FFEE, None).unwrap();
+    let rec = read_recording(&dir, false).unwrap();
+    let injectable = rec
+        .events
+        .iter()
+        .filter(|e| e.dir == Dir::GuestToDevice)
+        .count();
+    assert!(injectable > 2, "run too short to fork mid-way");
+    // Fork through snapshot()/restore() half-way: the restored copy
+    // must finish the walk with the same cycles and bytes.
+    let rep = replay_dir(&dir, Some(injectable / 2)).unwrap();
+    assert!(rep.checkpoint_forked);
+    assert_eq!(rep.per_device_cycles, vec![live.hdl.cycles]);
+    assert_eq!(rep.per_device_records, vec![live.hdl.records_done]);
+    // A checkpoint beyond the end of the log is an error, not a no-op.
+    let err = replay_dir(&dir, Some(injectable + 1)).unwrap_err();
+    assert!(err.to_string().contains("checkpoint"), "{err}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn replay_of_the_same_recording_is_deterministic() {
+    let dir = tmp_dir("det");
+    let mut cfg = CoSimCfg { devices: 2, ..Default::default() };
+    cfg.platform.kernel.n = 64;
+    cfg.record = Some(dir.clone());
+    cfg.seed = 0xD5;
+    let _ = scenario::run_sharded_offload_depth(
+        cfg,
+        4,
+        0xD5,
+        ShardPolicy::RoundRobin,
+        2,
+        None,
+    )
+    .unwrap();
+    let a = replay_dir(&dir, None).unwrap();
+    let b = replay_dir(&dir, None).unwrap();
+    assert_eq!(a.per_device_cycles, b.per_device_cycles);
+    assert_eq!(a.compared, b.compared);
+    assert_eq!(a.injected, b.injected);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn snapshot_restore_snapshot_identity_across_geometries() {
+    // snapshot(); restore(); snapshot() must be byte-identical for
+    // every kernel kind × link mode the replay driver can rebuild.
+    let forces = ForceMap::new();
+    for kind in [KernelKind::Sort, KernelKind::Checksum, KernelKind::Stats] {
+        for mode in [LinkMode::Mmio, LinkMode::Tlp] {
+            let mut pcfg = PlatformCfg {
+                link_mode: mode,
+                ..Default::default()
+            };
+            pcfg.kernel.kind = kind;
+            pcfg.kernel.n = 64;
+            let (mut vm_ep, mut hdl_ep) = Endpoint::inproc_pair();
+            let mut plat = Platform::new(pcfg.clone());
+            if mode == LinkMode::Mmio {
+                // Put a write in flight so the snapshot carries real
+                // mid-pipeline state, not just reset values.
+                vm_ep
+                    .send(&Msg::MmioWrite { bar: 0, addr: 0x08, data: vec![9, 0, 0, 0] })
+                    .unwrap();
+            }
+            for cycle in 0..5u64 {
+                let ctx = TickCtx { cycle, forces: &forces };
+                plat.tick(&ctx, &mut hdl_ep).unwrap();
+            }
+            let snap = plat.snapshot(5);
+            let mut fresh = Platform::new(pcfg);
+            assert_eq!(fresh.restore(&snap).unwrap(), 5, "{kind} {mode:?}");
+            assert_eq!(
+                fresh.snapshot(5),
+                snap,
+                "{kind} {mode:?}: snapshot();restore();snapshot() diverged"
+            );
+        }
+    }
+}

@@ -23,12 +23,14 @@ use crate::scan::{is_ident, SourceFile};
 use crate::Finding;
 
 /// Files whose non-test code must be panic-free.
-const SCOPE: [&str; 6] = [
+const SCOPE: [&str; 8] = [
     "link/msg.rs",
     "link/channel.rs",
     "link/transport.rs",
     "link/udp.rs",
     "link/impair.rs",
+    "link/recorder.rs",
+    "coordinator/replay.rs",
     "vm/guest/driver.rs",
 ];
 
