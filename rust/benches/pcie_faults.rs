@@ -1,0 +1,164 @@
+//! Bench: **PCIe fault recovery** — what each injected fault class
+//! costs the fleet, measured end to end, plus the TLP header-overhead
+//! curve of the transaction-layer link mode.
+//!
+//! Grid: every fault class from `pcie/fault.rs` over a single-device
+//! sort offload (clean baseline first), reporting wall time, device
+//! cycles and the per-record outcome rollup. Assertions (the
+//! fault-matrix acceptance gates):
+//!   * the clean baseline is all-ok;
+//!   * recovery classes (completion-timeout, reset-inflight,
+//!     credit-starve) lose no records;
+//!   * quarantine classes (poisoned-cpl, ur-status) fail exactly the
+//!     planned record and keep every other record ok;
+//!   * surprise-down marks the device lost — and every cell finishes
+//!     (no hangs).
+//!
+//! Machine-readable output: written as JSON to `BENCH_faults.json`
+//! (override with `VMHDL_BENCH_JSON=path`); CI uploads it as an
+//! artifact — the EXPERIMENTS.md fault-matrix protocol reads this
+//! file.
+//!
+//! Run: `cargo bench --bench pcie_faults`
+
+use std::fmt::Write as _;
+use std::time::Duration;
+
+use vmhdl::coordinator::cosim::CoSimCfg;
+use vmhdl::coordinator::scenario;
+use vmhdl::coordinator::stats::fmt_dur;
+use vmhdl::costmodel::TlpCostModel;
+use vmhdl::pcie::FaultPlan;
+
+const RECORDS: usize = 6;
+const SEED: u64 = 0xFA17;
+const TIMEOUT: Duration = Duration::from_secs(10);
+
+struct Row {
+    label: String,
+    wall: Duration,
+    device_cycles: u64,
+    ok: usize,
+    recovered: usize,
+    failed: usize,
+    lost: usize,
+}
+
+fn run_cell(label: &str, fault: Option<&str>) -> Row {
+    let mut cfg = CoSimCfg::default();
+    cfg.platform.kernel.n = 256;
+    if let Some(spec) = fault {
+        cfg.device_fault = vec![(0, FaultPlan::parse(spec).unwrap())];
+    }
+    let rep = scenario::run_sort_offload_with_timeout(cfg, RECORDS, SEED, None, TIMEOUT)
+        .unwrap_or_else(|e| panic!("{label}: fault cell failed: {e}"));
+    let h = rep.health();
+    Row {
+        label: label.to_string(),
+        wall: rep.wall,
+        device_cycles: rep.device_cycles,
+        ok: h.ok,
+        recovered: h.recovered,
+        failed: h.failed,
+        lost: h.lost_devices.len(),
+    }
+}
+
+fn main() {
+    println!("PCIE FAULT MATRIX — {RECORDS} records, 1 device, rec=3 plans");
+    println!(
+        "{:<28}{:>12}{:>14}{:>5}{:>6}{:>7}{:>6}",
+        "fault", "wall", "device-cycles", "ok", "rec", "fail", "lost"
+    );
+
+    let cells: [(&str, Option<&str>); 7] = [
+        ("clean", None),
+        ("completion-timeout", Some("completion-timeout@rec=3")),
+        ("poisoned-cpl", Some("poisoned-cpl@rec=3")),
+        ("ur-status", Some("ur-status@rec=3")),
+        ("reset-inflight", Some("reset-inflight@rec=3")),
+        ("credit-starve", Some("credit-starve@rec=3")),
+        ("surprise-down", Some("surprise-down@rec=3")),
+    ];
+
+    let mut rows = Vec::new();
+    for (label, fault) in cells {
+        let r = run_cell(label, fault);
+        match label {
+            "clean" => assert_eq!(
+                (r.ok, r.recovered, r.failed, r.lost),
+                (RECORDS, 0, 0, 0),
+                "clean baseline must be all-ok"
+            ),
+            "completion-timeout" | "reset-inflight" => {
+                assert_eq!(r.failed, 0, "{label}: lost a record");
+                assert_eq!(r.recovered, 1, "{label}: expected one recovery");
+            }
+            "credit-starve" => assert_eq!(r.failed, 0, "{label}: lost a record"),
+            "poisoned-cpl" | "ur-status" => {
+                assert_eq!(r.failed, 1, "{label}: expected exactly one quarantine");
+                assert_eq!(r.ok, RECORDS - 1, "{label}: slot not recycled");
+            }
+            "surprise-down" => assert_eq!(r.lost, 1, "{label}: device not marked lost"),
+            _ => unreachable!(),
+        }
+        rows.push(r);
+    }
+
+    for r in &rows {
+        println!(
+            "{:<28}{:>12}{:>14}{:>5}{:>6}{:>7}{:>6}",
+            r.label,
+            fmt_dur(r.wall),
+            r.device_cycles,
+            r.ok,
+            r.recovered,
+            r.failed,
+            r.lost,
+        );
+    }
+
+    // TLP header-overhead curve (the §V / Table III payload argument),
+    // priced from the live fragmentation function.
+    let model = TlpCostModel::default();
+    println!("\nTLP header overhead vs payload (MPS {} DW):", model.mps_dw);
+    for (len, ratio) in model.table_iii_rows() {
+        println!("  {len:>5} B burst: {:>5.1}% headers", ratio * 100.0);
+    }
+
+    // Machine-readable matrix for the CI artifact / EXPERIMENTS.md.
+    let mut json = String::new();
+    let _ = write!(
+        json,
+        "{{\"bench\":\"pcie_faults\",\"records\":{RECORDS},\"seed\":{SEED},\"rows\":["
+    );
+    for (i, r) in rows.iter().enumerate() {
+        if i > 0 {
+            json.push(',');
+        }
+        let _ = write!(
+            json,
+            "{{\"fault\":\"{}\",\"wall_us\":{},\"device_cycles\":{},\
+             \"ok\":{},\"recovered\":{},\"failed\":{},\"lost_devices\":{}}}",
+            r.label,
+            r.wall.as_micros(),
+            r.device_cycles,
+            r.ok,
+            r.recovered,
+            r.failed,
+            r.lost,
+        );
+    }
+    json.push_str("],\"tlp_overhead\":[");
+    for (i, (len, ratio)) in model.table_iii_rows().iter().enumerate() {
+        if i > 0 {
+            json.push(',');
+        }
+        let _ = write!(json, "{{\"burst_bytes\":{len},\"header_ratio\":{ratio:.4}}}");
+    }
+    json.push_str("]}");
+    let path = std::env::var("VMHDL_BENCH_JSON")
+        .unwrap_or_else(|_| "BENCH_faults.json".to_string());
+    std::fs::write(&path, &json).expect("write bench json");
+    println!("\nOK: fault matrix held; written to {path}");
+}

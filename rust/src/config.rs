@@ -13,6 +13,7 @@ use crate::coordinator::scenario::ShardPolicy;
 use crate::hdl::kernel::{KernelCfg, KernelKind};
 use crate::hdl::platform::PlatformCfg;
 use crate::link::{ImpairCfg, LinkMode};
+use crate::pcie::FaultPlan;
 use crate::runtime::BackendKind;
 use crate::{Error, Result};
 
@@ -122,6 +123,10 @@ pub struct Config {
     /// device k's link — the knob that makes work-steal divergence
     /// show up in records/s.
     pub device_link_latency: Vec<(usize, u64)>,
+    /// Per-device PCIe fault plans (`--fault k=class@rec=N`,
+    /// repeatable): deterministic fault injection on device k's data
+    /// path — see [`crate::pcie::fault`] for the classes.
+    pub device_fault: Vec<(usize, FaultPlan)>,
 }
 
 impl Default for Config {
@@ -155,6 +160,7 @@ impl Default for Config {
             device_kernel: Vec::new(),
             device_n: Vec::new(),
             device_link_latency: Vec::new(),
+            device_fault: Vec::new(),
         }
     }
 }
@@ -241,6 +247,15 @@ impl Config {
                 parse_overrides::<u64, _>(value, "device-link-latency", |k, v| {
                     dl.retain(|&(i, _)| i != k);
                     dl.push((k, v));
+                })?;
+            }
+            "fault" => {
+                // `k=class@rec=N` — split_once takes the *first* '=',
+                // so the `rec=N` tail stays inside the plan spec.
+                let df = &mut self.device_fault;
+                parse_overrides::<FaultPlan, _>(value, "fault", |k, v| {
+                    df.retain(|&(i, _)| i != k);
+                    df.push((k, v));
                 })?;
             }
             "sorter-latency" => {
@@ -403,6 +418,9 @@ impl Config {
         for &(k, _) in &self.device_impair {
             check_idx("device-impair", k)?;
         }
+        for &(k, _) in &self.device_fault {
+            check_idx("fault", k)?;
+        }
         for &(k, us) in &self.device_link_latency {
             check_idx("device-link-latency", k)?;
             if us > 10_000 {
@@ -481,6 +499,7 @@ impl Config {
             device_link_latency_us: self.device_link_latency.clone(),
             impair: self.impair,
             device_impair: self.device_impair.clone(),
+            device_fault: self.device_fault.clone(),
             ram_size: self.ram_size,
             vcd: self.vcd.clone(),
             poll_interval: self.poll_interval,
@@ -507,6 +526,28 @@ mod tests {
         assert_eq!(cc.platform.kernel.latency, 1256);
         assert_eq!(cc.platform.kernel.kind, KernelKind::Sort);
         assert!(matches!(cc.transport, TransportKind::InProc));
+    }
+
+    #[test]
+    fn fault_flag_parses_and_validates_device_index() {
+        use crate::pcie::FaultKind;
+        let mut c = Config::default();
+        c.set("devices", "2").unwrap();
+        c.set("fault", "0=completion-timeout@rec=3").unwrap();
+        c.set("fault", "1=poisoned-cpl@rec=5").unwrap();
+        // Later plans for the same device win.
+        c.set("fault", "1=surprise-down@rec=2").unwrap();
+        let cc = c.cosim().unwrap();
+        assert_eq!(cc.device_fault.len(), 2);
+        let p0 = cc.device_fault.iter().find(|&&(k, _)| k == 0).unwrap().1;
+        assert_eq!(p0.kind, FaultKind::CompletionTimeout);
+        assert_eq!(p0.at, 3);
+        let p1 = cc.device_fault.iter().find(|&&(k, _)| k == 1).unwrap().1;
+        assert_eq!(p1.kind, FaultKind::SurpriseDown);
+        // Bad class and out-of-topology device are config errors.
+        assert!(c.set("fault", "0=melt-the-board@rec=1").is_err());
+        c.set("fault", "7=ur-status@rec=1").unwrap();
+        assert!(c.cosim().is_err(), "device 7 is not on a 2-device topology");
     }
 
     #[test]

@@ -33,6 +33,7 @@ use crate::hdl::sim::{Horizon, MergedHorizon, Scheduler, Sim, TickCtx};
 use crate::hdl::vcd::VcdWriter;
 use crate::link::recorder::{DeviceFinal, DeviceMeta, RecordMeta, RecorderSink};
 use crate::link::{Doorbell, Endpoint, ImpairCfg, LinkMode, Side};
+use crate::pcie::FaultPlan;
 use crate::vm::Vmm;
 use crate::{Error, Result};
 
@@ -109,6 +110,14 @@ pub struct CoSimCfg {
     /// (`--device-impair k:spec`): device k gets this config instead
     /// of the global `impair` (heterogeneous link quality).
     pub device_impair: Vec<(usize, ImpairCfg)>,
+    /// Per-device PCIe fault plans `(device, plan)`
+    /// (`--fault k=completion-timeout@rec=3`): device-level classes
+    /// (completion-timeout, surprise-down, poisoned-cpl, ur-status)
+    /// arm the VMM-side pseudo device; credit-starve arms the HDL
+    /// bridge via [`PlatformCfg::fault`]; reset-inflight is acted on
+    /// by the scenario runner. Plans fire deterministically on the
+    /// device's non-posted request clock (see [`crate::pcie::fault`]).
+    pub device_fault: Vec<(usize, FaultPlan)>,
     /// Guest RAM bytes.
     pub ram_size: usize,
     /// Record waveforms of the entire platform to this VCD file.
@@ -147,6 +156,7 @@ impl Default for CoSimCfg {
             device_link_latency_us: Vec::new(),
             impair: None,
             device_impair: Vec::new(),
+            device_fault: Vec::new(),
             ram_size: 4 << 20,
             vcd: None,
             poll_interval: 1,
@@ -333,7 +343,13 @@ pub fn platform_cfg_for(cfg: &CoSimCfg, k: usize) -> PlatformCfg {
     if let Some(&(_, cycles)) = cfg.device_latency.iter().find(|&&(d, _)| d == k) {
         pcfg.kernel.latency = cycles;
     }
+    pcfg.fault = fault_for(cfg, k);
     pcfg
+}
+
+/// The PCIe fault plan armed on device `k`, if any.
+pub fn fault_for(cfg: &CoSimCfg, k: usize) -> Option<FaultPlan> {
+    cfg.device_fault.iter().find(|&&(d, _)| d == k).map(|&(_, p)| p)
 }
 
 /// The link-latency modelled at device `k`'s HDL endpoint.
@@ -386,6 +402,7 @@ pub fn record_meta_for(cfg: &CoSimCfg) -> RecordMeta {
                     .filter(|ic| !ic.is_null())
                     .map(|ic| format!("{ic:?}"))
                     .unwrap_or_default(),
+                fault: fault_for(cfg, k).map(|p| p.to_string()).unwrap_or_default(),
             }
         })
         .collect();
@@ -808,6 +825,19 @@ pub fn run_hdl_multi_loop(
     lanes.into_iter().map(|l| l.into_report(wall)).collect()
 }
 
+/// Arm each configured fault plan on its VMM-side pseudo device. Every
+/// class is handed to the device (its `FaultState` keeps the
+/// non-posted clock for triage either way); only the device-level
+/// classes act there — credit-starve acts in the bridge, and
+/// reset-inflight in the scenario runner.
+fn apply_device_faults(vmm: &mut Vmm, cfg: &CoSimCfg) {
+    for &(k, plan) in &cfg.device_fault {
+        if let Some(dev) = vmm.devs.get_mut(k) {
+            dev.set_fault(Some(plan));
+        }
+    }
+}
+
 /// A fully assembled co-simulation (VM side in this process).
 pub struct CoSim {
     pub cfg: CoSimCfg,
@@ -880,8 +910,9 @@ impl CoSim {
                 let (s2, c2, cfg2) = (stop.clone(), cycles.clone(), cfg.clone());
                 let handle =
                     std::thread::spawn(move || run_hdl_multi_loop(lanes, &cfg2, s2, c2));
-                let vmm =
+                let mut vmm =
                     Vmm::new_multi_with_kernels(vm_eps, cfg.mode, cfg.ram_size, &kernel_ids);
+                apply_device_faults(&mut vmm, &cfg);
                 Ok(CoSim {
                     cfg,
                     vmm,
@@ -911,8 +942,9 @@ impl CoSim {
                     vm_eps.push(ep);
                     kernel_ids.push(platform_cfg_for(&cfg, k).kernel.kind.id());
                 }
-                let vmm =
+                let mut vmm =
                     Vmm::new_multi_with_kernels(vm_eps, cfg.mode, cfg.ram_size, &kernel_ids);
+                apply_device_faults(&mut vmm, &cfg);
                 Ok(CoSim { cfg, vmm, hdl: None })
             }
             TransportKind::Uds(dir) => {
@@ -940,8 +972,9 @@ impl CoSim {
                     vm_eps.push(ep);
                     kernel_ids.push(platform_cfg_for(&cfg, k).kernel.kind.id());
                 }
-                let vmm =
+                let mut vmm =
                     Vmm::new_multi_with_kernels(vm_eps, cfg.mode, cfg.ram_size, &kernel_ids);
+                apply_device_faults(&mut vmm, &cfg);
                 Ok(CoSim { cfg, vmm, hdl: None })
             }
         }

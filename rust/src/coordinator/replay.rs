@@ -241,6 +241,14 @@ struct ExpectedFrame {
 pub fn platform_cfg_from_meta(meta: &DeviceMeta) -> Result<PlatformCfg> {
     let kind: KernelKind = meta.kernel.parse()?;
     let link_mode: LinkMode = meta.link_mode.parse()?;
+    // A recorded fault plan (v2 headers) re-arms bit-identically: the
+    // bridge's credit-starve freeze is part of the replayed message
+    // schedule, and the geometry stamp in any snapshot must match.
+    let fault = if meta.fault.is_empty() {
+        None
+    } else {
+        Some(crate::pcie::FaultPlan::parse(&meta.fault)?)
+    };
     Ok(PlatformCfg {
         kernel: KernelCfg {
             kind,
@@ -253,6 +261,7 @@ pub fn platform_cfg_from_meta(meta: &DeviceMeta) -> Result<PlatformCfg> {
         stream_fifo_depth: meta.stream_fifo_depth as usize,
         poll_interval: meta.poll_interval,
         device_index: meta.device_index as usize,
+        fault,
     })
 }
 
@@ -421,6 +430,7 @@ mod tests {
                 poll_interval: 1,
                 device_index: 0,
                 impair: String::new(),
+                fault: String::new(),
             }],
             ..RecordMeta::default()
         }

@@ -21,12 +21,14 @@
 use std::collections::VecDeque;
 use std::time::{Duration, Instant};
 
-use super::cosim::{platform_cfg_for, CoSim, CoSimCfg, HdlReport};
+use super::cosim::{fault_for, platform_cfg_for, CoSim, CoSimCfg, HdlReport};
 use crate::hdl::kernel::{pack_checksum_words, pack_stats_words, KernelKind};
+use crate::hdl::regfile::cause;
+use crate::pcie::{FaultKind, FaultPlan};
 use crate::runtime::native::{record_checksum, record_stats};
 use crate::runtime::GoldenBackend;
 use crate::testutil::XorShift64;
-use crate::vm::guest::{app, SortDriver, SortDriverSg};
+use crate::vm::guest::{app, RecordAttempt, SortDriver, SortDriverSg};
 use crate::vm::vmm::{GuestEnv, NoopHook, Vmm};
 use crate::{Error, Result};
 
@@ -199,6 +201,78 @@ pub fn shard_assign(policy: ShardPolicy, sizes: &[usize], devices: usize) -> Vec
 pub const DEVICE_CYCLES_MIN: u64 = 1256;
 pub const DEVICE_CYCLES_MAX_PER_RECORD: u64 = 100_000;
 
+/// Per-record outcome of a fault-aware scenario run. Without a fault
+/// plan every record is [`RecordOutcome::Ok`] (and a failure is an
+/// `Err` from the runner, exactly as before PR 9); with one armed the
+/// runner keeps going and reports what the driver's recovery machinery
+/// did to each record.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum RecordOutcome {
+    /// Completed first try, result verified.
+    Ok,
+    /// Completed and verified byte-identical after `retries`
+    /// watchdog-driven resets (completion-timeout / reset-inflight
+    /// recovery).
+    Recovered { retries: u32 },
+    /// Abandoned: quarantined after a data-integrity fault, or the
+    /// device fell off the bus. `reason` names the device, the latched
+    /// registers / tag and the original error.
+    Failed { reason: String },
+}
+
+impl std::fmt::Display for RecordOutcome {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RecordOutcome::Ok => f.write_str("ok"),
+            RecordOutcome::Recovered { retries } => write!(f, "recovered({retries})"),
+            RecordOutcome::Failed { reason } => write!(f, "failed({reason})"),
+        }
+    }
+}
+
+/// Fleet-level rollup of per-record outcomes — the scenario's health
+/// summary printed by `vmhdl cosim` when a fault plan is armed.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct FleetHealth {
+    pub ok: usize,
+    pub recovered: usize,
+    pub failed: usize,
+    /// Devices that dropped off the bus (surprise-down) during the run.
+    pub lost_devices: Vec<usize>,
+}
+
+impl FleetHealth {
+    pub fn from_outcomes(outcomes: &[RecordOutcome], lost_devices: Vec<usize>) -> Self {
+        let mut h = FleetHealth { lost_devices, ..FleetHealth::default() };
+        for o in outcomes {
+            match o {
+                RecordOutcome::Ok => h.ok += 1,
+                RecordOutcome::Recovered { .. } => h.recovered += 1,
+                RecordOutcome::Failed { .. } => h.failed += 1,
+            }
+        }
+        h
+    }
+
+    /// True when every record completed without any recovery action.
+    pub fn all_ok(&self) -> bool {
+        self.recovered == 0 && self.failed == 0 && self.lost_devices.is_empty()
+    }
+}
+
+impl std::fmt::Display for FleetHealth {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{} ok, {} recovered, {} failed, {} device(s) lost",
+            self.ok,
+            self.recovered,
+            self.failed,
+            self.lost_devices.len()
+        )
+    }
+}
+
 /// Report of a sort-offload scenario.
 #[derive(Debug, Clone)]
 pub struct ScenarioReport {
@@ -214,6 +288,17 @@ pub struct ScenarioReport {
     /// Link message/byte totals from the VM side (§V comparison).
     pub link_msgs: u64,
     pub link_bytes: u64,
+    /// Per-record outcome, in submission order (all `Ok` when no
+    /// fault plan is armed).
+    pub outcomes: Vec<RecordOutcome>,
+    /// Devices that dropped off the bus during the run.
+    pub lost_devices: Vec<usize>,
+}
+
+impl ScenarioReport {
+    pub fn health(&self) -> FleetHealth {
+        FleetHealth::from_outcomes(&self.outcomes, self.lost_devices.clone())
+    }
 }
 
 /// The device-time vs wall-time comparison of Table III.
@@ -293,22 +378,37 @@ pub fn run_sort_offload_with_timeout(
     mut golden: Option<&mut dyn GoldenBackend>,
     timeout: Duration,
 ) -> Result<ScenarioReport> {
+    // Extract the fault plan before launch consumes the config: the
+    // drive loop switches to the resilient driver path only when one
+    // is armed, so fault-free runs stay byte-identical.
+    let fault = fault_for(&cfg, 0);
     let mut cosim = CoSim::launch(cfg)?;
-    let (wall, device_cycles, golden_checked) =
-        sort_offload_drive(&mut cosim.vmm, records, seed, &mut golden, timeout)
-            .map_err(|e| with_link_context(e, &cosim.vmm))?;
+    let stats = sort_offload_drive(&mut cosim.vmm, records, seed, &mut golden, timeout, fault)
+        .map_err(|e| with_link_context(e, &cosim.vmm))?;
     let link_msgs = cosim.vmm.dev().link().msgs_sent();
     let link_bytes = cosim.vmm.dev().link().bytes_sent();
     let hdl = cosim.shutdown()?;
     Ok(ScenarioReport {
         records,
-        wall,
-        device_cycles,
-        golden_checked,
+        wall: stats.wall,
+        device_cycles: stats.device_cycles,
+        golden_checked: stats.golden_checked,
         hdl,
         link_msgs,
         link_bytes,
+        outcomes: stats.outcomes,
+        lost_devices: stats.lost_devices,
     })
+}
+
+/// What [`sort_offload_drive`] measured, before the HDL-side report
+/// is folded in.
+struct DriveStats {
+    wall: Duration,
+    device_cycles: u64,
+    golden_checked: bool,
+    outcomes: Vec<RecordOutcome>,
+    lost_devices: Vec<usize>,
 }
 
 /// The guest-driver phase of [`run_sort_offload`], split out so the
@@ -320,7 +420,8 @@ fn sort_offload_drive(
     seed: u64,
     golden: &mut Option<&mut dyn GoldenBackend>,
     timeout: Duration,
-) -> Result<(Duration, u64, bool)> {
+    fault: Option<FaultPlan>,
+) -> Result<DriveStats> {
     let mut hook = NoopHook;
     let mut env = GuestEnv::new(vmm, &mut hook);
     let mut drv = SortDriver::new(1024);
@@ -339,14 +440,68 @@ fn sort_offload_drive(
     let c0 = drv.read_cycles(&mut env)?;
     let t0 = Instant::now();
     let mut golden_checked = golden.is_some();
-    for _ in 0..records {
+    let mut outcomes = Vec::with_capacity(records);
+    let mut lost = false;
+    for i in 0..records {
         let input = rng.vec_i32(drv.n);
-        let out = drv.sort_record(&mut env, &input)?;
-        golden_checked &= verify_record(drv.kernel, &input, &out, false, golden)?;
+        if lost {
+            // No point timing out on every remaining record of a dead
+            // link — fail the rest fast with the same diagnosis.
+            outcomes.push(RecordOutcome::Failed {
+                reason: format!("record {i} skipped: device 0 lost earlier"),
+            });
+            continue;
+        }
+        let Some(plan) = fault else {
+            // Fault-free path: byte-identical to the pre-fault runner.
+            let out = drv.sort_record(&mut env, &input)?;
+            golden_checked &= verify_record(drv.kernel, &input, &out, false, golden)?;
+            outcomes.push(RecordOutcome::Ok);
+            continue;
+        };
+        // Scenario-level reset-inflight injection: reset the device
+        // with this record's DMA already programmed, then require the
+        // driver to recover and complete it exactly once.
+        let mut extra_retries = 0u32;
+        if plan.kind == FaultKind::ResetInflight && plan.at == (i as u64) + 1 {
+            drv.submit_record(&mut env, &input)?;
+            drv.recover_reset(&mut env, cause::NONE)?;
+            extra_retries = 1;
+        }
+        match drv.sort_record_resilient(&mut env, &input)? {
+            RecordAttempt::Done { out, retries } => {
+                golden_checked &= verify_record(drv.kernel, &input, &out, false, golden)?;
+                let total = retries + extra_retries;
+                outcomes.push(if total > 0 {
+                    RecordOutcome::Recovered { retries: total }
+                } else {
+                    RecordOutcome::Ok
+                });
+            }
+            RecordAttempt::Quarantined { reason, .. } => {
+                outcomes.push(RecordOutcome::Failed { reason });
+            }
+            RecordAttempt::DeviceLost { reason } => {
+                outcomes.push(RecordOutcome::Failed { reason });
+                lost = true;
+            }
+        }
     }
     let wall = t0.elapsed();
-    let c1 = drv.read_cycles(&mut env)?;
-    Ok((wall, c1.saturating_sub(c0), golden_checked))
+    // A dead link reads all-ones; don't fold that into the cycle
+    // accounting.
+    let device_cycles = if lost {
+        0
+    } else {
+        drv.read_cycles(&mut env)?.saturating_sub(c0)
+    };
+    Ok(DriveStats {
+        wall,
+        device_cycles,
+        golden_checked,
+        outcomes,
+        lost_devices: if lost { vec![0] } else { Vec::new() },
+    })
 }
 
 /// Report of a sharded multi-device offload.
@@ -373,6 +528,17 @@ pub struct ShardedReport {
     /// Link totals summed over all devices (§V comparison).
     pub link_msgs: u64,
     pub link_bytes: u64,
+    /// Per-record outcome, in submission order (all `Ok` when no
+    /// fault plan is armed).
+    pub outcomes: Vec<RecordOutcome>,
+    /// Devices that dropped off the bus during the run.
+    pub lost_devices: Vec<usize>,
+}
+
+impl ShardedReport {
+    pub fn health(&self) -> FleetHealth {
+        FleetHealth::from_outcomes(&self.outcomes, self.lost_devices.clone())
+    }
 }
 
 /// Run the paper's §III workload sharded over `cfg.devices` devices:
@@ -428,9 +594,29 @@ pub fn run_sharded_offload_depth(
     };
     let homogeneous_sort = template.kernel == KernelKind::Sort
         && device_specs(&cfg).iter().all(|s| *s == template);
+    let direct = homogeneous_sort && depth == 1 && policy.is_static();
+    // Device-level fault recovery lives in the direct runner's wave
+    // pipeline; the SG/mixed runners would hang on a dropped
+    // completion instead of recovering. Reject the combination up
+    // front ("never hang" is part of the fault-matrix contract).
+    // Credit-starve is exempt: it stalls the HDL data path and
+    // self-resolves, so every runner survives it untouched.
+    if !direct
+        && cfg
+            .device_fault
+            .iter()
+            .any(|&(_, p)| p.kind != FaultKind::CreditStarve)
+    {
+        return Err(Error::config(
+            "--fault (other than credit-starve) requires the direct runner: \
+             queue depth 1, a static shard policy and a homogeneous sort \
+             fleet"
+                .to_string(),
+        ));
+    }
     if !homogeneous_sort {
         run_mixed_fleet(cfg, records, seed, policy, depth, golden)
-    } else if depth == 1 && policy.is_static() {
+    } else if direct {
         run_sharded_direct(cfg, records, seed, policy, golden)
     } else {
         run_sharded_sg(cfg, records, seed, policy, depth, golden)
@@ -448,6 +634,11 @@ fn run_sharded_direct(
 ) -> Result<(ShardedReport, Vec<Vec<i32>>)> {
     let devices = cfg.devices.max(1);
     let n = cfg.platform.kernel.n;
+    // Per-device fault plans, read before launch consumes the config.
+    // With none armed every path below is byte-identical to the
+    // pre-fault runner.
+    let faults: Vec<Option<FaultPlan>> = (0..devices).map(|k| fault_for(&cfg, k)).collect();
+    let any_fault = faults.iter().any(|f| f.is_some());
     let mut cosim = CoSim::launch(cfg)?;
     let mut hook = NoopHook;
 
@@ -503,16 +694,44 @@ fn run_sharded_direct(
     let mut results: Vec<Option<Vec<i32>>> = vec![None; records];
     let mut inflight: Vec<Option<usize>> = vec![None; devices];
     let mut golden_checked = golden.is_some();
+    let mut outcomes: Vec<RecordOutcome> = vec![RecordOutcome::Ok; records];
+    let mut extra: Vec<u32> = vec![0; records];
+    let mut lost = vec![false; devices];
+    // Per-device count of records submitted, the clock the
+    // reset-inflight plan fires on (1-based, like `rec=N`).
+    let mut subs = vec![0u64; devices];
     loop {
         let mut any = false;
         for k in 0..devices {
-            if inflight[k].is_none() {
+            if inflight[k].is_none() && !lost[k] {
                 if let Some(i) = queues[k].pop_front() {
+                    // Scenario-level injection: at the planned record,
+                    // reset the device with this record's DMA already
+                    // programmed, then resubmit — the driver must
+                    // complete it exactly once.
+                    let inject = matches!(
+                        faults[k],
+                        Some(p) if p.kind == FaultKind::ResetInflight
+                            && p.at == subs[k] + 1
+                    );
                     let r = {
                         let mut env = GuestEnv::for_device(&mut cosim.vmm, &mut hook, k);
-                        drvs[k].submit_record(&mut env, &inputs[i])
+                        let first = drvs[k].submit_record(&mut env, &inputs[i]);
+                        if inject {
+                            first
+                                .and_then(|_| {
+                                    drvs[k].recover_reset(&mut env, cause::NONE)
+                                })
+                                .and_then(|_| {
+                                    extra[i] = 1;
+                                    drvs[k].submit_record(&mut env, &inputs[i])
+                                })
+                        } else {
+                            first
+                        }
                     };
                     r.map_err(|e| with_link_context(e, &cosim.vmm))?;
+                    subs[k] += 1;
                     inflight[k] = Some(i);
                 }
             }
@@ -520,24 +739,77 @@ fn run_sharded_direct(
         for k in 0..devices {
             if let Some(i) = inflight[k].take() {
                 any = true;
+                if !any_fault {
+                    // Fault-free path: byte-identical to the
+                    // pre-fault runner.
+                    let r = {
+                        let mut env = GuestEnv::for_device(&mut cosim.vmm, &mut hook, k);
+                        drvs[k].finish_record(&mut env)
+                    };
+                    let out = r.map_err(|e| with_link_context(e, &cosim.vmm))?;
+                    if let Some(g) = golden.as_deref_mut() {
+                        g.check_sorted(&inputs[i], &out, false)?;
+                    } else {
+                        let mut e = inputs[i].clone();
+                        e.sort_unstable();
+                        if out != e {
+                            return Err(Error::cosim(format!(
+                                "result mismatch on device {k}, record {i}"
+                            )));
+                        }
+                        golden_checked = false;
+                    }
+                    results[i] = Some(out);
+                    continue;
+                }
                 let r = {
                     let mut env = GuestEnv::for_device(&mut cosim.vmm, &mut hook, k);
-                    drvs[k].finish_record(&mut env)
+                    drvs[k].finish_record_resilient(&mut env, &inputs[i])
                 };
-                let out = r.map_err(|e| with_link_context(e, &cosim.vmm))?;
-                if let Some(g) = golden.as_deref_mut() {
-                    g.check_sorted(&inputs[i], &out, false)?;
-                } else {
-                    let mut e = inputs[i].clone();
-                    e.sort_unstable();
-                    if out != e {
-                        return Err(Error::cosim(format!(
-                            "result mismatch on device {k}, record {i}"
-                        )));
+                match r.map_err(|e| with_link_context(e, &cosim.vmm))? {
+                    RecordAttempt::Done { out, retries } => {
+                        if let Some(g) = golden.as_deref_mut() {
+                            g.check_sorted(&inputs[i], &out, false)?;
+                        } else {
+                            let mut e = inputs[i].clone();
+                            e.sort_unstable();
+                            if out != e {
+                                return Err(Error::cosim(format!(
+                                    "result mismatch on device {k}, record {i}"
+                                )));
+                            }
+                            golden_checked = false;
+                        }
+                        let total = retries + extra[i];
+                        if total > 0 {
+                            outcomes[i] = RecordOutcome::Recovered { retries: total };
+                        }
+                        results[i] = Some(out);
                     }
-                    golden_checked = false;
+                    RecordAttempt::Quarantined { reason, .. } => {
+                        outcomes[i] = RecordOutcome::Failed { reason };
+                    }
+                    RecordAttempt::DeviceLost { reason } => {
+                        if faults[k].is_none() {
+                            // Not a planned fault — real breakage.
+                            return Err(with_link_context(
+                                Error::cosim(reason),
+                                &cosim.vmm,
+                            ));
+                        }
+                        outcomes[i] = RecordOutcome::Failed { reason };
+                        lost[k] = true;
+                        // Fail the device's remaining records fast
+                        // instead of timing out on each.
+                        while let Some(j) = queues[k].pop_front() {
+                            outcomes[j] = RecordOutcome::Failed {
+                                reason: format!(
+                                    "record {j} skipped: device {k} lost earlier"
+                                ),
+                            };
+                        }
+                    }
                 }
-                results[i] = Some(out);
             }
         }
         if !any {
@@ -546,20 +818,32 @@ fn run_sharded_direct(
     }
     let wall = t0.elapsed();
 
-    // Per-device cycle deltas.
+    // Per-device cycle deltas (a dead link reads all-ones; report 0).
     let mut per_device_cycles = vec![0u64; devices];
     for (k, drv) in drvs.iter_mut().enumerate() {
+        if lost[k] {
+            continue;
+        }
         let mut env = GuestEnv::for_device(&mut cosim.vmm, &mut hook, k);
         per_device_cycles[k] = drv.read_cycles(&mut env)?.saturating_sub(c0[k]);
     }
     let link_msgs = cosim.vmm.devs.iter().map(|d| d.link().msgs_sent()).sum();
     let link_bytes = cosim.vmm.devs.iter().map(|d| d.link().bytes_sent()).sum();
     let hdl = cosim.shutdown_all()?;
-    let merged: Vec<Vec<i32>> = results
-        .into_iter()
-        .enumerate()
-        .map(|(i, r)| r.ok_or_else(|| Error::cosim(format!("record {i} never completed"))))
-        .collect::<Result<_>>()?;
+    let merged: Vec<Vec<i32>> = if any_fault {
+        // Failed records keep an empty-vec placeholder so the merge
+        // stays index-aligned with the inputs; their outcome carries
+        // the diagnosis.
+        results.into_iter().map(Option::unwrap_or_default).collect()
+    } else {
+        results
+            .into_iter()
+            .enumerate()
+            .map(|(i, r)| {
+                r.ok_or_else(|| Error::cosim(format!("record {i} never completed")))
+            })
+            .collect::<Result<_>>()?
+    };
     Ok((
         ShardedReport {
             devices,
@@ -573,6 +857,8 @@ fn run_sharded_direct(
             hdl,
             link_msgs,
             link_bytes,
+            outcomes,
+            lost_devices: (0..devices).filter(|&k| lost[k]).collect(),
         },
         merged,
     ))
@@ -825,6 +1111,8 @@ fn run_sharded_sg(
             hdl,
             link_msgs,
             link_bytes,
+            outcomes: vec![RecordOutcome::Ok; records],
+            lost_devices: Vec::new(),
         },
         merged,
     ))
@@ -1079,6 +1367,8 @@ pub fn run_mixed_fleet(
             hdl,
             link_msgs,
             link_bytes,
+            outcomes: vec![RecordOutcome::Ok; records],
+            lost_devices: Vec::new(),
         },
         merged,
     ))

@@ -18,6 +18,8 @@
 
 pub mod flow;
 pub mod resources;
+pub mod tlpcost;
 
 pub use flow::{FlowModel, IterationBreakdown};
 pub use resources::{ResourceModel, Utilization};
+pub use tlpcost::{TlpCostModel, TlpWireCost};

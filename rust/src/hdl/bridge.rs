@@ -52,11 +52,29 @@ use super::sim::{Fifo, Horizon, TickCtx};
 use super::snapshot::{self, SnapReader, SnapWriter};
 use super::signal::{ProbeSink, Probed};
 use crate::link::{Endpoint, LinkMode, Msg};
+use crate::pcie::fault::{FaultKind, FaultPlan};
 use crate::pcie::tlp::{self, Tlp};
 use crate::Result;
 
 /// Number of irq input pins (DMA MM2S, DMA S2MM, regfile test, spare).
 pub const IRQ_PINS: usize = 4;
+
+/// Non-posted header credits: outstanding read-request TLPs the root
+/// complex advertises buffer for. Matches the bridge's historical
+/// outstanding-read bound so the unfaulted data path sees no new
+/// stalls; `credit-starve` freezes the pool to make the stall real.
+pub const NP_CREDITS: u32 = 8;
+/// Posted data credits, in DW (one 256 B max-payload burst = 64 DW).
+pub const P_CREDITS_DW: u32 = 256;
+/// Credits the root complex hands back per cycle as it drains posted
+/// data. One max-payload write burst regenerates within its own B
+/// handshake window, so the healthy path never stalls on credits.
+const P_REGEN_DW: u32 = 64;
+/// How long a `credit-starve` fault freezes both pools, in device
+/// cycles. Long enough to dominate the credit-stall watermarks, short
+/// enough that the driver's cycle watchdog (which sees cycles still
+/// advancing) must NOT fire.
+pub const CREDIT_STARVE_CYCLES: u64 = 20_000;
 
 /// BAR→AXI window mapping used by the bridge's master port.
 #[derive(Debug, Clone, Copy)]
@@ -73,10 +91,21 @@ pub struct BarWindow {
 #[derive(Debug)]
 struct PendingRead {
     tag: u64,
-    /// Remaining bytes expected (MMIO mode sends one response; TLP
-    /// mode may deliver several completions per AXI burst).
+    /// Assembled payload (MMIO mode sends one response; TLP mode
+    /// reassembles per-fragment completions into this).
     data: Vec<u8>,
     ready: bool,
+    /// TLP mode: one entry per max-payload fragment, in address
+    /// order — the tag it was issued under and the completion payload
+    /// once it arrived. Tag *matching*, not arrival order, pairs a
+    /// completion with its fragment.
+    frags: Vec<(u64, Option<Vec<u8>>)>,
+    /// Poisoned (EP) or error-status completion seen: every beat of
+    /// this burst goes out as SLVERR so the DMA engine latches the
+    /// fault instead of consuming corrupt data.
+    poisoned: bool,
+    /// Non-posted credits held by this burst, returned when it drains.
+    np_held: u32,
     beats_emitted: usize,
     beats_total: usize,
     axi_id: u8,
@@ -108,6 +137,27 @@ pub struct Bridge {
     next_tag: u64,
     /// Write burst being collected (addr, beats, axi id, data).
     wr_collect: Option<(u64, u8, u8, Vec<u8>)>,
+    /// Collected write burst waiting for posted credits (addr, id, data).
+    wr_pending: Option<(u64, u8, Vec<u8>)>,
+    // ---- flow control (device → root complex direction) ----
+    /// Non-posted header credits currently available.
+    np_credits: u32,
+    /// Posted data credits currently available, in DW.
+    p_credits_dw: u32,
+    /// Low-water marks since reset (driver-visible via the regfile).
+    pub np_min: u32,
+    pub p_min_dw: u32,
+    /// Cycles any request sat stalled waiting for credits.
+    pub credit_stall_cycles: u64,
+    /// Non-zero while a `credit-starve` fault holds both pools at
+    /// zero; cleared when the cycle counter passes it.
+    credit_freeze_until: u64,
+    /// Armed fault plan — only `credit-starve` acts at the bridge.
+    fault: Option<FaultPlan>,
+    starve_fired: bool,
+    /// Max read-request payload per TLP, in DW (TLP-mode
+    /// fragmentation; 64 DW = 256 B, a common MPS).
+    pub max_payload_dw: u16,
     // ---- interrupts ----
     irq_prev: [bool; IRQ_PINS],
     /// Poll the link every N cycles (1 = the paper's every-cycle
@@ -141,6 +191,16 @@ impl Bridge {
             dma_rd_resume_at: 0,
             next_tag: 1,
             wr_collect: None,
+            wr_pending: None,
+            np_credits: NP_CREDITS,
+            p_credits_dw: P_CREDITS_DW,
+            np_min: NP_CREDITS,
+            p_min_dw: P_CREDITS_DW,
+            credit_stall_cycles: 0,
+            credit_freeze_until: 0,
+            fault: None,
+            starve_fired: false,
+            max_payload_dw: 64,
             irq_prev: [false; IRQ_PINS],
             poll_interval: 1,
             poll_buf: Vec::with_capacity(32),
@@ -162,6 +222,31 @@ impl Bridge {
             || self.lite_wr_inflight
             || !self.dma_reads.is_empty()
             || self.wr_collect.is_some()
+            || self.wr_pending.is_some()
+            || self.credit_freeze_until != 0
+    }
+
+    /// Arm (or clear) the deterministic fault plan. Only
+    /// `credit-starve` acts at the bridge; every other class fires on
+    /// the VMM side (`pcie::device`) or in the scenario runner.
+    pub fn set_fault(&mut self, plan: Option<FaultPlan>) {
+        self.fault = plan;
+        self.starve_fired = false;
+    }
+
+    /// FLR support: throw away every in-flight DMA transaction (wedged
+    /// reads included) and restore the credit pools. Called by the
+    /// platform on the regfile soft-reset pulse so a driver-initiated
+    /// reset leaves the data path clean. The VM-facing MMIO control
+    /// path is deliberately untouched — the reset write's own
+    /// completion handshake is still in flight on it.
+    pub fn flush_dma_state(&mut self) {
+        self.dma_reads.clear();
+        self.wr_collect = None;
+        self.wr_pending = None;
+        self.np_credits = NP_CREDITS;
+        self.p_credits_dw = P_CREDITS_DW;
+        self.credit_freeze_until = 0;
     }
 
     /// Event horizon (see [`Horizon`]): `Now` while the bridge can
@@ -175,6 +260,8 @@ impl Bridge {
             || self.lite_rd_inflight.is_some()
             || self.lite_wr_inflight
             || self.wr_collect.is_some()
+            || self.wr_pending.is_some()
+            || self.credit_freeze_until != 0
             || self.dma_reads.front().is_some_and(|p| p.ready)
         {
             return Horizon::Now;
@@ -260,6 +347,18 @@ impl Bridge {
             }
         }
 
+        // ---- 1b. flow-control credit return ----
+        // The root complex hands credits back as it drains; a
+        // credit-starve fault holds both pools at zero until its
+        // window (in device cycles, so the stall is deterministic
+        // and the cycle counter keeps advancing) expires.
+        if self.credit_freeze_until != 0 && ctx.cycle >= self.credit_freeze_until {
+            self.credit_freeze_until = 0;
+        }
+        if self.credit_freeze_until == 0 {
+            self.p_credits_dw = (self.p_credits_dw + P_REGEN_DW).min(P_CREDITS_DW);
+        }
+
         // ---- 2. VM-initiated MMIO → AXI-Lite master ----
         self.drive_lite_master(link, cfg_m)?;
 
@@ -340,15 +439,34 @@ impl Bridge {
                     });
                 }
             }
-            Tlp::CplD { tag, data, .. } => {
+            Tlp::CplD { tag, data, status, poisoned, .. } => {
+                // Tag matching: pair this completion with the exact
+                // outstanding fragment it answers, regardless of
+                // arrival order.
                 let want = tag as u64;
-                if let Some(p) = self
-                    .dma_reads
-                    .iter_mut()
-                    .find(|p| p.tag == want && !p.ready)
-                {
-                    p.data.extend_from_slice(&data);
-                    if p.data.len() >= p.beats_total * DATA_BYTES {
+                if let Some(p) = self.dma_reads.iter_mut().find(|p| {
+                    !p.ready && p.frags.iter().any(|(t, d)| *t == want && d.is_none())
+                }) {
+                    if status != tlp::STATUS_SC || poisoned {
+                        // UR/CA or EP data: the burst is tainted; the
+                        // fragment is considered answered (the
+                        // completer will not send more) and every beat
+                        // drains as SLVERR.
+                        p.poisoned = true;
+                    }
+                    if let Some(slot) =
+                        p.frags.iter_mut().find(|(t, d)| *t == want && d.is_none())
+                    {
+                        slot.1 = Some(data);
+                    }
+                    if p.frags.iter().all(|(_, d)| d.is_some()) {
+                        // Reassemble in address order (frags are kept
+                        // in issue order, which is address order).
+                        p.data = p
+                            .frags
+                            .iter()
+                            .flat_map(|(_, d)| d.as_deref().unwrap_or(&[]).iter().copied())
+                            .collect();
                         p.ready = true;
                     }
                 }
@@ -445,14 +563,15 @@ impl Bridge {
 
     fn complete_read(&mut self, link: &mut Endpoint, tag: u64, data: Vec<u8>) -> Result<()> {
         if tag & TLP_TAG_MARK != 0 {
-            let c = Tlp::CplD {
-                tag: (tag & 0xFF) as u8,
-                completer: 0x0100,
-                requester: 0x0008,
+            let c = Tlp::cpl_d(
+                (tag & 0xFF) as u8,
+                0x0100,
+                0x0008,
                 data,
-                status: 0,
-            };
-            link.send(&Msg::Tlp { bytes: c.encode() })
+                tlp::STATUS_SC,
+                false,
+            )?;
+            link.send(&Msg::Tlp { bytes: c.encode()? })
         } else {
             link.send(&Msg::MmioReadResp { tag, data })
         }
@@ -472,37 +591,91 @@ impl Bridge {
         w: &mut Fifo<W>,
         b: &mut Fifo<B>,
     ) -> Result<()> {
-        // Accept read bursts (bounded outstanding queue).
-        if self.dma_reads.len() < 8 {
-            if let Some(req) = ar.pop() {
-                let tag = self.alloc_tag();
-                let bytes = req.bytes();
+        // Accept read bursts (bounded outstanding queue), gated on
+        // non-posted credits: each request TLP consumes one NP header
+        // credit, returned when the burst's last beat drains. With
+        // pools frozen (`credit-starve`) the AR sits in its FIFO and
+        // the stall shows up in `credit_stall_cycles` and the
+        // watermark registers — without corrupting any data.
+        if let Some(req) = ar.peek() {
+            let bytes = req.bytes();
+            let frags_needed = match self.mode {
+                LinkMode::Mmio => 1u32,
+                LinkMode::Tlp => {
+                    tlp::fragment_read(req.addr, bytes, self.max_payload_dw).len() as u32
+                }
+            };
+            // A credit-starve plan fires just before its Nth read
+            // request would issue, freezing both pools.
+            if !self.starve_fired
+                && self
+                    .fault
+                    .is_some_and(|p| {
+                        p.kind == FaultKind::CreditStarve && self.dma_read_reqs + 1 >= p.at
+                    })
+                && self.dma_reads.len() < 8
+            {
+                self.starve_fired = true;
+                self.credit_freeze_until = cycle + CREDIT_STARVE_CYCLES;
+            }
+            let frozen = self.credit_freeze_until != 0;
+            if self.dma_reads.len() >= 8 || frozen || self.np_credits < frags_needed {
+                if frozen || self.np_credits < frags_needed {
+                    self.credit_stall_cycles += 1;
+                }
+            } else {
+                let req = match ar.pop() {
+                    Some(r) => r,
+                    None => return Ok(()),
+                };
+                self.np_credits -= frags_needed;
+                self.np_min = self.np_min.min(self.np_credits);
                 self.dma_read_reqs += 1;
                 self.dma_rd_resume_at =
                     self.dma_rd_resume_at.max(cycle + DMA_RD_RESUME_COOLDOWN);
+                let mut frags = Vec::new();
                 match self.mode {
                     LinkMode::Mmio => {
+                        let tag = self.alloc_tag();
                         link.send(&Msg::DmaRead { tag, addr: req.addr, len: bytes })?;
+                        self.dma_reads.push_back(PendingRead {
+                            tag,
+                            data: Vec::new(),
+                            ready: false,
+                            frags,
+                            poisoned: false,
+                            np_held: frags_needed,
+                            beats_emitted: 0,
+                            beats_total: req.beats() as usize,
+                            axi_id: req.id,
+                        });
                     }
                     LinkMode::Tlp => {
-                        // ≤256B bursts fit one TLP at 64-DW MPS.
-                        let t = Tlp::MemRd {
-                            addr: req.addr,
-                            len_dw: (bytes / 4) as u16,
-                            tag: (tag & 0xFF) as u8,
-                            requester: 0x0100,
-                        };
-                        link.send(&Msg::Tlp { bytes: t.encode() })?;
+                        // Max-payload fragmentation on the main path:
+                        // one MRd TLP per fragment, each with its own
+                        // tag for out-of-order completion matching.
+                        let first_tag = self.next_tag;
+                        for (a, ndw) in
+                            tlp::fragment_read(req.addr, bytes, self.max_payload_dw)
+                        {
+                            let tag = self.alloc_tag();
+                            let t = Tlp::mem_rd(a, ndw, (tag & 0xFF) as u8, 0x0100)?;
+                            link.send(&Msg::Tlp { bytes: t.encode()? })?;
+                            frags.push((tag, None));
+                        }
+                        self.dma_reads.push_back(PendingRead {
+                            tag: first_tag,
+                            data: Vec::new(),
+                            ready: false,
+                            frags,
+                            poisoned: false,
+                            np_held: frags_needed,
+                            beats_emitted: 0,
+                            beats_total: req.beats() as usize,
+                            axi_id: req.id,
+                        });
                     }
                 }
-                self.dma_reads.push_back(PendingRead {
-                    tag,
-                    data: Vec::new(),
-                    ready: false,
-                    beats_emitted: 0,
-                    beats_total: req.beats() as usize,
-                    axi_id: req.id,
-                });
             }
         }
         // Emit R beats for the oldest ready burst (AXI in-order per id;
@@ -517,7 +690,7 @@ impl Bridge {
                 let i = front.beats_emitted;
                 let mut data = [0u8; DATA_BYTES];
                 let off = i * DATA_BYTES;
-                let ok = off + DATA_BYTES <= front.data.len();
+                let ok = !front.poisoned && off + DATA_BYTES <= front.data.len();
                 if ok {
                     data.copy_from_slice(&front.data[off..off + DATA_BYTES]);
                 }
@@ -527,14 +700,17 @@ impl Bridge {
                 r.try_push(R {
                     data,
                     id: front.axi_id,
-                    // An aborted/short response (BME off) returns SLVERR
+                    // An aborted/short response (BME off), a poisoned
+                    // (EP) completion or a UR/CA status returns SLVERR
                     // beats, which the DMA latches as an error.
                     resp: if ok { resp::OKAY } else { resp::SLVERR },
                     last,
                 })?;
                 front.beats_emitted += 1;
                 if last {
+                    let np_back = front.np_held;
                     self.dma_reads.pop_front();
+                    self.np_credits = (self.np_credits + np_back).min(NP_CREDITS);
                     // The drained beats still ripple toward the sorter
                     // for a few cycles; the next burst must not start
                     // inside that wall-racy window.
@@ -543,8 +719,12 @@ impl Bridge {
                 }
             }
         }
-        // Collect write bursts.
-        if self.wr_collect.is_none() {
+        // Collect write bursts. A completed burst moves to
+        // `wr_pending` and is only forwarded once enough posted data
+        // credits are available (and the pools are not frozen) — the
+        // B response is withheld with it, so a credit stall
+        // back-pressures the DMA engine deterministically.
+        if self.wr_collect.is_none() && self.wr_pending.is_none() {
             if let Some(req) = aw.pop() {
                 self.wr_collect = Some((req.addr, req.len, req.id, Vec::new()));
             }
@@ -554,21 +734,33 @@ impl Bridge {
                 data.extend_from_slice(&beat.data);
                 if beat.last {
                     let (addr, id, data) = (*addr, *id, std::mem::take(data));
-                    self.dma_write_reqs += 1;
-                    match self.mode {
-                        LinkMode::Mmio => link.send(&Msg::DmaWrite { addr, data })?,
-                        LinkMode::Tlp => {
-                            let t = Tlp::MemWr { addr, data, requester: 0x0100 };
-                            link.send(&Msg::Tlp { bytes: t.encode() })?;
-                        }
-                    }
-                    if b.can_push() {
-                        // Echo the AW id so the DMA can attribute the
-                        // response (data burst vs SG status writeback).
-                        b.push(B { id, resp: resp::OKAY });
-                    }
+                    self.wr_pending = Some((addr, id, data));
                     self.wr_collect = None;
                 }
+            }
+        }
+        if let Some((_, _, data)) = &self.wr_pending {
+            let need_dw = (data.len() as u32).div_ceil(4);
+            let frozen = self.credit_freeze_until != 0;
+            if !frozen && self.p_credits_dw >= need_dw && b.can_push() {
+                let Some((addr, id, data)) = self.wr_pending.take() else {
+                    return Ok(());
+                };
+                self.p_credits_dw -= need_dw;
+                self.p_min_dw = self.p_min_dw.min(self.p_credits_dw);
+                self.dma_write_reqs += 1;
+                match self.mode {
+                    LinkMode::Mmio => link.send(&Msg::DmaWrite { addr, data })?,
+                    LinkMode::Tlp => {
+                        let t = Tlp::mem_wr(addr, data, 0x0100)?;
+                        link.send(&Msg::Tlp { bytes: t.encode()? })?;
+                    }
+                }
+                // Echo the AW id so the DMA can attribute the
+                // response (data burst vs SG status writeback).
+                b.push(B { id, resp: resp::OKAY });
+            } else if frozen || self.p_credits_dw < need_dw {
+                self.credit_stall_cycles += 1;
             }
         }
         Ok(())
@@ -579,13 +771,16 @@ impl Bridge {
         match self.mode {
             LinkMode::Mmio => link.send(&Msg::Interrupt { vector }),
             LinkMode::Tlp => {
-                // Real MSI: a posted MemWr into the FEE window.
-                let t = Tlp::MemWr {
-                    addr: tlp::MSI_WINDOW_BASE + vector as u64 * 4,
-                    data: vec![0; 4],
-                    requester: 0x0100,
-                };
-                link.send(&Msg::Tlp { bytes: t.encode() })
+                // Real MSI: a posted MemWr into the FEE window. MSIs
+                // bypass the posted data pool — real bridges reserve
+                // header credits for them, and a starved pool must
+                // never be able to deadlock interrupt delivery.
+                let t = Tlp::mem_wr(
+                    tlp::MSI_WINDOW_BASE + vector as u64 * 4,
+                    vec![0; 4],
+                    0x0100,
+                )?;
+                link.send(&Msg::Tlp { bytes: t.encode()? })
             }
         }
     }
@@ -620,6 +815,19 @@ impl Bridge {
             w.put_usize(p.beats_emitted);
             w.put_usize(p.beats_total);
             w.put_u8(p.axi_id);
+            w.put_bool(p.poisoned);
+            w.put_u32(p.np_held);
+            w.put_usize(p.frags.len());
+            for (t, d) in &p.frags {
+                w.put_u64(*t);
+                match d {
+                    Some(d) => {
+                        w.put_bool(true);
+                        w.put_bytes(d);
+                    }
+                    None => w.put_bool(false),
+                }
+            }
         }
         w.put_u64(self.dma_rd_resume_at);
         w.put_u64(self.next_tag);
@@ -647,6 +855,22 @@ impl Bridge {
         ] {
             w.put_u64(c);
         }
+        match &self.wr_pending {
+            Some((addr, id, data)) => {
+                w.put_bool(true);
+                w.put_u64(*addr);
+                w.put_u8(*id);
+                w.put_bytes(data);
+            }
+            None => w.put_bool(false),
+        }
+        w.put_u32(self.np_credits);
+        w.put_u32(self.p_credits_dw);
+        w.put_u32(self.np_min);
+        w.put_u32(self.p_min_dw);
+        w.put_u64(self.credit_stall_cycles);
+        w.put_u64(self.credit_freeze_until);
+        w.put_bool(self.starve_fired);
     }
 
     /// Restore state saved by [`Bridge::save_state`].
@@ -667,13 +891,40 @@ impl Bridge {
         }
         self.dma_reads.clear();
         for _ in 0..n {
+            let tag = r.get_u64("bridge.pending.tag")?;
+            let data = r.get_vec("bridge.pending.data")?;
+            let ready = r.get_bool("bridge.pending.ready")?;
+            let beats_emitted = r.get_usize("bridge.pending.beats_emitted")?;
+            let beats_total = r.get_usize("bridge.pending.beats_total")?;
+            let axi_id = r.get_u8("bridge.pending.axi_id")?;
+            let poisoned = r.get_bool("bridge.pending.poisoned")?;
+            let np_held = r.get_u32("bridge.pending.np_held")?;
+            let nf = r.get_usize("bridge.pending.frags.len")?;
+            if nf > 64 {
+                return Err(crate::Error::hdl(format!(
+                    "snapshot bridge.pending claims {nf} fragments"
+                )));
+            }
+            let mut frags = Vec::with_capacity(nf);
+            for _ in 0..nf {
+                let t = r.get_u64("bridge.pending.frag.tag")?;
+                let d = if r.get_bool("bridge.pending.frag.has_data")? {
+                    Some(r.get_vec("bridge.pending.frag.data")?)
+                } else {
+                    None
+                };
+                frags.push((t, d));
+            }
             self.dma_reads.push_back(PendingRead {
-                tag: r.get_u64("bridge.pending.tag")?,
-                data: r.get_vec("bridge.pending.data")?,
-                ready: r.get_bool("bridge.pending.ready")?,
-                beats_emitted: r.get_usize("bridge.pending.beats_emitted")?,
-                beats_total: r.get_usize("bridge.pending.beats_total")?,
-                axi_id: r.get_u8("bridge.pending.axi_id")?,
+                tag,
+                data,
+                ready,
+                frags,
+                poisoned,
+                np_held,
+                beats_emitted,
+                beats_total,
+                axi_id,
             });
         }
         self.dma_rd_resume_at = r.get_u64("bridge.dma_rd_resume_at")?;
@@ -698,6 +949,22 @@ impl Bridge {
         self.irqs_sent = r.get_u64("bridge.irqs_sent")?;
         self.slverrs_seen = r.get_u64("bridge.slverrs_seen")?;
         self.idle_polls = r.get_u64("bridge.idle_polls")?;
+        self.wr_pending = if r.get_bool("bridge.wr_pending")? {
+            Some((
+                r.get_u64("bridge.wr_pending.addr")?,
+                r.get_u8("bridge.wr_pending.id")?,
+                r.get_vec("bridge.wr_pending.data")?,
+            ))
+        } else {
+            None
+        };
+        self.np_credits = r.get_u32("bridge.np_credits")?;
+        self.p_credits_dw = r.get_u32("bridge.p_credits_dw")?;
+        self.np_min = r.get_u32("bridge.np_min")?;
+        self.p_min_dw = r.get_u32("bridge.p_min_dw")?;
+        self.credit_stall_cycles = r.get_u64("bridge.credit_stall_cycles")?;
+        self.credit_freeze_until = r.get_u64("bridge.credit_freeze_until")?;
+        self.starve_fired = r.get_bool("bridge.starve_fired")?;
         Ok(())
     }
 }
@@ -725,6 +992,14 @@ impl Probed for Bridge {
         sink.sig("platform.bridge.dma_read_reqs", 32, self.dma_read_reqs);
         sink.sig("platform.bridge.dma_write_reqs", 32, self.dma_write_reqs);
         sink.sig("platform.bridge.irqs_sent", 16, self.irqs_sent);
+        sink.sig("platform.bridge.np_credits", 8, self.np_credits as u64);
+        sink.sig("platform.bridge.p_credits_dw", 16, self.p_credits_dw as u64);
+        sink.sig("platform.bridge.credit_stall", 32, self.credit_stall_cycles);
+        sink.sig(
+            "platform.bridge.credit_frozen",
+            1,
+            (self.credit_freeze_until != 0) as u64,
+        );
         for (i, &p) in self.irq_prev.iter().enumerate() {
             sink.sig(&format!("platform.bridge.irq_in{i}"), 1, p as u64);
         }
@@ -918,7 +1193,7 @@ mod tests {
     fn tlp_mode_memrd_maps_to_bar_and_completes() {
         let mut h = H::new(LinkMode::Tlp);
         let t = Tlp::MemRd { addr: 0xF000_0008, len_dw: 1, tag: 5, requester: 8 };
-        h.vm.send(&Msg::Tlp { bytes: t.encode() }).unwrap();
+        h.vm.send(&Msg::Tlp { bytes: t.encode().unwrap() }).unwrap();
         h.step([false; IRQ_PINS]);
         h.step([false; IRQ_PINS]);
         let ar = h.cfg.ar.pop().expect("AR from TLP");
@@ -946,5 +1221,136 @@ mod tests {
         let Msg::Tlp { bytes } = &got[0] else { panic!("{got:?}") };
         let Tlp::MemWr { addr, .. } = Tlp::decode(bytes).unwrap() else { panic!() };
         assert!(tlp::is_msi_address(addr));
+    }
+
+    #[test]
+    fn tlp_mode_fragments_dma_read_and_reassembles() {
+        let mut h = H::new(LinkMode::Tlp);
+        // 8 DW max payload → a 64 B burst becomes two MRd TLPs.
+        h.bridge.max_payload_dw = 8;
+        h.ar.push(Ar { addr: 0x8000, len: 1, id: 3 }); // 2 beats = 64B
+        h.ar.commit();
+        h.step([false; IRQ_PINS]);
+        let reqs = h.vm.poll().unwrap();
+        let mut frags = Vec::new();
+        for m in &reqs {
+            let Msg::Tlp { bytes } = m else { panic!("{m:?}") };
+            let Tlp::MemRd { addr, len_dw, tag, .. } = Tlp::decode(bytes).unwrap() else {
+                panic!()
+            };
+            frags.push((addr, len_dw, tag));
+        }
+        assert_eq!(frags.len(), 2, "two fragments at 8-DW MPS");
+        assert_eq!((frags[0].0, frags[0].1), (0x8000, 8));
+        assert_eq!((frags[1].0, frags[1].1), (0x8020, 8));
+        // Answer OUT OF ORDER: second fragment first. Tag matching
+        // must still reassemble in address order.
+        for &(addr, len_dw, tag) in frags.iter().rev() {
+            let data: Vec<u8> = (0..len_dw as usize * 4).map(|i| (addr as u8) ^ i as u8).collect();
+            let c = Tlp::cpl_d(tag, 0, 0x0100, data, tlp::STATUS_SC, false).unwrap();
+            h.vm.send(&Msg::Tlp { bytes: c.encode().unwrap() }).unwrap();
+        }
+        let mut beats = Vec::new();
+        for _ in 0..16 {
+            h.step([false; IRQ_PINS]);
+            while let Some(r) = h.r.pop() {
+                beats.push(r);
+            }
+        }
+        assert_eq!(beats.len(), 2);
+        assert!(beats.iter().all(|b| b.resp == resp::OKAY));
+        let bytes: Vec<u8> = beats.iter().flat_map(|b| b.data).collect();
+        let expect: Vec<u8> = (0..32u8).map(|i| 0x00 ^ i).chain((0..32u8).map(|i| 0x20 ^ i)).collect();
+        assert_eq!(bytes, expect);
+    }
+
+    #[test]
+    fn poisoned_completion_drains_as_slverr() {
+        let mut h = H::new(LinkMode::Tlp);
+        h.ar.push(Ar { addr: 0x8000, len: 1, id: 3 });
+        h.ar.commit();
+        h.step([false; IRQ_PINS]);
+        let got = h.vm.poll().unwrap();
+        let Msg::Tlp { bytes } = &got[0] else { panic!("{got:?}") };
+        let Tlp::MemRd { tag, len_dw, .. } = Tlp::decode(bytes).unwrap() else { panic!() };
+        let c = Tlp::cpl_d(tag, 0, 0x0100, vec![0xAB; len_dw as usize * 4], tlp::STATUS_SC, true)
+            .unwrap();
+        h.vm.send(&Msg::Tlp { bytes: c.encode().unwrap() }).unwrap();
+        let mut beats = Vec::new();
+        for _ in 0..16 {
+            h.step([false; IRQ_PINS]);
+            while let Some(r) = h.r.pop() {
+                beats.push(r);
+            }
+        }
+        assert_eq!(beats.len(), 2);
+        assert!(
+            beats.iter().all(|b| b.resp == resp::SLVERR),
+            "EP data must never reach the DMA as OKAY beats"
+        );
+    }
+
+    #[test]
+    fn ur_completion_drains_as_slverr() {
+        let mut h = H::new(LinkMode::Tlp);
+        h.ar.push(Ar { addr: 0x8000, len: 0, id: 1 }); // single beat
+        h.ar.commit();
+        h.step([false; IRQ_PINS]);
+        let got = h.vm.poll().unwrap();
+        let Msg::Tlp { bytes } = &got[0] else { panic!("{got:?}") };
+        let Tlp::MemRd { tag, .. } = Tlp::decode(bytes).unwrap() else { panic!() };
+        let c = Tlp::cpl_d(tag, 0, 0x0100, Vec::new(), tlp::STATUS_UR, false).unwrap();
+        h.vm.send(&Msg::Tlp { bytes: c.encode().unwrap() }).unwrap();
+        let mut beats = Vec::new();
+        for _ in 0..16 {
+            h.step([false; IRQ_PINS]);
+            while let Some(r) = h.r.pop() {
+                beats.push(r);
+            }
+        }
+        assert_eq!(beats.len(), 1);
+        assert_eq!(beats[0].resp, resp::SLVERR);
+    }
+
+    #[test]
+    fn credit_starve_stalls_then_resumes() {
+        let mut h = H::new(LinkMode::Mmio);
+        h.bridge.set_fault(Some(crate::pcie::FaultPlan {
+            kind: crate::pcie::FaultKind::CreditStarve,
+            at: 1,
+        }));
+        h.ar.push(Ar { addr: 0x8000, len: 0, id: 1 });
+        h.ar.commit();
+        h.step([false; IRQ_PINS]);
+        // The request is frozen, not forwarded.
+        assert!(h.vm.poll().unwrap().is_empty(), "request must stall under starve");
+        assert!(h.bridge.credit_stall_cycles >= 1);
+        assert!(h.bridge.credit_freeze_until > 0);
+        // Run the clock past the freeze window: the request issues.
+        h.cycle = CREDIT_STARVE_CYCLES + 1;
+        h.step([false; IRQ_PINS]);
+        h.step([false; IRQ_PINS]);
+        let got = h.vm.poll().unwrap();
+        assert!(
+            matches!(got.first(), Some(Msg::DmaRead { .. })),
+            "request must issue after the freeze expires: {got:?}"
+        );
+    }
+
+    #[test]
+    fn flush_dma_state_clears_wedged_reads() {
+        let mut h = H::new(LinkMode::Mmio);
+        h.ar.push(Ar { addr: 0x8000, len: 0, id: 1 });
+        h.ar.commit();
+        h.step([false; IRQ_PINS]);
+        // Request went out, no response will ever come (completion
+        // timeout): pending read is wedged.
+        assert!(h.bridge.busy());
+        h.bridge.flush_dma_state();
+        assert!(!h.bridge.busy(), "flush must clear the wedged read");
+        // A stale response for the flushed tag is dropped harmlessly.
+        h.vm.send(&Msg::DmaReadResp { tag: 1, data: vec![0; 32] }).unwrap();
+        h.step([false; IRQ_PINS]);
+        assert!(h.r.pop().is_none());
     }
 }

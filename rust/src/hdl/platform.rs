@@ -36,6 +36,7 @@ use super::sim::{Fifo, ForceMap, Horizon, TickCtx};
 use super::signal::{ProbeSink, Probed};
 use super::snapshot::{SnapReader, SnapWriter};
 use crate::link::{Endpoint, LinkMode};
+use crate::pcie::FaultPlan;
 use crate::Result;
 
 /// IRQ pin assignment on the bridge.
@@ -64,6 +65,13 @@ pub struct PlatformCfg {
     /// in TLP mode — device k's windows sit at
     /// [`crate::pcie::board::bar0_gpa`]`(k)` / `bar2_gpa(k)`.
     pub device_index: usize,
+    /// Fault plan armed on this device's lane
+    /// ([`crate::pcie::fault`]). The platform hands it to the bridge
+    /// (which acts only on `credit-starve`); device-level classes are
+    /// wired to the VMM-side pseudo device by the coordinator. Part of
+    /// the snapshot geometry stamp: a snapshot taken under a fault
+    /// plan only restores into a platform armed with the same plan.
+    pub fault: Option<FaultPlan>,
 }
 
 impl Default for PlatformCfg {
@@ -75,6 +83,7 @@ impl Default for PlatformCfg {
             stream_fifo_depth: 64,
             poll_interval: 1,
             device_index: 0,
+            fault: None,
         }
     }
 }
@@ -129,6 +138,7 @@ impl Platform {
         ];
         let mut bridge = Bridge::new(cfg.link_mode, windows);
         bridge.poll_interval = cfg.poll_interval;
+        bridge.set_fault(cfg.fault);
         let kernel = build_kernel(&cfg.kernel);
         let mut regfile = RegFile::new();
         regfile.set_kernel_info(KernelInfo {
@@ -183,8 +193,14 @@ impl Platform {
         // 2. Interconnect: route config transactions.
         self.xbar.tick(&mut self.cfg_port, &mut self.slave_ports);
 
-        // 3. Regfile (slave 0) with the kernel's status wires.
+        // 3. Regfile (slave 0) with the kernel's status wires and the
+        // bridge's credit telemetry (both live, like real CSR inputs).
         let status = self.kernel.status();
+        self.regfile.set_credit_stats(
+            self.bridge.credit_stall_cycles,
+            self.bridge.np_min,
+            self.bridge.p_min_dw,
+        );
         {
             let p = &mut self.slave_ports[0];
             self.regfile.tick(
@@ -194,7 +210,22 @@ impl Platform {
         // CONTROL wiring.
         self.kernel.set_order_desc(self.regfile.order_desc);
         if self.regfile.soft_reset_pulse {
+            // FLR-style function reset: the kernel drops mid-record
+            // state, and the whole data path between link and kernel
+            // is flushed — wedged bridge reads (completion timeout),
+            // half-collected write bursts, DMA-master wires and both
+            // stream FIFOs. The AXI-Lite control path is deliberately
+            // left alone: the reset write's own B response is still in
+            // flight on it, and the driver re-reads CSRs right after.
             self.kernel.soft_reset();
+            self.bridge.flush_dma_state();
+            self.dm_ar.clear();
+            self.dm_r.clear();
+            self.dm_aw.clear();
+            self.dm_w.clear();
+            self.dm_b.clear();
+            self.mm2s_axis.clear();
+            self.s2mm_axis.clear();
         }
         self.irq_test_level = self.regfile.irq_test_pulse.is_some();
 
@@ -363,6 +394,8 @@ impl Platform {
             LinkMode::Mmio => 0,
             LinkMode::Tlp => 1,
         });
+        w.put_u8(self.cfg.fault.map_or(0, |p| p.kind.id()));
+        w.put_u64(self.cfg.fault.map_or(0, |p| p.at));
         w.put_u64(cycle);
         // Module sections, in fixed order.
         self.bridge.save_state(&mut w);
@@ -434,6 +467,16 @@ impl Platform {
             LinkMode::Tlp => 1,
         };
         check("link mode", u64::from(r.get_u8("geom.link_mode")?), mode)?;
+        check(
+            "fault kind",
+            u64::from(r.get_u8("geom.fault_kind")?),
+            u64::from(self.cfg.fault.map_or(0, |p| p.kind.id())),
+        )?;
+        check(
+            "fault index",
+            r.get_u64("geom.fault_at")?,
+            self.cfg.fault.map_or(0, |p| p.at),
+        )?;
         let cycle = r.get_u64("cycle")?;
         self.bridge.load_state(&mut r)?;
         self.xbar.load_state(&mut r)?;
@@ -466,7 +509,9 @@ impl Platform {
 /// Snapshot blob magic ("VM-HDL snapshot").
 pub const SNAP_MAGIC: &[u8; 4] = b"VHSP";
 /// Snapshot format version — bump on any layout change.
-pub const SNAP_VERSION: u16 = 1;
+/// v2: fault plan in the geometry stamp; bridge credit/fragment state;
+/// regfile credit/fault status block.
+pub const SNAP_VERSION: u16 = 2;
 
 impl Probed for Platform {
     fn probe(&self, sink: &mut dyn ProbeSink) {

@@ -61,13 +61,45 @@ pub mod regs {
     /// RO: completion size per record (32-bit words) — what the driver
     /// must program into S2MM and read back.
     pub const OUT_WORDS: u32 = 0x3C;
+    /// RO: cycles the bridge's DMA path spent stalled on exhausted
+    /// flow-control credits (low 32 bits) — nonzero means the link was
+    /// the bottleneck (or a `credit-starve` fault fired); see
+    /// DEBUGGING.md §11.
+    pub const CREDIT_STALL_LO: u32 = 0x40;
+    /// RO: low-watermark of the bridge's non-posted credit pool since
+    /// reset (8 = never dipped).
+    pub const CREDIT_NP_MIN: u32 = 0x44;
+    /// RO: low-watermark of the bridge's posted credit pool in DW
+    /// since reset (256 = never dipped).
+    pub const CREDIT_P_MIN: u32 = 0x48;
+    /// RW: reset-cause scratch the driver stamps *before* pulsing the
+    /// CONTROL soft reset, so post-mortem triage can tell a routine
+    /// reinit from a watchdog recovery (values: [`super::cause`]).
+    /// Sticky across the reset itself.
+    pub const RESET_CAUSE: u32 = 0x4C;
+    /// RO: soft resets taken with [`RESET_CAUSE`] =
+    /// [`super::cause::TIMEOUT`] — the hardware-side count of
+    /// completion-timeout recoveries, cross-checked against the
+    /// driver's own retry ledger by the fault-matrix tests.
+    pub const TIMEOUT_COUNT: u32 = 0x50;
+}
+
+/// Values the driver writes to [`regs::RESET_CAUSE`] before pulsing a
+/// soft reset.
+pub mod cause {
+    /// Routine reinit (probe, scenario setup).
+    pub const NONE: u32 = 0;
+    /// Completion-timeout watchdog recovery.
+    pub const TIMEOUT: u32 = 1;
+    /// DMA error latched (poisoned/UR completion quarantine).
+    pub const DMA_ERROR: u32 = 2;
 }
 
 /// Magic id value ("SRT1" little-endian).
 pub const ID_VALUE: u32 = 0x3154_5253;
-/// Version reported (bumped to .4 when the kernel capability registers
-/// appeared at 0x34..0x40).
-pub const VERSION_VALUE: u32 = 0x0001_0004;
+/// Version reported (bumped to .5 when the credit/fault status block
+/// appeared at 0x40..0x54).
+pub const VERSION_VALUE: u32 = 0x0001_0005;
 
 /// Kernel identity the regfile advertises through the capability
 /// registers (latched at elaboration by the platform).
@@ -104,6 +136,15 @@ pub struct RegFile {
     pub kernel_info: KernelInfo,
     /// Sticky length-error (cleared by writing STATUS).
     sticky_len_err: bool,
+    /// Bridge credit telemetry, pushed in by the platform each tick
+    /// (stall cycles, NP pool low-watermark, P pool low-watermark).
+    credit_stall: u64,
+    credit_np_min: u32,
+    credit_p_min: u32,
+    /// Driver-stamped reset cause ([`cause`]); sticky across soft reset.
+    reset_cause: u32,
+    /// Soft resets taken with `reset_cause == cause::TIMEOUT`.
+    timeout_count: u32,
     cycle_lo_latch: u32,
     cycles: u64,
     // Pending write: AW and W may arrive in different cycles.
@@ -129,6 +170,11 @@ impl RegFile {
             status: KernelStatus::default(),
             kernel_info: KernelInfo::default(),
             sticky_len_err: false,
+            credit_stall: 0,
+            credit_np_min: 0,
+            credit_p_min: 0,
+            reset_cause: 0,
+            timeout_count: 0,
             cycle_lo_latch: 0,
             cycles: 0,
             pend_aw: None,
@@ -141,6 +187,14 @@ impl RegFile {
     /// Latch the capability-register contents (platform elaboration).
     pub fn set_kernel_info(&mut self, info: KernelInfo) {
         self.kernel_info = info;
+    }
+
+    /// Push the bridge's credit telemetry into the status block (the
+    /// platform wires this each tick, like `KernelStatus`).
+    pub fn set_credit_stats(&mut self, stall_cycles: u64, np_min: u32, p_min_dw: u32) {
+        self.credit_stall = stall_cycles;
+        self.credit_np_min = np_min;
+        self.credit_p_min = p_min_dw;
     }
 
     fn read_reg(&mut self, addr: u32) -> (u32, u8) {
@@ -167,6 +221,11 @@ impl RegFile {
             regs::KERNEL => self.kernel_info.kernel_id,
             regs::RECLEN => self.kernel_info.reclen,
             regs::OUT_WORDS => self.kernel_info.out_words,
+            regs::CREDIT_STALL_LO => self.credit_stall as u32,
+            regs::CREDIT_NP_MIN => self.credit_np_min,
+            regs::CREDIT_P_MIN => self.credit_p_min,
+            regs::RESET_CAUSE => self.reset_cause,
+            regs::TIMEOUT_COUNT => self.timeout_count,
             _ => return (0xDEAD_BEEF, resp::SLVERR),
         };
         (val, resp::OKAY)
@@ -183,14 +242,21 @@ impl RegFile {
                 self.order_desc = data & 1 != 0;
                 if data & 2 != 0 {
                     self.soft_reset_pulse = true;
+                    // Hardware-side recovery ledger: count the resets
+                    // the driver attributed to a completion timeout.
+                    if self.reset_cause == cause::TIMEOUT {
+                        self.timeout_count = self.timeout_count.wrapping_add(1);
+                    }
                 }
             }
             regs::STATUS => self.sticky_len_err = false, // W1C-all
             regs::IRQ_TEST => self.irq_test_pulse = Some(data as u16),
+            regs::RESET_CAUSE => self.reset_cause = data,
             regs::ID | regs::VERSION | regs::REC_COUNT | regs::CYCLES_LO
             | regs::CYCLES_HI | regs::STALL_IN | regs::STALL_OUT
             | regs::BEATS_IN | regs::BEATS_OUT | regs::KERNEL | regs::RECLEN
-            | regs::OUT_WORDS => return resp::SLVERR, // RO
+            | regs::OUT_WORDS | regs::CREDIT_STALL_LO | regs::CREDIT_NP_MIN
+            | regs::CREDIT_P_MIN | regs::TIMEOUT_COUNT => return resp::SLVERR, // RO
             _ => return resp::SLVERR,
         }
         resp::OKAY
@@ -274,6 +340,11 @@ impl RegFile {
         w.put_u32(self.kernel_info.reclen);
         w.put_u32(self.kernel_info.out_words);
         w.put_bool(self.sticky_len_err);
+        w.put_u64(self.credit_stall);
+        w.put_u32(self.credit_np_min);
+        w.put_u32(self.credit_p_min);
+        w.put_u32(self.reset_cause);
+        w.put_u32(self.timeout_count);
         w.put_u32(self.cycle_lo_latch);
         w.put_u64(self.cycles);
         put_opt(w, &self.pend_aw);
@@ -293,6 +364,11 @@ impl RegFile {
         self.kernel_info.reclen = r.get_u32("regfile.reclen")?;
         self.kernel_info.out_words = r.get_u32("regfile.out_words")?;
         self.sticky_len_err = r.get_bool("regfile.sticky_len_err")?;
+        self.credit_stall = r.get_u64("regfile.credit_stall")?;
+        self.credit_np_min = r.get_u32("regfile.credit_np_min")?;
+        self.credit_p_min = r.get_u32("regfile.credit_p_min")?;
+        self.reset_cause = r.get_u32("regfile.reset_cause")?;
+        self.timeout_count = r.get_u32("regfile.timeout_count")?;
         self.cycle_lo_latch = r.get_u32("regfile.cycle_lo_latch")?;
         self.cycles = r.get_u64("regfile.cycles")?;
         self.pend_aw = get_opt(r, "regfile.pend_aw")?;
@@ -310,6 +386,8 @@ impl Probed for RegFile {
         sink.sig("platform.regfile.sticky_len_err", 1, self.sticky_len_err as u64);
         sink.sig("platform.regfile.reads", 32, self.reads);
         sink.sig("platform.regfile.writes", 32, self.writes);
+        sink.sig("platform.regfile.reset_cause", 32, self.reset_cause as u64);
+        sink.sig("platform.regfile.timeout_count", 32, self.timeout_count as u64);
     }
 }
 
@@ -483,6 +561,36 @@ mod tests {
         write(&mut rf, &mut ch, regs::STATUS, 0);
         let (v, _) = read(&mut rf, &mut ch, regs::STATUS);
         assert_eq!(v & 0b10, 0, "sticky error cleared");
+    }
+
+    #[test]
+    fn fault_status_block_reads_and_counts_timeout_resets() {
+        let mut rf = RegFile::new();
+        let mut ch = Ch::new();
+        // Credit telemetry is RO and reflects what the platform pushes.
+        rf.set_credit_stats(7, 3, 192);
+        assert_eq!(read(&mut rf, &mut ch, regs::CREDIT_STALL_LO), (7, resp::OKAY));
+        assert_eq!(read(&mut rf, &mut ch, regs::CREDIT_NP_MIN), (3, resp::OKAY));
+        assert_eq!(read(&mut rf, &mut ch, regs::CREDIT_P_MIN), (192, resp::OKAY));
+        assert_eq!(write(&mut rf, &mut ch, regs::CREDIT_STALL_LO, 0), resp::SLVERR);
+        assert_eq!(write(&mut rf, &mut ch, regs::TIMEOUT_COUNT, 0), resp::SLVERR);
+        // RESET_CAUSE is RW and sticky; TIMEOUT_COUNT counts only
+        // resets stamped with the timeout cause.
+        assert_eq!(write(&mut rf, &mut ch, regs::RESET_CAUSE, cause::TIMEOUT), resp::OKAY);
+        write(&mut rf, &mut ch, regs::CONTROL, 2); // soft reset
+        assert_eq!(read(&mut rf, &mut ch, regs::TIMEOUT_COUNT), (1, resp::OKAY));
+        assert_eq!(
+            read(&mut rf, &mut ch, regs::RESET_CAUSE),
+            (cause::TIMEOUT, resp::OKAY),
+            "cause is sticky across the reset"
+        );
+        write(&mut rf, &mut ch, regs::RESET_CAUSE, cause::DMA_ERROR);
+        write(&mut rf, &mut ch, regs::CONTROL, 2);
+        assert_eq!(
+            read(&mut rf, &mut ch, regs::TIMEOUT_COUNT),
+            (1, resp::OKAY),
+            "non-timeout resets must not count"
+        );
     }
 
     #[test]

@@ -852,6 +852,15 @@ pub struct Endpoint {
     /// (the event-driven scheduler fast-forwards device-time gaps, so
     /// a cycles-only model would be wall-invisible).
     send_latency: Duration,
+    /// Per-send jitter ceiling in µs (`--impair jitter=us`): each
+    /// payload send adds a seeded pseudo-random sleep in
+    /// `[0, jitter_us]` µs on top of `send_latency`. Wall-only, so
+    /// device-cycle determinism is untouched; the sleep sequence is a
+    /// pure function of the impair seed and the send count.
+    jitter_us: u32,
+    /// XorShift state of the jitter stream (interior mutability: the
+    /// latency model runs on the `&self` send path).
+    jitter_state: std::cell::Cell<u64>,
 }
 
 impl Endpoint {
@@ -868,6 +877,8 @@ impl Endpoint {
             recv_by_label: Default::default(),
             doorbell,
             send_latency: Duration::ZERO,
+            jitter_us: 0,
+            jitter_state: std::cell::Cell::new(1),
         }
     }
 
@@ -1129,6 +1140,16 @@ impl Endpoint {
         if cfg.is_null() || !cfg.applies_to(self.side) {
             return;
         }
+        if cfg.jitter_us > 0 {
+            self.jitter_us = cfg.jitter_us;
+            // Pair index 2: a stream disjoint from the two tx fault
+            // streams below. XorShift must never be seeded with 0.
+            self.jitter_state
+                .set(stream_seed(cfg.seed, self.device, self.side, 2).max(1));
+        }
+        if !cfg.has_loss_faults() {
+            return;
+        }
         let (c, dev, side) = (*cfg, self.device, self.side);
         self.pair_a.wrap_tx(|t| {
             Box::new(ImpairedTransport::new(t, c, stream_seed(c.seed, dev, side, 0)))
@@ -1215,9 +1236,24 @@ impl Endpoint {
 
     #[inline]
     fn model_wire_latency(&self) {
-        if !self.send_latency.is_zero() {
-            std::thread::sleep(self.send_latency);
+        let stall = self.send_latency + self.next_jitter();
+        if !stall.is_zero() {
+            std::thread::sleep(stall);
         }
+    }
+
+    /// Next jitter sample: a deterministic xorshift64 draw mapped to
+    /// `[0, jitter_us]` µs (zero when jitter is off).
+    fn next_jitter(&self) -> Duration {
+        if self.jitter_us == 0 {
+            return Duration::ZERO;
+        }
+        let mut x = self.jitter_state.get();
+        x ^= x << 13;
+        x ^= x >> 7;
+        x ^= x << 17;
+        self.jitter_state.set(x);
+        Duration::from_micros(x % (self.jitter_us as u64 + 1))
     }
 
     /// Route a payload message to the conventional pair for its type.
@@ -1562,6 +1598,25 @@ mod tests {
         let d2 = Endpoint::uds_device_dir(base, 2);
         assert_ne!(d1, d2);
         assert!(d1.starts_with(base));
+    }
+
+    #[test]
+    fn jitter_sequence_is_seeded_and_deterministic() {
+        let sample = |seed: u64| -> Vec<Duration> {
+            let (mut vm, _hdl) = Endpoint::inproc_pair();
+            vm.impair(&ImpairCfg::parse(&format!("jitter=100,seed={seed}")).unwrap());
+            (0..32).map(|_| vm.next_jitter()).collect()
+        };
+        let a = sample(7);
+        assert_eq!(a, sample(7), "same seed must draw the same jitter sequence");
+        assert_ne!(a, sample(8), "different seeds should diverge");
+        assert!(a.iter().all(|d| *d <= Duration::from_micros(100)));
+        assert!(a.iter().any(|d| !d.is_zero()), "jitter=100 never fired");
+        // Jitter alone must not wrap the transports in the lossy
+        // impair decorator.
+        let (mut vm, _hdl) = Endpoint::inproc_pair();
+        vm.impair(&ImpairCfg::parse("jitter=5").unwrap());
+        assert!(!vm.pair_a.tx.transport.lossy());
     }
 
     #[test]

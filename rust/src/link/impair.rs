@@ -60,6 +60,12 @@ pub struct ImpairCfg {
     pub dup_ppm: u32,
     pub reorder_ppm: u32,
     pub corrupt_ppm: u32,
+    /// Per-send wall-clock jitter ceiling in microseconds: each
+    /// payload send sleeps a seeded pseudo-random duration in
+    /// `[0, jitter_us]` µs. Wall-only (like `--device-link-latency`),
+    /// so device-cycle determinism is untouched; the sleep *sequence*
+    /// is a pure function of the seed.
+    pub jitter_us: u32,
     pub seed: u64,
     pub dir: ImpairDir,
 }
@@ -71,6 +77,7 @@ impl Default for ImpairCfg {
             dup_ppm: 0,
             reorder_ppm: 0,
             corrupt_ppm: 0,
+            jitter_us: 0,
             seed: 1,
             dir: ImpairDir::Both,
         }
@@ -91,6 +98,13 @@ impl ImpairCfg {
                 "dup" => cfg.dup_ppm = parse_prob(k, v)?,
                 "reorder" => cfg.reorder_ppm = parse_prob(k, v)?,
                 "corrupt" => cfg.corrupt_ppm = parse_prob(k, v)?,
+                "jitter" => {
+                    cfg.jitter_us = v.parse().map_err(|_| {
+                        Error::config(format!(
+                            "impair jitter={v:?} is not a whole number of µs"
+                        ))
+                    })?
+                }
                 "seed" => cfg.seed = parse_seed(v)?,
                 "dir" => {
                     cfg.dir = match v {
@@ -107,7 +121,7 @@ impl ImpairCfg {
                 other => {
                     return Err(Error::config(format!(
                         "unknown impair key {other:?} \
-                         (drop/dup/reorder/corrupt/seed/dir)"
+                         (drop/dup/reorder/corrupt/jitter/seed/dir)"
                     )))
                 }
             }
@@ -115,12 +129,20 @@ impl ImpairCfg {
         Ok(cfg)
     }
 
-    /// True when no fault has a nonzero probability.
+    /// True when the spec does nothing at all (no loss fault, no
+    /// jitter).
     pub fn is_null(&self) -> bool {
-        self.drop_ppm == 0
-            && self.dup_ppm == 0
-            && self.reorder_ppm == 0
-            && self.corrupt_ppm == 0
+        !self.has_loss_faults() && self.jitter_us == 0
+    }
+
+    /// True when any frame-mutilating fault has a nonzero probability
+    /// — the condition for wrapping the send path in an
+    /// [`ImpairedTransport`] (jitter alone never touches frames).
+    pub fn has_loss_faults(&self) -> bool {
+        self.drop_ppm != 0
+            || self.dup_ppm != 0
+            || self.reorder_ppm != 0
+            || self.corrupt_ppm != 0
     }
 
     /// Whether a channel whose *sender* is `sender` is covered by
@@ -378,6 +400,16 @@ mod tests {
         assert!(ImpairCfg::parse("warp=0.5").is_err());
         assert!(ImpairCfg::parse("dir=sideways").is_err());
         assert!(ImpairCfg::parse("seed=zzz").is_err());
+    }
+
+    #[test]
+    fn parse_jitter_key() {
+        let c = ImpairCfg::parse("jitter=250,seed=9").unwrap();
+        assert_eq!(c.jitter_us, 250);
+        assert!(!c.is_null(), "jitter-only spec must not be null");
+        assert!(!c.has_loss_faults(), "jitter is not a loss fault");
+        assert!(ImpairCfg::parse("jitter=1.5").is_err());
+        assert!(ImpairCfg::parse("jitter=-3").is_err());
     }
 
     #[test]

@@ -41,7 +41,10 @@ use crate::{Error, Result};
 /// Log file magic ("VHRC": VM-HDL ReCording).
 pub const REC_MAGIC: [u8; 4] = *b"VHRC";
 /// Current log format version; bump on any layout change.
-pub const REC_VERSION: u16 = 1;
+/// v2 appends a per-device fault-plan string to [`DeviceMeta`] so a
+/// recorded fault-injection run replays bit-identically; v1 logs are
+/// still decodable (fault = "").
+pub const REC_VERSION: u16 = 2;
 /// File name of the frame log inside a recording directory.
 pub const REC_FILE: &str = "run.vhrec";
 
@@ -100,6 +103,11 @@ pub struct DeviceMeta {
     /// only needs the presence bit (loss tolerance); the text is for
     /// humans reading the header.
     pub impair: String,
+    /// PCIe fault plan armed on this device ("" = none), in
+    /// [`crate::pcie::FaultPlan`] spelling (`poisoned-cpl@rec=5`).
+    /// Replay parses it back so HDL-side fault behaviour (and the
+    /// snapshot geometry stamp) matches the recorded run. v2+.
+    pub fault: String,
 }
 
 /// Run-level metadata written into the log header.
@@ -189,6 +197,7 @@ pub fn encode_header(meta: &RecordMeta) -> Vec<u8> {
         put_u64(&mut out, d.poll_interval);
         put_u64(&mut out, d.device_index);
         put_str(&mut out, &d.impair);
+        put_str(&mut out, &d.fault);
     }
     out
 }
@@ -301,9 +310,9 @@ fn decode_header(r: &mut Rd) -> Result<RecordMeta> {
         )));
     }
     let ver = r.u16("version")?;
-    if ver != REC_VERSION {
+    if ver == 0 || ver > REC_VERSION {
         return Err(Error::link(format!(
-            "recording: unsupported version {ver} (this build reads {REC_VERSION})"
+            "recording: unsupported version {ver} (this build reads 1..={REC_VERSION})"
         )));
     }
     let seed = r.u64("seed")?;
@@ -329,6 +338,8 @@ fn decode_header(r: &mut Rd) -> Result<RecordMeta> {
             poll_interval: r.u64("device poll_interval")?,
             device_index: r.u64("device index")?,
             impair: r.str_("device impair")?,
+            // v1 logs predate fault injection: no plan was armed.
+            fault: if ver >= 2 { r.str_("device fault")? } else { String::new() },
         });
         let got = devices.last().map(|d| d.device_index).unwrap_or(0);
         if got != k as u64 {
@@ -737,6 +748,11 @@ mod tests {
                     poll_interval: 1,
                     device_index: k,
                     impair: if k == 0 { String::new() } else { "dup=0.1".into() },
+                    fault: if k == 0 {
+                        "completion-timeout@rec=3".into()
+                    } else {
+                        String::new()
+                    },
                 })
                 .collect(),
         }
@@ -794,6 +810,35 @@ mod tests {
         let rec = decode_recording(cut, true).unwrap();
         assert!(rec.partial);
         assert_eq!(rec.events.len(), 2, "whole prefix events survive");
+    }
+
+    #[test]
+    fn v1_header_decodes_with_no_fault_plan() {
+        // Hand-encode a v1 header (no per-device fault string): old
+        // logs must keep decoding, with fault defaulting to "".
+        let mut b = Vec::new();
+        b.extend_from_slice(&REC_MAGIC);
+        put_u16(&mut b, 1);
+        put_u64(&mut b, 7);
+        put_str(&mut b, "legacy");
+        put_str(&mut b, "cafe");
+        put_str(&mut b, "");
+        put_u32(&mut b, 1);
+        put_str(&mut b, "sort");
+        put_u64(&mut b, 1024);
+        put_u64(&mut b, 1256);
+        put_u64(&mut b, 8);
+        put_str(&mut b, "mmio");
+        put_u64(&mut b, 65536);
+        put_u64(&mut b, 64);
+        put_u64(&mut b, 1);
+        put_u64(&mut b, 0);
+        put_str(&mut b, "");
+        encode_trailer(&[DeviceFinal { cycles: 9, records_done: 1 }], &mut b);
+        let rec = decode_recording(&b, false).unwrap();
+        assert_eq!(rec.meta.devices.len(), 1);
+        assert_eq!(rec.meta.devices[0].fault, "");
+        assert_eq!(rec.meta.devices[0].kernel, "sort");
     }
 
     #[test]

@@ -6,8 +6,13 @@
 //!                 [--queue-depth D] [--device-latency k=cycles[,..]]
 //!                 [--kernel sort|checksum|stats | --kernel k=kind[,..]]
 //!                 [--device-n k=N] [--device-link-latency k=us]
-//!                 [--impair drop=P,dup=P,reorder=P,corrupt=P,seed=N[,dir=up|down]]
+//!                 [--impair drop=P,dup=P,reorder=P,corrupt=P,jitter=US,seed=N[,dir=up|down]]
 //!                 [--device-impair k:spec] [--udp-port BASE]
+//!                 [--fault k=class@rec=N]  inject a deterministic PCIe fault
+//!                 on device k at its Nth DMA read (classes: completion-timeout,
+//!                 surprise-down, poisoned-cpl, ur-status, reset-inflight,
+//!                 credit-starve) — the run reports per-record outcomes and a
+//!                 fleet health summary instead of failing
 //!                 [--vcd out.vcd] [--golden true] ...   run a full co-simulation
 //!                 (devices > 1 shards the batch across N PCIe FPGAs;
 //!                 queue-depth > 1 pipelines D records per device over
@@ -219,7 +224,25 @@ fn cmd_cosim(cfg: &Config) -> Result<()> {
         rep.link_bytes,
         if rep.golden_checked { " — results golden-checked against the reference model" } else { "" }
     );
+    if !cfg.device_fault.is_empty() {
+        print_fault_outcomes(&rep.outcomes, &rep.health());
+    }
     Ok(())
+}
+
+/// Per-record outcome listing + fleet health, printed whenever a
+/// `--fault` plan was armed (the run completes and reports instead of
+/// failing on the injected fault).
+fn print_fault_outcomes(
+    outcomes: &[scenario::RecordOutcome],
+    health: &scenario::FleetHealth,
+) {
+    for (i, o) in outcomes.iter().enumerate() {
+        if *o != scenario::RecordOutcome::Ok {
+            println!("  record {i}: {o}");
+        }
+    }
+    println!("fleet health: {health}");
 }
 
 /// Multi-device / pipelined / mixed-fleet cosim: shard the batch,
@@ -269,6 +292,9 @@ fn cmd_cosim_sharded(cfg: &Config, golden: Option<&mut dyn GoldenBackend>) -> Re
         rep.devices,
         if rep.golden_checked { " — results golden-checked" } else { "" }
     );
+    if !cfg.device_fault.is_empty() {
+        print_fault_outcomes(&rep.outcomes, &rep.health());
+    }
     Ok(())
 }
 

@@ -18,6 +18,7 @@
 use std::time::Duration;
 
 use super::config_space::ConfigSpace;
+use super::fault::{FaultAction, FaultPlan, FaultState};
 use super::tlp::{self, Tlp};
 use crate::link::{Endpoint, LinkMode, Msg};
 use crate::{Error, Result};
@@ -65,6 +66,8 @@ pub struct PcieFpgaDevice {
     /// construction (multi-device topologies give every endpoint a
     /// distinct id, so completions route back unambiguously).
     requester_id: u16,
+    /// Seeded fault-injection state (`--fault k=class@rec=N`).
+    fault: FaultState,
 }
 
 impl PcieFpgaDevice {
@@ -87,7 +90,18 @@ impl PcieFpgaDevice {
             mmio_timeout: Duration::from_secs(10),
             stats: PseudoDeviceStats::default(),
             requester_id,
+            fault: FaultState::default(),
         }
+    }
+
+    /// Arm (or clear) the deterministic fault plan for this device.
+    pub fn set_fault(&mut self, plan: Option<FaultPlan>) {
+        self.fault = FaultState::new(plan);
+    }
+
+    /// Fault-injection runtime state (plan, clock, firing record).
+    pub fn fault_state(&self) -> &FaultState {
+        &self.fault
     }
 
     /// This function's bus address (set by the enumerating VMM).
@@ -124,9 +138,11 @@ impl PcieFpgaDevice {
         irq: &mut dyn IrqSink,
     ) -> Result<Vec<u8>> {
         self.config.bars().check_access(bar, offset, len as u64)?;
-        if !self.config.mem_enabled() {
-            // Reads while memory decoding is off return all-ones, as
-            // on real PCIe (master abort).
+        if !self.config.mem_enabled() || self.fault.link_down() {
+            // Reads while memory decoding is off — or after a
+            // surprise link-down — return all-ones, as on real PCIe
+            // (master abort). All-ones is exactly what the driver's
+            // surprise-down detector keys on.
             return Ok(vec![0xFF; len as usize]);
         }
         self.stats.mmio_reads += 1;
@@ -154,9 +170,9 @@ impl PcieFpgaDevice {
                 let mut out = Vec::with_capacity(len as usize);
                 for (a, ndw) in tlp::fragment_read(addr, len, self.max_payload_dw) {
                     let tag = (self.take_tag() & 0xFF) as u8;
-                    let t = Tlp::MemRd { addr: a, len_dw: ndw, tag, requester: self.requester_id };
+                    let t = Tlp::mem_rd(a, ndw, tag, self.requester_id)?;
                     self.stats.tlps_sent += 1;
-                    self.link.send(&Msg::Tlp { bytes: t.encode() })?;
+                    self.link.send(&Msg::Tlp { bytes: t.encode()? })?;
                     let data = self.wait_completion(mem, irq, |m| match m {
                         Msg::Tlp { bytes } => match Tlp::decode(bytes) {
                             Ok(Tlp::CplD { tag: t2, data, .. }) if t2 == tag => Some(data),
@@ -176,7 +192,7 @@ impl PcieFpgaDevice {
         self.config
             .bars()
             .check_access(bar, offset, data.len() as u64)?;
-        if !self.config.mem_enabled() {
+        if !self.config.mem_enabled() || self.fault.link_down() {
             return Ok(()); // dropped, as on real hardware
         }
         self.stats.mmio_writes += 1;
@@ -198,13 +214,13 @@ impl PcieFpgaDevice {
                 }
                 for chunk_start in (0..data.len()).step_by(self.max_payload_dw as usize * 4) {
                     let end = (chunk_start + self.max_payload_dw as usize * 4).min(data.len());
-                    let t = Tlp::MemWr {
-                        addr: addr + chunk_start as u64,
-                        data: data[chunk_start..end].to_vec(),
-                        requester: self.requester_id,
-                    };
+                    let t = Tlp::mem_wr(
+                        addr + chunk_start as u64,
+                        data[chunk_start..end].to_vec(),
+                        self.requester_id,
+                    )?;
                     self.stats.tlps_sent += 1;
-                    self.link.send(&Msg::Tlp { bytes: t.encode() })?;
+                    self.link.send(&Msg::Tlp { bytes: t.encode()? })?;
                 }
                 Ok(())
             }
@@ -290,6 +306,11 @@ impl PcieFpgaDevice {
         mem: &mut dyn DmaTarget,
         irq: &mut dyn IrqSink,
     ) -> Result<()> {
+        if self.fault.link_down() {
+            // Surprise-down: the endpoint is gone. Everything the HDL
+            // side sends from now on falls on the floor.
+            return Ok(());
+        }
         match msg {
             Msg::DmaRead { tag, addr, len } => {
                 if !self.config.bus_master() {
@@ -298,6 +319,19 @@ impl PcieFpgaDevice {
                     // does not hang forever.
                     self.link.send(&Msg::DmaReadResp { tag, data: Vec::new() })?;
                     return Ok(());
+                }
+                match self.fault.on_nonposted(addr, len) {
+                    Some(FaultAction::DropRequest) => return Ok(()),
+                    // The high-level link has no EP bit or status
+                    // field: poisoned and UR both degrade to an
+                    // aborted (empty) response, which the bridge turns
+                    // into SLVERR beats. TLP mode carries the full
+                    // fidelity (see `service_tlp`).
+                    Some(FaultAction::PoisonCompletion | FaultAction::UrCompletion) => {
+                        self.link.send(&Msg::DmaReadResp { tag, data: Vec::new() })?;
+                        return Ok(());
+                    }
+                    None => {}
                 }
                 self.stats.dma_reads += 1;
                 self.stats.dma_bytes_read += len as u64;
@@ -343,18 +377,28 @@ impl PcieFpgaDevice {
                 if !self.config.bus_master() {
                     return Ok(());
                 }
-                self.stats.dma_reads += 1;
-                self.stats.dma_bytes_read += len_dw as u64 * 4;
-                let data = mem.dma_read(addr, len_dw as u32 * 4)?;
-                let c = Tlp::CplD {
-                    tag,
-                    completer: 0x0000,
-                    requester,
-                    data,
-                    status: 0,
+                let len = len_dw as u32 * 4;
+                let c = match self.fault.on_nonposted(addr, len) {
+                    Some(FaultAction::DropRequest) => return Ok(()),
+                    Some(FaultAction::PoisonCompletion) => {
+                        // Real data, EP bit set: delivered but known
+                        // corrupt. The bridge must not hand it to the
+                        // DMA engine as good beats.
+                        let data = mem.dma_read(addr, len)?;
+                        Tlp::cpl_d(tag, 0x0000, requester, data, tlp::STATUS_SC, true)?
+                    }
+                    Some(FaultAction::UrCompletion) => {
+                        Tlp::cpl_d(tag, 0x0000, requester, Vec::new(), tlp::STATUS_UR, false)?
+                    }
+                    None => {
+                        self.stats.dma_reads += 1;
+                        self.stats.dma_bytes_read += len as u64;
+                        let data = mem.dma_read(addr, len)?;
+                        Tlp::cpl_d(tag, 0x0000, requester, data, tlp::STATUS_SC, false)?
+                    }
                 };
                 self.stats.tlps_sent += 1;
-                self.link.send(&Msg::Tlp { bytes: c.encode() })?;
+                self.link.send(&Msg::Tlp { bytes: c.encode()? })?;
             }
             Tlp::MemWr { addr, data, .. } => {
                 if tlp::is_msi_address(addr) {
@@ -554,7 +598,7 @@ mod tests {
             data: vec![0; 4],
             requester: 0x0100,
         };
-        hdl.send(&Msg::Tlp { bytes: msi.encode() }).unwrap();
+        hdl.send(&Msg::Tlp { bytes: msi.encode().unwrap() }).unwrap();
         let mut mem = TestMem(vec![0; 8]);
         let mut irq = TestIrq(vec![]);
         dev.poll_service(&mut mem, &mut irq).unwrap();
@@ -575,8 +619,8 @@ mod tests {
                         {
                             let data: Vec<u8> =
                                 (0..len_dw as usize * 4).map(|i| (addr as u8) ^ i as u8).collect();
-                            let c = Tlp::CplD { tag, completer: 0, requester, data, status: 0 };
-                            hdl.send(&Msg::Tlp { bytes: c.encode() }).unwrap();
+                            let c = Tlp::cpl_d(tag, 0, requester, data, 0, false).unwrap();
+                            hdl.send(&Msg::Tlp { bytes: c.encode().unwrap() }).unwrap();
                             served += 1;
                         }
                     }

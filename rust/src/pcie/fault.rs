@@ -1,0 +1,296 @@
+//! Deterministic PCIe fault injection.
+//!
+//! The paper's motivation is that driver/hardware bugs "cause the
+//! system to hang, without providing enough information for
+//! debugging". This module injects exactly those bugs, on purpose, at
+//! exact transaction indices, so a failure is reproducible
+//! bit-for-bit: a [`FaultPlan`] is a pure function of the CLI string
+//! (`--fault k=completion-timeout@rec=3`), fires deterministically on
+//! the device's **non-posted request clock** (the count of DMA read
+//! requests the endpoint has initiated), records itself into the PR 8
+//! frame recorder, and replays identically under `vmhdl replay`.
+//!
+//! Fault classes (§ DEBUGGING.md §11 walks each one):
+//!
+//! * `completion-timeout` — the Nth DMA read request is dropped; no
+//!   completion ever arrives. The bridge's read stays pending forever
+//!   and the guest driver's cycle-based watchdog must fire.
+//! * `poisoned-cpl` — the Nth DMA read completes with the EP
+//!   ("poisoned data") bit set (TLP mode) or an aborted empty
+//!   response (MMIO mode). The bridge converts it to SLVERR beats, the
+//!   DMA engine latches an error, and the driver quarantines the
+//!   record.
+//! * `ur-status` — the Nth DMA read completes Unsupported Request:
+//!   a data-less Cpl with status UR (TLP mode) / aborted response
+//!   (MMIO mode).
+//! * `surprise-down` — the link dies at the Nth DMA read and stays
+//!   dead: the request is dropped, subsequent MMIO reads return
+//!   all-ones (master abort), writes and MSIs are swallowed.
+//! * `reset-inflight` — the *scenario* resets the device just before
+//!   submitting record N with work still in flight; the driver must
+//!   rebuild its rings and resubmit unacknowledged records exactly
+//!   once. (No device-level action; see `coordinator/scenario.rs`.)
+//! * `credit-starve` — the *bridge* freezes its flow-control credit
+//!   pools for a fixed window at its Nth DMA read, stalling the data
+//!   path without corrupting it (HDL-side; see `hdl/bridge.rs`).
+//!
+//! This file is in both `cargo xtask analyze` scopes: the determinism
+//! pass (no wall clock, no ambient randomness — the fault clock is
+//! the message stream itself) and the panic pass (plan strings come
+//! from the CLI and from recorded file headers: malformed input must
+//! surface as `Error::config`, never a panic).
+
+use std::fmt;
+
+use crate::{Error, Result};
+
+/// One injectable fault class.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Drop the Nth non-posted request: no completion, ever.
+    CompletionTimeout,
+    /// Link dead from the Nth non-posted request onward.
+    SurpriseDown,
+    /// Complete the Nth read with poisoned (EP) data.
+    PoisonedCpl,
+    /// Complete the Nth read with status UR, no data.
+    UrStatus,
+    /// Scenario-level: reset the device with records in flight.
+    ResetInflight,
+    /// Bridge-level: freeze flow-control credits for a window.
+    CreditStarve,
+}
+
+impl FaultKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            FaultKind::CompletionTimeout => "completion-timeout",
+            FaultKind::SurpriseDown => "surprise-down",
+            FaultKind::PoisonedCpl => "poisoned-cpl",
+            FaultKind::UrStatus => "ur-status",
+            FaultKind::ResetInflight => "reset-inflight",
+            FaultKind::CreditStarve => "credit-starve",
+        }
+    }
+
+    /// Stable numeric id, used by the snapshot geometry stamp.
+    pub fn id(&self) -> u8 {
+        match self {
+            FaultKind::CompletionTimeout => 1,
+            FaultKind::SurpriseDown => 2,
+            FaultKind::PoisonedCpl => 3,
+            FaultKind::UrStatus => 4,
+            FaultKind::ResetInflight => 5,
+            FaultKind::CreditStarve => 6,
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<FaultKind> {
+        match s {
+            "completion-timeout" => Ok(FaultKind::CompletionTimeout),
+            "surprise-down" => Ok(FaultKind::SurpriseDown),
+            "poisoned-cpl" => Ok(FaultKind::PoisonedCpl),
+            "ur-status" => Ok(FaultKind::UrStatus),
+            "reset-inflight" => Ok(FaultKind::ResetInflight),
+            "credit-starve" => Ok(FaultKind::CreditStarve),
+            other => Err(Error::config(format!(
+                "unknown fault class {other:?} (expected completion-timeout, \
+                 surprise-down, poisoned-cpl, ur-status, reset-inflight or \
+                 credit-starve)"
+            ))),
+        }
+    }
+}
+
+/// A per-device fault plan: fire `kind` at the `at`-th (1-based)
+/// non-posted request the device observes. For the direct-mode sorter
+/// a 256 B record is exactly one DMA read burst, so `rec=N` reads as
+/// "the Nth record"; with SG rings descriptor fetches share the same
+/// clock (documented in EXPERIMENTS.md).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FaultPlan {
+    pub kind: FaultKind,
+    /// 1-based non-posted transaction index the fault fires at.
+    pub at: u64,
+}
+
+impl FaultPlan {
+    /// Parse `"<class>@rec=<n>"`, e.g. `completion-timeout@rec=3`.
+    /// A bare `<class>` defaults to `rec=1`.
+    pub fn parse(s: &str) -> Result<FaultPlan> {
+        let (kind_s, at) = match s.split_once('@') {
+            None => (s, 1),
+            Some((k, rest)) => {
+                let n = rest
+                    .strip_prefix("rec=")
+                    .ok_or_else(|| {
+                        Error::config(format!(
+                            "fault plan {s:?}: expected <class>@rec=<n>"
+                        ))
+                    })?
+                    .parse::<u64>()
+                    .map_err(|e| {
+                        Error::config(format!("fault plan {s:?}: bad index ({e})"))
+                    })?;
+                (k, n)
+            }
+        };
+        if at == 0 {
+            return Err(Error::config(format!(
+                "fault plan {s:?}: rec index is 1-based"
+            )));
+        }
+        Ok(FaultPlan { kind: FaultKind::parse(kind_s)?, at })
+    }
+}
+
+impl fmt::Display for FaultPlan {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}@rec={}", self.kind.name(), self.at)
+    }
+}
+
+impl std::str::FromStr for FaultPlan {
+    type Err = Error;
+    fn from_str(s: &str) -> Result<FaultPlan> {
+        FaultPlan::parse(s)
+    }
+}
+
+/// What the pseudo device must do to the current non-posted request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultAction {
+    /// Swallow the request; never complete it.
+    DropRequest,
+    /// Complete with poisoned (EP) data.
+    PoisonCompletion,
+    /// Complete with status UR and no data.
+    UrCompletion,
+}
+
+/// Per-device fault runtime state: the non-posted request clock plus
+/// the one-shot firing record. Pure function of the message stream —
+/// two runs that see the same request sequence fire identically.
+#[derive(Debug, Clone, Default)]
+pub struct FaultState {
+    plan: Option<FaultPlan>,
+    /// Non-posted (DMA read) requests observed so far.
+    pub nonposted_seen: u64,
+    /// How many times the plan fired (0 or 1; surprise-down stays
+    /// latched via `down`).
+    pub fired: u64,
+    down: bool,
+    /// Human-readable description of what fired, for triage reports.
+    pub fired_desc: Option<String>,
+}
+
+impl FaultState {
+    pub fn new(plan: Option<FaultPlan>) -> Self {
+        FaultState { plan, ..FaultState::default() }
+    }
+
+    pub fn plan(&self) -> Option<FaultPlan> {
+        self.plan
+    }
+
+    /// True once a surprise-down fault has fired: the link is dead.
+    pub fn link_down(&self) -> bool {
+        self.down
+    }
+
+    /// Advance the non-posted clock by one request (addr/len are for
+    /// the triage description only) and return the action to apply to
+    /// *this* request, if the plan fires on it.
+    pub fn on_nonposted(&mut self, addr: u64, len: u32) -> Option<FaultAction> {
+        self.nonposted_seen += 1;
+        let plan = self.plan?;
+        if self.fired > 0 || self.nonposted_seen != plan.at {
+            return None;
+        }
+        let action = match plan.kind {
+            FaultKind::CompletionTimeout => Some(FaultAction::DropRequest),
+            FaultKind::SurpriseDown => {
+                self.down = true;
+                Some(FaultAction::DropRequest)
+            }
+            FaultKind::PoisonedCpl => Some(FaultAction::PoisonCompletion),
+            FaultKind::UrStatus => Some(FaultAction::UrCompletion),
+            // Scenario- and bridge-level classes do not act here.
+            FaultKind::ResetInflight | FaultKind::CreditStarve => None,
+        };
+        if let Some(a) = action {
+            self.fired += 1;
+            self.fired_desc = Some(format!(
+                "{} fired at non-posted #{} (addr {addr:#x}, {len}B): {a:?}",
+                plan.kind.name(),
+                plan.at
+            ));
+        }
+        action
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrip_all_classes() {
+        for s in [
+            "completion-timeout@rec=3",
+            "surprise-down@rec=1",
+            "poisoned-cpl@rec=5",
+            "ur-status@rec=2",
+            "reset-inflight@rec=4",
+            "credit-starve@rec=7",
+        ] {
+            let p = FaultPlan::parse(s).unwrap();
+            assert_eq!(p.to_string(), s);
+            assert_eq!(FaultPlan::parse(&p.to_string()).unwrap(), p);
+        }
+    }
+
+    #[test]
+    fn parse_defaults_and_rejects() {
+        assert_eq!(
+            FaultPlan::parse("poisoned-cpl").unwrap(),
+            FaultPlan { kind: FaultKind::PoisonedCpl, at: 1 }
+        );
+        assert!(FaultPlan::parse("poisoned-cpl@rec=0").is_err());
+        assert!(FaultPlan::parse("poisoned-cpl@idx=3").is_err());
+        assert!(FaultPlan::parse("nonsense@rec=1").is_err());
+        assert!(FaultPlan::parse("").is_err());
+    }
+
+    #[test]
+    fn fires_exactly_once_at_exact_index() {
+        let mut st = FaultState::new(Some(FaultPlan::parse("ur-status@rec=3").unwrap()));
+        assert_eq!(st.on_nonposted(0x1000, 256), None);
+        assert_eq!(st.on_nonposted(0x2000, 256), None);
+        assert_eq!(st.on_nonposted(0x3000, 256), Some(FaultAction::UrCompletion));
+        assert_eq!(st.on_nonposted(0x4000, 256), None);
+        assert_eq!(st.fired, 1);
+        assert_eq!(st.nonposted_seen, 4);
+        assert!(st.fired_desc.as_deref().unwrap().contains("ur-status"));
+    }
+
+    #[test]
+    fn surprise_down_latches() {
+        let mut st =
+            FaultState::new(Some(FaultPlan::parse("surprise-down@rec=2").unwrap()));
+        assert!(!st.link_down());
+        st.on_nonposted(0, 4);
+        assert!(!st.link_down());
+        assert_eq!(st.on_nonposted(0, 4), Some(FaultAction::DropRequest));
+        assert!(st.link_down());
+    }
+
+    #[test]
+    fn scenario_level_classes_do_not_act_on_device() {
+        for s in ["reset-inflight@rec=1", "credit-starve@rec=1"] {
+            let mut st = FaultState::new(Some(FaultPlan::parse(s).unwrap()));
+            assert_eq!(st.on_nonposted(0, 4), None);
+            assert_eq!(st.fired, 0);
+        }
+    }
+}

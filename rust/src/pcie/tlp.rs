@@ -1,19 +1,46 @@
-//! PCIe Transaction Layer Packet codec — the **vpcie baseline** (§V).
+//! PCIe Transaction Layer Packet codec.
 //!
-//! The paper contrasts its high-level MMIO/interrupt messages with
-//! vpcie, which "forwards low-level PCIe messages that require extra
-//! software to process". To reproduce that comparison we implement the
-//! TLP subset a memory-mapped endpoint uses — MRd32/64, MWr32/64 and
-//! CplD — with real 3/4-DW headers (big-endian header words, DW
-//! granularity, first/last byte enables), and a link mode where the
-//! pseudo device and the bridge exchange raw TLP bytes instead of
-//! high-level messages. MSI in TLP mode is what it is on real PCIe: a
-//! MemWr to the MSI address window.
+//! Originally the **vpcie baseline** (§V) — the paper contrasts its
+//! high-level MMIO/interrupt messages with vpcie, which "forwards
+//! low-level PCIe messages that require extra software to process".
+//! Since the TLP-fidelity data path landed, this codec is also the
+//! *main* transport in `LinkMode::Tlp`: device DMA reads/writes and
+//! MSI all travel as encoded TLPs, with max-payload fragmentation
+//! ([`fragment_read`]), tag matching and completion status codes.
 //!
-//! Restrictions (documented, matching what the baseline needs):
+//! We implement the TLP subset a memory-mapped endpoint uses —
+//! MRd32/64, MWr32/64, CplD and data-less Cpl (error completions) —
+//! with real 3/4-DW headers (big-endian header words, DW granularity,
+//! first/last byte enables), the EP (poisoned data) bit, and the
+//! SC/UR/CA completion status field.
+//!
+//! Restrictions (documented, matching what the endpoint needs):
 //! addresses and lengths are DW-aligned; a TLP carries ≤ 1024 DW.
+//! This file is in the `cargo xtask analyze` panic-audit scope: the
+//! codec is fed by a peer process over a socket, so malformed or
+//! oversized input must surface as `Error::pcie`, never a panic —
+//! construction goes through the `Result`-returning constructors
+//! ([`Tlp::mem_rd`], [`Tlp::mem_wr`], [`Tlp::cpl_d`]) and
+//! [`Tlp::encode`] re-validates before emitting bytes.
 
 use crate::{Error, Result};
+
+/// Completion status: Successful Completion.
+pub const STATUS_SC: u8 = 0b000;
+/// Completion status: Unsupported Request.
+pub const STATUS_UR: u8 = 0b001;
+/// Completion status: Completer Abort.
+pub const STATUS_CA: u8 = 0b100;
+
+/// Human-readable completion status (for fault triage messages).
+pub fn status_name(status: u8) -> &'static str {
+    match status {
+        STATUS_SC => "SC",
+        STATUS_UR => "UR",
+        STATUS_CA => "CA",
+        _ => "reserved",
+    }
+}
 
 /// TLP format/type fields we implement.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -28,14 +55,19 @@ pub enum Tlp {
     },
     /// Memory write request (posted) with payload.
     MemWr { addr: u64, data: Vec<u8>, requester: u16 },
-    /// Completion with data.
+    /// Completion, with data for SC and an empty payload for error
+    /// statuses (UR/CA travel as a data-less Cpl on the wire).
     CplD {
         tag: u8,
         completer: u16,
         requester: u16,
         data: Vec<u8>,
-        /// Completion status (0 = SC).
+        /// Completion status ([`STATUS_SC`] / [`STATUS_UR`] /
+        /// [`STATUS_CA`]).
         status: u8,
+        /// EP bit (header DW0 bit 14): payload delivered but known
+        /// corrupt — the receiver must not consume it as good data.
+        poisoned: bool,
     },
 }
 
@@ -54,21 +86,92 @@ const FMT_3DW_DATA: u8 = 0b010;
 const FMT_4DW_DATA: u8 = 0b011;
 const TYPE_MEM: u8 = 0b0_0000;
 const TYPE_CPL: u8 = 0b0_1010;
+/// EP ("poisoned data") bit in header DW0.
+const DW0_EP: u32 = 1 << 14;
+
+/// 3-DW header size in bytes (MRd32/MWr32/Cpl*).
+pub const HDR_3DW_BYTES: u32 = 12;
+/// 4-DW header size in bytes (MRd64/MWr64).
+pub const HDR_4DW_BYTES: u32 = 16;
 
 fn be32(v: u32) -> [u8; 4] {
     v.to_be_bytes()
 }
+
+/// Big-endian u32 from the first 4 bytes (0 on short input — callers
+/// bounds-check first; this keeps the hot path free of panics).
 fn rd_be32(b: &[u8]) -> u32 {
-    u32::from_be_bytes(b.try_into().unwrap())
+    match (b.first(), b.get(1), b.get(2), b.get(3)) {
+        (Some(&a), Some(&x), Some(&y), Some(&z)) => u32::from_be_bytes([a, x, y, z]),
+        _ => 0,
+    }
+}
+
+fn check_len_dw(len_dw: usize, what: &str) -> Result<()> {
+    if (1..=1024).contains(&len_dw) {
+        Ok(())
+    } else {
+        Err(Error::pcie(format!("{what} length {len_dw} DW outside 1..=1024")))
+    }
 }
 
 impl Tlp {
+    /// Validated memory read request.
+    pub fn mem_rd(addr: u64, len_dw: u16, tag: u8, requester: u16) -> Result<Tlp> {
+        check_len_dw(len_dw as usize, "MRd")?;
+        if addr % 4 != 0 {
+            return Err(Error::pcie(format!("MRd addr {addr:#x} not DW-aligned")));
+        }
+        Ok(Tlp::MemRd { addr, len_dw, tag, requester })
+    }
+
+    /// Validated posted memory write.
+    pub fn mem_wr(addr: u64, data: Vec<u8>, requester: u16) -> Result<Tlp> {
+        if addr % 4 != 0 || data.len() % 4 != 0 {
+            return Err(Error::pcie(format!(
+                "MWr addr {addr:#x} / payload {}B not DW-aligned",
+                data.len()
+            )));
+        }
+        check_len_dw(data.len() / 4, "MWr")?;
+        Ok(Tlp::MemWr { addr, data, requester })
+    }
+
+    /// Validated completion. Successful completions carry a DW-aligned
+    /// payload; UR/CA completions must be data-less.
+    pub fn cpl_d(
+        tag: u8,
+        completer: u16,
+        requester: u16,
+        data: Vec<u8>,
+        status: u8,
+        poisoned: bool,
+    ) -> Result<Tlp> {
+        if data.len() % 4 != 0 {
+            return Err(Error::pcie(format!("CplD payload {}B not DW-aligned", data.len())));
+        }
+        if status == STATUS_SC {
+            check_len_dw(data.len() / 4, "CplD")?;
+        } else if !data.is_empty() {
+            return Err(Error::pcie(format!(
+                "{} completion must be data-less, got {}B",
+                status_name(status),
+                data.len()
+            )));
+        }
+        Ok(Tlp::CplD { tag, completer, requester, data, status, poisoned })
+    }
+
     /// Encode to wire bytes (header DWs big-endian + payload).
-    pub fn encode(&self) -> Vec<u8> {
+    /// Re-validates the same invariants as the constructors so a
+    /// hand-built `Tlp` cannot emit a malformed frame.
+    pub fn encode(&self) -> Result<Vec<u8>> {
         match self {
             Tlp::MemRd { addr, len_dw, tag, requester } => {
-                assert!((1..=1024).contains(len_dw), "MRd len {len_dw}");
-                assert!(addr % 4 == 0, "MRd addr unaligned");
+                check_len_dw(*len_dw as usize, "MRd")?;
+                if addr % 4 != 0 {
+                    return Err(Error::pcie(format!("MRd addr {addr:#x} not DW-aligned")));
+                }
                 let four_dw = *addr > u32::MAX as u64;
                 let fmt = if four_dw { FMT_4DW_NODATA } else { FMT_3DW_NODATA };
                 let mut v = Vec::with_capacity(16);
@@ -84,12 +187,14 @@ impl Tlp {
                     v.extend_from_slice(&be32((*addr >> 32) as u32));
                 }
                 v.extend_from_slice(&be32(*addr as u32 & !0x3));
-                v
+                Ok(v)
             }
             Tlp::MemWr { addr, data, requester } => {
-                assert!(addr % 4 == 0 && data.len() % 4 == 0, "MWr unaligned");
+                if addr % 4 != 0 || data.len() % 4 != 0 {
+                    return Err(Error::pcie("MWr addr/payload not DW-aligned".into()));
+                }
                 let len_dw = data.len() / 4;
-                assert!((1..=1024).contains(&len_dw), "MWr len {len_dw}");
+                check_len_dw(len_dw, "MWr")?;
                 let four_dw = *addr > u32::MAX as u64;
                 let fmt = if four_dw { FMT_4DW_DATA } else { FMT_3DW_DATA };
                 let mut v = Vec::with_capacity(16 + data.len());
@@ -103,16 +208,25 @@ impl Tlp {
                 }
                 v.extend_from_slice(&be32(*addr as u32 & !0x3));
                 v.extend_from_slice(data);
-                v
+                Ok(v)
             }
-            Tlp::CplD { tag, completer, requester, data, status } => {
-                assert!(data.len() % 4 == 0, "CplD unaligned payload");
+            Tlp::CplD { tag, completer, requester, data, status, poisoned } => {
+                if data.len() % 4 != 0 {
+                    return Err(Error::pcie("CplD payload not DW-aligned".into()));
+                }
                 let len_dw = data.len() / 4;
-                assert!((1..=1024).contains(&len_dw), "CplD len {len_dw}");
+                let has_data = !data.is_empty();
+                if has_data {
+                    check_len_dw(len_dw, "CplD")?;
+                } else if *status == STATUS_SC {
+                    return Err(Error::pcie("SC completion without data".into()));
+                }
+                let fmt = if has_data { FMT_3DW_DATA } else { FMT_3DW_NODATA };
                 let mut v = Vec::with_capacity(16 + data.len());
                 let len_field = if len_dw == 1024 { 0 } else { len_dw as u32 };
+                let ep = if *poisoned { DW0_EP } else { 0 };
                 v.extend_from_slice(&be32(
-                    ((FMT_3DW_DATA as u32) << 29) | ((TYPE_CPL as u32) << 24) | len_field,
+                    ((fmt as u32) << 29) | ((TYPE_CPL as u32) << 24) | ep | len_field,
                 ));
                 let byte_count = data.len() as u32 & 0xFFF;
                 v.extend_from_slice(&be32(
@@ -120,7 +234,7 @@ impl Tlp {
                 ));
                 v.extend_from_slice(&be32(((*requester as u32) << 16) | ((*tag as u32) << 8)));
                 v.extend_from_slice(data);
-                v
+                Ok(v)
             }
         }
     }
@@ -133,6 +247,7 @@ impl Tlp {
         let dw0 = rd_be32(&b[0..4]);
         let fmt = ((dw0 >> 29) & 0x7) as u8;
         let typ = ((dw0 >> 24) & 0x1F) as u8;
+        let poisoned = dw0 & DW0_EP != 0;
         let len_field = dw0 & 0x3FF;
         let len_dw = if len_field == 0 { 1024 } else { len_field as usize };
         let has_data = fmt == FMT_3DW_DATA || fmt == FMT_4DW_DATA;
@@ -172,19 +287,20 @@ impl Tlp {
                 };
                 Ok(Tlp::MemWr {
                     addr: addr & !0x3,
-                    data: b[data_off..].to_vec(),
+                    data: b.get(data_off..).unwrap_or(&[]).to_vec(),
                     requester: (dw1 >> 16) as u16,
                 })
             }
-            (TYPE_CPL, true) => {
+            (TYPE_CPL, data) => {
                 let dw1 = rd_be32(&b[4..8]);
                 let dw2 = rd_be32(&b[8..12]);
                 Ok(Tlp::CplD {
                     tag: (dw2 >> 8) as u8,
                     completer: (dw1 >> 16) as u16,
                     requester: (dw2 >> 16) as u16,
-                    data: b[12..].to_vec(),
+                    data: if data { b.get(12..).unwrap_or(&[]).to_vec() } else { Vec::new() },
                     status: ((dw1 >> 13) & 0x7) as u8,
+                    poisoned,
                 })
             }
             other => Err(Error::pcie(format!("unsupported TLP type {other:?}"))),
@@ -195,21 +311,41 @@ impl Tlp {
         match self {
             Tlp::MemRd { .. } => "MRd",
             Tlp::MemWr { .. } => "MWr",
+            Tlp::CplD { data, .. } if data.is_empty() => "Cpl",
             Tlp::CplD { .. } => "CplD",
+        }
+    }
+
+    /// Wire header size in bytes for this TLP (3 or 4 DW).
+    pub fn header_bytes(&self) -> u32 {
+        match self {
+            Tlp::MemRd { addr, .. } | Tlp::MemWr { addr, .. } => {
+                if *addr > u32::MAX as u64 {
+                    HDR_4DW_BYTES
+                } else {
+                    HDR_3DW_BYTES
+                }
+            }
+            Tlp::CplD { .. } => HDR_3DW_BYTES,
         }
     }
 }
 
-/// Split a byte-length memory read into ≤4 KiB TLP reads (max payload
-/// rules), returning `(addr, len_dw)` pieces. Models the extra
-/// fragmentation work the low-level baseline must do.
+/// Split a byte-length memory read into max-payload-sized TLP reads,
+/// returning `(addr, len_dw)` pieces. Live on the main data path in
+/// `LinkMode::Tlp` (the bridge fragments every DMA burst) and used by
+/// the costmodel to price per-TLP header overhead.
+///
+/// Panic-free by construction: a zero `max_payload_dw` is clamped to
+/// 1, byte lengths round up to whole DWs, and a misaligned `addr` is
+/// masked down (callers on the main path pre-validate alignment).
 pub fn fragment_read(addr: u64, len: u32, max_payload_dw: u16) -> Vec<(u64, u16)> {
-    assert!(addr % 4 == 0 && len % 4 == 0);
+    let max_dw = max_payload_dw.max(1) as u32;
     let mut out = Vec::new();
-    let mut a = addr;
-    let mut remaining_dw = (len / 4) as u32;
+    let mut a = addr & !0x3;
+    let mut remaining_dw = len.div_ceil(4);
     while remaining_dw > 0 {
-        let take = remaining_dw.min(max_payload_dw as u32) as u16;
+        let take = remaining_dw.min(max_dw) as u16;
         out.push((a, take));
         a += take as u64 * 4;
         remaining_dw -= take as u32;
@@ -225,34 +361,55 @@ mod tests {
     #[test]
     fn roundtrip_mrd_32_and_64() {
         for addr in [0x1000u64, 0x2_0000_0000] {
-            let t = Tlp::MemRd { addr, len_dw: 16, tag: 7, requester: 0x0100 };
-            let back = Tlp::decode(&t.encode()).unwrap();
+            let t = Tlp::mem_rd(addr, 16, 7, 0x0100).unwrap();
+            let back = Tlp::decode(&t.encode().unwrap()).unwrap();
             assert_eq!(back, t);
         }
     }
 
     #[test]
     fn roundtrip_mwr_and_cpld() {
-        let t = Tlp::MemWr {
-            addr: 0x8000_0000,
-            data: vec![1, 2, 3, 4, 5, 6, 7, 8],
-            requester: 0x0200,
-        };
-        assert_eq!(Tlp::decode(&t.encode()).unwrap(), t);
-        let c = Tlp::CplD {
-            tag: 9,
-            completer: 0x0100,
-            requester: 0x0200,
-            data: vec![0xAA; 64],
-            status: 0,
-        };
-        assert_eq!(Tlp::decode(&c.encode()).unwrap(), c);
+        let t = Tlp::mem_wr(0x8000_0000, vec![1, 2, 3, 4, 5, 6, 7, 8], 0x0200).unwrap();
+        assert_eq!(Tlp::decode(&t.encode().unwrap()).unwrap(), t);
+        let c = Tlp::cpl_d(9, 0x0100, 0x0200, vec![0xAA; 64], STATUS_SC, false).unwrap();
+        assert_eq!(Tlp::decode(&c.encode().unwrap()).unwrap(), c);
+    }
+
+    #[test]
+    fn roundtrip_error_and_poisoned_completions() {
+        // UR/CA travel data-less; the status and tag survive.
+        for status in [STATUS_UR, STATUS_CA] {
+            let c = Tlp::cpl_d(3, 0x0100, 0x0008, Vec::new(), status, false).unwrap();
+            let enc = c.encode().unwrap();
+            assert_eq!(enc.len(), 12, "error completion is a bare 3-DW header");
+            assert_eq!(Tlp::decode(&enc).unwrap(), c);
+        }
+        // EP bit survives a round trip alongside real data.
+        let p = Tlp::cpl_d(7, 0x0100, 0x0008, vec![0x55; 16], STATUS_SC, true).unwrap();
+        assert_eq!(Tlp::decode(&p.encode().unwrap()).unwrap(), p);
+    }
+
+    #[test]
+    fn constructors_reject_malformed() {
+        assert!(Tlp::mem_rd(0x1001, 4, 0, 0).is_err(), "unaligned addr");
+        assert!(Tlp::mem_rd(0x1000, 0, 0, 0).is_err(), "zero length");
+        assert!(Tlp::mem_rd(0x1000, 1025, 0, 0).is_err(), "over max length");
+        assert!(Tlp::mem_wr(0x1000, vec![0; 3], 0).is_err(), "odd payload");
+        assert!(Tlp::mem_wr(0x1000, Vec::new(), 0).is_err(), "empty MWr");
+        assert!(Tlp::cpl_d(0, 0, 0, Vec::new(), STATUS_SC, false).is_err(), "SC without data");
+        assert!(
+            Tlp::cpl_d(0, 0, 0, vec![0; 4], STATUS_UR, false).is_err(),
+            "UR with data"
+        );
+        // encode() re-validates a hand-built value.
+        let bad = Tlp::MemRd { addr: 0x1000, len_dw: 0, tag: 0, requester: 0 };
+        assert!(bad.encode().is_err());
     }
 
     #[test]
     fn len_1024_dw_encodes_as_zero() {
-        let t = Tlp::MemRd { addr: 0, len_dw: 1024, tag: 0, requester: 0 };
-        let enc = t.encode();
+        let t = Tlp::mem_rd(0, 1024, 0, 0).unwrap();
+        let enc = t.encode().unwrap();
         assert_eq!(rd_be32(&enc[0..4]) & 0x3FF, 0);
         assert_eq!(Tlp::decode(&enc).unwrap(), t);
     }
@@ -261,8 +418,8 @@ mod tests {
     fn rejects_malformed() {
         assert!(Tlp::decode(&[]).is_err());
         assert!(Tlp::decode(&[0; 8]).is_err());
-        let t = Tlp::MemWr { addr: 0, data: vec![0; 8], requester: 0 };
-        let mut enc = t.encode();
+        let t = Tlp::mem_wr(0, vec![0; 8], 0).unwrap();
+        let mut enc = t.encode().unwrap();
         enc.truncate(enc.len() - 4); // payload shorter than header len
         assert!(Tlp::decode(&enc).is_err());
     }
@@ -309,12 +466,14 @@ mod tests {
                         completer: g.rng.next_u32() as u16,
                         requester: g.rng.next_u32() as u16,
                         data,
-                        status: (g.rng.next_u32() % 8) as u8,
+                        status: STATUS_SC,
+                        poisoned: g.rng.next_u32() & 1 != 0,
                     },
                 }
             },
             |t| {
-                let back = Tlp::decode(&t.encode()).map_err(|e| e.to_string())?;
+                let back =
+                    Tlp::decode(&t.encode().map_err(|e| e.to_string())?).map_err(|e| e.to_string())?;
                 if &back != t {
                     return Err(format!("roundtrip mangled: {back:?}"));
                 }
@@ -342,6 +501,33 @@ mod tests {
                 if pieces.iter().any(|&(_, dw)| dw > max || dw == 0) {
                     return Err("piece size out of range".into());
                 }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn prop_decode_never_panics_on_mutation() {
+        // Codec fuzz: truncate/extend/flip valid frames — decode must
+        // return (Ok or structured Err), never panic.
+        use crate::testutil::ByteMutator;
+        forall(
+            0xB00F,
+            400,
+            |g| {
+                let mut base = Tlp::mem_wr(
+                    (g.rng.below(1 << 40)) & !0x3,
+                    g.rng.vec_u8(g.size(64) * 4),
+                    g.rng.next_u32() as u16,
+                )
+                .and_then(|t| t.encode())
+                .unwrap_or_default();
+                let mut m = ByteMutator::new(g.rng.next_u64());
+                m.mutate(&mut base);
+                base
+            },
+            |bytes| {
+                let _ = Tlp::decode(bytes);
                 Ok(())
             },
         );

@@ -37,7 +37,7 @@ use std::time::Duration;
 
 use crate::hdl::dma::{cr, desc, regs as dma_regs, sr};
 use crate::hdl::kernel::KernelKind;
-use crate::hdl::regfile::{regs as rf_regs, ID_VALUE};
+use crate::hdl::regfile::{cause, regs as rf_regs, ID_VALUE};
 use crate::pcie::board;
 use crate::pcie::config_space::{cmd, regs as cfg_regs};
 use crate::vm::mem::DmaBuf;
@@ -93,6 +93,45 @@ pub struct XferStats {
     pub irqs_taken: u64,
     pub polls: u64,
     pub mmio_reads: u64,
+    /// Watchdog-driven FLR recoveries taken ([`SortDriver::recover_reset`]).
+    pub resets: u64,
+}
+
+/// Outcome of one resilient record offload
+/// ([`SortDriver::sort_record_resilient`]). The scenario layer folds
+/// these into its per-record `RecordOutcome` report.
+#[derive(Debug, Clone)]
+pub enum RecordAttempt {
+    /// Completed, possibly after watchdog-driven resets; `out` is
+    /// byte-identical to a fault-free run of the same record.
+    Done { out: Vec<i32>, retries: u32 },
+    /// Abandoned after a data-integrity fault (poisoned / aborted
+    /// completion) or exhausted retries; the device has been reset and
+    /// the slot is usable for the next record. `reason` names the
+    /// device and the latched status registers.
+    Quarantined { reason: String, retries: u32 },
+    /// The device fell off the bus (all-ones reads — surprise link
+    /// down): no retry can succeed; the caller should fail the
+    /// remaining records fast instead of timing out on each.
+    DeviceLost { reason: String },
+}
+
+/// What the post-failure probe concluded (see
+/// [`SortDriver::classify_failure`]): each class maps to a different
+/// recovery policy — propagate, reset + retry, quarantine, or give up.
+enum FailureClass {
+    /// The probe itself failed: the co-sim link / transport is broken,
+    /// not the device. Propagate the original error.
+    Infra,
+    /// Every read returns all-ones — master abort; the device is gone.
+    DeviceLost,
+    /// A DMA engine latched an error (poisoned/UR completion → SLVERR
+    /// beats → DMAIntErr): data integrity, not liveness.
+    DmaError { mm2s: u32, s2mm: u32 },
+    /// Engines alive but the completion never came (dropped
+    /// completion): the cycle counter the watchdog sampled is carried
+    /// for the triage report.
+    Hang { cycles: u64 },
 }
 
 /// The driver instance.
@@ -141,6 +180,13 @@ pub struct SortDriver {
     /// consumes no cycles at all, which makes the frozen-counter
     /// signal exact.
     pub hang_progress_cycles: u64,
+    /// Watchdog recoveries per record before the record is given up
+    /// ([`SortDriver::sort_record_resilient`]).
+    pub max_retries: u32,
+    /// Backoff after a watchdog reset, in *device* cycles, doubled per
+    /// retry — simulated time, so the backoff schedule is a pure
+    /// function of the retry count, never of host load.
+    pub backoff_base_cycles: u64,
 }
 
 /// Consecutive zero-progress samples before the device is declared
@@ -176,6 +222,8 @@ impl SortDriver {
             timeout: Duration::from_secs(10),
             device,
             hang_progress_cycles: 64,
+            max_retries: 3,
+            backoff_base_cycles: 1024,
         }
     }
 
@@ -453,7 +501,21 @@ impl SortDriver {
                         }
                         Some(IRQ_MM2S) => {
                             self.stats.irqs_taken += 1;
-                            // Read side done; ack it now.
+                            // Read side done *or failed*: a poisoned /
+                            // aborted completion surfaces here as a
+                            // latched DMAIntErr (SLVERR beats), and the
+                            // S2MM side will then never complete —
+                            // fail now instead of waiting out the
+                            // watchdog on the write side.
+                            let s = env.read32(0, DMA_BASE + dma_regs::MM2S_DMASR as u64)?;
+                            self.stats.mmio_reads += 1;
+                            if s & (sr::DMA_INT_ERR | sr::SG_INT_ERR) != 0 {
+                                self.state = DriverState::Failed;
+                                return Err(Error::vm(format!(
+                                    "MM2S error, DMASR={s:#x} — read-side data \
+                                     was aborted (poisoned or failed completion)"
+                                )));
+                            }
                             self.ack(env, dma_regs::MM2S_DMASR)?;
                             continue;
                         }
@@ -550,6 +612,170 @@ impl SortDriver {
         let lo = env.read32(0, REGFILE_BASE + rf_regs::CYCLES_LO as u64)?;
         let hi = env.read32(0, REGFILE_BASE + rf_regs::CYCLES_HI as u64)?;
         Ok(((hi as u64) << 32) | lo as u64)
+    }
+
+    /// Probe the device after a completion failure and decide the
+    /// recovery policy. Deliberately read-only: three MMIO reads on a
+    /// path that is already broken, never on a healthy record.
+    fn classify_failure(&mut self, env: &mut GuestEnv) -> FailureClass {
+        let Ok(c) = self.read_cycles(env) else {
+            return FailureClass::Infra;
+        };
+        if c == u64::MAX {
+            // Master abort on the counter: surprise link down.
+            return FailureClass::DeviceLost;
+        }
+        let mm2s = env
+            .read32(0, DMA_BASE + dma_regs::MM2S_DMASR as u64)
+            .unwrap_or(u32::MAX);
+        let s2mm = env
+            .read32(0, DMA_BASE + dma_regs::S2MM_DMASR as u64)
+            .unwrap_or(u32::MAX);
+        self.stats.mmio_reads += 2;
+        if mm2s == u32::MAX && s2mm == u32::MAX {
+            return FailureClass::DeviceLost;
+        }
+        if (mm2s | s2mm) & (sr::DMA_INT_ERR | sr::SG_INT_ERR) != 0 {
+            FailureClass::DmaError { mm2s, s2mm }
+        } else {
+            FailureClass::Hang { cycles: c }
+        }
+    }
+
+    /// FLR-style function reset (recovery path): halt + reset both DMA
+    /// engines, stamp [`rf_regs::RESET_CAUSE`] with `cause_val`, pulse
+    /// the platform soft reset (which flushes wedged bridge reads,
+    /// half-collected bursts, the stream FIFOs and mid-record kernel
+    /// state — see `hdl/platform.rs`), drop completion edges that
+    /// raced the reset, and bring both channels back up.
+    pub fn recover_reset(&mut self, env: &mut GuestEnv, cause_val: u32) -> Result<()> {
+        env.state("recover:reset")?;
+        for base in [dma_regs::MM2S_DMACR, dma_regs::S2MM_DMACR] {
+            env.write32(0, DMA_BASE + base as u64, cr::RESET)?;
+        }
+        env.write32(0, REGFILE_BASE + rf_regs::RESET_CAUSE as u64, cause_val)?;
+        // Pulse the soft reset, preserving the sort-order bit.
+        let ctl = env.read32(0, REGFILE_BASE + rf_regs::CONTROL as u64)?;
+        env.write32(0, REGFILE_BASE + rf_regs::CONTROL as u64, ctl | 2)?;
+        // A stale MSI from the flushed attempt must not satisfy the
+        // next record's completion wait.
+        while env.wait_irq(Duration::from_millis(0))?.is_some() {}
+        self.channel_init(env)?;
+        self.stats.resets += 1;
+        self.state = DriverState::Ready;
+        env.state("recover:done")?;
+        Ok(())
+    }
+
+    /// Let about `cycles` of **device** time elapse — the backoff
+    /// delays are measured on the device clock, so the retry schedule
+    /// is deterministic under the event-driven scheduler (an idle
+    /// device advances exactly with these sampling reads, ~15 cycles
+    /// each). The iteration cap bounds a frozen or all-ones counter.
+    fn wait_device_cycles(&mut self, env: &mut GuestEnv, cycles: u64) -> Result<()> {
+        let start = self.read_cycles(env)?;
+        for _ in 0..cycles.max(1) {
+            let now = self.read_cycles(env)?;
+            if now == u64::MAX || now.saturating_sub(start) >= cycles {
+                break;
+            }
+        }
+        Ok(())
+    }
+
+    /// Offload one record with fault recovery: on a completion hang,
+    /// reset (cause = timeout), back off exponentially in device
+    /// cycles and retry up to [`SortDriver::max_retries`] times; on a
+    /// latched DMA error, reset and quarantine the record; on a dead
+    /// link, give up fast. Infrastructure errors (the probe itself
+    /// cannot reach the device) propagate as `Err` — those are co-sim
+    /// failures, not device faults.
+    pub fn sort_record_resilient(
+        &mut self,
+        env: &mut GuestEnv,
+        data: &[i32],
+    ) -> Result<RecordAttempt> {
+        match self.sort_record(env, data) {
+            Ok(out) => Ok(RecordAttempt::Done { out, retries: 0 }),
+            Err(e) => self.recover_and_retry(env, e, data, 0),
+        }
+    }
+
+    /// Resilient collect half of the split submit/finish path: waits
+    /// for a record submitted with [`SortDriver::submit_record`] and,
+    /// on failure, runs the same classify/reset/retry policy as
+    /// [`SortDriver::sort_record_resilient`]. A retry resubmits `data`
+    /// from scratch (the reset flushed the failed attempt end to end),
+    /// so each record still completes at most once.
+    pub fn finish_record_resilient(
+        &mut self,
+        env: &mut GuestEnv,
+        data: &[i32],
+    ) -> Result<RecordAttempt> {
+        match self.finish_record(env) {
+            Ok(out) => Ok(RecordAttempt::Done { out, retries: 0 }),
+            Err(e) => self.recover_and_retry(env, e, data, 0),
+        }
+    }
+
+    /// Shared recovery loop: classify the failure, then reset+retry
+    /// (hang), reset+quarantine (DMA error), give up (dead link) or
+    /// propagate (infra). Retries replay the whole record via
+    /// [`SortDriver::sort_record`].
+    fn recover_and_retry(
+        &mut self,
+        env: &mut GuestEnv,
+        first_err: Error,
+        data: &[i32],
+        retries_so_far: u32,
+    ) -> Result<RecordAttempt> {
+        let mut retries = retries_so_far;
+        let mut err = first_err;
+        loop {
+            match self.classify_failure(env) {
+                FailureClass::Infra => return Err(err),
+                FailureClass::DeviceLost => {
+                    self.state = DriverState::Failed;
+                    return Ok(RecordAttempt::DeviceLost {
+                        reason: format!(
+                            "device {}: link dead (all-ones reads) — {err}",
+                            self.device
+                        ),
+                    });
+                }
+                FailureClass::DmaError { mm2s, s2mm } => {
+                    self.recover_reset(env, cause::DMA_ERROR)?;
+                    return Ok(RecordAttempt::Quarantined {
+                        reason: format!(
+                            "device {}: DMA error latched (MM2S DMASR={mm2s:#x}, \
+                             S2MM DMASR={s2mm:#x}) — {err}",
+                            self.device
+                        ),
+                        retries,
+                    });
+                }
+                FailureClass::Hang { cycles } => {
+                    if retries >= self.max_retries {
+                        self.state = DriverState::Failed;
+                        return Ok(RecordAttempt::Quarantined {
+                            reason: format!(
+                                "device {}: still hung after {retries} watchdog \
+                                 resets (cycle counter {cycles}) — {err}",
+                                self.device
+                            ),
+                            retries,
+                        });
+                    }
+                    self.recover_reset(env, cause::TIMEOUT)?;
+                    self.wait_device_cycles(env, self.backoff_base_cycles << retries)?;
+                    retries += 1;
+                    match self.sort_record(env, data) {
+                        Ok(out) => return Ok(RecordAttempt::Done { out, retries }),
+                        Err(e) => err = e,
+                    }
+                }
+            }
+        }
     }
 
     /// Release buffers (module unload analogue).
@@ -978,6 +1204,88 @@ impl SortDriverSg {
                 }
             }
         }
+    }
+
+    /// FLR-style recovery with work in flight: halt + reset both DMA
+    /// engines, stamp the reset cause, pulse the platform soft reset
+    /// (flushing wedged bridge/DMA/stream state), rebuild the
+    /// descriptor chains' status words for every still-unacknowledged
+    /// slot, re-arm CURDESC at the **oldest pending** descriptor and
+    /// resubmit each pending record **exactly once**, oldest-first —
+    /// their inputs are still staged in the slot buffers, and records
+    /// already reaped are never resubmitted. Completions keep arriving
+    /// in the original submission order afterwards.
+    pub fn recover_reset(&mut self, env: &mut GuestEnv, cause_val: u32) -> Result<()> {
+        if self.slots.is_empty() {
+            return Err(Error::vm("recover_reset before probe (no descriptor rings)"));
+        }
+        env.state("recover:sg-reset")?;
+        for base in [dma_regs::MM2S_DMACR, dma_regs::S2MM_DMACR] {
+            env.write32(0, DMA_BASE + base as u64, cr::RESET)?;
+        }
+        env.write32(0, REGFILE_BASE + rf_regs::RESET_CAUSE as u64, cause_val)?;
+        let ctl = env.read32(0, REGFILE_BASE + rf_regs::CONTROL as u64)?;
+        env.write32(0, REGFILE_BASE + rf_regs::CONTROL as u64, ctl | 2)?;
+        while env.wait_irq(Duration::from_millis(0))?.is_some() {}
+        // A stale Cmplt (or a half-written status) in a pending slot
+        // would either satisfy the reap with pre-reset data or wedge
+        // the rebuilt engine on a stale-descriptor error — clear them.
+        for i in 0..self.in_flight {
+            let s = self.slots[(self.tail + i) % self.depth];
+            for d in [s.mm2s_desc, s.s2mm_desc] {
+                env.vmm.mem.write(d + desc::OFF_STATUS as u64, &0u32.to_le_bytes())?;
+            }
+        }
+        // Re-arm both channels with CURDESC at the oldest pending slot
+        // (or the next submission slot on an empty ring), then run.
+        let first = if self.in_flight > 0 { self.slots[self.tail] } else { self.slots[self.head] };
+        let thresh = (self.irq_threshold.clamp(1, 0xFF)) << cr::IRQ_THRESHOLD_SHIFT;
+        for (cr_reg, cur_reg, cur_msb, desc0, irq_en) in [
+            (
+                dma_regs::MM2S_DMACR,
+                dma_regs::MM2S_CURDESC,
+                dma_regs::MM2S_CURDESC_MSB,
+                first.mm2s_desc,
+                cr::ERR_IRQ_EN,
+            ),
+            (
+                dma_regs::S2MM_DMACR,
+                dma_regs::S2MM_CURDESC,
+                dma_regs::S2MM_CURDESC_MSB,
+                first.s2mm_desc,
+                cr::IOC_IRQ_EN | cr::ERR_IRQ_EN,
+            ),
+        ] {
+            env.write32(0, DMA_BASE + cur_msb as u64, (desc0 >> 32) as u32)?;
+            env.write32(0, DMA_BASE + cur_reg as u64, desc0 as u32)?;
+            env.write32(0, DMA_BASE + cr_reg as u64, cr::RS | irq_en | thresh)?;
+        }
+        // Resubmit the pending records, oldest first, exactly once:
+        // the tail bumps walk the ring in the original order.
+        let pending = self.in_flight;
+        for i in 0..pending {
+            let s = self.slots[(self.tail + i) % self.depth];
+            env.write32(
+                0,
+                DMA_BASE + dma_regs::S2MM_TAILDESC_MSB as u64,
+                (s.s2mm_desc >> 32) as u32,
+            )?;
+            env.write32(0, DMA_BASE + dma_regs::S2MM_TAILDESC as u64, s.s2mm_desc as u32)?;
+            env.write32(
+                0,
+                DMA_BASE + dma_regs::MM2S_TAILDESC_MSB as u64,
+                (s.mm2s_desc >> 32) as u32,
+            )?;
+            env.write32(0, DMA_BASE + dma_regs::MM2S_TAILDESC as u64, s.mm2s_desc as u32)?;
+        }
+        self.drv.stats.resets += 1;
+        self.drv.state = if pending > 0 {
+            DriverState::Submitted
+        } else {
+            DriverState::Ready
+        };
+        env.state("recover:done")?;
+        Ok(())
     }
 
     /// Release rings and buffers (module unload analogue).

@@ -10,4 +10,6 @@
 pub mod app;
 pub mod driver;
 
-pub use driver::{CompletionMode, DriverState, FaultInjection, SortDriver, SortDriverSg};
+pub use driver::{
+    CompletionMode, DriverState, FaultInjection, RecordAttempt, SortDriver, SortDriverSg,
+};

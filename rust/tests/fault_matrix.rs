@@ -1,0 +1,211 @@
+//! The PR 9 fault matrix: every injectable PCIe fault class, end to
+//! end through the full co-simulation, must either **recover
+//! byte-identically** (the scenario runner golden-checks every
+//! completed record, so a `Recovered` outcome implies a correct
+//! result) or **fail loudly** with a structured reason naming the
+//! device and the latched state — and must never hang. On top of
+//! that: same seed + same plan is deterministic, and a recorded fault
+//! run replays bit-identically (`vmhdl replay`).
+
+use std::time::Duration;
+
+use vmhdl::coordinator::cosim::CoSimCfg;
+use vmhdl::coordinator::replay::replay_dir;
+use vmhdl::coordinator::scenario::{
+    self, FleetHealth, RecordOutcome, ShardPolicy,
+};
+use vmhdl::link::recorder::read_recording;
+use vmhdl::pcie::FaultPlan;
+use vmhdl::Error;
+
+const TIMEOUT: Duration = Duration::from_secs(5);
+
+fn cfg_with_fault(spec: &str) -> CoSimCfg {
+    let mut cfg = CoSimCfg::default();
+    cfg.platform.kernel.n = 64;
+    cfg.device_fault = vec![(0, FaultPlan::parse(spec).unwrap())];
+    cfg
+}
+
+fn run(spec: &str, records: usize, seed: u64) -> scenario::ScenarioReport {
+    scenario::run_sort_offload_with_timeout(cfg_with_fault(spec), records, seed, None, TIMEOUT)
+        .unwrap()
+}
+
+#[test]
+fn completion_timeout_recovers_byte_identically() {
+    let rep = run("completion-timeout@rec=2", 4, 0xFA01);
+    assert_eq!(rep.outcomes.len(), 4);
+    // Record 1 (the 2nd DMA read) lost its completion; the watchdog
+    // reset + retry must complete it — and the runner verified the
+    // retried result against the reference sort.
+    match &rep.outcomes[1] {
+        RecordOutcome::Recovered { retries } => assert!(*retries >= 1),
+        o => panic!("expected recovered, got {o}"),
+    }
+    for (i, o) in rep.outcomes.iter().enumerate() {
+        if i != 1 {
+            assert_eq!(*o, RecordOutcome::Ok, "record {i}: {o}");
+        }
+    }
+    let h = rep.health();
+    assert_eq!((h.ok, h.recovered, h.failed), (3, 1, 0));
+    assert!(h.lost_devices.is_empty());
+    assert!(rep.device_cycles > 0);
+}
+
+#[test]
+fn poisoned_cpl_quarantines_and_continues() {
+    let rep = run("poisoned-cpl@rec=1", 3, 0xFA02);
+    match &rep.outcomes[0] {
+        RecordOutcome::Failed { reason } => {
+            assert!(reason.contains("device 0"), "reason must name the device: {reason}");
+            assert!(
+                reason.contains("DMASR"),
+                "reason must carry the latched registers: {reason}"
+            );
+        }
+        o => panic!("expected failed, got {o}"),
+    }
+    // The slot was recycled: the remaining records complete cleanly.
+    assert_eq!(rep.outcomes[1], RecordOutcome::Ok);
+    assert_eq!(rep.outcomes[2], RecordOutcome::Ok);
+    assert_eq!(rep.health().failed, 1);
+    assert!(rep.lost_devices.is_empty());
+}
+
+#[test]
+fn ur_status_quarantines_like_poison() {
+    let rep = run("ur-status@rec=2", 3, 0xFA03);
+    assert_eq!(rep.outcomes[0], RecordOutcome::Ok);
+    assert!(
+        matches!(&rep.outcomes[1], RecordOutcome::Failed { reason } if reason.contains("device 0")),
+        "{:?}",
+        rep.outcomes[1]
+    );
+    assert_eq!(rep.outcomes[2], RecordOutcome::Ok);
+}
+
+#[test]
+fn surprise_down_fails_fast_and_marks_the_device_lost() {
+    let t0 = std::time::Instant::now();
+    let rep = run("surprise-down@rec=2", 4, 0xFA04);
+    assert_eq!(rep.outcomes[0], RecordOutcome::Ok);
+    assert!(
+        matches!(&rep.outcomes[1], RecordOutcome::Failed { reason } if reason.contains("link dead")),
+        "{:?}",
+        rep.outcomes[1]
+    );
+    // Remaining records fail fast instead of timing out one by one.
+    for o in &rep.outcomes[2..] {
+        assert!(matches!(o, RecordOutcome::Failed { .. }), "{o}");
+    }
+    assert_eq!(rep.lost_devices, vec![0]);
+    assert_eq!(rep.device_cycles, 0, "a dead link must not report cycles");
+    assert!(!rep.health().all_ok());
+    assert!(
+        t0.elapsed() < Duration::from_secs(60),
+        "surprise-down took {:?} — the matrix must never hang",
+        t0.elapsed()
+    );
+}
+
+#[test]
+fn reset_inflight_resubmits_exactly_once() {
+    let rep = run("reset-inflight@rec=2", 3, 0xFA05);
+    assert_eq!(rep.outcomes[0], RecordOutcome::Ok);
+    // The scenario reset the device with record 1 in flight; the
+    // driver rebuilt and resubmitted it exactly once (verified result,
+    // counted as one recovery).
+    assert_eq!(rep.outcomes[1], RecordOutcome::Recovered { retries: 1 });
+    assert_eq!(rep.outcomes[2], RecordOutcome::Ok);
+    assert_eq!(rep.health().recovered, 1);
+}
+
+#[test]
+fn credit_starve_stalls_but_completes_clean() {
+    let rep = run("credit-starve@rec=1", 3, 0xFA06);
+    // The bridge-side credit freeze stalls the data path without
+    // corrupting it; at worst the watchdog retries a record.
+    assert_eq!(rep.health().failed, 0, "{:?}", rep.outcomes);
+    assert!(rep.lost_devices.is_empty());
+}
+
+#[test]
+fn same_seed_same_plan_is_deterministic() {
+    for spec in ["completion-timeout@rec=2", "poisoned-cpl@rec=2", "ur-status@rec=1"] {
+        let a = run(spec, 3, 0xD5EED);
+        let b = run(spec, 3, 0xD5EED);
+        assert_eq!(a.outcomes, b.outcomes, "{spec}: outcomes diverged");
+        assert_eq!(
+            a.device_cycles, b.device_cycles,
+            "{spec}: device cycles diverged"
+        );
+        assert_eq!(a.hdl.records_done, b.hdl.records_done, "{spec}");
+    }
+}
+
+#[test]
+fn sharded_fleet_mixes_fault_classes_per_device() {
+    let mut cfg = CoSimCfg::default();
+    cfg.platform.kernel.n = 64;
+    cfg.devices = 2;
+    cfg.device_fault = vec![
+        (0, FaultPlan::parse("completion-timeout@rec=1").unwrap()),
+        (1, FaultPlan::parse("poisoned-cpl@rec=2").unwrap()),
+    ];
+    let (rep, outs) =
+        scenario::run_sharded_offload_depth(cfg, 6, 0xFA07, ShardPolicy::RoundRobin, 1, None)
+            .unwrap();
+    let h = rep.health();
+    assert_eq!(h.recovered, 1, "dev0's dropped completion retries: {:?}", rep.outcomes);
+    assert_eq!(h.failed, 1, "dev1's poisoned record quarantines: {:?}", rep.outcomes);
+    assert_eq!(h.ok, 4);
+    assert!(h.lost_devices.is_empty());
+    // Completed records merged in submission order, sorted (the
+    // runner verified them; spot-check the merge is intact).
+    assert_eq!(outs.len(), 6);
+    for (i, (o, out)) in rep.outcomes.iter().zip(&outs).enumerate() {
+        match o {
+            RecordOutcome::Failed { .. } => {
+                assert!(out.is_empty(), "failed record {i} has a placeholder")
+            }
+            _ => assert!(out.windows(2).all(|w| w[0] <= w[1]), "record {i} unsorted"),
+        }
+    }
+    assert_eq!(FleetHealth::from_outcomes(&rep.outcomes, vec![]).ok, 4);
+}
+
+#[test]
+fn non_direct_runners_reject_device_faults_up_front() {
+    let mut cfg = CoSimCfg::default();
+    cfg.platform.kernel.n = 64;
+    cfg.devices = 2;
+    cfg.device_fault = vec![(0, FaultPlan::parse("completion-timeout@rec=1").unwrap())];
+    let err = scenario::run_sharded_offload_depth(cfg, 4, 1, ShardPolicy::RoundRobin, 2, None)
+        .unwrap_err();
+    assert!(matches!(err, Error::Config(_)), "{err}");
+    assert!(err.to_string().contains("direct runner"), "{err}");
+}
+
+#[test]
+fn fault_run_records_and_replays_bit_identically() {
+    let dir =
+        std::env::temp_dir().join(format!("vmhdl-faultrec-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let mut cfg = cfg_with_fault("completion-timeout@rec=2");
+    cfg.record = Some(dir.clone());
+    cfg.seed = 0xFA08;
+    let rep = scenario::run_sort_offload_with_timeout(cfg, 3, 0xFA08, None, TIMEOUT).unwrap();
+    assert_eq!(rep.health().recovered, 1);
+
+    // The recording header carries the armed plan (v2 format) …
+    let rec = read_recording(&dir, false).unwrap();
+    assert_eq!(rec.meta.devices[0].fault, "completion-timeout@rec=2");
+
+    // … and the VM-less replay reproduces the device→guest byte
+    // stream of the faulted run exactly, watchdog reset included.
+    let rr = replay_dir(&dir, None).unwrap();
+    assert!(rr.compared > 0);
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -90,6 +90,7 @@ fn prop_random_impairments_deliver_exactly_once_in_order() {
             dup_ppm: rng.below(150_001) as u32,
             reorder_ppm: rng.below(300_001) as u32,
             corrupt_ppm: rng.below(100_001) as u32,
+            jitter_us: 0,
             seed: rng.next_u64(),
             dir: ImpairDir::Both,
         };

@@ -35,6 +35,7 @@ fn baseline() -> Vec<u8> {
                 poll_interval: 1,
                 device_index: k,
                 impair: String::new(),
+                fault: if k == 0 { "ur-status@rec=2".into() } else { String::new() },
             })
             .collect(),
     };

@@ -23,7 +23,7 @@ use crate::scan::{is_ident, SourceFile};
 use crate::Finding;
 
 /// Files whose non-test code must be panic-free.
-const SCOPE: [&str; 8] = [
+const SCOPE: [&str; 10] = [
     "link/msg.rs",
     "link/channel.rs",
     "link/transport.rs",
@@ -32,6 +32,8 @@ const SCOPE: [&str; 8] = [
     "link/recorder.rs",
     "coordinator/replay.rs",
     "vm/guest/driver.rs",
+    "pcie/tlp.rs",
+    "pcie/fault.rs",
 ];
 
 /// Slice-indexing is additionally forbidden here (the wire hot path).
