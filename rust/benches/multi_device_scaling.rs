@@ -1,26 +1,34 @@
-//! Bench: **multi-device aggregate throughput scaling** — the Table
-//! III-shaped variant at N ∈ {1, 2, 4} devices.
+//! Bench: **multi-device scaling over the lane worker pool** — the
+//! Table III-shaped variant on an N × T grid, N devices serviced by
+//! T lane threads (`--devices N --lane-threads T`).
 //!
-//! One record batch is sharded round-robin over N PCIe FPGA devices
-//! (`--devices N` in the CLI); each device's HDL platform runs as a
-//! lane of the merged-horizon scheduler. While one device waits on a
-//! VM response the others are serviced, so aggregate records/s should
-//! grow with N even on a single HDL thread.
+//! One record batch is sharded round-robin over N PCIe FPGA devices.
+//! At T = 1 the lanes share one thread under the merged-horizon
+//! scheduler (the pre-pool baseline: concurrency only from overlap
+//! with VM waits); at T > 1 the `coordinator::lanepool` worker pool
+//! services ready lanes in parallel, so N devices should cost close
+//! to one device of wall clock.
 //!
-//! Printed per N: aggregate records/s, wall, per-device cycle counts
-//! (which must be deterministic — the companion test
-//! `sharded_same_seed_runs_are_cycle_deterministic_per_device` pins
-//! that), and the busy/idle wall split summed over lanes.
+//! Printed per (N, T) cell: wall, aggregate records/s, per-device
+//! cycle counts, and the busy wall summed over lanes.
 //!
 //! Shape assertions (lenient — CI runners are noisy):
-//!   * per-device cycle counts stay in the single-device envelope
-//!     (sharding must not inflate device time), and
-//!   * N = 4 must not be slower than N = 1 on the same batch
-//!     (aggregate throughput ratio ≥ 1.0; the typical inproc ratio is
-//!     well above that — see EXPERIMENTS.md §Perf for the recorded
-//!     scaling row).
+//!   * per-device cycle counts are **byte-identical across T for each
+//!     N** (the pool may move wall clock, never device time — hard
+//!     assert, no noise allowance), and stay in the single-device
+//!     envelope (sharding must not inflate device time);
+//!   * the headline scaling gate: the N = 4, T = 4 batch must beat
+//!     4 × the N = 1 wall — strictly sub-linear fleet cost. One
+//!     re-measure of both cells absorbs scheduler noise.
+//!
+//! Machine-readable output: the full grid is written as JSON to
+//! `BENCH_scaling.json` (override with `VMHDL_BENCH_JSON=path`); CI
+//! uploads it as an artifact.
 //!
 //! Run: `cargo bench --bench multi_device_scaling`
+
+use std::fmt::Write as _;
+use std::time::Duration;
 
 use vmhdl::config::Config;
 use vmhdl::coordinator::scenario::{self, ShardPolicy};
@@ -29,60 +37,137 @@ use vmhdl::coordinator::stats::fmt_dur;
 const RECORDS: usize = 8;
 const SEED: u64 = 0x5CA1E;
 
+struct Cell {
+    devices: usize,
+    threads: usize,
+    wall: Duration,
+    rate: f64,
+    cycles: Vec<u64>,
+    busy: Duration,
+}
+
+fn run_cell(devices: usize, threads: usize) -> Cell {
+    let cfg = Config { devices, lane_threads: threads, ..Config::default() };
+    let (rep, _outs) = scenario::run_sharded_offload(
+        cfg.cosim().expect("bench config"),
+        RECORDS,
+        SEED,
+        ShardPolicy::RoundRobin,
+        None,
+    )
+    .expect("sharded scenario failed");
+    // Sharding must not inflate any single device's clock: every
+    // device sorted records/N records, so its cycle count must stay
+    // within the single-device per-record envelope.
+    for (k, &c) in rep.per_device_cycles.iter().enumerate() {
+        let recs = rep.per_device_records[k] as u64;
+        if recs > 0 {
+            assert!(
+                c > scenario::DEVICE_CYCLES_MIN
+                    && c < scenario::DEVICE_CYCLES_MAX_PER_RECORD * recs,
+                "N={devices} T={threads} dev{k}: cycle count {c} outside envelope \
+                 for {recs} records"
+            );
+        }
+    }
+    Cell {
+        devices,
+        threads,
+        wall: rep.wall,
+        rate: rep.records as f64 / rep.wall.as_secs_f64().max(1e-9),
+        cycles: rep.per_device_cycles,
+        busy: rep.hdl.iter().map(|h| h.wall_busy).sum(),
+    }
+}
+
 fn main() {
-    println!("MULTI-DEVICE SCALING — {RECORDS} records, round-robin shard");
+    println!("MULTI-DEVICE SCALING — {RECORDS} records, round-robin shard, N x T grid");
     println!(
-        "{:>4}{:>14}{:>16}{:>26}{:>14}",
-        "N", "wall", "records/s", "per-device cycles", "busy wall"
+        "{:>4}{:>4}{:>14}{:>16}{:>26}{:>14}",
+        "N", "T", "wall", "records/s", "per-device cycles", "busy wall"
     );
 
-    let mut rate_at = std::collections::BTreeMap::new();
-    for devices in [1usize, 2, 4] {
-        let cfg = Config { devices, ..Config::default() };
-        let (rep, _outs) = scenario::run_sharded_offload(
-            cfg.cosim().unwrap(),
-            RECORDS,
-            SEED,
-            ShardPolicy::RoundRobin,
-            None,
-        )
-        .expect("sharded scenario failed");
-        let rate = rep.records as f64 / rep.wall.as_secs_f64().max(1e-9);
-        let busy: std::time::Duration = rep.hdl.iter().map(|h| h.wall_busy).sum();
+    let mut cells: Vec<Cell> = Vec::new();
+    for (devices, threads) in [(1usize, 1usize), (2, 1), (2, 2), (4, 1), (4, 2), (4, 4)] {
+        let cell = run_cell(devices, threads);
         println!(
-            "{:>4}{:>14}{:>16.1}{:>26}{:>14}",
-            devices,
-            fmt_dur(rep.wall),
-            rate,
-            format!("{:?}", rep.per_device_cycles),
-            fmt_dur(busy),
+            "{:>4}{:>4}{:>14}{:>16.1}{:>26}{:>14}",
+            cell.devices,
+            cell.threads,
+            fmt_dur(cell.wall),
+            cell.rate,
+            format!("{:?}", cell.cycles),
+            fmt_dur(cell.busy),
         );
-        // Sharding must not inflate any single device's clock: every
-        // device sorted records/N records, so its cycle count must
-        // stay within the single-device per-record envelope.
-        for (k, &c) in rep.per_device_cycles.iter().enumerate() {
-            let recs = rep.per_device_records[k] as u64;
-            if recs > 0 {
-                assert!(
-                    c > scenario::DEVICE_CYCLES_MIN
-                        && c < scenario::DEVICE_CYCLES_MAX_PER_RECORD * recs,
-                    "dev{k} cycle count {c} outside envelope for {recs} records"
-                );
-            }
-        }
-        rate_at.insert(devices, rate);
+        cells.push(cell);
     }
 
-    let r1 = rate_at[&1];
-    let r4 = rate_at[&4];
+    // Worker count must never move device time: for each N, every T
+    // cell's per-device cycle vector is byte-identical to its T = 1
+    // baseline. Hard assert — determinism gets no noise allowance.
+    let cell_of = |cells: &[Cell], n: usize, t: usize| {
+        cells.iter().position(|c| c.devices == n && c.threads == t).unwrap()
+    };
+    for (n, t) in [(2usize, 2usize), (4, 2), (4, 4)] {
+        let base = &cells[cell_of(&cells, n, 1)];
+        let pooled = &cells[cell_of(&cells, n, t)];
+        assert_eq!(
+            pooled.cycles, base.cycles,
+            "N={n}: T={t} shifted per-device cycles vs the T=1 baseline"
+        );
+    }
+
+    // The headline gate: N=4 on 4 workers must cost strictly less
+    // than 4x the single-device wall — otherwise the pool buys
+    // nothing over running the fleet serially. One re-measure of both
+    // cells absorbs scheduler noise.
+    let mut w11 = cells[cell_of(&cells, 1, 1)].wall;
+    let mut w44 = cells[cell_of(&cells, 4, 4)].wall;
+    if w44 >= w11 * 4 {
+        eprintln!(
+            "N=4 T=4 ({w44:?}) >= 4x N=1 ({w11:?}); re-measuring once",
+        );
+        w11 = w11.min(run_cell(1, 1).wall);
+        w44 = w44.min(run_cell(4, 4).wall);
+    }
     println!(
-        "\nscaling: N=2 {:.2}x, N=4 {:.2}x over N=1",
-        rate_at[&2] / r1,
-        r4 / r1
+        "\nscaling: N=4 T=4 wall {} vs 4x N=1 wall {} ({:.2}x of linear cost)",
+        fmt_dur(w44),
+        fmt_dur(w11 * 4),
+        w44.as_secs_f64() / (w11.as_secs_f64() * 4.0).max(1e-9),
     );
     assert!(
-        r4 >= r1 * 1.0,
-        "N=4 aggregate throughput regressed below N=1: {r4:.1} < {r1:.1} records/s"
+        w44 < w11 * 4,
+        "N=4 on 4 workers ({w44:?}) must be strictly sub-linear vs 4x the \
+         N=1 wall ({:?})",
+        w11 * 4
     );
-    println!("OK: aggregate throughput scales (or at worst holds) with device count");
+
+    // Machine-readable grid for the CI artifact / EXPERIMENTS.md.
+    let mut json = String::new();
+    let _ = write!(
+        json,
+        "{{\"bench\":\"multi_device_scaling\",\"records\":{RECORDS},\"seed\":{SEED},\"rows\":["
+    );
+    for (i, c) in cells.iter().enumerate() {
+        if i > 0 {
+            json.push(',');
+        }
+        let _ = write!(
+            json,
+            "{{\"devices\":{},\"lane_threads\":{},\"wall_us\":{},\
+             \"records_per_s\":{:.2},\"busy_wall_us\":{},\"per_device_cycles\":{:?}}}",
+            c.devices,
+            c.threads,
+            c.wall.as_micros(),
+            c.rate,
+            c.busy.as_micros(),
+            c.cycles,
+        );
+    }
+    json.push_str("]}");
+    let path =
+        std::env::var("VMHDL_BENCH_JSON").unwrap_or_else(|_| "BENCH_scaling.json".to_string());
+    std::fs::write(&path, &json).expect("write bench json");
+    println!("\nOK: cycles identical across T; fleet wall sub-linear; grid written to {path}");
 }

@@ -125,8 +125,18 @@ pub struct Config {
     pub device_link_latency: Vec<(usize, u64)>,
     /// Per-device PCIe fault plans (`--fault k=class@rec=N`,
     /// repeatable): deterministic fault injection on device k's data
-    /// path — see [`crate::pcie::fault`] for the classes.
+    /// path — see [`crate::pcie::fault`] for the classes. A device
+    /// may carry a comma-separated plan *list*
+    /// (`--fault k=classA@rec=N,classB@rec=M`); each plan fires once,
+    /// at its own non-posted index, and a later `--fault` for the
+    /// same device replaces that device's whole list.
     pub device_fault: Vec<(usize, FaultPlan)>,
+    /// Worker threads servicing the HDL device lanes
+    /// (`--lane-threads T`). `0` (default) = auto:
+    /// `min(devices, available_parallelism)`. T = 1 forces the
+    /// single-threaded merged-horizon loop; per-device cycle counts
+    /// are identical for any T — the knob trades wall clock only.
+    pub lane_threads: usize,
 }
 
 impl Default for Config {
@@ -161,6 +171,7 @@ impl Default for Config {
             device_n: Vec::new(),
             device_link_latency: Vec::new(),
             device_fault: Vec::new(),
+            lane_threads: 0,
         }
     }
 }
@@ -250,13 +261,58 @@ impl Config {
                 })?;
             }
             "fault" => {
-                // `k=class@rec=N` — split_once takes the *first* '=',
-                // so the `rec=N` tail stays inside the plan spec.
-                let df = &mut self.device_fault;
-                parse_overrides::<FaultPlan, _>(value, "fault", |k, v| {
-                    df.retain(|&(i, _)| i != k);
-                    df.push((k, v));
-                })?;
+                // `k=class@rec=N[,class@rec=M...][,k2=...]` — commas
+                // separate both devices and plans, so the generic
+                // override parser cannot split this. A part whose
+                // first-'='-prefix parses as a device index opens a
+                // new device entry; any other part is a further plan
+                // for the current device (plan specs contain '='
+                // themselves — `rec=N` — but their prefix is a class
+                // name, never an integer). A later `--fault` for a
+                // device replaces that device's whole plan list.
+                let mut cur: Option<usize> = None;
+                let mut touched: Vec<usize> = Vec::new();
+                for part in value.split(',') {
+                    let part = part.trim();
+                    let opens = part
+                        .split_once('=')
+                        .and_then(|(lhs, rhs)| {
+                            lhs.trim().parse::<usize>().ok().map(|k| (k, rhs))
+                        });
+                    let (k, spec) = match opens {
+                        Some((k, rhs)) => {
+                            if !touched.contains(&k) {
+                                self.device_fault.retain(|&(i, _)| i != k);
+                                touched.push(k);
+                            }
+                            cur = Some(k);
+                            (k, rhs)
+                        }
+                        None => match cur {
+                            Some(k) => (k, part),
+                            None => {
+                                return Err(Error::config(format!(
+                                    "bad fault: {part:?} (want \
+                                     k=class@rec=N[,class@rec=M...])"
+                                )))
+                            }
+                        },
+                    };
+                    self.device_fault.push((k, FaultPlan::parse(spec.trim())?));
+                }
+                if cur.is_none() {
+                    return Err(bad("fault"));
+                }
+            }
+            "lane-threads" => {
+                let t: usize = value.parse().map_err(|_| bad("lane-threads"))?;
+                if t > MAX_LANE_THREADS {
+                    return Err(Error::config(format!(
+                        "lane-threads: {t} workers is beyond any plausible \
+                         host (max {MAX_LANE_THREADS}; 0 = auto)"
+                    )));
+                }
+                self.lane_threads = t;
             }
             "sorter-latency" => {
                 self.sorter_latency = value.parse().map_err(|_| bad("sorter-latency"))?;
@@ -500,6 +556,7 @@ impl Config {
             impair: self.impair,
             device_impair: self.device_impair.clone(),
             device_fault: self.device_fault.clone(),
+            lane_threads: self.lane_threads,
             ram_size: self.ram_size,
             vcd: self.vcd.clone(),
             poll_interval: self.poll_interval,
@@ -514,6 +571,11 @@ impl Config {
 /// (2 × D records + 2 × D descriptors) well inside the default guest
 /// RAM even at the maximum device count.
 pub const MAX_QUEUE_DEPTH: usize = 64;
+
+/// `--lane-threads` ceiling: a sanity bound well above any plausible
+/// core count (the effective value is clamped to the device count
+/// anyway — see `coordinator::lanepool::effective_lane_threads`).
+pub const MAX_LANE_THREADS: usize = 256;
 
 #[cfg(test)]
 mod tests {
@@ -548,6 +610,49 @@ mod tests {
         assert!(c.set("fault", "0=melt-the-board@rec=1").is_err());
         c.set("fault", "7=ur-status@rec=1").unwrap();
         assert!(c.cosim().is_err(), "device 7 is not on a 2-device topology");
+    }
+
+    #[test]
+    fn fault_flag_parses_multi_plan_lists() {
+        use crate::pcie::FaultKind;
+        let mut c = Config::default();
+        c.set("devices", "2").unwrap();
+        // Two plans on device 0 and one on device 1 — in one flag.
+        c.set(
+            "fault",
+            "0=completion-timeout@rec=2,completion-timeout@rec=4,1=poisoned-cpl@rec=1",
+        )
+        .unwrap();
+        let dev0: Vec<_> =
+            c.device_fault.iter().filter(|&&(k, _)| k == 0).map(|&(_, p)| p).collect();
+        assert_eq!(dev0.len(), 2);
+        assert_eq!(dev0[0].at, 2);
+        assert_eq!(dev0[1].at, 4);
+        assert_eq!(
+            c.device_fault.iter().filter(|&&(k, _)| k == 1).count(),
+            1
+        );
+        // A later --fault for a device replaces its whole list.
+        c.set("fault", "0=ur-status@rec=7").unwrap();
+        let dev0: Vec<_> =
+            c.device_fault.iter().filter(|&&(k, _)| k == 0).map(|&(_, p)| p).collect();
+        assert_eq!(dev0.len(), 1);
+        assert_eq!(dev0[0].kind, FaultKind::UrStatus);
+        // A leading plan with no device prefix is an error.
+        assert!(c.set("fault", "completion-timeout@rec=1").is_err());
+        assert!(c.set("fault", "").is_err());
+    }
+
+    #[test]
+    fn lane_threads_knob_parses_and_bounds() {
+        let mut c = Config::default();
+        assert_eq!(c.cosim().unwrap().lane_threads, 0, "default is auto");
+        c.set("lane-threads", "4").unwrap();
+        assert_eq!(c.cosim().unwrap().lane_threads, 4);
+        c.set("lane-threads", "0").unwrap();
+        assert_eq!(c.lane_threads, 0);
+        assert!(c.set("lane-threads", "1000").is_err());
+        assert!(c.set("lane-threads", "many").is_err());
     }
 
     #[test]

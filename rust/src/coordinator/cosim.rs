@@ -10,16 +10,21 @@
 //! possible.
 //!
 //! Multi-device topologies ([`CoSimCfg::devices`] > 1) run every
-//! device's [`Platform`] on **one** HDL thread as a set of
-//! [`run_hdl_multi_loop`] lanes: each lane keeps its own cycle
-//! counter, scheduler accounting and link endpoint; a
-//! [`MergedHorizon`] min-heap picks the lane with the earliest
-//! pending event; and when every lane is provably idle the loop
-//! blocks on a single doorbell shared by all lanes' endpoints. Per
-//! device, the PR 1 determinism invariant is untouched: a device's
-//! clock advances only as a function of *its own* message sequence,
-//! so same-seed runs stay cycle-deterministic per device regardless
-//! of host thread interleaving or how many neighbours it has.
+//! device's [`Platform`] as a set of [`run_hdl_multi_loop`] lanes:
+//! each lane keeps its own cycle counter, scheduler accounting and
+//! link endpoint. With `--lane-threads` > 1 (the default resolves to
+//! `min(N, available_parallelism)`) the lanes are serviced by a
+//! worker pool pulling from a concurrent ready-queue
+//! ([`super::lanepool`]); at T = 1 — and always for the idle-spin
+//! ablation — a [`MergedHorizon`] min-heap picks the lane with the
+//! earliest pending event on this one thread. Either way, when every
+//! lane is provably idle the workers block on a single doorbell
+//! shared by all lanes' endpoints. Per device, the PR 1 determinism
+//! invariant is untouched: a device's clock advances only as a
+//! function of *its own* message sequence, so same-seed runs stay
+//! cycle-deterministic per device regardless of host thread
+//! interleaving, how many neighbours it has, or how many workers
+//! service the fleet.
 
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -117,7 +122,18 @@ pub struct CoSimCfg {
     /// bridge via [`PlatformCfg::fault`]; reset-inflight is acted on
     /// by the scenario runner. Plans fire deterministically on the
     /// device's non-posted request clock (see [`crate::pcie::fault`]).
+    /// A device may carry several entries (`--fault
+    /// k=classA@rec=N,classB@rec=M`); each plan fires once, at its
+    /// own index.
     pub device_fault: Vec<(usize, FaultPlan)>,
+    /// Worker threads servicing the HDL lanes (`--lane-threads T`).
+    /// `0` (the default) resolves to `min(devices,
+    /// available_parallelism)`; an explicit value is clamped to
+    /// `[1, devices]`. T = 1 keeps the single-threaded
+    /// [`MergedHorizon`] loop; T > 1 runs the [`super::lanepool`]
+    /// worker pool. Per-device cycle counts are identical for any T
+    /// (test-enforced); only wall clock changes.
+    pub lane_threads: usize,
     /// Guest RAM bytes.
     pub ram_size: usize,
     /// Record waveforms of the entire platform to this VCD file.
@@ -157,6 +173,7 @@ impl Default for CoSimCfg {
             impair: None,
             device_impair: Vec::new(),
             device_fault: Vec::new(),
+            lane_threads: 0,
             ram_size: 4 << 20,
             vcd: None,
             poll_interval: 1,
@@ -343,13 +360,20 @@ pub fn platform_cfg_for(cfg: &CoSimCfg, k: usize) -> PlatformCfg {
     if let Some(&(_, cycles)) = cfg.device_latency.iter().find(|&&(d, _)| d == k) {
         pcfg.kernel.latency = cycles;
     }
-    pcfg.fault = fault_for(cfg, k);
+    pcfg.fault = crate::pcie::bridge_plan(&faults_for(cfg, k));
     pcfg
 }
 
-/// The PCIe fault plan armed on device `k`, if any.
-pub fn fault_for(cfg: &CoSimCfg, k: usize) -> Option<FaultPlan> {
-    cfg.device_fault.iter().find(|&&(d, _)| d == k).map(|&(_, p)| p)
+/// Every PCIe fault plan armed on device `k`, in `--fault` order
+/// (empty = no faults). The device acts on all of them; the HDL
+/// bridge and the snapshot geometry stamp take the one
+/// [`crate::pcie::bridge_plan`] selects.
+pub fn faults_for(cfg: &CoSimCfg, k: usize) -> Vec<FaultPlan> {
+    cfg.device_fault
+        .iter()
+        .filter(|&&(d, _)| d == k)
+        .map(|&(_, p)| p)
+        .collect()
 }
 
 /// The link-latency modelled at device `k`'s HDL endpoint.
@@ -402,7 +426,7 @@ pub fn record_meta_for(cfg: &CoSimCfg) -> RecordMeta {
                     .filter(|ic| !ic.is_null())
                     .map(|ic| format!("{ic:?}"))
                     .unwrap_or_default(),
-                fault: fault_for(cfg, k).map(|p| p.to_string()).unwrap_or_default(),
+                fault: FaultPlan::format_list(&faults_for(cfg, k)),
             }
         })
         .collect();
@@ -443,6 +467,18 @@ pub(crate) struct HdlLane {
     pub(crate) sched: Scheduler,
     vcd: Option<VcdWriter<std::io::BufWriter<std::fs::File>>>,
     frame: ProbeFrame,
+    /// This lane's warm drain scratch: reused across every
+    /// [`HdlLane::drain_inject`], so the hot drain path never
+    /// allocates after warmup *and* lanes can drain concurrently on
+    /// pool workers (the old loop shared one inbox across lanes,
+    /// which serialized drains by construction).
+    inbox: Vec<crate::link::Msg>,
+    /// Whether the busy loop periodically yields the core to the VM
+    /// side. `true` (the default, and always at T = 1) preserves the
+    /// single-core-testbed behaviour; the lane pool clears it when a
+    /// core is provably left over for the VM thread, because a forced
+    /// yield every 256 cycles is pure overhead there.
+    pub(crate) yield_in_busy: bool,
 }
 
 impl HdlLane {
@@ -467,6 +503,8 @@ impl HdlLane {
             sched: Scheduler::new(cfg.poll_interval),
             vcd,
             frame: ProbeFrame::default(),
+            inbox: Vec::with_capacity(32),
+            yield_in_busy: true,
         })
     }
 
@@ -477,11 +515,13 @@ impl HdlLane {
 
     /// Drain the link outside a tick, injecting payload messages into
     /// the bridge (control-only traffic consumes no device time).
-    /// Returns the number of payload messages injected.
-    pub(crate) fn drain_inject(&mut self, inbox: &mut Vec<crate::link::Msg>) -> Result<usize> {
-        inbox.clear();
-        let n = self.link.poll_into(inbox)?;
-        for m in inbox.drain(..) {
+    /// Returns the number of payload messages injected. Uses the
+    /// lane-local warm `inbox`, so concurrent lanes never contend and
+    /// the path is zero-alloc after warmup (test-audited below).
+    pub(crate) fn drain_inject(&mut self) -> Result<usize> {
+        self.inbox.clear();
+        let n = self.link.poll_into(&mut self.inbox)?;
+        for m in self.inbox.drain(..) {
             self.platform.inject(m)?;
         }
         Ok(n)
@@ -510,10 +550,14 @@ impl HdlLane {
             }
             match self.horizon() {
                 Horizon::Now => {
-                    if self.sim.cycle % 256 == 0 {
+                    if self.yield_in_busy && self.sim.cycle % 256 == 0 {
                         // Busy: still let the VM side run (single-core
                         // testbed — it must be able to answer our DMA
-                        // reads promptly).
+                        // reads promptly). The lane pool clears
+                        // `yield_in_busy` when a spare core is left
+                        // for the VM thread; the yield cadence itself
+                        // never touches simulated state, so cycle
+                        // counts are identical either way.
                         std::thread::yield_now();
                     }
                 }
@@ -600,23 +644,34 @@ pub fn run_hdl_loop(
     Ok(reports.remove(0))
 }
 
-/// Run N device lanes on one thread until `stop`, returning one
-/// report per lane (index = device id).
+/// Run N device lanes until `stop`, returning one report per lane
+/// (index = device id).
 ///
-/// Scheduling: a [`MergedHorizon`] min-heap over per-lane next events
-/// picks the lane with the earliest pending work; each pick runs that
-/// lane's busy phase to quiescence ([`HdlLane::run_busy`] — tick
-/// through `Now`, fast-forward `At` gaps). While lane A sits idle
-/// waiting for a VM response, lanes B..N are serviced — that overlap
-/// is where multi-device throughput comes from. When *every* lane is
-/// idle the loop blocks on one [`Doorbell`] shared by all lanes'
-/// endpoints ([`Endpoint::share_doorbell`]), so traffic for any
-/// device wakes the thread.
+/// Scheduling has two flavours, picked by
+/// [`super::lanepool::effective_lane_threads`]:
+///
+/// * **T = 1** (and always when `idle_sleep == 0`, the idle-spin
+///   ablation): a [`MergedHorizon`] min-heap over per-lane next
+///   events picks the lane with the earliest pending work; each pick
+///   runs that lane's busy phase to quiescence ([`HdlLane::run_busy`]
+///   — tick through `Now`, fast-forward `At` gaps). While lane A sits
+///   idle waiting for a VM response, lanes B..N are serviced — that
+///   overlap is where multi-device throughput comes from.
+/// * **T > 1**: the lanes are handed to the [`super::lanepool`]
+///   worker pool — T workers pull ready lanes from a
+///   [`crate::hdl::sim::LaneReadyQueue`] and run the *same*
+///   `run_busy` to quiescence concurrently, which is where N devices
+///   start costing ~1 device of wall clock.
+///
+/// Both flavours block on one [`Doorbell`] shared by all lanes'
+/// endpoints when every lane is idle ([`Endpoint::share_doorbell`]),
+/// so traffic for any device wakes the thread (or a pool worker).
 ///
 /// Device clocks stay independent: an idle lane's cycle counter does
 /// not advance, and nothing a neighbour does can change the cycle at
 /// which a lane processes its own messages — per-device cycle counts
-/// remain deterministic for a fixed per-device message sequence.
+/// remain deterministic for a fixed per-device message sequence, at
+/// any worker count.
 pub fn run_hdl_multi_loop(
     lanes: Vec<(Platform, Endpoint)>,
     cfg: &CoSimCfg,
@@ -640,8 +695,6 @@ pub fn run_hdl_multi_loop(
 
     let t0 = std::time::Instant::now();
     let mut horizon = MergedHorizon::new();
-    // Reused wake-drain buffer (never allocates after warmup).
-    let mut inbox: Vec<crate::link::Msg> = Vec::with_capacity(32);
     // Idle-wait slice: bounds how quickly a stop request is noticed
     // while blocked (the doorbell wakes us early on traffic anyway).
     // idle_sleep == 0 preserves the old busy-spin for ablations.
@@ -652,9 +705,11 @@ pub fn run_hdl_multi_loop(
     };
 
     let mut result = Ok(());
-    // Prime every lane with one busy pass: the single-device loop
-    // ticked once on entry before first idling, so cycle offsets (and
-    // "simulator never ticked" probes) stay identical.
+    // Prime every lane with one busy pass, in index order: the
+    // single-device loop ticked once on entry before first idling, so
+    // cycle offsets (and "simulator never ticked" probes) stay
+    // identical — at any worker count, which is why priming happens
+    // here rather than inside the pool.
     for (i, lane) in lanes.iter_mut().enumerate() {
         if stop.load(Ordering::Relaxed) {
             break;
@@ -664,6 +719,24 @@ pub fn run_hdl_multi_loop(
             break;
         }
     }
+
+    // Multi-worker path: hand the primed lanes to the pool. The
+    // idle-spin ablation (idle_slice == 0) stays single-threaded by
+    // construction — its spin-tick is defined as one interleaved
+    // sequence over all lanes.
+    let threads = super::lanepool::effective_lane_threads(cfg.lane_threads, lanes.len());
+    if result.is_ok() && !stop.load(Ordering::Relaxed) && threads > 1 && !idle_slice.is_zero()
+    {
+        let (lanes, pool_result) =
+            super::lanepool::run_pool(lanes, threads, &doorbell, idle_slice, &stop, &cycles_out);
+        for (i, lane) in lanes.iter().enumerate() {
+            cycles_out[i].store(lane.sim.cycle, Ordering::Relaxed);
+        }
+        pool_result?;
+        let wall = t0.elapsed();
+        return lanes.into_iter().map(|l| l.into_report(wall)).collect();
+    }
+
     'run: while result.is_ok() && !stop.load(Ordering::Relaxed) {
         // ---- service phase: run lanes until every one is idle ----
         loop {
@@ -676,7 +749,7 @@ pub fn run_hdl_multi_loop(
                     // traffic must consume no device time), then
                     // re-ask.
                     match lane.link.rx_ready() {
-                        Ok(true) => match lane.drain_inject(&mut inbox) {
+                        Ok(true) => match lane.drain_inject() {
                             Ok(n) => {
                                 if n > 0 {
                                     lane.sched.wakeups += 1;
@@ -768,7 +841,7 @@ pub fn run_hdl_multi_loop(
                 // never on ack timing.
                 let mut payload = 0usize;
                 for lane in lanes.iter_mut() {
-                    match lane.drain_inject(&mut inbox) {
+                    match lane.drain_inject() {
                         Ok(n) => {
                             if n > 0 {
                                 lane.sched.wakeups += 1;
@@ -831,9 +904,10 @@ pub fn run_hdl_multi_loop(
 /// classes act there — credit-starve acts in the bridge, and
 /// reset-inflight in the scenario runner.
 fn apply_device_faults(vmm: &mut Vmm, cfg: &CoSimCfg) {
-    for &(k, plan) in &cfg.device_fault {
-        if let Some(dev) = vmm.devs.get_mut(k) {
-            dev.set_fault(Some(plan));
+    for k in 0..vmm.devs.len() {
+        let plans = faults_for(cfg, k);
+        if !plans.is_empty() {
+            vmm.devs[k].set_faults(plans);
         }
     }
 }
@@ -1217,5 +1291,60 @@ mod tests {
         drv.probe(&mut env).unwrap();
         app::run_bram_stress(&mut env, 64, 3).unwrap();
         cosim.shutdown().unwrap();
+    }
+
+    #[test]
+    fn pooled_multi_device_probe_and_sort() {
+        // Same workload as `multi_device_inproc_probe_and_sort`, but
+        // routed through the worker pool (T = 2) instead of the
+        // merged-horizon pick loop.
+        let cfg = CoSimCfg { devices: 2, lane_threads: 2, ..Default::default() };
+        let mut cosim = CoSim::launch(cfg).unwrap();
+        let mut hook = NoopHook;
+        for k in 0..2usize {
+            let mut env = GuestEnv::for_device(&mut cosim.vmm, &mut hook, k);
+            let mut drv = SortDriver::for_device(1024, k);
+            drv.timeout = Duration::from_secs(30);
+            drv.probe(&mut env).unwrap();
+            let report = app::run_sort(&mut env, &mut drv, 1, 0xCD00 + k as u64).unwrap();
+            assert!(report.verified, "device {k} result mismatched under the pool");
+            assert!(report.device_cycles > 0);
+        }
+        let reports = cosim.shutdown_all().unwrap();
+        assert_eq!(reports.len(), 2);
+        for (k, r) in reports.iter().enumerate() {
+            assert_eq!(r.records_done, 1, "device {k} record count");
+            assert!(r.irqs_sent >= 1, "device {k} sent no MSI");
+        }
+    }
+
+    #[test]
+    fn lane_inbox_stays_warm_across_drains() {
+        // The per-lane drain buffer must stop allocating once warm:
+        // capacity and backing pointer are stable across repeated
+        // drains (the satellite's zero-alloc-after-warmup audit).
+        use crate::hdl::platform::{Platform, PlatformCfg};
+        use crate::link::{Endpoint, Msg};
+        let (mut vm, hdl) = Endpoint::inproc_pair_on(0);
+        let mut lane =
+            HdlLane::new(Platform::new(PlatformCfg::default()), hdl, 0, &CoSimCfg::default())
+                .unwrap();
+        // Warmup round.
+        vm.send(&Msg::MmioRead { tag: 1, bar: 0, addr: 0, len: 4 }).unwrap();
+        assert_eq!(lane.drain_inject().unwrap(), 1);
+        let cap = lane.inbox.capacity();
+        let ptr = lane.inbox.as_ptr();
+        assert!(cap >= 1, "warm buffer lost its capacity");
+        for round in 0..64u64 {
+            vm.send(&Msg::MmioRead { tag: 2 + round, bar: 0, addr: 0, len: 4 }).unwrap();
+            vm.send(&Msg::MmioRead { tag: 100 + round, bar: 0, addr: 8, len: 4 }).unwrap();
+            assert_eq!(lane.drain_inject().unwrap(), 2);
+            assert_eq!(lane.inbox.capacity(), cap, "drain reallocated on round {round}");
+            assert_eq!(
+                lane.inbox.as_ptr(),
+                ptr,
+                "drain moved the warm buffer on round {round}"
+            );
+        }
     }
 }

@@ -1,0 +1,274 @@
+//! The parallel device-lane worker pool (`--lane-threads T`).
+//!
+//! T workers pull ready lanes from a [`LaneReadyQueue`] and run each
+//! lane's existing [`HdlLane::run_busy`] to quiescence — the
+//! concurrent counterpart of the single-threaded `MergedHorizon` pick
+//! loop in [`super::cosim::run_hdl_multi_loop`] (which remains the
+//! T = 1 / ablation / replay scheduler). The shared [`Doorbell`] is
+//! the park/unpark point: when no lane is ready a worker samples the
+//! bell's epoch, scans every idle lane's rx once, and only then
+//! blocks, so a ring between scan and wait is never lost (the same
+//! epoch protocol as `Endpoint::wait_any`, widened over lanes and
+//! workers).
+//!
+//! ## Why this cannot change results
+//!
+//! Each lane's clock advances purely as a function of *its own*
+//! message sequence (the PR 1 invariant): `run_busy` never touches
+//! another lane, a lane is held by at most one worker at a time (the
+//! `IDLE → QUEUED → RUNNING` CAS in [`LaneReadyQueue`]), and control
+//! frames are drained outside ticks exactly as in the single-threaded
+//! loop. Worker count therefore changes *when* a lane's messages are
+//! processed in wall time, never *at which cycle* — per-device cycle
+//! counts are byte-identical for any T (enforced by
+//! `rust/tests/parallel_lanes.rs` and the `multi_device_scaling`
+//! bench).
+//!
+//! ## The lost-wakeup seam
+//!
+//! The one genuinely delicate handoff is a frame that arrives while
+//! its lane is being released: the servicing worker saw no rx, the
+//! doorbell rang while every other worker was awake (rings are only
+//! *edges* — `Doorbell::wait` consumes an epoch bump, it does not
+//! latch one for future waiters), and the lane is about to be marked
+//! idle. The release protocol closes it: the worker stores `IDLE`
+//! *first*, then re-checks rx — since the transport enqueues the
+//! frame before ringing, a send that missed the re-check must have
+//! landed after the `IDLE` store, and the sender's ring then wakes a
+//! parker whose scan finds the (now idle) lane with rx pending. Both
+//! orders are modelled exhaustively in `rust/tests/loom_lanepool.rs`.
+//!
+//! This module is in the `cargo xtask analyze` determinism scope: the
+//! wall-clock/sleep seams below are host pacing only (bounded stop
+//! latency, busy/idle accounting) and are allowlisted with reasons in
+//! `analysis/allow.toml`; nothing here may feed simulated state from
+//! a timer.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use crate::hdl::sim::{Horizon, LaneReadyQueue};
+use crate::link::Doorbell;
+use crate::{Error, Result};
+
+use super::cosim::HdlLane;
+
+/// Resolve `--lane-threads`: `0` (auto) means `min(lanes,
+/// available_parallelism)`; an explicit request is clamped to
+/// `[1, lanes]` — more workers than lanes could only contend on the
+/// queue, and 0 workers is not a thing.
+pub fn effective_lane_threads(requested: usize, lanes: usize) -> usize {
+    let lanes = lanes.max(1);
+    let t = if requested == 0 {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    } else {
+        requested
+    };
+    t.clamp(1, lanes)
+}
+
+/// Drive `lanes` to completion on `threads` workers until `stop`.
+/// Returns the lanes (for report building by the caller) plus the
+/// first worker error, if any. Lanes must already be primed (one
+/// `run_busy` pass each) — see `run_hdl_multi_loop`.
+pub(crate) fn run_pool(
+    mut lanes: Vec<HdlLane>,
+    threads: usize,
+    doorbell: &Doorbell,
+    idle_slice: Duration,
+    stop: &AtomicBool,
+    cycles_out: &[Arc<AtomicU64>],
+) -> (Vec<HdlLane>, Result<()>) {
+    debug_assert!(threads >= 1 && !idle_slice.is_zero());
+    // T-aware VM-starvation yield: with a core left over for the VM
+    // side the forced `yield_now` every 256 busy cycles is pure
+    // overhead; on an oversubscribed host (workers + the VM thread >
+    // cores) keep the single-thread politeness.
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let oversubscribed = threads + 1 > cores;
+    for lane in lanes.iter_mut() {
+        lane.yield_in_busy = oversubscribed;
+    }
+
+    let queue = LaneReadyQueue::new(lanes.len());
+    // Every lane gets one service pass up front (index order): a lane
+    // whose VM traffic landed during priming is drained immediately
+    // instead of waiting for the first ring.
+    queue.enqueue_all();
+    let slots: Vec<Mutex<HdlLane>> = lanes.into_iter().map(Mutex::new).collect();
+    let first_err: Mutex<Option<Error>> = Mutex::new(None);
+
+    let t0 = std::time::Instant::now();
+    std::thread::scope(|scope| {
+        for t in 0..threads {
+            let queue = &queue;
+            let slots = &slots;
+            let first_err = &first_err;
+            let builder = std::thread::Builder::new().name(format!("vmhdl-lane-w{t}"));
+            builder
+                .spawn_scoped(scope, move || {
+                    worker_loop(queue, slots, first_err, doorbell, idle_slice, stop, cycles_out)
+                })
+                .expect("spawn vmhdl lane worker");
+        }
+    });
+    let wall = t0.elapsed();
+
+    let mut lanes: Vec<HdlLane> = slots
+        .into_iter()
+        .map(|m| m.into_inner().unwrap_or_else(|e| e.into_inner()))
+        .collect();
+    // Idle accounting keeps the shared-doorbell contract of the
+    // single-threaded loop: per lane, `wall_idle` is the wall this
+    // device spent not busy — concurrent across lanes, so summing it
+    // over the fleet overstates wall clock (see `HdlReport`).
+    for lane in lanes.iter_mut() {
+        lane.sched.wall_idle = wall.saturating_sub(lane.sched.wall_busy);
+    }
+    let result = match first_err.into_inner().unwrap_or_else(|e| e.into_inner()) {
+        Some(e) => Err(e),
+        None => Ok(()),
+    };
+    (lanes, result)
+}
+
+/// Record the first worker error, then stop the fleet: `stop` ends
+/// busy loops and pop attempts, the ring unparks waiting workers so
+/// they notice.
+fn fail(first_err: &Mutex<Option<Error>>, stop: &AtomicBool, doorbell: &Doorbell, e: Error) {
+    let mut slot = first_err.lock().unwrap_or_else(|p| p.into_inner());
+    slot.get_or_insert(e);
+    drop(slot);
+    stop.store(true, Ordering::Relaxed);
+    doorbell.ring();
+}
+
+fn worker_loop(
+    queue: &LaneReadyQueue,
+    slots: &[Mutex<HdlLane>],
+    first_err: &Mutex<Option<Error>>,
+    doorbell: &Doorbell,
+    idle_slice: Duration,
+    stop: &AtomicBool,
+    cycles_out: &[Arc<AtomicU64>],
+) {
+    while !stop.load(Ordering::Relaxed) {
+        if let Some(i) = queue.pop() {
+            if let Err(e) = service_lane(&slots[i], i, queue, doorbell, stop, &cycles_out[i]) {
+                fail(first_err, stop, doorbell, e);
+            }
+            continue;
+        }
+        // Park protocol: epoch sample *before* the rx scan, so a ring
+        // that lands mid-scan moves the epoch past `seen` and the
+        // wait below returns immediately instead of sleeping on a
+        // stale epoch.
+        let seen = doorbell.epoch();
+        match scan_idle_lanes(queue, slots) {
+            Ok(true) => continue, // woke a lane — go service it
+            Ok(false) => {}
+            Err(e) => {
+                fail(first_err, stop, doorbell, e);
+                continue;
+            }
+        }
+        if stop.load(Ordering::Relaxed) {
+            break;
+        }
+        if doorbell.is_wired() {
+            // Bounded by idle_slice so a stop request (which cannot
+            // ring socket-transport bells) is noticed promptly.
+            doorbell.wait(seen, idle_slice);
+        } else {
+            // Socket transports cannot ring: nap-poll at the same
+            // granularity the single-threaded loop used.
+            std::thread::sleep(idle_slice.min(Duration::from_micros(50)));
+        }
+    }
+}
+
+/// One pass over every idle lane: wake those with rx pending, and
+/// keep the retransmit schedule ticking on lossy wires (the frame a
+/// parked fleet is waiting for may be exactly the one that was
+/// dropped — the doorbell would then never ring). Returns whether any
+/// lane was woken.
+fn scan_idle_lanes(queue: &LaneReadyQueue, slots: &[Mutex<HdlLane>]) -> Result<bool> {
+    let mut woke = false;
+    for (i, slot) in slots.iter().enumerate() {
+        if !queue.is_idle(i) {
+            continue;
+        }
+        // A held lock means another worker owns the lane right now —
+        // its release re-check covers any traffic, skip it.
+        let Ok(mut lane) = slot.try_lock() else {
+            continue;
+        };
+        let ready = lane.link.rx_ready()?;
+        lane.link.nudge_retransmit();
+        drop(lane);
+        if ready {
+            woke |= queue.wake(i);
+        }
+    }
+    Ok(woke)
+}
+
+/// Service one claimed lane: drain + busy-run to quiescence, then
+/// release it with the lost-wakeup-safe publish order (see the module
+/// doc).
+fn service_lane(
+    slot: &Mutex<HdlLane>,
+    i: usize,
+    queue: &LaneReadyQueue,
+    doorbell: &Doorbell,
+    stop: &AtomicBool,
+    cycles_out: &AtomicU64,
+) -> Result<()> {
+    let mut lane = slot.lock().unwrap_or_else(|p| p.into_inner());
+    let mut ran = false;
+    let mut saw_traffic = false;
+    loop {
+        if lane.link.rx_ready()? {
+            saw_traffic = true;
+            if lane.drain_inject()? > 0 {
+                lane.sched.wakeups += 1;
+            }
+        }
+        if stop.load(Ordering::Relaxed) || lane.horizon() == Horizon::Idle {
+            // `run_busy` always ticks at least once, so a lane woken
+            // by control-only traffic must NOT enter it — the T = 1
+            // loop never ticks an idle platform either, and a stray
+            // tick here would shift this device's cycle counts.
+            break;
+        }
+        lane.run_busy(stop, cycles_out)?;
+        ran = true;
+    }
+    if saw_traffic && !ran {
+        // Control-only wake: nothing for the platform. Brief nap so a
+        // straggling frame tail cannot hot-spin the requeue path, and
+        // keep the retransmit schedule ticking (mirrors the
+        // control-only branch of the single-threaded idle phase).
+        std::thread::sleep(Duration::from_micros(20));
+        lane.link.nudge_retransmit();
+    }
+    lane.sched.idle_waits += 1;
+    // Publish idle *before* the final rx re-check, while still
+    // holding the lane: the transport enqueues a frame before ringing
+    // its bell, so any frame this re-check misses arrived after the
+    // IDLE store — and its ring wakes a parker whose scan then finds
+    // this idle lane ready. Re-checking first would leave a window
+    // where a frame lands between re-check and IDLE store with every
+    // worker awake: the ring is consumed by nobody and the lane
+    // strands until the next unrelated wake (loom-modelled).
+    queue.release(i);
+    let again = lane.link.rx_ready()?;
+    drop(lane);
+    if again && queue.wake(i) {
+        // Another worker may be parking right now and may have
+        // scanned lane `i` before our release: ring so it re-scans.
+        doorbell.ring();
+    }
+    Ok(())
+}

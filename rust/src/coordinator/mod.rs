@@ -5,6 +5,7 @@
 //! paper's Tables II and III.
 
 pub mod cosim;
+pub mod lanepool;
 pub mod lifecycle;
 pub mod replay;
 pub mod scenario;

@@ -126,7 +126,6 @@ pub fn replay_recording(rec: &Recording, checkpoint: Option<usize>) -> Result<Re
 
     let stop = AtomicBool::new(false);
     let cycles_scratch = AtomicU64::new(0);
-    let mut inbox: Vec<Msg> = Vec::with_capacity(32);
     let mut compared = 0usize;
     let mut injected = 0usize;
     let mut checkpoint_forked = false;
@@ -148,7 +147,7 @@ pub fn replay_recording(rec: &Recording, checkpoint: Option<usize>) -> Result<Re
         }
         taps[ev.device as usize].inject(ev.chan, &ev.bytes)?;
         injected += 1;
-        settle(&mut lanes, &stop, &cycles_scratch, &mut inbox)?;
+        settle(&mut lanes, &stop, &cycles_scratch)?;
         observe_and_compare(
             &mut taps, &expected, &mut cursor, &mut replay_watermark, &mut compared,
         )?;
@@ -157,7 +156,7 @@ pub fn replay_recording(rec: &Recording, checkpoint: Option<usize>) -> Result<Re
             checkpoint_forked = true;
         }
     }
-    settle(&mut lanes, &stop, &cycles_scratch, &mut inbox)?;
+    settle(&mut lanes, &stop, &cycles_scratch)?;
     observe_and_compare(
         &mut taps, &expected, &mut cursor, &mut replay_watermark, &mut compared,
     )?;
@@ -241,13 +240,15 @@ struct ExpectedFrame {
 pub fn platform_cfg_from_meta(meta: &DeviceMeta) -> Result<PlatformCfg> {
     let kind: KernelKind = meta.kernel.parse()?;
     let link_mode: LinkMode = meta.link_mode.parse()?;
-    // A recorded fault plan (v2 headers) re-arms bit-identically: the
-    // bridge's credit-starve freeze is part of the replayed message
-    // schedule, and the geometry stamp in any snapshot must match.
+    // A recorded fault plan list (v2 headers) re-arms bit-identically:
+    // the bridge's credit-starve freeze is part of the replayed
+    // message schedule, and the geometry stamp in any snapshot must
+    // match — `bridge_plan` picks the same representative plan the
+    // recording run stamped.
     let fault = if meta.fault.is_empty() {
         None
     } else {
-        Some(crate::pcie::FaultPlan::parse(&meta.fault)?)
+        crate::pcie::bridge_plan(&crate::pcie::FaultPlan::parse_list(&meta.fault)?)
     };
     Ok(PlatformCfg {
         kernel: KernelCfg {
@@ -291,7 +292,6 @@ fn settle(
     lanes: &mut [HdlLane],
     stop: &AtomicBool,
     cycles_scratch: &AtomicU64,
-    inbox: &mut Vec<Msg>,
 ) -> Result<()> {
     loop {
         let mut progress = false;
@@ -301,7 +301,7 @@ fn settle(
                 progress = true;
             }
             if lane.link.rx_ready()? {
-                lane.drain_inject(inbox)?;
+                lane.drain_inject()?;
                 progress = true;
             }
         }

@@ -21,7 +21,7 @@
 use std::collections::VecDeque;
 use std::time::{Duration, Instant};
 
-use super::cosim::{fault_for, platform_cfg_for, CoSim, CoSimCfg, HdlReport};
+use super::cosim::{faults_for, platform_cfg_for, CoSim, CoSimCfg, HdlReport};
 use crate::hdl::kernel::{pack_checksum_words, pack_stats_words, KernelKind};
 use crate::hdl::regfile::cause;
 use crate::pcie::{FaultKind, FaultPlan};
@@ -378,12 +378,12 @@ pub fn run_sort_offload_with_timeout(
     mut golden: Option<&mut dyn GoldenBackend>,
     timeout: Duration,
 ) -> Result<ScenarioReport> {
-    // Extract the fault plan before launch consumes the config: the
+    // Extract the fault plans before launch consumes the config: the
     // drive loop switches to the resilient driver path only when one
     // is armed, so fault-free runs stay byte-identical.
-    let fault = fault_for(&cfg, 0);
+    let faults = faults_for(&cfg, 0);
     let mut cosim = CoSim::launch(cfg)?;
-    let stats = sort_offload_drive(&mut cosim.vmm, records, seed, &mut golden, timeout, fault)
+    let stats = sort_offload_drive(&mut cosim.vmm, records, seed, &mut golden, timeout, faults)
         .map_err(|e| with_link_context(e, &cosim.vmm))?;
     let link_msgs = cosim.vmm.dev().link().msgs_sent();
     let link_bytes = cosim.vmm.dev().link().bytes_sent();
@@ -420,7 +420,7 @@ fn sort_offload_drive(
     seed: u64,
     golden: &mut Option<&mut dyn GoldenBackend>,
     timeout: Duration,
-    fault: Option<FaultPlan>,
+    faults: Vec<FaultPlan>,
 ) -> Result<DriveStats> {
     let mut hook = NoopHook;
     let mut env = GuestEnv::new(vmm, &mut hook);
@@ -452,18 +452,21 @@ fn sort_offload_drive(
             });
             continue;
         }
-        let Some(plan) = fault else {
+        if faults.is_empty() {
             // Fault-free path: byte-identical to the pre-fault runner.
             let out = drv.sort_record(&mut env, &input)?;
             golden_checked &= verify_record(drv.kernel, &input, &out, false, golden)?;
             outcomes.push(RecordOutcome::Ok);
             continue;
-        };
+        }
         // Scenario-level reset-inflight injection: reset the device
         // with this record's DMA already programmed, then require the
         // driver to recover and complete it exactly once.
         let mut extra_retries = 0u32;
-        if plan.kind == FaultKind::ResetInflight && plan.at == (i as u64) + 1 {
+        if faults
+            .iter()
+            .any(|p| p.kind == FaultKind::ResetInflight && p.at == (i as u64) + 1)
+        {
             drv.submit_record(&mut env, &input)?;
             drv.recover_reset(&mut env, cause::NONE)?;
             extra_retries = 1;
@@ -637,8 +640,8 @@ fn run_sharded_direct(
     // Per-device fault plans, read before launch consumes the config.
     // With none armed every path below is byte-identical to the
     // pre-fault runner.
-    let faults: Vec<Option<FaultPlan>> = (0..devices).map(|k| fault_for(&cfg, k)).collect();
-    let any_fault = faults.iter().any(|f| f.is_some());
+    let faults: Vec<Vec<FaultPlan>> = (0..devices).map(|k| faults_for(&cfg, k)).collect();
+    let any_fault = faults.iter().any(|f| !f.is_empty());
     let mut cosim = CoSim::launch(cfg)?;
     let mut hook = NoopHook;
 
@@ -709,11 +712,9 @@ fn run_sharded_direct(
                     // reset the device with this record's DMA already
                     // programmed, then resubmit — the driver must
                     // complete it exactly once.
-                    let inject = matches!(
-                        faults[k],
-                        Some(p) if p.kind == FaultKind::ResetInflight
-                            && p.at == subs[k] + 1
-                    );
+                    let inject = faults[k].iter().any(|p| {
+                        p.kind == FaultKind::ResetInflight && p.at == subs[k] + 1
+                    });
                     let r = {
                         let mut env = GuestEnv::for_device(&mut cosim.vmm, &mut hook, k);
                         let first = drvs[k].submit_record(&mut env, &inputs[i]);
@@ -790,7 +791,7 @@ fn run_sharded_direct(
                         outcomes[i] = RecordOutcome::Failed { reason };
                     }
                     RecordAttempt::DeviceLost { reason } => {
-                        if faults[k].is_none() {
+                        if faults[k].is_empty() {
                             // Not a planned fault — real breakage.
                             return Err(with_link_context(
                                 Error::cosim(reason),

@@ -24,6 +24,20 @@ use std::collections::BTreeMap;
 use std::collections::VecDeque;
 use std::time::Duration;
 
+// The lane ready-queue swaps in loom's model-checked primitives when
+// the crate is compiled with `--cfg loom` (the non-blocking CI job, see
+// rust/tests/loom_lanepool.rs) — same pattern as link/transport.rs.
+#[cfg(loom)]
+use loom::sync::{
+    atomic::{AtomicU8, Ordering},
+    Mutex,
+};
+#[cfg(not(loom))]
+use std::sync::{
+    atomic::{AtomicU8, Ordering},
+    Mutex,
+};
+
 /// A registered ready/valid channel of capacity `cap`.
 ///
 /// `push` stages an element that becomes visible to `pop`/`peek` only
@@ -371,6 +385,91 @@ impl MergedHorizon {
     }
 }
 
+/// Lane scheduling state for [`LaneReadyQueue`]: not queued and not
+/// held by a worker.
+const LANE_IDLE: u8 = 0;
+/// On the ready deque, waiting for a worker to [`LaneReadyQueue::pop`].
+const LANE_QUEUED: u8 = 1;
+/// Claimed by a worker (being drained/ticked).
+const LANE_RUNNING: u8 = 2;
+
+/// The concurrent counterpart of [`MergedHorizon`] for the parallel
+/// lane pool (`--lane-threads`, see `coordinator/lanepool.rs`): a FIFO
+/// of lane indices with work pending, guarded by a per-lane state
+/// machine (`IDLE → QUEUED → RUNNING → IDLE`) so a lane is on the
+/// deque **at most once** and claimed by **at most one** worker — two
+/// workers racing one doorbell ring cannot double-service a lane.
+///
+/// `MergedHorizon` stays the scheduler for the single-threaded paths
+/// (T=1, the idle-spin ablation, and `vmhdl replay`): there the
+/// earliest-event order it yields minimizes wasted polls. The pool
+/// does not need that order — each worker runs its lane to quiescence
+/// regardless, and per-device cycle counts are a pure function of each
+/// lane's own message sequence (the PR 1 invariant), so FIFO wake
+/// order affects wall time only, never results.
+#[derive(Debug)]
+pub struct LaneReadyQueue {
+    states: Vec<AtomicU8>,
+    ready: Mutex<VecDeque<usize>>,
+}
+
+impl LaneReadyQueue {
+    pub fn new(lanes: usize) -> Self {
+        LaneReadyQueue {
+            states: (0..lanes).map(|_| AtomicU8::new(LANE_IDLE)).collect(),
+            ready: Mutex::new(VecDeque::with_capacity(lanes)),
+        }
+    }
+
+    /// Ride out poisoning like the doorbell does: queue state is a
+    /// `VecDeque<usize>` with no invariants a panicking worker could
+    /// have half-updated.
+    fn locked(&self) -> impl std::ops::DerefMut<Target = VecDeque<usize>> + '_ {
+        self.ready.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Queue every idle lane, in index order — the priming pass.
+    pub fn enqueue_all(&self) {
+        for i in 0..self.states.len() {
+            self.wake(i);
+        }
+    }
+
+    /// Claim the next queued lane (`QUEUED → RUNNING`). `None` means
+    /// the deque is empty — every lane is idle or already claimed.
+    pub fn pop(&self) -> Option<usize> {
+        let i = self.locked().pop_front()?;
+        self.states[i].store(LANE_RUNNING, Ordering::SeqCst);
+        Some(i)
+    }
+
+    /// Publish a claimed lane as idle again (`RUNNING → IDLE`). The
+    /// caller must re-check the lane's rx *after* this store — see the
+    /// lost-wakeup note in `coordinator/lanepool.rs`.
+    pub fn release(&self, lane: usize) {
+        self.states[lane].store(LANE_IDLE, Ordering::SeqCst);
+    }
+
+    /// Queue `lane` if it is idle (`IDLE → QUEUED`); returns whether
+    /// this call won the transition. The CAS makes concurrent wakers
+    /// (doorbell scan vs releasing worker) enqueue the lane at most
+    /// once; a `false` means someone else already queued or claimed it.
+    pub fn wake(&self, lane: usize) -> bool {
+        let won = self.states[lane]
+            .compare_exchange(LANE_IDLE, LANE_QUEUED, Ordering::SeqCst, Ordering::SeqCst)
+            .is_ok();
+        if won {
+            self.locked().push_back(lane);
+        }
+        won
+    }
+
+    /// Whether `lane` is idle (a candidate for a doorbell-scan wake).
+    pub fn is_idle(&self, lane: usize) -> bool {
+        self.states[lane].load(Ordering::SeqCst) == LANE_IDLE
+    }
+}
+
 /// Pacing state and accounting for an event-driven co-sim run loop:
 /// tracks how wall time splits between ticking and waiting, and how
 /// many cycles were fast-forwarded rather than ticked.
@@ -555,5 +654,30 @@ mod tests {
         sim.release("x.y");
         let ctx = TickCtx { cycle: 0, forces: &sim.forces };
         assert_eq!(ctx.forced_or("x.y", 0), 0);
+    }
+
+    #[test]
+    fn lane_ready_queue_primes_in_index_order() {
+        let q = LaneReadyQueue::new(3);
+        q.enqueue_all();
+        assert_eq!(q.pop(), Some(0));
+        assert_eq!(q.pop(), Some(1));
+        assert_eq!(q.pop(), Some(2));
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn lane_ready_queue_never_double_queues() {
+        let q = LaneReadyQueue::new(2);
+        assert!(q.wake(0));
+        assert!(!q.wake(0), "a queued lane must not be queued again");
+        assert_eq!(q.pop(), Some(0));
+        assert!(!q.wake(0), "a running lane must not be queued");
+        assert!(!q.is_idle(0));
+        q.release(0);
+        assert!(q.is_idle(0));
+        assert!(q.wake(0), "an idle lane is wakeable again");
+        assert_eq!(q.pop(), Some(0));
+        assert_eq!(q.pop(), None);
     }
 }

@@ -8,11 +8,16 @@
 //!                 [--device-n k=N] [--device-link-latency k=us]
 //!                 [--impair drop=P,dup=P,reorder=P,corrupt=P,jitter=US,seed=N[,dir=up|down]]
 //!                 [--device-impair k:spec] [--udp-port BASE]
-//!                 [--fault k=class@rec=N]  inject a deterministic PCIe fault
-//!                 on device k at its Nth DMA read (classes: completion-timeout,
+//!                 [--fault k=class@rec=N[,class@rec=M,..]]  inject deterministic
+//!                 PCIe faults on device k, each firing once at its own
+//!                 non-posted index (classes: completion-timeout,
 //!                 surprise-down, poisoned-cpl, ur-status, reset-inflight,
 //!                 credit-starve) — the run reports per-record outcomes and a
 //!                 fleet health summary instead of failing
+//!                 [--lane-threads T]  worker threads servicing the HDL device
+//!                 lanes (0 = auto: min(devices, cores); T = 1 keeps the
+//!                 single-threaded merged-horizon loop; per-device cycle
+//!                 counts are identical for any T — only wall clock changes)
 //!                 [--vcd out.vcd] [--golden true] ...   run a full co-simulation
 //!                 (devices > 1 shards the batch across N PCIe FPGAs;
 //!                 queue-depth > 1 pipelines D records per device over
@@ -172,11 +177,13 @@ fn cmd_replay(args: &[String]) -> Result<()> {
 
 fn cmd_cosim(cfg: &Config) -> Result<()> {
     println!(
-        "co-simulation: {} records, mode={:?}, transport={}, devices={}, golden={}{}",
+        "co-simulation: {} records, mode={:?}, transport={}, devices={}, \
+         lane-threads={}, golden={}{}",
         cfg.records,
         cfg.mode,
         cfg.transport,
         cfg.devices,
+        vmhdl::coordinator::lanepool::effective_lane_threads(cfg.lane_threads, cfg.devices),
         cfg.golden,
         if cfg.golden { format!(" (backend {})", cfg.backend) } else { String::new() }
     );

@@ -99,6 +99,12 @@ impl PcieFpgaDevice {
         self.fault = FaultState::new(plan);
     }
 
+    /// Arm a multi-plan fault list: each plan fires once, at its own
+    /// non-posted index (see [`FaultState`]).
+    pub fn set_faults(&mut self, plans: Vec<FaultPlan>) {
+        self.fault = FaultState::new_multi(plans);
+    }
+
     /// Fault-injection runtime state (plan, clock, firing record).
     pub fn fault_state(&self) -> &FaultState {
         &self.fault

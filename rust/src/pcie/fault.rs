@@ -8,7 +8,10 @@
 //! (`--fault k=completion-timeout@rec=3`), fires deterministically on
 //! the device's **non-posted request clock** (the count of DMA read
 //! requests the endpoint has initiated), records itself into the PR 8
-//! frame recorder, and replays identically under `vmhdl replay`.
+//! frame recorder, and replays identically under `vmhdl replay`. A
+//! device may carry a comma-separated *list* of plans
+//! (`--fault k=completion-timeout@rec=2,completion-timeout@rec=4`);
+//! each plan fires once at its own index.
 //!
 //! Fault classes (§ DEBUGGING.md §11 walks each one):
 //!
@@ -115,6 +118,22 @@ pub struct FaultPlan {
 }
 
 impl FaultPlan {
+    /// Parse a comma-separated plan list,
+    /// `"<class>@rec=<n>[,<class>@rec=<m>...]"` — the full right-hand
+    /// side of a `--fault k=...` override. Plans on one device fire
+    /// independently, each on its own non-posted index.
+    pub fn parse_list(s: &str) -> Result<Vec<FaultPlan>> {
+        s.split(',').map(|p| FaultPlan::parse(p.trim())).collect()
+    }
+
+    /// Comma-joined [`Display`](fmt::Display) spelling of a plan list —
+    /// the recording-header format. A single plan keeps the bare
+    /// `class@rec=N` spelling, so pre-multi-fault recordings and their
+    /// byte-exact header assertions are unchanged.
+    pub fn format_list(plans: &[FaultPlan]) -> String {
+        plans.iter().map(|p| p.to_string()).collect::<Vec<_>>().join(",")
+    }
+
     /// Parse `"<class>@rec=<n>"`, e.g. `completion-timeout@rec=3`.
     /// A bare `<class>` defaults to `rec=1`.
     pub fn parse(s: &str) -> Result<FaultPlan> {
@@ -168,29 +187,57 @@ pub enum FaultAction {
     UrCompletion,
 }
 
+/// Pick the one plan the HDL platform is elaborated with out of a
+/// device's list: the bridge only acts on `credit-starve`, so the
+/// first credit-starve plan wins; otherwise the first plan carries the
+/// snapshot geometry stamp. Single-plan devices keep their plan either
+/// way, so pre-multi-fault snapshots stay bit-compatible.
+pub fn bridge_plan(plans: &[FaultPlan]) -> Option<FaultPlan> {
+    plans
+        .iter()
+        .copied()
+        .find(|p| p.kind == FaultKind::CreditStarve)
+        .or_else(|| plans.first().copied())
+}
+
 /// Per-device fault runtime state: the non-posted request clock plus
-/// the one-shot firing record. Pure function of the message stream —
-/// two runs that see the same request sequence fire identically.
+/// the firing record. Pure function of the message stream — two runs
+/// that see the same request sequence fire identically. A device may
+/// carry several plans (`--fault k=classA@rec=N,classB@rec=M`); each
+/// fires at most once, on its own index (the clock is monotonic), and
+/// two plans on the same index resolve to the first listed.
 #[derive(Debug, Clone, Default)]
 pub struct FaultState {
-    plan: Option<FaultPlan>,
+    plans: Vec<FaultPlan>,
     /// Non-posted (DMA read) requests observed so far.
     pub nonposted_seen: u64,
-    /// How many times the plan fired (0 or 1; surprise-down stays
-    /// latched via `down`).
+    /// How many plans fired so far (surprise-down stays latched via
+    /// `down`).
     pub fired: u64,
     down: bool,
-    /// Human-readable description of what fired, for triage reports.
+    /// Human-readable description of what fired, for triage reports;
+    /// multiple firings append with `"; "`.
     pub fired_desc: Option<String>,
 }
 
 impl FaultState {
     pub fn new(plan: Option<FaultPlan>) -> Self {
-        FaultState { plan, ..FaultState::default() }
+        FaultState::new_multi(plan.into_iter().collect())
     }
 
+    /// Arm a full plan list (the multi-fault `--fault` form).
+    pub fn new_multi(plans: Vec<FaultPlan>) -> Self {
+        FaultState { plans, ..FaultState::default() }
+    }
+
+    /// The first armed plan, if any (legacy single-plan accessor).
     pub fn plan(&self) -> Option<FaultPlan> {
-        self.plan
+        self.plans.first().copied()
+    }
+
+    /// All armed plans.
+    pub fn plans(&self) -> &[FaultPlan] {
+        &self.plans
     }
 
     /// True once a surprise-down fault has fired: the link is dead.
@@ -203,10 +250,8 @@ impl FaultState {
     /// *this* request, if the plan fires on it.
     pub fn on_nonposted(&mut self, addr: u64, len: u32) -> Option<FaultAction> {
         self.nonposted_seen += 1;
-        let plan = self.plan?;
-        if self.fired > 0 || self.nonposted_seen != plan.at {
-            return None;
-        }
+        let seen = self.nonposted_seen;
+        let plan = *self.plans.iter().find(|p| p.at == seen)?;
         let action = match plan.kind {
             FaultKind::CompletionTimeout => Some(FaultAction::DropRequest),
             FaultKind::SurpriseDown => {
@@ -220,11 +265,18 @@ impl FaultState {
         };
         if let Some(a) = action {
             self.fired += 1;
-            self.fired_desc = Some(format!(
+            let desc = format!(
                 "{} fired at non-posted #{} (addr {addr:#x}, {len}B): {a:?}",
                 plan.kind.name(),
                 plan.at
-            ));
+            );
+            match &mut self.fired_desc {
+                Some(d) => {
+                    d.push_str("; ");
+                    d.push_str(&desc);
+                }
+                None => self.fired_desc = Some(desc),
+            }
         }
         action
     }
@@ -283,6 +335,55 @@ mod tests {
         assert!(!st.link_down());
         assert_eq!(st.on_nonposted(0, 4), Some(FaultAction::DropRequest));
         assert!(st.link_down());
+    }
+
+    #[test]
+    fn parse_list_roundtrips_and_keeps_single_plan_spelling() {
+        let spec = "completion-timeout@rec=2,poisoned-cpl@rec=5";
+        let plans = FaultPlan::parse_list(spec).unwrap();
+        assert_eq!(plans.len(), 2);
+        assert_eq!(FaultPlan::format_list(&plans), spec);
+        // Single plans keep the bare spelling (recording headers from
+        // pre-multi-fault runs assert on it byte-exactly).
+        let one = FaultPlan::parse_list("ur-status@rec=3").unwrap();
+        assert_eq!(FaultPlan::format_list(&one), "ur-status@rec=3");
+        assert!(FaultPlan::parse_list("ur-status@rec=3,").is_err());
+        assert!(FaultPlan::parse_list("").is_err());
+    }
+
+    #[test]
+    fn multi_plan_fires_each_plan_on_its_own_index() {
+        let mut st = FaultState::new_multi(
+            FaultPlan::parse_list("completion-timeout@rec=2,completion-timeout@rec=4")
+                .unwrap(),
+        );
+        assert_eq!(st.on_nonposted(0x1000, 256), None);
+        assert_eq!(st.on_nonposted(0x2000, 256), Some(FaultAction::DropRequest));
+        assert_eq!(st.on_nonposted(0x3000, 256), None);
+        assert_eq!(st.on_nonposted(0x4000, 256), Some(FaultAction::DropRequest));
+        assert_eq!(st.on_nonposted(0x5000, 256), None);
+        assert_eq!(st.fired, 2);
+        let desc = st.fired_desc.as_deref().unwrap();
+        assert!(desc.contains("#2") && desc.contains("#4"), "{desc}");
+    }
+
+    #[test]
+    fn same_index_plans_resolve_to_the_first_listed() {
+        let mut st = FaultState::new_multi(
+            FaultPlan::parse_list("ur-status@rec=1,poisoned-cpl@rec=1").unwrap(),
+        );
+        assert_eq!(st.on_nonposted(0, 4), Some(FaultAction::UrCompletion));
+        assert_eq!(st.fired, 1);
+    }
+
+    #[test]
+    fn bridge_plan_prefers_credit_starve_then_first() {
+        let plans =
+            FaultPlan::parse_list("poisoned-cpl@rec=2,credit-starve@rec=3").unwrap();
+        assert_eq!(bridge_plan(&plans).unwrap().kind, FaultKind::CreditStarve);
+        let plans = FaultPlan::parse_list("poisoned-cpl@rec=2,ur-status@rec=3").unwrap();
+        assert_eq!(bridge_plan(&plans).unwrap().kind, FaultKind::PoisonedCpl);
+        assert_eq!(bridge_plan(&[]), None);
     }
 
     #[test]

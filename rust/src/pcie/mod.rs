@@ -35,7 +35,7 @@ pub mod tlp;
 pub use bar::{BarDef, BarKind, BarSet};
 pub use config_space::{Bdf, BusAllocator, ConfigSpace};
 pub use device::{DmaTarget, IrqSink, PcieFpgaDevice, PseudoDeviceStats};
-pub use fault::{FaultKind, FaultPlan, FaultState};
+pub use fault::{bridge_plan, FaultKind, FaultPlan, FaultState};
 pub use tlp::Tlp;
 
 /// The FPGA board personality used throughout (NetFPGA SUME-like).

@@ -55,6 +55,38 @@ fn completion_timeout_recovers_byte_identically() {
 }
 
 #[test]
+fn two_completion_timeouts_recover_sequentially() {
+    // Multi-plan lists: both plans live on one device and each fires
+    // on its own non-posted index. The retry for the first timeout
+    // shifts the later indices by +1 (retry = its own non-posted
+    // request), so `@rec=2` hits record 1 and `@rec=4` hits record 2:
+    // req 1 = record 0, req 2 = record 1 (fires, retry = req 3),
+    // req 4 = record 2 (fires, retry = req 5), req 6 = record 3.
+    let mut cfg = CoSimCfg::default();
+    cfg.platform.kernel.n = 64;
+    cfg.device_fault = FaultPlan::parse_list("completion-timeout@rec=2,completion-timeout@rec=4")
+        .unwrap()
+        .into_iter()
+        .map(|p| (0usize, p))
+        .collect();
+    let rep =
+        scenario::run_sort_offload_with_timeout(cfg, 4, 0xFA11, None, TIMEOUT).unwrap();
+    assert_eq!(rep.outcomes.len(), 4);
+    for i in [1usize, 2] {
+        match &rep.outcomes[i] {
+            RecordOutcome::Recovered { retries } => assert!(*retries >= 1),
+            o => panic!("record {i}: expected recovered, got {o}"),
+        }
+    }
+    for i in [0usize, 3] {
+        assert_eq!(rep.outcomes[i], RecordOutcome::Ok, "record {i}");
+    }
+    let h = rep.health();
+    assert_eq!((h.ok, h.recovered, h.failed), (2, 2, 0));
+    assert!(h.lost_devices.is_empty());
+}
+
+#[test]
 fn poisoned_cpl_quarantines_and_continues() {
     let rep = run("poisoned-cpl@rec=1", 3, 0xFA02);
     match &rep.outcomes[0] {

@@ -1,0 +1,129 @@
+//! Loom models of the lane-pool handoff: the
+//! [`vmhdl::hdl::sim::LaneReadyQueue`] ↔ [`vmhdl::link::Doorbell`]
+//! protocol that `coordinator/lanepool.rs` builds its workers on.
+//!
+//! Two claims get exhaustive interleaving coverage here (the plain
+//! determinism test lives in `parallel_lanes.rs`):
+//!
+//! 1. **No lost wakeup at the release seam.** A frame that lands
+//!    while its lane's worker is releasing must end queued: the
+//!    releaser publishes `IDLE` *before* its final rx re-check, the
+//!    transport stores the frame *before* ringing, and a parker
+//!    samples the epoch *before* scanning. Loom drives the producer's
+//!    store+ring through every point of both consumers' sequences; a
+//!    stranded frame shows up as a loom deadlock (parker blocks
+//!    forever) or as the final pop assert failing.
+//!
+//! 2. **No double service.** Two workers racing to wake the same lane
+//!    (doorbell scan vs releasing worker) enqueue it exactly once —
+//!    the `IDLE → QUEUED` CAS admits one winner, so one `pop` claims
+//!    the lane and the next finds the deque empty.
+//!
+//! Same build plumbing as `loom_doorbell.rs`: this file only compiles
+//! under `RUSTFLAGS="--cfg loom"`; the non-blocking CI `loom` job adds
+//! the loom crate transiently and runs
+//! `cargo test -p vmhdl --release --test loom_lanepool`. Plain
+//! `cargo test` compiles this to an empty crate.
+
+#![cfg(loom)]
+
+use std::time::Duration;
+
+use loom::sync::atomic::{AtomicUsize, Ordering};
+use loom::sync::Arc;
+use loom::thread;
+
+use vmhdl::hdl::sim::LaneReadyQueue;
+use vmhdl::link::Doorbell;
+
+const TICK: Duration = Duration::from_millis(1);
+
+/// The release seam, three-way: a worker releasing lane 0 (IDLE store
+/// → rx re-check → CAS-wake + ring), the transport delivering a frame
+/// (store → ring), and a parker (epoch sample → scan → conditional
+/// wait). Whatever the interleaving, the frame's lane must end up
+/// queued exactly once.
+#[test]
+fn frame_during_release_is_never_stranded() {
+    loom::model(|| {
+        let queue = Arc::new(LaneReadyQueue::new(1));
+        let bell = Doorbell::new();
+        // Stands in for `Endpoint::rx_ready()`: 1 ⇒ a frame is
+        // buffered. The transport stores it before ringing, exactly
+        // like `InProcTransport::send`.
+        let rx = Arc::new(AtomicUsize::new(0));
+
+        // Lane 0 starts claimed, as if a worker is servicing it.
+        queue.enqueue_all();
+        assert_eq!(queue.pop(), Some(0));
+
+        let releaser = {
+            let (queue, bell, rx) = (queue.clone(), bell.clone(), rx.clone());
+            thread::spawn(move || {
+                // service_lane's tail: publish IDLE first, then the
+                // final rx re-check, then wake + ring on traffic.
+                queue.release(0);
+                if rx.load(Ordering::SeqCst) == 1 && queue.wake(0) {
+                    bell.ring();
+                }
+            })
+        };
+        let producer = {
+            let bell = bell.clone();
+            let rx = rx.clone();
+            thread::spawn(move || {
+                rx.store(1, Ordering::SeqCst);
+                bell.ring();
+            })
+        };
+
+        // Parker (worker_loop's idle path): epoch before scan, wait
+        // only if the scan found nothing actionable.
+        loop {
+            let seen = bell.epoch();
+            if rx.load(Ordering::SeqCst) == 1 {
+                if queue.wake(0) {
+                    break; // this scan won the wake
+                }
+                if !queue.is_idle(0) {
+                    break; // queued by the releaser, or still claimed
+                           // — its release re-check covers the frame
+                }
+            }
+            bell.wait(seen, TICK);
+        }
+
+        releaser.join().expect("releaser panicked");
+        producer.join().expect("producer panicked");
+
+        // Exactly one wake won: the frame's lane is queued once, and
+        // only once.
+        assert_eq!(queue.pop(), Some(0), "frame stranded: lane never queued");
+        assert_eq!(queue.pop(), None, "lane queued twice");
+    });
+}
+
+/// Two workers racing `wake(0)` then `pop()` on a two-lane queue: the
+/// CAS admits exactly one winner, exactly one pop claims lane 0, and
+/// lane 1's state is untouched by the race.
+#[test]
+fn racing_wakes_enqueue_exactly_once() {
+    loom::model(|| {
+        let queue = Arc::new(LaneReadyQueue::new(2));
+        let workers: Vec<_> = (0..2)
+            .map(|_| {
+                let queue = queue.clone();
+                thread::spawn(move || (queue.wake(0), queue.pop()))
+            })
+            .collect();
+        let results: Vec<(bool, Option<usize>)> =
+            workers.into_iter().map(|w| w.join().expect("worker panicked")).collect();
+
+        let wake_wins = results.iter().filter(|(won, _)| *won).count();
+        assert_eq!(wake_wins, 1, "CAS admitted {wake_wins} wake winners");
+        let claims: Vec<usize> = results.iter().filter_map(|(_, p)| *p).collect();
+        assert_eq!(claims, vec![0], "lane 0 claimed {} times", claims.len());
+        assert!(queue.is_idle(1), "the race leaked into lane 1's state");
+        assert_eq!(queue.pop(), None);
+    });
+}

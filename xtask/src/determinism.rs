@@ -21,7 +21,8 @@ use crate::Finding;
 
 /// Paths (relative to `rust/src`) forming the deterministic core.
 const SCOPE_DIRS: [&str; 4] = ["hdl/", "pcie/", "link/", "vm/guest/"];
-const SCOPE_FILES: [&str; 2] = ["coordinator/scenario.rs", "coordinator/cosim.rs"];
+const SCOPE_FILES: [&str; 3] =
+    ["coordinator/scenario.rs", "coordinator/cosim.rs", "coordinator/lanepool.rs"];
 
 pub fn in_scope(rel: &str) -> bool {
     SCOPE_DIRS.iter().any(|d| rel.starts_with(d)) || SCOPE_FILES.contains(&rel)
